@@ -1,0 +1,110 @@
+//! Quickstart: the whole stack in one process, real numerics.
+//!
+//! 1. Start the Balsam service (in-process).
+//! 2. Register a site with the standard ApplicationDefinitions.
+//! 3. Submit a handful of MD + XPCS jobs through the API.
+//! 4. A launcher acquires them under a Session and executes the *real*
+//!    AOT-compiled PJRT artifacts (no Python at runtime).
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use std::collections::BTreeMap;
+
+use balsam::service::api::{ApiRequest, JobCreate};
+use balsam::service::models::{BatchJobId, JobState};
+use balsam::service::ServiceCore;
+use balsam::site::appdef::AppRegistry;
+use balsam::site::config::SiteConfig;
+use balsam::site::launcher::Launcher;
+use balsam::runtime::real::RealExec;
+use balsam::world::InProcConn;
+
+fn main() -> balsam::Result<()> {
+    // --- service + site registration ------------------------------------
+    let mut svc = ServiceCore::new(b"quickstart-secret");
+    let token = svc.admin_token();
+    let site = svc
+        .handle(0.0, &token, ApiRequest::CreateSite {
+            name: "laptop".into(),
+            hostname: "localhost".into(),
+            path: "/tmp/balsam-site".into(),
+        })?
+        .site_id();
+
+    // Site-side ApplicationDefinitions (the only permissible workflows).
+    let registry = AppRegistry::standard();
+    for name in registry.names() {
+        let def = registry.get(name).unwrap();
+        svc.handle(0.0, &token, ApiRequest::RegisterApp {
+            site,
+            name: def.name.clone(),
+            command_template: def.command_template.clone(),
+            parameters: vec![],
+        })?;
+        println!("registered app {:?} -> `{}`", def.name, def.command_template);
+    }
+
+    // --- submit fine-grained jobs ----------------------------------------
+    let mut jobs = Vec::new();
+    for i in 0..4 {
+        let mut jc = JobCreate::simple(site, "MD", "md_small");
+        jc.tags = vec![("experiment".into(), "quickstart".into()), ("idx".into(), i.to_string())];
+        jobs.push(jc);
+    }
+    for _ in 0..2 {
+        jobs.push(JobCreate::simple(site, "EigenCorr", "xpcs"));
+    }
+    let ids = svc.handle(0.1, &token, ApiRequest::BulkCreateJobs { jobs })?.job_ids();
+    println!("submitted {} jobs: {ids:?}", ids.len());
+
+    // --- launcher with REAL PJRT execution -------------------------------
+    let model_for: BTreeMap<String, String> = [
+        ("md_small".to_string(), "md_64".to_string()),
+        ("xpcs".to_string(), "xpcs_t64_p1024".to_string()),
+    ]
+    .into_iter()
+    .collect();
+    let mut exec = RealExec::start_worker(
+        balsam::runtime::artifacts_dir(),
+        vec!["md_64".into(), "xpcs_t64_p1024".into()],
+        model_for,
+    )?;
+    println!("PJRT runtime up — executing AOT artifacts from `artifacts/`");
+
+    let cfg = SiteConfig::defaults("laptop", site, token.clone());
+    let mut launcher = Launcher::new(BatchJobId(1), 1, 4, 0.0, 1e9);
+    let t0 = std::time::Instant::now();
+    loop {
+        let now = t0.elapsed().as_secs_f64();
+        {
+            let mut conn = InProcConn { now, svc: &mut svc };
+            launcher.tick(now, &cfg, &mut conn, &mut exec);
+        }
+        let done = ids
+            .iter()
+            .filter(|&&id| svc.store.job(id).map(|j| j.state.is_terminal()).unwrap_or(false))
+            .count();
+        if done == ids.len() {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        if now > 300.0 {
+            anyhow::bail!("timed out waiting for jobs");
+        }
+    }
+
+    // --- report -----------------------------------------------------------
+    println!("\nall jobs terminal after {:.1}s of real compute:", t0.elapsed().as_secs_f64());
+    for &id in &ids {
+        let j = svc.store.job(id).unwrap();
+        println!("  job {id}: {} ({} run(s))", j.state, j.attempts);
+        assert_eq!(j.state, JobState::JobFinished);
+    }
+    let evs = &svc.store.events;
+    println!("{} lifecycle events recorded; sample:", evs.len());
+    for e in evs.iter().take(6) {
+        println!("  t={:.2}s job {} {} -> {}", e.ts, e.job_id, e.from, e.to);
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

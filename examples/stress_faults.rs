@@ -1,0 +1,25 @@
+//! Fault-tolerance stress demo (§4.4 / Fig. 7): overload the elastic
+//! queue, then kill launchers every two minutes, and watch Balsam recover
+//! the full backlog — no task lost.
+//!
+//! Run: `cargo run --release --example stress_faults`
+
+use balsam::experiments::fig7::stress;
+
+fn main() -> balsam::Result<()> {
+    let t0 = std::time::Instant::now();
+    let out = stress(true, 2021);
+    println!(
+        "simulated stress test in {:.2}s wall: {} submitted, {} completed",
+        t0.elapsed().as_secs_f64(),
+        out.submitted,
+        out.completed
+    );
+    println!("\n  t(min)  submitted  staged  completed  running");
+    for (t, sub, staged, done, running) in out.timeline.iter().step_by(8) {
+        println!("  {:>6.1}  {:>9}  {:>6}  {:>9}  {:>7}", t / 60.0, sub, staged, done, running);
+    }
+    anyhow::ensure!(out.submitted == out.completed, "tasks were lost!");
+    println!("\nNO TASKS LOST — durable state + heartbeat recovery held under faults");
+    Ok(())
+}

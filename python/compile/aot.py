@@ -1,0 +1,111 @@
+"""AOT compile path: lower the L2 models to HLO *text* artifacts.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Outputs (under ``artifacts/``):
+  * one ``<name>.hlo.txt`` per model variant
+  * ``manifest.json`` describing input/output shapes and dtypes, read by
+    the Rust runtime (``rust/src/runtime``) to build PJRT literals.
+
+Python runs only here — never on the request path.
+
+Usage: python -m compile.aot --out ../artifacts   (run from python/)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import md_model, xpcs_model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# Model variants shipped as artifacts. Sizes are chosen so the end-to-end
+# examples run real numerics in seconds on the CPU PJRT client; the paper's
+# 5000^2 / 12000^2 production sizes exist in the simulator's runtime model
+# (see rust/src/substrates/facility.rs), not as CPU artifacts.
+VARIANTS = {
+    "md_64": dict(kind="md", n=64, sweeps=8),
+    "md_128": dict(kind="md", n=128, sweeps=8),
+    "xpcs_t64_p1024": dict(kind="xpcs", t=64, p=1024, ntau=16, ptile=256),
+    "xpcs_t128_p4096": dict(kind="xpcs", t=128, p=4096, ntau=16, ptile=512),
+}
+
+
+def lower_variant(name: str, spec: dict):
+    if spec["kind"] == "md":
+        n = spec["n"]
+        arg = jax.ShapeDtypeStruct((n, n), jnp.float32)
+        lowered = jax.jit(
+            lambda a: (md_model(a, sweeps=spec["sweeps"]),)
+        ).lower(arg)
+        io = {
+            "inputs": [{"shape": [n, n], "dtype": "f32", "name": "a"}],
+            "outputs": [{"shape": [n], "dtype": "f32", "name": "eigvals"}],
+        }
+    elif spec["kind"] == "xpcs":
+        t, p, ntau = spec["t"], spec["p"], spec["ntau"]
+        arg = jax.ShapeDtypeStruct((t, p), jnp.float32)
+        lowered = jax.jit(
+            lambda f: xpcs_model(f, ntau=ntau, ptile=spec["ptile"])
+        ).lower(arg)
+        io = {
+            "inputs": [{"shape": [t, p], "dtype": "f32", "name": "frames"}],
+            "outputs": [
+                {"shape": [ntau, p], "dtype": "f32", "name": "g2"},
+                {"shape": [ntau], "dtype": "f32", "name": "g2_mean"},
+                {"shape": [], "dtype": "f32", "name": "fidelity"},
+            ],
+        }
+    else:  # pragma: no cover
+        raise ValueError(f"unknown kind {spec['kind']}")
+    return to_hlo_text(lowered), io
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated variant names (default: all)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    names = list(VARIANTS) if not args.only else args.only.split(",")
+    manifest = {"format": "hlo-text", "models": {}}
+    for name in names:
+        spec = VARIANTS[name]
+        text, io = lower_variant(name, spec)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["models"][name] = {
+            "file": f"{name}.hlo.txt", "spec": spec, **io,
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: MXU-tiled dense matmul.
+
+This is the numeric hot spot of the MD (matrix diagonalization) benchmark:
+the Jacobi eigensolver in ``model.py`` applies each round of plane
+rotations as two dense orthogonal-matrix products, so virtually all of the
+MD FLOPs flow through this kernel (see DESIGN.md §Hardware-Adaptation).
+
+TPU mapping notes (the kernel is lowered with ``interpret=True`` for CPU
+PJRT execution; the BlockSpec below is what a real Mosaic lowering would
+schedule):
+
+* Grid is (M/bm, N/bn, K/bk) with the K dimension innermost so each (i, j)
+  output tile stays resident in VMEM across the K loop (revisiting
+  accumulator tiles is free; re-fetching operand tiles streams HBM→VMEM).
+* Tile sizes default to 64 — a multiple of the 8×128 VREG lane layout and
+  small enough that x-tile + y-tile + acc-tile fit comfortably in the
+  ~16 MiB/core VMEM budget (3 × 64×64×4 B = 48 KiB, leaving headroom for
+  double-buffering).
+* ``jnp.dot(..., preferred_element_type=f32)`` targets the MXU systolic
+  array with f32 accumulation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (bm, bn) output tile; accumulate over the K grid axis."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick_block(dim: int, want: int) -> int:
+    """Largest divisor of `dim` that is <= want (tiles must divide evenly)."""
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x: jnp.ndarray, y: jnp.ndarray, *, bm: int = 64, bn: int = 64,
+           bk: int = 64) -> jnp.ndarray:
+    """Tiled matmul ``x @ y`` via a Pallas kernel (interpret mode).
+
+    Shapes: x (M, K), y (K, N) -> (M, N), f32 accumulation. Block sizes are
+    clamped to divisors of the problem dims so any even shape works.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {y.shape}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), y.astype(jnp.float32))
+
+
+def vmem_bytes(bm: int = 64, bn: int = 64, bk: int = 64) -> int:
+    """Estimated VMEM working set of one grid step (operands + acc, f32)."""
+    return 4 * (bm * bk + bk * bn + bm * bn)

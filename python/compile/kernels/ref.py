@@ -1,0 +1,60 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth against which the Pallas implementations in
+``corr.py`` and ``matmul.py`` are validated (pytest + hypothesis). They are
+intentionally written in the most direct way possible — no tiling, no
+kernel tricks — so a reviewer can audit them against the math in the paper:
+
+* ``g2_ref``    — pixel-wise time autocorrelation used by XPCS-Eigen `corr`
+                  (Salim et al. §4.1.3; Perakis et al. PNAS 2017 for the
+                  physics definition of g2).
+* ``matmul_ref``— dense matmul oracle for the MXU-tiled Pallas matmul.
+* ``jacobi_eigvals_ref`` — NumPy eigvalsh oracle for the L2 MD model.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def matmul_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Plain dense matmul with f32 accumulation."""
+    return jnp.matmul(
+        x.astype(jnp.float32), y.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def g2_ref(frames: jnp.ndarray, ntau: int) -> jnp.ndarray:
+    """Pixel-wise normalized time autocorrelation.
+
+    Args:
+      frames: (T, P) intensity time series, T frames by P pixels.
+      ntau:   number of lag channels; lag ``tau`` runs 1..ntau inclusive.
+
+    Returns:
+      (ntau, P) array where out[k, p] is the symmetric-normalized g2 at
+      lag tau = k+1 for pixel p:
+
+          g2(tau, p) = <I(t, p) I(t+tau, p)>_t / (<I_head>_t <I_tail>_t)
+
+      with I_head = I[0:T-tau], I_tail = I[tau:T] (standard multi-tau
+      normalization used by XPCS-Eigen's `corr`).
+    """
+    frames = frames.astype(jnp.float32)
+    T = frames.shape[0]
+    rows = []
+    for k in range(ntau):
+        tau = k + 1
+        head = frames[: T - tau]
+        tail = frames[tau:]
+        num = jnp.mean(head * tail, axis=0)
+        den = jnp.mean(head, axis=0) * jnp.mean(tail, axis=0)
+        rows.append(num / jnp.maximum(den, 1e-12))
+    return jnp.stack(rows, axis=0)
+
+
+def jacobi_eigvals_ref(a) -> np.ndarray:
+    """Sorted eigenvalues of a symmetric matrix (NumPy LAPACK oracle)."""
+    return np.sort(np.linalg.eigvalsh(np.asarray(a, dtype=np.float64)))

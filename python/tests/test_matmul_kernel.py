@@ -1,0 +1,75 @@
+"""Pallas matmul kernel vs pure-jnp oracle (the CORE L1 correctness signal)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.matmul import matmul, vmem_bytes, _pick_block
+from compile.kernels.ref import matmul_ref
+
+
+def _rand(key, shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (8, 8, 8), (16, 32, 8), (64, 64, 64), (128, 64, 32), (96, 48, 80),
+    (1, 7, 5), (3, 3, 3),
+])
+def test_matches_ref_fixed_shapes(m, k, n):
+    kx, ky = jax.random.split(jax.random.PRNGKey(m * 1000 + k * 10 + n))
+    x, y = _rand(kx, (m, k)), _rand(ky, (k, n))
+    np.testing.assert_allclose(matmul(x, y), matmul_ref(x, y),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (16, 8, 32), (64, 64, 64),
+                                      (13, 7, 5)])
+def test_block_size_invariance(bm, bn, bk):
+    kx, ky = jax.random.split(jax.random.PRNGKey(0))
+    x, y = _rand(kx, (64, 64)), _rand(ky, (64, 64))
+    out = matmul(x, y, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(out, matmul_ref(x, y), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 48), k=st.integers(1, 48), n=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref_hypothesis_shapes(m, k, n, seed):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x, y = _rand(kx, (m, k)), _rand(ky, (k, n))
+    np.testing.assert_allclose(matmul(x, y), matmul_ref(x, y),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_bf16_inputs_accumulate_f32(seed):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = _rand(kx, (32, 32)).astype(jnp.bfloat16)
+    y = _rand(ky, (32, 32)).astype(jnp.bfloat16)
+    out = matmul(x, y)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(out, matmul_ref(x, y), rtol=3e-2, atol=3e-2)
+
+
+def test_identity():
+    x = jnp.eye(32, dtype=jnp.float32)
+    y = _rand(jax.random.PRNGKey(7), (32, 16))
+    np.testing.assert_allclose(matmul(x, y), y, rtol=1e-6, atol=1e-6)
+
+
+def test_pick_block_divides():
+    for dim in [1, 2, 7, 30, 64, 100, 128]:
+        for want in [1, 8, 64, 256]:
+            b = _pick_block(dim, want)
+            assert dim % b == 0 and 1 <= b <= min(dim, want)
+
+
+def test_vmem_budget():
+    # Default tiling must fit well inside a 16 MiB/core VMEM budget.
+    assert vmem_bytes(64, 64, 64) < 16 * 2**20 // 8

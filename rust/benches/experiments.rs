@@ -1,0 +1,22 @@
+//! Experiment regeneration bench: runs every table/figure harness in fast
+//! mode and reports wall time per experiment. `cargo bench --bench
+//! experiments` therefore regenerates the entire evaluation section.
+//!
+//! For publication-fidelity parameters run `balsam repro all` (no --fast).
+
+use std::time::Instant;
+
+fn main() {
+    println!("== regenerating all paper tables/figures (fast mode) ==");
+    let t_all = Instant::now();
+    for id in balsam::experiments::ALL {
+        let t0 = Instant::now();
+        balsam::experiments::run(id, true, 2021).unwrap_or_else(|e| panic!("{id} failed: {e}"));
+        println!("\n[{id} regenerated in {:.2}s]\n{}", t0.elapsed().as_secs_f64(), "-".repeat(72));
+    }
+    println!(
+        "\nall {} experiments regenerated in {:.1}s",
+        balsam::experiments::ALL.len(),
+        t_all.elapsed().as_secs_f64()
+    );
+}

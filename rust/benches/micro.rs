@@ -1,0 +1,184 @@
+//! Micro-benchmarks on the L3 hot paths (custom harness; criterion is not
+//! available offline). Run: `cargo bench --bench micro`.
+//!
+//! These are the §Perf instruments: service API throughput (the paper's
+//! "response time largely consistent with respect to increasing number of
+//! submitted Jobs" claim, §4.5), DES engine event rate, store index
+//! lookups vs scans, JSON codec, and HTTP round-trip latency.
+
+use std::time::Instant;
+
+use balsam::service::api::{ApiRequest, JobCreate, JobFilter};
+use balsam::service::models::JobState;
+use balsam::service::ServiceCore;
+use balsam::util::json::Json;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // Warmup.
+    for _ in 0..iters.min(3) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    let (val, unit) = if per < 1e-3 {
+        (per * 1e6, "us")
+    } else if per < 1.0 {
+        (per * 1e3, "ms")
+    } else {
+        (per, "s")
+    };
+    println!("{name:<56} {val:>10.2} {unit}/iter  ({iters} iters)");
+    per
+}
+
+fn setup_service(n_jobs: usize) -> (ServiceCore, String, balsam::service::models::SiteId) {
+    let mut svc = ServiceCore::new(b"bench");
+    let tok = svc.admin_token();
+    let site = svc
+        .handle(0.0, &tok, ApiRequest::CreateSite {
+            name: "theta".into(),
+            hostname: "h".into(),
+            path: "/p".into(),
+        })
+        .unwrap()
+        .site_id();
+    svc.handle(0.0, &tok, ApiRequest::RegisterApp {
+        site,
+        name: "MD".into(),
+        command_template: "md".into(),
+        parameters: vec![],
+    })
+    .unwrap();
+    let jobs: Vec<JobCreate> = (0..n_jobs)
+        .map(|i| {
+            let mut jc = JobCreate::simple(site, "MD", "md_small");
+            jc.transfers_in = vec![("APS".into(), 1000)];
+            jc.tags = vec![("batch".into(), (i / 100).to_string())];
+            jc
+        })
+        .collect();
+    svc.handle(0.1, &tok, ApiRequest::BulkCreateJobs { jobs }).unwrap();
+    (svc, tok, site)
+}
+
+fn main() {
+    println!("== micro benches (L3 hot paths) ==");
+
+    // Bulk job creation (the client burst path).
+    bench("service: bulk-create 1000 jobs", 20, || {
+        let _ = setup_service(1000);
+    });
+
+    // Session acquire against a large runnable backlog — the paper's
+    // indexed-queries claim: latency must not grow with backlog size.
+    for &backlog in &[1_000usize, 10_000, 50_000] {
+        let (mut svc, tok, site) = setup_service(backlog);
+        let sid = svc
+            .handle(1.0, &tok, ApiRequest::CreateSession { site, batch_job: None })
+            .unwrap()
+            .session_id();
+        bench(&format!("service: acquire 32 of {backlog}-job backlog"), 200, || {
+            let got = svc
+                .handle(2.0, &tok, ApiRequest::SessionAcquire {
+                    session: sid,
+                    max_nodes: 32,
+                    max_jobs: 32,
+                })
+                .unwrap()
+                .jobs();
+            // Release so the next iteration re-acquires.
+            std::hint::black_box(&got);
+            for j in got {
+                svc.store.job_mut(j.id).unwrap().session = None;
+                svc.store.sessions.get_mut(&sid).unwrap().acquired.clear();
+            }
+        });
+    }
+
+    // Backlog aggregation (shortest-backlog client polls this per batch).
+    let (mut svc, tok, site) = setup_service(50_000);
+    bench("service: SiteBacklog over 50k jobs", 200, || {
+        let _ = std::hint::black_box(svc.handle(2.0, &tok, ApiRequest::SiteBacklog { site }));
+    });
+
+    // Indexed filter query vs tag scan.
+    bench("service: indexed ListJobs(state, limit 64) of 50k", 200, || {
+        let _ = svc.handle(2.0, &tok, ApiRequest::ListJobs {
+            filter: JobFilter {
+                site: Some(site),
+                states: vec![JobState::Ready],
+                limit: 64,
+                ..Default::default()
+            },
+        });
+    });
+
+    // Pending-transfer query (transfer module tick path).
+    bench("service: PendingTransferItems(limit 512) of 50k", 200, || {
+        let _ = svc.handle(2.0, &tok, ApiRequest::PendingTransferItems {
+            site,
+            direction: balsam::service::models::Direction::In,
+            limit: 512,
+        });
+    });
+
+    // JSON codec on a bulk-create payload.
+    let payload = balsam::service::http_gw::request_to_json(&ApiRequest::BulkCreateJobs {
+        jobs: (0..100)
+            .map(|_| {
+                let mut jc = JobCreate::simple(site, "MD", "md_small");
+                jc.transfers_in = vec![("APS".into(), 200_000_000)];
+                jc
+            })
+            .collect(),
+    })
+    .to_string();
+    println!("json payload: {} bytes", payload.len());
+    bench("json: parse 100-job bulk-create", 500, || {
+        let _ = std::hint::black_box(Json::parse(&payload).unwrap());
+    });
+
+    // HTTP round trip on loopback.
+    let svc2 = std::sync::Arc::new(std::sync::Mutex::new(ServiceCore::new(b"bench")));
+    let tok2 = svc2.lock().unwrap().admin_token();
+    let server = balsam::service::http_gw::serve(svc2, "127.0.0.1:0").unwrap();
+    let addr = server.addr.clone();
+    bench("http: API round trip (ListEvents)", 300, || {
+        let mut conn = balsam::service::http_gw::HttpConn { addr: addr.clone() };
+        use balsam::service::api::ApiConn;
+        let _ = std::hint::black_box(conn.api(&tok2, ApiRequest::ListEvents { since: 0 }));
+    });
+    server.stop();
+
+    // DES engine raw wake rate.
+    {
+        use balsam::sim::{Actor, Engine};
+        use balsam::world::World;
+        struct Nop;
+        impl Actor for Nop {
+            fn name(&self) -> String {
+                "nop".into()
+            }
+            fn wake(&mut self, now: f64, _w: &mut World) -> f64 {
+                now + 1.0
+            }
+        }
+        bench("sim: 1M actor wakes", 5, || {
+            let mut eng = Engine::new();
+            let mut world = World::for_tests();
+            for _ in 0..10 {
+                eng.add(Box::new(Nop));
+            }
+            eng.run_until(&mut world, 100_000.0);
+        });
+    }
+
+    // End-to-end simulated experiment wall time (the repro harness cost).
+    bench("sim: fig9 single panel (600 simulated s)", 3, || {
+        let _ = std::hint::black_box(balsam::experiments::fig9::panel(&["APS"], 600.0, 1));
+    });
+    println!("\nmicro benches done");
+}

@@ -1,0 +1,386 @@
+//! Light-source clients: the experiment-side workload generators.
+//!
+//! Reproduces the three submission protocols of the evaluation:
+//!
+//! * **constant rate** — jobs/second, optionally in bursts of `batch`
+//!   every `period` (Fig. 7 phases, §4.6's 16-jobs-per-8 s bursts);
+//! * **steady backlog** — throttle submission to hold each site's
+//!   pre-running backlog near a target (Figs. 3/9);
+//! * and the two *distribution strategies* of §4.6: **round-robin** and
+//!   adaptive **shortest-backlog** routing via the Backlog API.
+
+use crate::service::api::{ApiConn, ApiRequest, JobCreate};
+use crate::service::models::{JobId, SiteId};
+use crate::sim::Actor;
+use crate::substrates::facility::payload_bytes;
+use crate::util::rng::Pcg;
+use crate::world::{InProcConn, World};
+
+/// How jobs are mapped onto sites (paper §4.6).
+#[derive(Debug, Clone)]
+pub enum Strategy {
+    /// All jobs to one site.
+    Single(SiteId),
+    /// Evenly alternate among sites.
+    RoundRobin(Vec<SiteId>),
+    /// Adaptively route each batch to the site with the smallest pending
+    /// workload (polled via the Backlog API).
+    ShortestBacklog(Vec<SiteId>),
+}
+
+/// When jobs are injected.
+#[derive(Debug, Clone)]
+pub enum Submission {
+    /// `batch` jobs every `period` seconds (constant average rate).
+    Bursts { batch: usize, period: f64 },
+    /// Keep each site's pre-running backlog near `target`.
+    SteadyBacklog { target: usize, period: f64 },
+}
+
+/// A light-source client (APS or ALS).
+pub struct WorkloadClient {
+    pub token: String,
+    /// Light source endpoint name ("APS" | "ALS").
+    pub source: String,
+    pub app: String,
+    /// Workload class; "md_mix" draws small/large uniformly (Fig. 3 right).
+    pub workload: String,
+    pub strategy: Strategy,
+    pub submission: Submission,
+    /// Stop after this many jobs (0 = unlimited).
+    pub max_jobs: usize,
+    pub submitted: usize,
+    pub created: Vec<JobId>,
+    /// Per-site submitted counts, aligned with strategy site order
+    /// (Fig. 13 diagnostics).
+    pub per_site: Vec<(SiteId, usize)>,
+    rr_idx: usize,
+    next_due: f64,
+    rng: Pcg,
+}
+
+impl WorkloadClient {
+    pub fn new(
+        token: String,
+        source: &str,
+        app: &str,
+        workload: &str,
+        strategy: Strategy,
+        submission: Submission,
+        seed: u64,
+    ) -> WorkloadClient {
+        let sites = match &strategy {
+            Strategy::Single(s) => vec![*s],
+            Strategy::RoundRobin(v) | Strategy::ShortestBacklog(v) => v.clone(),
+        };
+        WorkloadClient {
+            token,
+            source: source.to_string(),
+            app: app.to_string(),
+            workload: workload.to_string(),
+            strategy,
+            submission,
+            max_jobs: 0,
+            submitted: 0,
+            created: Vec::new(),
+            per_site: sites.into_iter().map(|s| (s, 0)).collect(),
+            rr_idx: 0,
+            next_due: 0.0,
+            rng: Pcg::seeded(seed ^ 0xc11e),
+        }
+    }
+
+    pub fn with_max_jobs(mut self, n: usize) -> Self {
+        self.max_jobs = n;
+        self
+    }
+
+    fn make_job(&mut self, site: SiteId) -> JobCreate {
+        let workload = if self.workload == "md_mix" {
+            if self.rng.chance(0.5) { "md_small" } else { "md_large" }
+        } else {
+            &self.workload
+        }
+        .to_string();
+        let mut jc = JobCreate::simple(site, &self.app, &workload);
+        // Source "local" = datasets already on the facility filesystem
+        // (paper Fig. 11: "input datasets are read directly from local HPC
+        // storage") — no transfer items at all.
+        if self.source != "local" {
+            let (inb, outb) = payload_bytes(&workload);
+            jc.transfers_in = vec![(self.source.clone(), inb)];
+            jc.transfers_out = vec![(self.source.clone(), outb)];
+        }
+        jc.tags = vec![("source".into(), self.source.clone())];
+        jc
+    }
+
+    fn pick_site(&mut self, conn: &mut dyn ApiConn) -> SiteId {
+        match &self.strategy {
+            Strategy::Single(s) => *s,
+            Strategy::RoundRobin(sites) => {
+                let s = sites[self.rr_idx % sites.len()];
+                self.rr_idx += 1;
+                s
+            }
+            Strategy::ShortestBacklog(sites) => {
+                let mut best = sites[0];
+                let mut best_backlog = usize::MAX;
+                for &s in sites {
+                    let b = conn
+                        .api(&self.token, ApiRequest::SiteBacklog { site: s })
+                        .map(|r| r.backlog().backlog_jobs)
+                        .unwrap_or(usize::MAX);
+                    if b < best_backlog {
+                        best_backlog = b;
+                        best = s;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    fn submit_batch(&mut self, conn: &mut dyn ApiConn, site: SiteId, n: usize) {
+        if n == 0 {
+            return;
+        }
+        let jobs: Vec<JobCreate> = (0..n).map(|_| self.make_job(site)).collect();
+        if let Ok(resp) = conn.api(&self.token.clone(), ApiRequest::BulkCreateJobs { jobs }) {
+            let ids = resp.job_ids();
+            self.submitted += ids.len();
+            if let Some(entry) = self.per_site.iter_mut().find(|(s, _)| *s == site) {
+                entry.1 += ids.len();
+            }
+            self.created.extend(ids);
+        }
+    }
+
+    fn budget(&self, want: usize) -> usize {
+        if self.max_jobs == 0 {
+            want
+        } else {
+            want.min(self.max_jobs.saturating_sub(self.submitted))
+        }
+    }
+
+    /// One client step; returns next wake time.
+    pub fn tick(&mut self, now: f64, conn: &mut dyn ApiConn) -> f64 {
+        if now < self.next_due {
+            return self.next_due;
+        }
+        match self.submission.clone() {
+            Submission::Bursts { batch, period } => {
+                let n = self.budget(batch);
+                if n > 0 {
+                    let site = self.pick_site(conn);
+                    self.submit_batch(conn, site, n);
+                }
+                self.next_due = now + period;
+            }
+            Submission::SteadyBacklog { target, period } => {
+                // Top up every site to its backlog target.
+                let sites: Vec<SiteId> = self.per_site.iter().map(|(s, _)| *s).collect();
+                for site in sites {
+                    let backlog = conn
+                        .api(&self.token, ApiRequest::SiteBacklog { site })
+                        .map(|r| r.backlog().backlog_jobs)
+                        .unwrap_or(target);
+                    let deficit = target.saturating_sub(backlog);
+                    let n = self.budget(deficit);
+                    self.submit_batch(conn, site, n);
+                }
+                self.next_due = now + period;
+            }
+        }
+        self.next_due
+    }
+}
+
+/// Discrete-event wrapper for clients.
+pub struct ClientActor {
+    pub client: WorkloadClient,
+}
+
+impl Actor for ClientActor {
+    fn name(&self) -> String {
+        format!("client:{}", self.client.source)
+    }
+
+    fn wake(&mut self, now: f64, world: &mut World) -> f64 {
+        let mut conn = InProcConn { now, svc: &mut world.service };
+        self.client.tick(now, &mut conn)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::ServiceCore;
+
+    fn setup(n_sites: usize) -> (ServiceCore, String, Vec<SiteId>) {
+        let mut svc = ServiceCore::new(b"k");
+        let tok = svc.admin_token();
+        let mut sites = Vec::new();
+        for name in ["theta", "summit", "cori"].iter().take(n_sites) {
+            let site = svc
+                .handle(0.0, &tok, ApiRequest::CreateSite {
+                    name: name.to_string(),
+                    hostname: "h".into(),
+                    path: "/p".into(),
+                })
+                .unwrap()
+                .site_id();
+            svc.handle(0.0, &tok, ApiRequest::RegisterApp {
+                site,
+                name: "EigenCorr".into(),
+                command_template: "corr".into(),
+                parameters: vec![],
+            })
+            .unwrap();
+            sites.push(site);
+        }
+        (svc, tok, sites)
+    }
+
+    #[test]
+    fn bursts_submit_at_constant_rate() {
+        let (mut svc, tok, sites) = setup(1);
+        let mut c = WorkloadClient::new(
+            tok,
+            "APS",
+            "EigenCorr",
+            "xpcs",
+            Strategy::Single(sites[0]),
+            Submission::Bursts { batch: 16, period: 8.0 },
+            1,
+        );
+        for step in 0..4 {
+            let t = step as f64 * 8.0;
+            let mut conn = InProcConn { now: t, svc: &mut svc };
+            c.tick(t, &mut conn);
+        }
+        assert_eq!(c.submitted, 64); // 16 jobs / 8 s * 32 s = 2 jobs/s avg
+    }
+
+    #[test]
+    fn round_robin_distributes_evenly() {
+        let (mut svc, tok, sites) = setup(3);
+        let mut c = WorkloadClient::new(
+            tok,
+            "APS",
+            "EigenCorr",
+            "xpcs",
+            Strategy::RoundRobin(sites.clone()),
+            Submission::Bursts { batch: 1, period: 1.0 },
+            2,
+        );
+        for step in 0..9 {
+            let t = step as f64;
+            let mut conn = InProcConn { now: t, svc: &mut svc };
+            c.tick(t, &mut conn);
+        }
+        for (_, n) in &c.per_site {
+            assert_eq!(*n, 3);
+        }
+    }
+
+    #[test]
+    fn shortest_backlog_prefers_empty_site() {
+        let (mut svc, tok, sites) = setup(2);
+        // Preload site 0 with backlog.
+        let jobs: Vec<JobCreate> =
+            (0..10).map(|_| JobCreate::simple(sites[0], "EigenCorr", "xpcs")).collect();
+        svc.handle(0.0, &tok, ApiRequest::BulkCreateJobs { jobs }).unwrap();
+        let mut c = WorkloadClient::new(
+            tok,
+            "APS",
+            "EigenCorr",
+            "xpcs",
+            Strategy::ShortestBacklog(sites.clone()),
+            Submission::Bursts { batch: 4, period: 1.0 },
+            3,
+        );
+        let mut conn = InProcConn { now: 0.0, svc: &mut svc };
+        c.tick(0.0, &mut conn);
+        assert_eq!(c.per_site[0].1, 0);
+        assert_eq!(c.per_site[1].1, 4);
+    }
+
+    #[test]
+    fn steady_backlog_holds_target() {
+        let (mut svc, tok, sites) = setup(1);
+        let mut c = WorkloadClient::new(
+            tok,
+            "APS",
+            "EigenCorr",
+            "xpcs",
+            Strategy::Single(sites[0]),
+            Submission::SteadyBacklog { target: 32, period: 1.0 },
+            4,
+        );
+        {
+            let mut conn = InProcConn { now: 0.0, svc: &mut svc };
+            c.tick(0.0, &mut conn);
+        }
+        assert_eq!(c.submitted, 32);
+        // Nothing consumed -> no further submission.
+        let mut conn = InProcConn { now: 1.0, svc: &mut svc };
+        c.tick(1.0, &mut conn);
+        assert_eq!(c.submitted, 32);
+    }
+
+    #[test]
+    fn max_jobs_cap_respected() {
+        let (mut svc, tok, sites) = setup(1);
+        let mut c = WorkloadClient::new(
+            tok,
+            "APS",
+            "EigenCorr",
+            "xpcs",
+            Strategy::Single(sites[0]),
+            Submission::Bursts { batch: 50, period: 1.0 },
+            5,
+        )
+        .with_max_jobs(70);
+        for step in 0..5 {
+            let t = step as f64;
+            let mut conn = InProcConn { now: t, svc: &mut svc };
+            c.tick(t, &mut conn);
+        }
+        assert_eq!(c.submitted, 70);
+    }
+
+    #[test]
+    fn md_mix_draws_both_sizes() {
+        let (mut svc, tok, sites) = setup(1);
+        svc.handle(0.0, &tok, ApiRequest::RegisterApp {
+            site: sites[0],
+            name: "MD".into(),
+            command_template: "md".into(),
+            parameters: vec![],
+        })
+        .unwrap();
+        let mut c = WorkloadClient::new(
+            tok,
+            "APS",
+            "MD",
+            "md_mix",
+            Strategy::Single(sites[0]),
+            Submission::Bursts { batch: 60, period: 1.0 },
+            6,
+        );
+        let mut conn = InProcConn { now: 0.0, svc: &mut svc };
+        c.tick(0.0, &mut conn);
+        let (mut small, mut large) = (0, 0);
+        for j in svc.store.jobs_iter() {
+            match j.workload.as_str() {
+                "md_small" => small += 1,
+                "md_large" => large += 1,
+                _ => {}
+            }
+        }
+        assert_eq!(small + large, 60);
+        assert!(small > 10 && large > 10, "mix should draw both: {small}/{large}");
+    }
+}

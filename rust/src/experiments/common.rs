@@ -1,0 +1,320 @@
+//! Shared experiment scaffolding: deploy a federated Balsam world
+//! (service + sites + agents) and drive it with clients, exactly like the
+//! paper's §4.1 setup; plus the local-cluster baseline driver of §4.1.5.
+
+use std::collections::BTreeMap;
+
+use crate::client::{ClientActor, WorkloadClient};
+use crate::service::api::ApiRequest;
+use crate::service::models::SiteId;
+use crate::service::ServiceCore;
+use crate::sim::{Actor, Engine};
+use crate::site::agent::{SimSiteActor, SiteAgent};
+use crate::site::config::SiteConfig;
+use crate::site::platform::{AllocStatus, SchedulerBackend};
+use crate::substrates::facility::{payload_bytes, runtime_model};
+use crate::world::World;
+
+/// A deployed federation under simulation.
+pub struct Deployment {
+    pub world: World,
+    pub engine: Engine,
+    pub token: String,
+    pub sites: BTreeMap<String, SiteId>,
+}
+
+/// Create service + one site per facility, register the standard apps,
+/// and start a site agent actor for each. `tweak` customizes each site's
+/// config (batch size, elastic caps, ...).
+pub fn deploy(
+    seed: u64,
+    facilities: &[&str],
+    reserved_nodes: u32,
+    tweak: impl Fn(&mut SiteConfig),
+) -> Deployment {
+    let mut world = World::standard(seed, reserved_nodes);
+    let token = world.service.admin_token();
+    let mut engine = Engine::new();
+    let mut sites = BTreeMap::new();
+    for fac in facilities {
+        let site = world
+            .service
+            .handle(0.0, &token, ApiRequest::CreateSite {
+                name: fac.to_string(),
+                hostname: format!("{fac}login1"),
+                path: format!("/projects/balsam/{fac}"),
+            })
+            .unwrap()
+            .site_id();
+        for (app, tmpl) in [("MD", "python -m md_bench {{matrix}}"), ("EigenCorr", "corr {{h5}} -imm {{imm}}")] {
+            world
+                .service
+                .handle(0.0, &token, ApiRequest::RegisterApp {
+                    site,
+                    name: app.into(),
+                    command_template: tmpl.into(),
+                    parameters: vec![],
+                })
+                .unwrap();
+        }
+        let mut cfg = SiteConfig::defaults(fac, site, token.clone());
+        tweak(&mut cfg);
+        engine.add(Box::new(SimSiteActor::new(SiteAgent::new(cfg))));
+        sites.insert(fac.to_string(), site);
+    }
+    Deployment { world, engine, token, sites }
+}
+
+impl Deployment {
+    pub fn add_client(&mut self, client: WorkloadClient) {
+        self.engine.add(Box::new(ClientActor { client }));
+    }
+
+    pub fn add_actor(&mut self, actor: Box<dyn Actor>) {
+        self.engine.add(actor);
+    }
+
+    pub fn run_until(&mut self, t_end: f64) {
+        self.engine.run_until(&mut self.world, t_end);
+    }
+
+    pub fn svc(&self) -> &ServiceCore {
+        &self.world.service
+    }
+}
+
+/// §4.1.5 local-cluster baseline: the MD workload submitted directly to
+/// the batch scheduler on an exclusive reservation — no Balsam. Data is
+/// "staged" by local filesystem copies inside each job script, so the
+/// per-job wall time is stage-in + run + stage-out, and the queueing delay
+/// is whatever the scheduler imposes.
+pub struct LocalBaseline {
+    pub fac: String,
+    pub workload: String,
+    /// Keep this many jobs in flight (queued+running).
+    pub inflight_target: usize,
+    pub max_jobs: usize,
+    submitted: Vec<(u64, f64)>, // (local_id, submit_t)
+    /// (submit_t, queue_delay, wall, end_t, workload)
+    pub completed: Vec<(f64, f64, f64, f64, String)>,
+    pending: BTreeMap<u64, (f64, String)>,
+    next_due: f64,
+    rng: crate::util::rng::Pcg,
+    /// Local staging bandwidth (bytes/s) and per-copy overhead (s):
+    /// parallel-filesystem copy, 1–3 orders faster than WAN (Fig. 4).
+    stage_bw: f64,
+    stage_overhead: f64,
+}
+
+impl LocalBaseline {
+    pub fn new(fac: &str, workload: &str, inflight: usize, seed: u64) -> LocalBaseline {
+        LocalBaseline {
+            fac: fac.to_string(),
+            workload: workload.to_string(),
+            inflight_target: inflight,
+            max_jobs: 0,
+            submitted: Vec::new(),
+            completed: Vec::new(),
+            pending: BTreeMap::new(),
+            next_due: 0.0,
+            rng: crate::util::rng::Pcg::seeded(seed ^ 0x10ca1),
+            stage_bw: 1.8e9,
+            stage_overhead: 0.4,
+        }
+    }
+
+    fn sample_wall(&mut self, workload: &str) -> f64 {
+        let (inb, outb) = payload_bytes(workload);
+        let (mean, sd) = runtime_model(&self.fac, workload);
+        let stage_in = self.stage_overhead + inb as f64 / self.stage_bw;
+        let stage_out = self.stage_overhead + outb as f64 / self.stage_bw;
+        let run = (mean + sd * self.rng.normal()).max(0.3 * mean);
+        stage_in + run + stage_out
+    }
+
+    pub fn throughput(&self, t0: f64, t1: f64) -> f64 {
+        let n = self.completed.iter().filter(|c| c.3 >= t0 && c.3 <= t1).count();
+        n as f64 / (t1 - t0).max(1e-9)
+    }
+}
+
+impl Actor for LocalBaseline {
+    fn name(&self) -> String {
+        format!("baseline:{}", self.fac)
+    }
+
+    fn wake(&mut self, now: f64, world: &mut World) -> f64 {
+        if now < self.next_due {
+            return self.next_due;
+        }
+        let sched = world.scheds.get_mut(&self.fac).expect("facility");
+        // Reap completions.
+        let ids: Vec<u64> = self.pending.keys().copied().collect();
+        for id in ids {
+            if let AllocStatus::Finished = sched.status(now, id) {
+                let (submit_t, wl) = self.pending.remove(&id).unwrap();
+                let delay = sched.queue_delay(id).unwrap_or(0.0);
+                let wall = self.submitted.iter().find(|(i, _)| *i == id).map(|_| 0.0).unwrap_or(0.0);
+                let _ = wall;
+                let end = now; // polled at 1 s granularity
+                self.completed.push((submit_t, delay, end - submit_t - delay, end, wl));
+            }
+        }
+        // Top up in-flight jobs.
+        let total = self.pending.len() + self.completed.len();
+        let budget = if self.max_jobs == 0 { usize::MAX } else { self.max_jobs.saturating_sub(total) };
+        let deficit = self.inflight_target.saturating_sub(self.pending.len()).min(budget);
+        for _ in 0..deficit {
+            let wl = if self.workload == "md_mix" {
+                if self.rng.chance(0.5) { "md_small" } else { "md_large" }.to_string()
+            } else {
+                self.workload.clone()
+            };
+            let wall = self.sample_wall(&wl);
+            let id = sched.submit(now, &self.fac, 1, wall);
+            self.submitted.push((id, now));
+            self.pending.insert(id, (now, wl));
+        }
+        self.next_due = now + 1.0;
+        self.next_due
+    }
+}
+
+/// Fault injector for Fig. 7: every `period`, ungracefully kill one
+/// randomly-chosen running allocation at `fac` within `[start, stop]`.
+pub struct FaultInjector {
+    pub fac: String,
+    pub period: f64,
+    pub start: f64,
+    pub stop: f64,
+    pub kills: u64,
+    next_due: f64,
+    rng: crate::util::rng::Pcg,
+}
+
+impl FaultInjector {
+    pub fn new(fac: &str, period: f64, start: f64, stop: f64, seed: u64) -> FaultInjector {
+        FaultInjector {
+            fac: fac.to_string(),
+            period,
+            start,
+            stop,
+            kills: 0,
+            next_due: start,
+            rng: crate::util::rng::Pcg::seeded(seed ^ 0xfa17),
+        }
+    }
+}
+
+impl Actor for FaultInjector {
+    fn name(&self) -> String {
+        format!("faults:{}", self.fac)
+    }
+
+    fn wake(&mut self, now: f64, world: &mut World) -> f64 {
+        if now < self.next_due {
+            return self.next_due;
+        }
+        if now > self.stop {
+            return f64::INFINITY;
+        }
+        let sched = world.scheds.get_mut(&self.fac).expect("facility");
+        let running = sched.running_ids();
+        if !running.is_empty() {
+            let victim = *self.rng.choose(&running);
+            sched.kill(now, victim);
+            self.kills += 1;
+        }
+        self.next_due = now + self.period;
+        self.next_due
+    }
+}
+
+/// Simple fixed-width table printer for experiment reports.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::{Strategy, Submission};
+    use crate::service::models::JobState;
+
+    #[test]
+    fn deploy_creates_sites_and_apps() {
+        let d = deploy(1, &["theta", "cori"], 32, |_| {});
+        assert_eq!(d.sites.len(), 2);
+        assert_eq!(d.svc().store.apps.len(), 4);
+    }
+
+    #[test]
+    fn deployment_processes_a_small_workload() {
+        let mut d = deploy(2, &["cori"], 32, |c| c.transfer.batch_size = 8);
+        let site = d.sites["cori"];
+        let client = WorkloadClient::new(
+            d.token.clone(),
+            "APS",
+            "MD",
+            "md_small",
+            Strategy::Single(site),
+            Submission::SteadyBacklog { target: 8, period: 2.0 },
+            3,
+        )
+        .with_max_jobs(16);
+        d.add_client(client);
+        d.run_until(1200.0);
+        assert_eq!(d.svc().store.count_in_state(site, JobState::JobFinished), 16);
+    }
+
+    #[test]
+    fn baseline_driver_completes_jobs() {
+        let mut world = World::standard(5, 8);
+        let mut engine = Engine::new();
+        let mut bl = LocalBaseline::new("cori", "md_small", 8, 5);
+        bl.max_jobs = 12;
+        engine.add(Box::new(bl));
+        engine.run_until(&mut world, 600.0);
+        // Actor moved into engine; verify via scheduler state instead:
+        // all 12 jobs finished -> all nodes free again.
+        assert_eq!(world.scheds.get_mut("cori").unwrap().free_nodes(600.0), 8);
+    }
+
+    #[test]
+    fn fault_injector_kills_running_allocations() {
+        let mut world = World::standard(6, 16);
+        {
+            let sched = world.scheds.get_mut("theta").unwrap();
+            sched.submit(0.0, "theta", 8, 1e5);
+            for t in 0..60 {
+                sched.pump(t as f64);
+            }
+            assert_eq!(sched.running_ids().len(), 1);
+        }
+        let mut engine = Engine::new();
+        engine.add(Box::new(FaultInjector::new("theta", 30.0, 60.0, 200.0, 6)));
+        engine.run_until(&mut world, 300.0);
+        assert!(world.scheds.get_mut("theta").unwrap().running_ids().is_empty());
+    }
+}

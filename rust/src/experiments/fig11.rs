@@ -1,0 +1,78 @@
+//! Fig. 11: weak scaling of XPCS throughput with launcher size on Theta,
+//! WAN transfers removed (datasets read from local storage): 64 -> 512
+//! nodes, ~2 jobs per node, mpi pilot mode.
+//!
+//! Expected shape: ≥ ~90% weak-scaling efficiency at 512 nodes.
+
+use crate::client::{Strategy, Submission, WorkloadClient};
+use crate::experiments::common::{deploy, print_table};
+use crate::metrics::state_timeline;
+use crate::service::models::JobState;
+
+pub const NODE_COUNTS: [u32; 4] = [64, 128, 256, 512];
+
+/// Completion rate (jobs/s) for 2 jobs/node with no WAN staging.
+pub fn rate_at(nodes: u32, seed: u64) -> f64 {
+    let n_jobs = (2 * nodes) as usize;
+    let mut d = deploy(seed, &["theta"], nodes, |c| {
+        c.elastic.block_nodes = nodes;
+        c.elastic.max_nodes = nodes;
+        c.elastic.wall_time_s = 3.0 * 3600.0;
+    });
+    let site = d.sites["theta"];
+    // Datasets on local storage: the "local" endpoint stages over the
+    // intra-facility route (parallel filesystem), effectively removing the
+    // WAN from the pipeline.
+    let client = WorkloadClient::new(
+        d.token.clone(),
+        "local",
+        "EigenCorr",
+        "xpcs",
+        Strategy::Single(site),
+        Submission::Bursts { batch: n_jobs, period: 1e9 },
+        seed,
+    )
+    .with_max_jobs(n_jobs);
+    d.add_client(client);
+    d.run_until(3.0 * 3600.0);
+    let tl = state_timeline(&d.svc().store.events, site, JobState::JobFinished);
+    assert_eq!(tl.count(), n_jobs, "all local jobs must complete ({} did)", tl.count());
+    let end = tl.curve(3.0 * 3600.0, 10000).iter().find(|(_, c)| *c == n_jobs).unwrap().0;
+    n_jobs as f64 / end
+}
+
+pub fn run(fast: bool, seed: u64) -> crate::Result<()> {
+    let counts: &[u32] = if fast { &[64, 256] } else { &NODE_COUNTS };
+    let base_nodes = counts[0];
+    let base = rate_at(base_nodes, seed);
+    let mut rows = Vec::new();
+    for &n in counts {
+        let r = if n == base_nodes { base } else { rate_at(n, seed + n as u64) };
+        let ideal = base * n as f64 / base_nodes as f64;
+        rows.push(vec![
+            n.to_string(),
+            format!("{:.2}", r),
+            format!("{:.0}%", 100.0 * r / ideal),
+        ]);
+    }
+    print_table(
+        "Fig 11: XPCS weak scaling on Theta without WAN staging (mpi pilot mode)",
+        &["nodes", "jobs/s", "efficiency"],
+        &rows,
+    );
+    println!("paper shape: ~90% efficiency from 64 to 512 nodes");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weak_scaling_efficiency_above_85_percent() {
+        let r64 = rate_at(64, 31);
+        let r256 = rate_at(256, 32);
+        let eff = r256 / (r64 * 4.0);
+        assert!(eff > 0.85, "weak-scaling efficiency {eff} below paper's ~0.90");
+    }
+}

@@ -1,0 +1,115 @@
+//! Fig. 3: weak scaling of MD throughput — local batch-queue pipeline vs
+//! the Balsam APS↔{Theta, Cori} pipeline at 4–32 nodes, for small / large
+//! / mixed input sizes.
+//!
+//! Expected shape (paper §4.2): Cobalt local throughput is FLAT (start-rate
+//! throttled); Slurm local is moderately scalable; Balsam scales at
+//! 85–100% efficiency on both machines despite WAN staging.
+
+use crate::client::{Strategy, Submission, WorkloadClient};
+use crate::experiments::common::{deploy, print_table, LocalBaseline};
+use crate::metrics::completion_rate;
+use crate::world::World;
+
+pub const NODE_COUNTS: [u32; 4] = [4, 8, 16, 32];
+
+/// Balsam pipeline throughput (jobs/s) at `nodes`.
+pub fn balsam_rate(fac: &str, workload: &str, nodes: u32, horizon: f64, seed: u64) -> f64 {
+    let mut d = deploy(seed, &[fac], nodes, |c| {
+        c.elastic.block_nodes = nodes;
+        c.elastic.max_nodes = nodes;
+        c.elastic.wall_time_s = horizon * 2.0;
+        c.transfer.batch_size = 16;
+    });
+    let site = d.sites[fac];
+    // Paper: steady-state backlog of up to 48 datasets in flight.
+    let client = WorkloadClient::new(
+        d.token.clone(),
+        "APS",
+        "MD",
+        workload,
+        Strategy::Single(site),
+        Submission::SteadyBacklog { target: 48, period: 2.0 },
+        seed,
+    );
+    d.add_client(client);
+    d.run_until(horizon);
+    // Measure over the steady-state back half.
+    completion_rate(&d.svc().store.events, site, horizon * 0.33, horizon)
+}
+
+/// Local batch-queue pipeline throughput (jobs/s) at `nodes`. The driver
+/// is stepped directly (not via the engine) so the completion log stays
+/// accessible after the run.
+pub fn baseline_rate(fac: &str, workload: &str, nodes: u32, horizon: f64, seed: u64) -> f64 {
+    let mut world = World::standard(seed, nodes);
+    let mut bl = LocalBaseline::new(fac, workload, 48, seed);
+    let mut t = 0.0;
+    while t < horizon {
+        use crate::sim::Actor;
+        t = bl.wake(t, &mut world);
+    }
+    bl.throughput(horizon * 0.33, horizon)
+}
+
+pub fn run(fast: bool, seed: u64) -> crate::Result<()> {
+    let horizon = if fast { 600.0 } else { 1500.0 };
+    let node_counts: &[u32] = if fast { &[4, 32] } else { &NODE_COUNTS };
+    for workload in ["md_small", "md_large", "md_mix"] {
+        let mut rows = Vec::new();
+        for fac in ["theta", "cori"] {
+            for &n in node_counts {
+                let b = balsam_rate(fac, workload, n, horizon, seed + n as u64);
+                let l = baseline_rate(fac, workload, n, horizon, seed + 7 * n as u64);
+                rows.push(vec![
+                    fac.to_string(),
+                    n.to_string(),
+                    format!("{:.3}", l),
+                    format!("{:.3}", b),
+                    format!("{:.2}x", b / l.max(1e-9)),
+                ]);
+            }
+        }
+        print_table(
+            &format!("Fig 3 ({workload}): weak scaling, local batch queue vs Balsam"),
+            &["facility", "nodes", "local jobs/s", "balsam jobs/s", "balsam/local"],
+            &rows,
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cobalt_baseline_is_flat_but_balsam_scales() {
+        let h = 900.0;
+        let base4 = baseline_rate("theta", "md_small", 4, h, 1);
+        let base32 = baseline_rate("theta", "md_small", 32, h, 2);
+        // Cobalt start-rate throttling: 8x nodes buys < 2x throughput.
+        assert!(
+            base32 < 2.0 * base4.max(1e-3),
+            "cobalt should be flat: {base4} -> {base32}"
+        );
+        let bal4 = balsam_rate("theta", "md_small", 4, h, 3);
+        let bal32 = balsam_rate("theta", "md_small", 32, h, 4);
+        // Balsam weak-scales (>=60% of ideal 8x even in a short window).
+        assert!(
+            bal32 > 4.0 * bal4,
+            "balsam should scale: {bal4} -> {bal32}"
+        );
+        // And Balsam beats the local Cobalt pipeline outright at 32 nodes.
+        assert!(bal32 > base32, "balsam {bal32} <= cobalt baseline {base32}");
+    }
+
+    #[test]
+    fn slurm_baseline_moderately_scalable() {
+        let h = 700.0;
+        let base4 = baseline_rate("cori", "md_small", 4, h, 5);
+        let base32 = baseline_rate("cori", "md_small", 32, h, 6);
+        let eff = base32 / (8.0 * base4);
+        assert!(eff > 0.4, "slurm efficiency {eff} too low (paper: ~0.66)");
+    }
+}

@@ -1,0 +1,107 @@
+//! Fig. 8: contribution of each pipeline stage to total XPCS analysis
+//! latency, per route ({APS, ALS} × {Theta, Summit, Cori}), with at most
+//! one 878 MB dataset in flight per route (no pipelining/batching).
+//!
+//! Expected shape: data transfer dominates overheads; totals range from
+//! ~86 s (APS↔Cori) to ~150 s (ALS↔Theta); Cori's short runtime makes it
+//! the fastest total; launcher startup overhead is 1–2 s.
+
+use crate::client::{Strategy, Submission, WorkloadClient};
+use crate::experiments::common::{deploy, print_table};
+use crate::metrics::{job_table, stage_durations, summarize_stage};
+
+pub struct RouteBreakdown {
+    pub source: String,
+    pub fac: String,
+    pub stage_in: f64,
+    pub run_delay: f64,
+    pub run: f64,
+    pub stage_out: f64,
+    pub total: f64,
+}
+
+/// Median stage breakdown for `n` sequential XPCS jobs on one route.
+pub fn route_breakdown(source: &str, fac: &str, n: usize, seed: u64) -> RouteBreakdown {
+    let mut d = deploy(seed, &[fac], 32, |c| {
+        c.elastic.block_nodes = 32;
+        c.elastic.max_nodes = 32;
+        c.elastic.wall_time_s = 3.0 * 3600.0;
+        c.transfer.max_concurrent = 1; // max one dataset in flight
+        c.transfer.batch_size = 2;     // one job = 1 IMM+HDF bundle
+    });
+    d.world.xfer.net.bw_scale = crate::substrates::facility::XPCS_CAMPAIGN_BW_SCALE;
+    let site = d.sites[fac];
+    let client = WorkloadClient::new(
+        d.token.clone(),
+        source,
+        "EigenCorr",
+        "xpcs",
+        Strategy::Single(site),
+        Submission::SteadyBacklog { target: 1, period: 2.0 },
+        seed,
+    )
+    .with_max_jobs(n);
+    d.add_client(client);
+    d.run_until(3.0 * 3600.0);
+    let jobs = job_table(d.svc());
+    let durs = stage_durations(&d.svc().store.events, &jobs);
+    let med = |f: fn(&crate::metrics::StageDurations) -> Option<f64>| {
+        summarize_stage(&durs, f).percentile(50.0)
+    };
+    let (si, rd, run, so) = (med(|d| d.stage_in), med(|d| d.run_delay), med(|d| d.run), med(|d| d.stage_out));
+    RouteBreakdown {
+        source: source.to_string(),
+        fac: fac.to_string(),
+        stage_in: si,
+        run_delay: rd,
+        run,
+        stage_out: so,
+        total: si + rd + run + so,
+    }
+}
+
+pub fn run(fast: bool, seed: u64) -> crate::Result<()> {
+    let n = if fast { 5 } else { 12 };
+    let mut rows = Vec::new();
+    let mut s = seed;
+    for source in ["APS", "ALS"] {
+        for fac in ["theta", "summit", "cori"] {
+            s += 1;
+            let b = route_breakdown(source, fac, n, s);
+            rows.push(vec![
+                format!("{}<->{}", b.source, b.fac),
+                format!("{:.1}", b.stage_in),
+                format!("{:.1}", b.run_delay),
+                format!("{:.1}", b.run),
+                format!("{:.1}", b.stage_out),
+                format!("{:.1}", b.total),
+            ]);
+        }
+    }
+    print_table(
+        "Fig 8: median XPCS stage latencies per route (s), one 878MB dataset in flight",
+        &["route", "stage in", "run delay", "run", "stage out", "total"],
+        &rows,
+    );
+    println!("paper shape: totals ~86s (APS<->cori) to ~150s (ALS<->theta); transfer dominates overhead");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cori_total_fastest_and_transfer_dominates_overhead() {
+        let theta = route_breakdown("APS", "theta", 4, 21);
+        let cori = route_breakdown("APS", "cori", 4, 22);
+        assert!(cori.total < theta.total, "cori {} !< theta {}", cori.total, theta.total);
+        // Overheads = stage_in + run_delay + stage_out; transfers dominate.
+        let xfer = theta.stage_in + theta.stage_out;
+        assert!(xfer > 2.0 * theta.run_delay, "transfer should dominate run delay");
+        // Run delay small (pilot already provisioned).
+        assert!(theta.run_delay < 20.0);
+        // Totals in the paper's order of magnitude (tens of seconds to ~3 min).
+        assert!(theta.total > 60.0 && theta.total < 400.0, "total={}", theta.total);
+    }
+}

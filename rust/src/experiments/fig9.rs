@@ -1,0 +1,202 @@
+//! Figs. 9 + 10: simultaneous XPCS throughput on Theta + Summit + Cori
+//! (32 nodes each), with datasets streamed from APS, ALS, or both; node
+//! utilization and the Little's-law check.
+//!
+//! Expected shape: throughput orders Cori > Summit > Theta; Summit runs
+//! near 100% utilization (compute-bound), Theta/Cori nearer ~75%
+//! (network-I/O-bound); aggregate over three systems ≈ 4.4× Theta alone.
+
+use crate::client::{Strategy, Submission, WorkloadClient};
+use crate::experiments::common::{deploy, print_table, Deployment};
+use crate::metrics::{littles_law, running_tasks_curve, state_timeline};
+use crate::service::models::JobState;
+
+pub struct PanelResult {
+    pub label: String,
+    /// per-facility: (arrival rate /min, completed, avg utilization %).
+    pub per_fac: Vec<(String, f64, usize, f64)>,
+    pub aggregate_completed: usize,
+}
+
+fn xpcs_deploy(seed: u64) -> Deployment {
+    let mut d = deploy(seed, &["theta", "summit", "cori"], 32, |c| {
+        c.elastic.block_nodes = 32;
+        c.elastic.max_nodes = 32;
+        c.elastic.wall_time_s = 3600.0 * 2.0;
+        c.transfer.batch_size = 32; // paper: up to 32 files per transfer
+        c.transfer.max_concurrent = 5; // and up to 5 concurrent tasks
+    });
+    // XPCS-campaign WAN conditions (see facility::XPCS_CAMPAIGN_BW_SCALE).
+    d.world.xfer.net.bw_scale = crate::substrates::facility::XPCS_CAMPAIGN_BW_SCALE;
+    d
+}
+
+/// One Fig. 9 panel: stream XPCS datasets from `sources` for `horizon` s,
+/// steady backlog of 32 per site (split across sources when both run).
+pub fn panel(sources: &[&str], horizon: f64, seed: u64) -> PanelResult {
+    let mut d = xpcs_deploy(seed);
+    let facs = ["theta", "summit", "cori"];
+    let sites: Vec<_> = facs.iter().map(|f| d.sites[*f]).collect();
+    let target = 32 / sources.len();
+    for (i, src) in sources.iter().enumerate() {
+        for &site in &sites {
+            let client = WorkloadClient::new(
+                d.token.clone(),
+                src,
+                "EigenCorr",
+                "xpcs",
+                Strategy::Single(site),
+                Submission::SteadyBacklog { target, period: 4.0 },
+                seed + i as u64 * 31,
+            );
+            d.add_client(client);
+        }
+    }
+    d.run_until(horizon);
+    let events = &d.svc().store.events;
+    let (t0, t1) = (horizon * 0.2, horizon);
+    let mut per_fac = Vec::new();
+    let mut aggregate = 0;
+    for (fac, &site) in facs.iter().zip(&sites) {
+        let arrivals = state_timeline(events, site, JobState::StagedIn).rate(t0, t1) * 60.0;
+        let completed = d.svc().store.count_in_state(site, JobState::JobFinished);
+        let curve = running_tasks_curve(events, site, horizon, 100);
+        let util: f64 = curve
+            .iter()
+            .filter(|(t, _)| *t >= t0)
+            .map(|(_, r)| *r as f64 / 32.0)
+            .sum::<f64>()
+            / curve.iter().filter(|(t, _)| *t >= t0).count().max(1) as f64;
+        aggregate += completed;
+        per_fac.push((fac.to_string(), arrivals, completed, util * 100.0));
+    }
+    PanelResult { label: sources.join("+"), per_fac, aggregate_completed: aggregate }
+}
+
+/// Theta-alone reference (the paper's 240-task baseline for the 4.37x).
+pub fn theta_alone(horizon: f64, seed: u64) -> usize {
+    let mut d = xpcs_deploy(seed);
+    let site = d.sites["theta"];
+    let client = WorkloadClient::new(
+        d.token.clone(),
+        "APS",
+        "EigenCorr",
+        "xpcs",
+        Strategy::Single(site),
+        Submission::SteadyBacklog { target: 32, period: 4.0 },
+        seed,
+    );
+    d.add_client(client);
+    d.run_until(horizon);
+    d.svc().store.count_in_state(site, JobState::JobFinished)
+}
+
+pub fn run(fast: bool, seed: u64) -> crate::Result<()> {
+    let horizon = if fast { 600.0 } else { 1140.0 }; // paper: 19-minute run
+    let mut rows = Vec::new();
+    let mut aps_panel = None;
+    for sources in [vec!["APS"], vec!["ALS"], vec!["APS", "ALS"]] {
+        let p = panel(&sources, horizon, seed);
+        for (fac, arr, done, util) in &p.per_fac {
+            rows.push(vec![
+                p.label.clone(),
+                fac.clone(),
+                format!("{arr:.1}"),
+                done.to_string(),
+                format!("{util:.0}%"),
+            ]);
+        }
+        rows.push(vec![p.label.clone(), "TOTAL".into(), String::new(), p.aggregate_completed.to_string(), String::new()]);
+        if p.label == "APS" {
+            aps_panel = Some(p);
+        }
+    }
+    print_table(
+        "Fig 9: simultaneous XPCS throughput (32 nodes/site)",
+        &["sources", "facility", "arrivals/min", "completed", "avg util"],
+        &rows,
+    );
+
+    // Headline: aggregate vs Theta alone (paper: 4.37x; 1049 vs 240).
+    let alone = theta_alone(horizon, seed + 99);
+    let agg = aps_panel.as_ref().unwrap().aggregate_completed;
+    println!(
+        "\nheadline: {} tasks on 3 systems vs {} on Theta alone -> {:.2}x (paper: 4.37x, 1049 vs 240)",
+        agg,
+        alone,
+        agg as f64 / alone.max(1) as f64
+    );
+
+    // Fig 10: Little's law check on the APS panel.
+    let p = panel(&["APS"], horizon, seed + 7);
+    let _ = p;
+    let mut d = xpcs_deploy(seed + 7);
+    let sites: Vec<_> = ["theta", "summit", "cori"].iter().map(|f| (f.to_string(), d.sites[*f])).collect();
+    for &(_, site) in &sites {
+        let client = WorkloadClient::new(
+            d.token.clone(), "APS", "EigenCorr", "xpcs",
+            Strategy::Single(site),
+            Submission::SteadyBacklog { target: 32, period: 4.0 },
+            seed + 7,
+        );
+        d.add_client(client);
+    }
+    d.run_until(horizon);
+    let mut rows10 = Vec::new();
+    for (fac, site) in &sites {
+        let chk = littles_law(&d.svc().store.events, *site, horizon * 0.2, horizon);
+        rows10.push(vec![
+            fac.clone(),
+            format!("{:.2}", chk.lambda * 60.0),
+            format!("{:.0}", chk.mean_runtime),
+            format!("{:.1}", chk.expected_l),
+            format!("{:.1}", chk.measured_l),
+            format!("{:.0}%", 100.0 * chk.measured_l / 32.0),
+        ]);
+    }
+    print_table(
+        "Fig 10: Little's law (L = lambda*W) vs measured node utilization",
+        &["facility", "lambda (/min)", "W (s)", "lambda*W", "measured L", "util"],
+        &rows10,
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_ordering_and_aggregate_speedup() {
+        let horizon = 700.0;
+        let p = panel(&["APS"], horizon, 5);
+        let done = |f: &str| p.per_fac.iter().find(|x| x.0 == f).unwrap().2;
+        assert!(done("cori") > done("summit"), "cori {} !> summit {}", done("cori"), done("summit"));
+        assert!(done("summit") >= done("theta"), "summit {} !>= theta {}", done("summit"), done("theta"));
+        let alone = theta_alone(horizon, 6);
+        let speedup = p.aggregate_completed as f64 / alone.max(1) as f64;
+        assert!(
+            (2.5..7.0).contains(&speedup),
+            "aggregate speedup {speedup} out of paper-shaped range (4.37x)"
+        );
+    }
+
+    #[test]
+    fn littles_law_holds_in_steady_state() {
+        let horizon = 700.0;
+        let mut d = xpcs_deploy(11);
+        let site = d.sites["summit"];
+        let client = WorkloadClient::new(
+            d.token.clone(), "APS", "EigenCorr", "xpcs",
+            Strategy::Single(site),
+            Submission::SteadyBacklog { target: 32, period: 4.0 },
+            11,
+        );
+        d.add_client(client);
+        d.run_until(horizon);
+        let chk = littles_law(&d.svc().store.events, site, horizon * 0.3, horizon);
+        assert!(chk.expected_l > 1.0);
+        let rel = (chk.expected_l - chk.measured_l).abs() / chk.measured_l.max(1.0);
+        assert!(rel < 0.35, "L={} vs lambda*W={}", chk.measured_l, chk.expected_l);
+    }
+}

@@ -1,0 +1,44 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (§4) on the simulated federation. See DESIGN.md §5 for the
+//! experiment index. Each module prints the same rows/series the paper
+//! reports; `fast` mode shrinks workload counts (used by tests/benches —
+//! shapes still hold, error bars are wider).
+
+pub mod common;
+pub mod table1;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod fig11;
+pub mod fig12;
+
+/// All experiment ids, in paper order.
+pub const ALL: [&str; 10] =
+    ["table1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig11", "fig12"];
+
+/// Run one experiment by id ("fig9"), or "all".
+pub fn run(id: &str, fast: bool, seed: u64) -> crate::Result<()> {
+    match id {
+        "table1" => table1::run(fast, seed),
+        "fig3" => fig3::run(fast, seed),
+        "fig4" => fig4::run(fast, seed),
+        "fig5" => fig5::run(fast, seed),
+        "fig6" => fig6::run(fast, seed),
+        "fig7" => fig7::run(fast, seed),
+        "fig8" => fig8::run(fast, seed),
+        "fig9" | "fig10" => fig9::run(fast, seed),
+        "fig11" => fig11::run(fast, seed),
+        "fig12" | "fig13" | "fig14" => fig12::run(fast, seed),
+        "all" => {
+            for id in ALL {
+                run(id, fast, seed)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown experiment '{other}' (try one of {ALL:?} or 'all')"),
+    }
+}

@@ -1,0 +1,137 @@
+//! Table 1: APS ↔ Theta pipeline stage durations for the MD benchmark.
+//!
+//! Paper protocol: jobs submitted to the API at a steady rate onto a
+//! 32-node allocation — 1156 small (200 MB) jobs at 2.0 jobs/s and 282
+//! large (1.15 GB) jobs at 0.36 jobs/s. Reported: mean ± sd (p95) for
+//! Stage In / Run Delay / Run / Stage Out / Time to Solution / Overhead.
+
+use crate::client::{Strategy, Submission, WorkloadClient};
+use crate::experiments::common::{deploy, print_table};
+use crate::metrics::{job_table, stage_durations, summarize_stage, StageDurations};
+use crate::service::models::JobState;
+
+/// Paper's reported values for the comparison column: (stage, small, large).
+pub const PAPER: [(&str, &str, &str); 6] = [
+    ("Stage In", "17.1 ± 3.8 (23.4)", "47.2 ± 17.9 (83.3)"),
+    ("Run Delay", "5.3 ± 11.5 (37.1)", "7.4 ± 14.7 (44.6)"),
+    ("Run", "18.6 ± 9.6 (30.4)", "89.1 ± 3.8 (95.8)"),
+    ("Stage Out", "11.7 ± 2.1 (14.9)", "17.5 ± 8.1 (34.1)"),
+    ("Time to Solution", "52.7 ± 17.6 (103.0)", "161.1 ± 23.8 (205.0)"),
+    ("Overhead", "34.1 ± 12.3 (66.3)", "72.1 ± 22.5 (112.2)"),
+];
+
+pub struct Cells {
+    pub label: String,
+    pub stage_in: String,
+    pub run_delay: String,
+    pub run: String,
+    pub stage_out: String,
+    pub tts: String,
+    pub overhead: String,
+    pub completed: usize,
+}
+
+/// One Table-1 column: `n_jobs` of `workload` at `rate` jobs/s.
+pub fn measure(workload: &str, n_jobs: usize, rate: f64, seed: u64) -> Cells {
+    let mut d = deploy(seed, &["theta"], 32, |c| {
+        c.elastic.block_nodes = 32;
+        c.elastic.max_nodes = 32;
+        c.elastic.wall_time_s = 3600.0 * 3.0;
+        c.transfer.batch_size = 16;
+    });
+    let site = d.sites["theta"];
+    // Steady submission: batch of ceil(rate*4) every 4 s.
+    let batch = ((rate * 4.0).round() as usize).max(1);
+    let period = batch as f64 / rate;
+    let client = WorkloadClient::new(
+        d.token.clone(),
+        "APS",
+        "MD",
+        workload,
+        Strategy::Single(site),
+        Submission::Bursts { batch, period },
+        seed,
+    )
+    .with_max_jobs(n_jobs);
+    d.add_client(client);
+    // Run until everything drains (bounded horizon).
+    let horizon = n_jobs as f64 / rate + 1800.0;
+    d.run_until(horizon);
+
+    let jobs = job_table(d.svc());
+    let durs = stage_durations(&d.svc().store.events, &jobs);
+    let pick = |f: fn(&StageDurations) -> Option<f64>| summarize_stage(&durs, f).table_cell();
+    let overhead = {
+        let mut s = crate::util::stats::Summary::new();
+        for dd in durs.values() {
+            if let (Some(tts), Some(run)) = (dd.time_to_solution, dd.run) {
+                s.add(tts - run);
+            }
+        }
+        s.table_cell()
+    };
+    Cells {
+        label: workload.to_string(),
+        stage_in: pick(|d| d.stage_in),
+        run_delay: pick(|d| d.run_delay),
+        run: pick(|d| d.run),
+        stage_out: pick(|d| d.stage_out),
+        tts: pick(|d| d.time_to_solution),
+        overhead,
+        completed: d.svc().store.count_in_state(site, JobState::JobFinished),
+    }
+}
+
+pub fn run(fast: bool, seed: u64) -> crate::Result<()> {
+    let (n_small, n_large) = if fast { (120, 40) } else { (1156, 282) };
+    let small = measure("md_small", n_small, 2.0, seed);
+    let large = measure("md_large", n_large, 0.36, seed + 1);
+    let rows: Vec<Vec<String>> = PAPER
+        .iter()
+        .zip([
+            (&small.stage_in, &large.stage_in),
+            (&small.run_delay, &large.run_delay),
+            (&small.run, &large.run),
+            (&small.stage_out, &large.stage_out),
+            (&small.tts, &large.tts),
+            (&small.overhead, &large.overhead),
+        ])
+        .map(|((name, p_small, p_large), (m_small, m_large))| {
+            vec![
+                name.to_string(),
+                m_small.clone(),
+                p_small.to_string(),
+                m_large.clone(),
+                p_large.to_string(),
+            ]
+        })
+        .collect();
+    print_table(
+        &format!(
+            "Table 1: APS<->Theta MD pipeline stage durations (s) [{} small, {} large completed]",
+            small.completed, large.completed
+        ),
+        &["Stage", "200MB measured", "200MB paper", "1.15GB measured", "1.15GB paper"],
+        &rows,
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_md_column_has_paper_shape() {
+        let c = measure("md_small", 60, 2.0, 99);
+        assert_eq!(c.completed, 60, "all jobs must finish");
+        // Parse the mean out of "m ± s (p)" cells.
+        let mean = |cell: &str| cell.split('±').next().unwrap().trim().parse::<f64>().unwrap();
+        let run = mean(&c.run);
+        assert!((run - 18.6).abs() < 8.0, "run={run} should be ~18.6s");
+        let si = mean(&c.stage_in);
+        assert!(si > 5.0 && si < 60.0, "stage-in={si} out of range");
+        let tts = mean(&c.tts);
+        assert!(tts > run + si * 0.5, "tts={tts} should dominate run+stage");
+    }
+}

@@ -1,0 +1,40 @@
+//! # balsam-rs
+//!
+//! A ground-up reproduction of **Balsam** — "Toward Real-time Analysis of
+//! Experimental Science Workloads on Geographically Distributed
+//! Supercomputers" (Salim, Uram, Childers, Vishwanath, Papka; 2021) — as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! Layer 3 (this crate) implements the paper's contribution: the central
+//! multi-tenant workflow **service** ([`service`]), the user-space **site
+//! agents** ([`site`]) with their Transfer / Scheduler / Elastic-Queue /
+//! Launcher modules, and the light-source **clients** ([`client`]) — plus
+//! every substrate the evaluation depends on ([`substrates`]): the ESNet
+//! WAN + GridFTP transfer fabric, the Globus transfer-task service, and
+//! the Cobalt/Slurm/LSF batch schedulers.
+//!
+//! Layers 2/1 (JAX model + Pallas kernels, `python/compile/`) are AOT
+//! compiled to HLO-text artifacts which [`runtime`] loads and executes
+//! through the PJRT CPU client (`xla` crate). Python is never on the
+//! request path.
+//!
+//! The same coordinator logic runs in two modes:
+//! * **Simulated time** — a discrete-event engine ([`sim`]) regenerates the
+//!   paper's 19–80 minute experiments (§4, [`experiments`]) in seconds.
+//! * **Real time** — threads, a hand-rolled HTTP/1.1 transport
+//!   ([`util::httpd`]), and real PJRT numerics (examples `quickstart`,
+//!   `e2e_xpcs`).
+
+pub mod util;
+pub mod sim;
+pub mod service;
+pub mod substrates;
+pub mod site;
+pub mod client;
+pub mod metrics;
+pub mod runtime;
+pub mod experiments;
+pub mod world;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

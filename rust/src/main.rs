@@ -1,0 +1,98 @@
+//! `balsam` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   repro <id|all> [--fast] [--seed N]   regenerate a paper table/figure
+//!   service [--addr A]                   run the central service over HTTP
+//!   runtime-check [--artifacts DIR]      load + execute the AOT artifacts
+//!   state-graph                          print the job state machine
+//!
+//! The end-to-end drivers live in examples/ (see README).
+
+use std::sync::{Arc, Mutex};
+
+use balsam::service::{http_gw, ServiceCore};
+use balsam::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand() {
+        Some("repro") => cmd_repro(&args),
+        Some("service") => cmd_service(&args),
+        Some("runtime-check") => cmd_runtime_check(&args),
+        Some("state-graph") => cmd_state_graph(),
+        _ => {
+            eprintln!(
+                "usage: balsam <repro|service|runtime-check|state-graph> [options]\n\
+                 \n  repro <id|all> [--fast] [--seed N]   ids: {:?}\
+                 \n  service [--addr 127.0.0.1:8008]\
+                 \n  runtime-check [--artifacts artifacts] [--model NAME]\
+                 \n  state-graph",
+                balsam::experiments::ALL
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_repro(args: &Args) -> balsam::Result<()> {
+    let id = args.positional.get(1).map(String::as_str).unwrap_or("all");
+    let fast = args.flag("fast");
+    let seed = args.u64_or("seed", 2021);
+    balsam::experiments::run(id, fast, seed)
+}
+
+fn cmd_service(args: &Args) -> balsam::Result<()> {
+    let addr = args.str_or("addr", "127.0.0.1:8008");
+    let svc = Arc::new(Mutex::new(ServiceCore::new(b"balsam-demo-secret")));
+    let token = svc.lock().unwrap().admin_token();
+    let server = http_gw::serve(svc, addr)?;
+    println!("balsam service on http://{}", server.addr);
+    println!("admin token: {token}");
+    println!("POST JSON to /api with 'authorization: Bearer <token>'. Ctrl-C to stop.");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_runtime_check(args: &Args) -> balsam::Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let only = args.get("model");
+    let names: Vec<&str> = only.into_iter().collect();
+    let rt = balsam::runtime::Runtime::load(dir, &names)?;
+    for (name, model) in &rt.models {
+        let inputs: Vec<Vec<f32>> = model
+            .spec
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, _)| (0..model.spec.input_len(i)).map(|k| 1.0 + (k % 7) as f32 * 0.1).collect())
+            .collect();
+        let t0 = std::time::Instant::now();
+        let outs = model.run_f32(&inputs)?;
+        println!(
+            "{name}: ok in {:.2}s — outputs {:?}",
+            t0.elapsed().as_secs_f64(),
+            outs.iter().map(Vec::len).collect::<Vec<_>>()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_state_graph() -> balsam::Result<()> {
+    use balsam::service::models::JobState;
+    use balsam::service::state::successors;
+    println!("Balsam job state machine:");
+    for s in JobState::ALL {
+        let succ: Vec<&str> = successors(s).into_iter().map(|x| x.name()).collect();
+        println!(
+            "  {:>18} -> {}",
+            s.name(),
+            if succ.is_empty() { "(terminal)".into() } else { succ.join(", ") }
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,277 @@
+//! Evaluation metrics over the Balsam event log (paper §4.1.4).
+//!
+//! Everything the figures/tables plot is derived here: per-stage latency
+//! distributions (Table 1, Fig. 4, Fig. 8), throughput timelines
+//! (Figs. 3/7/9), node-utilization traces and the Little's-law check
+//! (Fig. 10).
+
+use std::collections::BTreeMap;
+
+use crate::service::models::{Event, Job, JobId, JobState, SiteId};
+use crate::util::stats::{Summary, Timeline};
+
+/// Per-job stage latencies (seconds), the paper's Table-1 decomposition.
+#[derive(Debug, Clone, Default)]
+pub struct StageDurations {
+    pub stage_in: Option<f64>,
+    /// Data arrival -> application start (paper "Run Delay").
+    pub run_delay: Option<f64>,
+    pub run: Option<f64>,
+    pub stage_out: Option<f64>,
+    pub time_to_solution: Option<f64>,
+}
+
+/// Extract per-job stage durations from the event log.
+///
+/// Uses the *first* occurrence of each transition (retries are charged to
+/// run delay, as the paper's pipeline view does).
+pub fn stage_durations(events: &[Event], jobs: &BTreeMap<JobId, Job>) -> BTreeMap<JobId, StageDurations> {
+    let mut ts: BTreeMap<JobId, BTreeMap<JobState, f64>> = BTreeMap::new();
+    for e in events {
+        ts.entry(e.job_id).or_default().entry(e.to).or_insert(e.ts);
+    }
+    let mut out = BTreeMap::new();
+    for (job_id, m) in ts {
+        let get = |s: JobState| m.get(&s).copied();
+        let mut d = StageDurations::default();
+        if let (Some(a), Some(b)) = (get(JobState::Ready), get(JobState::StagedIn)) {
+            d.stage_in = Some(b - a);
+        }
+        if let (Some(a), Some(b)) = (get(JobState::StagedIn), get(JobState::Running)) {
+            d.run_delay = Some(b - a);
+        }
+        if let (Some(a), Some(b)) = (get(JobState::Running), get(JobState::RunDone)) {
+            d.run = Some(b - a);
+        }
+        if let (Some(a), Some(b)) = (get(JobState::Postprocessed), get(JobState::JobFinished)) {
+            d.stage_out = Some(b - a);
+        }
+        if let Some(end) = get(JobState::JobFinished) {
+            if let Some(job) = jobs.get(&job_id) {
+                d.time_to_solution = Some(end - job.created_at);
+            }
+        }
+        out.insert(job_id, d);
+    }
+    out
+}
+
+/// Aggregate a stage across jobs into a [`Summary`] (Table-1 cells).
+pub fn summarize_stage<F: Fn(&StageDurations) -> Option<f64>>(
+    durs: &BTreeMap<JobId, StageDurations>,
+    pick: F,
+) -> Summary {
+    let mut s = Summary::new();
+    for d in durs.values() {
+        if let Some(x) = pick(d) {
+            s.add(x);
+        }
+    }
+    s
+}
+
+/// Timeline of jobs entering `state` at `site` (cumulative curves in
+/// Figs. 3/7/9).
+pub fn state_timeline(events: &[Event], site: SiteId, state: JobState) -> Timeline {
+    let mut tl = Timeline::new();
+    for e in events {
+        if e.site_id == site && e.to == state {
+            tl.record(e.ts);
+        }
+    }
+    tl
+}
+
+/// Completed-job throughput (jobs/s) at `site` over `[t0, t1]`.
+pub fn completion_rate(events: &[Event], site: SiteId, t0: f64, t1: f64) -> f64 {
+    state_timeline(events, site, JobState::JobFinished).rate(t0, t1)
+}
+
+/// Number of concurrently RUNNING tasks at `site`, sampled on a grid of
+/// `n` points over `[0, end]` (Fig. 7 bottom / Fig. 10 utilization).
+pub fn running_tasks_curve(events: &[Event], site: SiteId, end: f64, n: usize) -> Vec<(f64, usize)> {
+    // Build +1/-1 deltas at Running entry/exit.
+    let mut deltas: Vec<(f64, i64)> = Vec::new();
+    for e in events {
+        if e.site_id != site {
+            continue;
+        }
+        if e.to == JobState::Running {
+            deltas.push((e.ts, 1));
+        }
+        if e.from == JobState::Running {
+            deltas.push((e.ts, -1));
+        }
+    }
+    deltas.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    let mut out = Vec::with_capacity(n + 1);
+    let mut level = 0i64;
+    let mut di = 0usize;
+    for i in 0..=n {
+        let t = end * i as f64 / n as f64;
+        while di < deltas.len() && deltas[di].0 <= t {
+            level += deltas[di].1;
+            di += 1;
+        }
+        out.push((t, level.max(0) as usize));
+    }
+    out
+}
+
+/// Little's-law check (Fig. 10): expected number of running tasks
+/// L = λW from the measured arrival rate λ (staged-in datasets/s over the
+/// window) and mean run time W; returned with the measured time-average
+/// running count for comparison.
+pub struct LittleCheck {
+    pub lambda: f64,
+    pub mean_runtime: f64,
+    /// λW — expected concurrently running tasks.
+    pub expected_l: f64,
+    /// Time-averaged measured running tasks.
+    pub measured_l: f64,
+}
+
+pub fn littles_law(events: &[Event], site: SiteId, t0: f64, t1: f64) -> LittleCheck {
+    let lambda = state_timeline(events, site, JobState::StagedIn).rate(t0, t1);
+    // Mean runtime over completed runs in the window.
+    let mut started: BTreeMap<JobId, f64> = BTreeMap::new();
+    let mut runtime = Summary::new();
+    for e in events {
+        if e.site_id != site {
+            continue;
+        }
+        if e.to == JobState::Running {
+            started.insert(e.job_id, e.ts);
+        }
+        if e.from == JobState::Running && e.to == JobState::RunDone {
+            if let Some(s) = started.get(&e.job_id) {
+                if *s >= t0 && e.ts <= t1 {
+                    runtime.add(e.ts - s);
+                }
+            }
+        }
+    }
+    let w = runtime.mean();
+    let curve = running_tasks_curve(events, site, t1, 200);
+    let in_window: Vec<f64> = curve
+        .iter()
+        .filter(|(t, _)| *t >= t0 && *t <= t1)
+        .map(|(_, l)| *l as f64)
+        .collect();
+    let measured = if in_window.is_empty() {
+        0.0
+    } else {
+        in_window.iter().sum::<f64>() / in_window.len() as f64
+    };
+    LittleCheck { lambda, mean_runtime: w, expected_l: lambda * w, measured_l: measured }
+}
+
+/// Snapshot of all jobs keyed by id (input to [`stage_durations`]).
+pub fn job_table(svc: &crate::service::ServiceCore) -> BTreeMap<JobId, Job> {
+    svc.store.jobs_iter().map(|j| (j.id, j.clone())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(job: u64, site: u64, ts: f64, from: JobState, to: JobState) -> Event {
+        Event { job_id: JobId(job), site_id: SiteId(site), ts, from, to, data: String::new() }
+    }
+
+    fn lifecycle_events(job: u64, site: u64, t0: f64, run_s: f64) -> Vec<Event> {
+        use JobState::*;
+        vec![
+            ev(job, site, t0, Created, Ready),
+            ev(job, site, t0 + 10.0, Ready, StagedIn),
+            ev(job, site, t0 + 10.0, StagedIn, Preprocessed),
+            ev(job, site, t0 + 12.0, Preprocessed, Running),
+            ev(job, site, t0 + 12.0 + run_s, Running, RunDone),
+            ev(job, site, t0 + 12.0 + run_s, RunDone, Postprocessed),
+            ev(job, site, t0 + 20.0 + run_s, Postprocessed, JobFinished),
+        ]
+    }
+
+    fn job(id: u64, created: f64) -> Job {
+        Job {
+            id: JobId(id),
+            site_id: SiteId(1),
+            app_id: crate::service::models::AppId(1),
+            state: JobState::JobFinished,
+            params: vec![],
+            tags: vec![],
+            num_nodes: 1,
+            workload: "xpcs".into(),
+            parents: vec![],
+            attempts: 1,
+            max_attempts: 3,
+            session: None,
+            created_at: created,
+        }
+    }
+
+    #[test]
+    fn stage_durations_decompose_lifecycle() {
+        let events = lifecycle_events(1, 1, 100.0, 50.0);
+        let jobs = [(JobId(1), job(1, 99.0))].into_iter().collect();
+        let durs = stage_durations(&events, &jobs);
+        let d = &durs[&JobId(1)];
+        assert_eq!(d.stage_in, Some(10.0));
+        assert_eq!(d.run_delay, Some(2.0));
+        assert_eq!(d.run, Some(50.0));
+        assert_eq!(d.stage_out, Some(8.0));
+        assert_eq!(d.time_to_solution, Some(100.0 + 20.0 + 50.0 - 99.0));
+    }
+
+    #[test]
+    fn summaries_aggregate_across_jobs() {
+        let mut events = Vec::new();
+        let mut jobs = BTreeMap::new();
+        for i in 0..10 {
+            events.extend(lifecycle_events(i, 1, i as f64 * 30.0, 40.0 + i as f64));
+            jobs.insert(JobId(i), job(i, i as f64 * 30.0));
+        }
+        let durs = stage_durations(&events, &jobs);
+        let runs = summarize_stage(&durs, |d| d.run);
+        assert_eq!(runs.count(), 10);
+        assert!((runs.mean() - 44.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn running_curve_tracks_concurrency() {
+        let mut events = Vec::new();
+        for i in 0..4 {
+            events.extend(lifecycle_events(i, 1, 0.0, 100.0));
+        }
+        let curve = running_tasks_curve(&events, SiteId(1), 200.0, 200);
+        let peak = curve.iter().map(|(_, l)| *l).max().unwrap();
+        assert_eq!(peak, 4);
+        // After completion all runs drained.
+        assert_eq!(curve.last().unwrap().1, 0);
+    }
+
+    #[test]
+    fn littles_law_consistency_on_synthetic_steady_state() {
+        // 1 job staged in per 10 s, each running 50 s -> L = 5.
+        let mut events = Vec::new();
+        let mut jobs = BTreeMap::new();
+        for i in 0..60 {
+            events.extend(lifecycle_events(i, 1, i as f64 * 10.0, 50.0));
+            jobs.insert(JobId(i), job(i, i as f64 * 10.0));
+        }
+        let chk = littles_law(&events, SiteId(1), 100.0, 500.0);
+        assert!((chk.lambda - 0.1).abs() < 0.02, "lambda={}", chk.lambda);
+        assert!((chk.mean_runtime - 50.0).abs() < 1e-6);
+        assert!((chk.expected_l - chk.measured_l).abs() < 1.0,
+            "L={} vs λW={}", chk.measured_l, chk.expected_l);
+    }
+
+    #[test]
+    fn timelines_filter_by_site_and_state() {
+        let mut events = lifecycle_events(1, 1, 0.0, 10.0);
+        events.extend(lifecycle_events(2, 2, 0.0, 10.0));
+        let tl = state_timeline(&events, SiteId(1), JobState::JobFinished);
+        assert_eq!(tl.count(), 1);
+        assert!(completion_rate(&events, SiteId(1), 0.0, 100.0) > 0.0);
+    }
+}

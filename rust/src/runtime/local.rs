@@ -1,0 +1,213 @@
+//! Real-time-mode platform backends for a single-host deployment:
+//!
+//! * [`LocalResources`] — a SchedulerBackend where allocations start
+//!   immediately (the example host plays the role of an idle reserved
+//!   partition);
+//! * [`LoopbackTransfer`] — a TransferBackend that moves *actual bytes*
+//!   through the filesystem on a background thread, optionally throttled
+//!   to a configured bandwidth so WAN behaviour is reproduced with real
+//!   I/O.
+//!
+//! Together with [`super::real::RealExec`] these let the identical site
+//! agent code that runs in simulation drive real sockets, files, and PJRT
+//! compute in the end-to-end examples.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+
+use crate::service::models::{Direction, XferTaskId};
+use crate::site::platform::{
+    AllocStatus, SchedulerBackend, TransferBackend, XferStatus,
+};
+
+/// Instant-start local "scheduler" with a fixed node pool.
+pub struct LocalResources {
+    total: u32,
+    free: u32,
+    allocs: BTreeMap<u64, (u32, f64, f64)>, // id -> (nodes, start, wall)
+    next_id: u64,
+}
+
+impl LocalResources {
+    pub fn new(nodes: u32) -> LocalResources {
+        LocalResources { total: nodes, free: nodes, allocs: BTreeMap::new(), next_id: 0 }
+    }
+
+    pub fn total_nodes(&self) -> u32 {
+        self.total
+    }
+}
+
+impl SchedulerBackend for LocalResources {
+    fn submit(&mut self, now: f64, _fac: &str, nodes: u32, wall_s: f64) -> u64 {
+        self.next_id += 1;
+        let granted = nodes.min(self.free);
+        self.free -= granted;
+        self.allocs.insert(self.next_id, (granted, now, wall_s));
+        self.next_id
+    }
+
+    fn status(&mut self, now: f64, id: u64) -> AllocStatus {
+        match self.allocs.get(&id) {
+            Some(&(nodes, start, wall)) => {
+                if now >= start + wall {
+                    self.allocs.remove(&id);
+                    self.free += nodes;
+                    AllocStatus::Finished
+                } else {
+                    AllocStatus::Running { end_by: start + wall }
+                }
+            }
+            None => AllocStatus::Finished,
+        }
+    }
+
+    fn delete(&mut self, _now: f64, id: u64) {
+        if let Some((nodes, _, _)) = self.allocs.remove(&id) {
+            self.free += nodes;
+        }
+    }
+
+    fn release_early(&mut self, now: f64, id: u64) {
+        self.delete(now, id);
+    }
+
+    fn free_nodes(&mut self, _now: f64) -> u32 {
+        self.free
+    }
+}
+
+/// Background-thread file transfer with optional bandwidth throttling.
+pub struct LoopbackTransfer {
+    dir: std::path::PathBuf,
+    /// Simulated WAN bandwidth in bytes/s (None = unthrottled disk copy).
+    pub throttle_bps: Option<f64>,
+    done: Arc<Mutex<BTreeMap<XferTaskId, bool>>>,
+    next_id: u64,
+}
+
+impl LoopbackTransfer {
+    pub fn new(dir: impl Into<std::path::PathBuf>, throttle_bps: Option<f64>) -> LoopbackTransfer {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir).ok();
+        LoopbackTransfer { dir, throttle_bps, done: Arc::default(), next_id: 0 }
+    }
+}
+
+impl TransferBackend for LoopbackTransfer {
+    fn submit(
+        &mut self,
+        _now: f64,
+        remote: &str,
+        fac: &str,
+        direction: Direction,
+        bytes: u64,
+        _nfiles: usize,
+    ) -> XferTaskId {
+        self.next_id += 1;
+        let id = XferTaskId(self.next_id);
+        self.done.lock().unwrap().insert(id, false);
+        let done = self.done.clone();
+        let dir = self.dir.clone();
+        let throttle = self.throttle_bps;
+        let tag = format!("{remote}-{fac}-{}-{}", self.next_id, if direction == Direction::In { "in" } else { "out" });
+        std::thread::spawn(move || {
+            // Move real bytes: write source, copy to destination in chunks,
+            // sleeping per chunk if throttled.
+            let src = dir.join(format!("{tag}.src"));
+            let dst = dir.join(format!("{tag}.dst"));
+            let chunk = 1 << 20;
+            let mut remaining = bytes as usize;
+            let payload = vec![0x5au8; chunk];
+            if let Ok(mut f) = std::fs::File::create(&src) {
+                while remaining > 0 {
+                    let n = remaining.min(chunk);
+                    if f.write_all(&payload[..n]).is_err() {
+                        break;
+                    }
+                    remaining -= n;
+                }
+            }
+            let t0 = std::time::Instant::now();
+            let _ = std::fs::copy(&src, &dst);
+            if let Some(bps) = throttle {
+                let want = bytes as f64 / bps;
+                let elapsed = t0.elapsed().as_secs_f64();
+                if want > elapsed {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(want - elapsed));
+                }
+            }
+            std::fs::remove_file(&src).ok();
+            std::fs::remove_file(&dst).ok();
+            done.lock().unwrap().insert(id, true);
+        });
+        id
+    }
+
+    fn poll(&mut self, _now: f64, task: XferTaskId) -> XferStatus {
+        match self.done.lock().unwrap().get(&task) {
+            Some(true) => XferStatus::Done,
+            Some(false) => XferStatus::Active,
+            None => XferStatus::Error,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_resources_account_nodes() {
+        let mut r = LocalResources::new(8);
+        let a = r.submit(0.0, "local", 4, 100.0);
+        assert_eq!(r.free_nodes(0.0), 4);
+        assert!(matches!(r.status(1.0, a), AllocStatus::Running { .. }));
+        assert_eq!(r.status(101.0, a), AllocStatus::Finished);
+        assert_eq!(r.free_nodes(101.0), 8);
+    }
+
+    #[test]
+    fn oversubscription_grants_what_is_free() {
+        let mut r = LocalResources::new(4);
+        r.submit(0.0, "local", 4, 1e6);
+        let b = r.submit(0.0, "local", 4, 1e6);
+        // Second allocation granted 0 nodes but exists; delete restores none.
+        r.delete(1.0, b);
+        assert_eq!(r.free_nodes(1.0), 0);
+    }
+
+    #[test]
+    fn loopback_transfer_moves_real_bytes() {
+        let dir = std::env::temp_dir().join(format!("balsam-xfer-{}", std::process::id()));
+        let mut x = LoopbackTransfer::new(&dir, None);
+        let id = x.submit(0.0, "APS", "local", Direction::In, 2_000_000, 1);
+        let t0 = std::time::Instant::now();
+        while x.poll(0.0, id) != XferStatus::Done {
+            assert!(t0.elapsed().as_secs() < 20, "copy never finished");
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn throttled_transfer_takes_expected_time() {
+        let dir = std::env::temp_dir().join(format!("balsam-xfer-t-{}", std::process::id()));
+        let mut x = LoopbackTransfer::new(&dir, Some(2_000_000.0)); // 2 MB/s
+        let id = x.submit(0.0, "APS", "local", Direction::In, 1_000_000, 1);
+        let t0 = std::time::Instant::now();
+        while x.poll(0.0, id) != XferStatus::Done {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            assert!(t0.elapsed().as_secs() < 20);
+        }
+        assert!(t0.elapsed().as_secs_f64() > 0.4, "throttle not applied");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unknown_task_is_error() {
+        let mut x = LoopbackTransfer::new(std::env::temp_dir(), None);
+        assert_eq!(x.poll(0.0, XferTaskId(99)), XferStatus::Error);
+    }
+}

@@ -1,0 +1,180 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them on the request path — Python is never involved.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see DESIGN.md and /opt/xla-example/README.md).
+
+pub mod real;
+pub mod local;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context};
+
+use crate::util::json::Json;
+use crate::Result;
+
+/// Shape/dtype signature of one model from `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub file: String,
+    /// (name, dims) per input; f32 only (all shipped models are f32).
+    pub inputs: Vec<(String, Vec<usize>)>,
+    pub outputs: Vec<(String, Vec<usize>)>,
+}
+
+impl ModelSpec {
+    pub fn input_len(&self, i: usize) -> usize {
+        self.inputs[i].1.iter().product::<usize>().max(1)
+    }
+}
+
+/// Parse `artifacts/manifest.json`.
+pub fn read_manifest(dir: &Path) -> Result<Vec<ModelSpec>> {
+    let text = std::fs::read_to_string(dir.join("manifest.json"))
+        .with_context(|| format!("read {}/manifest.json — run `make artifacts` first", dir.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+    let models = j.get("models").and_then(Json::as_obj).ok_or_else(|| anyhow!("missing models"))?;
+    let mut out = Vec::new();
+    for (name, m) in models {
+        let io = |key: &str| -> Vec<(String, Vec<usize>)> {
+            m.get(key)
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .map(|x| {
+                            let nm = x.get("name").and_then(Json::as_str).unwrap_or("").to_string();
+                            let dims = x
+                                .get("shape")
+                                .and_then(Json::as_arr)
+                                .map(|d| d.iter().filter_map(Json::as_u64).map(|v| v as usize).collect())
+                                .unwrap_or_default();
+                            (nm, dims)
+                        })
+                        .collect()
+                })
+                .unwrap_or_default()
+        };
+        out.push(ModelSpec {
+            name: name.clone(),
+            file: m.get("file").and_then(Json::as_str).unwrap_or("").to_string(),
+            inputs: io("inputs"),
+            outputs: io("outputs"),
+        });
+    }
+    Ok(out)
+}
+
+/// A compiled model bound to the PJRT CPU client.
+pub struct CompiledModel {
+    pub spec: ModelSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl CompiledModel {
+    /// Execute with f32 inputs; returns the flattened f32 outputs in
+    /// manifest order (models are lowered with `return_tuple=True`).
+    pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "model {} expects {} inputs, got {}",
+            self.spec.name,
+            self.spec.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, data) in inputs.iter().enumerate() {
+            let want = self.spec.input_len(i);
+            anyhow::ensure!(
+                data.len() == want,
+                "input {i} of {}: expected {want} elements, got {}",
+                self.spec.name,
+                data.len()
+            );
+            let dims: Vec<i64> = self.spec.inputs[i].1.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data);
+            let lit = if dims.is_empty() { lit } else { lit.reshape(&dims)? };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// The artifact runtime: PJRT CPU client + compiled executables.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    pub models: BTreeMap<String, CompiledModel>,
+    pub artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Compile the named models (or all in the manifest if `names` empty).
+    pub fn load(dir: impl AsRef<Path>, names: &[&str]) -> Result<Runtime> {
+        let dir = dir.as_ref();
+        let client = xla::PjRtClient::cpu()?;
+        let specs = read_manifest(dir)?;
+        let mut models = BTreeMap::new();
+        for spec in specs {
+            if !names.is_empty() && !names.contains(&spec.name.as_str()) {
+                continue;
+            }
+            let path = dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            models.insert(spec.name.clone(), CompiledModel { spec, exe });
+        }
+        anyhow::ensure!(!models.is_empty(), "no models loaded from {}", dir.display());
+        Ok(Runtime { client, models, artifacts_dir: dir.to_path_buf() })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&CompiledModel> {
+        self.models.get(name).ok_or_else(|| anyhow!("model {name} not loaded"))
+    }
+}
+
+/// Default artifacts directory: `$BALSAM_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("BALSAM_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing_from_synthetic_doc() {
+        let dir = std::env::temp_dir().join(format!("balsam-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format":"hlo-text","models":{"m":{"file":"m.hlo.txt",
+                "inputs":[{"name":"a","shape":[2,3],"dtype":"f32"}],
+                "outputs":[{"name":"o","shape":[2],"dtype":"f32"}]}}}"#,
+        )
+        .unwrap();
+        let specs = read_manifest(&dir).unwrap();
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0].inputs[0].1, vec![2, 3]);
+        assert_eq!(specs[0].input_len(0), 6);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful_error() {
+        let err = read_manifest(Path::new("/nonexistent-dir")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+}

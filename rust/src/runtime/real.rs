@@ -1,0 +1,178 @@
+//! Real execution backend: the AppRun platform interface backed by actual
+//! PJRT compute on the AOT artifacts (real-time mode / e2e examples).
+//!
+//! A dedicated worker thread owns the [`Runtime`] (PJRT handles are not
+//! `Send`-safe to share) and drains a request channel; `start` enqueues,
+//! `poll` observes the shared completion map. This mirrors a head-node
+//! launcher farming app-runs onto compute resources.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use crate::site::platform::{ExecBackend, RunId, RunStatus};
+use crate::util::rng::Pcg;
+
+use super::Runtime;
+
+enum Req {
+    Run { id: RunId, model: String, inputs: Vec<Vec<f32>> },
+    Stop,
+}
+
+/// Outcome record kept for inspection by examples/tests.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    pub model: String,
+    pub ok: bool,
+    /// First few values of the first output (result fingerprint).
+    pub head: Vec<f32>,
+    pub wall_s: f64,
+}
+
+pub struct RealExec {
+    tx: mpsc::Sender<Req>,
+    results: Arc<Mutex<BTreeMap<RunId, RunRecord>>>,
+    inflight: Arc<Mutex<usize>>,
+    next_id: u64,
+    rng: Pcg,
+    /// workload -> model name mapping.
+    model_for: BTreeMap<String, String>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RealExec {
+    /// Spawn the worker thread; it compiles `models` from `artifacts_dir`.
+    pub fn start_worker(
+        artifacts_dir: std::path::PathBuf,
+        models: Vec<String>,
+        model_for: BTreeMap<String, String>,
+    ) -> crate::Result<RealExec> {
+        let (tx, rx) = mpsc::channel::<Req>();
+        let results: Arc<Mutex<BTreeMap<RunId, RunRecord>>> = Arc::default();
+        let inflight: Arc<Mutex<usize>> = Arc::default();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let results2 = results.clone();
+        let inflight2 = inflight.clone();
+        let handle = std::thread::spawn(move || {
+            let names: Vec<&str> = models.iter().map(String::as_str).collect();
+            let rt = match Runtime::load(&artifacts_dir, &names) {
+                Ok(rt) => {
+                    let _ = ready_tx.send(Ok(()));
+                    rt
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e.to_string()));
+                    return;
+                }
+            };
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Req::Stop => break,
+                    Req::Run { id, model, inputs } => {
+                        let t0 = std::time::Instant::now();
+                        let rec = match rt.model(&model).and_then(|m| m.run_f32(&inputs)) {
+                            Ok(outs) => RunRecord {
+                                model,
+                                ok: outs.iter().all(|o| o.iter().all(|x| x.is_finite())),
+                                head: outs.first().map(|o| o.iter().take(4).copied().collect()).unwrap_or_default(),
+                                wall_s: t0.elapsed().as_secs_f64(),
+                            },
+                            Err(e) => {
+                                eprintln!("run {model} failed: {e}");
+                                RunRecord { model, ok: false, head: vec![], wall_s: t0.elapsed().as_secs_f64() }
+                            }
+                        };
+                        results2.lock().unwrap().insert(id, rec);
+                        *inflight2.lock().unwrap() -= 1;
+                    }
+                }
+            }
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("runtime worker died"))?
+            .map_err(|e| anyhow::anyhow!("runtime init: {e}"))?;
+        Ok(RealExec {
+            tx,
+            results,
+            inflight,
+            next_id: 0,
+            rng: Pcg::seeded(0x5ea1),
+            model_for,
+            handle: Some(handle),
+        })
+    }
+
+    /// Synthetic input generation per model family: a random symmetric
+    /// matrix for MD, positive speckle-like frames for XPCS.
+    fn gen_inputs(&mut self, model: &str, lens: &[usize]) -> Vec<Vec<f32>> {
+        lens.iter()
+            .map(|&n| {
+                if model.starts_with("md") {
+                    // Symmetric-ish noise; the model symmetrizes anyway.
+                    (0..n).map(|_| self.rng.normal() as f32).collect()
+                } else {
+                    (0..n).map(|_| 1.0 + self.rng.f64() as f32).collect()
+                }
+            })
+            .collect()
+    }
+
+    pub fn record(&self, id: RunId) -> Option<RunRecord> {
+        self.results.lock().unwrap().get(&id).cloned()
+    }
+
+    pub fn completed(&self) -> usize {
+        self.results.lock().unwrap().len()
+    }
+}
+
+impl ExecBackend for RealExec {
+    fn start(&mut self, _now: f64, _fac: &str, workload: &str, _num_nodes: u32) -> RunId {
+        self.next_id += 1;
+        let id = RunId(self.next_id);
+        let model = self
+            .model_for
+            .get(workload)
+            .cloned()
+            .unwrap_or_else(|| self.model_for.values().next().cloned().unwrap_or_default());
+        // Input lengths come from the manifest spec via the worker; we keep
+        // a local copy in model_for? Simpler: worker computes; but inputs
+        // must be built here. We fetch lengths lazily from a static map set
+        // at construction via first use of the runtime spec — instead,
+        // generate from the known artifact shapes:
+        let lens: Vec<usize> = match model.as_str() {
+            "md_64" => vec![64 * 64],
+            "md_128" => vec![128 * 128],
+            "xpcs_t64_p1024" => vec![64 * 1024],
+            "xpcs_t128_p4096" => vec![128 * 4096],
+            _ => vec![64 * 64],
+        };
+        let inputs = self.gen_inputs(&model, &lens);
+        *self.inflight.lock().unwrap() += 1;
+        let _ = self.tx.send(Req::Run { id, model, inputs });
+        id
+    }
+
+    fn poll(&mut self, _now: f64, id: RunId) -> RunStatus {
+        match self.results.lock().unwrap().get(&id) {
+            Some(rec) => RunStatus::Done { ok: rec.ok },
+            None => RunStatus::Running,
+        }
+    }
+
+    fn kill(&mut self, _now: f64, _id: RunId) {
+        // Real PJRT executions are not interruptible mid-call; the result
+        // is simply discarded by the caller.
+    }
+}
+
+impl Drop for RealExec {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Req::Stop);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Typed REST-ish API: the unifying data model and service interactions
+//! "upon which all Balsam components and user workflows are authored"
+//! (paper §2). Every site module and client speaks this API — in-process
+//! in simulated mode, JSON-over-HTTP through [`super::http_gw`] in
+//! real-time mode.
+
+use super::models::*;
+
+/// Job creation payload (one fine-grained task).
+#[derive(Debug, Clone)]
+pub struct JobCreate {
+    pub site_id: SiteId,
+    /// Registered App name at the site (must exist — the service rejects
+    /// arbitrary command injection, paper §3.1 security model).
+    pub app: String,
+    /// Workload class consumed by the execution backend
+    /// (e.g. "md_small", "md_large", "xpcs").
+    pub workload: String,
+    pub num_nodes: u32,
+    pub params: Vec<(String, String)>,
+    pub tags: Vec<(String, String)>,
+    /// Stage-in requirements: (remote endpoint, bytes).
+    pub transfers_in: Vec<(String, u64)>,
+    /// Stage-out requirements: (remote endpoint, bytes).
+    pub transfers_out: Vec<(String, u64)>,
+    pub parents: Vec<JobId>,
+}
+
+impl JobCreate {
+    /// Convenience constructor for the common single-node case.
+    pub fn simple(site_id: SiteId, app: &str, workload: &str) -> JobCreate {
+        JobCreate {
+            site_id,
+            app: app.to_string(),
+            workload: workload.to_string(),
+            num_nodes: 1,
+            params: vec![],
+            tags: vec![],
+            transfers_in: vec![],
+            transfers_out: vec![],
+            parents: vec![],
+        }
+    }
+}
+
+/// Filter for job list/count queries (the SDK's `Job.objects.filter(...)`).
+#[derive(Debug, Clone, Default)]
+pub struct JobFilter {
+    pub site: Option<SiteId>,
+    /// Empty = any state.
+    pub states: Vec<JobState>,
+    /// All listed tags must match.
+    pub tags: Vec<(String, String)>,
+    /// 0 = unlimited.
+    pub limit: usize,
+}
+
+#[derive(Debug, Clone)]
+pub enum ApiRequest {
+    // --- identity / topology ---
+    CreateUser { name: String },
+    CreateSite { name: String, hostname: String, path: String },
+    RegisterApp { site: SiteId, name: String, command_template: String, parameters: Vec<String> },
+    // --- jobs ---
+    BulkCreateJobs { jobs: Vec<JobCreate> },
+    ListJobs { filter: JobFilter },
+    CountByState { site: SiteId },
+    UpdateJobState { job: JobId, to: JobState, data: String },
+    BulkUpdateJobState { jobs: Vec<JobId>, to: JobState, data: String },
+    // --- sessions (launcher leases) ---
+    CreateSession { site: SiteId, batch_job: Option<BatchJobId> },
+    SessionAcquire { session: SessionId, max_nodes: u32, max_jobs: usize },
+    SessionHeartbeat { session: SessionId },
+    SessionEnd { session: SessionId },
+    // --- batch jobs (pilot allocations) ---
+    CreateBatchJob {
+        site: SiteId,
+        num_nodes: u32,
+        wall_time_s: f64,
+        mode: JobMode,
+        queue: String,
+        project: String,
+    },
+    ListBatchJobs { site: SiteId, active_only: bool },
+    UpdateBatchJob { id: BatchJobId, state: BatchJobState, local_id: Option<u64> },
+    // --- transfer items ---
+    PendingTransferItems { site: SiteId, direction: Direction, limit: usize },
+    UpdateTransferItems { ids: Vec<TransferItemId>, state: TransferState, task_id: Option<XferTaskId> },
+    // --- monitoring ---
+    SiteBacklog { site: SiteId },
+    ListEvents { since: usize },
+}
+
+/// Aggregate backlog snapshot used by the Elastic Queue module and the
+/// shortest-backlog client strategy (paper §3.2, §4.6).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Backlog {
+    /// Jobs not yet finished/failed and not yet running.
+    pub backlog_jobs: usize,
+    /// Node footprint of immediately runnable jobs (PREPROCESSED / RESTART_READY).
+    pub runnable_nodes: u32,
+    /// Node footprint of jobs whose data is still in flight (READY / STAGED_IN).
+    pub inflight_nodes: u32,
+    /// Nodes in queued-or-running BatchJobs at the site.
+    pub batch_nodes: u32,
+}
+
+#[derive(Debug, Clone)]
+pub enum ApiResponse {
+    Unit,
+    UserId(UserId),
+    SiteId(SiteId),
+    AppId(AppId),
+    JobIds(Vec<JobId>),
+    Jobs(Vec<Job>),
+    Counts(Vec<(JobState, usize)>),
+    SessionId(SessionId),
+    BatchJobId(BatchJobId),
+    BatchJobs(Vec<BatchJob>),
+    TransferItems(Vec<TransferItem>),
+    Backlog(Backlog),
+    Events(Vec<Event>),
+}
+
+macro_rules! expect_variant {
+    ($fn_name:ident, $variant:ident, $ty:ty) => {
+        /// Unwrap helper; panics on wrong variant (programming error).
+        pub fn $fn_name(self) -> $ty {
+            match self {
+                ApiResponse::$variant(x) => x,
+                other => panic!(concat!("expected ", stringify!($variant), ", got {:?}"), other),
+            }
+        }
+    };
+}
+
+impl ApiResponse {
+    expect_variant!(site_id, SiteId, SiteId);
+    expect_variant!(app_id, AppId, AppId);
+    expect_variant!(user_id, UserId, UserId);
+    expect_variant!(job_ids, JobIds, Vec<JobId>);
+    expect_variant!(jobs, Jobs, Vec<Job>);
+    expect_variant!(counts, Counts, Vec<(JobState, usize)>);
+    expect_variant!(session_id, SessionId, SessionId);
+    expect_variant!(batch_job_id, BatchJobId, BatchJobId);
+    expect_variant!(batch_jobs, BatchJobs, Vec<BatchJob>);
+    expect_variant!(transfer_items, TransferItems, Vec<TransferItem>);
+    expect_variant!(backlog, Backlog, Backlog);
+    expect_variant!(events, Events, Vec<Event>);
+}
+
+#[derive(Debug, Clone, thiserror::Error, PartialEq)]
+pub enum ApiError {
+    #[error("unauthorized")]
+    Unauthorized,
+    #[error("not found: {0}")]
+    NotFound(String),
+    #[error("illegal transition {from} -> {to} for job {job}")]
+    IllegalTransition { job: JobId, from: JobState, to: JobState },
+    #[error("bad request: {0}")]
+    BadRequest(String),
+    #[error("transport: {0}")]
+    Transport(String),
+}
+
+/// A connection to the Balsam service. Implemented by the in-process
+/// simulator transport and by the HTTP client transport; all site modules
+/// and clients are written against this trait.
+pub trait ApiConn {
+    fn api(&mut self, token: &str, req: ApiRequest) -> Result<ApiResponse, ApiError>;
+}

@@ -1,0 +1,1010 @@
+//! Service handler logic: multi-tenant bookkeeping over the [`Store`].
+//!
+//! The service is passive (client-driven) except for session-lease expiry:
+//! a launcher that stops heartbeating has its jobs recovered so "critical
+//! faults causing ungraceful launcher termination do not cause jobs to be
+//! locked in perpetuity" (paper §3.1).
+
+
+
+use super::api::*;
+use super::auth::TokenAuthority;
+use super::models::*;
+use super::state;
+use super::store::Store;
+
+/// Default lease: a launcher missing heartbeats for this long is presumed
+/// dead and its jobs are reset (paper: "the stale heartbeat is detected by
+/// the service and affected jobs are reset").
+pub const DEFAULT_LEASE_TIMEOUT_S: f64 = 60.0;
+
+/// The central Balsam service.
+pub struct ServiceCore {
+    pub store: Store,
+    auth: TokenAuthority,
+    admin: UserId,
+    pub lease_timeout_s: f64,
+    /// Monotonic API-call counter (perf observability).
+    pub calls: u64,
+}
+
+impl ServiceCore {
+    pub fn new(secret: &[u8]) -> ServiceCore {
+        let mut store = Store::new();
+        let admin = UserId(store.fresh_id());
+        store.users.insert(admin, User { id: admin, name: "admin".into() });
+        ServiceCore {
+            store,
+            auth: TokenAuthority::new(secret),
+            admin,
+            lease_timeout_s: DEFAULT_LEASE_TIMEOUT_S,
+            calls: 0,
+        }
+    }
+
+    /// Issue a bearer token for an existing user.
+    pub fn token_for(&self, user: UserId) -> String {
+        self.auth.issue(user)
+    }
+
+    pub fn admin_token(&self) -> String {
+        self.auth.issue(self.admin)
+    }
+
+    /// Entry point for every API interaction.
+    pub fn handle(
+        &mut self,
+        now: f64,
+        token: &str,
+        req: ApiRequest,
+    ) -> Result<ApiResponse, ApiError> {
+        self.calls += 1;
+        let user = self.auth.validate(token).ok_or(ApiError::Unauthorized)?;
+        if !self.store.users.contains_key(&user) {
+            return Err(ApiError::Unauthorized);
+        }
+        self.expire_stale_sessions(now);
+        self.dispatch(now, user, req)
+    }
+
+    fn dispatch(
+        &mut self,
+        now: f64,
+        user: UserId,
+        req: ApiRequest,
+    ) -> Result<ApiResponse, ApiError> {
+        match req {
+            ApiRequest::CreateUser { name } => {
+                if user != self.admin {
+                    return Err(ApiError::Unauthorized);
+                }
+                let id = UserId(self.store.fresh_id());
+                self.store.users.insert(id, User { id, name });
+                Ok(ApiResponse::UserId(id))
+            }
+            ApiRequest::CreateSite { name, hostname, path } => {
+                let id = SiteId(self.store.fresh_id());
+                self.store.sites.insert(id, Site { id, owner: user, name, hostname, path });
+                Ok(ApiResponse::SiteId(id))
+            }
+            ApiRequest::RegisterApp { site, name, command_template, parameters } => {
+                self.check_site(user, site)?;
+                let id = AppId(self.store.fresh_id());
+                self.store.apps.insert(id, App { id, site_id: site, name, command_template, parameters });
+                Ok(ApiResponse::AppId(id))
+            }
+            ApiRequest::BulkCreateJobs { jobs } => {
+                let mut ids = Vec::with_capacity(jobs.len());
+                for jc in jobs {
+                    ids.push(self.create_job(now, user, jc)?);
+                }
+                Ok(ApiResponse::JobIds(ids))
+            }
+            ApiRequest::ListJobs { filter } => {
+                if let Some(site) = filter.site {
+                    self.check_site(user, site)?;
+                }
+                Ok(ApiResponse::Jobs(self.query_jobs(&filter)))
+            }
+            ApiRequest::CountByState { site } => {
+                self.check_site(user, site)?;
+                let counts = JobState::ALL
+                    .iter()
+                    .map(|&s| (s, self.store.count_in_state(site, s)))
+                    .filter(|&(_, n)| n > 0)
+                    .collect();
+                Ok(ApiResponse::Counts(counts))
+            }
+            ApiRequest::UpdateJobState { job, to, data } => {
+                self.transition_job(now, user, job, to, &data)?;
+                Ok(ApiResponse::Unit)
+            }
+            ApiRequest::BulkUpdateJobState { jobs, to, data } => {
+                for j in jobs {
+                    self.transition_job(now, user, j, to, &data)?;
+                }
+                Ok(ApiResponse::Unit)
+            }
+            ApiRequest::CreateSession { site, batch_job } => {
+                self.check_site(user, site)?;
+                let id = SessionId(self.store.fresh_id());
+                self.store.sessions.insert(
+                    id,
+                    Session {
+                        id,
+                        site_id: site,
+                        batch_job_id: batch_job,
+                        heartbeat_at: now,
+                        acquired: Default::default(),
+                        ended: false,
+                    },
+                );
+                Ok(ApiResponse::SessionId(id))
+            }
+            ApiRequest::SessionAcquire { session, max_nodes, max_jobs } => {
+                let jobs = self.session_acquire(now, user, session, max_nodes, max_jobs)?;
+                Ok(ApiResponse::Jobs(jobs))
+            }
+            ApiRequest::SessionHeartbeat { session } => {
+                let sess = self
+                    .store
+                    .sessions
+                    .get_mut(&session)
+                    .ok_or_else(|| ApiError::NotFound(format!("session {session}")))?;
+                if sess.ended {
+                    return Err(ApiError::BadRequest(format!("session {session} ended")));
+                }
+                sess.heartbeat_at = now;
+                Ok(ApiResponse::Unit)
+            }
+            ApiRequest::SessionEnd { session } => {
+                // Graceful end: release any still-acquired jobs back to the pool.
+                let acquired: Vec<JobId> = match self.store.sessions.get_mut(&session) {
+                    Some(s) => {
+                        s.ended = true;
+                        s.acquired.iter().copied().collect()
+                    }
+                    None => return Err(ApiError::NotFound(format!("session {session}"))),
+                };
+                for id in acquired {
+                    self.release_from_session(id);
+                    // A gracefully ended launcher never leaves jobs RUNNING;
+                    // if it somehow did, recover them like a lease expiry.
+                    if self.store.job(id).map(|j| j.state) == Some(JobState::Running) {
+                        self.recover_job(now, id, "graceful session end with running job");
+                    }
+                }
+                Ok(ApiResponse::Unit)
+            }
+            ApiRequest::CreateBatchJob { site, num_nodes, wall_time_s, mode, queue, project } => {
+                self.check_site(user, site)?;
+                let id = BatchJobId(self.store.fresh_id());
+                self.store.batch_jobs.insert(
+                    id,
+                    BatchJob {
+                        id,
+                        site_id: site,
+                        num_nodes,
+                        wall_time_s,
+                        mode,
+                        queue,
+                        project,
+                        state: BatchJobState::Pending,
+                        local_id: None,
+                        created_at: now,
+                        started_at: None,
+                        ended_at: None,
+                    },
+                );
+                Ok(ApiResponse::BatchJobId(id))
+            }
+            ApiRequest::ListBatchJobs { site, active_only } => {
+                self.check_site(user, site)?;
+                let out = self
+                    .store
+                    .batch_jobs
+                    .values()
+                    .filter(|b| b.site_id == site)
+                    .filter(|b| {
+                        !active_only
+                            || matches!(
+                                b.state,
+                                BatchJobState::Pending | BatchJobState::Queued | BatchJobState::Running
+                            )
+                    })
+                    .cloned()
+                    .collect();
+                Ok(ApiResponse::BatchJobs(out))
+            }
+            ApiRequest::UpdateBatchJob { id, state, local_id } => {
+                let bj = self
+                    .store
+                    .batch_jobs
+                    .get_mut(&id)
+                    .ok_or_else(|| ApiError::NotFound(format!("batchjob {id}")))?;
+                bj.state = state;
+                if let Some(l) = local_id {
+                    bj.local_id = Some(l);
+                }
+                match state {
+                    BatchJobState::Running if bj.started_at.is_none() => bj.started_at = Some(now),
+                    BatchJobState::Finished | BatchJobState::Deleted if bj.ended_at.is_none() => {
+                        bj.ended_at = Some(now)
+                    }
+                    _ => {}
+                }
+                Ok(ApiResponse::Unit)
+            }
+            ApiRequest::PendingTransferItems { site, direction, limit } => {
+                self.check_site(user, site)?;
+                // An item is *actionable* only while its job is in the
+                // matching stage: stage-in while READY, stage-out once
+                // POSTPROCESSED (results exist).
+                let gate = match direction {
+                    Direction::In => JobState::Ready,
+                    Direction::Out => JobState::Postprocessed,
+                };
+                let limit = if limit == 0 { usize::MAX } else { limit };
+                let ids = self.store.titems_in_state(site, direction, TransferState::Pending, usize::MAX);
+                let items = ids
+                    .iter()
+                    .map(|&i| self.store.titem(i).unwrap())
+                    .filter(|t| self.store.job(t.job_id).map(|j| j.state == gate).unwrap_or(false))
+                    .take(limit)
+                    .cloned()
+                    .collect();
+                Ok(ApiResponse::TransferItems(items))
+            }
+            ApiRequest::UpdateTransferItems { ids, state, task_id } => {
+                for id in &ids {
+                    if self.store.titem(*id).is_none() {
+                        return Err(ApiError::NotFound(format!("transfer item {id}")));
+                    }
+                }
+                for id in ids {
+                    self.store.set_titem_state(id, state, task_id);
+                    if state == TransferState::Done {
+                        self.on_titem_done(now, id);
+                    }
+                }
+                Ok(ApiResponse::Unit)
+            }
+            ApiRequest::SiteBacklog { site } => {
+                self.check_site(user, site)?;
+                Ok(ApiResponse::Backlog(self.backlog(site)))
+            }
+            ApiRequest::ListEvents { since } => {
+                let evs = self.store.events.get(since..).unwrap_or(&[]).to_vec();
+                Ok(ApiResponse::Events(evs))
+            }
+        }
+    }
+
+    // ----- helpers --------------------------------------------------------
+
+    fn check_site(&self, user: UserId, site: SiteId) -> Result<(), ApiError> {
+        let s = self
+            .store
+            .sites
+            .get(&site)
+            .ok_or_else(|| ApiError::NotFound(format!("site {site}")))?;
+        if s.owner != user && user != self.admin {
+            return Err(ApiError::Unauthorized);
+        }
+        Ok(())
+    }
+
+    fn create_job(&mut self, now: f64, user: UserId, jc: JobCreate) -> Result<JobId, ApiError> {
+        self.check_site(user, jc.site_id)?;
+        let app = self
+            .store
+            .apps
+            .values()
+            .find(|a| a.site_id == jc.site_id && a.name == jc.app)
+            .ok_or_else(|| {
+                ApiError::BadRequest(format!("app '{}' not registered at site {}", jc.app, jc.site_id))
+            })?
+            .id;
+        for p in &jc.parents {
+            if self.store.job(*p).is_none() {
+                return Err(ApiError::BadRequest(format!("parent {p} does not exist")));
+            }
+        }
+        let id = JobId(self.store.fresh_id());
+        self.store.insert_job(Job {
+            id,
+            site_id: jc.site_id,
+            app_id: app,
+            state: JobState::Created,
+            params: jc.params,
+            tags: jc.tags,
+            num_nodes: jc.num_nodes.max(1),
+            workload: jc.workload,
+            parents: jc.parents.clone(),
+            attempts: 0,
+            max_attempts: 3,
+            session: None,
+            created_at: now,
+        });
+        for (remote, size) in &jc.transfers_in {
+            let tid = TransferItemId(self.store.fresh_id());
+            self.store.insert_titem(TransferItem {
+                id: tid,
+                job_id: id,
+                site_id: jc.site_id,
+                direction: Direction::In,
+                remote: remote.clone(),
+                size_bytes: *size,
+                state: TransferState::Pending,
+                task_id: None,
+            });
+        }
+        for (remote, size) in &jc.transfers_out {
+            let tid = TransferItemId(self.store.fresh_id());
+            self.store.insert_titem(TransferItem {
+                id: tid,
+                job_id: id,
+                site_id: jc.site_id,
+                direction: Direction::Out,
+                remote: remote.clone(),
+                size_bytes: *size,
+                // Stage-out becomes Pending only after the run completes;
+                // mark it Error-proof by starting Pending — the transfer
+                // module only considers items whose job is POSTPROCESSED.
+                state: TransferState::Pending,
+                task_id: None,
+            });
+        }
+        // Initial routing.
+        let parents_pending = jc
+            .parents
+            .iter()
+            .any(|p| self.store.job(*p).map(|j| j.state != JobState::JobFinished).unwrap_or(true));
+        if parents_pending {
+            self.store.set_job_state(id, JobState::AwaitingParents, now, "");
+        } else {
+            self.advance_past_parents(now, id);
+        }
+        Ok(id)
+    }
+
+    /// Created/AwaitingParents -> Ready (stage-in pending) or straight to
+    /// Preprocessed when the job carries no input data.
+    fn advance_past_parents(&mut self, now: f64, id: JobId) {
+        let has_stage_in = self
+            .store
+            .titems_for_job(id)
+            .iter()
+            .any(|t| t.direction == Direction::In);
+        if has_stage_in {
+            self.store.set_job_state(id, JobState::Ready, now, "");
+        } else {
+            self.store.set_job_state(id, JobState::StagedIn, now, "no stage-in data");
+            self.store.set_job_state(id, JobState::Preprocessed, now, "");
+        }
+    }
+
+    fn query_jobs(&self, filter: &JobFilter) -> Vec<Job> {
+        let limit = if filter.limit == 0 { usize::MAX } else { filter.limit };
+        let match_tags = |j: &Job| {
+            filter.tags.iter().all(|(k, v)| j.tags.iter().any(|(jk, jv)| jk == k && jv == v))
+        };
+        match (filter.site, filter.states.is_empty()) {
+            (Some(site), false) => {
+                // Indexed path.
+                let mut out = Vec::new();
+                for &s in &filter.states {
+                    for id in self.store.jobs_in_state(site, s) {
+                        let j = self.store.job(id).unwrap();
+                        if match_tags(j) {
+                            out.push(j.clone());
+                            if out.len() >= limit {
+                                return out;
+                            }
+                        }
+                    }
+                }
+                out
+            }
+            _ => self
+                .store
+                .jobs_iter()
+                .filter(|j| filter.site.map(|s| j.site_id == s).unwrap_or(true))
+                .filter(|j| filter.states.is_empty() || filter.states.contains(&j.state))
+                .filter(|j| match_tags(j))
+                .take(limit)
+                .cloned()
+                .collect(),
+        }
+    }
+
+    fn transition_job(
+        &mut self,
+        now: f64,
+        user: UserId,
+        id: JobId,
+        to: JobState,
+        data: &str,
+    ) -> Result<(), ApiError> {
+        let job = self.store.job(id).ok_or_else(|| ApiError::NotFound(format!("job {id}")))?;
+        self.check_site(user, job.site_id)?;
+        let from = job.state;
+        if !state::legal(from, to) {
+            return Err(ApiError::IllegalTransition { job: id, from, to });
+        }
+        self.store.set_job_state(id, to, now, data);
+        self.post_transition(now, id, to);
+        Ok(())
+    }
+
+    /// Service-side consequences of a transition.
+    fn post_transition(&mut self, now: f64, id: JobId, to: JobState) {
+        match to {
+            JobState::Running => {
+                if let Some(j) = self.store.job_mut(id) {
+                    j.attempts += 1;
+                }
+            }
+            JobState::RunDone => {
+                self.release_from_session(id);
+            }
+            JobState::RunError | JobState::RunTimeout => {
+                self.release_from_session(id);
+                let (attempts, max) =
+                    self.store.job(id).map(|j| (j.attempts, j.max_attempts)).unwrap_or((0, 0));
+                if attempts < max {
+                    self.store.set_job_state(id, JobState::RestartReady, now, "retry");
+                } else {
+                    self.store.set_job_state(id, JobState::Failed, now, "retry budget exhausted");
+                    self.propagate_parent_outcome(now, id);
+                }
+            }
+            JobState::Postprocessed => {
+                // Jobs without stage-out data complete immediately.
+                if self.store.transfers_complete(id, Direction::Out) {
+                    self.store.set_job_state(id, JobState::JobFinished, now, "no stage-out data");
+                    self.propagate_parent_outcome(now, id);
+                }
+            }
+            JobState::JobFinished | JobState::Failed => {
+                self.propagate_parent_outcome(now, id);
+            }
+            _ => {}
+        }
+    }
+
+    /// A stage-in/out item completed: advance the owning job if all items
+    /// in that direction are now done.
+    fn on_titem_done(&mut self, now: f64, id: TransferItemId) {
+        let (job_id, dir) = {
+            let t = self.store.titem(id).unwrap();
+            (t.job_id, t.direction)
+        };
+        let job_state = self.store.job(job_id).map(|j| j.state);
+        match (dir, job_state) {
+            (Direction::In, Some(JobState::Ready)) => {
+                if self.store.transfers_complete(job_id, Direction::In) {
+                    self.store.set_job_state(job_id, JobState::StagedIn, now, "stage-in complete");
+                    self.store.set_job_state(job_id, JobState::Preprocessed, now, "");
+                }
+            }
+            (Direction::Out, Some(JobState::Postprocessed)) => {
+                if self.store.transfers_complete(job_id, Direction::Out) {
+                    self.store.set_job_state(job_id, JobState::JobFinished, now, "stage-out complete");
+                    self.propagate_parent_outcome(now, job_id);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// DAG propagation: when a parent reaches a terminal state, advance or
+    /// fail its children.
+    fn propagate_parent_outcome(&mut self, now: f64, parent: JobId) {
+        let parent_failed = self.store.job(parent).map(|j| j.state == JobState::Failed).unwrap_or(false);
+        let children: Vec<JobId> = self.store.children_of(parent).to_vec();
+        for c in children {
+            let cstate = self.store.job(c).map(|j| j.state);
+            if cstate != Some(JobState::AwaitingParents) {
+                continue;
+            }
+            if parent_failed {
+                self.store.set_job_state(c, JobState::Failed, now, "parent failed");
+                self.propagate_parent_outcome(now, c);
+                continue;
+            }
+            let all_done = self
+                .store
+                .job(c)
+                .unwrap()
+                .parents
+                .iter()
+                .all(|p| self.store.job(*p).map(|j| j.state == JobState::JobFinished).unwrap_or(false));
+            if all_done {
+                self.advance_past_parents(now, c);
+            }
+        }
+    }
+
+    fn release_from_session(&mut self, id: JobId) {
+        let sid = self.store.job(id).and_then(|j| j.session);
+        if let Some(sid) = sid {
+            if let Some(s) = self.store.sessions.get_mut(&sid) {
+                s.acquired.remove(&id);
+            }
+            if let Some(j) = self.store.job_mut(id) {
+                j.session = None;
+            }
+        }
+    }
+
+    fn session_acquire(
+        &mut self,
+        now: f64,
+        user: UserId,
+        session: SessionId,
+        max_nodes: u32,
+        max_jobs: usize,
+    ) -> Result<Vec<Job>, ApiError> {
+        let (site, ended) = {
+            let s = self
+                .store
+                .sessions
+                .get(&session)
+                .ok_or_else(|| ApiError::NotFound(format!("session {session}")))?;
+            (s.site_id, s.ended)
+        };
+        if ended {
+            return Err(ApiError::BadRequest(format!("session {session} ended")));
+        }
+        self.check_site(user, site)?;
+        // Heartbeat implicitly.
+        self.store.sessions.get_mut(&session).unwrap().heartbeat_at = now;
+
+        let mut picked: Vec<JobId> = Vec::new();
+        let mut nodes_left = max_nodes;
+        // FIFO over runnable states; RestartReady first (recovering work is
+        // older than fresh work).
+        for st in [JobState::RestartReady, JobState::Preprocessed] {
+            for id in self.store.jobs_in_state(site, st) {
+                if picked.len() >= max_jobs {
+                    break;
+                }
+                let j = self.store.job(id).unwrap();
+                if j.session.is_some() || j.num_nodes > nodes_left {
+                    continue;
+                }
+                nodes_left -= j.num_nodes;
+                picked.push(id);
+            }
+        }
+        let mut out = Vec::with_capacity(picked.len());
+        for id in picked {
+            if let Some(j) = self.store.job_mut(id) {
+                j.session = Some(session);
+            }
+            self.store.sessions.get_mut(&session).unwrap().acquired.insert(id);
+            out.push(self.store.job(id).unwrap().clone());
+        }
+        Ok(out)
+    }
+
+    fn backlog(&self, site: SiteId) -> Backlog {
+        let sum_nodes = |st: JobState| -> u32 {
+            self.store
+                .jobs_in_state(site, st)
+                .iter()
+                .map(|&id| self.store.job(id).unwrap().num_nodes)
+                .sum()
+        };
+        let backlog_states = [
+            JobState::Created,
+            JobState::AwaitingParents,
+            JobState::Ready,
+            JobState::StagedIn,
+            JobState::Preprocessed,
+            JobState::RestartReady,
+        ];
+        Backlog {
+            backlog_jobs: backlog_states.iter().map(|&s| self.store.count_in_state(site, s)).sum(),
+            runnable_nodes: sum_nodes(JobState::Preprocessed) + sum_nodes(JobState::RestartReady),
+            inflight_nodes: sum_nodes(JobState::Ready) + sum_nodes(JobState::StagedIn),
+            batch_nodes: self
+                .store
+                .batch_jobs
+                .values()
+                .filter(|b| {
+                    b.site_id == site
+                        && matches!(
+                            b.state,
+                            BatchJobState::Pending | BatchJobState::Queued | BatchJobState::Running
+                        )
+                })
+                .map(|b| b.num_nodes)
+                .sum(),
+        }
+    }
+
+    /// Reset a job after launcher death (lease expiry).
+    fn recover_job(&mut self, now: f64, id: JobId, reason: &str) {
+        let st = self.store.job(id).map(|j| j.state);
+        if st == Some(JobState::Running) {
+            self.store.set_job_state(id, JobState::RunTimeout, now, reason);
+            self.post_transition(now, id, JobState::RunTimeout);
+        }
+    }
+
+    /// Detect and expire stale sessions (the fault-tolerance core, §4.4).
+    pub fn expire_stale_sessions(&mut self, now: f64) {
+        let stale: Vec<SessionId> = self
+            .store
+            .sessions
+            .values()
+            .filter(|s| !s.ended && now - s.heartbeat_at > self.lease_timeout_s)
+            .map(|s| s.id)
+            .collect();
+        for sid in stale {
+            let acquired: Vec<JobId> = {
+                let s = self.store.sessions.get_mut(&sid).unwrap();
+                s.ended = true;
+                s.acquired.iter().copied().collect()
+            };
+            for id in acquired {
+                self.release_from_session(id);
+                self.recover_job(now, id, "session lease expired");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (ServiceCore, String, SiteId) {
+        let mut svc = ServiceCore::new(b"test-secret");
+        let tok = svc.admin_token();
+        let site = svc
+            .handle(0.0, &tok, ApiRequest::CreateSite {
+                name: "theta".into(),
+                hostname: "thetalogin1".into(),
+                path: "/projects/x".into(),
+            })
+            .unwrap()
+            .site_id();
+        svc.handle(0.0, &tok, ApiRequest::RegisterApp {
+            site,
+            name: "EigenCorr".into(),
+            command_template: "corr {h5} -imm {imm}".into(),
+            parameters: vec!["h5".into(), "imm".into()],
+        })
+        .unwrap();
+        (svc, tok, site)
+    }
+
+    fn create_one(svc: &mut ServiceCore, tok: &str, site: SiteId, xfers: bool) -> JobId {
+        let mut jc = JobCreate::simple(site, "EigenCorr", "xpcs");
+        if xfers {
+            jc.transfers_in = vec![("APS".into(), 878_000_000)];
+            jc.transfers_out = vec![("APS".into(), 55_000_000)];
+        }
+        svc.handle(1.0, tok, ApiRequest::BulkCreateJobs { jobs: vec![jc] }).unwrap().job_ids()[0]
+    }
+
+    #[test]
+    fn bad_token_rejected() {
+        let (mut svc, _tok, site) = setup();
+        let err = svc
+            .handle(0.0, "balsam.1.deadbeef", ApiRequest::SiteBacklog { site })
+            .unwrap_err();
+        assert_eq!(err, ApiError::Unauthorized);
+    }
+
+    #[test]
+    fn unknown_app_rejected() {
+        let (mut svc, tok, site) = setup();
+        let jc = JobCreate::simple(site, "NotRegistered", "x");
+        let err = svc.handle(0.0, &tok, ApiRequest::BulkCreateJobs { jobs: vec![jc] }).unwrap_err();
+        assert!(matches!(err, ApiError::BadRequest(_)));
+    }
+
+    #[test]
+    fn job_without_transfers_is_immediately_runnable() {
+        let (mut svc, tok, site) = setup();
+        let id = create_one(&mut svc, &tok, site, false);
+        assert_eq!(svc.store.job(id).unwrap().state, JobState::Preprocessed);
+    }
+
+    #[test]
+    fn job_with_stage_in_waits_in_ready() {
+        let (mut svc, tok, site) = setup();
+        let id = create_one(&mut svc, &tok, site, true);
+        assert_eq!(svc.store.job(id).unwrap().state, JobState::Ready);
+    }
+
+    #[test]
+    fn stage_in_completion_advances_job() {
+        let (mut svc, tok, site) = setup();
+        let id = create_one(&mut svc, &tok, site, true);
+        let items = svc
+            .handle(2.0, &tok, ApiRequest::PendingTransferItems { site, direction: Direction::In, limit: 0 })
+            .unwrap()
+            .transfer_items();
+        assert_eq!(items.len(), 1);
+        svc.handle(3.0, &tok, ApiRequest::UpdateTransferItems {
+            ids: items.iter().map(|t| t.id).collect(),
+            state: TransferState::Done,
+            task_id: None,
+        })
+        .unwrap();
+        assert_eq!(svc.store.job(id).unwrap().state, JobState::Preprocessed);
+    }
+
+    #[test]
+    fn full_lifecycle_with_stage_out() {
+        let (mut svc, tok, site) = setup();
+        let id = create_one(&mut svc, &tok, site, true);
+        // stage in
+        let items = svc
+            .handle(2.0, &tok, ApiRequest::PendingTransferItems { site, direction: Direction::In, limit: 0 })
+            .unwrap()
+            .transfer_items();
+        svc.handle(3.0, &tok, ApiRequest::UpdateTransferItems {
+            ids: items.iter().map(|t| t.id).collect(),
+            state: TransferState::Done,
+            task_id: None,
+        })
+        .unwrap();
+        // run
+        let sid = svc
+            .handle(4.0, &tok, ApiRequest::CreateSession { site, batch_job: None })
+            .unwrap()
+            .session_id();
+        let acquired = svc
+            .handle(4.5, &tok, ApiRequest::SessionAcquire { session: sid, max_nodes: 8, max_jobs: 10 })
+            .unwrap()
+            .jobs();
+        assert_eq!(acquired.len(), 1);
+        for (t, st) in [(5.0, JobState::Running), (25.0, JobState::RunDone), (25.1, JobState::Postprocessed)] {
+            svc.handle(t, &tok, ApiRequest::UpdateJobState { job: id, to: st, data: String::new() })
+                .unwrap();
+        }
+        // still awaiting stage-out
+        assert_eq!(svc.store.job(id).unwrap().state, JobState::Postprocessed);
+        let out_items = svc
+            .handle(26.0, &tok, ApiRequest::PendingTransferItems { site, direction: Direction::Out, limit: 0 })
+            .unwrap()
+            .transfer_items();
+        assert_eq!(out_items.len(), 1);
+        svc.handle(30.0, &tok, ApiRequest::UpdateTransferItems {
+            ids: out_items.iter().map(|t| t.id).collect(),
+            state: TransferState::Done,
+            task_id: None,
+        })
+        .unwrap();
+        assert_eq!(svc.store.job(id).unwrap().state, JobState::JobFinished);
+        // events recorded for every hop
+        let evs = svc.handle(31.0, &tok, ApiRequest::ListEvents { since: 0 }).unwrap().events();
+        let path: Vec<JobState> = evs.iter().filter(|e| e.job_id == id).map(|e| e.to).collect();
+        assert_eq!(
+            path,
+            vec![
+                JobState::Ready,
+                JobState::StagedIn,
+                JobState::Preprocessed,
+                JobState::Running,
+                JobState::RunDone,
+                JobState::Postprocessed,
+                JobState::JobFinished
+            ]
+        );
+    }
+
+    #[test]
+    fn illegal_transition_rejected() {
+        let (mut svc, tok, site) = setup();
+        let id = create_one(&mut svc, &tok, site, false);
+        let err = svc
+            .handle(2.0, &tok, ApiRequest::UpdateJobState { job: id, to: JobState::JobFinished, data: String::new() })
+            .unwrap_err();
+        assert!(matches!(err, ApiError::IllegalTransition { .. }));
+    }
+
+    #[test]
+    fn acquire_respects_node_budget_and_exclusivity() {
+        let (mut svc, tok, site) = setup();
+        for _ in 0..5 {
+            create_one(&mut svc, &tok, site, false);
+        }
+        let s1 = svc
+            .handle(1.0, &tok, ApiRequest::CreateSession { site, batch_job: None })
+            .unwrap()
+            .session_id();
+        let s2 = svc
+            .handle(1.0, &tok, ApiRequest::CreateSession { site, batch_job: None })
+            .unwrap()
+            .session_id();
+        let a1 = svc
+            .handle(2.0, &tok, ApiRequest::SessionAcquire { session: s1, max_nodes: 3, max_jobs: 100 })
+            .unwrap()
+            .jobs();
+        assert_eq!(a1.len(), 3); // node budget
+        let a2 = svc
+            .handle(2.0, &tok, ApiRequest::SessionAcquire { session: s2, max_nodes: 100, max_jobs: 100 })
+            .unwrap()
+            .jobs();
+        assert_eq!(a2.len(), 2); // no overlap with s1
+        let ids1: Vec<JobId> = a1.iter().map(|j| j.id).collect();
+        assert!(a2.iter().all(|j| !ids1.contains(&j.id)));
+    }
+
+    #[test]
+    fn stale_session_recovers_running_jobs() {
+        let (mut svc, tok, site) = setup();
+        let id = create_one(&mut svc, &tok, site, false);
+        let sid = svc
+            .handle(1.0, &tok, ApiRequest::CreateSession { site, batch_job: None })
+            .unwrap()
+            .session_id();
+        svc.handle(2.0, &tok, ApiRequest::SessionAcquire { session: sid, max_nodes: 8, max_jobs: 8 })
+            .unwrap();
+        svc.handle(3.0, &tok, ApiRequest::UpdateJobState { job: id, to: JobState::Running, data: String::new() })
+            .unwrap();
+        // No heartbeats for > lease timeout; any API call triggers expiry.
+        svc.handle(3.0 + DEFAULT_LEASE_TIMEOUT_S + 1.0, &tok, ApiRequest::SiteBacklog { site })
+            .unwrap();
+        let j = svc.store.job(id).unwrap();
+        assert_eq!(j.state, JobState::RestartReady);
+        assert_eq!(j.session, None);
+        // And the job can be re-acquired by a new session.
+        let sid2 = svc
+            .handle(70.0, &tok, ApiRequest::CreateSession { site, batch_job: None })
+            .unwrap()
+            .session_id();
+        let again = svc
+            .handle(71.0, &tok, ApiRequest::SessionAcquire { session: sid2, max_nodes: 8, max_jobs: 8 })
+            .unwrap()
+            .jobs();
+        assert_eq!(again.len(), 1);
+        assert_eq!(again[0].id, id);
+    }
+
+    #[test]
+    fn heartbeat_keeps_session_alive() {
+        let (mut svc, tok, site) = setup();
+        let id = create_one(&mut svc, &tok, site, false);
+        let sid = svc
+            .handle(1.0, &tok, ApiRequest::CreateSession { site, batch_job: None })
+            .unwrap()
+            .session_id();
+        svc.handle(2.0, &tok, ApiRequest::SessionAcquire { session: sid, max_nodes: 8, max_jobs: 8 })
+            .unwrap();
+        svc.handle(3.0, &tok, ApiRequest::UpdateJobState { job: id, to: JobState::Running, data: String::new() })
+            .unwrap();
+        for i in 0..5 {
+            svc.handle(3.0 + 30.0 * i as f64, &tok, ApiRequest::SessionHeartbeat { session: sid })
+                .unwrap();
+        }
+        svc.handle(125.0, &tok, ApiRequest::SiteBacklog { site }).unwrap();
+        assert_eq!(svc.store.job(id).unwrap().state, JobState::Running);
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_fails_job() {
+        let (mut svc, tok, site) = setup();
+        let id = create_one(&mut svc, &tok, site, false);
+        let sid = svc
+            .handle(1.0, &tok, ApiRequest::CreateSession { site, batch_job: None })
+            .unwrap()
+            .session_id();
+        for attempt in 0..3 {
+            let t = 10.0 * attempt as f64 + 2.0;
+            let got = svc
+                .handle(t, &tok, ApiRequest::SessionAcquire { session: sid, max_nodes: 8, max_jobs: 8 })
+                .unwrap()
+                .jobs();
+            assert_eq!(got.len(), 1, "attempt {attempt}");
+            svc.handle(t + 0.1, &tok, ApiRequest::UpdateJobState { job: id, to: JobState::Running, data: String::new() })
+                .unwrap();
+            svc.handle(t + 0.2, &tok, ApiRequest::UpdateJobState { job: id, to: JobState::RunError, data: "boom".into() })
+                .unwrap();
+            svc.handle(t + 0.3, &tok, ApiRequest::SessionHeartbeat { session: sid }).unwrap();
+        }
+        assert_eq!(svc.store.job(id).unwrap().state, JobState::Failed);
+    }
+
+    #[test]
+    fn dag_children_advance_after_parent_finishes() {
+        let (mut svc, tok, site) = setup();
+        let parent = create_one(&mut svc, &tok, site, false);
+        let mut jc = JobCreate::simple(site, "EigenCorr", "xpcs");
+        jc.parents = vec![parent];
+        let child =
+            svc.handle(1.5, &tok, ApiRequest::BulkCreateJobs { jobs: vec![jc] }).unwrap().job_ids()[0];
+        assert_eq!(svc.store.job(child).unwrap().state, JobState::AwaitingParents);
+        // Drive parent to completion.
+        let sid = svc
+            .handle(2.0, &tok, ApiRequest::CreateSession { site, batch_job: None })
+            .unwrap()
+            .session_id();
+        svc.handle(2.1, &tok, ApiRequest::SessionAcquire { session: sid, max_nodes: 8, max_jobs: 8 })
+            .unwrap();
+        for st in [JobState::Running, JobState::RunDone, JobState::Postprocessed] {
+            svc.handle(3.0, &tok, ApiRequest::UpdateJobState { job: parent, to: st, data: String::new() })
+                .unwrap();
+        }
+        assert_eq!(svc.store.job(parent).unwrap().state, JobState::JobFinished);
+        assert_eq!(svc.store.job(child).unwrap().state, JobState::Preprocessed);
+    }
+
+    #[test]
+    fn dag_children_fail_when_parent_fails() {
+        let (mut svc, tok, site) = setup();
+        let parent = create_one(&mut svc, &tok, site, false);
+        let mut jc = JobCreate::simple(site, "EigenCorr", "xpcs");
+        jc.parents = vec![parent];
+        let child =
+            svc.handle(1.5, &tok, ApiRequest::BulkCreateJobs { jobs: vec![jc] }).unwrap().job_ids()[0];
+        let sid = svc
+            .handle(2.0, &tok, ApiRequest::CreateSession { site, batch_job: None })
+            .unwrap()
+            .session_id();
+        for _ in 0..3 {
+            svc.handle(2.1, &tok, ApiRequest::SessionAcquire { session: sid, max_nodes: 8, max_jobs: 8 })
+                .unwrap();
+            svc.handle(2.2, &tok, ApiRequest::UpdateJobState { job: parent, to: JobState::Running, data: String::new() })
+                .unwrap();
+            svc.handle(2.3, &tok, ApiRequest::UpdateJobState { job: parent, to: JobState::RunError, data: String::new() })
+                .unwrap();
+        }
+        assert_eq!(svc.store.job(parent).unwrap().state, JobState::Failed);
+        assert_eq!(svc.store.job(child).unwrap().state, JobState::Failed);
+    }
+
+    #[test]
+    fn multi_tenancy_enforced() {
+        let (mut svc, admin_tok, site) = setup();
+        let mallory = svc
+            .handle(0.0, &admin_tok, ApiRequest::CreateUser { name: "mallory".into() })
+            .unwrap()
+            .user_id();
+        let mtok = svc.token_for(mallory);
+        let err = svc.handle(1.0, &mtok, ApiRequest::SiteBacklog { site }).unwrap_err();
+        assert_eq!(err, ApiError::Unauthorized);
+        let jc = JobCreate::simple(site, "EigenCorr", "xpcs");
+        let err = svc.handle(1.0, &mtok, ApiRequest::BulkCreateJobs { jobs: vec![jc] }).unwrap_err();
+        assert_eq!(err, ApiError::Unauthorized);
+    }
+
+    #[test]
+    fn backlog_snapshot() {
+        let (mut svc, tok, site) = setup();
+        create_one(&mut svc, &tok, site, false); // -> Preprocessed
+        create_one(&mut svc, &tok, site, true); // -> Ready
+        let b = svc.handle(2.0, &tok, ApiRequest::SiteBacklog { site }).unwrap().backlog();
+        assert_eq!(b.backlog_jobs, 2);
+        assert_eq!(b.runnable_nodes, 1);
+        assert_eq!(b.inflight_nodes, 1);
+        assert_eq!(b.batch_nodes, 0);
+    }
+
+    #[test]
+    fn tag_filtering() {
+        let (mut svc, tok, site) = setup();
+        let mut jc = JobCreate::simple(site, "EigenCorr", "xpcs");
+        jc.tags = vec![("experiment".into(), "XPCS".into())];
+        svc.handle(1.0, &tok, ApiRequest::BulkCreateJobs { jobs: vec![jc] }).unwrap();
+        create_one(&mut svc, &tok, site, false);
+        let jobs = svc
+            .handle(2.0, &tok, ApiRequest::ListJobs {
+                filter: JobFilter {
+                    site: Some(site),
+                    tags: vec![("experiment".into(), "XPCS".into())],
+                    ..Default::default()
+                },
+            })
+            .unwrap()
+            .jobs();
+        assert_eq!(jobs.len(), 1);
+    }
+}

@@ -1,0 +1,743 @@
+//! HTTP gateway: the Balsam REST API over real sockets.
+//!
+//! Serializes [`ApiRequest`]/[`ApiResponse`] as JSON and carries them over
+//! the hand-rolled HTTP/1.1 transport ([`crate::util::httpd`]). This is
+//! the real-time-mode transport: the end-to-end examples run the service
+//! behind this gateway and every site module / client connects as an HTTP
+//! client with a bearer token — exactly the paper's deployment shape.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::httpd::{self, Request, Response, Server};
+use crate::util::json::Json;
+
+use super::api::*;
+use super::core::ServiceCore;
+use super::models::*;
+
+// ---------------------------------------------------------------------------
+// JSON codecs
+// ---------------------------------------------------------------------------
+
+fn kv_to_json(kv: &[(String, String)]) -> Json {
+    Json::Arr(kv.iter().map(|(k, v)| Json::arr([Json::str(k.clone()), Json::str(v.clone())])).collect())
+}
+
+fn kv_from_json(j: &Json) -> Vec<(String, String)> {
+    j.as_arr()
+        .map(|a| {
+            a.iter()
+                .filter_map(|p| {
+                    Some((p.idx(0)?.as_str()?.to_string(), p.idx(1)?.as_str()?.to_string()))
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+fn xfers_to_json(xs: &[(String, u64)]) -> Json {
+    Json::Arr(xs.iter().map(|(r, s)| Json::arr([Json::str(r.clone()), Json::num(*s as f64)])).collect())
+}
+
+fn xfers_from_json(j: &Json) -> Vec<(String, u64)> {
+    j.as_arr()
+        .map(|a| {
+            a.iter()
+                .filter_map(|p| Some((p.idx(0)?.as_str()?.to_string(), p.idx(1)?.as_u64()?)))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+fn ids_to_json<T: Copy>(ids: &[T], f: impl Fn(T) -> u64) -> Json {
+    Json::Arr(ids.iter().map(|&i| Json::num(f(i) as f64)).collect())
+}
+
+fn u64s_from_json(j: &Json) -> Vec<u64> {
+    j.as_arr().map(|a| a.iter().filter_map(Json::as_u64).collect()).unwrap_or_default()
+}
+
+fn dir_name(d: Direction) -> &'static str {
+    match d {
+        Direction::In => "in",
+        Direction::Out => "out",
+    }
+}
+
+fn dir_from(s: &str) -> Direction {
+    if s == "out" {
+        Direction::Out
+    } else {
+        Direction::In
+    }
+}
+
+fn tstate_name(s: TransferState) -> &'static str {
+    match s {
+        TransferState::Pending => "pending",
+        TransferState::Active => "active",
+        TransferState::Done => "done",
+        TransferState::Error => "error",
+    }
+}
+
+fn tstate_from(s: &str) -> TransferState {
+    match s {
+        "active" => TransferState::Active,
+        "done" => TransferState::Done,
+        "error" => TransferState::Error,
+        _ => TransferState::Pending,
+    }
+}
+
+fn bstate_name(s: BatchJobState) -> &'static str {
+    match s {
+        BatchJobState::Pending => "pending",
+        BatchJobState::Queued => "queued",
+        BatchJobState::Running => "running",
+        BatchJobState::Finished => "finished",
+        BatchJobState::Deleted => "deleted",
+    }
+}
+
+fn bstate_from(s: &str) -> BatchJobState {
+    match s {
+        "queued" => BatchJobState::Queued,
+        "running" => BatchJobState::Running,
+        "finished" => BatchJobState::Finished,
+        "deleted" => BatchJobState::Deleted,
+        _ => BatchJobState::Pending,
+    }
+}
+
+fn mode_name(m: JobMode) -> &'static str {
+    match m {
+        JobMode::Mpi => "mpi",
+        JobMode::Serial => "serial",
+    }
+}
+
+fn mode_from(s: &str) -> JobMode {
+    if s == "serial" {
+        JobMode::Serial
+    } else {
+        JobMode::Mpi
+    }
+}
+
+pub fn request_to_json(req: &ApiRequest) -> Json {
+    use ApiRequest::*;
+    match req {
+        CreateUser { name } => Json::obj(vec![("type", Json::str("CreateUser")), ("name", Json::str(name.clone()))]),
+        CreateSite { name, hostname, path } => Json::obj(vec![
+            ("type", Json::str("CreateSite")),
+            ("name", Json::str(name.clone())),
+            ("hostname", Json::str(hostname.clone())),
+            ("path", Json::str(path.clone())),
+        ]),
+        RegisterApp { site, name, command_template, parameters } => Json::obj(vec![
+            ("type", Json::str("RegisterApp")),
+            ("site", Json::num(site.0 as f64)),
+            ("name", Json::str(name.clone())),
+            ("command_template", Json::str(command_template.clone())),
+            ("parameters", Json::Arr(parameters.iter().map(|p| Json::str(p.clone())).collect())),
+        ]),
+        BulkCreateJobs { jobs } => Json::obj(vec![
+            ("type", Json::str("BulkCreateJobs")),
+            (
+                "jobs",
+                Json::Arr(
+                    jobs.iter()
+                        .map(|jc| {
+                            Json::obj(vec![
+                                ("site_id", Json::num(jc.site_id.0 as f64)),
+                                ("app", Json::str(jc.app.clone())),
+                                ("workload", Json::str(jc.workload.clone())),
+                                ("num_nodes", Json::num(jc.num_nodes as f64)),
+                                ("params", kv_to_json(&jc.params)),
+                                ("tags", kv_to_json(&jc.tags)),
+                                ("transfers_in", xfers_to_json(&jc.transfers_in)),
+                                ("transfers_out", xfers_to_json(&jc.transfers_out)),
+                                ("parents", ids_to_json(&jc.parents, |p| p.0)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+        ListJobs { filter } => Json::obj(vec![("type", Json::str("ListJobs")), ("filter", filter_to_json(filter))]),
+        CountByState { site } => {
+            Json::obj(vec![("type", Json::str("CountByState")), ("site", Json::num(site.0 as f64))])
+        }
+        UpdateJobState { job, to, data } => Json::obj(vec![
+            ("type", Json::str("UpdateJobState")),
+            ("job", Json::num(job.0 as f64)),
+            ("to", Json::str(to.name())),
+            ("data", Json::str(data.clone())),
+        ]),
+        BulkUpdateJobState { jobs, to, data } => Json::obj(vec![
+            ("type", Json::str("BulkUpdateJobState")),
+            ("jobs", ids_to_json(jobs, |j| j.0)),
+            ("to", Json::str(to.name())),
+            ("data", Json::str(data.clone())),
+        ]),
+        CreateSession { site, batch_job } => Json::obj(vec![
+            ("type", Json::str("CreateSession")),
+            ("site", Json::num(site.0 as f64)),
+            ("batch_job", batch_job.map(|b| Json::num(b.0 as f64)).unwrap_or(Json::Null)),
+        ]),
+        SessionAcquire { session, max_nodes, max_jobs } => Json::obj(vec![
+            ("type", Json::str("SessionAcquire")),
+            ("session", Json::num(session.0 as f64)),
+            ("max_nodes", Json::num(*max_nodes as f64)),
+            ("max_jobs", Json::num(*max_jobs as f64)),
+        ]),
+        SessionHeartbeat { session } => Json::obj(vec![
+            ("type", Json::str("SessionHeartbeat")),
+            ("session", Json::num(session.0 as f64)),
+        ]),
+        SessionEnd { session } => {
+            Json::obj(vec![("type", Json::str("SessionEnd")), ("session", Json::num(session.0 as f64))])
+        }
+        CreateBatchJob { site, num_nodes, wall_time_s, mode, queue, project } => Json::obj(vec![
+            ("type", Json::str("CreateBatchJob")),
+            ("site", Json::num(site.0 as f64)),
+            ("num_nodes", Json::num(*num_nodes as f64)),
+            ("wall_time_s", Json::num(*wall_time_s)),
+            ("mode", Json::str(mode_name(*mode))),
+            ("queue", Json::str(queue.clone())),
+            ("project", Json::str(project.clone())),
+        ]),
+        ListBatchJobs { site, active_only } => Json::obj(vec![
+            ("type", Json::str("ListBatchJobs")),
+            ("site", Json::num(site.0 as f64)),
+            ("active_only", Json::Bool(*active_only)),
+        ]),
+        UpdateBatchJob { id, state, local_id } => Json::obj(vec![
+            ("type", Json::str("UpdateBatchJob")),
+            ("id", Json::num(id.0 as f64)),
+            ("state", Json::str(bstate_name(*state))),
+            ("local_id", local_id.map(|l| Json::num(l as f64)).unwrap_or(Json::Null)),
+        ]),
+        PendingTransferItems { site, direction, limit } => Json::obj(vec![
+            ("type", Json::str("PendingTransferItems")),
+            ("site", Json::num(site.0 as f64)),
+            ("direction", Json::str(dir_name(*direction))),
+            ("limit", Json::num(*limit as f64)),
+        ]),
+        UpdateTransferItems { ids, state, task_id } => Json::obj(vec![
+            ("type", Json::str("UpdateTransferItems")),
+            ("ids", ids_to_json(ids, |i| i.0)),
+            ("state", Json::str(tstate_name(*state))),
+            ("task_id", task_id.map(|t| Json::num(t.0 as f64)).unwrap_or(Json::Null)),
+        ]),
+        SiteBacklog { site } => {
+            Json::obj(vec![("type", Json::str("SiteBacklog")), ("site", Json::num(site.0 as f64))])
+        }
+        ListEvents { since } => {
+            Json::obj(vec![("type", Json::str("ListEvents")), ("since", Json::num(*since as f64))])
+        }
+    }
+}
+
+fn filter_to_json(f: &JobFilter) -> Json {
+    Json::obj(vec![
+        ("site", f.site.map(|s| Json::num(s.0 as f64)).unwrap_or(Json::Null)),
+        ("states", Json::Arr(f.states.iter().map(|s| Json::str(s.name())).collect())),
+        ("tags", kv_to_json(&f.tags)),
+        ("limit", Json::num(f.limit as f64)),
+    ])
+}
+
+fn filter_from_json(j: &Json) -> JobFilter {
+    JobFilter {
+        site: j.get("site").and_then(Json::as_u64).map(SiteId),
+        states: j
+            .get("states")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(|s| s.as_str().and_then(JobState::from_name)).collect())
+            .unwrap_or_default(),
+        tags: j.get("tags").map(kv_from_json).unwrap_or_default(),
+        limit: j.get("limit").and_then(Json::as_u64).unwrap_or(0) as usize,
+    }
+}
+
+pub fn request_from_json(j: &Json) -> Result<ApiRequest, String> {
+    let ty = j.get("type").and_then(Json::as_str).ok_or("missing type")?;
+    let site = || j.get("site").and_then(Json::as_u64).map(SiteId).ok_or("missing site");
+    let get_str = |k: &str| j.get(k).and_then(Json::as_str).unwrap_or("").to_string();
+    Ok(match ty {
+        "CreateUser" => ApiRequest::CreateUser { name: get_str("name") },
+        "CreateSite" => ApiRequest::CreateSite {
+            name: get_str("name"),
+            hostname: get_str("hostname"),
+            path: get_str("path"),
+        },
+        "RegisterApp" => ApiRequest::RegisterApp {
+            site: site()?,
+            name: get_str("name"),
+            command_template: get_str("command_template"),
+            parameters: j
+                .get("parameters")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(|s| s.as_str().map(String::from)).collect())
+                .unwrap_or_default(),
+        },
+        "BulkCreateJobs" => ApiRequest::BulkCreateJobs {
+            jobs: j
+                .get("jobs")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .map(|jc| JobCreate {
+                            site_id: SiteId(jc.get("site_id").and_then(Json::as_u64).unwrap_or(0)),
+                            app: jc.get("app").and_then(Json::as_str).unwrap_or("").into(),
+                            workload: jc.get("workload").and_then(Json::as_str).unwrap_or("").into(),
+                            num_nodes: jc.get("num_nodes").and_then(Json::as_u64).unwrap_or(1) as u32,
+                            params: jc.get("params").map(kv_from_json).unwrap_or_default(),
+                            tags: jc.get("tags").map(kv_from_json).unwrap_or_default(),
+                            transfers_in: jc.get("transfers_in").map(xfers_from_json).unwrap_or_default(),
+                            transfers_out: jc.get("transfers_out").map(xfers_from_json).unwrap_or_default(),
+                            parents: jc
+                                .get("parents")
+                                .map(u64s_from_json)
+                                .unwrap_or_default()
+                                .into_iter()
+                                .map(JobId)
+                                .collect(),
+                        })
+                        .collect()
+                })
+                .unwrap_or_default(),
+        },
+        "ListJobs" => ApiRequest::ListJobs {
+            filter: j.get("filter").map(filter_from_json).unwrap_or_default(),
+        },
+        "CountByState" => ApiRequest::CountByState { site: site()? },
+        "UpdateJobState" => ApiRequest::UpdateJobState {
+            job: JobId(j.get("job").and_then(Json::as_u64).ok_or("missing job")?),
+            to: JobState::from_name(&get_str("to")).ok_or("bad state")?,
+            data: get_str("data"),
+        },
+        "BulkUpdateJobState" => ApiRequest::BulkUpdateJobState {
+            jobs: j.get("jobs").map(u64s_from_json).unwrap_or_default().into_iter().map(JobId).collect(),
+            to: JobState::from_name(&get_str("to")).ok_or("bad state")?,
+            data: get_str("data"),
+        },
+        "CreateSession" => ApiRequest::CreateSession {
+            site: site()?,
+            batch_job: j.get("batch_job").and_then(Json::as_u64).map(BatchJobId),
+        },
+        "SessionAcquire" => ApiRequest::SessionAcquire {
+            session: SessionId(j.get("session").and_then(Json::as_u64).ok_or("missing session")?),
+            max_nodes: j.get("max_nodes").and_then(Json::as_u64).unwrap_or(0) as u32,
+            max_jobs: j.get("max_jobs").and_then(Json::as_u64).unwrap_or(0) as usize,
+        },
+        "SessionHeartbeat" => ApiRequest::SessionHeartbeat {
+            session: SessionId(j.get("session").and_then(Json::as_u64).ok_or("missing session")?),
+        },
+        "SessionEnd" => ApiRequest::SessionEnd {
+            session: SessionId(j.get("session").and_then(Json::as_u64).ok_or("missing session")?),
+        },
+        "CreateBatchJob" => ApiRequest::CreateBatchJob {
+            site: site()?,
+            num_nodes: j.get("num_nodes").and_then(Json::as_u64).unwrap_or(0) as u32,
+            wall_time_s: j.get("wall_time_s").and_then(Json::as_f64).unwrap_or(0.0),
+            mode: mode_from(&get_str("mode")),
+            queue: get_str("queue"),
+            project: get_str("project"),
+        },
+        "ListBatchJobs" => ApiRequest::ListBatchJobs {
+            site: site()?,
+            active_only: j.get("active_only").and_then(Json::as_bool).unwrap_or(false),
+        },
+        "UpdateBatchJob" => ApiRequest::UpdateBatchJob {
+            id: BatchJobId(j.get("id").and_then(Json::as_u64).ok_or("missing id")?),
+            state: bstate_from(&get_str("state")),
+            local_id: j.get("local_id").and_then(Json::as_u64),
+        },
+        "PendingTransferItems" => ApiRequest::PendingTransferItems {
+            site: site()?,
+            direction: dir_from(&get_str("direction")),
+            limit: j.get("limit").and_then(Json::as_u64).unwrap_or(0) as usize,
+        },
+        "UpdateTransferItems" => ApiRequest::UpdateTransferItems {
+            ids: j.get("ids").map(u64s_from_json).unwrap_or_default().into_iter().map(TransferItemId).collect(),
+            state: tstate_from(&get_str("state")),
+            task_id: j.get("task_id").and_then(Json::as_u64).map(XferTaskId),
+        },
+        "SiteBacklog" => ApiRequest::SiteBacklog { site: site()? },
+        "ListEvents" => ApiRequest::ListEvents {
+            since: j.get("since").and_then(Json::as_u64).unwrap_or(0) as usize,
+        },
+        other => return Err(format!("unknown request type {other}")),
+    })
+}
+
+fn job_to_json(job: &Job) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(job.id.0 as f64)),
+        ("site_id", Json::num(job.site_id.0 as f64)),
+        ("app_id", Json::num(job.app_id.0 as f64)),
+        ("state", Json::str(job.state.name())),
+        ("params", kv_to_json(&job.params)),
+        ("tags", kv_to_json(&job.tags)),
+        ("num_nodes", Json::num(job.num_nodes as f64)),
+        ("workload", Json::str(job.workload.clone())),
+        ("parents", ids_to_json(&job.parents, |p| p.0)),
+        ("attempts", Json::num(job.attempts as f64)),
+        ("max_attempts", Json::num(job.max_attempts as f64)),
+        ("session", job.session.map(|s| Json::num(s.0 as f64)).unwrap_or(Json::Null)),
+        ("created_at", Json::num(job.created_at)),
+    ])
+}
+
+fn job_from_json(j: &Json) -> Job {
+    Job {
+        id: JobId(j.get("id").and_then(Json::as_u64).unwrap_or(0)),
+        site_id: SiteId(j.get("site_id").and_then(Json::as_u64).unwrap_or(0)),
+        app_id: AppId(j.get("app_id").and_then(Json::as_u64).unwrap_or(0)),
+        state: j
+            .get("state")
+            .and_then(Json::as_str)
+            .and_then(JobState::from_name)
+            .unwrap_or(JobState::Created),
+        params: j.get("params").map(kv_from_json).unwrap_or_default(),
+        tags: j.get("tags").map(kv_from_json).unwrap_or_default(),
+        num_nodes: j.get("num_nodes").and_then(Json::as_u64).unwrap_or(1) as u32,
+        workload: j.get("workload").and_then(Json::as_str).unwrap_or("").into(),
+        parents: j.get("parents").map(u64s_from_json).unwrap_or_default().into_iter().map(JobId).collect(),
+        attempts: j.get("attempts").and_then(Json::as_u64).unwrap_or(0) as u32,
+        max_attempts: j.get("max_attempts").and_then(Json::as_u64).unwrap_or(3) as u32,
+        session: j.get("session").and_then(Json::as_u64).map(SessionId),
+        created_at: j.get("created_at").and_then(Json::as_f64).unwrap_or(0.0),
+    }
+}
+
+fn titem_to_json(t: &TransferItem) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(t.id.0 as f64)),
+        ("job_id", Json::num(t.job_id.0 as f64)),
+        ("site_id", Json::num(t.site_id.0 as f64)),
+        ("direction", Json::str(dir_name(t.direction))),
+        ("remote", Json::str(t.remote.clone())),
+        ("size_bytes", Json::num(t.size_bytes as f64)),
+        ("state", Json::str(tstate_name(t.state))),
+        ("task_id", t.task_id.map(|x| Json::num(x.0 as f64)).unwrap_or(Json::Null)),
+    ])
+}
+
+fn titem_from_json(j: &Json) -> TransferItem {
+    TransferItem {
+        id: TransferItemId(j.get("id").and_then(Json::as_u64).unwrap_or(0)),
+        job_id: JobId(j.get("job_id").and_then(Json::as_u64).unwrap_or(0)),
+        site_id: SiteId(j.get("site_id").and_then(Json::as_u64).unwrap_or(0)),
+        direction: dir_from(j.get("direction").and_then(Json::as_str).unwrap_or("in")),
+        remote: j.get("remote").and_then(Json::as_str).unwrap_or("").into(),
+        size_bytes: j.get("size_bytes").and_then(Json::as_u64).unwrap_or(0),
+        state: tstate_from(j.get("state").and_then(Json::as_str).unwrap_or("pending")),
+        task_id: j.get("task_id").and_then(Json::as_u64).map(XferTaskId),
+    }
+}
+
+fn batchjob_to_json(b: &BatchJob) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(b.id.0 as f64)),
+        ("site_id", Json::num(b.site_id.0 as f64)),
+        ("num_nodes", Json::num(b.num_nodes as f64)),
+        ("wall_time_s", Json::num(b.wall_time_s)),
+        ("mode", Json::str(mode_name(b.mode))),
+        ("queue", Json::str(b.queue.clone())),
+        ("project", Json::str(b.project.clone())),
+        ("state", Json::str(bstate_name(b.state))),
+        ("local_id", b.local_id.map(|x| Json::num(x as f64)).unwrap_or(Json::Null)),
+        ("created_at", Json::num(b.created_at)),
+        ("started_at", b.started_at.map(Json::num).unwrap_or(Json::Null)),
+        ("ended_at", b.ended_at.map(Json::num).unwrap_or(Json::Null)),
+    ])
+}
+
+fn batchjob_from_json(j: &Json) -> BatchJob {
+    BatchJob {
+        id: BatchJobId(j.get("id").and_then(Json::as_u64).unwrap_or(0)),
+        site_id: SiteId(j.get("site_id").and_then(Json::as_u64).unwrap_or(0)),
+        num_nodes: j.get("num_nodes").and_then(Json::as_u64).unwrap_or(0) as u32,
+        wall_time_s: j.get("wall_time_s").and_then(Json::as_f64).unwrap_or(0.0),
+        mode: mode_from(j.get("mode").and_then(Json::as_str).unwrap_or("mpi")),
+        queue: j.get("queue").and_then(Json::as_str).unwrap_or("").into(),
+        project: j.get("project").and_then(Json::as_str).unwrap_or("").into(),
+        state: bstate_from(j.get("state").and_then(Json::as_str).unwrap_or("pending")),
+        local_id: j.get("local_id").and_then(Json::as_u64),
+        created_at: j.get("created_at").and_then(Json::as_f64).unwrap_or(0.0),
+        started_at: j.get("started_at").and_then(Json::as_f64),
+        ended_at: j.get("ended_at").and_then(Json::as_f64),
+    }
+}
+
+fn event_to_json(e: &Event) -> Json {
+    Json::obj(vec![
+        ("job_id", Json::num(e.job_id.0 as f64)),
+        ("site_id", Json::num(e.site_id.0 as f64)),
+        ("ts", Json::num(e.ts)),
+        ("from", Json::str(e.from.name())),
+        ("to", Json::str(e.to.name())),
+        ("data", Json::str(e.data.clone())),
+    ])
+}
+
+fn event_from_json(j: &Json) -> Event {
+    Event {
+        job_id: JobId(j.get("job_id").and_then(Json::as_u64).unwrap_or(0)),
+        site_id: SiteId(j.get("site_id").and_then(Json::as_u64).unwrap_or(0)),
+        ts: j.get("ts").and_then(Json::as_f64).unwrap_or(0.0),
+        from: j.get("from").and_then(Json::as_str).and_then(JobState::from_name).unwrap_or(JobState::Created),
+        to: j.get("to").and_then(Json::as_str).and_then(JobState::from_name).unwrap_or(JobState::Created),
+        data: j.get("data").and_then(Json::as_str).unwrap_or("").into(),
+    }
+}
+
+pub fn response_to_json(resp: &ApiResponse) -> Json {
+    use ApiResponse::*;
+    let (ty, body) = match resp {
+        Unit => ("Unit", Json::Null),
+        UserId(x) => ("UserId", Json::num(x.0 as f64)),
+        SiteId(x) => ("SiteId", Json::num(x.0 as f64)),
+        AppId(x) => ("AppId", Json::num(x.0 as f64)),
+        JobIds(x) => ("JobIds", ids_to_json(x, |i| i.0)),
+        Jobs(x) => ("Jobs", Json::Arr(x.iter().map(job_to_json).collect())),
+        Counts(x) => (
+            "Counts",
+            Json::Arr(
+                x.iter()
+                    .map(|(s, n)| Json::arr([Json::str(s.name()), Json::num(*n as f64)]))
+                    .collect(),
+            ),
+        ),
+        SessionId(x) => ("SessionId", Json::num(x.0 as f64)),
+        BatchJobId(x) => ("BatchJobId", Json::num(x.0 as f64)),
+        BatchJobs(x) => ("BatchJobs", Json::Arr(x.iter().map(batchjob_to_json).collect())),
+        TransferItems(x) => ("TransferItems", Json::Arr(x.iter().map(titem_to_json).collect())),
+        Backlog(b) => (
+            "Backlog",
+            Json::obj(vec![
+                ("backlog_jobs", Json::num(b.backlog_jobs as f64)),
+                ("runnable_nodes", Json::num(b.runnable_nodes as f64)),
+                ("inflight_nodes", Json::num(b.inflight_nodes as f64)),
+                ("batch_nodes", Json::num(b.batch_nodes as f64)),
+            ]),
+        ),
+        Events(x) => ("Events", Json::Arr(x.iter().map(event_to_json).collect())),
+    };
+    Json::obj(vec![("ok", Json::Bool(true)), ("type", Json::str(ty)), ("body", body)])
+}
+
+pub fn response_from_json(j: &Json) -> Result<ApiResponse, ApiError> {
+    if j.get("ok").and_then(Json::as_bool) != Some(true) {
+        let msg = j.get("error").and_then(Json::as_str).unwrap_or("unknown").to_string();
+        return Err(ApiError::Transport(msg));
+    }
+    let ty = j.get("type").and_then(Json::as_str).unwrap_or("");
+    let b = j.get("body").unwrap_or(&Json::Null);
+    let u = |b: &Json| b.as_u64().unwrap_or(0);
+    Ok(match ty {
+        "Unit" => ApiResponse::Unit,
+        "UserId" => ApiResponse::UserId(UserId(u(b))),
+        "SiteId" => ApiResponse::SiteId(SiteId(u(b))),
+        "AppId" => ApiResponse::AppId(AppId(u(b))),
+        "SessionId" => ApiResponse::SessionId(SessionId(u(b))),
+        "BatchJobId" => ApiResponse::BatchJobId(BatchJobId(u(b))),
+        "JobIds" => ApiResponse::JobIds(u64s_from_json(b).into_iter().map(JobId).collect()),
+        "Jobs" => ApiResponse::Jobs(b.as_arr().unwrap_or(&[]).iter().map(job_from_json).collect()),
+        "Counts" => ApiResponse::Counts(
+            b.as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|p| {
+                    Some((
+                        JobState::from_name(p.idx(0)?.as_str()?)?,
+                        p.idx(1)?.as_u64()? as usize,
+                    ))
+                })
+                .collect(),
+        ),
+        "BatchJobs" => {
+            ApiResponse::BatchJobs(b.as_arr().unwrap_or(&[]).iter().map(batchjob_from_json).collect())
+        }
+        "TransferItems" => {
+            ApiResponse::TransferItems(b.as_arr().unwrap_or(&[]).iter().map(titem_from_json).collect())
+        }
+        "Backlog" => ApiResponse::Backlog(Backlog {
+            backlog_jobs: b.get("backlog_jobs").and_then(Json::as_u64).unwrap_or(0) as usize,
+            runnable_nodes: b.get("runnable_nodes").and_then(Json::as_u64).unwrap_or(0) as u32,
+            inflight_nodes: b.get("inflight_nodes").and_then(Json::as_u64).unwrap_or(0) as u32,
+            batch_nodes: b.get("batch_nodes").and_then(Json::as_u64).unwrap_or(0) as u32,
+        }),
+        "Events" => ApiResponse::Events(b.as_arr().unwrap_or(&[]).iter().map(event_from_json).collect()),
+        other => return Err(ApiError::Transport(format!("unknown response type {other}"))),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Server + client
+// ---------------------------------------------------------------------------
+
+/// Run a [`ServiceCore`] behind the HTTP gateway. Timestamps are wall-clock
+/// seconds since server start, so event-log analysis works identically to
+/// simulated mode.
+pub fn serve(service: Arc<Mutex<ServiceCore>>, addr: &str) -> crate::Result<Server> {
+    let t0 = Instant::now();
+    Server::serve(addr, move |req: Request| {
+        let now = t0.elapsed().as_secs_f64();
+        let token = req
+            .header("authorization")
+            .and_then(|h| h.strip_prefix("Bearer "))
+            .unwrap_or("")
+            .to_string();
+        if req.method != "POST" || req.path != "/api" {
+            return Response::error(404, "POST /api only");
+        }
+        let parsed = match Json::parse(&req.body_str()) {
+            Ok(j) => j,
+            Err(e) => return Response::error(400, &format!("bad json: {e}")),
+        };
+        let api_req = match request_from_json(&parsed) {
+            Ok(r) => r,
+            Err(e) => return Response::error(400, &e),
+        };
+        let result = service.lock().unwrap().handle(now, &token, api_req);
+        match result {
+            Ok(resp) => Response::ok_json(response_to_json(&resp).to_string()),
+            Err(e) => {
+                let body = Json::obj(vec![
+                    ("ok", Json::Bool(false)),
+                    ("error", Json::str(e.to_string())),
+                ]);
+                let status = match e {
+                    ApiError::Unauthorized => 401,
+                    ApiError::NotFound(_) => 404,
+                    _ => 400,
+                };
+                Response { status, body: body.to_string().into_bytes(), content_type: "application/json" }
+            }
+        }
+    })
+}
+
+/// Client-side [`ApiConn`] over HTTP — what every remote Balsam component
+/// uses in real-time mode.
+pub struct HttpConn {
+    pub addr: String,
+}
+
+impl ApiConn for HttpConn {
+    fn api(&mut self, token: &str, req: ApiRequest) -> Result<ApiResponse, ApiError> {
+        let body = request_to_json(&req).to_string();
+        let (status, text) = httpd::post_json(&self.addr, "/api", token, &body)
+            .map_err(|e| ApiError::Transport(e.to_string()))?;
+        let parsed = Json::parse(&text).map_err(|e| ApiError::Transport(e.to_string()))?;
+        if status == 200 {
+            response_from_json(&parsed)
+        } else {
+            let msg = parsed.get("error").and_then(Json::as_str).unwrap_or("unknown").to_string();
+            Err(match status {
+                401 => ApiError::Unauthorized,
+                404 => ApiError::NotFound(msg),
+                _ => ApiError::BadRequest(msg),
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_json_roundtrip() {
+        let reqs = vec![
+            ApiRequest::CreateSite { name: "theta".into(), hostname: "h".into(), path: "/p".into() },
+            ApiRequest::SessionAcquire { session: SessionId(9), max_nodes: 32, max_jobs: 64 },
+            ApiRequest::UpdateJobState { job: JobId(3), to: JobState::Running, data: "x".into() },
+            ApiRequest::PendingTransferItems {
+                site: SiteId(1),
+                direction: Direction::Out,
+                limit: 16,
+            },
+            ApiRequest::BulkCreateJobs {
+                jobs: vec![JobCreate {
+                    site_id: SiteId(2),
+                    app: "EigenCorr".into(),
+                    workload: "xpcs".into(),
+                    num_nodes: 1,
+                    params: vec![("h5".into(), "inp.h5".into())],
+                    tags: vec![("experiment".into(), "XPCS".into())],
+                    transfers_in: vec![("APS".into(), 878_000_000)],
+                    transfers_out: vec![("APS".into(), 55_000_000)],
+                    parents: vec![JobId(1)],
+                }],
+            },
+        ];
+        for req in reqs {
+            let j = request_to_json(&req);
+            let back = request_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+            // Compare via re-serialization (no PartialEq on ApiRequest).
+            assert_eq!(j.to_string(), request_to_json(&back).to_string());
+        }
+    }
+
+    #[test]
+    fn response_json_roundtrip() {
+        let resps = vec![
+            ApiResponse::Unit,
+            ApiResponse::JobIds(vec![JobId(1), JobId(2)]),
+            ApiResponse::Backlog(Backlog {
+                backlog_jobs: 5,
+                runnable_nodes: 3,
+                inflight_nodes: 2,
+                batch_nodes: 16,
+            }),
+            ApiResponse::Counts(vec![(JobState::Ready, 4)]),
+        ];
+        for resp in resps {
+            let j = response_to_json(&resp);
+            let back = response_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+            assert_eq!(j.to_string(), response_to_json(&back).to_string());
+        }
+    }
+
+    #[test]
+    fn end_to_end_over_sockets() {
+        let svc = Arc::new(Mutex::new(ServiceCore::new(b"k")));
+        let tok = svc.lock().unwrap().admin_token();
+        let server = serve(svc.clone(), "127.0.0.1:0").unwrap();
+        let mut conn = HttpConn { addr: server.addr.clone() };
+
+        let site = conn
+            .api(&tok, ApiRequest::CreateSite { name: "cori".into(), hostname: "c".into(), path: "/p".into() })
+            .unwrap()
+            .site_id();
+        conn.api(&tok, ApiRequest::RegisterApp {
+            site,
+            name: "MD".into(),
+            command_template: "md {n}".into(),
+            parameters: vec!["n".into()],
+        })
+        .unwrap();
+        let ids = conn
+            .api(&tok, ApiRequest::BulkCreateJobs { jobs: vec![JobCreate::simple(site, "MD", "md_small")] })
+            .unwrap()
+            .job_ids();
+        assert_eq!(ids.len(), 1);
+        let jobs = conn
+            .api(&tok, ApiRequest::ListJobs { filter: JobFilter { site: Some(site), ..Default::default() } })
+            .unwrap()
+            .jobs();
+        assert_eq!(jobs[0].state, JobState::Preprocessed);
+
+        // Bad token comes back as Unauthorized over the wire.
+        let err = conn.api("balsam.1.bad", ApiRequest::SiteBacklog { site }).unwrap_err();
+        assert_eq!(err, ApiError::Unauthorized);
+        server.stop();
+    }
+}

@@ -1,0 +1,25 @@
+//! The Balsam central service (paper §3.1).
+//!
+//! A centrally-hosted, multi-tenant bookkeeping service: the root of the
+//! relational data model (Users → Sites → Apps → Jobs, plus BatchJobs,
+//! TransferItems, Sessions and the EventLog), fronted by a typed REST-ish
+//! API. The service is *passive*: sites and clients drive all state
+//! changes; the only autonomous behaviour is session-lease expiry, which
+//! recovers jobs from ungracefully-terminated launchers (§4.4).
+//!
+//! In simulated mode the service is called in-process; in real-time mode
+//! the same [`core::ServiceCore`] sits behind the HTTP gateway
+//! ([`http_gw`]) and is exercised over sockets, like the hosted AWS
+//! deployment in the paper.
+
+pub mod models;
+pub mod state;
+pub mod store;
+pub mod api;
+pub mod core;
+pub mod auth;
+pub mod http_gw;
+
+pub use api::{ApiConn, ApiError, ApiRequest, ApiResponse, JobCreate, JobFilter};
+pub use core::ServiceCore;
+pub use models::*;

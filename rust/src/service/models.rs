@@ -1,0 +1,299 @@
+//! The Balsam relational data model (paper §3.1, REST API schema [3]).
+
+use std::collections::BTreeSet;
+
+macro_rules! id_type {
+    ($(#[$doc:meta])* $name:ident) => {
+        $(#[$doc])*
+        #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+        pub struct $name(pub u64);
+
+        impl std::fmt::Display for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(f, "{}", self.0)
+            }
+        }
+    };
+}
+
+id_type!(
+    /// Root entity: every Site belongs to a User (multi-tenancy).
+    UserId
+);
+id_type!(
+    /// A user-owned execution endpoint (hostname + site directory).
+    SiteId
+);
+id_type!(
+    /// An indexed ApplicationDefinition at a Site.
+    AppId
+);
+id_type!(
+    /// A fine-grained task: one invocation of an App at a Site.
+    JobId
+);
+id_type!(
+    /// A pilot-job resource allocation at a Site.
+    BatchJobId
+);
+id_type!(
+    /// A standalone unit of data transfer between a Site and a remote endpoint.
+    TransferItemId
+);
+id_type!(
+    /// A launcher's lease on acquired jobs, kept alive by heartbeats.
+    SessionId
+);
+id_type!(
+    /// A Globus-like transfer-task id (site-local handle).
+    XferTaskId
+);
+
+/// Persistent job lifecycle states (paper §3.1 "Jobs carry persistent
+/// states"; names follow the Balsam REST API enumeration).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum JobState {
+    Created,
+    AwaitingParents,
+    /// Waiting for stage-in transfers.
+    Ready,
+    /// Input data has arrived at the site.
+    StagedIn,
+    /// Site-side preprocessing done; runnable by a launcher.
+    Preprocessed,
+    Running,
+    RunDone,
+    /// Site-side postprocessing done; stage-out may begin.
+    Postprocessed,
+    /// Round trip complete (results delivered to the client endpoint).
+    JobFinished,
+    RunError,
+    /// Launcher died / allocation expired while running.
+    RunTimeout,
+    /// Reset by the service or site for another attempt.
+    RestartReady,
+    Failed,
+}
+
+impl JobState {
+    pub const ALL: [JobState; 13] = [
+        JobState::Created,
+        JobState::AwaitingParents,
+        JobState::Ready,
+        JobState::StagedIn,
+        JobState::Preprocessed,
+        JobState::Running,
+        JobState::RunDone,
+        JobState::Postprocessed,
+        JobState::JobFinished,
+        JobState::RunError,
+        JobState::RunTimeout,
+        JobState::RestartReady,
+        JobState::Failed,
+    ];
+
+    /// Terminal states: no further transitions.
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobState::JobFinished | JobState::Failed)
+    }
+
+    /// States from which a launcher may acquire the job for execution.
+    pub fn is_runnable(self) -> bool {
+        matches!(self, JobState::Preprocessed | JobState::RestartReady)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            JobState::Created => "CREATED",
+            JobState::AwaitingParents => "AWAITING_PARENTS",
+            JobState::Ready => "READY",
+            JobState::StagedIn => "STAGED_IN",
+            JobState::Preprocessed => "PREPROCESSED",
+            JobState::Running => "RUNNING",
+            JobState::RunDone => "RUN_DONE",
+            JobState::Postprocessed => "POSTPROCESSED",
+            JobState::JobFinished => "JOB_FINISHED",
+            JobState::RunError => "RUN_ERROR",
+            JobState::RunTimeout => "RUN_TIMEOUT",
+            JobState::RestartReady => "RESTART_READY",
+            JobState::Failed => "FAILED",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<JobState> {
+        JobState::ALL.iter().copied().find(|st| st.name() == s)
+    }
+}
+
+impl std::fmt::Display for JobState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct User {
+    pub id: UserId,
+    pub name: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Site {
+    pub id: SiteId,
+    pub owner: UserId,
+    /// e.g. "theta", "summit", "cori" — must match a facility name.
+    pub name: String,
+    pub hostname: String,
+    pub path: String,
+}
+
+/// Server-side index of a site's ApplicationDefinition (paper §3.1: the
+/// service stores only metadata; the executable template lives at the
+/// site, so maliciously submitted App data cannot alter local execution).
+#[derive(Debug, Clone)]
+pub struct App {
+    pub id: AppId,
+    pub site_id: SiteId,
+    pub name: String,
+    pub command_template: String,
+    pub parameters: Vec<String>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Direction {
+    In,
+    Out,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum TransferState {
+    Pending,
+    Active,
+    Done,
+    Error,
+}
+
+/// A file/directory that must be staged in or out for a Job.
+#[derive(Debug, Clone)]
+pub struct TransferItem {
+    pub id: TransferItemId,
+    pub job_id: JobId,
+    pub site_id: SiteId,
+    pub direction: Direction,
+    /// Remote endpoint name (e.g. "APS", "ALS") — protocol-specific URI in
+    /// the real system, facility name in the simulator.
+    pub remote: String,
+    pub size_bytes: u64,
+    pub state: TransferState,
+    /// Globus-like task UUID registered by the site transfer module.
+    pub task_id: Option<XferTaskId>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: JobId,
+    pub site_id: SiteId,
+    pub app_id: AppId,
+    pub state: JobState,
+    pub params: Vec<(String, String)>,
+    pub tags: Vec<(String, String)>,
+    pub num_nodes: u32,
+    /// Workload class consumed by the execution backend (e.g. "md_small").
+    pub workload: String,
+    pub parents: Vec<JobId>,
+    pub attempts: u32,
+    pub max_attempts: u32,
+    /// Session currently holding this job, if any.
+    pub session: Option<SessionId>,
+    pub created_at: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum BatchJobState {
+    /// Created via API, not yet submitted to the local scheduler.
+    Pending,
+    Queued,
+    Running,
+    Finished,
+    /// Deleted before starting (e.g. elastic-queue wait timeout).
+    Deleted,
+}
+
+/// Pilot-job execution mode (paper §4.5: `mpi` spawns one app-run per job;
+/// `serial` packs single-node jobs into one master per node).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobMode {
+    Mpi,
+    Serial,
+}
+
+/// A resource allocation request / pilot job (paper §3.1 "Balsam BatchJob").
+#[derive(Debug, Clone)]
+pub struct BatchJob {
+    pub id: BatchJobId,
+    pub site_id: SiteId,
+    pub num_nodes: u32,
+    pub wall_time_s: f64,
+    pub mode: JobMode,
+    pub queue: String,
+    pub project: String,
+    pub state: BatchJobState,
+    /// Local scheduler id once submitted.
+    pub local_id: Option<u64>,
+    pub created_at: f64,
+    pub started_at: Option<f64>,
+    pub ended_at: Option<f64>,
+}
+
+/// A launcher's lease (paper §3.1 "Session"): guarantees exclusive job
+/// acquisition and enables crash recovery via heartbeat expiry.
+#[derive(Debug, Clone)]
+pub struct Session {
+    pub id: SessionId,
+    pub site_id: SiteId,
+    pub batch_job_id: Option<BatchJobId>,
+    pub heartbeat_at: f64,
+    pub acquired: BTreeSet<JobId>,
+    pub ended: bool,
+}
+
+/// One job lifecycle event (paper §4.1.4: "The Balsam service stores Balsam
+/// Job events with timestamps recorded at the job execution site").
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub job_id: JobId,
+    pub site_id: SiteId,
+    pub ts: f64,
+    pub from: JobState,
+    pub to: JobState,
+    pub data: String,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_names_roundtrip() {
+        for s in JobState::ALL {
+            assert_eq!(JobState::from_name(s.name()), Some(s));
+        }
+        assert_eq!(JobState::from_name("NOPE"), None);
+    }
+
+    #[test]
+    fn terminal_and_runnable_classification() {
+        assert!(JobState::JobFinished.is_terminal());
+        assert!(JobState::Failed.is_terminal());
+        assert!(!JobState::Running.is_terminal());
+        assert!(JobState::Preprocessed.is_runnable());
+        assert!(JobState::RestartReady.is_runnable());
+        assert!(!JobState::Running.is_runnable());
+        assert!(!JobState::StagedIn.is_runnable());
+    }
+
+    #[test]
+    fn id_display() {
+        assert_eq!(JobId(42).to_string(), "42");
+    }
+}

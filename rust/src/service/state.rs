@@ -1,0 +1,117 @@
+//! Job state machine: the legal lifecycle transitions.
+//!
+//! The service rejects illegal transitions (defense against buggy or
+//! malicious clients — only specific edges are client/site drivable). The
+//! graph mirrors the Balsam REST API state enumeration:
+//!
+//! ```text
+//! CREATED ─► AWAITING_PARENTS ─► READY ─► STAGED_IN ─► PREPROCESSED ─► RUNNING
+//!    │               │            ▲                        ▲             │
+//!    └───────────────┴────────────┘     RESTART_READY ─────┘        ┌────┴────┐
+//!                                            ▲  ▲                RUN_DONE  RUN_ERROR / RUN_TIMEOUT
+//!                                            │  └──────────────────┼─────────┘
+//!                                            │                 POSTPROCESSED ─► JOB_FINISHED
+//!                                            └─ (retry budget left)        └─► FAILED
+//! ```
+
+use super::models::JobState;
+
+/// Is `from -> to` a legal edge in the job lifecycle?
+pub fn legal(from: JobState, to: JobState) -> bool {
+    use JobState::*;
+    matches!(
+        (from, to),
+        (Created, AwaitingParents)
+            | (Created, Ready)
+            | (Created, StagedIn)          // no stage-in items
+            | (AwaitingParents, Ready)
+            | (AwaitingParents, StagedIn)
+            | (AwaitingParents, Failed)    // parent failed
+            | (Ready, StagedIn)
+            | (Ready, Failed)              // stage-in error budget exhausted
+            | (StagedIn, Preprocessed)
+            | (StagedIn, Failed)
+            | (Preprocessed, Running)
+            | (Running, RunDone)
+            | (Running, RunError)
+            | (Running, RunTimeout)
+            | (RunDone, Postprocessed)
+            | (Postprocessed, JobFinished)
+            | (RunError, RestartReady)
+            | (RunError, Failed)
+            | (RunTimeout, RestartReady)
+            | (RunTimeout, Failed)
+            | (RestartReady, Running)
+            | (RestartReady, Failed)
+    )
+}
+
+/// All legal successor states of `from`.
+pub fn successors(from: JobState) -> Vec<JobState> {
+    JobState::ALL.iter().copied().filter(|&to| legal(from, to)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use JobState::*;
+
+    #[test]
+    fn happy_path_is_legal() {
+        let path = [Created, Ready, StagedIn, Preprocessed, Running, RunDone, Postprocessed, JobFinished];
+        for w in path.windows(2) {
+            assert!(legal(w[0], w[1]), "{} -> {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn fault_and_recovery_path_is_legal() {
+        for w in [Running, RunTimeout, RestartReady, Running, RunError, RestartReady].windows(2) {
+            assert!(legal(w[0], w[1]), "{} -> {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn terminal_states_have_no_exits() {
+        for s in [JobFinished, Failed] {
+            assert!(successors(s).is_empty(), "{s} should be terminal");
+        }
+    }
+
+    #[test]
+    fn cannot_skip_staging() {
+        assert!(!legal(Ready, Running));
+        assert!(!legal(Created, Running));
+        assert!(!legal(StagedIn, Running)); // must preprocess first
+    }
+
+    #[test]
+    fn cannot_unfinish() {
+        assert!(!legal(JobFinished, Running));
+        assert!(!legal(Postprocessed, Running));
+    }
+
+    #[test]
+    fn every_nonterminal_has_an_exit() {
+        for s in JobState::ALL {
+            if !s.is_terminal() {
+                assert!(!successors(s).is_empty(), "{s} is a dead end");
+            }
+        }
+    }
+
+    #[test]
+    fn every_state_reachable_from_created() {
+        // BFS over the legal graph.
+        let mut seen = std::collections::BTreeSet::new();
+        let mut queue = vec![Created];
+        while let Some(s) = queue.pop() {
+            if seen.insert(s) {
+                queue.extend(successors(s));
+            }
+        }
+        for s in JobState::ALL {
+            assert!(seen.contains(&s), "{s} unreachable");
+        }
+    }
+}

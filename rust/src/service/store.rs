@@ -1,0 +1,354 @@
+//! Relational in-memory store (substrate replacing PostgreSQL).
+//!
+//! Tables are `BTreeMap<Id, Row>` with maintained secondary indexes on the
+//! hot query paths the paper calls out: *"runnable Jobs are appropriately
+//! indexed in the underlying PostgreSQL database [so] the response time of
+//! this endpoint is largely consistent with respect to increasing number
+//! of submitted Jobs"* (§4.5). Index coherence is asserted in tests and
+//! property-checked in `rust/tests/prop_coordinator.rs`.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::models::*;
+
+/// All service tables + indexes. Mutations MUST go through the provided
+/// methods so indexes stay coherent.
+#[derive(Debug, Default)]
+pub struct Store {
+    next_id: u64,
+    pub users: BTreeMap<UserId, User>,
+    pub sites: BTreeMap<SiteId, Site>,
+    pub apps: BTreeMap<AppId, App>,
+    jobs: BTreeMap<JobId, Job>,
+    pub batch_jobs: BTreeMap<BatchJobId, BatchJob>,
+    titems: BTreeMap<TransferItemId, TransferItem>,
+    pub sessions: BTreeMap<SessionId, Session>,
+    pub events: Vec<Event>,
+
+    // Secondary indexes (hot paths).
+    jobs_by_site_state: BTreeMap<(SiteId, JobState), BTreeSet<JobId>>,
+    children_by_parent: BTreeMap<JobId, Vec<JobId>>,
+    titems_by_site: BTreeMap<(SiteId, Direction, TransferState), BTreeSet<TransferItemId>>,
+    titems_by_job: BTreeMap<JobId, Vec<TransferItemId>>,
+}
+
+impl Store {
+    pub fn new() -> Store {
+        Store::default()
+    }
+
+    pub fn fresh_id(&mut self) -> u64 {
+        self.next_id += 1;
+        self.next_id
+    }
+
+    // ----- jobs ---------------------------------------------------------
+
+    pub fn insert_job(&mut self, job: Job) {
+        self.jobs_by_site_state.entry((job.site_id, job.state)).or_default().insert(job.id);
+        for &p in &job.parents {
+            self.children_by_parent.entry(p).or_default().push(job.id);
+        }
+        self.jobs.insert(job.id, job);
+    }
+
+    pub fn job(&self, id: JobId) -> Option<&Job> {
+        self.jobs.get(&id)
+    }
+
+    pub fn jobs_iter(&self) -> impl Iterator<Item = &Job> {
+        self.jobs.values()
+    }
+
+    pub fn job_count(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn children_of(&self, parent: JobId) -> &[JobId] {
+        self.children_by_parent.get(&parent).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Move a job to `to`, updating indexes and appending an event.
+    /// The caller is responsible for having checked transition legality.
+    pub fn set_job_state(&mut self, id: JobId, to: JobState, ts: f64, data: &str) {
+        let job = self.jobs.get_mut(&id).expect("set_job_state: unknown job");
+        let from = job.state;
+        if from == to {
+            return;
+        }
+        job.state = to;
+        let site = job.site_id;
+        if let Some(set) = self.jobs_by_site_state.get_mut(&(site, from)) {
+            set.remove(&id);
+        }
+        self.jobs_by_site_state.entry((site, to)).or_default().insert(id);
+        self.events.push(Event { job_id: id, site_id: site, ts, from, to, data: data.to_string() });
+    }
+
+    pub fn job_mut(&mut self, id: JobId) -> Option<&mut Job> {
+        // NOTE: callers must not mutate `state` or `site_id` through this —
+        // use set_job_state. Exposed for session/attempt bookkeeping.
+        self.jobs.get_mut(&id)
+    }
+
+    /// Ids of jobs at `site` in `state` (index lookup, O(log n)).
+    pub fn jobs_in_state(&self, site: SiteId, state: JobState) -> Vec<JobId> {
+        self.jobs_by_site_state
+            .get(&(site, state))
+            .map(|s| s.iter().copied().collect())
+            .unwrap_or_default()
+    }
+
+    pub fn count_in_state(&self, site: SiteId, state: JobState) -> usize {
+        self.jobs_by_site_state.get(&(site, state)).map(BTreeSet::len).unwrap_or(0)
+    }
+
+    // ----- transfer items -------------------------------------------------
+
+    pub fn insert_titem(&mut self, item: TransferItem) {
+        self.titems_by_site
+            .entry((item.site_id, item.direction, item.state))
+            .or_default()
+            .insert(item.id);
+        self.titems_by_job.entry(item.job_id).or_default().push(item.id);
+        self.titems.insert(item.id, item);
+    }
+
+    pub fn titem(&self, id: TransferItemId) -> Option<&TransferItem> {
+        self.titems.get(&id)
+    }
+
+    pub fn titems_iter(&self) -> impl Iterator<Item = &TransferItem> {
+        self.titems.values()
+    }
+
+    pub fn titems_for_job(&self, job: JobId) -> Vec<&TransferItem> {
+        self.titems_by_job
+            .get(&job)
+            .map(|v| v.iter().map(|id| &self.titems[id]).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn titems_in_state(
+        &self,
+        site: SiteId,
+        dir: Direction,
+        state: TransferState,
+        limit: usize,
+    ) -> Vec<TransferItemId> {
+        self.titems_by_site
+            .get(&(site, dir, state))
+            .map(|s| s.iter().take(limit).copied().collect())
+            .unwrap_or_default()
+    }
+
+    pub fn set_titem_state(
+        &mut self,
+        id: TransferItemId,
+        state: TransferState,
+        task_id: Option<XferTaskId>,
+    ) {
+        let item = self.titems.get_mut(&id).expect("set_titem_state: unknown item");
+        let old = item.state;
+        if let Some(t) = task_id {
+            item.task_id = Some(t);
+        }
+        if old == state {
+            return;
+        }
+        let key_old = (item.site_id, item.direction, old);
+        let key_new = (item.site_id, item.direction, state);
+        item.state = state;
+        if let Some(set) = self.titems_by_site.get_mut(&key_old) {
+            set.remove(&id);
+        }
+        self.titems_by_site.entry(key_new).or_default().insert(id);
+    }
+
+    /// Are all transfer items of `job` in `dir` Done?
+    pub fn transfers_complete(&self, job: JobId, dir: Direction) -> bool {
+        self.titems_for_job(job)
+            .iter()
+            .filter(|t| t.direction == dir)
+            .all(|t| t.state == TransferState::Done)
+    }
+
+    // ----- diagnostics ----------------------------------------------------
+
+    /// Full index-coherence check (used by tests/properties).
+    pub fn check_indexes(&self) -> Result<(), String> {
+        for (key, set) in &self.jobs_by_site_state {
+            for id in set {
+                let j = self.jobs.get(id).ok_or(format!("index {key:?} has ghost job {id}"))?;
+                if (j.site_id, j.state) != *key {
+                    return Err(format!("job {id} indexed under {key:?} but is {:?}", (j.site_id, j.state)));
+                }
+            }
+        }
+        for j in self.jobs.values() {
+            let ok = self
+                .jobs_by_site_state
+                .get(&(j.site_id, j.state))
+                .map(|s| s.contains(&j.id))
+                .unwrap_or(false);
+            if !ok {
+                return Err(format!("job {} missing from index", j.id));
+            }
+        }
+        for (key, set) in &self.titems_by_site {
+            for id in set {
+                let t = self.titems.get(id).ok_or(format!("ghost titem {id}"))?;
+                if (t.site_id, t.direction, t.state) != *key {
+                    return Err(format!("titem {id} mis-indexed"));
+                }
+            }
+        }
+        for t in self.titems.values() {
+            let ok = self
+                .titems_by_site
+                .get(&(t.site_id, t.direction, t.state))
+                .map(|s| s.contains(&t.id))
+                .unwrap_or(false);
+            if !ok {
+                return Err(format!("titem {} missing from index", t.id));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_job(store: &mut Store, site: SiteId, state: JobState) -> JobId {
+        let id = JobId(store.fresh_id());
+        store.insert_job(Job {
+            id,
+            site_id: site,
+            app_id: AppId(1),
+            state: JobState::Created,
+            params: vec![],
+            tags: vec![],
+            num_nodes: 1,
+            workload: "md_small".into(),
+            parents: vec![],
+            attempts: 0,
+            max_attempts: 3,
+            session: None,
+            created_at: 0.0,
+        });
+        if state != JobState::Created {
+            store.set_job_state(id, state, 1.0, "");
+        }
+        id
+    }
+
+    #[test]
+    fn state_index_tracks_transitions() {
+        let mut s = Store::new();
+        let site = SiteId(1);
+        let a = mk_job(&mut s, site, JobState::Ready);
+        let b = mk_job(&mut s, site, JobState::Ready);
+        assert_eq!(s.jobs_in_state(site, JobState::Ready), vec![a, b]);
+        s.set_job_state(a, JobState::StagedIn, 2.0, "");
+        assert_eq!(s.jobs_in_state(site, JobState::Ready), vec![b]);
+        assert_eq!(s.jobs_in_state(site, JobState::StagedIn), vec![a]);
+        assert_eq!(s.count_in_state(site, JobState::StagedIn), 1);
+        s.check_indexes().unwrap();
+    }
+
+    #[test]
+    fn events_appended_per_transition() {
+        let mut s = Store::new();
+        let site = SiteId(1);
+        let a = mk_job(&mut s, site, JobState::Ready);
+        s.set_job_state(a, JobState::StagedIn, 5.0, "globus");
+        assert_eq!(s.events.len(), 2);
+        let e = &s.events[1];
+        assert_eq!((e.from, e.to, e.ts), (JobState::Ready, JobState::StagedIn, 5.0));
+        assert_eq!(e.data, "globus");
+    }
+
+    #[test]
+    fn noop_transition_is_silent() {
+        let mut s = Store::new();
+        let a = mk_job(&mut s, SiteId(1), JobState::Ready);
+        let before = s.events.len();
+        s.set_job_state(a, JobState::Ready, 9.0, "");
+        assert_eq!(s.events.len(), before);
+    }
+
+    #[test]
+    fn titem_index_and_completion() {
+        let mut s = Store::new();
+        let site = SiteId(1);
+        let j = mk_job(&mut s, site, JobState::Ready);
+        let t1 = TransferItemId(s.fresh_id());
+        let t2 = TransferItemId(s.fresh_id());
+        for (id, dir) in [(t1, Direction::In), (t2, Direction::Out)] {
+            s.insert_titem(TransferItem {
+                id,
+                job_id: j,
+                site_id: site,
+                direction: dir,
+                remote: "APS".into(),
+                size_bytes: 100,
+                state: TransferState::Pending,
+                task_id: None,
+            });
+        }
+        assert_eq!(s.titems_in_state(site, Direction::In, TransferState::Pending, 10), vec![t1]);
+        assert!(!s.transfers_complete(j, Direction::In));
+        s.set_titem_state(t1, TransferState::Active, Some(XferTaskId(7)));
+        s.set_titem_state(t1, TransferState::Done, None);
+        assert!(s.transfers_complete(j, Direction::In));
+        assert!(!s.transfers_complete(j, Direction::Out));
+        assert_eq!(s.titem(t1).unwrap().task_id, Some(XferTaskId(7)));
+        s.check_indexes().unwrap();
+    }
+
+    #[test]
+    fn limit_respected() {
+        let mut s = Store::new();
+        let site = SiteId(1);
+        let j = mk_job(&mut s, site, JobState::Ready);
+        for _ in 0..10 {
+            let id = TransferItemId(s.fresh_id());
+            s.insert_titem(TransferItem {
+                id,
+                job_id: j,
+                site_id: site,
+                direction: Direction::In,
+                remote: "APS".into(),
+                size_bytes: 1,
+                state: TransferState::Pending,
+                task_id: None,
+            });
+        }
+        assert_eq!(s.titems_in_state(site, Direction::In, TransferState::Pending, 3).len(), 3);
+    }
+
+    #[test]
+    fn children_index() {
+        let mut s = Store::new();
+        let p = mk_job(&mut s, SiteId(1), JobState::Ready);
+        let c = JobId(s.fresh_id());
+        s.insert_job(Job {
+            id: c,
+            site_id: SiteId(1),
+            app_id: AppId(1),
+            state: JobState::AwaitingParents,
+            params: vec![],
+            tags: vec![],
+            num_nodes: 1,
+            workload: "md_small".into(),
+            parents: vec![p],
+            attempts: 0,
+            max_attempts: 3,
+            session: None,
+            created_at: 0.0,
+        });
+        assert_eq!(s.children_of(p), &[c]);
+    }
+}

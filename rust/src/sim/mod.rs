@@ -1,0 +1,190 @@
+//! Discrete-event simulation engine.
+//!
+//! The paper's experiments span 19–80 wall-clock minutes across five
+//! facilities; the engine replays them in milliseconds by advancing a
+//! virtual clock between actor wake-ups. Actors (site agents, clients,
+//! fault injectors) are polled state machines: `wake(now, world)` performs
+//! one synchronization step and returns the absolute time of the next one.
+//!
+//! The same actor code runs against wall-clock time in the real-mode
+//! examples (see [`Engine::run_realtime`]), which is what makes the
+//! simulated results credible: nothing in the coordinator logic knows
+//! which clock is driving it.
+
+use crate::world::World;
+
+/// A polled coordinator component (site agent, client, fault injector...).
+pub trait Actor {
+    /// Short name for traces.
+    fn name(&self) -> String;
+
+    /// Perform one step at `now`; return the absolute next wake time
+    /// (`f64::INFINITY` to sleep forever).
+    fn wake(&mut self, now: f64, world: &mut World) -> f64;
+}
+
+/// Cooperative scheduler over actors and a [`World`].
+pub struct Engine {
+    actors: Vec<(f64, Box<dyn Actor>)>,
+    pub now: f64,
+    /// Wake-call counter (exposed for the §Perf benches).
+    pub wakes: u64,
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Engine {
+    pub fn new() -> Engine {
+        Engine { actors: Vec::new(), now: 0.0, wakes: 0 }
+    }
+
+    /// Register an actor; it gets its first wake at the current time.
+    pub fn add(&mut self, actor: Box<dyn Actor>) {
+        self.actors.push((self.now, actor));
+    }
+
+    /// Next scheduled wake time across all actors.
+    pub fn next_wake(&self) -> f64 {
+        self.actors.iter().map(|(t, _)| *t).fold(f64::INFINITY, f64::min)
+    }
+
+    /// Advance simulated time until `t_end`, waking actors in time order.
+    /// Actors scheduled for the same instant run in registration order
+    /// (deterministic).
+    pub fn run_until(&mut self, world: &mut World, t_end: f64) {
+        loop {
+            let t = self.next_wake();
+            if !t.is_finite() || t > t_end {
+                self.now = t_end;
+                world.now = t_end;
+                return;
+            }
+            self.now = t;
+            world.now = t;
+            for i in 0..self.actors.len() {
+                if self.actors[i].0 <= t {
+                    self.wakes += 1;
+                    let (_, actor) = &mut self.actors[i];
+                    let next = actor.wake(t, world);
+                    debug_assert!(next > t || !next.is_finite(), "actor {} did not advance", actor.name());
+                    self.actors[i].0 = next.max(t + 1e-9);
+                }
+            }
+        }
+    }
+
+    /// Drive the same actors against the wall clock (real-time mode). Used
+    /// by the end-to-end examples where execution is real PJRT compute.
+    /// `speedup` > 1 compresses idle waits (sleeps) without reordering.
+    pub fn run_realtime(&mut self, world: &mut World, duration_s: f64, speedup: f64) {
+        let start = std::time::Instant::now();
+        loop {
+            let elapsed = start.elapsed().as_secs_f64() * speedup;
+            if elapsed >= duration_s {
+                return;
+            }
+            let t = self.next_wake();
+            if t.is_finite() && t > elapsed {
+                let wait = ((t - elapsed) / speedup).min(0.05);
+                std::thread::sleep(std::time::Duration::from_secs_f64(wait.max(0.001)));
+                continue;
+            }
+            let now = start.elapsed().as_secs_f64() * speedup;
+            self.now = now;
+            world.now = now;
+            for i in 0..self.actors.len() {
+                if self.actors[i].0 <= now {
+                    self.wakes += 1;
+                    let next = {
+                        let (_, actor) = &mut self.actors[i];
+                        actor.wake(now, world)
+                    };
+                    self.actors[i].0 = next.max(now + 1e-9);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::world::World;
+
+    struct Ticker {
+        period: f64,
+        fired: std::rc::Rc<std::cell::RefCell<Vec<f64>>>,
+    }
+
+    impl Actor for Ticker {
+        fn name(&self) -> String {
+            "ticker".into()
+        }
+        fn wake(&mut self, now: f64, _world: &mut World) -> f64 {
+            self.fired.borrow_mut().push(now);
+            now + self.period
+        }
+    }
+
+    #[test]
+    fn actors_fire_in_time_order() {
+        let mut eng = Engine::new();
+        let mut world = World::for_tests();
+        let a = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        let b = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        eng.add(Box::new(Ticker { period: 3.0, fired: a.clone() }));
+        eng.add(Box::new(Ticker { period: 5.0, fired: b.clone() }));
+        eng.run_until(&mut world, 12.0);
+        assert_eq!(*a.borrow(), vec![0.0, 3.0, 6.0, 9.0, 12.0]);
+        assert_eq!(*b.borrow(), vec![0.0, 5.0, 10.0]);
+        assert_eq!(eng.now, 12.0);
+    }
+
+    #[test]
+    fn infinite_sleep_ends_run() {
+        struct Once;
+        impl Actor for Once {
+            fn name(&self) -> String {
+                "once".into()
+            }
+            fn wake(&mut self, _now: f64, _world: &mut World) -> f64 {
+                f64::INFINITY
+            }
+        }
+        let mut eng = Engine::new();
+        let mut world = World::for_tests();
+        eng.add(Box::new(Once));
+        eng.run_until(&mut world, 1e9);
+        assert_eq!(eng.wakes, 1);
+        assert_eq!(eng.now, 1e9);
+    }
+
+    #[test]
+    fn same_instant_runs_in_registration_order() {
+        struct Tag {
+            id: u32,
+            log: std::rc::Rc<std::cell::RefCell<Vec<u32>>>,
+        }
+        impl Actor for Tag {
+            fn name(&self) -> String {
+                format!("tag{}", self.id)
+            }
+            fn wake(&mut self, _now: f64, _world: &mut World) -> f64 {
+                self.log.borrow_mut().push(self.id);
+                f64::INFINITY
+            }
+        }
+        let log = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        let mut eng = Engine::new();
+        let mut world = World::for_tests();
+        for id in 0..4 {
+            eng.add(Box::new(Tag { id, log: log.clone() }));
+        }
+        eng.run_until(&mut world, 1.0);
+        assert_eq!(*log.borrow(), vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,200 @@
+//! ApplicationDefinitions: the site-side application templates
+//! (paper §3.1, Listing 1).
+//!
+//! Security model: the API can only reference Apps by name; the command
+//! template, environment, and transfer slots live in the site directory,
+//! so "maliciously submitted App data does not impact the execution of
+//! local ApplicationDefinitions". Parameters are substituted into
+//! `{{param}}` slots; unknown parameters and unfilled slots are errors.
+
+use std::collections::BTreeMap;
+
+use crate::service::models::Direction;
+
+/// A named file/directory slot staged in or out around execution.
+#[derive(Debug, Clone)]
+pub struct TransferSlot {
+    pub name: String,
+    pub direction: Direction,
+    pub required: bool,
+    pub local_path: String,
+    pub recursive: bool,
+}
+
+/// Site-side application template (the `ApplicationDefinition` class).
+#[derive(Debug, Clone)]
+pub struct AppDef {
+    pub name: String,
+    /// Shell command with `{{param}}` placeholders.
+    pub command_template: String,
+    pub environment: Vec<(String, String)>,
+    pub cleanup_files: Vec<String>,
+    pub transfers: Vec<TransferSlot>,
+}
+
+impl AppDef {
+    /// The paper's XPCS-Eigen `corr` definition (Listing 1).
+    pub fn xpcs_eigen_corr() -> AppDef {
+        AppDef {
+            name: "EigenCorr".into(),
+            command_template: "/software/xpcs-eigen2/build/corr {{h5_in}} -imm {{imm_in}}".into(),
+            environment: vec![("HDF5_USE_FILE_LOCKING".into(), "FALSE".into())],
+            cleanup_files: vec!["*.hdf".into(), "*.imm".into(), "*.h5".into()],
+            transfers: vec![
+                TransferSlot {
+                    name: "h5_in".into(),
+                    direction: Direction::In,
+                    required: true,
+                    local_path: "inp.h5".into(),
+                    recursive: false,
+                },
+                TransferSlot {
+                    name: "imm_in".into(),
+                    direction: Direction::In,
+                    required: true,
+                    local_path: "inp.imm".into(),
+                    recursive: false,
+                },
+                TransferSlot {
+                    name: "h5_out".into(),
+                    direction: Direction::Out,
+                    required: true,
+                    local_path: "inp.h5".into(), // modified in place
+                    recursive: false,
+                },
+            ],
+        }
+    }
+
+    /// The MD (matrix diagonalization) benchmark definition (§4.1.3).
+    pub fn md_benchmark() -> AppDef {
+        AppDef {
+            name: "MD".into(),
+            command_template: "python -m md_bench --matrix {{matrix}}".into(),
+            environment: vec![],
+            cleanup_files: vec!["*.npy".into()],
+            transfers: vec![
+                TransferSlot {
+                    name: "matrix".into(),
+                    direction: Direction::In,
+                    required: true,
+                    local_path: "matrix.npy".into(),
+                    recursive: false,
+                },
+                TransferSlot {
+                    name: "eigvals".into(),
+                    direction: Direction::Out,
+                    required: true,
+                    local_path: "eigvals.npy".into(),
+                    recursive: false,
+                },
+            ],
+        }
+    }
+
+    /// Render the command line with parameter substitution.
+    pub fn render(&self, params: &[(String, String)]) -> Result<String, String> {
+        let map: BTreeMap<&str, &str> =
+            params.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+        let mut out = String::new();
+        let mut rest = self.command_template.as_str();
+        while let Some(start) = rest.find("{{") {
+            out.push_str(&rest[..start]);
+            let after = &rest[start + 2..];
+            let end = after.find("}}").ok_or_else(|| "unterminated {{".to_string())?;
+            let key = after[..end].trim();
+            let val = map.get(key).ok_or_else(|| format!("missing parameter '{key}'"))?;
+            out.push_str(val);
+            rest = &after[end + 2..];
+        }
+        out.push_str(rest);
+        Ok(out)
+    }
+
+    pub fn slots(&self, dir: Direction) -> impl Iterator<Item = &TransferSlot> {
+        self.transfers.iter().filter(move |s| s.direction == dir)
+    }
+}
+
+/// Site-local registry of permissible applications.
+#[derive(Debug, Default)]
+pub struct AppRegistry {
+    apps: BTreeMap<String, AppDef>,
+}
+
+impl AppRegistry {
+    pub fn new() -> AppRegistry {
+        AppRegistry::default()
+    }
+
+    /// The default registry every experiment site ships with.
+    pub fn standard() -> AppRegistry {
+        let mut r = AppRegistry::new();
+        r.register(AppDef::xpcs_eigen_corr());
+        r.register(AppDef::md_benchmark());
+        r
+    }
+
+    pub fn register(&mut self, def: AppDef) {
+        self.apps.insert(def.name.clone(), def);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&AppDef> {
+        self.apps.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.apps.keys().map(String::as_str).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_substitutes_params() {
+        let def = AppDef::xpcs_eigen_corr();
+        let cmd = def
+            .render(&[("h5_in".into(), "A001.h5".into()), ("imm_in".into(), "A001.imm".into())])
+            .unwrap();
+        assert_eq!(cmd, "/software/xpcs-eigen2/build/corr A001.h5 -imm A001.imm");
+    }
+
+    #[test]
+    fn missing_param_is_error() {
+        let def = AppDef::xpcs_eigen_corr();
+        let err = def.render(&[("h5_in".into(), "x".into())]).unwrap_err();
+        assert!(err.contains("imm_in"), "{err}");
+    }
+
+    #[test]
+    fn slots_by_direction() {
+        let def = AppDef::xpcs_eigen_corr();
+        assert_eq!(def.slots(Direction::In).count(), 2);
+        assert_eq!(def.slots(Direction::Out).count(), 1);
+        // XPCS output is the input HDF modified in place (paper Listing 1).
+        assert_eq!(def.slots(Direction::Out).next().unwrap().local_path, "inp.h5");
+    }
+
+    #[test]
+    fn registry_lookup() {
+        let r = AppRegistry::standard();
+        assert!(r.get("EigenCorr").is_some());
+        assert!(r.get("MD").is_some());
+        assert!(r.get("rm -rf /").is_none());
+        assert_eq!(r.names().len(), 2);
+    }
+
+    #[test]
+    fn template_without_params_renders_verbatim() {
+        let def = AppDef {
+            name: "x".into(),
+            command_template: "echo hello".into(),
+            environment: vec![],
+            cleanup_files: vec![],
+            transfers: vec![],
+        };
+        assert_eq!(def.render(&[]).unwrap(), "echo hello");
+    }
+}

@@ -1,0 +1,239 @@
+//! Elastic Queue Module (paper §3.2): automated queue submission.
+//!
+//! At every sync period it compares the aggregate resource footprint of
+//! runnable + in-flight jobs against the footprint of queued/running
+//! BatchJobs and provisions fixed-size blocks (Fig. 7: 8-node blocks,
+//! 20-minute wall time, 32-node cap) until demand is covered. It also
+//! deletes BatchJobs that out-wait `max_queue_wait_s`, and in backfill
+//! mode sizes blocks to the scheduler's idle windows.
+
+use crate::service::api::{ApiConn, ApiRequest};
+use crate::service::models::BatchJobState;
+use crate::site::config::SiteConfig;
+use crate::site::platform::SchedulerBackend;
+
+pub struct ElasticModule {
+    pub next_due: f64,
+    /// BatchJobs provisioned so far (diagnostics).
+    pub blocks_created: u64,
+}
+
+impl ElasticModule {
+    pub fn new() -> ElasticModule {
+        ElasticModule { next_due: 0.0, blocks_created: 0 }
+    }
+
+    pub fn tick(
+        &mut self,
+        now: f64,
+        cfg: &SiteConfig,
+        conn: &mut dyn ApiConn,
+        sched: &mut dyn SchedulerBackend,
+    ) -> f64 {
+        if now < self.next_due || !cfg.elastic.enabled {
+            self.next_due = if cfg.elastic.enabled { self.next_due } else { now + cfg.elastic.poll_period };
+            return self.next_due.max(now + 1e-6);
+        }
+        self.next_due = now + cfg.elastic.poll_period;
+
+        // Queue-wait timeout: delete over-age queued BatchJobs.
+        if let Ok(resp) =
+            conn.api(&cfg.token, ApiRequest::ListBatchJobs { site: cfg.site_id, active_only: true })
+        {
+            let bjs = resp.batch_jobs();
+            for bj in &bjs {
+                if bj.state == BatchJobState::Queued
+                    && now - bj.created_at > cfg.elastic.max_queue_wait_s
+                {
+                    if let Some(local) = bj.local_id {
+                        sched.delete(now, local);
+                    }
+                    let _ = conn.api(&cfg.token, ApiRequest::UpdateBatchJob {
+                        id: bj.id,
+                        state: BatchJobState::Deleted,
+                        local_id: None,
+                    });
+                }
+            }
+            // Demand vs provision.
+            let Ok(backlog_resp) = conn.api(&cfg.token, ApiRequest::SiteBacklog { site: cfg.site_id })
+            else {
+                return self.next_due;
+            };
+            let backlog = backlog_resp.backlog();
+            let want = (backlog.runnable_nodes + backlog.inflight_nodes).min(cfg.elastic.max_nodes);
+            let mut have = backlog.batch_nodes;
+            let mut queued_count =
+                bjs.iter().filter(|b| matches!(b.state, BatchJobState::Pending | BatchJobState::Queued)).count();
+            // Backfill mode: only tap nodes that are idle *right now*.
+            let mut idle_left =
+                if cfg.elastic.use_backfill { sched.free_nodes(now) } else { u32::MAX };
+            while have < want && queued_count < cfg.elastic.max_queued {
+                let mut block = cfg.elastic.block_nodes.min(cfg.elastic.max_nodes - have);
+                if cfg.elastic.use_backfill {
+                    if idle_left == 0 {
+                        break;
+                    }
+                    block = block.min(idle_left);
+                    idle_left -= block;
+                }
+                if block == 0 {
+                    break;
+                }
+                let _ = conn.api(&cfg.token, ApiRequest::CreateBatchJob {
+                    site: cfg.site_id,
+                    num_nodes: block,
+                    wall_time_s: cfg.elastic.wall_time_s,
+                    mode: cfg.launcher.mode,
+                    queue: "default".into(),
+                    project: "balsam".into(),
+                });
+                self.blocks_created += 1;
+                have += block;
+                queued_count += 1;
+            }
+        }
+        self.next_due
+    }
+}
+
+impl Default for ElasticModule {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::api::JobCreate;
+    
+    use crate::service::ServiceCore;
+    use crate::substrates::batchsim::BatchSim;
+    use crate::world::InProcConn;
+
+    fn setup() -> (ServiceCore, SiteConfig, BatchSim) {
+        let mut svc = ServiceCore::new(b"k");
+        let tok = svc.admin_token();
+        let site = svc
+            .handle(0.0, &tok, ApiRequest::CreateSite {
+                name: "cori".into(),
+                hostname: "h".into(),
+                path: "/p".into(),
+            })
+            .unwrap()
+            .site_id();
+        svc.handle(0.0, &tok, ApiRequest::RegisterApp {
+            site,
+            name: "MD".into(),
+            command_template: "md".into(),
+            parameters: vec![],
+        })
+        .unwrap();
+        let cfg = SiteConfig::defaults("cori", site, tok);
+        (svc, cfg, BatchSim::new("cori", 64, 5))
+    }
+
+    fn submit(svc: &mut ServiceCore, cfg: &SiteConfig, n: usize) {
+        let jobs = (0..n).map(|_| JobCreate::simple(cfg.site_id, "MD", "md_small")).collect();
+        svc.handle(0.1, &cfg.token, ApiRequest::BulkCreateJobs { jobs }).unwrap();
+    }
+
+    #[test]
+    fn provisions_blocks_to_match_demand() {
+        let (mut svc, cfg, mut sched) = setup();
+        submit(&mut svc, &cfg, 20); // 20 runnable single-node jobs
+        let mut em = ElasticModule::new();
+        let mut conn = InProcConn { now: 1.0, svc: &mut svc };
+        em.tick(1.0, &cfg, &mut conn, &mut sched);
+        // want = 20 -> ceil to 8-node blocks bounded by max_queued=4: 8+8+8 = 24 >= 20
+        assert_eq!(em.blocks_created, 3);
+        let total: u32 = svc
+            .store
+            .batch_jobs
+            .values()
+            .map(|b| b.num_nodes)
+            .sum();
+        assert_eq!(total, 24);
+    }
+
+    #[test]
+    fn respects_max_nodes_cap() {
+        let (mut svc, mut cfg, mut sched) = setup();
+        cfg.elastic.max_nodes = 16;
+        submit(&mut svc, &cfg, 100);
+        let mut em = ElasticModule::new();
+        let mut conn = InProcConn { now: 1.0, svc: &mut svc };
+        em.tick(1.0, &cfg, &mut conn, &mut sched);
+        let total: u32 = svc.store.batch_jobs.values().map(|b| b.num_nodes).sum();
+        assert!(total <= 16, "provisioned {total} > cap 16");
+    }
+
+    #[test]
+    fn no_demand_no_blocks() {
+        let (mut svc, cfg, mut sched) = setup();
+        let mut em = ElasticModule::new();
+        let mut conn = InProcConn { now: 1.0, svc: &mut svc };
+        em.tick(1.0, &cfg, &mut conn, &mut sched);
+        assert_eq!(em.blocks_created, 0);
+    }
+
+    #[test]
+    fn deletes_overage_queued_blocks() {
+        let (mut svc, mut cfg, mut sched) = setup();
+        cfg.elastic.max_queue_wait_s = 100.0;
+        submit(&mut svc, &cfg, 8);
+        let mut em = ElasticModule::new();
+        {
+            let mut conn = InProcConn { now: 1.0, svc: &mut svc };
+            em.tick(1.0, &cfg, &mut conn, &mut sched);
+        }
+        // Mark the created block as Queued (scheduler module would).
+        let ids: Vec<_> = svc.store.batch_jobs.keys().copied().collect();
+        for id in &ids {
+            svc.store.batch_jobs.get_mut(id).unwrap().state = BatchJobState::Queued;
+        }
+        // Long after the wait timeout, the module deletes it.
+        let mut conn = InProcConn { now: 200.0, svc: &mut svc };
+        em.next_due = 0.0;
+        em.tick(200.0, &cfg, &mut conn, &mut sched);
+        assert!(svc
+            .store
+            .batch_jobs
+            .values()
+            .all(|b| b.state == BatchJobState::Deleted || b.created_at > 100.0));
+    }
+
+    #[test]
+    fn backfill_mode_respects_idle_nodes() {
+        let (mut svc, mut cfg, mut sched) = setup();
+        cfg.elastic.use_backfill = true;
+        // Occupy 60 of 64 nodes directly on the scheduler.
+        use crate::site::platform::SchedulerBackend as _;
+        sched.submit(0.0, "cori", 60, 1e5);
+        let mut t = 0.0;
+        while sched.free_nodes(t) != 4 {
+            t += 1.0;
+            assert!(t < 60.0);
+        }
+        submit(&mut svc, &cfg, 30);
+        let mut em = ElasticModule::new();
+        let mut conn = InProcConn { now: t, svc: &mut svc };
+        em.tick(t, &cfg, &mut conn, &mut sched);
+        // Only one 4-node block fits the idle window.
+        let sizes: Vec<u32> = svc.store.batch_jobs.values().map(|b| b.num_nodes).collect();
+        assert_eq!(sizes, vec![4]);
+    }
+
+    #[test]
+    fn disabled_module_is_inert() {
+        let (mut svc, mut cfg, mut sched) = setup();
+        cfg.elastic.enabled = false;
+        submit(&mut svc, &cfg, 20);
+        let mut em = ElasticModule::new();
+        let mut conn = InProcConn { now: 1.0, svc: &mut svc };
+        em.tick(1.0, &cfg, &mut conn, &mut sched);
+        assert_eq!(em.blocks_created, 0);
+        assert!(svc.store.batch_jobs.is_empty());
+    }
+}

@@ -1,0 +1,307 @@
+//! Balsam launcher: the pilot job (paper §3.1/§3.2).
+//!
+//! Runs inside a batch allocation, establishes a Session with the service,
+//! continuously acquires runnable jobs and packs them onto idle nodes,
+//! sends heartbeats to keep the lease alive, and reports per-job outcomes.
+//! If the allocation is killed ungracefully the launcher simply vanishes —
+//! recovery is the *service's* job (stale-heartbeat detection), which is
+//! exactly what Fig. 7's fault-injection phase exercises.
+
+use std::collections::BTreeMap;
+
+use crate::service::api::{ApiConn, ApiRequest};
+use crate::service::models::{BatchJobId, JobId, JobMode, JobState, SessionId};
+use crate::site::config::SiteConfig;
+use crate::site::platform::{ExecBackend, RunId, RunStatus};
+
+/// Why the launcher exited (observability + tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExitReason {
+    StillRunning,
+    IdleTimeout,
+    WallTime,
+}
+
+/// One pilot job bound to one allocation.
+pub struct Launcher {
+    pub batch_job_id: BatchJobId,
+    pub local_alloc_id: u64,
+    pub nodes: u32,
+    /// Wall-time limit of the allocation (absolute).
+    pub end_by: f64,
+    session: Option<SessionId>,
+    running: BTreeMap<JobId, (RunId, u32)>,
+    free_nodes: u32,
+    next_heartbeat: f64,
+    next_acquire: f64,
+    idle_since: Option<f64>,
+    pub exited: ExitReason,
+    /// Completed-run counter (diagnostics).
+    pub runs_done: u64,
+}
+
+impl Launcher {
+    pub fn new(batch_job_id: BatchJobId, local_alloc_id: u64, nodes: u32, now: f64, end_by: f64) -> Launcher {
+        Launcher {
+            batch_job_id,
+            local_alloc_id,
+            nodes,
+            end_by,
+            session: None,
+            running: BTreeMap::new(),
+            free_nodes: nodes,
+            next_heartbeat: now,
+            next_acquire: now,
+            idle_since: Some(now),
+            exited: ExitReason::StillRunning,
+            runs_done: 0,
+        }
+    }
+
+    pub fn busy_nodes(&self) -> u32 {
+        self.nodes - self.free_nodes
+    }
+
+    pub fn running_jobs(&self) -> usize {
+        self.running.len()
+    }
+
+    /// One launcher step. Returns `false` once the launcher has exited
+    /// gracefully (idle timeout) and should be dropped by the agent.
+    pub fn tick(
+        &mut self,
+        now: f64,
+        cfg: &SiteConfig,
+        conn: &mut dyn ApiConn,
+        exec: &mut dyn ExecBackend,
+    ) -> bool {
+        if self.exited != ExitReason::StillRunning {
+            return false;
+        }
+        // Session establishment.
+        if self.session.is_none() {
+            match conn.api(&cfg.token, ApiRequest::CreateSession {
+                site: cfg.site_id,
+                batch_job: Some(self.batch_job_id),
+            }) {
+                Ok(resp) => self.session = Some(resp.session_id()),
+                Err(_) => return true, // transient; retry next tick
+            }
+        }
+        let session = self.session.unwrap();
+
+        // Heartbeat.
+        if now >= self.next_heartbeat {
+            let _ = conn.api(&cfg.token, ApiRequest::SessionHeartbeat { session });
+            self.next_heartbeat = now + cfg.launcher.heartbeat_period;
+        }
+
+        // Poll running jobs.
+        let done: Vec<(JobId, bool)> = self
+            .running
+            .iter()
+            .filter_map(|(&job, &(run, _))| match exec.poll(now, run) {
+                RunStatus::Done { ok } => Some((job, ok)),
+                RunStatus::Running => None,
+            })
+            .collect();
+        for (job, ok) in done {
+            let (_, n) = self.running.remove(&job).unwrap();
+            self.free_nodes += n;
+            self.runs_done += 1;
+            let to = if ok { JobState::RunDone } else { JobState::RunError };
+            let _ = conn.api(&cfg.token, ApiRequest::UpdateJobState {
+                job,
+                to,
+                data: String::new(),
+            });
+            if ok {
+                // Site-side postprocessing is trivial for these workloads;
+                // perform it inline so stage-out becomes actionable.
+                let _ = conn.api(&cfg.token, ApiRequest::UpdateJobState {
+                    job,
+                    to: JobState::Postprocessed,
+                    data: String::new(),
+                });
+            }
+        }
+
+        // Stop acquiring near the wall-time limit (jobs wouldn't finish).
+        let remaining = self.end_by - now;
+        let accepting = remaining > 30.0;
+
+        // Acquire + start new jobs.
+        if accepting && now >= self.next_acquire && self.free_nodes > 0 {
+            self.next_acquire = now + cfg.launcher.acquire_period;
+            let max_jobs = match cfg.launcher.mode {
+                JobMode::Mpi => self.free_nodes as usize,
+                JobMode::Serial => (self.free_nodes * cfg.launcher.jobs_per_node) as usize,
+            };
+            if let Ok(resp) = conn.api(&cfg.token, ApiRequest::SessionAcquire {
+                session,
+                max_nodes: self.free_nodes,
+                max_jobs,
+            }) {
+                for job in resp.jobs() {
+                    let n = job.num_nodes.min(self.free_nodes).max(1);
+                    if n > self.free_nodes {
+                        continue;
+                    }
+                    let run = exec.start(now, &cfg.facility, &job.workload, n);
+                    self.free_nodes -= n;
+                    self.running.insert(job.id, (run, n));
+                    let _ = conn.api(&cfg.token, ApiRequest::UpdateJobState {
+                        job: job.id,
+                        to: JobState::Running,
+                        data: String::new(),
+                    });
+                }
+            }
+        }
+
+        // Idle tracking + graceful exit.
+        if self.running.is_empty() {
+            let since = *self.idle_since.get_or_insert(now);
+            if now - since > cfg.launcher.idle_timeout_s {
+                let _ = conn.api(&cfg.token, ApiRequest::SessionEnd { session });
+                self.exited = ExitReason::IdleTimeout;
+                return false;
+            }
+        } else {
+            self.idle_since = None;
+        }
+        true
+    }
+
+    /// Graceful wall-time shutdown (called by the agent when the
+    /// allocation reports finished): ends the session so leased jobs are
+    /// recovered immediately rather than by heartbeat expiry.
+    pub fn shutdown_walltime(&mut self, cfg: &SiteConfig, conn: &mut dyn ApiConn) {
+        if let Some(session) = self.session {
+            let _ = conn.api(&cfg.token, ApiRequest::SessionEnd { session });
+        }
+        self.exited = ExitReason::WallTime;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::api::JobCreate;
+    use crate::service::models::SiteId;
+    use crate::service::ServiceCore;
+    use crate::world::{InProcConn, SimExec};
+
+    fn setup() -> (ServiceCore, SiteConfig, SiteId) {
+        let mut svc = ServiceCore::new(b"k");
+        let tok = svc.admin_token();
+        let site = svc
+            .handle(0.0, &tok, ApiRequest::CreateSite {
+                name: "theta".into(),
+                hostname: "h".into(),
+                path: "/p".into(),
+            })
+            .unwrap()
+            .site_id();
+        svc.handle(0.0, &tok, ApiRequest::RegisterApp {
+            site,
+            name: "MD".into(),
+            command_template: "md".into(),
+            parameters: vec![],
+        })
+        .unwrap();
+        let cfg = SiteConfig::defaults("theta", site, tok);
+        (svc, cfg, site)
+    }
+
+    fn submit_simple(svc: &mut ServiceCore, cfg: &SiteConfig, n: usize) -> Vec<JobId> {
+        let jobs = (0..n).map(|_| JobCreate::simple(cfg.site_id, "MD", "md_small")).collect();
+        svc.handle(0.5, &cfg.token, ApiRequest::BulkCreateJobs { jobs }).unwrap().job_ids()
+    }
+
+    #[test]
+    fn packs_jobs_onto_free_nodes_and_completes() {
+        let (mut svc, cfg, site) = setup();
+        let ids = submit_simple(&mut svc, &cfg, 10);
+        let mut exec = SimExec::new(1);
+        let mut l = Launcher::new(BatchJobId(99), 1, 4, 0.0, 1e6);
+        // Drive until all jobs finished.
+        let mut t = 1.0;
+        while ids.iter().any(|&i| !svc.store.job(i).unwrap().state.is_terminal()) {
+            let mut conn = InProcConn { now: t, svc: &mut svc };
+            assert!(l.tick(t, &cfg, &mut conn, &mut exec));
+            t += 1.0;
+            assert!(t < 600.0, "jobs never finished");
+        }
+        assert_eq!(l.runs_done, 10);
+        // At most 4 nodes were ever busy.
+        assert!(l.busy_nodes() <= 4);
+        assert_eq!(svc.store.count_in_state(site, JobState::JobFinished), 10);
+    }
+
+    #[test]
+    fn node_budget_never_exceeded() {
+        let (mut svc, cfg, _site) = setup();
+        submit_simple(&mut svc, &cfg, 50);
+        let mut exec = SimExec::new(2);
+        let mut l = Launcher::new(BatchJobId(99), 1, 8, 0.0, 1e6);
+        for step in 0..200 {
+            let t = step as f64;
+            let mut conn = InProcConn { now: t, svc: &mut svc };
+            l.tick(t, &cfg, &mut conn, &mut exec);
+            assert!(l.busy_nodes() <= 8, "over-packed at t={t}");
+            assert_eq!(l.busy_nodes() as usize, l.running_jobs());
+        }
+    }
+
+    #[test]
+    fn idle_timeout_ends_session() {
+        let (mut svc, mut cfg, _site) = setup();
+        cfg.launcher.idle_timeout_s = 10.0;
+        let mut exec = SimExec::new(3);
+        let mut l = Launcher::new(BatchJobId(99), 1, 4, 0.0, 1e6);
+        let mut t = 0.0;
+        let mut alive = true;
+        while alive && t < 60.0 {
+            let mut conn = InProcConn { now: t, svc: &mut svc };
+            alive = l.tick(t, &cfg, &mut conn, &mut exec);
+            t += 1.0;
+        }
+        assert_eq!(l.exited, ExitReason::IdleTimeout);
+        assert!(t < 20.0, "should exit shortly after idle timeout, exited at {t}");
+        // Session marked ended server-side.
+        assert!(svc.store.sessions.values().all(|s| s.ended));
+    }
+
+    #[test]
+    fn failed_runs_reported_and_retried() {
+        let (mut svc, cfg, _site) = setup();
+        let ids = submit_simple(&mut svc, &cfg, 3);
+        let mut exec = SimExec::new(4);
+        exec.fail_prob = 1.0; // every run fails
+        let mut l = Launcher::new(BatchJobId(99), 1, 4, 0.0, 1e6);
+        let mut t = 1.0;
+        while ids.iter().any(|&i| svc.store.job(i).unwrap().state != JobState::Failed) {
+            let mut conn = InProcConn { now: t, svc: &mut svc };
+            l.tick(t, &cfg, &mut conn, &mut exec);
+            t += 1.0;
+            assert!(t < 2000.0, "jobs never exhausted retries");
+        }
+        // Each job got its full retry budget (3 attempts).
+        for &i in &ids {
+            assert_eq!(svc.store.job(i).unwrap().attempts, 3);
+        }
+    }
+
+    #[test]
+    fn stops_acquiring_near_walltime() {
+        let (mut svc, cfg, _site) = setup();
+        submit_simple(&mut svc, &cfg, 5);
+        let mut exec = SimExec::new(5);
+        // Allocation ends at t=20: inside the 30 s guard band from t=0.
+        let mut l = Launcher::new(BatchJobId(99), 1, 4, 0.0, 20.0);
+        let mut conn = InProcConn { now: 1.0, svc: &mut svc };
+        l.tick(1.0, &cfg, &mut conn, &mut exec);
+        assert_eq!(l.running_jobs(), 0, "must not start jobs that cannot finish");
+    }
+}

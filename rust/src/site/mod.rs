@@ -1,0 +1,29 @@
+//! The Balsam site (paper §3.2): a user-space agent on an HPC login node,
+//! composed of independent modules that synchronize local facility state
+//! with the central service:
+//!
+//! * [`transfer`] — batches pending TransferItems into Globus-style
+//!   transfer tasks and polls them;
+//! * [`scheduler_mod`] — syncs API BatchJobs with the local batch
+//!   scheduler (qsub/qstat);
+//! * [`elastic`] — autoscaling: provisions resource blocks in response to
+//!   the runnable backlog;
+//! * [`launcher`] — the pilot job: acquires fine-grained jobs under a
+//!   heartbeated Session lease and packs them onto allocation nodes;
+//! * [`appdef`] — ApplicationDefinition templates (the only permissible
+//!   workflows at a site — the API cannot inject arbitrary commands);
+//! * [`platform`] — the uniform interfaces to transfer fabric, scheduler,
+//!   and application launch that make modules portable across facilities
+//!   and across simulated/real backends.
+
+pub mod platform;
+pub mod config;
+pub mod appdef;
+pub mod transfer;
+pub mod scheduler_mod;
+pub mod elastic;
+pub mod launcher;
+pub mod agent;
+
+pub use agent::SiteAgent;
+pub use config::SiteConfig;

@@ -1,0 +1,93 @@
+//! Platform interfaces (paper §3.2): the uniform traits behind which all
+//! "interactions with the underlying diverse HPC fabrics are
+//! encapsulated". Site modules are written purely against these, so the
+//! same module code drives the calibrated simulators (simulated mode) and
+//! the real thread/PJRT backends (real-time mode).
+
+use crate::service::models::Direction;
+
+/// Handle to an asynchronous transfer task (Globus task UUID analogue).
+pub use crate::service::models::XferTaskId;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum XferStatus {
+    Queued,
+    Active,
+    Done,
+    Error,
+}
+
+/// Transfer interface — the paper's own contract: "adding new transfer
+/// interfaces entails implementing two methods to *submit* an asynchronous
+/// transfer task with some collection of files and *poll* the status".
+pub trait TransferBackend {
+    /// Submit one transfer task bundling `nfiles` files totalling `bytes`
+    /// between `remote` (e.g. "APS") and `fac` (e.g. "theta").
+    fn submit(
+        &mut self,
+        now: f64,
+        remote: &str,
+        fac: &str,
+        direction: Direction,
+        bytes: u64,
+        nfiles: usize,
+    ) -> XferTaskId;
+
+    fn poll(&mut self, now: f64, task: XferTaskId) -> XferStatus;
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AllocStatus {
+    Queued,
+    /// Allocation is live; `end_by` is the wall-time limit.
+    Running { end_by: f64 },
+    Finished,
+    /// Terminated without warning (fault injection / preemption).
+    Killed,
+}
+
+/// Scheduler interface (qsub/qstat/qdel): Cobalt, Slurm, LSF in the paper.
+pub trait SchedulerBackend {
+    fn submit(&mut self, now: f64, fac: &str, nodes: u32, wall_s: f64) -> u64;
+    fn status(&mut self, now: f64, id: u64) -> AllocStatus;
+    fn delete(&mut self, now: f64, id: u64);
+    /// Graceful early release of a *running* allocation (pilot idle exit).
+    fn release_early(&mut self, now: f64, id: u64);
+    /// Idle nodes right now (elastic-queue backfill hint).
+    fn free_nodes(&mut self, now: f64) -> u32;
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RunId(pub u64);
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RunStatus {
+    Running,
+    Done { ok: bool },
+}
+
+/// AppRun interface: "abstracts the application launcher ... in an MPI
+/// implementation-agnostic fashion". In simulated mode completion times
+/// are sampled from the calibrated runtime model; in real-time mode this
+/// is the PJRT worker pool executing the AOT artifacts.
+pub trait ExecBackend {
+    fn start(&mut self, now: f64, fac: &str, workload: &str, num_nodes: u32) -> RunId;
+    fn poll(&mut self, now: f64, id: RunId) -> RunStatus;
+    fn kill(&mut self, now: f64, id: RunId);
+}
+
+/// ComputeNode interface: per-node shape used by the launcher to pack jobs
+/// (cores / GPUs / multiple-applications-per-node capability).
+#[derive(Debug, Clone, Copy)]
+pub struct ComputeNodeSpec {
+    pub cores: u32,
+    pub gpus: u32,
+    /// Multiple applications per node allowed (serial mode packing).
+    pub mapn: bool,
+}
+
+impl Default for ComputeNodeSpec {
+    fn default() -> Self {
+        ComputeNodeSpec { cores: 64, gpus: 0, mapn: true }
+    }
+}

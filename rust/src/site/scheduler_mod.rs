@@ -1,0 +1,260 @@
+//! Scheduler Module (paper §3.2): the conduit between API BatchJobs and
+//! the local resource manager. It does not decide *when* or *how many*
+//! resources are needed (that is the Elastic Queue module) — it only
+//! synchronizes: Pending BatchJobs are submitted (qsub), queued/running
+//! ones are polled (qstat), and state changes are pushed to the API.
+//! When an allocation starts it spawns a [`Launcher`]; when it ends it
+//! retires the launcher (gracefully at wall-time, silently if killed).
+
+use crate::service::api::{ApiConn, ApiRequest};
+use crate::service::models::{BatchJob, BatchJobState};
+use crate::site::config::SiteConfig;
+use crate::site::launcher::Launcher;
+use crate::site::platform::{AllocStatus, SchedulerBackend};
+
+pub struct SchedulerModule {
+    pub next_due: f64,
+    /// Allocations killed ungracefully since the last tick (diagnostics).
+    pub kills_seen: u64,
+}
+
+impl SchedulerModule {
+    pub fn new() -> SchedulerModule {
+        SchedulerModule { next_due: 0.0, kills_seen: 0 }
+    }
+
+    /// One sync step. May spawn launchers into `launchers` and retire
+    /// existing ones. Returns next wake time.
+    pub fn tick(
+        &mut self,
+        now: f64,
+        cfg: &SiteConfig,
+        conn: &mut dyn ApiConn,
+        sched: &mut dyn SchedulerBackend,
+        launchers: &mut Vec<Launcher>,
+    ) -> f64 {
+        if now < self.next_due {
+            return self.next_due;
+        }
+        let Ok(resp) = conn.api(&cfg.token, ApiRequest::ListBatchJobs { site: cfg.site_id, active_only: true })
+        else {
+            self.next_due = now + cfg.scheduler_poll;
+            return self.next_due;
+        };
+        for bj in resp.batch_jobs() {
+            self.sync_one(now, cfg, conn, sched, launchers, &bj);
+        }
+        self.next_due = now + cfg.scheduler_poll;
+        self.next_due
+    }
+
+    fn sync_one(
+        &mut self,
+        now: f64,
+        cfg: &SiteConfig,
+        conn: &mut dyn ApiConn,
+        sched: &mut dyn SchedulerBackend,
+        launchers: &mut Vec<Launcher>,
+        bj: &BatchJob,
+    ) {
+        match bj.state {
+            BatchJobState::Pending => {
+                let local = sched.submit(now, &cfg.facility, bj.num_nodes, bj.wall_time_s);
+                let _ = conn.api(&cfg.token, ApiRequest::UpdateBatchJob {
+                    id: bj.id,
+                    state: BatchJobState::Queued,
+                    local_id: Some(local),
+                });
+            }
+            BatchJobState::Queued => {
+                let Some(local) = bj.local_id else { return };
+                match sched.status(now, local) {
+                    AllocStatus::Running { end_by } => {
+                        let _ = conn.api(&cfg.token, ApiRequest::UpdateBatchJob {
+                            id: bj.id,
+                            state: BatchJobState::Running,
+                            local_id: None,
+                        });
+                        launchers.push(Launcher::new(bj.id, local, bj.num_nodes, now, end_by));
+                    }
+                    AllocStatus::Killed => {
+                        let _ = conn.api(&cfg.token, ApiRequest::UpdateBatchJob {
+                            id: bj.id,
+                            state: BatchJobState::Deleted,
+                            local_id: None,
+                        });
+                    }
+                    AllocStatus::Queued | AllocStatus::Finished => {}
+                }
+            }
+            BatchJobState::Running => {
+                let Some(local) = bj.local_id else { return };
+                match sched.status(now, local) {
+                    AllocStatus::Finished => {
+                        // Graceful wall-time end: shut down the launcher so
+                        // its session releases leased jobs immediately.
+                        if let Some(pos) = launchers.iter().position(|l| l.batch_job_id == bj.id) {
+                            let mut l = launchers.remove(pos);
+                            l.shutdown_walltime(cfg, conn);
+                        }
+                        let _ = conn.api(&cfg.token, ApiRequest::UpdateBatchJob {
+                            id: bj.id,
+                            state: BatchJobState::Finished,
+                            local_id: None,
+                        });
+                    }
+                    AllocStatus::Killed => {
+                        // Ungraceful: the launcher vanishes WITHOUT ending
+                        // its session — recovery is via stale heartbeat.
+                        launchers.retain(|l| l.batch_job_id != bj.id);
+                        self.kills_seen += 1;
+                        let _ = conn.api(&cfg.token, ApiRequest::UpdateBatchJob {
+                            id: bj.id,
+                            state: BatchJobState::Finished,
+                            local_id: None,
+                        });
+                    }
+                    _ => {}
+                }
+            }
+            BatchJobState::Finished | BatchJobState::Deleted => {}
+        }
+    }
+}
+
+impl Default for SchedulerModule {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::api::ApiResponse;
+    use crate::service::models::JobMode;
+    use crate::service::ServiceCore;
+    use crate::substrates::batchsim::BatchSim;
+    use crate::world::InProcConn;
+
+    fn setup() -> (ServiceCore, SiteConfig, BatchSim) {
+        let mut svc = ServiceCore::new(b"k");
+        let tok = svc.admin_token();
+        let site = svc
+            .handle(0.0, &tok, ApiRequest::CreateSite {
+                name: "cori".into(),
+                hostname: "h".into(),
+                path: "/p".into(),
+            })
+            .unwrap()
+            .site_id();
+        let cfg = SiteConfig::defaults("cori", site, tok);
+        let sched = BatchSim::new("cori", 32, 42);
+        (svc, cfg, sched)
+    }
+
+    fn create_batchjob(svc: &mut ServiceCore, cfg: &SiteConfig, nodes: u32) -> crate::service::models::BatchJobId {
+        match svc
+            .handle(0.0, &cfg.token, ApiRequest::CreateBatchJob {
+                site: cfg.site_id,
+                num_nodes: nodes,
+                wall_time_s: 600.0,
+                mode: JobMode::Mpi,
+                queue: "debug".into(),
+                project: "xpcs".into(),
+            })
+            .unwrap()
+        {
+            ApiResponse::BatchJobId(id) => id,
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn pending_to_running_spawns_launcher() {
+        let (mut svc, cfg, mut sched) = setup();
+        let bj = create_batchjob(&mut svc, &cfg, 8);
+        let mut sm = SchedulerModule::new();
+        let mut launchers = Vec::new();
+        let mut t = 0.0;
+        while launchers.is_empty() {
+            let mut conn = InProcConn { now: t, svc: &mut svc };
+            sm.next_due = 0.0;
+            sm.tick(t, &cfg, &mut conn, &mut sched, &mut launchers);
+            t += 2.0;
+            assert!(t < 120.0, "allocation never started");
+        }
+        assert_eq!(launchers[0].batch_job_id, bj);
+        assert_eq!(launchers[0].nodes, 8);
+        assert_eq!(svc.store.batch_jobs[&bj].state, BatchJobState::Running);
+        assert!(svc.store.batch_jobs[&bj].started_at.is_some());
+    }
+
+    #[test]
+    fn killed_allocation_drops_launcher_without_session_end() {
+        let (mut svc, cfg, mut sched) = setup();
+        let bj = create_batchjob(&mut svc, &cfg, 8);
+        let mut sm = SchedulerModule::new();
+        let mut launchers = Vec::new();
+        let mut t = 0.0;
+        while launchers.is_empty() {
+            let mut conn = InProcConn { now: t, svc: &mut svc };
+            sm.next_due = 0.0;
+            sm.tick(t, &cfg, &mut conn, &mut sched, &mut launchers);
+            t += 2.0;
+        }
+        // Give the launcher a session (simulate one tick).
+        let mut exec = crate::world::SimExec::new(9);
+        {
+            let mut conn = InProcConn { now: t, svc: &mut svc };
+            launchers[0].tick(t, &cfg, &mut conn, &mut exec);
+        }
+        assert_eq!(svc.store.sessions.len(), 1);
+        // Kill the allocation out from under it.
+        let local = launchers[0].local_alloc_id;
+        sched.kill(t + 1.0, local);
+        let mut conn = InProcConn { now: t + 2.0, svc: &mut svc };
+        sm.next_due = 0.0;
+        sm.tick(t + 2.0, &cfg, &mut conn, &mut sched, &mut launchers);
+        assert!(launchers.is_empty());
+        assert_eq!(sm.kills_seen, 1);
+        // Session NOT gracefully ended — stale heartbeat will expire it.
+        assert!(!svc.store.sessions.values().next().unwrap().ended);
+        assert_eq!(svc.store.batch_jobs[&bj].state, BatchJobState::Finished);
+    }
+
+    #[test]
+    fn walltime_end_is_graceful() {
+        let (mut svc, mut cfg, mut sched) = setup();
+        cfg.elastic.wall_time_s = 30.0;
+        let bj = match svc
+            .handle(0.0, &cfg.token, ApiRequest::CreateBatchJob {
+                site: cfg.site_id,
+                num_nodes: 4,
+                wall_time_s: 30.0,
+                mode: JobMode::Mpi,
+                queue: "debug".into(),
+                project: "p".into(),
+            })
+            .unwrap()
+        {
+            ApiResponse::BatchJobId(id) => id,
+            _ => unreachable!(),
+        };
+        let mut sm = SchedulerModule::new();
+        let mut launchers = Vec::new();
+        let mut exec = crate::world::SimExec::new(10);
+        for step in 0..60 {
+            let t = step as f64 * 2.0;
+            let mut conn = InProcConn { now: t, svc: &mut svc };
+            sm.next_due = 0.0;
+            sm.tick(t, &cfg, &mut conn, &mut sched, &mut launchers);
+            let mut conn = InProcConn { now: t, svc: &mut svc };
+            launchers.retain_mut(|l| l.tick(t, &cfg, &mut conn, &mut exec));
+        }
+        assert!(launchers.is_empty());
+        assert_eq!(svc.store.batch_jobs[&bj].state, BatchJobState::Finished);
+        // Graceful: every session ended.
+        assert!(svc.store.sessions.values().all(|s| s.ended));
+    }
+}

@@ -1,0 +1,226 @@
+//! Compute-facility and light-source catalog + calibration constants.
+//!
+//! Numbers are taken from the paper's own measurements (§4, Table 1,
+//! Figs. 4/5/8) so the simulators regenerate the evaluation's *shape*:
+//! who wins, by what factor, and where the crossovers fall.
+
+/// Batch scheduler family at a facility.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedKind {
+    /// ALCF-Theta. Job starts are effectively serialized: the paper
+    /// measures a *median 273 s* per-job queueing delay on an exclusive
+    /// idle reservation — Cobalt's startup rate, not resource contention.
+    Cobalt,
+    /// NERSC-Cori: parallel job starts with a median 2.7 s delay.
+    Slurm,
+    /// OLCF-Summit.
+    Lsf,
+}
+
+/// A compute facility (execution site substrate).
+#[derive(Debug, Clone)]
+pub struct Facility {
+    pub name: &'static str,
+    pub scheduler: SchedKind,
+    pub total_nodes: u32,
+    pub cores_per_node: u32,
+    /// Serialized job-start interval (s, lognormal median): Cobalt model.
+    pub start_interval_median: f64,
+    /// Per-job startup delay (s, lognormal median): Slurm/LSF model.
+    pub start_delay_median: f64,
+}
+
+pub const THETA: Facility = Facility {
+    name: "theta",
+    scheduler: SchedKind::Cobalt,
+    total_nodes: 4392,
+    cores_per_node: 64,
+    start_interval_median: 8.6, // 273 s median queueing at ~32-job backlog
+    start_delay_median: 12.0,
+};
+
+pub const SUMMIT: Facility = Facility {
+    name: "summit",
+    scheduler: SchedKind::Lsf,
+    total_nodes: 4608,
+    cores_per_node: 42,
+    start_interval_median: 0.0,
+    start_delay_median: 8.0,
+};
+
+pub const CORI: Facility = Facility {
+    name: "cori",
+    scheduler: SchedKind::Slurm,
+    total_nodes: 2388,
+    cores_per_node: 32,
+    start_interval_median: 0.0,
+    start_delay_median: 2.7, // paper: median Slurm queueing delay 2.7 s
+};
+
+pub const FACILITIES: [&Facility; 3] = [&THETA, &SUMMIT, &CORI];
+
+pub fn facility(name: &str) -> &'static Facility {
+    FACILITIES.iter().find(|f| f.name == name).unwrap_or_else(|| panic!("unknown facility {name}"))
+}
+
+/// Light sources (data-producing client endpoints).
+pub const LIGHT_SOURCES: [&str; 2] = ["APS", "ALS"];
+
+/// Application runtime model: (mean, sd) seconds on one node of `fac`.
+///
+/// Calibration: Table 1 (MD on Theta), Fig. 8 medians (XPCS per system),
+/// §4.2 ("task durations on the order of 20 seconds (small input) or 1.5
+/// minutes (large input)").
+pub fn runtime_model(fac: &str, workload: &str) -> (f64, f64) {
+    match (fac, workload) {
+        ("theta", "md_small") => (18.6, 9.6),
+        ("theta", "md_large") => (89.1, 3.8),
+        ("theta", "xpcs") => (110.0, 8.0),
+        ("summit", "md_small") => (13.0, 5.0),
+        ("summit", "md_large") => (65.0, 5.0),
+        ("summit", "xpcs") => (108.0, 8.0),
+        ("cori", "md_small") => (9.5, 3.0),
+        ("cori", "md_large") => (45.0, 4.0),
+        ("cori", "xpcs") => (55.0, 6.0),
+        // Local-cluster baseline treats staging as filesystem copy; runtime
+        // identical to the Balsam case by construction (§4.1.5).
+        (_, w) => default_runtime(w),
+    }
+}
+
+fn default_runtime(workload: &str) -> (f64, f64) {
+    match workload {
+        "md_small" => (15.0, 5.0),
+        "md_large" => (70.0, 6.0),
+        "xpcs" => (90.0, 8.0),
+        _ => (10.0, 2.0),
+    }
+}
+
+/// Dataset payload sizes (bytes) per workload class (paper §4.1.3).
+pub fn payload_bytes(workload: &str) -> (u64, u64) {
+    match workload {
+        // (stage-in, stage-out)
+        "md_small" => (200_000_000, 40_000),    // 5000^2 f64 -> 40 kB eigenvalues
+        "md_large" => (1_150_000_000, 96_000),  // 12000^2 -> 96 kB
+        "xpcs" => (878_000_000, 55_000_000),    // 823 MB IMM + 55 MB HDF; HDF returns
+        _ => (1_000_000, 1_000),
+    }
+}
+
+/// Pilot-job application-launch overhead (s): paper §4.5 — "consistently
+/// in the range of 1 to 2 seconds".
+pub const APP_STARTUP_OVERHEAD: (f64, f64) = (1.0, 2.0);
+
+/// WAN route calibration: effective per-transfer-task bandwidth
+/// (MB/s, lognormal median + sigma) and aggregate route capacity (MB/s).
+/// Calibrated against Fig. 5 quartiles and the Fig. 9 arrival rates
+/// (Theta 16.0, Summit 19.6, Cori 29.6 datasets/min at 878 MB/dataset).
+pub struct RouteCal {
+    pub task_bw_median: f64,
+    pub sigma: f64,
+    pub capacity: f64,
+}
+
+/// Base calibration (the MD campaign: Table 1 / Figs. 3-4 sustain
+/// 2.0 jobs/s of 200 MB datasets into Theta, i.e. >=400 MB/s effective).
+/// The XPCS campaign measured markedly lower effective rates — the paper
+/// itself flags APS->ALCF DTN rates as anomalous ("needs further
+/// investigation", §4.3) — so the XPCS experiments apply
+/// [`XPCS_CAMPAIGN_BW_SCALE`] on top of this base (see `NetSim::bw_scale`).
+pub fn route_cal(light_source: &str, fac: &str) -> RouteCal {
+    let (m, cap) = match (light_source, fac) {
+        ("APS", "theta") => (310.0, 660.0),
+        ("APS", "summit") => (380.0, 810.0),
+        ("APS", "cori") => (540.0, 1150.0),
+        ("ALS", "theta") => (270.0, 580.0),
+        ("ALS", "summit") => (340.0, 720.0),
+        ("ALS", "cori") => (480.0, 1030.0),
+        // Local (intra-facility) staging: parallel filesystem copy, one to
+        // three orders of magnitude faster than WAN (Fig. 4).
+        _ => (1800.0, 8000.0),
+    };
+    RouteCal { task_bw_median: m, sigma: 0.35, capacity: cap }
+}
+
+/// Bandwidth derate reproducing the effective rates measured during the
+/// paper's XPCS campaign (Fig. 5 / Fig. 8 / Fig. 9 arrival rates:
+/// Theta 16.0, Summit 19.6, Cori 29.6 datasets/min at 878 MB/dataset).
+pub const XPCS_CAMPAIGN_BW_SCALE: f64 = 0.40;
+
+/// GridFTP pipelining efficiency vs files-per-task (Yildirim et al. [40]):
+/// one file cannot saturate a transfer task (default concurrency 4).
+pub fn gridftp_efficiency(nfiles: usize) -> f64 {
+    match nfiles {
+        0 | 1 => 0.45,
+        2 => 0.62,
+        3 => 0.78,
+        _ => 0.92,
+    }
+}
+
+/// Fixed per-transfer-task overhead (s): Globus API + GridFTP setup.
+pub const XFER_TASK_OVERHEAD: (f64, f64) = (3.0, 7.0);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_lookup() {
+        assert_eq!(facility("theta").scheduler, SchedKind::Cobalt);
+        assert_eq!(facility("cori").scheduler, SchedKind::Slurm);
+        assert_eq!(facility("summit").total_nodes, 4608);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown facility")]
+    fn unknown_facility_panics() {
+        facility("frontier");
+    }
+
+    #[test]
+    fn runtime_ordering_matches_fig8() {
+        // Fig 8/9: Cori runs XPCS ~2x faster than Theta/Summit.
+        let (theta, _) = runtime_model("theta", "xpcs");
+        let (summit, _) = runtime_model("summit", "xpcs");
+        let (cori, _) = runtime_model("cori", "xpcs");
+        assert!(cori < 0.6 * theta);
+        assert!((theta - summit).abs() < 10.0);
+    }
+
+    #[test]
+    fn md_large_slower_than_small_everywhere() {
+        for f in ["theta", "summit", "cori"] {
+            assert!(runtime_model(f, "md_large").0 > 3.0 * runtime_model(f, "md_small").0);
+        }
+    }
+
+    #[test]
+    fn route_ordering_matches_fig5() {
+        // Fig 5 + Fig 9: effective APS rates order Theta < Summit < Cori.
+        let t = route_cal("APS", "theta").task_bw_median;
+        let s = route_cal("APS", "summit").task_bw_median;
+        let c = route_cal("APS", "cori").task_bw_median;
+        assert!(t < s && s < c);
+        // Local staging is much faster still.
+        assert!(route_cal("local", "theta").task_bw_median > 3.0 * c);
+    }
+
+    #[test]
+    fn gridftp_efficiency_monotone() {
+        let mut last = 0.0;
+        for n in 0..8 {
+            let e = gridftp_efficiency(n);
+            assert!(e >= last && e <= 1.0);
+            last = e;
+        }
+    }
+
+    #[test]
+    fn payloads_match_paper() {
+        assert_eq!(payload_bytes("md_small").0, 200_000_000);
+        assert_eq!(payload_bytes("md_large").0, 1_150_000_000);
+        assert_eq!(payload_bytes("xpcs"), (878_000_000, 55_000_000));
+    }
+}

@@ -1,0 +1,242 @@
+//! Globus Transfer service simulator + the simulated transfer backend.
+//!
+//! Reproduces the service-level behaviour the paper depends on:
+//!
+//! * transfer **tasks** are queued per route and at most
+//!   [`MAX_ACTIVE_PER_ROUTE`] run concurrently (the "default limit of 3
+//!   concurrent transfer tasks" the paper calls out as a throughput
+//!   constraint, §4.5);
+//! * an activated task pays a setup overhead (API → GridFTP processes
+//!   moving bytes) before its flow appears on the WAN ([`NetSim`]);
+//! * task status is observable by polling, exactly like the Globus API the
+//!   site Transfer Module wraps.
+
+use std::collections::BTreeMap;
+
+use crate::service::models::{Direction, XferTaskId};
+use crate::site::platform::{TransferBackend, XferStatus};
+use crate::substrates::facility::XFER_TASK_OVERHEAD;
+use crate::substrates::netsim::{FlowId, NetSim};
+use crate::util::rng::Pcg;
+
+/// Globus default concurrency limit per (user, route).
+pub const MAX_ACTIVE_PER_ROUTE: usize = 3;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum TaskState {
+    Queued,
+    /// Slot granted; GridFTP warming up until `flow_at`.
+    Starting,
+    Active,
+    Done,
+}
+
+#[derive(Debug)]
+struct GTask {
+    route: (String, String),
+    remote: String,
+    fac: String,
+    bytes: u64,
+    nfiles: usize,
+    state: TaskState,
+    flow_at: f64,
+    flow: Option<FlowId>,
+    pub submitted_at: f64,
+    pub done_at: f64,
+}
+
+/// The Globus service + WAN bundle: implements the site transfer
+/// platform interface in simulated mode.
+pub struct SimTransfer {
+    pub net: NetSim,
+    tasks: BTreeMap<XferTaskId, GTask>,
+    next_id: u64,
+    rng: Pcg,
+    max_active: usize,
+}
+
+impl SimTransfer {
+    pub fn new(seed: u64) -> SimTransfer {
+        SimTransfer {
+            net: NetSim::new(),
+            tasks: BTreeMap::new(),
+            next_id: 0,
+            rng: Pcg::seeded(seed),
+            max_active: MAX_ACTIVE_PER_ROUTE,
+        }
+    }
+
+    /// Override the per-route active-task limit (ablation benches).
+    pub fn with_max_active(mut self, n: usize) -> SimTransfer {
+        self.max_active = n;
+        self
+    }
+
+    /// Start queued tasks where slots are free; collect finished flows.
+    pub fn pump(&mut self, now: f64) {
+        // 1. Finished flows -> Done tasks.
+        for fid in self.net.poll(now) {
+            if let Some((_, t)) = self.tasks.iter_mut().find(|(_, t)| t.flow == Some(fid)) {
+                t.state = TaskState::Done;
+                t.done_at = now;
+            }
+        }
+        // 2. Starting tasks whose warm-up elapsed get their flow.
+        let starting: Vec<XferTaskId> = self
+            .tasks
+            .iter()
+            .filter(|(_, t)| t.state == TaskState::Starting && now >= t.flow_at)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in starting {
+            let (remote, fac, bytes, nfiles) = {
+                let t = &self.tasks[&id];
+                (t.remote.clone(), t.fac.clone(), t.bytes, t.nfiles)
+            };
+            let flow = self.net.add_flow(now, &remote, &fac, bytes, nfiles, &mut self.rng);
+            let t = self.tasks.get_mut(&id).unwrap();
+            t.flow = Some(flow);
+            t.state = TaskState::Active;
+        }
+        // 3. Grant slots to queued tasks per route, FIFO.
+        let mut active_per_route: BTreeMap<(String, String), usize> = BTreeMap::new();
+        for t in self.tasks.values() {
+            if matches!(t.state, TaskState::Starting | TaskState::Active) {
+                *active_per_route.entry(t.route.clone()).or_default() += 1;
+            }
+        }
+        let queued: Vec<XferTaskId> = self
+            .tasks
+            .iter()
+            .filter(|(_, t)| t.state == TaskState::Queued)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in queued {
+            let route = self.tasks[&id].route.clone();
+            let n = active_per_route.entry(route).or_default();
+            if *n < self.max_active {
+                *n += 1;
+                let overhead = self.rng.uniform(XFER_TASK_OVERHEAD.0, XFER_TASK_OVERHEAD.1);
+                let t = self.tasks.get_mut(&id).unwrap();
+                t.state = TaskState::Starting;
+                t.flow_at = now + overhead;
+            }
+        }
+    }
+
+    pub fn task_count(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// (submitted_at, done_at, bytes) for completed tasks — Fig. 5 input.
+    pub fn completed_tasks(&self) -> Vec<(f64, f64, u64)> {
+        self.tasks
+            .values()
+            .filter(|t| t.state == TaskState::Done)
+            .map(|t| (t.submitted_at, t.done_at, t.bytes))
+            .collect()
+    }
+}
+
+impl TransferBackend for SimTransfer {
+    fn submit(
+        &mut self,
+        now: f64,
+        remote: &str,
+        fac: &str,
+        _direction: Direction,
+        bytes: u64,
+        nfiles: usize,
+    ) -> XferTaskId {
+        self.next_id += 1;
+        let id = XferTaskId(self.next_id);
+        self.tasks.insert(
+            id,
+            GTask {
+                route: (remote.to_string(), fac.to_string()),
+                remote: remote.to_string(),
+                fac: fac.to_string(),
+                bytes,
+                nfiles: nfiles.max(1),
+                state: TaskState::Queued,
+                flow_at: f64::INFINITY,
+                flow: None,
+                submitted_at: now,
+                done_at: f64::NAN,
+            },
+        );
+        self.pump(now);
+        id
+    }
+
+    fn poll(&mut self, now: f64, task: XferTaskId) -> XferStatus {
+        self.pump(now);
+        match self.tasks.get(&task).map(|t| t.state) {
+            Some(TaskState::Queued) => XferStatus::Queued,
+            Some(TaskState::Starting) | Some(TaskState::Active) => XferStatus::Active,
+            Some(TaskState::Done) => XferStatus::Done,
+            None => XferStatus::Error,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_lifecycle() {
+        let mut g = SimTransfer::new(1);
+        let id = g.submit(0.0, "APS", "theta", Direction::In, 500_000_000, 8);
+        assert_eq!(g.poll(0.0, id), XferStatus::Active); // slot free -> starting
+        // Warm-up window: still active, no data yet.
+        let mut t = 0.0;
+        while g.poll(t, id) != XferStatus::Done {
+            t += 1.0;
+            assert!(t < 300.0, "transfer did not finish");
+        }
+        // 500 MB at theta-class rates plus overhead: seconds, not minutes.
+        assert!(t > 3.0, "finished implausibly fast: {t}");
+    }
+
+    #[test]
+    fn concurrency_limit_enforced_per_route() {
+        let mut g = SimTransfer::new(2);
+        let ids: Vec<XferTaskId> = (0..6)
+            .map(|_| g.submit(0.0, "APS", "theta", Direction::In, 5_000_000_000, 16))
+            .collect();
+        g.pump(1.0);
+        let active = ids.iter().filter(|&&i| g.poll(1.0, i) == XferStatus::Active).count();
+        let queued = ids.iter().filter(|&&i| g.poll(1.0, i) == XferStatus::Queued).count();
+        assert_eq!(active, MAX_ACTIVE_PER_ROUTE);
+        assert_eq!(queued, 3);
+        // A different route still gets slots.
+        let other = g.submit(1.0, "ALS", "cori", Direction::In, 1_000_000, 1);
+        assert_eq!(g.poll(1.5, other), XferStatus::Active);
+    }
+
+    #[test]
+    fn queued_tasks_start_as_slots_free() {
+        let mut g = SimTransfer::new(3);
+        let ids: Vec<XferTaskId> = (0..4)
+            .map(|_| g.submit(0.0, "APS", "cori", Direction::In, 100_000_000, 16))
+            .collect();
+        let mut t = 0.0;
+        while ids.iter().any(|&i| g.poll(t, i) != XferStatus::Done) {
+            t += 1.0;
+            assert!(t < 600.0);
+        }
+        let done = g.completed_tasks();
+        assert_eq!(done.len(), 4);
+        // Durations (submit -> done) must be finite and ordered sanely.
+        for (s, d, _) in done {
+            assert!(d > s);
+        }
+    }
+
+    #[test]
+    fn unknown_task_is_error() {
+        let mut g = SimTransfer::new(4);
+        assert_eq!(g.poll(0.0, XferTaskId(999)), XferStatus::Error);
+    }
+}

@@ -1,0 +1,15 @@
+//! Facility substrates: everything the paper's evaluation ran *on*.
+//!
+//! The paper used real DOE infrastructure — Theta/Summit/Cori, the
+//! APS/ALS light sources, ESNet, Globus Transfer, and the Cobalt/Slurm/
+//! LSF batch schedulers. None of that is reachable from this repo, so
+//! each piece is rebuilt as a calibrated simulator (constants in
+//! [`facility`], sources cited in DESIGN.md §6). The site agent talks to
+//! these through the same *platform interfaces* it uses for the real
+//! backends in real-time mode, so no coordinator code knows whether it is
+//! driving a simulator or the real thing.
+
+pub mod facility;
+pub mod netsim;
+pub mod globus;
+pub mod batchsim;

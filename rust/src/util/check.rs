@@ -1,0 +1,78 @@
+//! Mini property-testing harness (replaces the unavailable `proptest`).
+//!
+//! `forall` runs a property over N generated cases from a seeded [`Pcg`];
+//! on failure it reports the case index and seed so the exact case can be
+//! replayed deterministically. This is intentionally simple — no shrinking
+//! — but every generated case is reproducible from (seed, index), which
+//! has proven sufficient to debug coordinator invariants.
+
+use crate::util::rng::Pcg;
+
+/// Run `prop` over `cases` generated inputs; panic with replay info on failure.
+pub fn forall<T, G, P>(name: &str, seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Pcg) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    for i in 0..cases {
+        // Each case gets an independent deterministic stream.
+        let mut rng = Pcg::new(seed ^ (i as u64).wrapping_mul(0x9e3779b97f4a7c15), i as u64);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {i}/{cases} (seed={seed}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Assert helper producing `Result<(), String>` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        forall("sum-commutes", 1, 50, |r| (r.below(100), r.below(100)), |&(a, b)| {
+            n += 1;
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_panics_with_context() {
+        forall("always-fails", 2, 10, |r| r.below(5), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn cases_are_deterministic_across_runs() {
+        let mut first: Vec<u64> = Vec::new();
+        forall("collect", 3, 20, |r| r.next_u64(), |&x| {
+            first.push(x);
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        forall("collect", 3, 20, |r| r.next_u64(), |&x| {
+            second.push(x);
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

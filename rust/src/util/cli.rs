@@ -1,0 +1,108 @@
+//! Tiny declarative CLI argument parser (replaces the unavailable `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! subcommands (handled by the caller peeling the first positional).
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: flags, key-value options, and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub flags: Vec<String>,
+    pub opts: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.opts.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// First positional (subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(String::as_str)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse("repro fig9 --nodes 32 --seed=7 --verbose --out report.json");
+        assert_eq!(a.subcommand(), Some("repro"));
+        assert_eq!(a.positional, vec!["repro", "fig9"]);
+        assert_eq!(a.u64_or("nodes", 0), 32);
+        assert_eq!(a.u64_or("seed", 0), 7);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.str_or("out", ""), "report.json");
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.u64_or("nodes", 4), 4);
+        assert_eq!(a.f64_or("rate", 2.0), 2.0);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("x --fast");
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn negative_number_value() {
+        // "--key value" form where value starts with '-' digit still binds
+        // via --key=value form.
+        let a = parse("x --delta=-3");
+        assert_eq!(a.f64_or("delta", 0.0), -3.0);
+    }
+}

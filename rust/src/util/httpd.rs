@@ -1,0 +1,316 @@
+//! Minimal HTTP/1.1 server + client over `std::net` (replaces hyper/reqwest).
+//!
+//! The paper's architecture is "all components communicate with the API
+//! service as HTTPS clients" (§3.1). In real-time mode this transport
+//! carries the same JSON API the in-memory transport carries in simulated
+//! mode. One-request-per-connection keeps the implementation small; the
+//! service is localhost-scoped in this repo, so connection reuse is not a
+//! bottleneck (verified in benches).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_str(&self) -> std::borrow::Cow<'_, str> {
+        String::from_utf8_lossy(&self.body)
+    }
+}
+
+/// An HTTP response under construction.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub body: Vec<u8>,
+    pub content_type: &'static str,
+}
+
+impl Response {
+    pub fn ok_json(body: String) -> Response {
+        Response { status: 200, body: body.into_bytes(), content_type: "application/json" }
+    }
+
+    pub fn error(status: u16, msg: &str) -> Response {
+        Response { status, body: msg.as_bytes().to_vec(), content_type: "text/plain" }
+    }
+
+    fn reason(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            201 => "Created",
+            400 => "Bad Request",
+            401 => "Unauthorized",
+            404 => "Not Found",
+            409 => "Conflict",
+            500 => "Internal Server Error",
+            _ => "Unknown",
+        }
+    }
+}
+
+/// A running HTTP server; dropping it does not stop the thread — call
+/// [`Server::stop`] (tests) or let the process exit (examples).
+pub struct Server {
+    pub addr: String,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Serve `handler` on `addr` ("127.0.0.1:0" picks a free port).
+    pub fn serve<F>(addr: &str, handler: F) -> Result<Server>
+    where
+        F: Fn(Request) -> Response + Send + Sync + 'static,
+    {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handler = Arc::new(handler);
+        let handle = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let h = handler.clone();
+                        std::thread::spawn(move || {
+                            let _ = handle_conn(stream, &*h);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(Server { addr: local.to_string(), stop, handle: Some(handle) })
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn<F: Fn(Request) -> Response>(stream: TcpStream, handler: &F) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let req = read_request(&mut reader)?;
+    let resp = handler(req);
+    write_response(&mut &stream, &resp)?;
+    Ok(())
+}
+
+fn read_request<R: BufRead>(reader: &mut R) -> Result<Request> {
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or_else(|| anyhow!("empty request line"))?.to_string();
+    let path = parts.next().ok_or_else(|| anyhow!("missing path"))?.to_string();
+    let version = parts.next().unwrap_or("");
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported version {version:?}");
+    }
+    let mut headers = Vec::new();
+    let mut content_len = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            let (k, v) = (k.trim().to_string(), v.trim().to_string());
+            if k.eq_ignore_ascii_case("content-length") {
+                content_len = v.parse().context("bad content-length")?;
+            }
+            headers.push((k, v));
+        }
+    }
+    let mut body = vec![0u8; content_len];
+    reader.read_exact(&mut body)?;
+    Ok(Request { method, path, headers, body })
+}
+
+fn write_response<W: Write>(w: &mut W, resp: &Response) -> Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+        resp.status,
+        resp.reason(),
+        resp.content_type,
+        resp.body.len()
+    )?;
+    w.write_all(&resp.body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Blocking HTTP client: one request per connection.
+pub fn request(
+    addr: impl ToSocketAddrs,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> Result<(u16, Vec<u8>)> {
+    let mut stream = TcpStream::connect(addr).context("connect")?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    write!(stream, "{method} {path} HTTP/1.1\r\nhost: balsam\r\ncontent-length: {}\r\n", body.len())?;
+    for (k, v) in headers {
+        write!(stream, "{k}: {v}\r\n")?;
+    }
+    write!(stream, "\r\n")?;
+    stream.write_all(body)?;
+    stream.flush()?;
+
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("bad status line {status_line:?}"))?;
+    let mut content_len: Option<usize> = None;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_len = v.trim().parse().ok();
+            }
+        }
+    }
+    let mut body = Vec::new();
+    match content_len {
+        Some(n) => {
+            body.resize(n, 0);
+            reader.read_exact(&mut body)?;
+        }
+        None => {
+            reader.read_to_end(&mut body)?;
+        }
+    }
+    Ok((status, body))
+}
+
+/// POST JSON convenience with a bearer token (the Balsam client pattern).
+pub fn post_json(addr: &str, path: &str, token: &str, body: &str) -> Result<(u16, String)> {
+    let auth = format!("Bearer {token}");
+    let (status, bytes) = request(
+        addr,
+        "POST",
+        path,
+        &[("authorization", &auth), ("content-type", "application/json")],
+        body.as_bytes(),
+    )?;
+    Ok((status, String::from_utf8_lossy(&bytes).into_owned()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_get() {
+        let srv = Server::serve("127.0.0.1:0", |req| {
+            assert_eq!(req.method, "GET");
+            Response::ok_json(format!("{{\"path\":\"{}\"}}", req.path))
+        })
+        .unwrap();
+        let (status, body) = request(&srv.addr, "GET", "/jobs?state=READY", &[], b"").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(String::from_utf8_lossy(&body), "{\"path\":\"/jobs?state=READY\"}");
+        srv.stop();
+    }
+
+    #[test]
+    fn roundtrip_post_with_body_and_headers() {
+        let srv = Server::serve("127.0.0.1:0", |req| {
+            assert_eq!(req.header("authorization"), Some("Bearer tok-1"));
+            Response::ok_json(req.body_str().into_owned())
+        })
+        .unwrap();
+        let (status, body) = post_json(&srv.addr, "/jobs", "tok-1", "{\"n\": 3}").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, "{\"n\": 3}");
+        srv.stop();
+    }
+
+    #[test]
+    fn error_statuses_propagate() {
+        let srv =
+            Server::serve("127.0.0.1:0", |_req| Response::error(401, "bad token")).unwrap();
+        let (status, body) = request(&srv.addr, "POST", "/x", &[], b"{}").unwrap();
+        assert_eq!(status, 401);
+        assert_eq!(String::from_utf8_lossy(&body), "bad token");
+        srv.stop();
+    }
+
+    #[test]
+    fn concurrent_requests() {
+        let srv = Server::serve("127.0.0.1:0", |req| {
+            std::thread::sleep(Duration::from_millis(20));
+            Response::ok_json(req.body_str().into_owned())
+        })
+        .unwrap();
+        let addr = srv.addr.clone();
+        let threads: Vec<_> = (0..8)
+            .map(|i| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let body = format!("{{\"i\":{i}}}");
+                    let (s, b) = post_json(&addr, "/t", "tok", &body).unwrap();
+                    assert_eq!(s, 200);
+                    assert_eq!(b, body);
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        srv.stop();
+    }
+
+    #[test]
+    fn large_body() {
+        let srv = Server::serve("127.0.0.1:0", |req| {
+            Response::ok_json(req.body.len().to_string())
+        })
+        .unwrap();
+        let big = "x".repeat(1 << 20);
+        let (_, body) = post_json(&srv.addr, "/big", "t", &big).unwrap();
+        assert_eq!(body, (1 << 20).to_string());
+        srv.stop();
+    }
+}

@@ -1,0 +1,14 @@
+//! From-scratch substrate utilities.
+//!
+//! The build environment ships only the `xla` crate's dependency closure,
+//! so everything a production coordinator would normally pull from the
+//! ecosystem (PRNG, stats, JSON, YAML config, CLI parsing, HTTP transport,
+//! property testing) is implemented — and unit-tested — here.
+
+pub mod rng;
+pub mod stats;
+pub mod json;
+pub mod yamlish;
+pub mod cli;
+pub mod check;
+pub mod httpd;

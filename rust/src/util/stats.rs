@@ -1,0 +1,285 @@
+//! Streaming statistics, percentiles, histograms (replaces `statrs` etc.).
+//!
+//! The paper's evaluation reports mean ± sd with 95th-percentile values
+//! (Table 1), quartile boxes (Fig. 5), and stage-latency histograms
+//! (Fig. 4); this module provides exactly those aggregations over the
+//! Balsam event log.
+
+/// Online mean/variance (Welford) plus a retained sample for percentiles.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.samples.push(x);
+    }
+
+    pub fn extend<I: IntoIterator<Item = f64>>(&mut self, xs: I) {
+        for x in xs {
+            self.add(x);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample standard deviation.
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Percentile by linear interpolation (q in [0, 100]).
+    pub fn percentile(&self, q: f64) -> f64 {
+        percentile(&self.samples, q)
+    }
+
+    pub fn quartiles(&self) -> (f64, f64, f64) {
+        (self.percentile(25.0), self.percentile(50.0), self.percentile(75.0))
+    }
+
+    /// Render as the paper's Table-1 cell format: `mean ± sd (p95)`.
+    pub fn table_cell(&self) -> String {
+        format!("{:.1} ± {:.1} ({:.1})", self.mean(), self.std(), self.percentile(95.0))
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+}
+
+/// Percentile of an unsorted slice (linear interpolation, q in [0,100]).
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(f64::total_cmp);
+    let rank = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Fixed-bin histogram over [lo, hi) with overflow/underflow buckets.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Histogram { lo, hi, bins: vec![0; nbins], underflow: 0, overflow: 0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let n = self.bins.len();
+            let idx = ((x - self.lo) / (self.hi - self.lo) * n as f64) as usize;
+            self.bins[idx.min(n - 1)] += 1;
+        }
+    }
+
+    pub fn bins(&self) -> &[u64] {
+        &self.bins
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bins.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    /// Bin edges (left edge of each bin).
+    pub fn edges(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        (0..self.bins.len()).map(|i| self.lo + w * i as f64).collect()
+    }
+
+    /// Compact ASCII rendering for experiment reports.
+    pub fn ascii(&self, width: usize) -> String {
+        let maxc = self.bins.iter().copied().max().unwrap_or(1).max(1);
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        let mut out = String::new();
+        for (i, &c) in self.bins.iter().enumerate() {
+            let bar = "#".repeat((c as usize * width).div_ceil(maxc as usize).min(width));
+            out.push_str(&format!(
+                "[{:>8.1},{:>8.1}) {:>6} {}\n",
+                self.lo + w * i as f64,
+                self.lo + w * (i + 1) as f64,
+                c,
+                bar
+            ));
+        }
+        out
+    }
+}
+
+/// Throughput timeline: cumulative event count sampled on a fixed grid.
+/// (The Fig. 3/7/9 curves are exactly this over job-state events.)
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    times: Vec<f64>,
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, t: f64) {
+        self.times.push(t);
+    }
+
+    pub fn count(&self) -> usize {
+        self.times.len()
+    }
+
+    /// Cumulative count at time `t`.
+    pub fn cum_at(&self, t: f64) -> usize {
+        let mut v = self.times.clone();
+        v.sort_by(f64::total_cmp);
+        v.partition_point(|&x| x <= t)
+    }
+
+    /// Sample the cumulative curve at `n` evenly spaced points over [0, end].
+    pub fn curve(&self, end: f64, n: usize) -> Vec<(f64, usize)> {
+        let mut v = self.times.clone();
+        v.sort_by(f64::total_cmp);
+        (0..=n)
+            .map(|i| {
+                let t = end * i as f64 / n as f64;
+                (t, v.partition_point(|&x| x <= t))
+            })
+            .collect()
+    }
+
+    /// Average completion rate (events/sec) over the span [t0, t1].
+    pub fn rate(&self, t0: f64, t1: f64) -> f64 {
+        let mut v = self.times.clone();
+        v.sort_by(f64::total_cmp);
+        let n = v.partition_point(|&x| x <= t1) - v.partition_point(|&x| x < t0);
+        n as f64 / (t1 - t0).max(1e-9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_moments() {
+        let mut s = Summary::new();
+        s.extend([2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std() - 2.138089935299395).abs() < 1e-9);
+        assert_eq!(s.count(), 8);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn percentile_interpolation() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_of_empty_is_nan() {
+        assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn quartiles_of_uniform() {
+        let mut s = Summary::new();
+        s.extend((0..=100).map(|i| i as f64));
+        let (q1, q2, q3) = s.quartiles();
+        assert_eq!((q1, q2, q3), (25.0, 50.0, 75.0));
+    }
+
+    #[test]
+    fn histogram_bins_and_overflow() {
+        let mut h = Histogram::new(0.0, 10.0, 5);
+        for x in [0.0, 1.9, 2.0, 9.99, -1.0, 10.0, 55.0] {
+            h.add(x);
+        }
+        assert_eq!(h.bins(), &[2, 1, 0, 0, 1]);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 2);
+        assert_eq!(h.total(), 7);
+    }
+
+    #[test]
+    fn histogram_ascii_renders() {
+        let mut h = Histogram::new(0.0, 4.0, 2);
+        h.add(1.0);
+        h.add(3.0);
+        h.add(3.5);
+        let s = h.ascii(10);
+        assert!(s.contains('#'));
+        assert_eq!(s.lines().count(), 2);
+    }
+
+    #[test]
+    fn timeline_cumulative_and_rate() {
+        let mut tl = Timeline::new();
+        for t in [1.0, 2.0, 3.0, 10.0] {
+            tl.record(t);
+        }
+        assert_eq!(tl.cum_at(2.5), 2);
+        assert_eq!(tl.cum_at(100.0), 4);
+        assert!((tl.rate(0.0, 10.0) - 0.4).abs() < 1e-12);
+        let curve = tl.curve(10.0, 10);
+        assert_eq!(curve.last().unwrap().1, 4);
+    }
+
+    #[test]
+    fn table_cell_format() {
+        let mut s = Summary::new();
+        s.extend([17.0, 17.2, 16.8]);
+        let cell = s.table_cell();
+        assert!(cell.contains('±') && cell.contains('('), "{cell}");
+    }
+}

@@ -1,0 +1,359 @@
+//! YAML-subset parser for Balsam site configuration files.
+//!
+//! The paper's sites are configured by "a YAML file and a job template
+//! shell script" (§3.2). This parser supports the subset those configs
+//! use: nested mappings by 2-space indentation, block lists (`- item`),
+//! scalars (string / int / float / bool / null), inline comments, and
+//! quoted strings. It deliberately rejects anchors, flow collections, and
+//! multi-document streams.
+
+use std::collections::BTreeMap;
+
+/// A parsed YAML-ish value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Yaml {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    List(Vec<Yaml>),
+    Map(BTreeMap<String, Yaml>),
+}
+
+impl Yaml {
+    pub fn get(&self, key: &str) -> Option<&Yaml> {
+        match self {
+            Yaml::Map(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// Dotted-path lookup: `get_path("scheduler.sync_period")`.
+    pub fn get_path(&self, path: &str) -> Option<&Yaml> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.get(part)?;
+        }
+        Some(cur)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Yaml::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Yaml::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().filter(|x| *x >= 0.0).map(|x| x as u64)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Yaml::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_list(&self) -> Option<&[Yaml]> {
+        match self {
+            Yaml::List(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Typed accessors with defaults — the shape site configs want.
+    pub fn f64_or(&self, path: &str, default: f64) -> f64 {
+        self.get_path(path).and_then(Yaml::as_f64).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, path: &str, default: u64) -> u64 {
+        self.get_path(path).and_then(Yaml::as_u64).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, path: &str, default: &'a str) -> &'a str {
+        self.get_path(path).and_then(Yaml::as_str).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get_path(path).and_then(Yaml::as_bool).unwrap_or(default)
+    }
+
+    pub fn parse(text: &str) -> Result<Yaml, YamlError> {
+        let lines = preprocess(text);
+        let (v, rest) = parse_block(&lines, 0, 0)?;
+        if rest != lines.len() {
+            return Err(YamlError { line: lines[rest].no, msg: "unexpected dedent/indent".into() });
+        }
+        Ok(v)
+    }
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+#[error("yaml parse error at line {line}: {msg}")]
+pub struct YamlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+#[derive(Debug)]
+struct Line {
+    no: usize,
+    indent: usize,
+    text: String,
+}
+
+fn preprocess(text: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let without_comment = strip_comment(raw);
+        let trimmed = without_comment.trim_end();
+        if trimmed.trim().is_empty() {
+            continue;
+        }
+        let indent = trimmed.len() - trimmed.trim_start().len();
+        out.push(Line { no: i + 1, indent, text: trimmed.trim_start().to_string() });
+    }
+    out
+}
+
+fn strip_comment(s: &str) -> String {
+    let mut in_quote: Option<char> = None;
+    let mut out = String::new();
+    for c in s.chars() {
+        match (c, in_quote) {
+            ('#', None) => break,
+            ('"', None) | ('\'', None) => in_quote = Some(c),
+            ('"', Some('"')) | ('\'', Some('\'')) => in_quote = None,
+            _ => {}
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Parse a block (map or list) at the given indent; returns (value, next line idx).
+fn parse_block(lines: &[Line], start: usize, indent: usize) -> Result<(Yaml, usize), YamlError> {
+    if start >= lines.len() {
+        return Ok((Yaml::Null, start));
+    }
+    if lines[start].text.starts_with("- ") || lines[start].text == "-" {
+        parse_list(lines, start, indent)
+    } else {
+        parse_map(lines, start, indent)
+    }
+}
+
+fn parse_list(lines: &[Line], mut i: usize, indent: usize) -> Result<(Yaml, usize), YamlError> {
+    let mut items = Vec::new();
+    while i < lines.len() && lines[i].indent == indent {
+        let line = &lines[i];
+        if !(line.text.starts_with("- ") || line.text == "-") {
+            break;
+        }
+        let rest = line.text[1..].trim_start();
+        if rest.is_empty() {
+            let (v, next) = parse_block(lines, i + 1, child_indent(lines, i + 1, indent)?)?;
+            items.push(v);
+            i = next;
+        } else if rest.contains(':') && !looks_quoted(rest) {
+            // "- key: value" — inline first pair of a nested map.
+            let mut synthetic = vec![Line { no: line.no, indent: indent + 2, text: rest.to_string() }];
+            let mut j = i + 1;
+            while j < lines.len() && lines[j].indent > indent {
+                synthetic.push(Line {
+                    no: lines[j].no,
+                    indent: lines[j].indent,
+                    text: lines[j].text.clone(),
+                });
+                j += 1;
+            }
+            let (v, _) = parse_map(&synthetic, 0, indent + 2)?;
+            items.push(v);
+            i = j;
+        } else {
+            items.push(scalar(rest));
+            i += 1;
+        }
+    }
+    Ok((Yaml::List(items), i))
+}
+
+fn parse_map(lines: &[Line], mut i: usize, indent: usize) -> Result<(Yaml, usize), YamlError> {
+    let mut map = BTreeMap::new();
+    while i < lines.len() {
+        let line = &lines[i];
+        if line.indent < indent {
+            break;
+        }
+        if line.indent > indent {
+            return Err(YamlError { line: line.no, msg: "unexpected indent".into() });
+        }
+        let Some(colon) = find_key_colon(&line.text) else {
+            return Err(YamlError { line: line.no, msg: "expected 'key: value'".into() });
+        };
+        let key = unquote(line.text[..colon].trim());
+        let val_text = line.text[colon + 1..].trim();
+        if val_text.is_empty() {
+            if i + 1 < lines.len() && lines[i + 1].indent > indent {
+                let (v, next) = parse_block(lines, i + 1, lines[i + 1].indent)?;
+                map.insert(key, v);
+                i = next;
+            } else {
+                map.insert(key, Yaml::Null);
+                i += 1;
+            }
+        } else {
+            map.insert(key, scalar(val_text));
+            i += 1;
+        }
+    }
+    Ok((Yaml::Map(map), i))
+}
+
+fn child_indent(lines: &[Line], i: usize, parent: usize) -> Result<usize, YamlError> {
+    if i < lines.len() && lines[i].indent > parent {
+        Ok(lines[i].indent)
+    } else {
+        Ok(parent + 2)
+    }
+}
+
+fn looks_quoted(s: &str) -> bool {
+    s.starts_with('"') || s.starts_with('\'')
+}
+
+fn find_key_colon(s: &str) -> Option<usize> {
+    let mut in_quote: Option<char> = None;
+    for (i, c) in s.char_indices() {
+        match (c, in_quote) {
+            ('"', None) | ('\'', None) => in_quote = Some(c),
+            ('"', Some('"')) | ('\'', Some('\'')) => in_quote = None,
+            (':', None) => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn unquote(s: &str) -> String {
+    let s = s.trim();
+    if s.len() >= 2
+        && ((s.starts_with('"') && s.ends_with('"'))
+            || (s.starts_with('\'') && s.ends_with('\'')))
+    {
+        s[1..s.len() - 1].to_string()
+    } else {
+        s.to_string()
+    }
+}
+
+fn scalar(s: &str) -> Yaml {
+    let t = s.trim();
+    if looks_quoted(t) {
+        return Yaml::Str(unquote(t));
+    }
+    match t {
+        "null" | "~" => return Yaml::Null,
+        "true" | "True" => return Yaml::Bool(true),
+        "false" | "False" => return Yaml::Bool(false),
+        _ => {}
+    }
+    if let Ok(x) = t.parse::<f64>() {
+        return Yaml::Num(x);
+    }
+    Yaml::Str(t.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SITE_CFG: &str = r#"
+# Example Balsam site config (paper §3.2)
+site:
+  name: theta
+  path: /projects/xpcs/site
+scheduler:
+  interface: cobalt          # cobalt | slurm | lsf
+  sync_period: 10
+  partitions:
+    - queue: default
+      max_nodes: 4392
+    - queue: debug-cache-quad
+      max_nodes: 8
+elastic_queue:
+  min_nodes: 8
+  max_nodes: 32
+  max_queued: 4
+  wall_time_min: 20
+  use_backfill: true
+transfer:
+  globus_endpoint: "abc-123"
+  max_concurrent: 3
+  batch_size: 16
+  trusted_remotes:
+    - aps
+    - als
+"#;
+
+    #[test]
+    fn parses_site_config() {
+        let y = Yaml::parse(SITE_CFG).unwrap();
+        assert_eq!(y.str_or("site.name", "?"), "theta");
+        assert_eq!(y.str_or("scheduler.interface", "?"), "cobalt");
+        assert_eq!(y.u64_or("elastic_queue.max_nodes", 0), 32);
+        assert!(y.bool_or("elastic_queue.use_backfill", false));
+        assert_eq!(y.str_or("transfer.globus_endpoint", ""), "abc-123");
+        let parts = y.get_path("scheduler.partitions").unwrap().as_list().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[1].get("queue").unwrap().as_str(), Some("debug-cache-quad"));
+        let remotes = y.get_path("transfer.trusted_remotes").unwrap().as_list().unwrap();
+        assert_eq!(remotes[0].as_str(), Some("aps"));
+    }
+
+    #[test]
+    fn scalars() {
+        let y = Yaml::parse("a: 1\nb: 2.5\nc: true\nd: null\ne: hi there\nf: 'q: x'").unwrap();
+        assert_eq!(y.f64_or("a", 0.0), 1.0);
+        assert_eq!(y.f64_or("b", 0.0), 2.5);
+        assert!(y.bool_or("c", false));
+        assert_eq!(y.get("d"), Some(&Yaml::Null));
+        assert_eq!(y.str_or("e", ""), "hi there");
+        assert_eq!(y.str_or("f", ""), "q: x");
+    }
+
+    #[test]
+    fn comments_stripped_but_not_in_quotes() {
+        let y = Yaml::parse("a: 5 # five\nb: \"x # y\"").unwrap();
+        assert_eq!(y.f64_or("a", 0.0), 5.0);
+        assert_eq!(y.str_or("b", ""), "x # y");
+    }
+
+    #[test]
+    fn top_level_list() {
+        let y = Yaml::parse("- 1\n- two\n- true").unwrap();
+        let l = y.as_list().unwrap();
+        assert_eq!(l.len(), 3);
+        assert_eq!(l[1].as_str(), Some("two"));
+    }
+
+    #[test]
+    fn defaults_on_missing_paths() {
+        let y = Yaml::parse("a: 1").unwrap();
+        assert_eq!(y.u64_or("nope.deep", 7), 7);
+        assert_eq!(y.str_or("x", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn bad_indent_is_error() {
+        assert!(Yaml::parse("a: 1\n    b: 2\nc: 3").is_err());
+    }
+}

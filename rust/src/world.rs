@@ -1,0 +1,121 @@
+//! The simulated world: service + every facility substrate, owned in one
+//! place so single-threaded discrete-event runs are deterministic.
+//!
+//! Site-agent actors destructure the world into disjoint `&mut` borrows
+//! (service connection, transfer fabric, per-facility scheduler, executor)
+//! and hand them to the platform-interface-typed module code.
+
+use std::collections::BTreeMap;
+
+use crate::service::api::{ApiConn, ApiError, ApiRequest, ApiResponse};
+use crate::service::ServiceCore;
+use crate::site::platform::{ExecBackend, RunId, RunStatus};
+use crate::substrates::batchsim::BatchSim;
+use crate::substrates::facility::{self, APP_STARTUP_OVERHEAD};
+use crate::substrates::globus::SimTransfer;
+use crate::util::rng::Pcg;
+
+/// Simulated application executor (the AppRun platform interface in
+/// simulated mode): completion times sampled from the calibrated runtime
+/// model; failure injection via `fail_prob`.
+pub struct SimExec {
+    runs: BTreeMap<RunId, (f64, bool)>, // id -> (done_t, ok)
+    next_id: u64,
+    rng: Pcg,
+    pub fail_prob: f64,
+}
+
+impl SimExec {
+    pub fn new(seed: u64) -> SimExec {
+        SimExec { runs: BTreeMap::new(), next_id: 0, rng: Pcg::seeded(seed ^ 0xeeec), fail_prob: 0.0 }
+    }
+}
+
+impl ExecBackend for SimExec {
+    fn start(&mut self, now: f64, fac: &str, workload: &str, _num_nodes: u32) -> RunId {
+        let (mean, sd) = facility::runtime_model(fac, workload);
+        let startup = self.rng.uniform(APP_STARTUP_OVERHEAD.0, APP_STARTUP_OVERHEAD.1);
+        let dur = (mean + sd * self.rng.normal()).max(0.3 * mean);
+        let ok = !self.rng.chance(self.fail_prob);
+        self.next_id += 1;
+        let id = RunId(self.next_id);
+        self.runs.insert(id, (now + startup + dur, ok));
+        id
+    }
+
+    fn poll(&mut self, now: f64, id: RunId) -> RunStatus {
+        match self.runs.get(&id) {
+            Some(&(done_t, ok)) if now >= done_t => RunStatus::Done { ok },
+            Some(_) => RunStatus::Running,
+            None => RunStatus::Done { ok: false },
+        }
+    }
+
+    fn kill(&mut self, _now: f64, id: RunId) {
+        self.runs.remove(&id);
+    }
+}
+
+/// Everything the simulation owns.
+pub struct World {
+    pub now: f64,
+    pub service: ServiceCore,
+    /// Shared Globus + WAN fabric (routes/limits are global, §4.5).
+    pub xfer: SimTransfer,
+    /// Per-facility batch schedulers.
+    pub scheds: BTreeMap<String, BatchSim>,
+    /// Per-facility executors.
+    pub execs: BTreeMap<String, SimExec>,
+    pub rng: Pcg,
+}
+
+impl World {
+    /// Standard three-supercomputer world with `reserved_nodes` exclusive
+    /// reservations at each facility (paper §4.1.2).
+    pub fn standard(seed: u64, reserved_nodes: u32) -> World {
+        let mut scheds = BTreeMap::new();
+        let mut execs = BTreeMap::new();
+        for (i, fac) in ["theta", "summit", "cori"].iter().enumerate() {
+            scheds.insert(fac.to_string(), BatchSim::new(fac, reserved_nodes, seed + 11 * i as u64));
+            execs.insert(fac.to_string(), SimExec::new(seed + 101 * i as u64));
+        }
+        World {
+            now: 0.0,
+            service: ServiceCore::new(b"sim-secret"),
+            xfer: SimTransfer::new(seed ^ 0xf10e),
+            scheds,
+            execs,
+            rng: Pcg::seeded(seed),
+        }
+    }
+
+    /// Minimal world for unit tests (no facilities registered).
+    pub fn for_tests() -> World {
+        World {
+            now: 0.0,
+            service: ServiceCore::new(b"test-secret"),
+            xfer: SimTransfer::new(7),
+            scheds: BTreeMap::new(),
+            execs: BTreeMap::new(),
+            rng: Pcg::seeded(7),
+        }
+    }
+
+    /// In-process API connection at the current simulated time.
+    pub fn conn(&mut self) -> InProcConn<'_> {
+        InProcConn { now: self.now, svc: &mut self.service }
+    }
+}
+
+/// In-process [`ApiConn`]: the simulated-mode transport (zero-latency; the
+/// real-latency path is exercised by the HTTP gateway in real-time mode).
+pub struct InProcConn<'a> {
+    pub now: f64,
+    pub svc: &'a mut ServiceCore,
+}
+
+impl ApiConn for InProcConn<'_> {
+    fn api(&mut self, token: &str, req: ApiRequest) -> Result<ApiResponse, ApiError> {
+        self.svc.handle(self.now, token, req)
+    }
+}

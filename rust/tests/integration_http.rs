@@ -1,0 +1,166 @@
+//! Integration: the real-time transport path — service behind the HTTP
+//! gateway, a site agent driving real platform backends, everything over
+//! sockets. (The heavier PJRT variant lives in integration_runtime.rs.)
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use balsam::runtime::local::{LocalResources, LoopbackTransfer};
+use balsam::service::api::{ApiConn, ApiRequest, JobCreate};
+use balsam::service::http_gw::{serve, HttpConn};
+use balsam::service::models::JobState;
+use balsam::service::ServiceCore;
+use balsam::site::agent::SiteAgent;
+use balsam::site::config::SiteConfig;
+use balsam::site::platform::{ExecBackend, RunId, RunStatus};
+
+/// Deterministic fake executor for the HTTP test (real PJRT is covered by
+/// integration_runtime.rs; here we isolate the transport).
+struct FastExec {
+    runs: BTreeMap<RunId, f64>,
+    next: u64,
+}
+
+impl ExecBackend for FastExec {
+    fn start(&mut self, now: f64, _fac: &str, _workload: &str, _n: u32) -> RunId {
+        self.next += 1;
+        self.runs.insert(RunId(self.next), now + 0.3);
+        RunId(self.next)
+    }
+    fn poll(&mut self, now: f64, id: RunId) -> RunStatus {
+        match self.runs.get(&id) {
+            Some(&t) if now >= t => RunStatus::Done { ok: true },
+            Some(_) => RunStatus::Running,
+            None => RunStatus::Done { ok: false },
+        }
+    }
+    fn kill(&mut self, _now: f64, id: RunId) {
+        self.runs.remove(&id);
+    }
+}
+
+#[test]
+fn full_round_trip_over_http_with_real_file_staging() {
+    let svc = Arc::new(Mutex::new(ServiceCore::new(b"http-int")));
+    let token = svc.lock().unwrap().admin_token();
+    let server = serve(svc.clone(), "127.0.0.1:0").unwrap();
+
+    let mut conn = HttpConn { addr: server.addr.clone() };
+    let site = conn
+        .api(&token, ApiRequest::CreateSite {
+            name: "local".into(),
+            hostname: "localhost".into(),
+            path: "/tmp/balsam-http-int".into(),
+        })
+        .unwrap()
+        .site_id();
+    conn.api(&token, ApiRequest::RegisterApp {
+        site,
+        name: "MD".into(),
+        command_template: "md".into(),
+        parameters: vec![],
+    })
+    .unwrap();
+
+    // Jobs with small real payloads.
+    let jobs: Vec<JobCreate> = (0..5)
+        .map(|_| {
+            let mut jc = JobCreate::simple(site, "MD", "md_small");
+            jc.transfers_in = vec![("APS".into(), 300_000)];
+            jc.transfers_out = vec![("APS".into(), 10_000)];
+            jc
+        })
+        .collect();
+    let ids = conn.api(&token, ApiRequest::BulkCreateJobs { jobs }).unwrap().job_ids();
+
+    // Site agent over HTTP with real file staging.
+    let mut cfg = SiteConfig::defaults("local", site, token.clone());
+    cfg.transfer.poll_period = 0.1;
+    cfg.scheduler_poll = 0.1;
+    cfg.elastic.poll_period = 0.1;
+    cfg.elastic.block_nodes = 2;
+    cfg.elastic.max_nodes = 4;
+    cfg.launcher.acquire_period = 0.05;
+    let mut agent = SiteAgent::new(cfg);
+    let dir = std::env::temp_dir().join(format!("balsam-http-int-{}", std::process::id()));
+    let mut xfer = LoopbackTransfer::new(&dir, None);
+    let mut sched = LocalResources::new(4);
+    let mut exec = FastExec { runs: BTreeMap::new(), next: 0 };
+    let mut agent_conn = HttpConn { addr: server.addr.clone() };
+
+    let t0 = std::time::Instant::now();
+    loop {
+        let now = t0.elapsed().as_secs_f64();
+        agent.step(now, &mut agent_conn, &mut xfer, &mut sched, &mut exec);
+        let done = {
+            let s = svc.lock().unwrap();
+            s.store.count_in_state(site, JobState::JobFinished)
+        };
+        if done == ids.len() {
+            break;
+        }
+        assert!(now < 60.0, "round trips did not complete over HTTP");
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+
+    // The event log shows the full lifecycle for each job, with wall-clock
+    // timestamps assigned by the HTTP gateway.
+    let s = svc.lock().unwrap();
+    for &id in &ids {
+        let path: Vec<JobState> =
+            s.store.events.iter().filter(|e| e.job_id == id).map(|e| e.to).collect();
+        assert_eq!(*path.last().unwrap(), JobState::JobFinished, "job {id}: {path:?}");
+        assert!(path.contains(&JobState::StagedIn));
+        assert!(path.contains(&JobState::Running));
+    }
+    assert!(s.calls > 50, "expected many HTTP API calls, saw {}", s.calls);
+    drop(s);
+    std::fs::remove_dir_all(&dir).ok();
+    server.stop();
+}
+
+#[test]
+fn concurrent_http_clients_share_one_service() {
+    let svc = Arc::new(Mutex::new(ServiceCore::new(b"http-conc")));
+    let token = svc.lock().unwrap().admin_token();
+    let server = serve(svc.clone(), "127.0.0.1:0").unwrap();
+    let mut conn = HttpConn { addr: server.addr.clone() };
+    let site = conn
+        .api(&token, ApiRequest::CreateSite {
+            name: "s".into(),
+            hostname: "h".into(),
+            path: "/p".into(),
+        })
+        .unwrap()
+        .site_id();
+    conn.api(&token, ApiRequest::RegisterApp {
+        site,
+        name: "MD".into(),
+        command_template: "md".into(),
+        parameters: vec![],
+    })
+    .unwrap();
+    let threads: Vec<_> = (0..6)
+        .map(|_| {
+            let addr = server.addr.clone();
+            let tok = token.clone();
+            std::thread::spawn(move || {
+                let mut c = HttpConn { addr };
+                for _ in 0..10 {
+                    c.api(&tok, ApiRequest::BulkCreateJobs {
+                        jobs: vec![JobCreate::simple(site, "MD", "md_small")],
+                    })
+                    .unwrap();
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    let s = svc.lock().unwrap();
+    assert_eq!(s.store.job_count(), 60);
+    s.store.check_indexes().unwrap();
+    drop(s);
+    server.stop();
+}

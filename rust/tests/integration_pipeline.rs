@@ -1,0 +1,152 @@
+//! Integration: full round-trip pipelines in simulated mode, across all
+//! layers of the coordinator (service + site modules + substrates).
+
+use balsam::client::{Strategy, Submission, WorkloadClient};
+use balsam::experiments::common::deploy;
+use balsam::metrics::{job_table, stage_durations, summarize_stage};
+use balsam::service::api::{ApiRequest, JobCreate};
+use balsam::service::models::JobState;
+
+#[test]
+fn three_site_federation_processes_mixed_workload() {
+    let mut d = deploy(101, &["theta", "summit", "cori"], 32, |c| {
+        c.elastic.block_nodes = 16;
+        c.elastic.max_nodes = 32;
+        c.elastic.wall_time_s = 3600.0;
+    });
+    let sites: Vec<_> = ["theta", "summit", "cori"].iter().map(|f| d.sites[*f]).collect();
+    let client = WorkloadClient::new(
+        d.token.clone(),
+        "APS",
+        "EigenCorr",
+        "xpcs",
+        Strategy::RoundRobin(sites.clone()),
+        Submission::Bursts { batch: 6, period: 10.0 },
+        101,
+    )
+    .with_max_jobs(36);
+    d.add_client(client);
+    d.run_until(2400.0);
+    let total: usize =
+        sites.iter().map(|&s| d.svc().store.count_in_state(s, JobState::JobFinished)).sum();
+    assert_eq!(total, 36, "every job must complete its round trip");
+    // Events exist for every stage of every job.
+    let jobs = job_table(d.svc());
+    let durs = stage_durations(&d.svc().store.events, &jobs);
+    assert_eq!(summarize_stage(&durs, |d| d.time_to_solution).count(), 36);
+    // Store indexes stayed coherent across thousands of transitions.
+    d.svc().store.check_indexes().unwrap();
+}
+
+#[test]
+fn dag_workflow_runs_in_dependency_order() {
+    let mut d = deploy(102, &["cori"], 16, |c| {
+        c.elastic.block_nodes = 8;
+        c.elastic.max_nodes = 16;
+    });
+    let site = d.sites["cori"];
+    let tok = d.token.clone();
+    // Diamond DAG: a -> (b, c) -> d.
+    let a = d
+        .world
+        .service
+        .handle(0.0, &tok, ApiRequest::BulkCreateJobs {
+            jobs: vec![JobCreate::simple(site, "MD", "md_small")],
+        })
+        .unwrap()
+        .job_ids()[0];
+    let mut mk = |parents: Vec<balsam::service::models::JobId>| {
+        let mut jc = JobCreate::simple(site, "MD", "md_small");
+        jc.parents = parents;
+        d.world
+            .service
+            .handle(0.0, &tok, ApiRequest::BulkCreateJobs { jobs: vec![jc] })
+            .unwrap()
+            .job_ids()[0]
+    };
+    let b = mk(vec![a]);
+    let c = mk(vec![a]);
+    let leaf = mk(vec![b, c]);
+    d.run_until(1200.0);
+    let svc = d.svc();
+    for id in [a, b, c, leaf] {
+        assert_eq!(svc.store.job(id).unwrap().state, JobState::JobFinished, "job {id}");
+    }
+    // Ordering: leaf started only after b and c finished.
+    let ts_of = |id, to| {
+        svc.store
+            .events
+            .iter()
+            .find(|e| e.job_id == id && e.to == to)
+            .map(|e| e.ts)
+            .unwrap()
+    };
+    assert!(ts_of(leaf, JobState::Running) >= ts_of(b, JobState::JobFinished));
+    assert!(ts_of(leaf, JobState::Running) >= ts_of(c, JobState::JobFinished));
+    assert!(ts_of(b, JobState::Running) >= ts_of(a, JobState::JobFinished));
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let run = |seed: u64| {
+        let mut d = deploy(seed, &["theta"], 16, |c| {
+            c.elastic.block_nodes = 16;
+            c.elastic.max_nodes = 16;
+        });
+        let site = d.sites["theta"];
+        let client = WorkloadClient::new(
+            d.token.clone(),
+            "APS",
+            "MD",
+            "md_small",
+            Strategy::Single(site),
+            Submission::SteadyBacklog { target: 16, period: 2.0 },
+            seed,
+        )
+        .with_max_jobs(40);
+        d.add_client(client);
+        d.run_until(1500.0);
+        let evs = &d.svc().store.events;
+        (evs.len(), evs.iter().map(|e| e.ts).sum::<f64>())
+    };
+    let (n1, s1) = run(777);
+    let (n2, s2) = run(777);
+    assert_eq!(n1, n2);
+    assert!((s1 - s2).abs() < 1e-9, "event timestamps must be bit-identical");
+    let (_, s3) = run(778);
+    assert!((s1 - s3).abs() > 1e-6, "different seeds should differ");
+}
+
+#[test]
+fn failure_injection_exhausts_retries_without_losing_others() {
+    let mut d = deploy(103, &["cori"], 16, |c| {
+        c.elastic.block_nodes = 16;
+        c.elastic.max_nodes = 16;
+    });
+    let site = d.sites["cori"];
+    // 30% of runs fail.
+    d.world.execs.get_mut("cori").unwrap().fail_prob = 0.3;
+    let client = WorkloadClient::new(
+        d.token.clone(),
+        "APS",
+        "MD",
+        "md_small",
+        Strategy::Single(site),
+        Submission::Bursts { batch: 30, period: 1e9 },
+        103,
+    )
+    .with_max_jobs(30);
+    d.add_client(client);
+    d.run_until(3000.0);
+    let svc = d.svc();
+    let finished = svc.store.count_in_state(site, JobState::JobFinished);
+    let failed = svc.store.count_in_state(site, JobState::Failed);
+    assert_eq!(finished + failed, 30, "every job must reach a terminal state");
+    // With p=0.3 and 3 attempts, most jobs should eventually succeed
+    // (P[fail all 3] ≈ 2.7%).
+    assert!(finished >= 24, "finished={finished} failed={failed}");
+    // Retry accounting: nothing exceeds its budget.
+    for j in svc.store.jobs_iter() {
+        assert!(j.attempts <= j.max_attempts);
+    }
+}

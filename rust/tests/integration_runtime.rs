@@ -1,0 +1,134 @@
+//! Integration: the PJRT runtime layer executing the real AOT artifacts.
+//! Requires `make artifacts` (skips gracefully if artifacts are missing so
+//! `cargo test` works on a fresh clone; CI/`make test` always builds them
+//! first).
+
+use std::collections::BTreeMap;
+
+use balsam::runtime::{artifacts_dir, Runtime};
+use balsam::runtime::real::RealExec;
+use balsam::site::platform::{ExecBackend, RunStatus};
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn md_model_artifact_produces_correct_eigenvalues() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::load(artifacts_dir(), &["md_64"]).unwrap();
+    let model = rt.model("md_64").unwrap();
+    // Diagonal matrix -> eigenvalues are the diagonal, sorted.
+    let n = 64;
+    let mut a = vec![0f32; n * n];
+    for i in 0..n {
+        a[i * n + i] = (n - i) as f32; // 64, 63, ..., 1
+    }
+    let outs = model.run_f32(&[a]).unwrap();
+    assert_eq!(outs.len(), 1);
+    let eig = &outs[0];
+    assert_eq!(eig.len(), n);
+    for (i, &v) in eig.iter().enumerate() {
+        assert!((v - (i + 1) as f32).abs() < 1e-3, "eig[{i}]={v}");
+    }
+}
+
+#[test]
+fn md_model_matches_trace_invariant_on_random_input() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::load(artifacts_dir(), &["md_64"]).unwrap();
+    let model = rt.model("md_64").unwrap();
+    let n = 64;
+    // Symmetric random matrix (simple LCG for determinism).
+    let mut x = 123456789u64;
+    let mut a = vec![0f32; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            let v = ((x >> 33) as f32 / (1u64 << 31) as f32) - 0.5;
+            a[i * n + j] = v;
+            a[j * n + i] = v;
+        }
+    }
+    let trace: f32 = (0..n).map(|i| a[i * n + i]).sum();
+    let eig = &model.run_f32(&[a]).unwrap()[0];
+    let sum: f32 = eig.iter().sum();
+    assert!((sum - trace).abs() < 0.05 * trace.abs().max(1.0), "sum {sum} vs trace {trace}");
+    // Sorted ascending.
+    assert!(eig.windows(2).all(|w| w[0] <= w[1] + 1e-5));
+}
+
+#[test]
+fn xpcs_artifact_g2_decays_for_correlated_frames() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::load(artifacts_dir(), &["xpcs_t64_p1024"]).unwrap();
+    let model = rt.model("xpcs_t64_p1024").unwrap();
+    let (t, p, ntau) = (64usize, 1024usize, 16usize);
+    // AR(1)-correlated positive frames (tau_c ~ 6 frames).
+    let rho = (-1.0f32 / 6.0).exp();
+    let mut x = vec![0f32; p];
+    let mut frames = vec![0f32; t * p];
+    let mut seed = 42u64;
+    let mut randn = move || {
+        // Box-Muller-ish uniform sum approximation, deterministic.
+        let mut s = 0.0f32;
+        for _ in 0..12 {
+            seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            s += (seed >> 33) as f32 / (1u64 << 31) as f32;
+        }
+        s - 6.0
+    };
+    for pix in x.iter_mut() {
+        *pix = randn();
+    }
+    for ti in 0..t {
+        for (pi, pix) in x.iter_mut().enumerate() {
+            *pix = rho * *pix + (1.0 - rho * rho).sqrt() * randn();
+            frames[ti * p + pi] = 1.0 + *pix * *pix;
+        }
+    }
+    let outs = model.run_f32(&[frames]).unwrap();
+    assert_eq!(outs.len(), 3); // g2, g2_mean, fidelity
+    let g2_mean = &outs[1];
+    assert_eq!(g2_mean.len(), ntau);
+    assert!(g2_mean[0] > 1.05, "g2 at lag 1 should exceed 1: {}", g2_mean[0]);
+    assert!(g2_mean[ntau - 1] < g2_mean[0], "g2 should decay");
+    let fidelity = outs[2][0];
+    assert!(fidelity > 0.0);
+}
+
+#[test]
+fn real_exec_backend_runs_jobs_to_completion() {
+    if !have_artifacts() {
+        return;
+    }
+    let model_for: BTreeMap<String, String> =
+        [("md_small".to_string(), "md_64".to_string())].into_iter().collect();
+    let mut exec =
+        RealExec::start_worker(artifacts_dir(), vec!["md_64".into()], model_for).unwrap();
+    let ids: Vec<_> = (0..3).map(|i| exec.start(i as f64, "local", "md_small", 1)).collect();
+    let t0 = std::time::Instant::now();
+    loop {
+        let done = ids
+            .iter()
+            .filter(|&&id| matches!(exec.poll(0.0, id), RunStatus::Done { .. }))
+            .count();
+        if done == ids.len() {
+            break;
+        }
+        assert!(t0.elapsed().as_secs() < 120, "PJRT runs never finished");
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    for id in ids {
+        let rec = exec.record(id).unwrap();
+        assert!(rec.ok, "run failed: {rec:?}");
+        assert!(rec.wall_s > 0.0);
+    }
+}

@@ -1,0 +1,284 @@
+//! Property tests on coordinator invariants (seeded randomized sweeps via
+//! util::check::forall — see DESIGN.md §7).
+
+use balsam::client::{Strategy, Submission, WorkloadClient};
+use balsam::experiments::common::{deploy, FaultInjector};
+use balsam::service::api::{ApiRequest, JobCreate};
+use balsam::service::models::{Direction, JobState, TransferState};
+use balsam::service::state;
+use balsam::service::ServiceCore;
+use balsam::util::check::forall;
+use balsam::util::rng::Pcg;
+
+/// Invariant: event logs only ever record legal state-machine edges, and
+/// per-job event sequences are contiguous (to of event k == from of k+1).
+#[test]
+fn prop_event_log_edges_are_legal_and_contiguous() {
+    forall(
+        "legal-event-edges",
+        0xa11e,
+        8,
+        |r| (r.below(40) + 5, r.next_u64()),
+        |&(jobs, seed)| {
+            let mut d = deploy(seed, &["cori"], 16, |c| {
+                c.elastic.block_nodes = 8;
+                c.elastic.max_nodes = 16;
+            });
+            d.world.execs.get_mut("cori").unwrap().fail_prob = 0.2;
+            let site = d.sites["cori"];
+            let client = WorkloadClient::new(
+                d.token.clone(),
+                "APS",
+                "MD",
+                "md_small",
+                Strategy::Single(site),
+                Submission::Bursts { batch: jobs as usize, period: 1e9 },
+                seed,
+            )
+            .with_max_jobs(jobs as usize);
+            d.add_client(client);
+            d.run_until(2500.0);
+            let mut per_job: std::collections::BTreeMap<_, Vec<_>> = Default::default();
+            for e in &d.svc().store.events {
+                if !state::legal(e.from, e.to) {
+                    return Err(format!("illegal edge {} -> {}", e.from, e.to));
+                }
+                per_job.entry(e.job_id).or_default().push((e.from, e.to));
+            }
+            for (job, edges) in per_job {
+                for w in edges.windows(2) {
+                    if w[0].1 != w[1].0 {
+                        return Err(format!("job {job}: discontinuous {:?} then {:?}", w[0], w[1]));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Invariant: no job is ever acquired by two live sessions at once, even
+/// under fault injection and lease expiry.
+#[test]
+fn prop_session_lease_exclusivity_under_faults() {
+    forall(
+        "lease-exclusivity",
+        0x5e55,
+        6,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut d = deploy(seed, &["theta"], 32, |c| {
+                c.elastic.block_nodes = 8;
+                c.elastic.max_nodes = 32;
+                c.launcher.heartbeat_period = 10.0;
+            });
+            let site = d.sites["theta"];
+            let client = WorkloadClient::new(
+                d.token.clone(),
+                "APS",
+                "MD",
+                "md_small",
+                Strategy::Single(site),
+                Submission::Bursts { batch: 4, period: 4.0 },
+                seed,
+            )
+            .with_max_jobs(120);
+            d.add_client(client);
+            d.add_actor(Box::new(FaultInjector::new("theta", 90.0, 120.0, 600.0, seed)));
+            // Step the engine in chunks, checking the invariant throughout.
+            for k in 1..=40 {
+                d.run_until(k as f64 * 30.0);
+                let svc = d.svc();
+                let mut seen = std::collections::BTreeSet::new();
+                for s in svc.store.sessions.values().filter(|s| !s.ended) {
+                    for j in &s.acquired {
+                        if !seen.insert(*j) {
+                            return Err(format!("job {j} held by two live sessions at t={}", k * 30));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Invariant: jobs are never lost — every created job is always in
+/// exactly one state, and with enough time every job reaches a terminal
+/// state even under faults.
+#[test]
+fn prop_no_lost_jobs_under_faults() {
+    forall(
+        "no-lost-jobs",
+        0x70b5,
+        5,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut d = deploy(seed, &["theta"], 32, |c| {
+                c.elastic.block_nodes = 8;
+                c.elastic.max_nodes = 16;
+            });
+            let site = d.sites["theta"];
+            let n = 60;
+            let client = WorkloadClient::new(
+                d.token.clone(),
+                "APS",
+                "MD",
+                "md_small",
+                Strategy::Single(site),
+                Submission::Bursts { batch: 6, period: 6.0 },
+                seed,
+            )
+            .with_max_jobs(n);
+            d.add_client(client);
+            d.add_actor(Box::new(FaultInjector::new("theta", 100.0, 60.0, 500.0, seed)));
+            d.run_until(4000.0);
+            let svc = d.svc();
+            let terminal: usize = svc
+                .store
+                .jobs_iter()
+                .filter(|j| j.state.is_terminal())
+                .count();
+            let total = svc.store.jobs_iter().count();
+            if total != n {
+                return Err(format!("expected {n} jobs, found {total}"));
+            }
+            if terminal != total {
+                let stuck: Vec<String> = svc
+                    .store
+                    .jobs_iter()
+                    .filter(|j| !j.state.is_terminal())
+                    .map(|j| format!("{}:{}", j.id, j.state))
+                    .collect();
+                return Err(format!("non-terminal jobs after drain: {stuck:?}"));
+            }
+            svc.store.check_indexes()?;
+            Ok(())
+        },
+    );
+}
+
+/// Invariant: store filter queries agree with a full scan, for random
+/// job populations and random filters.
+#[test]
+fn prop_indexed_queries_equal_full_scan() {
+    forall(
+        "index-vs-scan",
+        0x1dec5,
+        40,
+        |r: &mut Pcg| {
+            let n = 1 + r.below(120) as usize;
+            let states: Vec<JobState> =
+                (0..1 + r.below(3)).map(|_| *r.choose(&JobState::ALL)).collect();
+            (n, states, r.next_u64())
+        },
+        |(n, states, seed)| {
+            let mut svc = ServiceCore::new(b"prop");
+            let tok = svc.admin_token();
+            let site = svc
+                .handle(0.0, &tok, ApiRequest::CreateSite {
+                    name: "cori".into(),
+                    hostname: "h".into(),
+                    path: "/p".into(),
+                })
+                .unwrap()
+                .site_id();
+            svc.handle(0.0, &tok, ApiRequest::RegisterApp {
+                site,
+                name: "MD".into(),
+                command_template: "md".into(),
+                parameters: vec![],
+            })
+            .unwrap();
+            let mut rng = Pcg::seeded(*seed);
+            // Create jobs and push them through random legal transitions.
+            let jobs: Vec<JobCreate> = (0..*n)
+                .map(|_| {
+                    let mut jc = JobCreate::simple(site, "MD", "md_small");
+                    if rng.chance(0.5) {
+                        jc.transfers_in = vec![("APS".into(), 1000)];
+                    }
+                    jc
+                })
+                .collect();
+            let ids = svc.handle(1.0, &tok, ApiRequest::BulkCreateJobs { jobs }).unwrap().job_ids();
+            for (step, &id) in ids.iter().enumerate() {
+                for _ in 0..rng.below(5) {
+                    let cur = svc.store.job(id).unwrap().state;
+                    let succ = state::successors(cur);
+                    if succ.is_empty() {
+                        break;
+                    }
+                    let to = *rng.choose(&succ);
+                    // Transition via the store directly (service applies
+                    // extra semantics; here we test pure index coherence).
+                    svc.store.set_job_state(id, to, step as f64, "prop");
+                }
+            }
+            svc.store.check_indexes()?;
+            for &st in states {
+                let via_index = svc.store.jobs_in_state(site, st).len();
+                let via_scan = svc.store.jobs_iter().filter(|j| j.state == st).count();
+                if via_index != via_scan {
+                    return Err(format!("{st}: index {via_index} != scan {via_scan}"));
+                }
+                if svc.store.count_in_state(site, st) != via_scan {
+                    return Err(format!("{st}: count mismatch"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Invariant: transfer items complete exactly once and only via
+/// Pending -> Active -> Done/Error.
+#[test]
+fn prop_transfer_items_progress_monotonically() {
+    forall(
+        "titem-monotone",
+        0x7f1e,
+        6,
+        |r| r.next_u64(),
+        |&seed| {
+            let mut d = deploy(seed, &["summit"], 16, |c| {
+                c.transfer.batch_size = 1 + (seed % 32) as usize;
+                c.elastic.block_nodes = 8;
+                c.elastic.max_nodes = 16;
+            });
+            let site = d.sites["summit"];
+            let client = WorkloadClient::new(
+                d.token.clone(),
+                "ALS",
+                "EigenCorr",
+                "xpcs",
+                Strategy::Single(site),
+                Submission::Bursts { batch: 20, period: 1e9 },
+                seed,
+            )
+            .with_max_jobs(20);
+            d.add_client(client);
+            d.run_until(2500.0);
+            let svc = d.svc();
+            for t in svc.store.titems_iter() {
+                if t.state != TransferState::Done {
+                    return Err(format!(
+                        "item {} ({:?}) finished in state {:?}",
+                        t.id, t.direction, t.state
+                    ));
+                }
+                if t.task_id.is_none() {
+                    return Err(format!("item {} never assigned to a transfer task", t.id));
+                }
+            }
+            // Out items at least as many as finished jobs (1 per job here).
+            let done_jobs = svc.store.count_in_state(site, JobState::JobFinished);
+            let out_items =
+                svc.store.titems_iter().filter(|t| t.direction == Direction::Out).count();
+            if done_jobs != 20 || out_items != 20 {
+                return Err(format!("jobs {done_jobs}, out items {out_items}"));
+            }
+            Ok(())
+        },
+    );
+}
