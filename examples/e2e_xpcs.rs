@@ -18,7 +18,7 @@
 //! Run: `make artifacts && cargo run --release --example e2e_xpcs`
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use balsam::metrics::{job_table, stage_durations, summarize_stage};
 use balsam::runtime::local::{LocalResources, LoopbackTransfer};
@@ -45,8 +45,8 @@ fn main() -> balsam::Result<()> {
     let payload_out: u64 = 2_000_000;
 
     // --- central service over real sockets -------------------------------
-    let svc = Arc::new(Mutex::new(ServiceCore::new(b"e2e-secret")));
-    let token = svc.lock().unwrap().admin_token();
+    let svc = Arc::new(ServiceCore::new(b"e2e-secret"));
+    let token = svc.admin_token();
     let server = serve(svc.clone(), "127.0.0.1:0")?;
     println!("service: http://{}", server.addr);
 
@@ -139,10 +139,8 @@ fn main() -> balsam::Result<()> {
     let drain_until = run_secs + 60.0;
     loop {
         let now = t0.elapsed().as_secs_f64();
-        let done: usize = {
-            let svc = svc.lock().unwrap();
-            site_ids.values().map(|&s| svc.store.count_in_state(s, JobState::JobFinished)).sum()
-        };
+        let done: usize =
+            site_ids.values().map(|&s| svc.store.count_in_state(s, JobState::JobFinished)).sum();
         if done == submitted || now > drain_until {
             break;
         }
@@ -153,10 +151,9 @@ fn main() -> balsam::Result<()> {
     }
 
     // --- report -------------------------------------------------------------
-    let svc = svc.lock().unwrap();
     let wall = t0.elapsed().as_secs_f64();
     let jobs = job_table(&svc);
-    let durs = stage_durations(&svc.store.events, &jobs);
+    let durs = stage_durations(&svc.store.events(), &jobs);
     println!("\n=== e2e XPCS results ({wall:.0}s wall, {} submitted) ===", submitted);
     let mut total_done = 0;
     for (fac, &site) in &site_ids {
@@ -181,7 +178,7 @@ fn main() -> balsam::Result<()> {
         total_done as f64 / wall,
         site_ids.len()
     );
-    println!("API calls served over HTTP: {}", svc.calls);
+    println!("API calls served over HTTP: {}", svc.calls());
     anyhow::ensure!(total_done > 0, "no jobs completed");
     anyhow::ensure!(
         total_done >= submitted * 9 / 10,

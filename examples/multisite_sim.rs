@@ -51,8 +51,8 @@ fn main() -> balsam::Result<()> {
         let site = d.sites[fac];
         let done = d.svc().store.count_in_state(site, JobState::JobFinished);
         let arrivals =
-            state_timeline(&d.svc().store.events, site, JobState::StagedIn).rate(horizon * 0.2, horizon) * 60.0;
-        let chk = littles_law(&d.svc().store.events, site, horizon * 0.2, horizon);
+            state_timeline(&d.svc().store.events(), site, JobState::StagedIn).rate(horizon * 0.2, horizon) * 60.0;
+        let chk = littles_law(&d.svc().store.events(), site, horizon * 0.2, horizon);
         aggregate += done;
         println!(
             "{fac:>7}: {done:>4} completed | arrivals {arrivals:>5.1}/min | util {:>3.0}% (L={:.1}, λW={:.1})",

@@ -100,7 +100,7 @@ fn main() -> balsam::Result<()> {
         println!("  job {id}: {} ({} run(s))", j.state, j.attempts);
         assert_eq!(j.state, JobState::JobFinished);
     }
-    let evs = &svc.store.events;
+    let evs = svc.store.events();
     println!("{} lifecycle events recorded; sample:", evs.len());
     for e in evs.iter().take(6) {
         println!("  t={:.2}s job {} {} -> {}", e.ts, e.job_id, e.from, e.to);

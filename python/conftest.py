@@ -1,2 +1,18 @@
-import os, sys
+import importlib.util
+import os
+import sys
+
 sys.path.insert(0, os.path.dirname(__file__))
+
+
+def _missing(mod):
+    return importlib.util.find_spec(mod) is None
+
+
+# Skip-not-fail when the numerics stack is unavailable: the L1/L2 tests
+# import jax + hypothesis at module scope, so ignore them at collection
+# time rather than erroring. CI treats "no tests collected" (exit 5) as a
+# skip; see .github/workflows/ci.yml.
+collect_ignore_glob = []
+if _missing("jax") or _missing("hypothesis"):
+    collect_ignore_glob.append("tests/*")

@@ -35,7 +35,7 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
 }
 
 fn setup_service(n_jobs: usize) -> (ServiceCore, String, balsam::service::models::SiteId) {
-    let mut svc = ServiceCore::new(b"bench");
+    let svc = ServiceCore::new(b"bench");
     let tok = svc.admin_token();
     let site = svc
         .handle(0.0, &tok, ApiRequest::CreateSite {
@@ -75,7 +75,7 @@ fn main() {
     // Session acquire against a large runnable backlog — the paper's
     // indexed-queries claim: latency must not grow with backlog size.
     for &backlog in &[1_000usize, 10_000, 50_000] {
-        let (mut svc, tok, site) = setup_service(backlog);
+        let (svc, tok, site) = setup_service(backlog);
         let sid = svc
             .handle(1.0, &tok, ApiRequest::CreateSession { site, batch_job: None })
             .unwrap()
@@ -92,14 +92,14 @@ fn main() {
             // Release so the next iteration re-acquires.
             std::hint::black_box(&got);
             for j in got {
-                svc.store.job_mut(j.id).unwrap().session = None;
-                svc.store.sessions.get_mut(&sid).unwrap().acquired.clear();
+                svc.store.with_job_mut(j.id, |j| j.session = None).unwrap();
             }
+            svc.store.with_session_mut(sid, |s| s.acquired.clear()).unwrap();
         });
     }
 
     // Backlog aggregation (shortest-backlog client polls this per batch).
-    let (mut svc, tok, site) = setup_service(50_000);
+    let (svc, tok, site) = setup_service(50_000);
     bench("service: SiteBacklog over 50k jobs", 200, || {
         let _ = std::hint::black_box(svc.handle(2.0, &tok, ApiRequest::SiteBacklog { site }));
     });
@@ -142,8 +142,8 @@ fn main() {
     });
 
     // HTTP round trip on loopback.
-    let svc2 = std::sync::Arc::new(std::sync::Mutex::new(ServiceCore::new(b"bench")));
-    let tok2 = svc2.lock().unwrap().admin_token();
+    let svc2 = std::sync::Arc::new(ServiceCore::new(b"bench"));
+    let tok2 = svc2.admin_token();
     let server = balsam::service::http_gw::serve(svc2, "127.0.0.1:0").unwrap();
     let addr = server.addr.clone();
     bench("http: API round trip (ListEvents)", 300, || {

@@ -1,0 +1,172 @@
+//! Service-throughput bench (custom harness; criterion is not available
+//! offline). Run: `cargo bench --bench service_throughput` — quick mode
+//! via `BENCH_QUICK=1` (the CI bench-smoke job).
+//!
+//! Drives N concurrent simulated launcher sessions over the HTTP gateway
+//! against the sharded service and reports aggregate req/s for 1 vs 8
+//! gateway worker threads on multi-site traffic — the paper's §4.5
+//! scalability instrument. Each launcher cycle is the bulk protocol:
+//! BulkCreateJobs -> SessionAcquire -> BulkUpdateJobState(RUNNING) ->
+//! SessionSync(RUN_DONE + POSTPROCESSED). Results are recorded in
+//! `BENCH_service.json` (override the path with `BENCH_OUT`) so the perf
+//! trajectory is tracked across PRs.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use balsam::service::api::{ApiConn, ApiRequest, JobCreate};
+use balsam::service::http_gw::{serve_with, HttpConn};
+use balsam::service::models::{JobId, JobState, SiteId};
+use balsam::service::ServiceCore;
+use balsam::util::json::Json;
+
+const SITES: usize = 4;
+const CLIENTS: usize = 8;
+
+struct PassResult {
+    workers: usize,
+    reqs: u64,
+    secs: f64,
+    reqs_per_s: f64,
+}
+
+fn run_pass(workers: usize, secs: f64) -> PassResult {
+    let svc = Arc::new(ServiceCore::new(b"bench"));
+    let tok = svc.admin_token();
+    let sites: Vec<SiteId> = (0..SITES)
+        .map(|i| {
+            let site = svc
+                .handle(0.0, &tok, ApiRequest::CreateSite {
+                    name: format!("site{i}"),
+                    hostname: format!("host{i}"),
+                    path: "/p".into(),
+                })
+                .unwrap()
+                .site_id();
+            svc.handle(0.0, &tok, ApiRequest::RegisterApp {
+                site,
+                name: "MD".into(),
+                command_template: "md".into(),
+                parameters: vec![],
+            })
+            .unwrap();
+            site
+        })
+        .collect();
+    let server = serve_with(svc.clone(), "127.0.0.1:0", workers).unwrap();
+
+    let reqs = Arc::new(AtomicU64::new(0));
+    let stop = Arc::new(AtomicBool::new(false));
+    let t0 = Instant::now();
+    let threads: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let addr = server.addr.clone();
+            let tok = tok.clone();
+            let site = sites[c % SITES];
+            let reqs = reqs.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut conn = HttpConn { addr };
+                let mut api = |req: ApiRequest| {
+                    reqs.fetch_add(1, Ordering::Relaxed);
+                    conn.api(&tok, req)
+                };
+                let sid = api(ApiRequest::CreateSession { site, batch_job: None })
+                    .unwrap()
+                    .session_id();
+                while !stop.load(Ordering::Relaxed) {
+                    // One launcher heartbeat cycle, all bulk calls.
+                    let jobs: Vec<JobCreate> =
+                        (0..4).map(|_| JobCreate::simple(site, "MD", "md_small")).collect();
+                    api(ApiRequest::BulkCreateJobs { jobs }).unwrap();
+                    let got = api(ApiRequest::SessionAcquire {
+                        session: sid,
+                        max_nodes: 1_000_000,
+                        max_jobs: 4,
+                    })
+                    .unwrap()
+                    .jobs();
+                    if got.is_empty() {
+                        continue;
+                    }
+                    let ids: Vec<JobId> = got.iter().map(|j| j.id).collect();
+                    api(ApiRequest::BulkUpdateJobState {
+                        jobs: ids.clone(),
+                        to: JobState::Running,
+                        data: String::new(),
+                    })
+                    .unwrap();
+                    let updates = ids
+                        .iter()
+                        .flat_map(|&j| {
+                            [
+                                (j, JobState::RunDone, String::new()),
+                                (j, JobState::Postprocessed, String::new()),
+                            ]
+                        })
+                        .collect();
+                    api(ApiRequest::SessionSync { session: sid, updates }).unwrap();
+                }
+            })
+        })
+        .collect();
+    std::thread::sleep(Duration::from_secs_f64(secs));
+    stop.store(true, Ordering::Relaxed);
+    for t in threads {
+        t.join().unwrap();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let n = reqs.load(Ordering::Relaxed);
+    server.stop();
+    PassResult { workers, reqs: n, secs: dt, reqs_per_s: n as f64 / dt }
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let secs = if quick { 1.5 } else { 6.0 };
+    println!(
+        "== service_throughput: {CLIENTS} concurrent launcher sessions over {SITES} site shards \
+         ({secs}s per pass{}) ==",
+        if quick { ", quick" } else { "" }
+    );
+    let mut results = Vec::new();
+    for workers in [1usize, 8] {
+        let r = run_pass(workers, secs);
+        println!(
+            "gateway workers {:>2}: {:>7} reqs in {:.2}s  ->  {:>8.0} req/s",
+            r.workers, r.reqs, r.secs, r.reqs_per_s
+        );
+        results.push(r);
+    }
+    let speedup = results[1].reqs_per_s / results[0].reqs_per_s.max(1e-9);
+    println!("aggregate speedup at 8 workers vs 1: {speedup:.2}x");
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("service_throughput")),
+        ("quick", Json::Bool(quick)),
+        ("sites", Json::num(SITES as f64)),
+        ("client_threads", Json::num(CLIENTS as f64)),
+        ("secs_per_pass", Json::num(secs)),
+        (
+            "results",
+            Json::Arr(
+                results
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("gateway_workers", Json::num(r.workers as f64)),
+                            ("reqs", Json::num(r.reqs as f64)),
+                            ("secs", Json::num(r.secs)),
+                            ("reqs_per_s", Json::num(r.reqs_per_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("speedup_8_vs_1", Json::num(speedup)),
+    ]);
+    let path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_service.json".to_string());
+    std::fs::write(&path, out.to_string()).expect("write bench record");
+    println!("recorded {path}");
+}

@@ -219,7 +219,7 @@ mod tests {
     use crate::service::ServiceCore;
 
     fn setup(n_sites: usize) -> (ServiceCore, String, Vec<SiteId>) {
-        let mut svc = ServiceCore::new(b"k");
+        let svc = ServiceCore::new(b"k");
         let tok = svc.admin_token();
         let mut sites = Vec::new();
         for name in ["theta", "summit", "cori"].iter().take(n_sites) {
@@ -373,7 +373,7 @@ mod tests {
         let mut conn = InProcConn { now: 0.0, svc: &mut svc };
         c.tick(0.0, &mut conn);
         let (mut small, mut large) = (0, 0);
-        for j in svc.store.jobs_iter() {
+        for j in svc.store.jobs_snapshot() {
             match j.workload.as_str() {
                 "md_small" => small += 1,
                 "md_large" => large += 1,

@@ -32,7 +32,7 @@ pub fn deploy(
     reserved_nodes: u32,
     tweak: impl Fn(&mut SiteConfig),
 ) -> Deployment {
-    let mut world = World::standard(seed, reserved_nodes);
+    let world = World::standard(seed, reserved_nodes);
     let token = world.service.admin_token();
     let mut engine = Engine::new();
     let mut sites = BTreeMap::new();
@@ -266,7 +266,7 @@ mod tests {
     fn deploy_creates_sites_and_apps() {
         let d = deploy(1, &["theta", "cori"], 32, |_| {});
         assert_eq!(d.sites.len(), 2);
-        assert_eq!(d.svc().store.apps.len(), 4);
+        assert_eq!(d.svc().store.apps_len(), 4);
     }
 
     #[test]

@@ -35,7 +35,7 @@ pub fn rate_at(nodes: u32, seed: u64) -> f64 {
     .with_max_jobs(n_jobs);
     d.add_client(client);
     d.run_until(3.0 * 3600.0);
-    let tl = state_timeline(&d.svc().store.events, site, JobState::JobFinished);
+    let tl = state_timeline(&d.svc().store.events(), site, JobState::JobFinished);
     assert_eq!(tl.count(), n_jobs, "all local jobs must complete ({} did)", tl.count());
     let end = tl.curve(3.0 * 3600.0, 10000).iter().find(|(_, c)| *c == n_jobs).unwrap().0;
     n_jobs as f64 / end

@@ -51,10 +51,11 @@ pub fn run_strategy(shortest_backlog: bool, horizon: f64, seed: u64) -> Strategy
         let submitted = d
             .svc()
             .store
-            .jobs_iter()
+            .jobs_snapshot()
+            .iter()
             .filter(|j| j.site_id == site)
             .count();
-        let staged = state_timeline(&d.svc().store.events, site, JobState::StagedIn).count();
+        let staged = state_timeline(&d.svc().store.events(), site, JobState::StagedIn).count();
         let done = d.svc().store.count_in_state(site, JobState::JobFinished);
         total += done;
         per_fac.push((fac.to_string(), submitted, staged, done));

@@ -35,7 +35,7 @@ pub fn balsam_rate(fac: &str, workload: &str, nodes: u32, horizon: f64, seed: u6
     d.add_client(client);
     d.run_until(horizon);
     // Measure over the steady-state back half.
-    completion_rate(&d.svc().store.events, site, horizon * 0.33, horizon)
+    completion_rate(&d.svc().store.events(), site, horizon * 0.33, horizon)
 }
 
 /// Local batch-queue pipeline throughput (jobs/s) at `nodes`. The driver

@@ -70,7 +70,7 @@ pub fn balsam_stats(n_jobs: usize, horizon: f64, seed: u64) -> PipelineStats {
     d.add_client(client);
     d.run_until(horizon);
     let jobs = job_table(d.svc());
-    let durs = stage_durations(&d.svc().store.events, &jobs);
+    let durs = stage_durations(&d.svc().store.events(), &jobs);
     let mut s = PipelineStats {
         label: "APS<->theta Balsam".into(),
         queueing: Summary::new(), // pilot jobs: no per-task queueing

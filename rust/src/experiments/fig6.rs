@@ -37,7 +37,7 @@ pub fn arrival_rate(workload: &str, batch_size: usize, seed: u64) -> f64 {
     .with_max_jobs(n);
     d.add_client(client);
     d.run_until(3.0 * 3600.0);
-    let tl = state_timeline(&d.svc().store.events, site, JobState::StagedIn);
+    let tl = state_timeline(&d.svc().store.events(), site, JobState::StagedIn);
     assert_eq!(tl.count(), n, "all datasets must arrive");
     let t_last = tl.curve(3.0 * 3600.0, 3600).iter().find(|(_, c)| *c == n).unwrap().0;
     n as f64 / (t_last / 60.0)

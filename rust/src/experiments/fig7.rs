@@ -57,17 +57,17 @@ pub fn stress(fast: bool, seed: u64) -> StressOutcome {
 
     d.run_until(horizon);
 
-    let events = &d.svc().store.events;
-    let sub_tl = state_timeline(events, site, JobState::Ready);
-    let staged_tl = state_timeline(events, site, JobState::StagedIn);
-    let done_tl = state_timeline(events, site, JobState::JobFinished);
-    let running = running_tasks_curve(events, site, horizon, 80);
+    let events = d.svc().store.events();
+    let sub_tl = state_timeline(&events, site, JobState::Ready);
+    let staged_tl = state_timeline(&events, site, JobState::StagedIn);
+    let done_tl = state_timeline(&events, site, JobState::JobFinished);
+    let running = running_tasks_curve(&events, site, horizon, 80);
     let timeline = running
         .iter()
         .map(|&(t, r)| (t, sub_tl.cum_at(t), staged_tl.cum_at(t), done_tl.cum_at(t), r))
         .collect();
     StressOutcome {
-        submitted: d.svc().store.jobs_iter().count(),
+        submitted: d.svc().store.job_count(),
         completed: d.svc().store.count_in_state(site, JobState::JobFinished),
         kills: 0, // injector moved into engine; kills implied by timeline
         timeline,

@@ -44,7 +44,7 @@ pub fn route_breakdown(source: &str, fac: &str, n: usize, seed: u64) -> RouteBre
     d.add_client(client);
     d.run_until(3.0 * 3600.0);
     let jobs = job_table(d.svc());
-    let durs = stage_durations(&d.svc().store.events, &jobs);
+    let durs = stage_durations(&d.svc().store.events(), &jobs);
     let med = |f: fn(&crate::metrics::StageDurations) -> Option<f64>| {
         summarize_stage(&durs, f).percentile(50.0)
     };

@@ -53,14 +53,14 @@ pub fn panel(sources: &[&str], horizon: f64, seed: u64) -> PanelResult {
         }
     }
     d.run_until(horizon);
-    let events = &d.svc().store.events;
+    let events = d.svc().store.events();
     let (t0, t1) = (horizon * 0.2, horizon);
     let mut per_fac = Vec::new();
     let mut aggregate = 0;
     for (fac, &site) in facs.iter().zip(&sites) {
-        let arrivals = state_timeline(events, site, JobState::StagedIn).rate(t0, t1) * 60.0;
+        let arrivals = state_timeline(&events, site, JobState::StagedIn).rate(t0, t1) * 60.0;
         let completed = d.svc().store.count_in_state(site, JobState::JobFinished);
-        let curve = running_tasks_curve(events, site, horizon, 100);
+        let curve = running_tasks_curve(&events, site, horizon, 100);
         let util: f64 = curve
             .iter()
             .filter(|(t, _)| *t >= t0)
@@ -144,7 +144,7 @@ pub fn run(fast: bool, seed: u64) -> crate::Result<()> {
     d.run_until(horizon);
     let mut rows10 = Vec::new();
     for (fac, site) in &sites {
-        let chk = littles_law(&d.svc().store.events, *site, horizon * 0.2, horizon);
+        let chk = littles_law(&d.svc().store.events(), *site, horizon * 0.2, horizon);
         rows10.push(vec![
             fac.clone(),
             format!("{:.2}", chk.lambda * 60.0),
@@ -194,7 +194,7 @@ mod tests {
         );
         d.add_client(client);
         d.run_until(horizon);
-        let chk = littles_law(&d.svc().store.events, site, horizon * 0.3, horizon);
+        let chk = littles_law(&d.svc().store.events(), site, horizon * 0.3, horizon);
         assert!(chk.expected_l > 1.0);
         let rel = (chk.expected_l - chk.measured_l).abs() / chk.measured_l.max(1.0);
         assert!(rel < 0.35, "L={} vs lambda*W={}", chk.measured_l, chk.expected_l);

@@ -59,7 +59,7 @@ pub fn measure(workload: &str, n_jobs: usize, rate: f64, seed: u64) -> Cells {
     d.run_until(horizon);
 
     let jobs = job_table(d.svc());
-    let durs = stage_durations(&d.svc().store.events, &jobs);
+    let durs = stage_durations(&d.svc().store.events(), &jobs);
     let pick = |f: fn(&StageDurations) -> Option<f64>| summarize_stage(&durs, f).table_cell();
     let overhead = {
         let mut s = crate::util::stats::Summary::new();

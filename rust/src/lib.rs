@@ -15,8 +15,9 @@
 //!
 //! Layers 2/1 (JAX model + Pallas kernels, `python/compile/`) are AOT
 //! compiled to HLO-text artifacts which [`runtime`] loads and executes
-//! through the PJRT CPU client (`xla` crate). Python is never on the
-//! request path.
+//! through the PJRT CPU client (vendored `xla` crate behind the
+//! off-by-default `xla` cargo feature). Python is never on the request
+//! path.
 //!
 //! The same coordinator logic runs in two modes:
 //! * **Simulated time** — a discrete-event engine ([`sim`]) regenerates the

@@ -8,7 +8,7 @@
 //!
 //! The end-to-end drivers live in examples/ (see README).
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use balsam::service::{http_gw, ServiceCore};
 use balsam::util::cli::Args;
@@ -47,8 +47,8 @@ fn cmd_repro(args: &Args) -> balsam::Result<()> {
 
 fn cmd_service(args: &Args) -> balsam::Result<()> {
     let addr = args.str_or("addr", "127.0.0.1:8008");
-    let svc = Arc::new(Mutex::new(ServiceCore::new(b"balsam-demo-secret")));
-    let token = svc.lock().unwrap().admin_token();
+    let svc = Arc::new(ServiceCore::new(b"balsam-demo-secret"));
+    let token = svc.admin_token();
     let server = http_gw::serve(svc, addr)?;
     println!("balsam service on http://{}", server.addr);
     println!("admin token: {token}");

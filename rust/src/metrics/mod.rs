@@ -168,7 +168,7 @@ pub fn littles_law(events: &[Event], site: SiteId, t0: f64, t1: f64) -> LittleCh
 
 /// Snapshot of all jobs keyed by id (input to [`stage_durations`]).
 pub fn job_table(svc: &crate::service::ServiceCore) -> BTreeMap<JobId, Job> {
-    svc.store.jobs_iter().map(|j| (j.id, j.clone())).collect()
+    svc.store.jobs_snapshot().into_iter().map(|j| (j.id, j)).collect()
 }
 
 #[cfg(test)]
@@ -176,7 +176,7 @@ mod tests {
     use super::*;
 
     fn ev(job: u64, site: u64, ts: f64, from: JobState, to: JobState) -> Event {
-        Event { job_id: JobId(job), site_id: SiteId(site), ts, from, to, data: String::new() }
+        Event { seq: 0, job_id: JobId(job), site_id: SiteId(site), ts, from, to, data: String::new() }
     }
 
     fn lifecycle_events(job: u64, site: u64, t0: f64, run_s: f64) -> Vec<Event> {

@@ -4,6 +4,14 @@
 //! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see DESIGN.md and /opt/xla-example/README.md).
+//!
+//! PJRT execution needs the native `xla` bindings, which are not on
+//! crates.io — the dependency is gated behind the off-by-default `xla`
+//! cargo feature (enable it with a vendored `xla` crate via a `[patch]` /
+//! path dependency; see README). Without the feature everything still
+//! compiles: manifest parsing works, and [`Runtime::load`] /
+//! [`CompiledModel::run_f32`] return a descriptive error. Callers probe
+//! [`pjrt_available`] to skip gracefully.
 
 pub mod real;
 pub mod local;
@@ -68,9 +76,15 @@ pub fn read_manifest(dir: &Path) -> Result<Vec<ModelSpec>> {
     Ok(out)
 }
 
+/// Is PJRT execution compiled in (`xla` cargo feature)?
+pub fn pjrt_available() -> bool {
+    cfg!(feature = "xla")
+}
+
 /// A compiled model bound to the PJRT CPU client.
 pub struct CompiledModel {
     pub spec: ModelSpec,
+    #[cfg(feature = "xla")]
     exe: xla::PjRtLoadedExecutable,
 }
 
@@ -85,7 +99,6 @@ impl CompiledModel {
             self.spec.inputs.len(),
             inputs.len()
         );
-        let mut literals = Vec::with_capacity(inputs.len());
         for (i, data) in inputs.iter().enumerate() {
             let want = self.spec.input_len(i);
             anyhow::ensure!(
@@ -94,6 +107,14 @@ impl CompiledModel {
                 self.spec.name,
                 data.len()
             );
+        }
+        self.execute(inputs)
+    }
+
+    #[cfg(feature = "xla")]
+    fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, data) in inputs.iter().enumerate() {
             let dims: Vec<i64> = self.spec.inputs[i].1.iter().map(|&d| d as i64).collect();
             let lit = xla::Literal::vec1(data);
             let lit = if dims.is_empty() { lit } else { lit.reshape(&dims)? };
@@ -107,10 +128,19 @@ impl CompiledModel {
         }
         Ok(out)
     }
+
+    #[cfg(not(feature = "xla"))]
+    fn execute(&self, _inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        Err(anyhow!(
+            "model {}: balsam was built without the `xla` feature; PJRT execution unavailable",
+            self.spec.name
+        ))
+    }
 }
 
 /// The artifact runtime: PJRT CPU client + compiled executables.
 pub struct Runtime {
+    #[cfg(feature = "xla")]
     #[allow(dead_code)]
     client: xla::PjRtClient,
     pub models: BTreeMap<String, CompiledModel>,
@@ -119,6 +149,7 @@ pub struct Runtime {
 
 impl Runtime {
     /// Compile the named models (or all in the manifest if `names` empty).
+    #[cfg(feature = "xla")]
     pub fn load(dir: impl AsRef<Path>, names: &[&str]) -> Result<Runtime> {
         let dir = dir.as_ref();
         let client = xla::PjRtClient::cpu()?;
@@ -138,6 +169,19 @@ impl Runtime {
         }
         anyhow::ensure!(!models.is_empty(), "no models loaded from {}", dir.display());
         Ok(Runtime { client, models, artifacts_dir: dir.to_path_buf() })
+    }
+
+    /// Without the `xla` feature, loading fails with a descriptive error
+    /// (the manifest is still validated so the message is actionable).
+    #[cfg(not(feature = "xla"))]
+    pub fn load(dir: impl AsRef<Path>, _names: &[&str]) -> Result<Runtime> {
+        let dir = dir.as_ref();
+        let _ = read_manifest(dir)?;
+        Err(anyhow!(
+            "balsam was built without the `xla` feature; enable it (with a vendored xla crate) \
+             to execute AOT artifacts from {}",
+            dir.display()
+        ))
     }
 
     pub fn model(&self, name: &str) -> Result<&CompiledModel> {

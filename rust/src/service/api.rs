@@ -71,6 +71,12 @@ pub enum ApiRequest {
     CreateSession { site: SiteId, batch_job: Option<BatchJobId> },
     SessionAcquire { session: SessionId, max_nodes: u32, max_jobs: usize },
     SessionHeartbeat { session: SessionId },
+    /// One-round-trip launcher sync: heartbeat the session, then apply the
+    /// batched per-job transitions in order (a job may appear twice, e.g.
+    /// RUN_DONE then POSTPROCESSED). Best-effort per update; the response
+    /// is `JobIds` listing the jobs whose transition was rejected, so the
+    /// launcher can re-fetch their state.
+    SessionSync { session: SessionId, updates: Vec<(JobId, JobState, String)> },
     SessionEnd { session: SessionId },
     // --- batch jobs (pilot allocations) ---
     CreateBatchJob {
@@ -86,6 +92,9 @@ pub enum ApiRequest {
     // --- transfer items ---
     PendingTransferItems { site: SiteId, direction: Direction, limit: usize },
     UpdateTransferItems { ids: Vec<TransferItemId>, state: TransferState, task_id: Option<XferTaskId> },
+    /// One-round-trip transfer-module sync: mixed per-item status updates
+    /// (Done and Error batches from several transfer tasks in one call).
+    SyncTransferItems { updates: Vec<(TransferItemId, TransferState, Option<XferTaskId>)> },
     // --- monitoring ---
     SiteBacklog { site: SiteId },
     ListEvents { since: usize },
@@ -149,19 +158,30 @@ impl ApiResponse {
     expect_variant!(events, Events, Vec<Event>);
 }
 
-#[derive(Debug, Clone, thiserror::Error, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum ApiError {
-    #[error("unauthorized")]
     Unauthorized,
-    #[error("not found: {0}")]
     NotFound(String),
-    #[error("illegal transition {from} -> {to} for job {job}")]
     IllegalTransition { job: JobId, from: JobState, to: JobState },
-    #[error("bad request: {0}")]
     BadRequest(String),
-    #[error("transport: {0}")]
     Transport(String),
 }
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ApiError::Unauthorized => write!(f, "unauthorized"),
+            ApiError::NotFound(s) => write!(f, "not found: {s}"),
+            ApiError::IllegalTransition { job, from, to } => {
+                write!(f, "illegal transition {from} -> {to} for job {job}")
+            }
+            ApiError::BadRequest(s) => write!(f, "bad request: {s}"),
+            ApiError::Transport(s) => write!(f, "transport: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for ApiError {}
 
 /// A connection to the Balsam service. Implemented by the in-process
 /// simulator transport and by the HTTP client transport; all site modules

@@ -1,16 +1,21 @@
 //! Service handler logic: multi-tenant bookkeeping over the [`Store`].
 //!
+//! [`ServiceCore::handle`] takes `&self`: the store is sharded by site
+//! with interior mutability (see [`super::store`]), so the HTTP gateway's
+//! worker threads dispatch concurrently and launcher traffic for
+//! different sites never serializes behind one lock — the property behind
+//! the paper's flat response times under hundreds of sessions (§4.5).
+//!
 //! The service is passive (client-driven) except for session-lease expiry:
 //! a launcher that stops heartbeating has its jobs recovered so "critical
 //! faults causing ungraceful launcher termination do not cause jobs to be
 //! locked in perpetuity" (paper §3.1).
 
-
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::api::*;
 use super::auth::TokenAuthority;
 use super::models::*;
-use super::state;
 use super::store::Store;
 
 /// Default lease: a launcher missing heartbeats for this long is presumed
@@ -25,20 +30,20 @@ pub struct ServiceCore {
     admin: UserId,
     pub lease_timeout_s: f64,
     /// Monotonic API-call counter (perf observability).
-    pub calls: u64,
+    calls: AtomicU64,
 }
 
 impl ServiceCore {
     pub fn new(secret: &[u8]) -> ServiceCore {
-        let mut store = Store::new();
+        let store = Store::new();
         let admin = UserId(store.fresh_id());
-        store.users.insert(admin, User { id: admin, name: "admin".into() });
+        store.insert_user(User { id: admin, name: "admin".into() });
         ServiceCore {
             store,
             auth: TokenAuthority::new(secret),
             admin,
             lease_timeout_s: DEFAULT_LEASE_TIMEOUT_S,
-            calls: 0,
+            calls: AtomicU64::new(0),
         }
     }
 
@@ -51,46 +56,42 @@ impl ServiceCore {
         self.auth.issue(self.admin)
     }
 
-    /// Entry point for every API interaction.
-    pub fn handle(
-        &mut self,
-        now: f64,
-        token: &str,
-        req: ApiRequest,
-    ) -> Result<ApiResponse, ApiError> {
-        self.calls += 1;
+    /// API calls served so far.
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    /// Entry point for every API interaction. `&self`: safe to call from
+    /// any number of gateway worker threads concurrently.
+    pub fn handle(&self, now: f64, token: &str, req: ApiRequest) -> Result<ApiResponse, ApiError> {
+        self.calls.fetch_add(1, Ordering::Relaxed);
         let user = self.auth.validate(token).ok_or(ApiError::Unauthorized)?;
-        if !self.store.users.contains_key(&user) {
+        if !self.store.user_exists(user) {
             return Err(ApiError::Unauthorized);
         }
         self.expire_stale_sessions(now);
         self.dispatch(now, user, req)
     }
 
-    fn dispatch(
-        &mut self,
-        now: f64,
-        user: UserId,
-        req: ApiRequest,
-    ) -> Result<ApiResponse, ApiError> {
+    fn dispatch(&self, now: f64, user: UserId, req: ApiRequest) -> Result<ApiResponse, ApiError> {
         match req {
             ApiRequest::CreateUser { name } => {
                 if user != self.admin {
                     return Err(ApiError::Unauthorized);
                 }
                 let id = UserId(self.store.fresh_id());
-                self.store.users.insert(id, User { id, name });
+                self.store.insert_user(User { id, name });
                 Ok(ApiResponse::UserId(id))
             }
             ApiRequest::CreateSite { name, hostname, path } => {
                 let id = SiteId(self.store.fresh_id());
-                self.store.sites.insert(id, Site { id, owner: user, name, hostname, path });
+                self.store.insert_site(Site { id, owner: user, name, hostname, path });
                 Ok(ApiResponse::SiteId(id))
             }
             ApiRequest::RegisterApp { site, name, command_template, parameters } => {
                 self.check_site(user, site)?;
                 let id = AppId(self.store.fresh_id());
-                self.store.apps.insert(id, App { id, site_id: site, name, command_template, parameters });
+                self.store.insert_app(App { id, site_id: site, name, command_template, parameters });
                 Ok(ApiResponse::AppId(id))
             }
             ApiRequest::BulkCreateJobs { jobs } => {
@@ -108,11 +109,8 @@ impl ServiceCore {
             }
             ApiRequest::CountByState { site } => {
                 self.check_site(user, site)?;
-                let counts = JobState::ALL
-                    .iter()
-                    .map(|&s| (s, self.store.count_in_state(site, s)))
-                    .filter(|&(_, n)| n > 0)
-                    .collect();
+                let counts =
+                    self.store.counts_by_state(site).into_iter().filter(|&(_, n)| n > 0).collect();
                 Ok(ApiResponse::Counts(counts))
             }
             ApiRequest::UpdateJobState { job, to, data } => {
@@ -128,83 +126,82 @@ impl ServiceCore {
             ApiRequest::CreateSession { site, batch_job } => {
                 self.check_site(user, site)?;
                 let id = SessionId(self.store.fresh_id());
-                self.store.sessions.insert(
+                self.store.insert_session(Session {
                     id,
-                    Session {
-                        id,
-                        site_id: site,
-                        batch_job_id: batch_job,
-                        heartbeat_at: now,
-                        acquired: Default::default(),
-                        ended: false,
-                    },
-                );
+                    site_id: site,
+                    batch_job_id: batch_job,
+                    heartbeat_at: now,
+                    acquired: Default::default(),
+                    ended: false,
+                });
                 Ok(ApiResponse::SessionId(id))
             }
             ApiRequest::SessionAcquire { session, max_nodes, max_jobs } => {
-                let jobs = self.session_acquire(now, user, session, max_nodes, max_jobs)?;
+                let site = self
+                    .store
+                    .session_site(session)
+                    .ok_or_else(|| ApiError::NotFound(format!("session {session}")))?;
+                self.check_site(user, site)?;
+                let jobs = self.store.acquire(session, now, max_nodes, max_jobs)?;
                 Ok(ApiResponse::Jobs(jobs))
             }
             ApiRequest::SessionHeartbeat { session } => {
-                let sess = self
-                    .store
-                    .sessions
-                    .get_mut(&session)
-                    .ok_or_else(|| ApiError::NotFound(format!("session {session}")))?;
-                if sess.ended {
-                    return Err(ApiError::BadRequest(format!("session {session} ended")));
-                }
-                sess.heartbeat_at = now;
+                self.store.heartbeat(session, now)?;
                 Ok(ApiResponse::Unit)
             }
-            ApiRequest::SessionEnd { session } => {
-                // Graceful end: release any still-acquired jobs back to the pool.
-                let acquired: Vec<JobId> = match self.store.sessions.get_mut(&session) {
-                    Some(s) => {
-                        s.ended = true;
-                        s.acquired.iter().copied().collect()
-                    }
-                    None => return Err(ApiError::NotFound(format!("session {session}"))),
-                };
-                for id in acquired {
-                    self.release_from_session(id);
-                    // A gracefully ended launcher never leaves jobs RUNNING;
-                    // if it somehow did, recover them like a lease expiry.
-                    if self.store.job(id).map(|j| j.state) == Some(JobState::Running) {
-                        self.recover_job(now, id, "graceful session end with running job");
+            ApiRequest::SessionSync { session, updates } => {
+                let site = self
+                    .store
+                    .session_site(session)
+                    .ok_or_else(|| ApiError::NotFound(format!("session {session}")))?;
+                self.check_site(user, site)?;
+                self.store.heartbeat(session, now)?;
+                // Best-effort batch: an individual rejection (e.g. a job
+                // already recovered by lease expiry) must not abort the
+                // launcher's whole heartbeat cycle.
+                let mut failed = Vec::new();
+                for (job, to, data) in updates {
+                    if self.transition_job(now, user, job, to, &data).is_err() {
+                        failed.push(job);
                     }
                 }
+                Ok(ApiResponse::JobIds(failed))
+            }
+            ApiRequest::SessionEnd { session } => {
+                // Graceful end: release any still-acquired jobs back to the
+                // pool; a gracefully ended launcher never leaves jobs
+                // RUNNING, but if it somehow did, recover them like a lease
+                // expiry.
+                let terminals =
+                    self.store.end_session(session, now, "graceful session end with running job")?;
+                self.propagate_terminals(now, terminals);
                 Ok(ApiResponse::Unit)
             }
             ApiRequest::CreateBatchJob { site, num_nodes, wall_time_s, mode, queue, project } => {
                 self.check_site(user, site)?;
                 let id = BatchJobId(self.store.fresh_id());
-                self.store.batch_jobs.insert(
+                self.store.insert_batch_job(BatchJob {
                     id,
-                    BatchJob {
-                        id,
-                        site_id: site,
-                        num_nodes,
-                        wall_time_s,
-                        mode,
-                        queue,
-                        project,
-                        state: BatchJobState::Pending,
-                        local_id: None,
-                        created_at: now,
-                        started_at: None,
-                        ended_at: None,
-                    },
-                );
+                    site_id: site,
+                    num_nodes,
+                    wall_time_s,
+                    mode,
+                    queue,
+                    project,
+                    state: BatchJobState::Pending,
+                    local_id: None,
+                    created_at: now,
+                    started_at: None,
+                    ended_at: None,
+                });
                 Ok(ApiResponse::BatchJobId(id))
             }
             ApiRequest::ListBatchJobs { site, active_only } => {
                 self.check_site(user, site)?;
                 let out = self
                     .store
-                    .batch_jobs
-                    .values()
-                    .filter(|b| b.site_id == site)
+                    .batch_jobs_for_site(site)
+                    .into_iter()
                     .filter(|b| {
                         !active_only
                             || matches!(
@@ -212,27 +209,11 @@ impl ServiceCore {
                                 BatchJobState::Pending | BatchJobState::Queued | BatchJobState::Running
                             )
                     })
-                    .cloned()
                     .collect();
                 Ok(ApiResponse::BatchJobs(out))
             }
             ApiRequest::UpdateBatchJob { id, state, local_id } => {
-                let bj = self
-                    .store
-                    .batch_jobs
-                    .get_mut(&id)
-                    .ok_or_else(|| ApiError::NotFound(format!("batchjob {id}")))?;
-                bj.state = state;
-                if let Some(l) = local_id {
-                    bj.local_id = Some(l);
-                }
-                match state {
-                    BatchJobState::Running if bj.started_at.is_none() => bj.started_at = Some(now),
-                    BatchJobState::Finished | BatchJobState::Deleted if bj.ended_at.is_none() => {
-                        bj.ended_at = Some(now)
-                    }
-                    _ => {}
-                }
+                self.store.update_batch_job(id, state, local_id, now)?;
                 Ok(ApiResponse::Unit)
             }
             ApiRequest::PendingTransferItems { site, direction, limit } => {
@@ -244,49 +225,68 @@ impl ServiceCore {
                     Direction::In => JobState::Ready,
                     Direction::Out => JobState::Postprocessed,
                 };
-                let limit = if limit == 0 { usize::MAX } else { limit };
-                let ids = self.store.titems_in_state(site, direction, TransferState::Pending, usize::MAX);
-                let items = ids
-                    .iter()
-                    .map(|&i| self.store.titem(i).unwrap())
-                    .filter(|t| self.store.job(t.job_id).map(|j| j.state == gate).unwrap_or(false))
-                    .take(limit)
-                    .cloned()
-                    .collect();
+                let items = self.store.pending_actionable_titems(site, direction, gate, limit);
                 Ok(ApiResponse::TransferItems(items))
             }
             ApiRequest::UpdateTransferItems { ids, state, task_id } => {
-                for id in &ids {
-                    if self.store.titem(*id).is_none() {
-                        return Err(ApiError::NotFound(format!("transfer item {id}")));
-                    }
-                }
-                for id in ids {
-                    self.store.set_titem_state(id, state, task_id);
-                    if state == TransferState::Done {
-                        self.on_titem_done(now, id);
-                    }
-                }
+                let updates: Vec<_> = ids.into_iter().map(|id| (id, state, task_id)).collect();
+                self.check_titem_sites(user, &updates)?;
+                let terminals = self.store.update_titems(&updates, now)?;
+                self.propagate_terminals(now, terminals);
+                Ok(ApiResponse::Unit)
+            }
+            ApiRequest::SyncTransferItems { updates } => {
+                self.check_titem_sites(user, &updates)?;
+                let terminals = self.store.update_titems(&updates, now)?;
+                self.propagate_terminals(now, terminals);
                 Ok(ApiResponse::Unit)
             }
             ApiRequest::SiteBacklog { site } => {
                 self.check_site(user, site)?;
-                Ok(ApiResponse::Backlog(self.backlog(site)))
+                let (backlog_jobs, runnable_nodes, inflight_nodes, batch_nodes) =
+                    self.store.backlog_parts(site);
+                Ok(ApiResponse::Backlog(Backlog {
+                    backlog_jobs,
+                    runnable_nodes,
+                    inflight_nodes,
+                    batch_nodes,
+                }))
             }
             ApiRequest::ListEvents { since } => {
-                let evs = self.store.events.get(since..).unwrap_or(&[]).to_vec();
-                Ok(ApiResponse::Events(evs))
+                Ok(ApiResponse::Events(self.store.events_since(since)))
             }
         }
     }
 
     // ----- helpers --------------------------------------------------------
 
+    /// Authorize a batch of transfer-item updates: the caller must own
+    /// every touched item's site (or be admin). Also surfaces NotFound for
+    /// unknown ids before any update is applied.
+    fn check_titem_sites(
+        &self,
+        user: UserId,
+        updates: &[(TransferItemId, TransferState, Option<XferTaskId>)],
+    ) -> Result<(), ApiError> {
+        let mut checked: Vec<SiteId> = Vec::new();
+        for (id, _, _) in updates {
+            let site = self
+                .store
+                .titem(*id)
+                .map(|t| t.site_id)
+                .ok_or_else(|| ApiError::NotFound(format!("transfer item {id}")))?;
+            if !checked.contains(&site) {
+                self.check_site(user, site)?;
+                checked.push(site);
+            }
+        }
+        Ok(())
+    }
+
     fn check_site(&self, user: UserId, site: SiteId) -> Result<(), ApiError> {
         let s = self
             .store
-            .sites
-            .get(&site)
+            .site(site)
             .ok_or_else(|| ApiError::NotFound(format!("site {site}")))?;
         if s.owner != user && user != self.admin {
             return Err(ApiError::Unauthorized);
@@ -294,17 +294,11 @@ impl ServiceCore {
         Ok(())
     }
 
-    fn create_job(&mut self, now: f64, user: UserId, jc: JobCreate) -> Result<JobId, ApiError> {
+    fn create_job(&self, now: f64, user: UserId, jc: JobCreate) -> Result<JobId, ApiError> {
         self.check_site(user, jc.site_id)?;
-        let app = self
-            .store
-            .apps
-            .values()
-            .find(|a| a.site_id == jc.site_id && a.name == jc.app)
-            .ok_or_else(|| {
-                ApiError::BadRequest(format!("app '{}' not registered at site {}", jc.app, jc.site_id))
-            })?
-            .id;
+        let app = self.store.app_for(jc.site_id, &jc.app).ok_or_else(|| {
+            ApiError::BadRequest(format!("app '{}' not registered at site {}", jc.app, jc.site_id))
+        })?;
         for p in &jc.parents {
             if self.store.job(*p).is_none() {
                 return Err(ApiError::BadRequest(format!("parent {p} does not exist")));
@@ -347,10 +341,8 @@ impl ServiceCore {
                 site_id: jc.site_id,
                 direction: Direction::Out,
                 remote: remote.clone(),
-                size_bytes: *size,
-                // Stage-out becomes Pending only after the run completes;
-                // mark it Error-proof by starting Pending — the transfer
-                // module only considers items whose job is POSTPROCESSED.
+                // Stage-out becomes actionable only once the job is
+                // POSTPROCESSED; the transfer module gates on job state.
                 state: TransferState::Pending,
                 task_id: None,
             });
@@ -360,28 +352,30 @@ impl ServiceCore {
             .parents
             .iter()
             .any(|p| self.store.job(*p).map(|j| j.state != JobState::JobFinished).unwrap_or(true));
+        self.store.advance_new_job(id, now, parents_pending);
         if parents_pending {
-            self.store.set_job_state(id, JobState::AwaitingParents, now, "");
-        } else {
-            self.advance_past_parents(now, id);
+            // Close the race where a parent reached a terminal state
+            // between the pre-insert check and the children-index
+            // registration (and resolve children submitted after their
+            // parent already terminated).
+            let any_failed = jc
+                .parents
+                .iter()
+                .any(|p| self.store.job(*p).map(|j| j.state == JobState::Failed).unwrap_or(false));
+            let all_done = jc
+                .parents
+                .iter()
+                .all(|p| self.store.job(*p).map(|j| j.state == JobState::JobFinished).unwrap_or(false));
+            if any_failed {
+                if let Ok(terminals) = self.store.transition(id, JobState::Failed, now, "parent failed")
+                {
+                    self.propagate_terminals(now, terminals);
+                }
+            } else if all_done {
+                self.store.advance_new_job(id, now, false);
+            }
         }
         Ok(id)
-    }
-
-    /// Created/AwaitingParents -> Ready (stage-in pending) or straight to
-    /// Preprocessed when the job carries no input data.
-    fn advance_past_parents(&mut self, now: f64, id: JobId) {
-        let has_stage_in = self
-            .store
-            .titems_for_job(id)
-            .iter()
-            .any(|t| t.direction == Direction::In);
-        if has_stage_in {
-            self.store.set_job_state(id, JobState::Ready, now, "");
-        } else {
-            self.store.set_job_state(id, JobState::StagedIn, now, "no stage-in data");
-            self.store.set_job_state(id, JobState::Preprocessed, now, "");
-        }
     }
 
     fn query_jobs(&self, filter: &JobFilter) -> Vec<Job> {
@@ -394,10 +388,9 @@ impl ServiceCore {
                 // Indexed path.
                 let mut out = Vec::new();
                 for &s in &filter.states {
-                    for id in self.store.jobs_in_state(site, s) {
-                        let j = self.store.job(id).unwrap();
-                        if match_tags(j) {
-                            out.push(j.clone());
+                    for j in self.store.jobs_in_state_full(site, s) {
+                        if match_tags(&j) {
+                            out.push(j);
                             if out.len() >= limit {
                                 return out;
                             }
@@ -408,252 +401,74 @@ impl ServiceCore {
             }
             _ => self
                 .store
-                .jobs_iter()
+                .jobs_snapshot()
+                .into_iter()
                 .filter(|j| filter.site.map(|s| j.site_id == s).unwrap_or(true))
                 .filter(|j| filter.states.is_empty() || filter.states.contains(&j.state))
                 .filter(|j| match_tags(j))
                 .take(limit)
-                .cloned()
                 .collect(),
         }
     }
 
+    /// Authorization + legality-checked transition + DAG propagation.
     fn transition_job(
-        &mut self,
+        &self,
         now: f64,
         user: UserId,
         id: JobId,
         to: JobState,
         data: &str,
     ) -> Result<(), ApiError> {
-        let job = self.store.job(id).ok_or_else(|| ApiError::NotFound(format!("job {id}")))?;
-        self.check_site(user, job.site_id)?;
-        let from = job.state;
-        if !state::legal(from, to) {
-            return Err(ApiError::IllegalTransition { job: id, from, to });
-        }
-        self.store.set_job_state(id, to, now, data);
-        self.post_transition(now, id, to);
+        let site = self
+            .store
+            .job(id)
+            .map(|j| j.site_id)
+            .ok_or_else(|| ApiError::NotFound(format!("job {id}")))?;
+        self.check_site(user, site)?;
+        let terminals = self.store.transition(id, to, now, data)?;
+        self.propagate_terminals(now, terminals);
         Ok(())
     }
 
-    /// Service-side consequences of a transition.
-    fn post_transition(&mut self, now: f64, id: JobId, to: JobState) {
-        match to {
-            JobState::Running => {
-                if let Some(j) = self.store.job_mut(id) {
-                    j.attempts += 1;
-                }
-            }
-            JobState::RunDone => {
-                self.release_from_session(id);
-            }
-            JobState::RunError | JobState::RunTimeout => {
-                self.release_from_session(id);
-                let (attempts, max) =
-                    self.store.job(id).map(|j| (j.attempts, j.max_attempts)).unwrap_or((0, 0));
-                if attempts < max {
-                    self.store.set_job_state(id, JobState::RestartReady, now, "retry");
-                } else {
-                    self.store.set_job_state(id, JobState::Failed, now, "retry budget exhausted");
-                    self.propagate_parent_outcome(now, id);
-                }
-            }
-            JobState::Postprocessed => {
-                // Jobs without stage-out data complete immediately.
-                if self.store.transfers_complete(id, Direction::Out) {
-                    self.store.set_job_state(id, JobState::JobFinished, now, "no stage-out data");
-                    self.propagate_parent_outcome(now, id);
-                }
-            }
-            JobState::JobFinished | JobState::Failed => {
-                self.propagate_parent_outcome(now, id);
-            }
-            _ => {}
-        }
-    }
-
-    /// A stage-in/out item completed: advance the owning job if all items
-    /// in that direction are now done.
-    fn on_titem_done(&mut self, now: f64, id: TransferItemId) {
-        let (job_id, dir) = {
-            let t = self.store.titem(id).unwrap();
-            (t.job_id, t.direction)
-        };
-        let job_state = self.store.job(job_id).map(|j| j.state);
-        match (dir, job_state) {
-            (Direction::In, Some(JobState::Ready)) => {
-                if self.store.transfers_complete(job_id, Direction::In) {
-                    self.store.set_job_state(job_id, JobState::StagedIn, now, "stage-in complete");
-                    self.store.set_job_state(job_id, JobState::Preprocessed, now, "");
-                }
-            }
-            (Direction::Out, Some(JobState::Postprocessed)) => {
-                if self.store.transfers_complete(job_id, Direction::Out) {
-                    self.store.set_job_state(job_id, JobState::JobFinished, now, "stage-out complete");
-                    self.propagate_parent_outcome(now, job_id);
-                }
-            }
-            _ => {}
-        }
-    }
-
-    /// DAG propagation: when a parent reaches a terminal state, advance or
-    /// fail its children.
-    fn propagate_parent_outcome(&mut self, now: f64, parent: JobId) {
-        let parent_failed = self.store.job(parent).map(|j| j.state == JobState::Failed).unwrap_or(false);
-        let children: Vec<JobId> = self.store.children_of(parent).to_vec();
-        for c in children {
-            let cstate = self.store.job(c).map(|j| j.state);
-            if cstate != Some(JobState::AwaitingParents) {
-                continue;
-            }
-            if parent_failed {
-                self.store.set_job_state(c, JobState::Failed, now, "parent failed");
-                self.propagate_parent_outcome(now, c);
-                continue;
-            }
-            let all_done = self
-                .store
-                .job(c)
-                .unwrap()
-                .parents
-                .iter()
-                .all(|p| self.store.job(*p).map(|j| j.state == JobState::JobFinished).unwrap_or(false));
-            if all_done {
-                self.advance_past_parents(now, c);
-            }
-        }
-    }
-
-    fn release_from_session(&mut self, id: JobId) {
-        let sid = self.store.job(id).and_then(|j| j.session);
-        if let Some(sid) = sid {
-            if let Some(s) = self.store.sessions.get_mut(&sid) {
-                s.acquired.remove(&id);
-            }
-            if let Some(j) = self.store.job_mut(id) {
-                j.session = None;
-            }
-        }
-    }
-
-    fn session_acquire(
-        &mut self,
-        now: f64,
-        user: UserId,
-        session: SessionId,
-        max_nodes: u32,
-        max_jobs: usize,
-    ) -> Result<Vec<Job>, ApiError> {
-        let (site, ended) = {
-            let s = self
-                .store
-                .sessions
-                .get(&session)
-                .ok_or_else(|| ApiError::NotFound(format!("session {session}")))?;
-            (s.site_id, s.ended)
-        };
-        if ended {
-            return Err(ApiError::BadRequest(format!("session {session} ended")));
-        }
-        self.check_site(user, site)?;
-        // Heartbeat implicitly.
-        self.store.sessions.get_mut(&session).unwrap().heartbeat_at = now;
-
-        let mut picked: Vec<JobId> = Vec::new();
-        let mut nodes_left = max_nodes;
-        // FIFO over runnable states; RestartReady first (recovering work is
-        // older than fresh work).
-        for st in [JobState::RestartReady, JobState::Preprocessed] {
-            for id in self.store.jobs_in_state(site, st) {
-                if picked.len() >= max_jobs {
-                    break;
-                }
-                let j = self.store.job(id).unwrap();
-                if j.session.is_some() || j.num_nodes > nodes_left {
+    /// DAG propagation: when parents reach a terminal state, advance or
+    /// fail their children. Children may live at other sites, so this runs
+    /// outside any shard lock, taking locks one shard at a time.
+    fn propagate_terminals(&self, now: f64, terminals: Vec<JobId>) {
+        let mut work = terminals;
+        while let Some(parent) = work.pop() {
+            let parent_failed =
+                self.store.job(parent).map(|j| j.state == JobState::Failed).unwrap_or(false);
+            for c in self.store.children_of(parent) {
+                let cjob = match self.store.job(c) {
+                    Some(j) => j,
+                    None => continue,
+                };
+                if cjob.state != JobState::AwaitingParents {
                     continue;
                 }
-                nodes_left -= j.num_nodes;
-                picked.push(id);
+                if parent_failed {
+                    if let Ok(mut t) = self.store.transition(c, JobState::Failed, now, "parent failed")
+                    {
+                        work.append(&mut t);
+                    }
+                    continue;
+                }
+                let all_done = cjob
+                    .parents
+                    .iter()
+                    .all(|p| self.store.job(*p).map(|j| j.state == JobState::JobFinished).unwrap_or(false));
+                if all_done {
+                    self.store.advance_new_job(c, now, false);
+                }
             }
-        }
-        let mut out = Vec::with_capacity(picked.len());
-        for id in picked {
-            if let Some(j) = self.store.job_mut(id) {
-                j.session = Some(session);
-            }
-            self.store.sessions.get_mut(&session).unwrap().acquired.insert(id);
-            out.push(self.store.job(id).unwrap().clone());
-        }
-        Ok(out)
-    }
-
-    fn backlog(&self, site: SiteId) -> Backlog {
-        let sum_nodes = |st: JobState| -> u32 {
-            self.store
-                .jobs_in_state(site, st)
-                .iter()
-                .map(|&id| self.store.job(id).unwrap().num_nodes)
-                .sum()
-        };
-        let backlog_states = [
-            JobState::Created,
-            JobState::AwaitingParents,
-            JobState::Ready,
-            JobState::StagedIn,
-            JobState::Preprocessed,
-            JobState::RestartReady,
-        ];
-        Backlog {
-            backlog_jobs: backlog_states.iter().map(|&s| self.store.count_in_state(site, s)).sum(),
-            runnable_nodes: sum_nodes(JobState::Preprocessed) + sum_nodes(JobState::RestartReady),
-            inflight_nodes: sum_nodes(JobState::Ready) + sum_nodes(JobState::StagedIn),
-            batch_nodes: self
-                .store
-                .batch_jobs
-                .values()
-                .filter(|b| {
-                    b.site_id == site
-                        && matches!(
-                            b.state,
-                            BatchJobState::Pending | BatchJobState::Queued | BatchJobState::Running
-                        )
-                })
-                .map(|b| b.num_nodes)
-                .sum(),
-        }
-    }
-
-    /// Reset a job after launcher death (lease expiry).
-    fn recover_job(&mut self, now: f64, id: JobId, reason: &str) {
-        let st = self.store.job(id).map(|j| j.state);
-        if st == Some(JobState::Running) {
-            self.store.set_job_state(id, JobState::RunTimeout, now, reason);
-            self.post_transition(now, id, JobState::RunTimeout);
         }
     }
 
     /// Detect and expire stale sessions (the fault-tolerance core, §4.4).
-    pub fn expire_stale_sessions(&mut self, now: f64) {
-        let stale: Vec<SessionId> = self
-            .store
-            .sessions
-            .values()
-            .filter(|s| !s.ended && now - s.heartbeat_at > self.lease_timeout_s)
-            .map(|s| s.id)
-            .collect();
-        for sid in stale {
-            let acquired: Vec<JobId> = {
-                let s = self.store.sessions.get_mut(&sid).unwrap();
-                s.ended = true;
-                s.acquired.iter().copied().collect()
-            };
-            for id in acquired {
-                self.release_from_session(id);
-                self.recover_job(now, id, "session lease expired");
-            }
-        }
+    pub fn expire_stale_sessions(&self, now: f64) {
+        let terminals = self.store.expire_stale(now, self.lease_timeout_s);
+        self.propagate_terminals(now, terminals);
     }
 }
 
@@ -662,7 +477,7 @@ mod tests {
     use super::*;
 
     fn setup() -> (ServiceCore, String, SiteId) {
-        let mut svc = ServiceCore::new(b"test-secret");
+        let svc = ServiceCore::new(b"test-secret");
         let tok = svc.admin_token();
         let site = svc
             .handle(0.0, &tok, ApiRequest::CreateSite {
@@ -682,7 +497,7 @@ mod tests {
         (svc, tok, site)
     }
 
-    fn create_one(svc: &mut ServiceCore, tok: &str, site: SiteId, xfers: bool) -> JobId {
+    fn create_one(svc: &ServiceCore, tok: &str, site: SiteId, xfers: bool) -> JobId {
         let mut jc = JobCreate::simple(site, "EigenCorr", "xpcs");
         if xfers {
             jc.transfers_in = vec![("APS".into(), 878_000_000)];
@@ -693,7 +508,7 @@ mod tests {
 
     #[test]
     fn bad_token_rejected() {
-        let (mut svc, _tok, site) = setup();
+        let (svc, _tok, site) = setup();
         let err = svc
             .handle(0.0, "balsam.1.deadbeef", ApiRequest::SiteBacklog { site })
             .unwrap_err();
@@ -702,7 +517,7 @@ mod tests {
 
     #[test]
     fn unknown_app_rejected() {
-        let (mut svc, tok, site) = setup();
+        let (svc, tok, site) = setup();
         let jc = JobCreate::simple(site, "NotRegistered", "x");
         let err = svc.handle(0.0, &tok, ApiRequest::BulkCreateJobs { jobs: vec![jc] }).unwrap_err();
         assert!(matches!(err, ApiError::BadRequest(_)));
@@ -710,22 +525,22 @@ mod tests {
 
     #[test]
     fn job_without_transfers_is_immediately_runnable() {
-        let (mut svc, tok, site) = setup();
-        let id = create_one(&mut svc, &tok, site, false);
+        let (svc, tok, site) = setup();
+        let id = create_one(&svc, &tok, site, false);
         assert_eq!(svc.store.job(id).unwrap().state, JobState::Preprocessed);
     }
 
     #[test]
     fn job_with_stage_in_waits_in_ready() {
-        let (mut svc, tok, site) = setup();
-        let id = create_one(&mut svc, &tok, site, true);
+        let (svc, tok, site) = setup();
+        let id = create_one(&svc, &tok, site, true);
         assert_eq!(svc.store.job(id).unwrap().state, JobState::Ready);
     }
 
     #[test]
     fn stage_in_completion_advances_job() {
-        let (mut svc, tok, site) = setup();
-        let id = create_one(&mut svc, &tok, site, true);
+        let (svc, tok, site) = setup();
+        let id = create_one(&svc, &tok, site, true);
         let items = svc
             .handle(2.0, &tok, ApiRequest::PendingTransferItems { site, direction: Direction::In, limit: 0 })
             .unwrap()
@@ -742,8 +557,8 @@ mod tests {
 
     #[test]
     fn full_lifecycle_with_stage_out() {
-        let (mut svc, tok, site) = setup();
-        let id = create_one(&mut svc, &tok, site, true);
+        let (svc, tok, site) = setup();
+        let id = create_one(&svc, &tok, site, true);
         // stage in
         let items = svc
             .handle(2.0, &tok, ApiRequest::PendingTransferItems { site, direction: Direction::In, limit: 0 })
@@ -802,8 +617,8 @@ mod tests {
 
     #[test]
     fn illegal_transition_rejected() {
-        let (mut svc, tok, site) = setup();
-        let id = create_one(&mut svc, &tok, site, false);
+        let (svc, tok, site) = setup();
+        let id = create_one(&svc, &tok, site, false);
         let err = svc
             .handle(2.0, &tok, ApiRequest::UpdateJobState { job: id, to: JobState::JobFinished, data: String::new() })
             .unwrap_err();
@@ -812,9 +627,9 @@ mod tests {
 
     #[test]
     fn acquire_respects_node_budget_and_exclusivity() {
-        let (mut svc, tok, site) = setup();
+        let (svc, tok, site) = setup();
         for _ in 0..5 {
-            create_one(&mut svc, &tok, site, false);
+            create_one(&svc, &tok, site, false);
         }
         let s1 = svc
             .handle(1.0, &tok, ApiRequest::CreateSession { site, batch_job: None })
@@ -840,8 +655,8 @@ mod tests {
 
     #[test]
     fn stale_session_recovers_running_jobs() {
-        let (mut svc, tok, site) = setup();
-        let id = create_one(&mut svc, &tok, site, false);
+        let (svc, tok, site) = setup();
+        let id = create_one(&svc, &tok, site, false);
         let sid = svc
             .handle(1.0, &tok, ApiRequest::CreateSession { site, batch_job: None })
             .unwrap()
@@ -871,8 +686,8 @@ mod tests {
 
     #[test]
     fn heartbeat_keeps_session_alive() {
-        let (mut svc, tok, site) = setup();
-        let id = create_one(&mut svc, &tok, site, false);
+        let (svc, tok, site) = setup();
+        let id = create_one(&svc, &tok, site, false);
         let sid = svc
             .handle(1.0, &tok, ApiRequest::CreateSession { site, batch_job: None })
             .unwrap()
@@ -891,8 +706,8 @@ mod tests {
 
     #[test]
     fn retry_budget_exhaustion_fails_job() {
-        let (mut svc, tok, site) = setup();
-        let id = create_one(&mut svc, &tok, site, false);
+        let (svc, tok, site) = setup();
+        let id = create_one(&svc, &tok, site, false);
         let sid = svc
             .handle(1.0, &tok, ApiRequest::CreateSession { site, batch_job: None })
             .unwrap()
@@ -914,9 +729,71 @@ mod tests {
     }
 
     #[test]
+    fn session_sync_batches_heartbeat_and_updates() {
+        let (svc, tok, site) = setup();
+        let a = create_one(&svc, &tok, site, false);
+        let b = create_one(&svc, &tok, site, false);
+        let sid = svc
+            .handle(1.0, &tok, ApiRequest::CreateSession { site, batch_job: None })
+            .unwrap()
+            .session_id();
+        svc.handle(2.0, &tok, ApiRequest::SessionAcquire { session: sid, max_nodes: 8, max_jobs: 8 })
+            .unwrap();
+        svc.handle(2.1, &tok, ApiRequest::BulkUpdateJobState {
+            jobs: vec![a, b],
+            to: JobState::Running,
+            data: String::new(),
+        })
+        .unwrap();
+        // One round trip: heartbeat + both jobs through RunDone then
+        // Postprocessed; one bogus update is rejected without aborting.
+        let failed = svc
+            .handle(3.0, &tok, ApiRequest::SessionSync {
+                session: sid,
+                updates: vec![
+                    (a, JobState::RunDone, String::new()),
+                    (a, JobState::Postprocessed, String::new()),
+                    (b, JobState::RunDone, String::new()),
+                    (b, JobState::JobFinished, String::new()), // illegal edge
+                    (b, JobState::Postprocessed, String::new()),
+                ],
+            })
+            .unwrap()
+            .job_ids();
+        assert_eq!(failed, vec![b]);
+        // No stage-out data: both jobs completed the round trip.
+        assert_eq!(svc.store.job(a).unwrap().state, JobState::JobFinished);
+        assert_eq!(svc.store.job(b).unwrap().state, JobState::JobFinished);
+        // The sync heartbeat kept the session alive.
+        assert!(svc.store.session(sid).unwrap().heartbeat_at >= 3.0);
+    }
+
+    #[test]
+    fn sync_transfer_items_mixes_done_and_error() {
+        let (svc, tok, site) = setup();
+        let id = create_one(&svc, &tok, site, true);
+        let other = create_one(&svc, &tok, site, true);
+        let items = svc
+            .handle(2.0, &tok, ApiRequest::PendingTransferItems { site, direction: Direction::In, limit: 0 })
+            .unwrap()
+            .transfer_items();
+        assert_eq!(items.len(), 2);
+        svc.handle(3.0, &tok, ApiRequest::SyncTransferItems {
+            updates: vec![
+                (items[0].id, TransferState::Done, Some(XferTaskId(1))),
+                (items[1].id, TransferState::Error, Some(XferTaskId(2))),
+            ],
+        })
+        .unwrap();
+        assert_eq!(svc.store.job(id).unwrap().state, JobState::Preprocessed);
+        assert_eq!(svc.store.job(other).unwrap().state, JobState::Ready);
+        assert_eq!(svc.store.titem(items[1].id).unwrap().state, TransferState::Error);
+    }
+
+    #[test]
     fn dag_children_advance_after_parent_finishes() {
-        let (mut svc, tok, site) = setup();
-        let parent = create_one(&mut svc, &tok, site, false);
+        let (svc, tok, site) = setup();
+        let parent = create_one(&svc, &tok, site, false);
         let mut jc = JobCreate::simple(site, "EigenCorr", "xpcs");
         jc.parents = vec![parent];
         let child =
@@ -939,8 +816,8 @@ mod tests {
 
     #[test]
     fn dag_children_fail_when_parent_fails() {
-        let (mut svc, tok, site) = setup();
-        let parent = create_one(&mut svc, &tok, site, false);
+        let (svc, tok, site) = setup();
+        let parent = create_one(&svc, &tok, site, false);
         let mut jc = JobCreate::simple(site, "EigenCorr", "xpcs");
         jc.parents = vec![parent];
         let child =
@@ -962,8 +839,31 @@ mod tests {
     }
 
     #[test]
+    fn child_of_already_terminal_parent_resolves_at_creation() {
+        let (svc, tok, site) = setup();
+        let parent = create_one(&svc, &tok, site, false);
+        let sid = svc
+            .handle(2.0, &tok, ApiRequest::CreateSession { site, batch_job: None })
+            .unwrap()
+            .session_id();
+        svc.handle(2.1, &tok, ApiRequest::SessionAcquire { session: sid, max_nodes: 8, max_jobs: 8 })
+            .unwrap();
+        for st in [JobState::Running, JobState::RunDone, JobState::Postprocessed] {
+            svc.handle(3.0, &tok, ApiRequest::UpdateJobState { job: parent, to: st, data: String::new() })
+                .unwrap();
+        }
+        assert_eq!(svc.store.job(parent).unwrap().state, JobState::JobFinished);
+        // Submitted after the parent finished: must not be stuck awaiting.
+        let mut jc = JobCreate::simple(site, "EigenCorr", "xpcs");
+        jc.parents = vec![parent];
+        let child =
+            svc.handle(4.0, &tok, ApiRequest::BulkCreateJobs { jobs: vec![jc] }).unwrap().job_ids()[0];
+        assert_eq!(svc.store.job(child).unwrap().state, JobState::Preprocessed);
+    }
+
+    #[test]
     fn multi_tenancy_enforced() {
-        let (mut svc, admin_tok, site) = setup();
+        let (svc, admin_tok, site) = setup();
         let mallory = svc
             .handle(0.0, &admin_tok, ApiRequest::CreateUser { name: "mallory".into() })
             .unwrap()
@@ -974,13 +874,30 @@ mod tests {
         let jc = JobCreate::simple(site, "EigenCorr", "xpcs");
         let err = svc.handle(1.0, &mtok, ApiRequest::BulkCreateJobs { jobs: vec![jc] }).unwrap_err();
         assert_eq!(err, ApiError::Unauthorized);
+        // Transfer-item status sync of a foreign site is also rejected.
+        let id = create_one(&svc, &admin_tok, site, true);
+        let titem = svc.store.titems_for_job(id)[0].id;
+        let err = svc
+            .handle(2.0, &mtok, ApiRequest::SyncTransferItems {
+                updates: vec![(titem, TransferState::Done, None)],
+            })
+            .unwrap_err();
+        assert_eq!(err, ApiError::Unauthorized);
+        let err = svc
+            .handle(2.0, &mtok, ApiRequest::UpdateTransferItems {
+                ids: vec![titem],
+                state: TransferState::Done,
+                task_id: None,
+            })
+            .unwrap_err();
+        assert_eq!(err, ApiError::Unauthorized);
     }
 
     #[test]
     fn backlog_snapshot() {
-        let (mut svc, tok, site) = setup();
-        create_one(&mut svc, &tok, site, false); // -> Preprocessed
-        create_one(&mut svc, &tok, site, true); // -> Ready
+        let (svc, tok, site) = setup();
+        create_one(&svc, &tok, site, false); // -> Preprocessed
+        create_one(&svc, &tok, site, true); // -> Ready
         let b = svc.handle(2.0, &tok, ApiRequest::SiteBacklog { site }).unwrap().backlog();
         assert_eq!(b.backlog_jobs, 2);
         assert_eq!(b.runnable_nodes, 1);
@@ -990,11 +907,11 @@ mod tests {
 
     #[test]
     fn tag_filtering() {
-        let (mut svc, tok, site) = setup();
+        let (svc, tok, site) = setup();
         let mut jc = JobCreate::simple(site, "EigenCorr", "xpcs");
         jc.tags = vec![("experiment".into(), "XPCS".into())];
         svc.handle(1.0, &tok, ApiRequest::BulkCreateJobs { jobs: vec![jc] }).unwrap();
-        create_one(&mut svc, &tok, site, false);
+        create_one(&svc, &tok, site, false);
         let jobs = svc
             .handle(2.0, &tok, ApiRequest::ListJobs {
                 filter: JobFilter {

@@ -6,7 +6,7 @@
 //! behind this gateway and every site module / client connects as an HTTP
 //! client with a bearer token — exactly the paper's deployment shape.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::util::httpd::{self, Request, Response, Server};
@@ -88,6 +88,17 @@ fn tstate_from(s: &str) -> TransferState {
         "done" => TransferState::Done,
         "error" => TransferState::Error,
         _ => TransferState::Pending,
+    }
+}
+
+/// Strict variant: unknown names are an error, not Pending.
+fn tstate_from_strict(s: &str) -> Option<TransferState> {
+    match s {
+        "pending" => Some(TransferState::Pending),
+        "active" => Some(TransferState::Active),
+        "done" => Some(TransferState::Done),
+        "error" => Some(TransferState::Error),
+        _ => None,
     }
 }
 
@@ -197,6 +208,25 @@ pub fn request_to_json(req: &ApiRequest) -> Json {
             ("type", Json::str("SessionHeartbeat")),
             ("session", Json::num(session.0 as f64)),
         ]),
+        SessionSync { session, updates } => Json::obj(vec![
+            ("type", Json::str("SessionSync")),
+            ("session", Json::num(session.0 as f64)),
+            (
+                "updates",
+                Json::Arr(
+                    updates
+                        .iter()
+                        .map(|(job, to, data)| {
+                            Json::arr([
+                                Json::num(job.0 as f64),
+                                Json::str(to.name()),
+                                Json::str(data.clone()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
         SessionEnd { session } => {
             Json::obj(vec![("type", Json::str("SessionEnd")), ("session", Json::num(session.0 as f64))])
         }
@@ -231,6 +261,24 @@ pub fn request_to_json(req: &ApiRequest) -> Json {
             ("ids", ids_to_json(ids, |i| i.0)),
             ("state", Json::str(tstate_name(*state))),
             ("task_id", task_id.map(|t| Json::num(t.0 as f64)).unwrap_or(Json::Null)),
+        ]),
+        SyncTransferItems { updates } => Json::obj(vec![
+            ("type", Json::str("SyncTransferItems")),
+            (
+                "updates",
+                Json::Arr(
+                    updates
+                        .iter()
+                        .map(|(id, st, task)| {
+                            Json::arr([
+                                Json::num(id.0 as f64),
+                                Json::str(tstate_name(*st)),
+                                task.map(|t| Json::num(t.0 as f64)).unwrap_or(Json::Null),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ]),
         SiteBacklog { site } => {
             Json::obj(vec![("type", Json::str("SiteBacklog")), ("site", Json::num(site.0 as f64))])
@@ -337,6 +385,31 @@ pub fn request_from_json(j: &Json) -> Result<ApiRequest, String> {
         "SessionHeartbeat" => ApiRequest::SessionHeartbeat {
             session: SessionId(j.get("session").and_then(Json::as_u64).ok_or("missing session")?),
         },
+        "SessionSync" => {
+            // Strict decode: a malformed tuple is a request error, not a
+            // silent drop — the endpoint's contract is that every update
+            // is either applied or reported back in the failed list.
+            let mut updates = Vec::new();
+            if let Some(a) = j.get("updates").and_then(Json::as_arr) {
+                for u in a {
+                    let job = u
+                        .idx(0)
+                        .and_then(Json::as_u64)
+                        .ok_or("SessionSync update: bad job id")?;
+                    let to = u
+                        .idx(1)
+                        .and_then(Json::as_str)
+                        .and_then(JobState::from_name)
+                        .ok_or("SessionSync update: bad state")?;
+                    let data = u.idx(2).and_then(Json::as_str).unwrap_or("").to_string();
+                    updates.push((JobId(job), to, data));
+                }
+            }
+            ApiRequest::SessionSync {
+                session: SessionId(j.get("session").and_then(Json::as_u64).ok_or("missing session")?),
+                updates,
+            }
+        }
         "SessionEnd" => ApiRequest::SessionEnd {
             session: SessionId(j.get("session").and_then(Json::as_u64).ok_or("missing session")?),
         },
@@ -367,6 +440,27 @@ pub fn request_from_json(j: &Json) -> Result<ApiRequest, String> {
             state: tstate_from(&get_str("state")),
             task_id: j.get("task_id").and_then(Json::as_u64).map(XferTaskId),
         },
+        "SyncTransferItems" => {
+            // Strict decode: an unknown state string must not default to
+            // Pending (that would silently reset a live item).
+            let mut updates = Vec::new();
+            if let Some(a) = j.get("updates").and_then(Json::as_arr) {
+                for u in a {
+                    let id = u
+                        .idx(0)
+                        .and_then(Json::as_u64)
+                        .ok_or("SyncTransferItems update: bad item id")?;
+                    let state = u
+                        .idx(1)
+                        .and_then(Json::as_str)
+                        .and_then(tstate_from_strict)
+                        .ok_or("SyncTransferItems update: bad state")?;
+                    let task = u.idx(2).and_then(Json::as_u64).map(XferTaskId);
+                    updates.push((TransferItemId(id), state, task));
+                }
+            }
+            ApiRequest::SyncTransferItems { updates }
+        }
         "SiteBacklog" => ApiRequest::SiteBacklog { site: site()? },
         "ListEvents" => ApiRequest::ListEvents {
             since: j.get("since").and_then(Json::as_u64).unwrap_or(0) as usize,
@@ -477,6 +571,7 @@ fn batchjob_from_json(j: &Json) -> BatchJob {
 
 fn event_to_json(e: &Event) -> Json {
     Json::obj(vec![
+        ("seq", Json::num(e.seq as f64)),
         ("job_id", Json::num(e.job_id.0 as f64)),
         ("site_id", Json::num(e.site_id.0 as f64)),
         ("ts", Json::num(e.ts)),
@@ -488,6 +583,7 @@ fn event_to_json(e: &Event) -> Json {
 
 fn event_from_json(j: &Json) -> Event {
     Event {
+        seq: j.get("seq").and_then(Json::as_u64).unwrap_or(0),
         job_id: JobId(j.get("job_id").and_then(Json::as_u64).unwrap_or(0)),
         site_id: SiteId(j.get("site_id").and_then(Json::as_u64).unwrap_or(0)),
         ts: j.get("ts").and_then(Json::as_f64).unwrap_or(0.0),
@@ -582,12 +678,22 @@ pub fn response_from_json(j: &Json) -> Result<ApiResponse, ApiError> {
 // Server + client
 // ---------------------------------------------------------------------------
 
-/// Run a [`ServiceCore`] behind the HTTP gateway. Timestamps are wall-clock
-/// seconds since server start, so event-log analysis works identically to
-/// simulated mode.
-pub fn serve(service: Arc<Mutex<ServiceCore>>, addr: &str) -> crate::Result<Server> {
+/// Run a [`ServiceCore`] behind the HTTP gateway with the default worker
+/// pool. Timestamps are wall-clock seconds since server start, so
+/// event-log analysis works identically to simulated mode.
+///
+/// The service is shared as a plain `Arc` — [`ServiceCore::handle`] takes
+/// `&self`, so gateway workers dispatch concurrently and requests for
+/// different sites never contend (per-site store shards).
+pub fn serve(service: Arc<ServiceCore>, addr: &str) -> crate::Result<Server> {
+    serve_with(service, addr, httpd::default_workers())
+}
+
+/// [`serve`] with an explicit worker-pool size (the `service_throughput`
+/// bench compares 1 vs 8).
+pub fn serve_with(service: Arc<ServiceCore>, addr: &str, workers: usize) -> crate::Result<Server> {
     let t0 = Instant::now();
-    Server::serve(addr, move |req: Request| {
+    Server::serve_with_workers(addr, workers, move |req: Request| {
         let now = t0.elapsed().as_secs_f64();
         let token = req
             .header("authorization")
@@ -605,7 +711,7 @@ pub fn serve(service: Arc<Mutex<ServiceCore>>, addr: &str) -> crate::Result<Serv
             Ok(r) => r,
             Err(e) => return Response::error(400, &e),
         };
-        let result = service.lock().unwrap().handle(now, &token, api_req);
+        let result = service.handle(now, &token, api_req);
         match result {
             Ok(resp) => Response::ok_json(response_to_json(&resp).to_string()),
             Err(e) => {
@@ -677,6 +783,19 @@ mod tests {
                     parents: vec![JobId(1)],
                 }],
             },
+            ApiRequest::SessionSync {
+                session: SessionId(4),
+                updates: vec![
+                    (JobId(7), JobState::RunDone, String::new()),
+                    (JobId(7), JobState::Postprocessed, "ok".into()),
+                ],
+            },
+            ApiRequest::SyncTransferItems {
+                updates: vec![
+                    (TransferItemId(11), TransferState::Done, Some(XferTaskId(3))),
+                    (TransferItemId(12), TransferState::Error, None),
+                ],
+            },
         ];
         for req in reqs {
             let j = request_to_json(&req);
@@ -708,8 +827,8 @@ mod tests {
 
     #[test]
     fn end_to_end_over_sockets() {
-        let svc = Arc::new(Mutex::new(ServiceCore::new(b"k")));
-        let tok = svc.lock().unwrap().admin_token();
+        let svc = Arc::new(ServiceCore::new(b"k"));
+        let tok = svc.admin_token();
         let server = serve(svc.clone(), "127.0.0.1:0").unwrap();
         let mut conn = HttpConn { addr: server.addr.clone() };
 

@@ -261,6 +261,9 @@ pub struct Session {
 /// Job events with timestamps recorded at the job execution site").
 #[derive(Debug, Clone)]
 pub struct Event {
+    /// Global, dense sequence number (total order across all site shards;
+    /// `ListEvents { since }` pages on it).
+    pub seq: u64,
     pub job_id: JobId,
     pub site_id: SiteId,
     pub ts: f64,

@@ -1,35 +1,321 @@
-//! Relational in-memory store (substrate replacing PostgreSQL).
+//! Concurrent relational store (substrate replacing PostgreSQL).
 //!
-//! Tables are `BTreeMap<Id, Row>` with maintained secondary indexes on the
-//! hot query paths the paper calls out: *"runnable Jobs are appropriately
-//! indexed in the underlying PostgreSQL database [so] the response time of
-//! this endpoint is largely consistent with respect to increasing number
-//! of submitted Jobs"* (§4.5). Index coherence is asserted in tests and
-//! property-checked in `rust/tests/prop_coordinator.rs`.
+//! The paper's service scalability result (§4.5) requires the central API
+//! to sustain hundreds of concurrent launcher sessions with flat response
+//! times. The store is therefore **sharded by site**: every site owns one
+//! shard (jobs, sessions, batch jobs, transfer items and its slice of the
+//! event log) behind its own `RwLock`, so launcher traffic for different
+//! sites never contends. The read-mostly global tables (users, sites,
+//! apps) sit behind a separate `RwLock`, and id-by-id routing tables map
+//! entity ids to their shard. Ids and event sequence numbers come from
+//! atomics, so every public method takes `&self` — [`super::core::ServiceCore`]
+//! dispatches fully concurrently.
+//!
+//! Hot query paths stay indexed exactly as the paper calls out: *"runnable
+//! Jobs are appropriately indexed in the underlying PostgreSQL database
+//! [so] the response time of this endpoint is largely consistent with
+//! respect to increasing number of submitted Jobs"* (§4.5). Index
+//! coherence is asserted in tests, property-checked in
+//! `rust/tests/prop_coordinator.rs`, and stress-checked under ≥8 client
+//! threads in `rust/tests/stress_concurrency.rs`.
+//!
+//! Locking discipline: a method holds at most one shard lock at a time,
+//! and never a shard lock together with the shards-map, routes, or global
+//! lock — so there is no lock-order cycle and no deadlock. Compound
+//! operations that must be atomic (session acquire, legality-checked
+//! transitions plus their service-side consequences, transfer-completion
+//! job advancement) execute entirely under a single shard write lock.
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 
+use super::api::ApiError;
 use super::models::*;
+use super::state;
 
-/// All service tables + indexes. Mutations MUST go through the provided
-/// methods so indexes stay coherent.
+/// Read-mostly global tables: identity and topology.
+#[derive(Debug, Default)]
+struct Global {
+    users: BTreeMap<UserId, User>,
+    sites: BTreeMap<SiteId, Site>,
+    apps: BTreeMap<AppId, App>,
+}
+
+/// Insert-only routing tables: which shard owns an entity, plus the
+/// cross-site DAG children index (a child may live at a different site
+/// than its parent).
+#[derive(Debug, Default)]
+struct Routes {
+    job_site: BTreeMap<JobId, SiteId>,
+    session_site: BTreeMap<SessionId, SiteId>,
+    titem_site: BTreeMap<TransferItemId, SiteId>,
+    batch_site: BTreeMap<BatchJobId, SiteId>,
+    children: BTreeMap<JobId, Vec<JobId>>,
+}
+
+/// One site's slice of the database plus its secondary indexes.
+#[derive(Debug, Default)]
+struct Shard {
+    jobs: BTreeMap<JobId, Job>,
+    sessions: BTreeMap<SessionId, Session>,
+    batch_jobs: BTreeMap<BatchJobId, BatchJob>,
+    titems: BTreeMap<TransferItemId, TransferItem>,
+    events: Vec<Event>,
+    jobs_by_state: BTreeMap<JobState, BTreeSet<JobId>>,
+    titems_by_state: BTreeMap<(Direction, TransferState), BTreeSet<TransferItemId>>,
+    titems_by_job: BTreeMap<JobId, Vec<TransferItemId>>,
+}
+
+impl Shard {
+    /// Move a job to `to`, updating indexes and appending an event.
+    /// The caller is responsible for having checked transition legality.
+    fn set_job_state(&mut self, seq: &AtomicU64, id: JobId, to: JobState, ts: f64, data: &str) {
+        let (from, site) = {
+            let job = self.jobs.get_mut(&id).expect("set_job_state: unknown job");
+            let from = job.state;
+            if from == to {
+                return;
+            }
+            job.state = to;
+            (from, job.site_id)
+        };
+        if let Some(set) = self.jobs_by_state.get_mut(&from) {
+            set.remove(&id);
+        }
+        self.jobs_by_state.entry(to).or_default().insert(id);
+        self.events.push(Event {
+            seq: seq.fetch_add(1, Ordering::Relaxed),
+            job_id: id,
+            site_id: site,
+            ts,
+            from,
+            to,
+            data: data.to_string(),
+        });
+    }
+
+    /// Are all transfer items of `job` in `dir` Done?
+    fn transfers_complete(&self, job: JobId, dir: Direction) -> bool {
+        self.titems_by_job
+            .get(&job)
+            .map(|v| {
+                v.iter().all(|tid| {
+                    let t = &self.titems[tid];
+                    t.direction != dir || t.state == TransferState::Done
+                })
+            })
+            .unwrap_or(true)
+    }
+
+    fn release_from_session(&mut self, id: JobId) {
+        let sid = match self.jobs.get_mut(&id) {
+            Some(j) => j.session.take(),
+            None => None,
+        };
+        if let Some(sid) = sid {
+            if let Some(s) = self.sessions.get_mut(&sid) {
+                s.acquired.remove(&id);
+            }
+        }
+    }
+
+    /// Created/AwaitingParents -> Ready (stage-in pending) or straight to
+    /// Preprocessed when the job carries no input data.
+    fn advance_past_parents(&mut self, seq: &AtomicU64, id: JobId, now: f64) {
+        let has_stage_in = self
+            .titems_by_job
+            .get(&id)
+            .map(|v| v.iter().any(|t| self.titems[t].direction == Direction::In))
+            .unwrap_or(false);
+        if has_stage_in {
+            self.set_job_state(seq, id, JobState::Ready, now, "");
+        } else {
+            self.set_job_state(seq, id, JobState::StagedIn, now, "no stage-in data");
+            self.set_job_state(seq, id, JobState::Preprocessed, now, "");
+        }
+    }
+
+    /// Service-side consequences of a transition. Jobs that reached a
+    /// terminal state are pushed to `terminals` for cross-shard DAG
+    /// propagation by the caller (children may live in other shards).
+    fn post_transition(
+        &mut self,
+        seq: &AtomicU64,
+        id: JobId,
+        to: JobState,
+        now: f64,
+        terminals: &mut Vec<JobId>,
+    ) {
+        match to {
+            JobState::Running => {
+                if let Some(j) = self.jobs.get_mut(&id) {
+                    j.attempts += 1;
+                }
+            }
+            JobState::RunDone => {
+                self.release_from_session(id);
+            }
+            JobState::RunError | JobState::RunTimeout => {
+                self.release_from_session(id);
+                let (attempts, max) =
+                    self.jobs.get(&id).map(|j| (j.attempts, j.max_attempts)).unwrap_or((0, 0));
+                if attempts < max {
+                    self.set_job_state(seq, id, JobState::RestartReady, now, "retry");
+                } else {
+                    self.set_job_state(seq, id, JobState::Failed, now, "retry budget exhausted");
+                    terminals.push(id);
+                }
+            }
+            JobState::Postprocessed => {
+                // Jobs without stage-out data complete immediately.
+                if self.transfers_complete(id, Direction::Out) {
+                    self.set_job_state(seq, id, JobState::JobFinished, now, "no stage-out data");
+                    terminals.push(id);
+                }
+            }
+            JobState::JobFinished | JobState::Failed => {
+                terminals.push(id);
+            }
+            _ => {}
+        }
+    }
+
+    /// Legality-checked transition plus its consequences, atomically under
+    /// the caller-held shard write lock.
+    fn transition(
+        &mut self,
+        seq: &AtomicU64,
+        id: JobId,
+        to: JobState,
+        now: f64,
+        data: &str,
+    ) -> Result<Vec<JobId>, ApiError> {
+        let from = self
+            .jobs
+            .get(&id)
+            .map(|j| j.state)
+            .ok_or_else(|| ApiError::NotFound(format!("job {id}")))?;
+        if !state::legal(from, to) {
+            return Err(ApiError::IllegalTransition { job: id, from, to });
+        }
+        self.set_job_state(seq, id, to, now, data);
+        let mut terminals = Vec::new();
+        self.post_transition(seq, id, to, now, &mut terminals);
+        Ok(terminals)
+    }
+
+    fn set_titem_state(&mut self, id: TransferItemId, state: TransferState, task_id: Option<XferTaskId>) {
+        let item = self.titems.get_mut(&id).expect("set_titem_state: unknown item");
+        let old = item.state;
+        if let Some(t) = task_id {
+            item.task_id = Some(t);
+        }
+        if old == state {
+            return;
+        }
+        let key_old = (item.direction, old);
+        let key_new = (item.direction, state);
+        item.state = state;
+        if let Some(set) = self.titems_by_state.get_mut(&key_old) {
+            set.remove(&id);
+        }
+        self.titems_by_state.entry(key_new).or_default().insert(id);
+    }
+
+    /// A stage-in/out item completed: advance the owning job if all items
+    /// in that direction are now done.
+    fn complete_titem(&mut self, seq: &AtomicU64, id: TransferItemId, now: f64, terminals: &mut Vec<JobId>) {
+        let (job_id, dir) = {
+            let t = &self.titems[&id];
+            (t.job_id, t.direction)
+        };
+        let job_state = self.jobs.get(&job_id).map(|j| j.state);
+        match (dir, job_state) {
+            (Direction::In, Some(JobState::Ready)) => {
+                if self.transfers_complete(job_id, Direction::In) {
+                    self.set_job_state(seq, job_id, JobState::StagedIn, now, "stage-in complete");
+                    self.set_job_state(seq, job_id, JobState::Preprocessed, now, "");
+                }
+            }
+            (Direction::Out, Some(JobState::Postprocessed)) => {
+                if self.transfers_complete(job_id, Direction::Out) {
+                    self.set_job_state(seq, job_id, JobState::JobFinished, now, "stage-out complete");
+                    terminals.push(job_id);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// FIFO acquisition over runnable states under one write lock, so two
+    /// sessions racing on the same site can never double-acquire a job.
+    /// RestartReady first: recovering work is older than fresh work.
+    fn acquire(&mut self, session: SessionId, now: f64, max_nodes: u32, max_jobs: usize) -> Vec<Job> {
+        self.sessions.get_mut(&session).expect("acquire: unknown session").heartbeat_at = now;
+        let mut picked: Vec<JobId> = Vec::new();
+        let mut nodes_left = max_nodes;
+        for st in [JobState::RestartReady, JobState::Preprocessed] {
+            let ids: Vec<JobId> =
+                self.jobs_by_state.get(&st).map(|s| s.iter().copied().collect()).unwrap_or_default();
+            for id in ids {
+                if picked.len() >= max_jobs {
+                    break;
+                }
+                let j = &self.jobs[&id];
+                if j.session.is_some() || j.num_nodes > nodes_left {
+                    continue;
+                }
+                nodes_left -= j.num_nodes;
+                picked.push(id);
+            }
+        }
+        let mut out = Vec::with_capacity(picked.len());
+        for id in picked {
+            if let Some(j) = self.jobs.get_mut(&id) {
+                j.session = Some(session);
+            }
+            self.sessions.get_mut(&session).unwrap().acquired.insert(id);
+            out.push(self.jobs[&id].clone());
+        }
+        out
+    }
+
+    /// Mark a session ended, release its jobs, recover running ones.
+    fn end_session(
+        &mut self,
+        seq: &AtomicU64,
+        sid: SessionId,
+        now: f64,
+        reason: &str,
+        terminals: &mut Vec<JobId>,
+    ) {
+        let acquired: Vec<JobId> = match self.sessions.get_mut(&sid) {
+            Some(s) => {
+                s.ended = true;
+                s.acquired.iter().copied().collect()
+            }
+            None => return,
+        };
+        for id in acquired {
+            self.release_from_session(id);
+            if self.jobs.get(&id).map(|j| j.state) == Some(JobState::Running) {
+                self.set_job_state(seq, id, JobState::RunTimeout, now, reason);
+                self.post_transition(seq, id, JobState::RunTimeout, now, terminals);
+            }
+        }
+    }
+}
+
+/// All service tables + indexes, sharded by site. Mutations MUST go
+/// through the provided methods so indexes stay coherent.
 #[derive(Debug, Default)]
 pub struct Store {
-    next_id: u64,
-    pub users: BTreeMap<UserId, User>,
-    pub sites: BTreeMap<SiteId, Site>,
-    pub apps: BTreeMap<AppId, App>,
-    jobs: BTreeMap<JobId, Job>,
-    pub batch_jobs: BTreeMap<BatchJobId, BatchJob>,
-    titems: BTreeMap<TransferItemId, TransferItem>,
-    pub sessions: BTreeMap<SessionId, Session>,
-    pub events: Vec<Event>,
-
-    // Secondary indexes (hot paths).
-    jobs_by_site_state: BTreeMap<(SiteId, JobState), BTreeSet<JobId>>,
-    children_by_parent: BTreeMap<JobId, Vec<JobId>>,
-    titems_by_site: BTreeMap<(SiteId, Direction, TransferState), BTreeSet<TransferItemId>>,
-    titems_by_job: BTreeMap<JobId, Vec<TransferItemId>>,
+    next_id: AtomicU64,
+    event_seq: AtomicU64,
+    global: RwLock<Global>,
+    routes: RwLock<Routes>,
+    shards: RwLock<BTreeMap<SiteId, Arc<RwLock<Shard>>>>,
 }
 
 impl Store {
@@ -37,95 +323,474 @@ impl Store {
         Store::default()
     }
 
-    pub fn fresh_id(&mut self) -> u64 {
-        self.next_id += 1;
-        self.next_id
+    pub fn fresh_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed) + 1
     }
 
-    // ----- jobs ---------------------------------------------------------
+    // ----- shard plumbing -------------------------------------------------
 
-    pub fn insert_job(&mut self, job: Job) {
-        self.jobs_by_site_state.entry((job.site_id, job.state)).or_default().insert(job.id);
-        for &p in &job.parents {
-            self.children_by_parent.entry(p).or_default().push(job.id);
+    fn shard(&self, site: SiteId) -> Option<Arc<RwLock<Shard>>> {
+        self.shards.read().unwrap().get(&site).cloned()
+    }
+
+    fn shard_or_create(&self, site: SiteId) -> Arc<RwLock<Shard>> {
+        if let Some(s) = self.shards.read().unwrap().get(&site) {
+            return s.clone();
         }
-        self.jobs.insert(job.id, job);
+        self.shards.write().unwrap().entry(site).or_default().clone()
     }
 
-    pub fn job(&self, id: JobId) -> Option<&Job> {
-        self.jobs.get(&id)
+    fn all_shards(&self) -> Vec<Arc<RwLock<Shard>>> {
+        self.shards.read().unwrap().values().cloned().collect()
     }
 
-    pub fn jobs_iter(&self) -> impl Iterator<Item = &Job> {
-        self.jobs.values()
+    fn shard_of_job(&self, id: JobId) -> Option<Arc<RwLock<Shard>>> {
+        let site = self.routes.read().unwrap().job_site.get(&id).copied()?;
+        self.shard(site)
+    }
+
+    fn shard_of_session(&self, id: SessionId) -> Option<Arc<RwLock<Shard>>> {
+        let site = self.routes.read().unwrap().session_site.get(&id).copied()?;
+        self.shard(site)
+    }
+
+    fn shard_of_titem(&self, id: TransferItemId) -> Option<Arc<RwLock<Shard>>> {
+        let site = self.routes.read().unwrap().titem_site.get(&id).copied()?;
+        self.shard(site)
+    }
+
+    fn shard_of_batch(&self, id: BatchJobId) -> Option<Arc<RwLock<Shard>>> {
+        let site = self.routes.read().unwrap().batch_site.get(&id).copied()?;
+        self.shard(site)
+    }
+
+    // ----- global tables (users / sites / apps) ---------------------------
+
+    pub fn insert_user(&self, user: User) {
+        self.global.write().unwrap().users.insert(user.id, user);
+    }
+
+    pub fn user_exists(&self, id: UserId) -> bool {
+        self.global.read().unwrap().users.contains_key(&id)
+    }
+
+    /// Register a site and eagerly create its shard.
+    pub fn insert_site(&self, site: Site) {
+        let id = site.id;
+        self.global.write().unwrap().sites.insert(id, site);
+        self.shards.write().unwrap().entry(id).or_default();
+    }
+
+    pub fn site(&self, id: SiteId) -> Option<Site> {
+        self.global.read().unwrap().sites.get(&id).cloned()
+    }
+
+    pub fn insert_app(&self, app: App) {
+        self.global.write().unwrap().apps.insert(app.id, app);
+    }
+
+    /// Resolve a registered App by (site, name).
+    pub fn app_for(&self, site: SiteId, name: &str) -> Option<AppId> {
+        self.global
+            .read()
+            .unwrap()
+            .apps
+            .values()
+            .find(|a| a.site_id == site && a.name == name)
+            .map(|a| a.id)
+    }
+
+    pub fn apps_len(&self) -> usize {
+        self.global.read().unwrap().apps.len()
+    }
+
+    // ----- jobs -----------------------------------------------------------
+
+    pub fn insert_job(&self, job: Job) {
+        {
+            let mut r = self.routes.write().unwrap();
+            r.job_site.insert(job.id, job.site_id);
+            for &p in &job.parents {
+                r.children.entry(p).or_default().push(job.id);
+            }
+        }
+        let sh = self.shard_or_create(job.site_id);
+        let mut sh = sh.write().unwrap();
+        sh.jobs_by_state.entry(job.state).or_default().insert(job.id);
+        sh.jobs.insert(job.id, job);
+    }
+
+    pub fn job(&self, id: JobId) -> Option<Job> {
+        let sh = self.shard_of_job(id)?;
+        let sh = sh.read().unwrap();
+        sh.jobs.get(&id).cloned()
+    }
+
+    /// Snapshot of every job across all shards, ordered by id.
+    pub fn jobs_snapshot(&self) -> Vec<Job> {
+        let mut out = Vec::new();
+        for sh in self.all_shards() {
+            out.extend(sh.read().unwrap().jobs.values().cloned());
+        }
+        out.sort_by_key(|j| j.id);
+        out
     }
 
     pub fn job_count(&self) -> usize {
-        self.jobs.len()
+        self.all_shards().iter().map(|sh| sh.read().unwrap().jobs.len()).sum()
     }
 
-    pub fn children_of(&self, parent: JobId) -> &[JobId] {
-        self.children_by_parent.get(&parent).map(Vec::as_slice).unwrap_or(&[])
+    /// Children of `parent` across all shards (DAG edges may cross sites).
+    pub fn children_of(&self, parent: JobId) -> Vec<JobId> {
+        self.routes.read().unwrap().children.get(&parent).cloned().unwrap_or_default()
     }
 
-    /// Move a job to `to`, updating indexes and appending an event.
-    /// The caller is responsible for having checked transition legality.
-    pub fn set_job_state(&mut self, id: JobId, to: JobState, ts: f64, data: &str) {
-        let job = self.jobs.get_mut(&id).expect("set_job_state: unknown job");
-        let from = job.state;
-        if from == to {
-            return;
+    /// Unchecked state move (no legality check, no service consequences).
+    /// Exposed for index property tests; the service path is [`Store::transition`].
+    pub fn set_job_state(&self, id: JobId, to: JobState, ts: f64, data: &str) {
+        let sh = self.shard_of_job(id).expect("set_job_state: unknown job");
+        sh.write().unwrap().set_job_state(&self.event_seq, id, to, ts, data);
+    }
+
+    /// Legality-checked transition + service-side consequences, atomic
+    /// under the owning shard's write lock. Returns the jobs that reached
+    /// a terminal state (input to DAG propagation).
+    pub fn transition(&self, id: JobId, to: JobState, now: f64, data: &str) -> Result<Vec<JobId>, ApiError> {
+        let sh = self.shard_of_job(id).ok_or_else(|| ApiError::NotFound(format!("job {id}")))?;
+        let mut sh = sh.write().unwrap();
+        sh.transition(&self.event_seq, id, to, now, data)
+    }
+
+    /// Initial routing of a freshly inserted job: AwaitingParents while any
+    /// parent is unfinished, else advance past parents immediately.
+    ///
+    /// The state is re-checked under the shard write lock: a job that has
+    /// already left Created/AwaitingParents (e.g. two parents finishing on
+    /// different gateway threads both propagating to the same child) is
+    /// left untouched, so concurrent propagation can never regress a job
+    /// that another thread already advanced.
+    pub fn advance_new_job(&self, id: JobId, now: f64, parents_pending: bool) {
+        if let Some(sh) = self.shard_of_job(id) {
+            let mut sh = sh.write().unwrap();
+            let st = sh.jobs.get(&id).map(|j| j.state);
+            match st {
+                Some(JobState::Created) | Some(JobState::AwaitingParents) => {}
+                _ => return,
+            }
+            if parents_pending {
+                if st == Some(JobState::Created) {
+                    sh.set_job_state(&self.event_seq, id, JobState::AwaitingParents, now, "");
+                }
+            } else {
+                sh.advance_past_parents(&self.event_seq, id, now);
+            }
         }
-        job.state = to;
-        let site = job.site_id;
-        if let Some(set) = self.jobs_by_site_state.get_mut(&(site, from)) {
-            set.remove(&id);
-        }
-        self.jobs_by_site_state.entry((site, to)).or_default().insert(id);
-        self.events.push(Event { job_id: id, site_id: site, ts, from, to, data: data.to_string() });
     }
 
-    pub fn job_mut(&mut self, id: JobId) -> Option<&mut Job> {
-        // NOTE: callers must not mutate `state` or `site_id` through this —
-        // use set_job_state. Exposed for session/attempt bookkeeping.
-        self.jobs.get_mut(&id)
+    /// Mutate a job in place. Callers must not touch `state` or `site_id`
+    /// through this (use [`Store::transition`]) — exposed for session /
+    /// bench bookkeeping.
+    pub fn with_job_mut<T>(&self, id: JobId, f: impl FnOnce(&mut Job) -> T) -> Option<T> {
+        let sh = self.shard_of_job(id)?;
+        let mut sh = sh.write().unwrap();
+        sh.jobs.get_mut(&id).map(f)
     }
 
-    /// Ids of jobs at `site` in `state` (index lookup, O(log n)).
+    /// Ids of jobs at `site` in `state` (index lookup).
     pub fn jobs_in_state(&self, site: SiteId, state: JobState) -> Vec<JobId> {
-        self.jobs_by_site_state
-            .get(&(site, state))
-            .map(|s| s.iter().copied().collect())
-            .unwrap_or_default()
+        match self.shard(site) {
+            Some(sh) => sh
+                .read()
+                .unwrap()
+                .jobs_by_state
+                .get(&state)
+                .map(|s| s.iter().copied().collect())
+                .unwrap_or_default(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Full rows of jobs at `site` in `state` (one lock acquisition).
+    pub fn jobs_in_state_full(&self, site: SiteId, state: JobState) -> Vec<Job> {
+        match self.shard(site) {
+            Some(sh) => {
+                let sh = sh.read().unwrap();
+                sh.jobs_by_state
+                    .get(&state)
+                    .map(|s| s.iter().map(|id| sh.jobs[id].clone()).collect())
+                    .unwrap_or_default()
+            }
+            None => Vec::new(),
+        }
     }
 
     pub fn count_in_state(&self, site: SiteId, state: JobState) -> usize {
-        self.jobs_by_site_state.get(&(site, state)).map(BTreeSet::len).unwrap_or(0)
+        match self.shard(site) {
+            Some(sh) => {
+                sh.read().unwrap().jobs_by_state.get(&state).map(BTreeSet::len).unwrap_or(0)
+            }
+            None => 0,
+        }
+    }
+
+    /// Per-state counts at `site` in `JobState::ALL` order, from one
+    /// consistent shard snapshot.
+    pub fn counts_by_state(&self, site: SiteId) -> Vec<(JobState, usize)> {
+        let Some(sh) = self.shard(site) else { return Vec::new() };
+        let sh = sh.read().unwrap();
+        JobState::ALL
+            .iter()
+            .map(|&s| (s, sh.jobs_by_state.get(&s).map(BTreeSet::len).unwrap_or(0)))
+            .collect()
+    }
+
+    /// Backlog aggregates for the Backlog API, from one consistent shard
+    /// snapshot: (backlog_jobs, runnable_nodes, inflight_nodes, batch_nodes).
+    pub fn backlog_parts(&self, site: SiteId) -> (usize, u32, u32, u32) {
+        let Some(sh) = self.shard(site) else { return (0, 0, 0, 0) };
+        let sh = sh.read().unwrap();
+        let count =
+            |st: JobState| sh.jobs_by_state.get(&st).map(BTreeSet::len).unwrap_or(0);
+        let nodes = |st: JobState| -> u32 {
+            sh.jobs_by_state
+                .get(&st)
+                .map(|s| s.iter().map(|id| sh.jobs[id].num_nodes).sum())
+                .unwrap_or(0)
+        };
+        let backlog_states = [
+            JobState::Created,
+            JobState::AwaitingParents,
+            JobState::Ready,
+            JobState::StagedIn,
+            JobState::Preprocessed,
+            JobState::RestartReady,
+        ];
+        let backlog_jobs = backlog_states.iter().map(|&s| count(s)).sum();
+        let runnable = nodes(JobState::Preprocessed) + nodes(JobState::RestartReady);
+        let inflight = nodes(JobState::Ready) + nodes(JobState::StagedIn);
+        let batch = sh
+            .batch_jobs
+            .values()
+            .filter(|b| {
+                b.site_id == site
+                    && matches!(
+                        b.state,
+                        BatchJobState::Pending | BatchJobState::Queued | BatchJobState::Running
+                    )
+            })
+            .map(|b| b.num_nodes)
+            .sum();
+        (backlog_jobs, runnable, inflight, batch)
+    }
+
+    // ----- sessions -------------------------------------------------------
+
+    pub fn insert_session(&self, session: Session) {
+        self.routes.write().unwrap().session_site.insert(session.id, session.site_id);
+        let sh = self.shard_or_create(session.site_id);
+        sh.write().unwrap().sessions.insert(session.id, session);
+    }
+
+    pub fn session(&self, id: SessionId) -> Option<Session> {
+        let sh = self.shard_of_session(id)?;
+        let sh = sh.read().unwrap();
+        sh.sessions.get(&id).cloned()
+    }
+
+    pub fn session_site(&self, id: SessionId) -> Option<SiteId> {
+        self.routes.read().unwrap().session_site.get(&id).copied()
+    }
+
+    /// Snapshot of every session across all shards, ordered by id.
+    pub fn sessions_snapshot(&self) -> Vec<Session> {
+        let mut out = Vec::new();
+        for sh in self.all_shards() {
+            out.extend(sh.read().unwrap().sessions.values().cloned());
+        }
+        out.sort_by_key(|s| s.id);
+        out
+    }
+
+    /// Mutate a session in place (bench/test bookkeeping only).
+    pub fn with_session_mut<T>(&self, id: SessionId, f: impl FnOnce(&mut Session) -> T) -> Option<T> {
+        let sh = self.shard_of_session(id)?;
+        let mut sh = sh.write().unwrap();
+        sh.sessions.get_mut(&id).map(f)
+    }
+
+    pub fn heartbeat(&self, session: SessionId, now: f64) -> Result<(), ApiError> {
+        let sh = self
+            .shard_of_session(session)
+            .ok_or_else(|| ApiError::NotFound(format!("session {session}")))?;
+        let mut sh = sh.write().unwrap();
+        let s = sh
+            .sessions
+            .get_mut(&session)
+            .ok_or_else(|| ApiError::NotFound(format!("session {session}")))?;
+        if s.ended {
+            return Err(ApiError::BadRequest(format!("session {session} ended")));
+        }
+        s.heartbeat_at = now;
+        Ok(())
+    }
+
+    /// Atomically pick + mark runnable jobs for `session` (implicit
+    /// heartbeat), so concurrent sessions at one site never overlap.
+    pub fn acquire(
+        &self,
+        session: SessionId,
+        now: f64,
+        max_nodes: u32,
+        max_jobs: usize,
+    ) -> Result<Vec<Job>, ApiError> {
+        let sh = self
+            .shard_of_session(session)
+            .ok_or_else(|| ApiError::NotFound(format!("session {session}")))?;
+        let mut sh = sh.write().unwrap();
+        let ended = sh
+            .sessions
+            .get(&session)
+            .ok_or_else(|| ApiError::NotFound(format!("session {session}")))?
+            .ended;
+        if ended {
+            return Err(ApiError::BadRequest(format!("session {session} ended")));
+        }
+        Ok(sh.acquire(session, now, max_nodes, max_jobs))
+    }
+
+    /// End a session, releasing its jobs and recovering running ones.
+    /// Returns jobs that reached a terminal state during recovery.
+    pub fn end_session(&self, session: SessionId, now: f64, reason: &str) -> Result<Vec<JobId>, ApiError> {
+        let sh = self
+            .shard_of_session(session)
+            .ok_or_else(|| ApiError::NotFound(format!("session {session}")))?;
+        let mut sh = sh.write().unwrap();
+        if !sh.sessions.contains_key(&session) {
+            return Err(ApiError::NotFound(format!("session {session}")));
+        }
+        let mut terminals = Vec::new();
+        sh.end_session(&self.event_seq, session, now, reason, &mut terminals);
+        Ok(terminals)
+    }
+
+    /// Expire sessions whose heartbeat is older than `lease_timeout_s`
+    /// (the fault-tolerance core, §4.4). Returns newly-terminal jobs.
+    pub fn expire_stale(&self, now: f64, lease_timeout_s: f64) -> Vec<JobId> {
+        let mut terminals = Vec::new();
+        for shard in self.all_shards() {
+            let mut sh = shard.write().unwrap();
+            let stale: Vec<SessionId> = sh
+                .sessions
+                .values()
+                .filter(|s| !s.ended && now - s.heartbeat_at > lease_timeout_s)
+                .map(|s| s.id)
+                .collect();
+            for sid in stale {
+                sh.end_session(&self.event_seq, sid, now, "session lease expired", &mut terminals);
+            }
+        }
+        terminals
+    }
+
+    // ----- batch jobs -----------------------------------------------------
+
+    pub fn insert_batch_job(&self, bj: BatchJob) {
+        self.routes.write().unwrap().batch_site.insert(bj.id, bj.site_id);
+        let sh = self.shard_or_create(bj.site_id);
+        sh.write().unwrap().batch_jobs.insert(bj.id, bj);
+    }
+
+    pub fn batch_job(&self, id: BatchJobId) -> Option<BatchJob> {
+        let sh = self.shard_of_batch(id)?;
+        let sh = sh.read().unwrap();
+        sh.batch_jobs.get(&id).cloned()
+    }
+
+    /// Snapshot of every batch job across all shards, ordered by id.
+    pub fn batch_jobs_snapshot(&self) -> Vec<BatchJob> {
+        let mut out = Vec::new();
+        for sh in self.all_shards() {
+            out.extend(sh.read().unwrap().batch_jobs.values().cloned());
+        }
+        out.sort_by_key(|b| b.id);
+        out
+    }
+
+    pub fn batch_jobs_for_site(&self, site: SiteId) -> Vec<BatchJob> {
+        match self.shard(site) {
+            Some(sh) => sh.read().unwrap().batch_jobs.values().cloned().collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Mutate a batch job in place (test bookkeeping only).
+    pub fn with_batch_job_mut<T>(&self, id: BatchJobId, f: impl FnOnce(&mut BatchJob) -> T) -> Option<T> {
+        let sh = self.shard_of_batch(id)?;
+        let mut sh = sh.write().unwrap();
+        sh.batch_jobs.get_mut(&id).map(f)
+    }
+
+    /// Scheduler-driven batch-job status sync with timestamp bookkeeping.
+    pub fn update_batch_job(
+        &self,
+        id: BatchJobId,
+        state: BatchJobState,
+        local_id: Option<u64>,
+        now: f64,
+    ) -> Result<(), ApiError> {
+        let sh = self.shard_of_batch(id).ok_or_else(|| ApiError::NotFound(format!("batchjob {id}")))?;
+        let mut sh = sh.write().unwrap();
+        let bj = sh
+            .batch_jobs
+            .get_mut(&id)
+            .ok_or_else(|| ApiError::NotFound(format!("batchjob {id}")))?;
+        bj.state = state;
+        if let Some(l) = local_id {
+            bj.local_id = Some(l);
+        }
+        match state {
+            BatchJobState::Running if bj.started_at.is_none() => bj.started_at = Some(now),
+            BatchJobState::Finished | BatchJobState::Deleted if bj.ended_at.is_none() => {
+                bj.ended_at = Some(now)
+            }
+            _ => {}
+        }
+        Ok(())
     }
 
     // ----- transfer items -------------------------------------------------
 
-    pub fn insert_titem(&mut self, item: TransferItem) {
-        self.titems_by_site
-            .entry((item.site_id, item.direction, item.state))
-            .or_default()
-            .insert(item.id);
-        self.titems_by_job.entry(item.job_id).or_default().push(item.id);
-        self.titems.insert(item.id, item);
+    pub fn insert_titem(&self, item: TransferItem) {
+        self.routes.write().unwrap().titem_site.insert(item.id, item.site_id);
+        let sh = self.shard_or_create(item.site_id);
+        let mut sh = sh.write().unwrap();
+        sh.titems_by_state.entry((item.direction, item.state)).or_default().insert(item.id);
+        sh.titems_by_job.entry(item.job_id).or_default().push(item.id);
+        sh.titems.insert(item.id, item);
     }
 
-    pub fn titem(&self, id: TransferItemId) -> Option<&TransferItem> {
-        self.titems.get(&id)
+    pub fn titem(&self, id: TransferItemId) -> Option<TransferItem> {
+        let sh = self.shard_of_titem(id)?;
+        let sh = sh.read().unwrap();
+        sh.titems.get(&id).cloned()
     }
 
-    pub fn titems_iter(&self) -> impl Iterator<Item = &TransferItem> {
-        self.titems.values()
+    /// Snapshot of every transfer item across all shards, ordered by id.
+    pub fn titems_snapshot(&self) -> Vec<TransferItem> {
+        let mut out = Vec::new();
+        for sh in self.all_shards() {
+            out.extend(sh.read().unwrap().titems.values().cloned());
+        }
+        out.sort_by_key(|t| t.id);
+        out
     }
 
-    pub fn titems_for_job(&self, job: JobId) -> Vec<&TransferItem> {
-        self.titems_by_job
+    pub fn titems_for_job(&self, job: JobId) -> Vec<TransferItem> {
+        let Some(sh) = self.shard_of_job(job) else { return Vec::new() };
+        let sh = sh.read().unwrap();
+        sh.titems_by_job
             .get(&job)
-            .map(|v| v.iter().map(|id| &self.titems[id]).collect())
+            .map(|v| v.iter().map(|id| sh.titems[id].clone()).collect())
             .unwrap_or_default()
     }
 
@@ -136,81 +801,168 @@ impl Store {
         state: TransferState,
         limit: usize,
     ) -> Vec<TransferItemId> {
-        self.titems_by_site
-            .get(&(site, dir, state))
-            .map(|s| s.iter().take(limit).copied().collect())
-            .unwrap_or_default()
+        match self.shard(site) {
+            Some(sh) => sh
+                .read()
+                .unwrap()
+                .titems_by_state
+                .get(&(dir, state))
+                .map(|s| s.iter().take(limit).copied().collect())
+                .unwrap_or_default(),
+            None => Vec::new(),
+        }
     }
 
-    pub fn set_titem_state(
-        &mut self,
-        id: TransferItemId,
-        state: TransferState,
-        task_id: Option<XferTaskId>,
-    ) {
-        let item = self.titems.get_mut(&id).expect("set_titem_state: unknown item");
-        let old = item.state;
-        if let Some(t) = task_id {
-            item.task_id = Some(t);
+    /// Pending items whose owning job is in the matching stage (stage-in
+    /// while READY, stage-out once POSTPROCESSED), from one consistent
+    /// shard snapshot. `limit == 0` means unlimited.
+    pub fn pending_actionable_titems(
+        &self,
+        site: SiteId,
+        dir: Direction,
+        gate: JobState,
+        limit: usize,
+    ) -> Vec<TransferItem> {
+        let limit = if limit == 0 { usize::MAX } else { limit };
+        let Some(sh) = self.shard(site) else { return Vec::new() };
+        let sh = sh.read().unwrap();
+        let Some(ids) = sh.titems_by_state.get(&(dir, TransferState::Pending)) else {
+            return Vec::new();
+        };
+        ids.iter()
+            .map(|id| &sh.titems[id])
+            .filter(|t| sh.jobs.get(&t.job_id).map(|j| j.state == gate).unwrap_or(false))
+            .take(limit)
+            .cloned()
+            .collect()
+    }
+
+    /// Unchecked single-item state set (index maintenance only). The
+    /// service path is [`Store::update_titems`].
+    pub fn set_titem_state(&self, id: TransferItemId, state: TransferState, task_id: Option<XferTaskId>) {
+        let sh = self.shard_of_titem(id).expect("set_titem_state: unknown item");
+        sh.write().unwrap().set_titem_state(id, state, task_id);
+    }
+
+    /// Bulk transfer-item status sync: validate every id, apply each
+    /// update under its shard lock, advance owning jobs on completion.
+    /// Returns jobs that reached a terminal state (stage-out done).
+    pub fn update_titems(
+        &self,
+        updates: &[(TransferItemId, TransferState, Option<XferTaskId>)],
+        now: f64,
+    ) -> Result<Vec<JobId>, ApiError> {
+        {
+            let routes = self.routes.read().unwrap();
+            for (id, _, _) in updates {
+                if !routes.titem_site.contains_key(id) {
+                    return Err(ApiError::NotFound(format!("transfer item {id}")));
+                }
+            }
         }
-        if old == state {
-            return;
+        let mut terminals = Vec::new();
+        for &(id, state, task_id) in updates {
+            let Some(sh) = self.shard_of_titem(id) else { continue };
+            let mut sh = sh.write().unwrap();
+            sh.set_titem_state(id, state, task_id);
+            if state == TransferState::Done {
+                sh.complete_titem(&self.event_seq, id, now, &mut terminals);
+            }
         }
-        let key_old = (item.site_id, item.direction, old);
-        let key_new = (item.site_id, item.direction, state);
-        item.state = state;
-        if let Some(set) = self.titems_by_site.get_mut(&key_old) {
-            set.remove(&id);
-        }
-        self.titems_by_site.entry(key_new).or_default().insert(id);
+        Ok(terminals)
     }
 
     /// Are all transfer items of `job` in `dir` Done?
     pub fn transfers_complete(&self, job: JobId, dir: Direction) -> bool {
-        self.titems_for_job(job)
-            .iter()
-            .filter(|t| t.direction == dir)
-            .all(|t| t.state == TransferState::Done)
+        match self.shard_of_job(job) {
+            Some(sh) => sh.read().unwrap().transfers_complete(job, dir),
+            None => true,
+        }
+    }
+
+    // ----- events ---------------------------------------------------------
+
+    /// Merged event log across all shards, ordered by global sequence.
+    ///
+    /// All shard read guards are held simultaneously (acquired in site
+    /// order) so the result is a consistent, gap-free cut: a sequence
+    /// number is allocated and committed under its shard's write lock, so
+    /// once every read guard is held, no event below the observed maximum
+    /// can still be in flight — a `since` pager never skips events. This
+    /// is the one deliberate exception to the one-lock-at-a-time rule;
+    /// it cannot deadlock because writers only ever hold a single shard
+    /// lock and readers acquire in a fixed order.
+    fn events_cut(&self, since: u64) -> Vec<Event> {
+        let shards = self.all_shards();
+        let guards: Vec<_> = shards.iter().map(|s| s.read().unwrap()).collect();
+        let mut out = Vec::new();
+        for g in &guards {
+            out.extend(g.events.iter().filter(|e| e.seq >= since).cloned());
+        }
+        out.sort_by_key(|e| e.seq);
+        out
+    }
+
+    /// Merged event log across all shards, ordered by global sequence.
+    pub fn events(&self) -> Vec<Event> {
+        self.events_cut(0)
+    }
+
+    /// Events with sequence number >= `since`, ordered.
+    pub fn events_since(&self, since: usize) -> Vec<Event> {
+        self.events_cut(since as u64)
     }
 
     // ----- diagnostics ----------------------------------------------------
 
-    /// Full index-coherence check (used by tests/properties).
+    /// Full index-coherence check across every shard (tests/properties).
     pub fn check_indexes(&self) -> Result<(), String> {
-        for (key, set) in &self.jobs_by_site_state {
-            for id in set {
-                let j = self.jobs.get(id).ok_or(format!("index {key:?} has ghost job {id}"))?;
-                if (j.site_id, j.state) != *key {
-                    return Err(format!("job {id} indexed under {key:?} but is {:?}", (j.site_id, j.state)));
+        let shards: Vec<(SiteId, Arc<RwLock<Shard>>)> =
+            self.shards.read().unwrap().iter().map(|(k, v)| (*k, v.clone())).collect();
+        for (site, shard) in shards {
+            let sh = shard.read().unwrap();
+            for (state, set) in &sh.jobs_by_state {
+                for id in set {
+                    let j = sh
+                        .jobs
+                        .get(id)
+                        .ok_or(format!("index {:?} has ghost job {id}", (site, state)))?;
+                    if j.state != *state || j.site_id != site {
+                        return Err(format!(
+                            "job {id} indexed under {:?} but is {:?}",
+                            (site, state),
+                            (j.site_id, j.state)
+                        ));
+                    }
                 }
             }
-        }
-        for j in self.jobs.values() {
-            let ok = self
-                .jobs_by_site_state
-                .get(&(j.site_id, j.state))
-                .map(|s| s.contains(&j.id))
-                .unwrap_or(false);
-            if !ok {
-                return Err(format!("job {} missing from index", j.id));
-            }
-        }
-        for (key, set) in &self.titems_by_site {
-            for id in set {
-                let t = self.titems.get(id).ok_or(format!("ghost titem {id}"))?;
-                if (t.site_id, t.direction, t.state) != *key {
-                    return Err(format!("titem {id} mis-indexed"));
+            for j in sh.jobs.values() {
+                let ok = sh
+                    .jobs_by_state
+                    .get(&j.state)
+                    .map(|s| s.contains(&j.id))
+                    .unwrap_or(false);
+                if !ok {
+                    return Err(format!("job {} missing from index", j.id));
                 }
             }
-        }
-        for t in self.titems.values() {
-            let ok = self
-                .titems_by_site
-                .get(&(t.site_id, t.direction, t.state))
-                .map(|s| s.contains(&t.id))
-                .unwrap_or(false);
-            if !ok {
-                return Err(format!("titem {} missing from index", t.id));
+            for (key, set) in &sh.titems_by_state {
+                for id in set {
+                    let t = sh.titems.get(id).ok_or(format!("ghost titem {id}"))?;
+                    if (t.direction, t.state) != *key || t.site_id != site {
+                        return Err(format!("titem {id} mis-indexed"));
+                    }
+                }
+            }
+            for t in sh.titems.values() {
+                let ok = sh
+                    .titems_by_state
+                    .get(&(t.direction, t.state))
+                    .map(|s| s.contains(&t.id))
+                    .unwrap_or(false);
+                if !ok {
+                    return Err(format!("titem {} missing from index", t.id));
+                }
             }
         }
         Ok(())
@@ -221,7 +973,7 @@ impl Store {
 mod tests {
     use super::*;
 
-    fn mk_job(store: &mut Store, site: SiteId, state: JobState) -> JobId {
+    fn mk_job(store: &Store, site: SiteId, state: JobState) -> JobId {
         let id = JobId(store.fresh_id());
         store.insert_job(Job {
             id,
@@ -246,10 +998,10 @@ mod tests {
 
     #[test]
     fn state_index_tracks_transitions() {
-        let mut s = Store::new();
+        let s = Store::new();
         let site = SiteId(1);
-        let a = mk_job(&mut s, site, JobState::Ready);
-        let b = mk_job(&mut s, site, JobState::Ready);
+        let a = mk_job(&s, site, JobState::Ready);
+        let b = mk_job(&s, site, JobState::Ready);
         assert_eq!(s.jobs_in_state(site, JobState::Ready), vec![a, b]);
         s.set_job_state(a, JobState::StagedIn, 2.0, "");
         assert_eq!(s.jobs_in_state(site, JobState::Ready), vec![b]);
@@ -260,30 +1012,31 @@ mod tests {
 
     #[test]
     fn events_appended_per_transition() {
-        let mut s = Store::new();
+        let s = Store::new();
         let site = SiteId(1);
-        let a = mk_job(&mut s, site, JobState::Ready);
+        let a = mk_job(&s, site, JobState::Ready);
         s.set_job_state(a, JobState::StagedIn, 5.0, "globus");
-        assert_eq!(s.events.len(), 2);
-        let e = &s.events[1];
+        let evs = s.events();
+        assert_eq!(evs.len(), 2);
+        let e = &evs[1];
         assert_eq!((e.from, e.to, e.ts), (JobState::Ready, JobState::StagedIn, 5.0));
         assert_eq!(e.data, "globus");
     }
 
     #[test]
     fn noop_transition_is_silent() {
-        let mut s = Store::new();
-        let a = mk_job(&mut s, SiteId(1), JobState::Ready);
-        let before = s.events.len();
+        let s = Store::new();
+        let a = mk_job(&s, SiteId(1), JobState::Ready);
+        let before = s.events().len();
         s.set_job_state(a, JobState::Ready, 9.0, "");
-        assert_eq!(s.events.len(), before);
+        assert_eq!(s.events().len(), before);
     }
 
     #[test]
     fn titem_index_and_completion() {
-        let mut s = Store::new();
+        let s = Store::new();
         let site = SiteId(1);
-        let j = mk_job(&mut s, site, JobState::Ready);
+        let j = mk_job(&s, site, JobState::Ready);
         let t1 = TransferItemId(s.fresh_id());
         let t2 = TransferItemId(s.fresh_id());
         for (id, dir) in [(t1, Direction::In), (t2, Direction::Out)] {
@@ -310,9 +1063,9 @@ mod tests {
 
     #[test]
     fn limit_respected() {
-        let mut s = Store::new();
+        let s = Store::new();
         let site = SiteId(1);
-        let j = mk_job(&mut s, site, JobState::Ready);
+        let j = mk_job(&s, site, JobState::Ready);
         for _ in 0..10 {
             let id = TransferItemId(s.fresh_id());
             s.insert_titem(TransferItem {
@@ -331,8 +1084,8 @@ mod tests {
 
     #[test]
     fn children_index() {
-        let mut s = Store::new();
-        let p = mk_job(&mut s, SiteId(1), JobState::Ready);
+        let s = Store::new();
+        let p = mk_job(&s, SiteId(1), JobState::Ready);
         let c = JobId(s.fresh_id());
         s.insert_job(Job {
             id: c,
@@ -349,6 +1102,69 @@ mod tests {
             session: None,
             created_at: 0.0,
         });
-        assert_eq!(s.children_of(p), &[c]);
+        assert_eq!(s.children_of(p), vec![c]);
+    }
+
+    #[test]
+    fn shards_isolate_sites() {
+        let s = Store::new();
+        let a = mk_job(&s, SiteId(1), JobState::Ready);
+        let b = mk_job(&s, SiteId(2), JobState::Ready);
+        assert_eq!(s.jobs_in_state(SiteId(1), JobState::Ready), vec![a]);
+        assert_eq!(s.jobs_in_state(SiteId(2), JobState::Ready), vec![b]);
+        assert_eq!(s.job_count(), 2);
+        assert_eq!(s.jobs_snapshot().len(), 2);
+        s.check_indexes().unwrap();
+    }
+
+    #[test]
+    fn event_seq_totally_orders_across_shards() {
+        let s = Store::new();
+        let a = mk_job(&s, SiteId(1), JobState::Created);
+        let b = mk_job(&s, SiteId(2), JobState::Created);
+        s.set_job_state(a, JobState::Ready, 1.0, "");
+        s.set_job_state(b, JobState::Ready, 2.0, "");
+        s.set_job_state(a, JobState::StagedIn, 3.0, "");
+        let evs = s.events();
+        assert_eq!(evs.len(), 3);
+        for (i, e) in evs.iter().enumerate() {
+            assert_eq!(e.seq, i as u64, "dense global order");
+        }
+        assert_eq!(evs[0].job_id, a);
+        assert_eq!(evs[1].job_id, b);
+        assert_eq!(s.events_since(1).len(), 2);
+    }
+
+    #[test]
+    fn concurrent_inserts_and_transitions_stay_coherent() {
+        let s = std::sync::Arc::new(Store::new());
+        let handles: Vec<_> = (0..4u64)
+            .map(|t| {
+                let s = s.clone();
+                std::thread::spawn(move || {
+                    let site = SiteId(t % 2 + 1);
+                    for _ in 0..50 {
+                        let id = mk_job(&s, site, JobState::Ready);
+                        s.set_job_state(id, JobState::StagedIn, 1.0, "");
+                        s.set_job_state(id, JobState::Preprocessed, 1.0, "");
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.job_count(), 200);
+        assert_eq!(
+            s.count_in_state(SiteId(1), JobState::Preprocessed)
+                + s.count_in_state(SiteId(2), JobState::Preprocessed),
+            200
+        );
+        // Every event got a unique sequence number.
+        let evs = s.events();
+        let mut seqs: Vec<u64> = evs.iter().map(|e| e.seq).collect();
+        seqs.dedup();
+        assert_eq!(seqs.len(), evs.len());
+        s.check_indexes().unwrap();
     }
 }

@@ -160,7 +160,7 @@ mod tests {
         let finished = world.service.store.count_in_state(site, JobState::JobFinished);
         assert_eq!(finished, 12, "all jobs should complete the round trip");
         // Stage timings recorded: every job has Ready->StagedIn events.
-        let evs = &world.service.store.events;
+        let evs = world.service.store.events();
         let staged = evs.iter().filter(|e| e.to == JobState::StagedIn).count();
         assert_eq!(staged, 12);
         // Time-to-solution is plausible: > transfer time, < full horizon.

@@ -113,7 +113,7 @@ mod tests {
     use crate::world::InProcConn;
 
     fn setup() -> (ServiceCore, SiteConfig, BatchSim) {
-        let mut svc = ServiceCore::new(b"k");
+        let svc = ServiceCore::new(b"k");
         let tok = svc.admin_token();
         let site = svc
             .handle(0.0, &tok, ApiRequest::CreateSite {
@@ -148,12 +148,7 @@ mod tests {
         em.tick(1.0, &cfg, &mut conn, &mut sched);
         // want = 20 -> ceil to 8-node blocks bounded by max_queued=4: 8+8+8 = 24 >= 20
         assert_eq!(em.blocks_created, 3);
-        let total: u32 = svc
-            .store
-            .batch_jobs
-            .values()
-            .map(|b| b.num_nodes)
-            .sum();
+        let total: u32 = svc.store.batch_jobs_snapshot().iter().map(|b| b.num_nodes).sum();
         assert_eq!(total, 24);
     }
 
@@ -165,7 +160,7 @@ mod tests {
         let mut em = ElasticModule::new();
         let mut conn = InProcConn { now: 1.0, svc: &mut svc };
         em.tick(1.0, &cfg, &mut conn, &mut sched);
-        let total: u32 = svc.store.batch_jobs.values().map(|b| b.num_nodes).sum();
+        let total: u32 = svc.store.batch_jobs_snapshot().iter().map(|b| b.num_nodes).sum();
         assert!(total <= 16, "provisioned {total} > cap 16");
     }
 
@@ -189,9 +184,9 @@ mod tests {
             em.tick(1.0, &cfg, &mut conn, &mut sched);
         }
         // Mark the created block as Queued (scheduler module would).
-        let ids: Vec<_> = svc.store.batch_jobs.keys().copied().collect();
+        let ids: Vec<_> = svc.store.batch_jobs_snapshot().iter().map(|b| b.id).collect();
         for id in &ids {
-            svc.store.batch_jobs.get_mut(id).unwrap().state = BatchJobState::Queued;
+            svc.store.with_batch_job_mut(*id, |b| b.state = BatchJobState::Queued).unwrap();
         }
         // Long after the wait timeout, the module deletes it.
         let mut conn = InProcConn { now: 200.0, svc: &mut svc };
@@ -199,8 +194,8 @@ mod tests {
         em.tick(200.0, &cfg, &mut conn, &mut sched);
         assert!(svc
             .store
-            .batch_jobs
-            .values()
+            .batch_jobs_snapshot()
+            .iter()
             .all(|b| b.state == BatchJobState::Deleted || b.created_at > 100.0));
     }
 
@@ -221,7 +216,7 @@ mod tests {
         let mut conn = InProcConn { now: t, svc: &mut svc };
         em.tick(t, &cfg, &mut conn, &mut sched);
         // Only one 4-node block fits the idle window.
-        let sizes: Vec<u32> = svc.store.batch_jobs.values().map(|b| b.num_nodes).collect();
+        let sizes: Vec<u32> = svc.store.batch_jobs_snapshot().iter().map(|b| b.num_nodes).collect();
         assert_eq!(sizes, vec![4]);
     }
 
@@ -234,6 +229,6 @@ mod tests {
         let mut conn = InProcConn { now: 1.0, svc: &mut svc };
         em.tick(1.0, &cfg, &mut conn, &mut sched);
         assert_eq!(em.blocks_created, 0);
-        assert!(svc.store.batch_jobs.is_empty());
+        assert!(svc.store.batch_jobs_snapshot().is_empty());
     }
 }

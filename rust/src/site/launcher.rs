@@ -96,7 +96,10 @@ impl Launcher {
             self.next_heartbeat = now + cfg.launcher.heartbeat_period;
         }
 
-        // Poll running jobs.
+        // Poll running jobs; report every completion in ONE SessionSync
+        // round trip (the sync doubles as the heartbeat, so a busy
+        // launcher's cycle is a single request — paper §4.5's batched
+        // status updates).
         let done: Vec<(JobId, bool)> = self
             .running
             .iter()
@@ -105,24 +108,24 @@ impl Launcher {
                 RunStatus::Running => None,
             })
             .collect();
-        for (job, ok) in done {
-            let (_, n) = self.running.remove(&job).unwrap();
-            self.free_nodes += n;
-            self.runs_done += 1;
-            let to = if ok { JobState::RunDone } else { JobState::RunError };
-            let _ = conn.api(&cfg.token, ApiRequest::UpdateJobState {
-                job,
-                to,
-                data: String::new(),
-            });
-            if ok {
-                // Site-side postprocessing is trivial for these workloads;
-                // perform it inline so stage-out becomes actionable.
-                let _ = conn.api(&cfg.token, ApiRequest::UpdateJobState {
-                    job,
-                    to: JobState::Postprocessed,
-                    data: String::new(),
-                });
+        if !done.is_empty() {
+            let mut updates: Vec<(JobId, JobState, String)> = Vec::with_capacity(done.len() * 2);
+            for (job, ok) in done {
+                let (_, n) = self.running.remove(&job).unwrap();
+                self.free_nodes += n;
+                self.runs_done += 1;
+                if ok {
+                    updates.push((job, JobState::RunDone, String::new()));
+                    // Site-side postprocessing is trivial for these
+                    // workloads; perform it inline so stage-out becomes
+                    // actionable.
+                    updates.push((job, JobState::Postprocessed, String::new()));
+                } else {
+                    updates.push((job, JobState::RunError, String::new()));
+                }
+            }
+            if conn.api(&cfg.token, ApiRequest::SessionSync { session, updates }).is_ok() {
+                self.next_heartbeat = now + cfg.launcher.heartbeat_period;
             }
         }
 
@@ -142,6 +145,7 @@ impl Launcher {
                 max_nodes: self.free_nodes,
                 max_jobs,
             }) {
+                let mut started: Vec<JobId> = Vec::new();
                 for job in resp.jobs() {
                     let n = job.num_nodes.min(self.free_nodes).max(1);
                     if n > self.free_nodes {
@@ -150,8 +154,12 @@ impl Launcher {
                     let run = exec.start(now, &cfg.facility, &job.workload, n);
                     self.free_nodes -= n;
                     self.running.insert(job.id, (run, n));
-                    let _ = conn.api(&cfg.token, ApiRequest::UpdateJobState {
-                        job: job.id,
+                    started.push(job.id);
+                }
+                // One bulk round trip marks every started job RUNNING.
+                if !started.is_empty() {
+                    let _ = conn.api(&cfg.token, ApiRequest::BulkUpdateJobState {
+                        jobs: started,
                         to: JobState::Running,
                         data: String::new(),
                     });
@@ -193,7 +201,7 @@ mod tests {
     use crate::world::{InProcConn, SimExec};
 
     fn setup() -> (ServiceCore, SiteConfig, SiteId) {
-        let mut svc = ServiceCore::new(b"k");
+        let svc = ServiceCore::new(b"k");
         let tok = svc.admin_token();
         let site = svc
             .handle(0.0, &tok, ApiRequest::CreateSite {
@@ -270,7 +278,7 @@ mod tests {
         assert_eq!(l.exited, ExitReason::IdleTimeout);
         assert!(t < 20.0, "should exit shortly after idle timeout, exited at {t}");
         // Session marked ended server-side.
-        assert!(svc.store.sessions.values().all(|s| s.ended));
+        assert!(svc.store.sessions_snapshot().iter().all(|s| s.ended));
     }
 
     #[test]

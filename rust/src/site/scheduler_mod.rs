@@ -138,7 +138,7 @@ mod tests {
     use crate::world::InProcConn;
 
     fn setup() -> (ServiceCore, SiteConfig, BatchSim) {
-        let mut svc = ServiceCore::new(b"k");
+        let svc = ServiceCore::new(b"k");
         let tok = svc.admin_token();
         let site = svc
             .handle(0.0, &tok, ApiRequest::CreateSite {
@@ -186,8 +186,8 @@ mod tests {
         }
         assert_eq!(launchers[0].batch_job_id, bj);
         assert_eq!(launchers[0].nodes, 8);
-        assert_eq!(svc.store.batch_jobs[&bj].state, BatchJobState::Running);
-        assert!(svc.store.batch_jobs[&bj].started_at.is_some());
+        assert_eq!(svc.store.batch_job(bj).unwrap().state, BatchJobState::Running);
+        assert!(svc.store.batch_job(bj).unwrap().started_at.is_some());
     }
 
     #[test]
@@ -209,7 +209,7 @@ mod tests {
             let mut conn = InProcConn { now: t, svc: &mut svc };
             launchers[0].tick(t, &cfg, &mut conn, &mut exec);
         }
-        assert_eq!(svc.store.sessions.len(), 1);
+        assert_eq!(svc.store.sessions_snapshot().len(), 1);
         // Kill the allocation out from under it.
         let local = launchers[0].local_alloc_id;
         sched.kill(t + 1.0, local);
@@ -219,8 +219,8 @@ mod tests {
         assert!(launchers.is_empty());
         assert_eq!(sm.kills_seen, 1);
         // Session NOT gracefully ended — stale heartbeat will expire it.
-        assert!(!svc.store.sessions.values().next().unwrap().ended);
-        assert_eq!(svc.store.batch_jobs[&bj].state, BatchJobState::Finished);
+        assert!(!svc.store.sessions_snapshot()[0].ended);
+        assert_eq!(svc.store.batch_job(bj).unwrap().state, BatchJobState::Finished);
     }
 
     #[test]
@@ -253,8 +253,8 @@ mod tests {
             launchers.retain_mut(|l| l.tick(t, &cfg, &mut conn, &mut exec));
         }
         assert!(launchers.is_empty());
-        assert_eq!(svc.store.batch_jobs[&bj].state, BatchJobState::Finished);
+        assert_eq!(svc.store.batch_job(bj).unwrap().state, BatchJobState::Finished);
         // Graceful: every session ended.
-        assert!(svc.store.sessions.values().all(|s| s.ended));
+        assert!(svc.store.sessions_snapshot().iter().all(|s| s.ended));
     }
 }

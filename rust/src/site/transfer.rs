@@ -50,7 +50,9 @@ impl TransferModule {
         self.next_due
     }
 
-    /// Poll in-flight tasks; push completions/errors to the API.
+    /// Poll in-flight tasks; push every completion/error to the API in
+    /// ONE SyncTransferItems round trip per tick (the paper's batched
+    /// status synchronization — one sync covers many transfer tasks).
     fn poll_active(
         &mut self,
         now: f64,
@@ -59,27 +61,23 @@ impl TransferModule {
         xfer: &mut dyn TransferBackend,
     ) {
         let task_ids: Vec<XferTaskId> = self.active.keys().copied().collect();
+        let mut updates: Vec<(TransferItemId, TransferState, Option<XferTaskId>)> = Vec::new();
         for tid in task_ids {
             match xfer.poll(now, tid) {
                 XferStatus::Done => {
                     let items = self.active.remove(&tid).unwrap();
                     self.items_completed += items.len() as u64;
-                    let _ = conn.api(&cfg.token, ApiRequest::UpdateTransferItems {
-                        ids: items,
-                        state: TransferState::Done,
-                        task_id: Some(tid),
-                    });
+                    updates.extend(items.into_iter().map(|i| (i, TransferState::Done, Some(tid))));
                 }
                 XferStatus::Error => {
                     let items = self.active.remove(&tid).unwrap();
-                    let _ = conn.api(&cfg.token, ApiRequest::UpdateTransferItems {
-                        ids: items,
-                        state: TransferState::Error,
-                        task_id: Some(tid),
-                    });
+                    updates.extend(items.into_iter().map(|i| (i, TransferState::Error, Some(tid))));
                 }
                 XferStatus::Queued | XferStatus::Active => {}
             }
+        }
+        if !updates.is_empty() {
+            let _ = conn.api(&cfg.token, ApiRequest::SyncTransferItems { updates });
         }
     }
 
@@ -169,7 +167,7 @@ mod tests {
     use crate::service::ServiceCore;
 
     fn setup(batch: usize, max_conc: usize) -> (ServiceCore, String, SiteId, SiteConfig) {
-        let mut svc = ServiceCore::new(b"k");
+        let svc = ServiceCore::new(b"k");
         let tok = svc.admin_token();
         let site = svc
             .handle(0.0, &tok, ApiRequest::CreateSite {
@@ -217,7 +215,8 @@ mod tests {
         // 8 items marked Active in the service.
         let active = svc
             .store
-            .titems_iter()
+            .titems_snapshot()
+            .iter()
             .filter(|t| t.state == TransferState::Active)
             .count();
         assert_eq!(active, 8);

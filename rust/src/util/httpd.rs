@@ -6,15 +6,27 @@
 //! mode. One-request-per-connection keeps the implementation small; the
 //! service is localhost-scoped in this repo, so connection reuse is not a
 //! bottleneck (verified in benches).
+//!
+//! The server uses a fixed accept/worker thread-pool model: one acceptor
+//! feeds a connection queue drained by N worker threads. Concurrency is
+//! therefore bounded (no thread-per-connection explosions under launcher
+//! storms) and tunable — the `service_throughput` bench drives the same
+//! handler with 1 vs 8 workers to measure gateway scaling.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
+
+/// Default worker-pool size: one per available core, bounded to keep the
+/// pool sane on very small or very large hosts.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(2, 16)
+}
 
 /// A parsed HTTP request.
 #[derive(Debug, Clone)]
@@ -69,17 +81,31 @@ impl Response {
     }
 }
 
-/// A running HTTP server; dropping it does not stop the thread — call
-/// [`Server::stop`] (tests) or let the process exit (examples).
+/// A running HTTP server (acceptor + worker pool); dropping it does not
+/// stop the threads — call [`Server::stop`] (tests) or let the process
+/// exit (examples).
 pub struct Server {
     pub addr: String,
+    pub workers: usize,
     stop: Arc<AtomicBool>,
-    handle: Option<JoinHandle<()>>,
+    handles: Vec<JoinHandle<()>>,
 }
 
 impl Server {
-    /// Serve `handler` on `addr` ("127.0.0.1:0" picks a free port).
+    /// Serve `handler` on `addr` ("127.0.0.1:0" picks a free port) with
+    /// the default worker-pool size.
     pub fn serve<F>(addr: &str, handler: F) -> Result<Server>
+    where
+        F: Fn(Request) -> Response + Send + Sync + 'static,
+    {
+        Server::serve_with_workers(addr, default_workers(), handler)
+    }
+
+    /// Serve `handler` with a fixed pool of `workers` threads: the
+    /// acceptor enqueues accepted connections; workers drain the queue and
+    /// run the handler. With `workers == 1` requests fully serialize — the
+    /// baseline the `service_throughput` bench compares against.
+    pub fn serve_with_workers<F>(addr: &str, workers: usize, handler: F) -> Result<Server>
     where
         F: Fn(Request) -> Response + Send + Sync + 'static,
     {
@@ -87,30 +113,54 @@ impl Server {
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
         let handler = Arc::new(handler);
-        let handle = std::thread::spawn(move || {
+        let workers = workers.max(1);
+        let (tx, rx) = mpsc::channel::<TcpStream>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(workers + 1);
+        for _ in 0..workers {
+            let rx = rx.clone();
+            let h = handler.clone();
+            handles.push(std::thread::spawn(move || loop {
+                // The guard's temporary is dropped at the end of this
+                // statement, so the queue lock is never held while a
+                // request is being served.
+                let next = rx.lock().unwrap().recv();
+                match next {
+                    Ok(stream) => {
+                        let _ = handle_conn(stream, &*h);
+                    }
+                    // Acceptor gone and queue drained: shut down.
+                    Err(_) => break,
+                }
+            }));
+        }
+        let stop2 = stop.clone();
+        handles.push(std::thread::spawn(move || {
             while !stop2.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
-                        let h = handler.clone();
-                        std::thread::spawn(move || {
-                            let _ = handle_conn(stream, &*h);
-                        });
+                        // The accepted stream may inherit the listener's
+                        // non-blocking flag on some platforms.
+                        let _ = stream.set_nonblocking(false);
+                        if tx.send(stream).is_err() {
+                            break;
+                        }
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(Duration::from_millis(2));
+                        std::thread::sleep(Duration::from_millis(1));
                     }
                     Err(_) => break,
                 }
             }
-        });
-        Ok(Server { addr: local.to_string(), stop, handle: Some(handle) })
+            // Dropping the sender lets workers drain and exit.
+        }));
+        Ok(Server { addr: local.to_string(), workers, stop, handles })
     }
 
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.handle.take() {
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
@@ -298,6 +348,48 @@ mod tests {
             .collect();
         for t in threads {
             t.join().unwrap();
+        }
+        srv.stop();
+    }
+
+    #[test]
+    fn single_worker_serializes_requests() {
+        let srv = Server::serve_with_workers("127.0.0.1:0", 1, |req| {
+            std::thread::sleep(Duration::from_millis(15));
+            Response::ok_json(req.body_str().into_owned())
+        })
+        .unwrap();
+        assert_eq!(srv.workers, 1);
+        let addr = srv.addr.clone();
+        let t0 = std::time::Instant::now();
+        let threads: Vec<_> = (0..4)
+            .map(|i| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let (s, _) = post_json(&addr, "/t", "tok", &format!("{{\"i\":{i}}}")).unwrap();
+                    assert_eq!(s, 200);
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        // 4 requests through 1 worker cannot overlap: >= 4 * 15ms.
+        assert!(t0.elapsed() >= Duration::from_millis(55), "took {:?}", t0.elapsed());
+        srv.stop();
+    }
+
+    #[test]
+    fn pool_drains_queued_connections_on_stop() {
+        let srv = Server::serve_with_workers("127.0.0.1:0", 2, |req| {
+            Response::ok_json(req.body_str().into_owned())
+        })
+        .unwrap();
+        for i in 0..16 {
+            let body = format!("{{\"i\":{i}}}");
+            let (s, b) = post_json(&srv.addr, "/t", "tok", &body).unwrap();
+            assert_eq!(s, 200);
+            assert_eq!(b, body);
         }
         srv.stop();
     }

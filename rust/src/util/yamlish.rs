@@ -96,12 +96,19 @@ impl Yaml {
     }
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
-#[error("yaml parse error at line {line}: {msg}")]
+#[derive(Debug, PartialEq)]
 pub struct YamlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for YamlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "yaml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for YamlError {}
 
 #[derive(Debug)]
 struct Line {

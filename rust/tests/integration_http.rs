@@ -3,7 +3,7 @@
 //! sockets. (The heavier PJRT variant lives in integration_runtime.rs.)
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use balsam::runtime::local::{LocalResources, LoopbackTransfer};
 use balsam::service::api::{ApiConn, ApiRequest, JobCreate};
@@ -41,8 +41,8 @@ impl ExecBackend for FastExec {
 
 #[test]
 fn full_round_trip_over_http_with_real_file_staging() {
-    let svc = Arc::new(Mutex::new(ServiceCore::new(b"http-int")));
-    let token = svc.lock().unwrap().admin_token();
+    let svc = Arc::new(ServiceCore::new(b"http-int"));
+    let token = svc.admin_token();
     let server = serve(svc.clone(), "127.0.0.1:0").unwrap();
 
     let mut conn = HttpConn { addr: server.addr.clone() };
@@ -92,10 +92,7 @@ fn full_round_trip_over_http_with_real_file_staging() {
     loop {
         let now = t0.elapsed().as_secs_f64();
         agent.step(now, &mut agent_conn, &mut xfer, &mut sched, &mut exec);
-        let done = {
-            let s = svc.lock().unwrap();
-            s.store.count_in_state(site, JobState::JobFinished)
-        };
+        let done = svc.store.count_in_state(site, JobState::JobFinished);
         if done == ids.len() {
             break;
         }
@@ -105,24 +102,23 @@ fn full_round_trip_over_http_with_real_file_staging() {
 
     // The event log shows the full lifecycle for each job, with wall-clock
     // timestamps assigned by the HTTP gateway.
-    let s = svc.lock().unwrap();
+    let evs = svc.store.events();
     for &id in &ids {
         let path: Vec<JobState> =
-            s.store.events.iter().filter(|e| e.job_id == id).map(|e| e.to).collect();
+            evs.iter().filter(|e| e.job_id == id).map(|e| e.to).collect();
         assert_eq!(*path.last().unwrap(), JobState::JobFinished, "job {id}: {path:?}");
         assert!(path.contains(&JobState::StagedIn));
         assert!(path.contains(&JobState::Running));
     }
-    assert!(s.calls > 50, "expected many HTTP API calls, saw {}", s.calls);
-    drop(s);
+    assert!(svc.calls() > 50, "expected many HTTP API calls, saw {}", svc.calls());
     std::fs::remove_dir_all(&dir).ok();
     server.stop();
 }
 
 #[test]
 fn concurrent_http_clients_share_one_service() {
-    let svc = Arc::new(Mutex::new(ServiceCore::new(b"http-conc")));
-    let token = svc.lock().unwrap().admin_token();
+    let svc = Arc::new(ServiceCore::new(b"http-conc"));
+    let token = svc.admin_token();
     let server = serve(svc.clone(), "127.0.0.1:0").unwrap();
     let mut conn = HttpConn { addr: server.addr.clone() };
     let site = conn
@@ -158,9 +154,7 @@ fn concurrent_http_clients_share_one_service() {
     for t in threads {
         t.join().unwrap();
     }
-    let s = svc.lock().unwrap();
-    assert_eq!(s.store.job_count(), 60);
-    s.store.check_indexes().unwrap();
-    drop(s);
+    assert_eq!(svc.store.job_count(), 60);
+    svc.store.check_indexes().unwrap();
     server.stop();
 }

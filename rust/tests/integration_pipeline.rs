@@ -32,7 +32,7 @@ fn three_site_federation_processes_mixed_workload() {
     assert_eq!(total, 36, "every job must complete its round trip");
     // Events exist for every stage of every job.
     let jobs = job_table(d.svc());
-    let durs = stage_durations(&d.svc().store.events, &jobs);
+    let durs = stage_durations(&d.svc().store.events(), &jobs);
     assert_eq!(summarize_stage(&durs, |d| d.time_to_solution).count(), 36);
     // Store indexes stayed coherent across thousands of transitions.
     d.svc().store.check_indexes().unwrap();
@@ -73,13 +73,9 @@ fn dag_workflow_runs_in_dependency_order() {
         assert_eq!(svc.store.job(id).unwrap().state, JobState::JobFinished, "job {id}");
     }
     // Ordering: leaf started only after b and c finished.
+    let evs = svc.store.events();
     let ts_of = |id, to| {
-        svc.store
-            .events
-            .iter()
-            .find(|e| e.job_id == id && e.to == to)
-            .map(|e| e.ts)
-            .unwrap()
+        evs.iter().find(|e| e.job_id == id && e.to == to).map(|e| e.ts).unwrap()
     };
     assert!(ts_of(leaf, JobState::Running) >= ts_of(b, JobState::JobFinished));
     assert!(ts_of(leaf, JobState::Running) >= ts_of(c, JobState::JobFinished));
@@ -106,7 +102,7 @@ fn deterministic_given_seed() {
         .with_max_jobs(40);
         d.add_client(client);
         d.run_until(1500.0);
-        let evs = &d.svc().store.events;
+        let evs = d.svc().store.events();
         (evs.len(), evs.iter().map(|e| e.ts).sum::<f64>())
     };
     let (n1, s1) = run(777);
@@ -146,7 +142,7 @@ fn failure_injection_exhausts_retries_without_losing_others() {
     // (P[fail all 3] ≈ 2.7%).
     assert!(finished >= 24, "finished={finished} failed={failed}");
     // Retry accounting: nothing exceeds its budget.
-    for j in svc.store.jobs_iter() {
+    for j in svc.store.jobs_snapshot() {
         assert!(j.attempts <= j.max_attempts);
     }
 }

@@ -10,6 +10,10 @@ use balsam::runtime::real::RealExec;
 use balsam::site::platform::{ExecBackend, RunStatus};
 
 fn have_artifacts() -> bool {
+    if !balsam::runtime::pjrt_available() {
+        eprintln!("skipping: built without the `xla` feature (PJRT unavailable)");
+        return false;
+    }
     artifacts_dir().join("manifest.json").exists()
 }
 

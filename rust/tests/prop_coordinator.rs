@@ -39,7 +39,7 @@ fn prop_event_log_edges_are_legal_and_contiguous() {
             d.add_client(client);
             d.run_until(2500.0);
             let mut per_job: std::collections::BTreeMap<_, Vec<_>> = Default::default();
-            for e in &d.svc().store.events {
+            for e in &d.svc().store.events() {
                 if !state::legal(e.from, e.to) {
                     return Err(format!("illegal edge {} -> {}", e.from, e.to));
                 }
@@ -90,7 +90,7 @@ fn prop_session_lease_exclusivity_under_faults() {
                 d.run_until(k as f64 * 30.0);
                 let svc = d.svc();
                 let mut seen = std::collections::BTreeSet::new();
-                for s in svc.store.sessions.values().filter(|s| !s.ended) {
+                for s in svc.store.sessions_snapshot().iter().filter(|s| !s.ended) {
                     for j in &s.acquired {
                         if !seen.insert(*j) {
                             return Err(format!("job {j} held by two live sessions at t={}", k * 30));
@@ -134,19 +134,17 @@ fn prop_no_lost_jobs_under_faults() {
             d.add_actor(Box::new(FaultInjector::new("theta", 100.0, 60.0, 500.0, seed)));
             d.run_until(4000.0);
             let svc = d.svc();
-            let terminal: usize = svc
-                .store
-                .jobs_iter()
-                .filter(|j| j.state.is_terminal())
-                .count();
-            let total = svc.store.jobs_iter().count();
+            let terminal: usize =
+                svc.store.jobs_snapshot().iter().filter(|j| j.state.is_terminal()).count();
+            let total = svc.store.job_count();
             if total != n {
                 return Err(format!("expected {n} jobs, found {total}"));
             }
             if terminal != total {
                 let stuck: Vec<String> = svc
                     .store
-                    .jobs_iter()
+                    .jobs_snapshot()
+                    .iter()
                     .filter(|j| !j.state.is_terminal())
                     .map(|j| format!("{}:{}", j.id, j.state))
                     .collect();
@@ -173,7 +171,7 @@ fn prop_indexed_queries_equal_full_scan() {
             (n, states, r.next_u64())
         },
         |(n, states, seed)| {
-            let mut svc = ServiceCore::new(b"prop");
+            let svc = ServiceCore::new(b"prop");
             let tok = svc.admin_token();
             let site = svc
                 .handle(0.0, &tok, ApiRequest::CreateSite {
@@ -218,7 +216,8 @@ fn prop_indexed_queries_equal_full_scan() {
             svc.store.check_indexes()?;
             for &st in states {
                 let via_index = svc.store.jobs_in_state(site, st).len();
-                let via_scan = svc.store.jobs_iter().filter(|j| j.state == st).count();
+                let via_scan =
+                    svc.store.jobs_snapshot().iter().filter(|j| j.state == st).count();
                 if via_index != via_scan {
                     return Err(format!("{st}: index {via_index} != scan {via_scan}"));
                 }
@@ -260,7 +259,7 @@ fn prop_transfer_items_progress_monotonically() {
             d.add_client(client);
             d.run_until(2500.0);
             let svc = d.svc();
-            for t in svc.store.titems_iter() {
+            for t in svc.store.titems_snapshot() {
                 if t.state != TransferState::Done {
                     return Err(format!(
                         "item {} ({:?}) finished in state {:?}",
@@ -274,7 +273,7 @@ fn prop_transfer_items_progress_monotonically() {
             // Out items at least as many as finished jobs (1 per job here).
             let done_jobs = svc.store.count_in_state(site, JobState::JobFinished);
             let out_items =
-                svc.store.titems_iter().filter(|t| t.direction == Direction::Out).count();
+                svc.store.titems_snapshot().iter().filter(|t| t.direction == Direction::Out).count();
             if done_jobs != 20 || out_items != 20 {
                 return Err(format!("jobs {done_jobs}, out items {out_items}"));
             }
