@@ -1,0 +1,57 @@
+#!/usr/bin/env python3
+"""Perf-trend gate for BENCH_service.json.
+
+Usage: bench_trend.py <baseline.json> <current.json> [--max-drop 0.30]
+
+Compares the peak ephemeral req/s of the current bench run against the
+previous run's artifact (restored from the actions cache). Fails the job
+on a regression larger than --max-drop; a missing or unreadable baseline
+is tolerated (first run on a branch, expired cache).
+"""
+import json
+import sys
+
+
+def peak_reqs_per_s(doc):
+    rates = [
+        r["reqs_per_s"]
+        for r in doc.get("results", [])
+        if r.get("persist", "ephemeral") == "ephemeral"
+    ]
+    if not rates:
+        raise ValueError("no ephemeral results in bench record")
+    return max(rates)
+
+
+def main(argv):
+    if len(argv) < 3:
+        print(__doc__)
+        return 2
+    baseline_path, current_path = argv[1], argv[2]
+    max_drop = 0.30
+    if "--max-drop" in argv:
+        max_drop = float(argv[argv.index("--max-drop") + 1])
+
+    try:
+        with open(baseline_path) as f:
+            baseline = peak_reqs_per_s(json.load(f))
+    except (OSError, ValueError, KeyError) as e:
+        print(f"no usable baseline ({e}); skipping trend check")
+        return 0
+
+    with open(current_path) as f:
+        current = peak_reqs_per_s(json.load(f))
+
+    delta = (current - baseline) / baseline if baseline > 0 else 0.0
+    print(f"baseline {baseline:.0f} req/s -> current {current:.0f} req/s ({delta:+.1%})")
+    if delta < -max_drop:
+        print(
+            f"::error::service throughput regressed {-delta:.1%} "
+            f"(gate: {max_drop:.0%}) — see BENCH_service.json"
+        )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -179,8 +179,8 @@ fn main() -> balsam::Result<()> {
         site_ids.len()
     );
     println!("API calls served over HTTP: {}", svc.calls());
-    anyhow::ensure!(total_done > 0, "no jobs completed");
-    anyhow::ensure!(
+    balsam::ensure!(total_done > 0, "no jobs completed");
+    balsam::ensure!(
         total_done >= submitted * 9 / 10,
         "too many unfinished jobs: {total_done}/{submitted}"
     );

@@ -89,7 +89,7 @@ fn main() -> balsam::Result<()> {
         }
         std::thread::sleep(std::time::Duration::from_millis(50));
         if now > 300.0 {
-            anyhow::bail!("timed out waiting for jobs");
+            balsam::bail!("timed out waiting for jobs");
         }
     }
 

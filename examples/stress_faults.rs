@@ -19,7 +19,7 @@ fn main() -> balsam::Result<()> {
     for (t, sub, staged, done, running) in out.timeline.iter().step_by(8) {
         println!("  {:>6.1}  {:>9}  {:>6}  {:>9}  {:>7}", t / 60.0, sub, staged, done, running);
     }
-    anyhow::ensure!(out.submitted == out.completed, "tasks were lost!");
+    balsam::ensure!(out.submitted == out.completed, "tasks were lost!");
     println!("\nNO TASKS LOST — durable state + heartbeat recovery held under faults");
     Ok(())
 }

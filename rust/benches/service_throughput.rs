@@ -11,6 +11,7 @@
 //! `BENCH_service.json` (override the path with `BENCH_OUT`) so the perf
 //! trajectory is tracked across PRs.
 
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -18,7 +19,7 @@ use std::time::{Duration, Instant};
 use balsam::service::api::{ApiConn, ApiRequest, JobCreate};
 use balsam::service::http_gw::{serve_with, HttpConn};
 use balsam::service::models::{JobId, JobState, SiteId};
-use balsam::service::ServiceCore;
+use balsam::service::{PersistMode, ServiceCore};
 use balsam::util::json::Json;
 
 const SITES: usize = 4;
@@ -26,13 +27,22 @@ const CLIENTS: usize = 8;
 
 struct PassResult {
     workers: usize,
+    persist: &'static str,
     reqs: u64,
     secs: f64,
     reqs_per_s: f64,
 }
 
-fn run_pass(workers: usize, secs: f64) -> PassResult {
-    let svc = Arc::new(ServiceCore::new(b"bench"));
+fn run_pass(workers: usize, secs: f64, wal_dir: Option<PathBuf>) -> PassResult {
+    let persist = if wal_dir.is_some() { "wal" } else { "ephemeral" };
+    let mode = match &wal_dir {
+        Some(dir) => {
+            let _ = std::fs::remove_dir_all(dir);
+            PersistMode::Wal { dir: dir.clone(), snapshot_every: 4096 }
+        }
+        None => PersistMode::Ephemeral,
+    };
+    let svc = Arc::new(ServiceCore::with_persist(b"bench", mode).expect("open store"));
     let tok = svc.admin_token();
     let sites: Vec<SiteId> = (0..SITES)
         .map(|i| {
@@ -119,7 +129,10 @@ fn run_pass(workers: usize, secs: f64) -> PassResult {
     let dt = t0.elapsed().as_secs_f64();
     let n = reqs.load(Ordering::Relaxed);
     server.stop();
-    PassResult { workers, reqs: n, secs: dt, reqs_per_s: n as f64 / dt }
+    if let Some(dir) = wal_dir {
+        let _ = std::fs::remove_dir_all(dir);
+    }
+    PassResult { workers, persist, reqs: n, secs: dt, reqs_per_s: n as f64 / dt }
 }
 
 fn main() {
@@ -132,7 +145,7 @@ fn main() {
     );
     let mut results = Vec::new();
     for workers in [1usize, 8] {
-        let r = run_pass(workers, secs);
+        let r = run_pass(workers, secs, None);
         println!(
             "gateway workers {:>2}: {:>7} reqs in {:.2}s  ->  {:>8.0} req/s",
             r.workers, r.reqs, r.secs, r.reqs_per_s
@@ -141,6 +154,19 @@ fn main() {
     }
     let speedup = results[1].reqs_per_s / results[0].reqs_per_s.max(1e-9);
     println!("aggregate speedup at 8 workers vs 1: {speedup:.2}x");
+
+    // Durability tax: the same 8-worker traffic with the per-shard WAL on.
+    let wal_dir =
+        std::env::temp_dir().join(format!("balsam-bench-wal-{}", std::process::id()));
+    let r = run_pass(8, secs, Some(wal_dir));
+    println!(
+        "gateway workers  8 (wal): {:>7} reqs in {:.2}s  ->  {:>8.0} req/s  ({:.0}% of ephemeral)",
+        r.reqs,
+        r.secs,
+        r.reqs_per_s,
+        100.0 * r.reqs_per_s / results[1].reqs_per_s.max(1e-9)
+    );
+    results.push(r);
 
     let out = Json::obj(vec![
         ("bench", Json::str("service_throughput")),
@@ -156,6 +182,7 @@ fn main() {
                     .map(|r| {
                         Json::obj(vec![
                             ("gateway_workers", Json::num(r.workers as f64)),
+                            ("persist", Json::str(r.persist)),
                             ("reqs", Json::num(r.reqs as f64)),
                             ("secs", Json::num(r.secs)),
                             ("reqs_per_s", Json::num(r.reqs_per_s)),

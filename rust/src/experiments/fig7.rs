@@ -119,7 +119,7 @@ pub fn run(fast: bool, seed: u64) -> crate::Result<()> {
         out.completed,
         if out.submitted == out.completed { "NO TASKS LOST (paper §4.4)" } else { "TASKS MISSING!" }
     );
-    anyhow::ensure!(out.submitted == out.completed, "lost tasks under faults");
+    crate::ensure!(out.submitted == out.completed, "lost tasks under faults");
     Ok(())
 }
 

@@ -39,6 +39,6 @@ pub fn run(id: &str, fast: bool, seed: u64) -> crate::Result<()> {
             }
             Ok(())
         }
-        other => anyhow::bail!("unknown experiment '{other}' (try one of {ALL:?} or 'all')"),
+        other => crate::bail!("unknown experiment '{other}' (try one of {ALL:?} or 'all')"),
     }
 }

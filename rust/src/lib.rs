@@ -37,5 +37,5 @@ pub mod runtime;
 pub mod experiments;
 pub mod world;
 
-/// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+/// Crate-wide result alias (boxed dynamic error; see [`util::error`]).
+pub type Result<T> = util::error::Result<T>;

@@ -10,7 +10,8 @@
 
 use std::sync::Arc;
 
-use balsam::service::{http_gw, ServiceCore};
+use balsam::service::persist::DEFAULT_SNAPSHOT_EVERY;
+use balsam::service::{http_gw, PersistMode, ServiceCore};
 use balsam::util::cli::Args;
 
 fn main() {
@@ -24,7 +25,7 @@ fn main() {
             eprintln!(
                 "usage: balsam <repro|service|runtime-check|state-graph> [options]\n\
                  \n  repro <id|all> [--fast] [--seed N]   ids: {:?}\
-                 \n  service [--addr 127.0.0.1:8008]\
+                 \n  service [--addr 127.0.0.1:8008] [--persist-dir DIR] [--snapshot-every N]\
                  \n  runtime-check [--artifacts artifacts] [--model NAME]\
                  \n  state-graph",
                 balsam::experiments::ALL
@@ -47,11 +48,24 @@ fn cmd_repro(args: &Args) -> balsam::Result<()> {
 
 fn cmd_service(args: &Args) -> balsam::Result<()> {
     let addr = args.str_or("addr", "127.0.0.1:8008");
-    let svc = Arc::new(ServiceCore::new(b"balsam-demo-secret"));
+    // --persist-dir enables the durable WAL+snapshot backend: restarting
+    // with the same dir recovers all jobs/sessions/transfers/events.
+    let mode = match args.get("persist-dir") {
+        Some(dir) => PersistMode::Wal {
+            dir: dir.into(),
+            snapshot_every: args.u64_or("snapshot-every", DEFAULT_SNAPSHOT_EVERY),
+        },
+        None => PersistMode::Ephemeral,
+    };
+    let durable = matches!(mode, PersistMode::Wal { .. });
+    let svc = Arc::new(ServiceCore::with_persist(b"balsam-demo-secret", mode)?);
     let token = svc.admin_token();
     let server = http_gw::serve(svc, addr)?;
     println!("balsam service on http://{}", server.addr);
     println!("admin token: {token}");
+    if durable {
+        println!("durable store: {} (WAL + snapshots; survives restarts)", args.str_or("persist-dir", ""));
+    }
     println!("POST JSON to /api with 'authorization: Bearer <token>'. Ctrl-C to stop.");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

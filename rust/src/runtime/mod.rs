@@ -19,10 +19,9 @@ pub mod local;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context};
-
+use crate::util::error::Context;
 use crate::util::json::Json;
-use crate::Result;
+use crate::{ensure, err, Result};
 
 /// Shape/dtype signature of one model from `manifest.json`.
 #[derive(Debug, Clone)]
@@ -44,8 +43,8 @@ impl ModelSpec {
 pub fn read_manifest(dir: &Path) -> Result<Vec<ModelSpec>> {
     let text = std::fs::read_to_string(dir.join("manifest.json"))
         .with_context(|| format!("read {}/manifest.json — run `make artifacts` first", dir.display()))?;
-    let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
-    let models = j.get("models").and_then(Json::as_obj).ok_or_else(|| anyhow!("missing models"))?;
+    let j = Json::parse(&text).map_err(|e| err!("manifest parse: {e}"))?;
+    let models = j.get("models").and_then(Json::as_obj).ok_or_else(|| err!("missing models"))?;
     let mut out = Vec::new();
     for (name, m) in models {
         let io = |key: &str| -> Vec<(String, Vec<usize>)> {
@@ -92,7 +91,7 @@ impl CompiledModel {
     /// Execute with f32 inputs; returns the flattened f32 outputs in
     /// manifest order (models are lowered with `return_tuple=True`).
     pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        anyhow::ensure!(
+        ensure!(
             inputs.len() == self.spec.inputs.len(),
             "model {} expects {} inputs, got {}",
             self.spec.name,
@@ -101,7 +100,7 @@ impl CompiledModel {
         );
         for (i, data) in inputs.iter().enumerate() {
             let want = self.spec.input_len(i);
-            anyhow::ensure!(
+            ensure!(
                 data.len() == want,
                 "input {i} of {}: expected {want} elements, got {}",
                 self.spec.name,
@@ -131,7 +130,7 @@ impl CompiledModel {
 
     #[cfg(not(feature = "xla"))]
     fn execute(&self, _inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        Err(anyhow!(
+        Err(err!(
             "model {}: balsam was built without the `xla` feature; PJRT execution unavailable",
             self.spec.name
         ))
@@ -161,13 +160,13 @@ impl Runtime {
             }
             let path = dir.join(&spec.file);
             let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+                path.to_str().ok_or_else(|| err!("bad path"))?,
             )?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = client.compile(&comp)?;
             models.insert(spec.name.clone(), CompiledModel { spec, exe });
         }
-        anyhow::ensure!(!models.is_empty(), "no models loaded from {}", dir.display());
+        ensure!(!models.is_empty(), "no models loaded from {}", dir.display());
         Ok(Runtime { client, models, artifacts_dir: dir.to_path_buf() })
     }
 
@@ -177,7 +176,7 @@ impl Runtime {
     pub fn load(dir: impl AsRef<Path>, _names: &[&str]) -> Result<Runtime> {
         let dir = dir.as_ref();
         let _ = read_manifest(dir)?;
-        Err(anyhow!(
+        Err(err!(
             "balsam was built without the `xla` feature; enable it (with a vendored xla crate) \
              to execute AOT artifacts from {}",
             dir.display()
@@ -185,7 +184,7 @@ impl Runtime {
     }
 
     pub fn model(&self, name: &str) -> Result<&CompiledModel> {
-        self.models.get(name).ok_or_else(|| anyhow!("model {name} not loaded"))
+        self.models.get(name).ok_or_else(|| err!("model {name} not loaded"))
     }
 }
 

@@ -91,8 +91,8 @@ impl RealExec {
         });
         ready_rx
             .recv()
-            .map_err(|_| anyhow::anyhow!("runtime worker died"))?
-            .map_err(|e| anyhow::anyhow!("runtime init: {e}"))?;
+            .map_err(|_| crate::err!("runtime worker died"))?
+            .map_err(|e| crate::err!("runtime init: {e}"))?;
         Ok(RealExec {
             tx,
             results,

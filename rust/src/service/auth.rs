@@ -9,12 +9,9 @@
 //! JWT authentication tokens were securely generated for each Balsam
 //! site", §4.1.2).
 
-use hmac::{Hmac, Mac};
-use sha2::Sha256;
+use crate::util::sha256::{hex, hmac_sha256};
 
 use super::models::UserId;
-
-type HmacSha256 = Hmac<Sha256>;
 
 /// Issues and validates signed bearer tokens.
 #[derive(Debug, Clone)]
@@ -55,10 +52,7 @@ impl TokenAuthority {
     }
 
     fn sign(&self, payload: &str) -> String {
-        let mut mac = HmacSha256::new_from_slice(&self.secret).expect("hmac key");
-        mac.update(payload.as_bytes());
-        let out = mac.finalize().into_bytes();
-        out.iter().map(|b| format!("{b:02x}")).collect()
+        hex(&hmac_sha256(&self.secret, payload.as_bytes()))
     }
 }
 

@@ -16,6 +16,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use super::api::*;
 use super::auth::TokenAuthority;
 use super::models::*;
+use super::persist::PersistMode;
 use super::store::Store;
 
 /// Default lease: a launcher missing heartbeats for this long is presumed
@@ -34,17 +35,35 @@ pub struct ServiceCore {
 }
 
 impl ServiceCore {
+    /// Ephemeral service (state dies with the process).
     pub fn new(secret: &[u8]) -> ServiceCore {
-        let store = Store::new();
-        let admin = UserId(store.fresh_id());
-        store.insert_user(User { id: admin, name: "admin".into() });
-        ServiceCore {
+        ServiceCore::with_persist(secret, PersistMode::Ephemeral)
+            .expect("ephemeral store cannot fail to open")
+    }
+
+    /// Service with an explicit durability mode. In [`PersistMode::Wal`]
+    /// the store is recovered from `dir` before serving: jobs, sessions,
+    /// transfer items, batch jobs, the event log and the id / sequence
+    /// counters all survive process death (the paper's PostgreSQL role),
+    /// and the recovered admin identity keeps previously issued tokens
+    /// valid as long as the signing secret is unchanged.
+    pub fn with_persist(secret: &[u8], mode: PersistMode) -> crate::Result<ServiceCore> {
+        let store = Store::open(&mode)?;
+        let admin = match store.user_named("admin") {
+            Some(id) => id,
+            None => {
+                let id = UserId(store.fresh_id());
+                store.insert_user(User { id, name: "admin".into() });
+                id
+            }
+        };
+        Ok(ServiceCore {
             store,
             auth: TokenAuthority::new(secret),
             admin,
             lease_timeout_s: DEFAULT_LEASE_TIMEOUT_S,
             calls: AtomicU64::new(0),
-        }
+        })
     }
 
     /// Issue a bearer token for an existing user.

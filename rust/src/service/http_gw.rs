@@ -10,31 +10,18 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::util::httpd::{self, Request, Response, Server};
-use crate::util::json::Json;
+use crate::util::json::{kv_from_json, kv_to_json, u64s_from_json, Json};
 
 use super::api::*;
 use super::core::ServiceCore;
 use super::models::*;
 
 // ---------------------------------------------------------------------------
-// JSON codecs
+// JSON codecs — row and enum encodings live on the model types
+// (`super::models`), shared with the WAL persistence layer; this module
+// adds only the request/response envelope codecs plus lenient enum
+// decoders for wire tolerance.
 // ---------------------------------------------------------------------------
-
-fn kv_to_json(kv: &[(String, String)]) -> Json {
-    Json::Arr(kv.iter().map(|(k, v)| Json::arr([Json::str(k.clone()), Json::str(v.clone())])).collect())
-}
-
-fn kv_from_json(j: &Json) -> Vec<(String, String)> {
-    j.as_arr()
-        .map(|a| {
-            a.iter()
-                .filter_map(|p| {
-                    Some((p.idx(0)?.as_str()?.to_string(), p.idx(1)?.as_str()?.to_string()))
-                })
-                .collect()
-        })
-        .unwrap_or_default()
-}
 
 fn xfers_to_json(xs: &[(String, u64)]) -> Json {
     Json::Arr(xs.iter().map(|(r, s)| Json::arr([Json::str(r.clone()), Json::num(*s as f64)])).collect())
@@ -54,87 +41,22 @@ fn ids_to_json<T: Copy>(ids: &[T], f: impl Fn(T) -> u64) -> Json {
     Json::Arr(ids.iter().map(|&i| Json::num(f(i) as f64)).collect())
 }
 
-fn u64s_from_json(j: &Json) -> Vec<u64> {
-    j.as_arr().map(|a| a.iter().filter_map(Json::as_u64).collect()).unwrap_or_default()
-}
-
-fn dir_name(d: Direction) -> &'static str {
-    match d {
-        Direction::In => "in",
-        Direction::Out => "out",
-    }
-}
-
+// Lenient wire decoders: unknown names fall back to a safe default
+// rather than erroring (strict paths use `T::from_name` directly).
 fn dir_from(s: &str) -> Direction {
-    if s == "out" {
-        Direction::Out
-    } else {
-        Direction::In
-    }
-}
-
-fn tstate_name(s: TransferState) -> &'static str {
-    match s {
-        TransferState::Pending => "pending",
-        TransferState::Active => "active",
-        TransferState::Done => "done",
-        TransferState::Error => "error",
-    }
+    Direction::from_name(s).unwrap_or(Direction::In)
 }
 
 fn tstate_from(s: &str) -> TransferState {
-    match s {
-        "active" => TransferState::Active,
-        "done" => TransferState::Done,
-        "error" => TransferState::Error,
-        _ => TransferState::Pending,
-    }
-}
-
-/// Strict variant: unknown names are an error, not Pending.
-fn tstate_from_strict(s: &str) -> Option<TransferState> {
-    match s {
-        "pending" => Some(TransferState::Pending),
-        "active" => Some(TransferState::Active),
-        "done" => Some(TransferState::Done),
-        "error" => Some(TransferState::Error),
-        _ => None,
-    }
-}
-
-fn bstate_name(s: BatchJobState) -> &'static str {
-    match s {
-        BatchJobState::Pending => "pending",
-        BatchJobState::Queued => "queued",
-        BatchJobState::Running => "running",
-        BatchJobState::Finished => "finished",
-        BatchJobState::Deleted => "deleted",
-    }
+    TransferState::from_name(s).unwrap_or(TransferState::Pending)
 }
 
 fn bstate_from(s: &str) -> BatchJobState {
-    match s {
-        "queued" => BatchJobState::Queued,
-        "running" => BatchJobState::Running,
-        "finished" => BatchJobState::Finished,
-        "deleted" => BatchJobState::Deleted,
-        _ => BatchJobState::Pending,
-    }
-}
-
-fn mode_name(m: JobMode) -> &'static str {
-    match m {
-        JobMode::Mpi => "mpi",
-        JobMode::Serial => "serial",
-    }
+    BatchJobState::from_name(s).unwrap_or(BatchJobState::Pending)
 }
 
 fn mode_from(s: &str) -> JobMode {
-    if s == "serial" {
-        JobMode::Serial
-    } else {
-        JobMode::Mpi
-    }
+    JobMode::from_name(s).unwrap_or(JobMode::Mpi)
 }
 
 pub fn request_to_json(req: &ApiRequest) -> Json {
@@ -235,7 +157,7 @@ pub fn request_to_json(req: &ApiRequest) -> Json {
             ("site", Json::num(site.0 as f64)),
             ("num_nodes", Json::num(*num_nodes as f64)),
             ("wall_time_s", Json::num(*wall_time_s)),
-            ("mode", Json::str(mode_name(*mode))),
+            ("mode", Json::str(mode.name())),
             ("queue", Json::str(queue.clone())),
             ("project", Json::str(project.clone())),
         ]),
@@ -247,19 +169,19 @@ pub fn request_to_json(req: &ApiRequest) -> Json {
         UpdateBatchJob { id, state, local_id } => Json::obj(vec![
             ("type", Json::str("UpdateBatchJob")),
             ("id", Json::num(id.0 as f64)),
-            ("state", Json::str(bstate_name(*state))),
+            ("state", Json::str(state.name())),
             ("local_id", local_id.map(|l| Json::num(l as f64)).unwrap_or(Json::Null)),
         ]),
         PendingTransferItems { site, direction, limit } => Json::obj(vec![
             ("type", Json::str("PendingTransferItems")),
             ("site", Json::num(site.0 as f64)),
-            ("direction", Json::str(dir_name(*direction))),
+            ("direction", Json::str(direction.name())),
             ("limit", Json::num(*limit as f64)),
         ]),
         UpdateTransferItems { ids, state, task_id } => Json::obj(vec![
             ("type", Json::str("UpdateTransferItems")),
             ("ids", ids_to_json(ids, |i| i.0)),
-            ("state", Json::str(tstate_name(*state))),
+            ("state", Json::str(state.name())),
             ("task_id", task_id.map(|t| Json::num(t.0 as f64)).unwrap_or(Json::Null)),
         ]),
         SyncTransferItems { updates } => Json::obj(vec![
@@ -272,7 +194,7 @@ pub fn request_to_json(req: &ApiRequest) -> Json {
                         .map(|(id, st, task)| {
                             Json::arr([
                                 Json::num(id.0 as f64),
-                                Json::str(tstate_name(*st)),
+                                Json::str(st.name()),
                                 task.map(|t| Json::num(t.0 as f64)).unwrap_or(Json::Null),
                             ])
                         })
@@ -453,7 +375,7 @@ pub fn request_from_json(j: &Json) -> Result<ApiRequest, String> {
                     let state = u
                         .idx(1)
                         .and_then(Json::as_str)
-                        .and_then(tstate_from_strict)
+                        .and_then(TransferState::from_name)
                         .ok_or("SyncTransferItems update: bad state")?;
                     let task = u.idx(2).and_then(Json::as_u64).map(XferTaskId);
                     updates.push((TransferItemId(id), state, task));
@@ -469,130 +391,6 @@ pub fn request_from_json(j: &Json) -> Result<ApiRequest, String> {
     })
 }
 
-fn job_to_json(job: &Job) -> Json {
-    Json::obj(vec![
-        ("id", Json::num(job.id.0 as f64)),
-        ("site_id", Json::num(job.site_id.0 as f64)),
-        ("app_id", Json::num(job.app_id.0 as f64)),
-        ("state", Json::str(job.state.name())),
-        ("params", kv_to_json(&job.params)),
-        ("tags", kv_to_json(&job.tags)),
-        ("num_nodes", Json::num(job.num_nodes as f64)),
-        ("workload", Json::str(job.workload.clone())),
-        ("parents", ids_to_json(&job.parents, |p| p.0)),
-        ("attempts", Json::num(job.attempts as f64)),
-        ("max_attempts", Json::num(job.max_attempts as f64)),
-        ("session", job.session.map(|s| Json::num(s.0 as f64)).unwrap_or(Json::Null)),
-        ("created_at", Json::num(job.created_at)),
-    ])
-}
-
-fn job_from_json(j: &Json) -> Job {
-    Job {
-        id: JobId(j.get("id").and_then(Json::as_u64).unwrap_or(0)),
-        site_id: SiteId(j.get("site_id").and_then(Json::as_u64).unwrap_or(0)),
-        app_id: AppId(j.get("app_id").and_then(Json::as_u64).unwrap_or(0)),
-        state: j
-            .get("state")
-            .and_then(Json::as_str)
-            .and_then(JobState::from_name)
-            .unwrap_or(JobState::Created),
-        params: j.get("params").map(kv_from_json).unwrap_or_default(),
-        tags: j.get("tags").map(kv_from_json).unwrap_or_default(),
-        num_nodes: j.get("num_nodes").and_then(Json::as_u64).unwrap_or(1) as u32,
-        workload: j.get("workload").and_then(Json::as_str).unwrap_or("").into(),
-        parents: j.get("parents").map(u64s_from_json).unwrap_or_default().into_iter().map(JobId).collect(),
-        attempts: j.get("attempts").and_then(Json::as_u64).unwrap_or(0) as u32,
-        max_attempts: j.get("max_attempts").and_then(Json::as_u64).unwrap_or(3) as u32,
-        session: j.get("session").and_then(Json::as_u64).map(SessionId),
-        created_at: j.get("created_at").and_then(Json::as_f64).unwrap_or(0.0),
-    }
-}
-
-fn titem_to_json(t: &TransferItem) -> Json {
-    Json::obj(vec![
-        ("id", Json::num(t.id.0 as f64)),
-        ("job_id", Json::num(t.job_id.0 as f64)),
-        ("site_id", Json::num(t.site_id.0 as f64)),
-        ("direction", Json::str(dir_name(t.direction))),
-        ("remote", Json::str(t.remote.clone())),
-        ("size_bytes", Json::num(t.size_bytes as f64)),
-        ("state", Json::str(tstate_name(t.state))),
-        ("task_id", t.task_id.map(|x| Json::num(x.0 as f64)).unwrap_or(Json::Null)),
-    ])
-}
-
-fn titem_from_json(j: &Json) -> TransferItem {
-    TransferItem {
-        id: TransferItemId(j.get("id").and_then(Json::as_u64).unwrap_or(0)),
-        job_id: JobId(j.get("job_id").and_then(Json::as_u64).unwrap_or(0)),
-        site_id: SiteId(j.get("site_id").and_then(Json::as_u64).unwrap_or(0)),
-        direction: dir_from(j.get("direction").and_then(Json::as_str).unwrap_or("in")),
-        remote: j.get("remote").and_then(Json::as_str).unwrap_or("").into(),
-        size_bytes: j.get("size_bytes").and_then(Json::as_u64).unwrap_or(0),
-        state: tstate_from(j.get("state").and_then(Json::as_str).unwrap_or("pending")),
-        task_id: j.get("task_id").and_then(Json::as_u64).map(XferTaskId),
-    }
-}
-
-fn batchjob_to_json(b: &BatchJob) -> Json {
-    Json::obj(vec![
-        ("id", Json::num(b.id.0 as f64)),
-        ("site_id", Json::num(b.site_id.0 as f64)),
-        ("num_nodes", Json::num(b.num_nodes as f64)),
-        ("wall_time_s", Json::num(b.wall_time_s)),
-        ("mode", Json::str(mode_name(b.mode))),
-        ("queue", Json::str(b.queue.clone())),
-        ("project", Json::str(b.project.clone())),
-        ("state", Json::str(bstate_name(b.state))),
-        ("local_id", b.local_id.map(|x| Json::num(x as f64)).unwrap_or(Json::Null)),
-        ("created_at", Json::num(b.created_at)),
-        ("started_at", b.started_at.map(Json::num).unwrap_or(Json::Null)),
-        ("ended_at", b.ended_at.map(Json::num).unwrap_or(Json::Null)),
-    ])
-}
-
-fn batchjob_from_json(j: &Json) -> BatchJob {
-    BatchJob {
-        id: BatchJobId(j.get("id").and_then(Json::as_u64).unwrap_or(0)),
-        site_id: SiteId(j.get("site_id").and_then(Json::as_u64).unwrap_or(0)),
-        num_nodes: j.get("num_nodes").and_then(Json::as_u64).unwrap_or(0) as u32,
-        wall_time_s: j.get("wall_time_s").and_then(Json::as_f64).unwrap_or(0.0),
-        mode: mode_from(j.get("mode").and_then(Json::as_str).unwrap_or("mpi")),
-        queue: j.get("queue").and_then(Json::as_str).unwrap_or("").into(),
-        project: j.get("project").and_then(Json::as_str).unwrap_or("").into(),
-        state: bstate_from(j.get("state").and_then(Json::as_str).unwrap_or("pending")),
-        local_id: j.get("local_id").and_then(Json::as_u64),
-        created_at: j.get("created_at").and_then(Json::as_f64).unwrap_or(0.0),
-        started_at: j.get("started_at").and_then(Json::as_f64),
-        ended_at: j.get("ended_at").and_then(Json::as_f64),
-    }
-}
-
-fn event_to_json(e: &Event) -> Json {
-    Json::obj(vec![
-        ("seq", Json::num(e.seq as f64)),
-        ("job_id", Json::num(e.job_id.0 as f64)),
-        ("site_id", Json::num(e.site_id.0 as f64)),
-        ("ts", Json::num(e.ts)),
-        ("from", Json::str(e.from.name())),
-        ("to", Json::str(e.to.name())),
-        ("data", Json::str(e.data.clone())),
-    ])
-}
-
-fn event_from_json(j: &Json) -> Event {
-    Event {
-        seq: j.get("seq").and_then(Json::as_u64).unwrap_or(0),
-        job_id: JobId(j.get("job_id").and_then(Json::as_u64).unwrap_or(0)),
-        site_id: SiteId(j.get("site_id").and_then(Json::as_u64).unwrap_or(0)),
-        ts: j.get("ts").and_then(Json::as_f64).unwrap_or(0.0),
-        from: j.get("from").and_then(Json::as_str).and_then(JobState::from_name).unwrap_or(JobState::Created),
-        to: j.get("to").and_then(Json::as_str).and_then(JobState::from_name).unwrap_or(JobState::Created),
-        data: j.get("data").and_then(Json::as_str).unwrap_or("").into(),
-    }
-}
-
 pub fn response_to_json(resp: &ApiResponse) -> Json {
     use ApiResponse::*;
     let (ty, body) = match resp {
@@ -601,7 +399,7 @@ pub fn response_to_json(resp: &ApiResponse) -> Json {
         SiteId(x) => ("SiteId", Json::num(x.0 as f64)),
         AppId(x) => ("AppId", Json::num(x.0 as f64)),
         JobIds(x) => ("JobIds", ids_to_json(x, |i| i.0)),
-        Jobs(x) => ("Jobs", Json::Arr(x.iter().map(job_to_json).collect())),
+        Jobs(x) => ("Jobs", Json::Arr(x.iter().map(Job::to_json).collect())),
         Counts(x) => (
             "Counts",
             Json::Arr(
@@ -612,8 +410,8 @@ pub fn response_to_json(resp: &ApiResponse) -> Json {
         ),
         SessionId(x) => ("SessionId", Json::num(x.0 as f64)),
         BatchJobId(x) => ("BatchJobId", Json::num(x.0 as f64)),
-        BatchJobs(x) => ("BatchJobs", Json::Arr(x.iter().map(batchjob_to_json).collect())),
-        TransferItems(x) => ("TransferItems", Json::Arr(x.iter().map(titem_to_json).collect())),
+        BatchJobs(x) => ("BatchJobs", Json::Arr(x.iter().map(BatchJob::to_json).collect())),
+        TransferItems(x) => ("TransferItems", Json::Arr(x.iter().map(TransferItem::to_json).collect())),
         Backlog(b) => (
             "Backlog",
             Json::obj(vec![
@@ -623,7 +421,7 @@ pub fn response_to_json(resp: &ApiResponse) -> Json {
                 ("batch_nodes", Json::num(b.batch_nodes as f64)),
             ]),
         ),
-        Events(x) => ("Events", Json::Arr(x.iter().map(event_to_json).collect())),
+        Events(x) => ("Events", Json::Arr(x.iter().map(Event::to_json).collect())),
     };
     Json::obj(vec![("ok", Json::Bool(true)), ("type", Json::str(ty)), ("body", body)])
 }
@@ -644,7 +442,7 @@ pub fn response_from_json(j: &Json) -> Result<ApiResponse, ApiError> {
         "SessionId" => ApiResponse::SessionId(SessionId(u(b))),
         "BatchJobId" => ApiResponse::BatchJobId(BatchJobId(u(b))),
         "JobIds" => ApiResponse::JobIds(u64s_from_json(b).into_iter().map(JobId).collect()),
-        "Jobs" => ApiResponse::Jobs(b.as_arr().unwrap_or(&[]).iter().map(job_from_json).collect()),
+        "Jobs" => ApiResponse::Jobs(b.as_arr().unwrap_or(&[]).iter().map(Job::from_json).collect()),
         "Counts" => ApiResponse::Counts(
             b.as_arr()
                 .unwrap_or(&[])
@@ -658,10 +456,10 @@ pub fn response_from_json(j: &Json) -> Result<ApiResponse, ApiError> {
                 .collect(),
         ),
         "BatchJobs" => {
-            ApiResponse::BatchJobs(b.as_arr().unwrap_or(&[]).iter().map(batchjob_from_json).collect())
+            ApiResponse::BatchJobs(b.as_arr().unwrap_or(&[]).iter().map(BatchJob::from_json).collect())
         }
         "TransferItems" => {
-            ApiResponse::TransferItems(b.as_arr().unwrap_or(&[]).iter().map(titem_from_json).collect())
+            ApiResponse::TransferItems(b.as_arr().unwrap_or(&[]).iter().map(TransferItem::from_json).collect())
         }
         "Backlog" => ApiResponse::Backlog(Backlog {
             backlog_jobs: b.get("backlog_jobs").and_then(Json::as_u64).unwrap_or(0) as usize,
@@ -669,7 +467,7 @@ pub fn response_from_json(j: &Json) -> Result<ApiResponse, ApiError> {
             inflight_nodes: b.get("inflight_nodes").and_then(Json::as_u64).unwrap_or(0) as u32,
             batch_nodes: b.get("batch_nodes").and_then(Json::as_u64).unwrap_or(0) as u32,
         }),
-        "Events" => ApiResponse::Events(b.as_arr().unwrap_or(&[]).iter().map(event_from_json).collect()),
+        "Events" => ApiResponse::Events(b.as_arr().unwrap_or(&[]).iter().map(Event::from_json).collect()),
         other => return Err(ApiError::Transport(format!("unknown response type {other}"))),
     })
 }

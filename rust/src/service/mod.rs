@@ -15,6 +15,7 @@
 pub mod models;
 pub mod state;
 pub mod store;
+pub mod persist;
 pub mod api;
 pub mod core;
 pub mod auth;
@@ -23,3 +24,4 @@ pub mod http_gw;
 pub use api::{ApiConn, ApiError, ApiRequest, ApiResponse, JobCreate, JobFilter};
 pub use core::ServiceCore;
 pub use models::*;
+pub use persist::PersistMode;

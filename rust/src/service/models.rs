@@ -1,6 +1,13 @@
 //! The Balsam relational data model (paper §3.1, REST API schema [3]).
+//!
+//! Every row type carries a `to_json` / `from_json` codec pair: the HTTP
+//! gateway uses them for wire payloads and the persistence layer
+//! ([`super::persist`]) uses them for WAL/snapshot records, so a row
+//! always has exactly one serialized shape.
 
 use std::collections::BTreeSet;
+
+use crate::util::json::{kv_from_json, kv_to_json, u64s_from_json, Json};
 
 macro_rules! id_type {
     ($(#[$doc:meta])* $name:ident) => {
@@ -272,6 +279,360 @@ pub struct Event {
     pub data: String,
 }
 
+impl Direction {
+    pub fn name(self) -> &'static str {
+        match self {
+            Direction::In => "in",
+            Direction::Out => "out",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Direction> {
+        match s {
+            "in" => Some(Direction::In),
+            "out" => Some(Direction::Out),
+            _ => None,
+        }
+    }
+}
+
+impl TransferState {
+    pub fn name(self) -> &'static str {
+        match self {
+            TransferState::Pending => "pending",
+            TransferState::Active => "active",
+            TransferState::Done => "done",
+            TransferState::Error => "error",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<TransferState> {
+        match s {
+            "pending" => Some(TransferState::Pending),
+            "active" => Some(TransferState::Active),
+            "done" => Some(TransferState::Done),
+            "error" => Some(TransferState::Error),
+            _ => None,
+        }
+    }
+}
+
+impl BatchJobState {
+    pub fn name(self) -> &'static str {
+        match self {
+            BatchJobState::Pending => "pending",
+            BatchJobState::Queued => "queued",
+            BatchJobState::Running => "running",
+            BatchJobState::Finished => "finished",
+            BatchJobState::Deleted => "deleted",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<BatchJobState> {
+        match s {
+            "pending" => Some(BatchJobState::Pending),
+            "queued" => Some(BatchJobState::Queued),
+            "running" => Some(BatchJobState::Running),
+            "finished" => Some(BatchJobState::Finished),
+            "deleted" => Some(BatchJobState::Deleted),
+            _ => None,
+        }
+    }
+}
+
+impl JobMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobMode::Mpi => "mpi",
+            JobMode::Serial => "serial",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<JobMode> {
+        match s {
+            "mpi" => Some(JobMode::Mpi),
+            "serial" => Some(JobMode::Serial),
+            _ => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Row codecs (wire payloads + WAL/snapshot records)
+// ---------------------------------------------------------------------------
+
+fn ids_json<T: Copy>(ids: impl IntoIterator<Item = T>, f: impl Fn(T) -> u64) -> Json {
+    Json::Arr(ids.into_iter().map(|i| Json::num(f(i) as f64)).collect())
+}
+
+fn opt_num(v: Option<u64>) -> Json {
+    v.map(|x| Json::num(x as f64)).unwrap_or(Json::Null)
+}
+
+fn get_u64(j: &Json, key: &str) -> u64 {
+    j.get(key).and_then(Json::as_u64).unwrap_or(0)
+}
+
+fn get_str(j: &Json, key: &str) -> String {
+    j.get(key).and_then(Json::as_str).unwrap_or("").to_string()
+}
+
+impl User {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id.0 as f64)),
+            ("name", Json::str(self.name.clone())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> User {
+        User { id: UserId(get_u64(j, "id")), name: get_str(j, "name") }
+    }
+}
+
+impl Site {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id.0 as f64)),
+            ("owner", Json::num(self.owner.0 as f64)),
+            ("name", Json::str(self.name.clone())),
+            ("hostname", Json::str(self.hostname.clone())),
+            ("path", Json::str(self.path.clone())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Site {
+        Site {
+            id: SiteId(get_u64(j, "id")),
+            owner: UserId(get_u64(j, "owner")),
+            name: get_str(j, "name"),
+            hostname: get_str(j, "hostname"),
+            path: get_str(j, "path"),
+        }
+    }
+}
+
+impl App {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id.0 as f64)),
+            ("site_id", Json::num(self.site_id.0 as f64)),
+            ("name", Json::str(self.name.clone())),
+            ("command_template", Json::str(self.command_template.clone())),
+            (
+                "parameters",
+                Json::Arr(self.parameters.iter().map(|p| Json::str(p.clone())).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> App {
+        App {
+            id: AppId(get_u64(j, "id")),
+            site_id: SiteId(get_u64(j, "site_id")),
+            name: get_str(j, "name"),
+            command_template: get_str(j, "command_template"),
+            parameters: j
+                .get("parameters")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(|s| s.as_str().map(String::from)).collect())
+                .unwrap_or_default(),
+        }
+    }
+}
+
+impl Job {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id.0 as f64)),
+            ("site_id", Json::num(self.site_id.0 as f64)),
+            ("app_id", Json::num(self.app_id.0 as f64)),
+            ("state", Json::str(self.state.name())),
+            ("params", kv_to_json(&self.params)),
+            ("tags", kv_to_json(&self.tags)),
+            ("num_nodes", Json::num(self.num_nodes as f64)),
+            ("workload", Json::str(self.workload.clone())),
+            ("parents", ids_json(self.parents.iter().copied(), |p| p.0)),
+            ("attempts", Json::num(self.attempts as f64)),
+            ("max_attempts", Json::num(self.max_attempts as f64)),
+            ("session", opt_num(self.session.map(|s| s.0))),
+            ("created_at", Json::num(self.created_at)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Job {
+        Job {
+            id: JobId(get_u64(j, "id")),
+            site_id: SiteId(get_u64(j, "site_id")),
+            app_id: AppId(get_u64(j, "app_id")),
+            state: j
+                .get("state")
+                .and_then(Json::as_str)
+                .and_then(JobState::from_name)
+                .unwrap_or(JobState::Created),
+            params: j.get("params").map(kv_from_json).unwrap_or_default(),
+            tags: j.get("tags").map(kv_from_json).unwrap_or_default(),
+            num_nodes: j.get("num_nodes").and_then(Json::as_u64).unwrap_or(1) as u32,
+            workload: get_str(j, "workload"),
+            parents: j
+                .get("parents")
+                .map(u64s_from_json)
+                .unwrap_or_default()
+                .into_iter()
+                .map(JobId)
+                .collect(),
+            attempts: get_u64(j, "attempts") as u32,
+            max_attempts: j.get("max_attempts").and_then(Json::as_u64).unwrap_or(3) as u32,
+            session: j.get("session").and_then(Json::as_u64).map(SessionId),
+            created_at: j.get("created_at").and_then(Json::as_f64).unwrap_or(0.0),
+        }
+    }
+}
+
+impl TransferItem {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id.0 as f64)),
+            ("job_id", Json::num(self.job_id.0 as f64)),
+            ("site_id", Json::num(self.site_id.0 as f64)),
+            ("direction", Json::str(self.direction.name())),
+            ("remote", Json::str(self.remote.clone())),
+            ("size_bytes", Json::num(self.size_bytes as f64)),
+            ("state", Json::str(self.state.name())),
+            ("task_id", opt_num(self.task_id.map(|t| t.0))),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> TransferItem {
+        TransferItem {
+            id: TransferItemId(get_u64(j, "id")),
+            job_id: JobId(get_u64(j, "job_id")),
+            site_id: SiteId(get_u64(j, "site_id")),
+            direction: j
+                .get("direction")
+                .and_then(Json::as_str)
+                .and_then(Direction::from_name)
+                .unwrap_or(Direction::In),
+            remote: get_str(j, "remote"),
+            size_bytes: get_u64(j, "size_bytes"),
+            state: j
+                .get("state")
+                .and_then(Json::as_str)
+                .and_then(TransferState::from_name)
+                .unwrap_or(TransferState::Pending),
+            task_id: j.get("task_id").and_then(Json::as_u64).map(XferTaskId),
+        }
+    }
+}
+
+impl BatchJob {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id.0 as f64)),
+            ("site_id", Json::num(self.site_id.0 as f64)),
+            ("num_nodes", Json::num(self.num_nodes as f64)),
+            ("wall_time_s", Json::num(self.wall_time_s)),
+            ("mode", Json::str(self.mode.name())),
+            ("queue", Json::str(self.queue.clone())),
+            ("project", Json::str(self.project.clone())),
+            ("state", Json::str(self.state.name())),
+            ("local_id", opt_num(self.local_id)),
+            ("created_at", Json::num(self.created_at)),
+            ("started_at", self.started_at.map(Json::num).unwrap_or(Json::Null)),
+            ("ended_at", self.ended_at.map(Json::num).unwrap_or(Json::Null)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> BatchJob {
+        BatchJob {
+            id: BatchJobId(get_u64(j, "id")),
+            site_id: SiteId(get_u64(j, "site_id")),
+            num_nodes: get_u64(j, "num_nodes") as u32,
+            wall_time_s: j.get("wall_time_s").and_then(Json::as_f64).unwrap_or(0.0),
+            mode: j
+                .get("mode")
+                .and_then(Json::as_str)
+                .and_then(JobMode::from_name)
+                .unwrap_or(JobMode::Mpi),
+            queue: get_str(j, "queue"),
+            project: get_str(j, "project"),
+            state: j
+                .get("state")
+                .and_then(Json::as_str)
+                .and_then(BatchJobState::from_name)
+                .unwrap_or(BatchJobState::Pending),
+            local_id: j.get("local_id").and_then(Json::as_u64),
+            created_at: j.get("created_at").and_then(Json::as_f64).unwrap_or(0.0),
+            started_at: j.get("started_at").and_then(Json::as_f64),
+            ended_at: j.get("ended_at").and_then(Json::as_f64),
+        }
+    }
+}
+
+impl Session {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id.0 as f64)),
+            ("site_id", Json::num(self.site_id.0 as f64)),
+            ("batch_job_id", opt_num(self.batch_job_id.map(|b| b.0))),
+            ("heartbeat_at", Json::num(self.heartbeat_at)),
+            ("acquired", ids_json(self.acquired.iter().copied(), |j| j.0)),
+            ("ended", Json::Bool(self.ended)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Session {
+        Session {
+            id: SessionId(get_u64(j, "id")),
+            site_id: SiteId(get_u64(j, "site_id")),
+            batch_job_id: j.get("batch_job_id").and_then(Json::as_u64).map(BatchJobId),
+            heartbeat_at: j.get("heartbeat_at").and_then(Json::as_f64).unwrap_or(0.0),
+            acquired: j
+                .get("acquired")
+                .map(u64s_from_json)
+                .unwrap_or_default()
+                .into_iter()
+                .map(JobId)
+                .collect(),
+            ended: j.get("ended").and_then(Json::as_bool).unwrap_or(false),
+        }
+    }
+}
+
+impl Event {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seq", Json::num(self.seq as f64)),
+            ("job_id", Json::num(self.job_id.0 as f64)),
+            ("site_id", Json::num(self.site_id.0 as f64)),
+            ("ts", Json::num(self.ts)),
+            ("from", Json::str(self.from.name())),
+            ("to", Json::str(self.to.name())),
+            ("data", Json::str(self.data.clone())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Event {
+        Event {
+            seq: get_u64(j, "seq"),
+            job_id: JobId(get_u64(j, "job_id")),
+            site_id: SiteId(get_u64(j, "site_id")),
+            ts: j.get("ts").and_then(Json::as_f64).unwrap_or(0.0),
+            from: j
+                .get("from")
+                .and_then(Json::as_str)
+                .and_then(JobState::from_name)
+                .unwrap_or(JobState::Created),
+            to: j
+                .get("to")
+                .and_then(Json::as_str)
+                .and_then(JobState::from_name)
+                .unwrap_or(JobState::Created),
+            data: get_str(j, "data"),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -298,5 +659,77 @@ mod tests {
     #[test]
     fn id_display() {
         assert_eq!(JobId(42).to_string(), "42");
+    }
+
+    #[test]
+    fn row_codecs_roundtrip() {
+        let job = Job {
+            id: JobId(7),
+            site_id: SiteId(2),
+            app_id: AppId(3),
+            state: JobState::Running,
+            params: vec![("h5".into(), "x.h5".into())],
+            tags: vec![("experiment".into(), "XPCS".into())],
+            num_nodes: 4,
+            workload: "md_small".into(),
+            parents: vec![JobId(1), JobId(2)],
+            attempts: 1,
+            max_attempts: 3,
+            session: Some(SessionId(9)),
+            created_at: 1.5,
+        };
+        let back = Job::from_json(&Json::parse(&job.to_json().to_string()).unwrap());
+        assert_eq!(back.to_json().to_string(), job.to_json().to_string());
+
+        let sess = Session {
+            id: SessionId(9),
+            site_id: SiteId(2),
+            batch_job_id: Some(BatchJobId(4)),
+            heartbeat_at: 3.25,
+            acquired: [JobId(7), JobId(8)].into_iter().collect(),
+            ended: false,
+        };
+        let back = Session::from_json(&Json::parse(&sess.to_json().to_string()).unwrap());
+        assert_eq!(back.to_json().to_string(), sess.to_json().to_string());
+
+        let ev = Event {
+            seq: 12,
+            job_id: JobId(7),
+            site_id: SiteId(2),
+            ts: 4.5,
+            from: JobState::Ready,
+            to: JobState::StagedIn,
+            data: "globus".into(),
+        };
+        let back = Event::from_json(&Json::parse(&ev.to_json().to_string()).unwrap());
+        assert_eq!(back.to_json().to_string(), ev.to_json().to_string());
+    }
+
+    #[test]
+    fn enum_names_roundtrip() {
+        for d in [Direction::In, Direction::Out] {
+            assert_eq!(Direction::from_name(d.name()), Some(d));
+        }
+        for t in [
+            TransferState::Pending,
+            TransferState::Active,
+            TransferState::Done,
+            TransferState::Error,
+        ] {
+            assert_eq!(TransferState::from_name(t.name()), Some(t));
+        }
+        for b in [
+            BatchJobState::Pending,
+            BatchJobState::Queued,
+            BatchJobState::Running,
+            BatchJobState::Finished,
+            BatchJobState::Deleted,
+        ] {
+            assert_eq!(BatchJobState::from_name(b.name()), Some(b));
+        }
+        for m in [JobMode::Mpi, JobMode::Serial] {
+            assert_eq!(JobMode::from_name(m.name()), Some(m));
+        }
+        assert_eq!(Direction::from_name("sideways"), None);
     }
 }

@@ -32,6 +32,7 @@ use std::sync::{Arc, RwLock};
 
 use super::api::ApiError;
 use super::models::*;
+use super::persist::{Persist, PersistMode, WalRecord};
 use super::state;
 
 /// Read-mostly global tables: identity and topology.
@@ -309,6 +310,13 @@ impl Shard {
 
 /// All service tables + indexes, sharded by site. Mutations MUST go
 /// through the provided methods so indexes stay coherent.
+///
+/// In [`PersistMode::Wal`] every mutating method appends the touched rows
+/// (plus any events it generated) to the owning shard's write-ahead log
+/// *before releasing the shard write lock*, so log order equals apply
+/// order per shard; [`Store::open`] replays snapshot + WAL tail to
+/// rebuild shards, routing tables and the id / event-sequence counters
+/// exactly.
 #[derive(Debug, Default)]
 pub struct Store {
     next_id: AtomicU64,
@@ -316,11 +324,158 @@ pub struct Store {
     global: RwLock<Global>,
     routes: RwLock<Routes>,
     shards: RwLock<BTreeMap<SiteId, Arc<RwLock<Shard>>>>,
+    persist: Option<Arc<Persist>>,
 }
 
 impl Store {
+    /// Ephemeral (in-memory only) store.
     pub fn new() -> Store {
         Store::default()
+    }
+
+    /// Open a store in `mode`, recovering any prior durable state.
+    pub fn open(mode: &PersistMode) -> crate::Result<Store> {
+        match mode {
+            PersistMode::Ephemeral => Ok(Store::new()),
+            PersistMode::Wal { dir, snapshot_every } => {
+                let (persist, recovered) = Persist::open(dir, *snapshot_every)?;
+                let mut store = Store::new();
+                // Replay with `persist` unset: recovery must not re-log.
+                for (_key, records) in recovered {
+                    for rec in records {
+                        store.replay(rec);
+                    }
+                }
+                store.persist = Some(Arc::new(persist));
+                Ok(store)
+            }
+        }
+    }
+
+    // ----- persistence ----------------------------------------------------
+
+    /// Counters learn recovered ids: `fresh_id` must never re-issue one.
+    fn bump_id(&self, id: u64) {
+        self.next_id.fetch_max(id, Ordering::Relaxed);
+    }
+
+    /// Apply one recovered record: a row upsert (indexes + routes kept
+    /// coherent, `check_indexes`-clean by construction) or an event
+    /// append carrying its original global sequence number.
+    fn replay(&self, rec: WalRecord) {
+        match rec {
+            WalRecord::User(u) => {
+                self.bump_id(u.id.0);
+                self.global.write().unwrap().users.insert(u.id, u);
+            }
+            WalRecord::Site(s) => {
+                self.bump_id(s.id.0);
+                let id = s.id;
+                self.global.write().unwrap().sites.insert(id, s);
+                self.shards.write().unwrap().entry(id).or_default();
+            }
+            WalRecord::App(a) => {
+                self.bump_id(a.id.0);
+                self.global.write().unwrap().apps.insert(a.id, a);
+            }
+            WalRecord::Job(job) => {
+                self.bump_id(job.id.0);
+                {
+                    let mut r = self.routes.write().unwrap();
+                    if !r.job_site.contains_key(&job.id) {
+                        r.job_site.insert(job.id, job.site_id);
+                        for &p in &job.parents {
+                            r.children.entry(p).or_default().push(job.id);
+                        }
+                    }
+                }
+                let sh = self.shard_or_create(job.site_id);
+                let mut sh = sh.write().unwrap();
+                let old_state = sh.jobs.get(&job.id).map(|j| j.state);
+                if let Some(old) = old_state {
+                    if old != job.state {
+                        if let Some(set) = sh.jobs_by_state.get_mut(&old) {
+                            set.remove(&job.id);
+                        }
+                    }
+                }
+                sh.jobs_by_state.entry(job.state).or_default().insert(job.id);
+                sh.jobs.insert(job.id, job);
+            }
+            WalRecord::Session(s) => {
+                self.bump_id(s.id.0);
+                self.routes.write().unwrap().session_site.insert(s.id, s.site_id);
+                let sh = self.shard_or_create(s.site_id);
+                sh.write().unwrap().sessions.insert(s.id, s);
+            }
+            WalRecord::Batch(b) => {
+                self.bump_id(b.id.0);
+                self.routes.write().unwrap().batch_site.insert(b.id, b.site_id);
+                let sh = self.shard_or_create(b.site_id);
+                sh.write().unwrap().batch_jobs.insert(b.id, b);
+            }
+            WalRecord::Titem(t) => {
+                self.bump_id(t.id.0);
+                self.routes.write().unwrap().titem_site.insert(t.id, t.site_id);
+                let sh = self.shard_or_create(t.site_id);
+                let mut sh = sh.write().unwrap();
+                let old_key = sh.titems.get(&t.id).map(|o| (o.direction, o.state));
+                match old_key {
+                    Some(key) => {
+                        if key != (t.direction, t.state) {
+                            if let Some(set) = sh.titems_by_state.get_mut(&key) {
+                                set.remove(&t.id);
+                            }
+                        }
+                    }
+                    None => sh.titems_by_job.entry(t.job_id).or_default().push(t.id),
+                }
+                sh.titems_by_state.entry((t.direction, t.state)).or_default().insert(t.id);
+                sh.titems.insert(t.id, t);
+            }
+            WalRecord::Event(e) => {
+                self.event_seq.fetch_max(e.seq + 1, Ordering::Relaxed);
+                let sh = self.shard_or_create(e.site_id);
+                sh.write().unwrap().events.push(e);
+            }
+        }
+    }
+
+    /// Append shard-scoped records while the shard write guard is held.
+    fn wal_shard(&self, site: SiteId, sh: &Shard, records: Vec<WalRecord>) {
+        if let Some(p) = &self.persist {
+            p.append(Some(site), &records, || Self::shard_snapshot_records(sh));
+        }
+    }
+
+    /// Full compacted state of one shard (snapshot contents).
+    fn shard_snapshot_records(sh: &Shard) -> Vec<WalRecord> {
+        let mut out = Vec::new();
+        out.extend(sh.jobs.values().cloned().map(WalRecord::Job));
+        out.extend(sh.sessions.values().cloned().map(WalRecord::Session));
+        out.extend(sh.batch_jobs.values().cloned().map(WalRecord::Batch));
+        out.extend(sh.titems.values().cloned().map(WalRecord::Titem));
+        out.extend(sh.events.iter().cloned().map(WalRecord::Event));
+        out
+    }
+
+    /// Append a global-table record.
+    fn wal_global(&self, record: WalRecord) {
+        if let Some(p) = &self.persist {
+            let g = self.global.read().unwrap();
+            p.append(None, std::slice::from_ref(&record), || {
+                let mut out = Vec::new();
+                out.extend(g.users.values().cloned().map(WalRecord::User));
+                out.extend(g.sites.values().cloned().map(WalRecord::Site));
+                out.extend(g.apps.values().cloned().map(WalRecord::App));
+                out
+            });
+        }
+    }
+
+    /// Events appended to `sh` since index `ev0`, as WAL records.
+    fn event_records(sh: &Shard, ev0: usize) -> Vec<WalRecord> {
+        sh.events[ev0..].iter().cloned().map(WalRecord::Event).collect()
     }
 
     pub fn fresh_id(&self) -> u64 {
@@ -342,6 +497,10 @@ impl Store {
 
     fn all_shards(&self) -> Vec<Arc<RwLock<Shard>>> {
         self.shards.read().unwrap().values().cloned().collect()
+    }
+
+    fn all_shards_keyed(&self) -> Vec<(SiteId, Arc<RwLock<Shard>>)> {
+        self.shards.read().unwrap().iter().map(|(k, v)| (*k, v.clone())).collect()
     }
 
     fn shard_of_job(&self, id: JobId) -> Option<Arc<RwLock<Shard>>> {
@@ -367,18 +526,31 @@ impl Store {
     // ----- global tables (users / sites / apps) ---------------------------
 
     pub fn insert_user(&self, user: User) {
+        let rec = self.persist.is_some().then(|| WalRecord::User(user.clone()));
         self.global.write().unwrap().users.insert(user.id, user);
+        if let Some(rec) = rec {
+            self.wal_global(rec);
+        }
     }
 
     pub fn user_exists(&self, id: UserId) -> bool {
         self.global.read().unwrap().users.contains_key(&id)
     }
 
+    /// Lowest-id user with `name` (recovered-admin lookup on reopen).
+    pub fn user_named(&self, name: &str) -> Option<UserId> {
+        self.global.read().unwrap().users.values().find(|u| u.name == name).map(|u| u.id)
+    }
+
     /// Register a site and eagerly create its shard.
     pub fn insert_site(&self, site: Site) {
         let id = site.id;
+        let rec = self.persist.is_some().then(|| WalRecord::Site(site.clone()));
         self.global.write().unwrap().sites.insert(id, site);
         self.shards.write().unwrap().entry(id).or_default();
+        if let Some(rec) = rec {
+            self.wal_global(rec);
+        }
     }
 
     pub fn site(&self, id: SiteId) -> Option<Site> {
@@ -386,7 +558,11 @@ impl Store {
     }
 
     pub fn insert_app(&self, app: App) {
+        let rec = self.persist.is_some().then(|| WalRecord::App(app.clone()));
         self.global.write().unwrap().apps.insert(app.id, app);
+        if let Some(rec) = rec {
+            self.wal_global(rec);
+        }
     }
 
     /// Resolve a registered App by (site, name).
@@ -414,10 +590,15 @@ impl Store {
                 r.children.entry(p).or_default().push(job.id);
             }
         }
-        let sh = self.shard_or_create(job.site_id);
+        let site = job.site_id;
+        let sh = self.shard_or_create(site);
         let mut sh = sh.write().unwrap();
         sh.jobs_by_state.entry(job.state).or_default().insert(job.id);
+        let rec = self.persist.is_some().then(|| WalRecord::Job(job.clone()));
         sh.jobs.insert(job.id, job);
+        if let Some(rec) = rec {
+            self.wal_shard(site, &sh, vec![rec]);
+        }
     }
 
     pub fn job(&self, id: JobId) -> Option<Job> {
@@ -449,7 +630,16 @@ impl Store {
     /// Exposed for index property tests; the service path is [`Store::transition`].
     pub fn set_job_state(&self, id: JobId, to: JobState, ts: f64, data: &str) {
         let sh = self.shard_of_job(id).expect("set_job_state: unknown job");
-        sh.write().unwrap().set_job_state(&self.event_seq, id, to, ts, data);
+        let mut sh = sh.write().unwrap();
+        let ev0 = sh.events.len();
+        sh.set_job_state(&self.event_seq, id, to, ts, data);
+        if self.persist.is_some() && sh.events.len() > ev0 {
+            let job = sh.jobs.get(&id).expect("set_job_state: unknown job").clone();
+            let site = job.site_id;
+            let mut recs = vec![WalRecord::Job(job)];
+            recs.extend(Self::event_records(&sh, ev0));
+            self.wal_shard(site, &sh, recs);
+        }
     }
 
     /// Legality-checked transition + service-side consequences, atomic
@@ -458,7 +648,23 @@ impl Store {
     pub fn transition(&self, id: JobId, to: JobState, now: f64, data: &str) -> Result<Vec<JobId>, ApiError> {
         let sh = self.shard_of_job(id).ok_or_else(|| ApiError::NotFound(format!("job {id}")))?;
         let mut sh = sh.write().unwrap();
-        sh.transition(&self.event_seq, id, to, now, data)
+        let prior_session = sh.jobs.get(&id).and_then(|j| j.session);
+        let ev0 = sh.events.len();
+        let terminals = sh.transition(&self.event_seq, id, to, now, data)?;
+        if self.persist.is_some() {
+            let job = sh.jobs.get(&id).expect("transitioned job").clone();
+            let site = job.site_id;
+            let mut recs = vec![WalRecord::Job(job)];
+            // The consequences may have released the job from its session.
+            if let Some(sid) = prior_session {
+                if let Some(s) = sh.sessions.get(&sid) {
+                    recs.push(WalRecord::Session(s.clone()));
+                }
+            }
+            recs.extend(Self::event_records(&sh, ev0));
+            self.wal_shard(site, &sh, recs);
+        }
+        Ok(terminals)
     }
 
     /// Initial routing of a freshly inserted job: AwaitingParents while any
@@ -477,12 +683,20 @@ impl Store {
                 Some(JobState::Created) | Some(JobState::AwaitingParents) => {}
                 _ => return,
             }
+            let ev0 = sh.events.len();
             if parents_pending {
                 if st == Some(JobState::Created) {
                     sh.set_job_state(&self.event_seq, id, JobState::AwaitingParents, now, "");
                 }
             } else {
                 sh.advance_past_parents(&self.event_seq, id, now);
+            }
+            if self.persist.is_some() && sh.events.len() > ev0 {
+                let job = sh.jobs.get(&id).expect("advanced job").clone();
+                let site = job.site_id;
+                let mut recs = vec![WalRecord::Job(job)];
+                recs.extend(Self::event_records(&sh, ev0));
+                self.wal_shard(site, &sh, recs);
             }
         }
     }
@@ -493,7 +707,13 @@ impl Store {
     pub fn with_job_mut<T>(&self, id: JobId, f: impl FnOnce(&mut Job) -> T) -> Option<T> {
         let sh = self.shard_of_job(id)?;
         let mut sh = sh.write().unwrap();
-        sh.jobs.get_mut(&id).map(f)
+        let out = sh.jobs.get_mut(&id).map(f);
+        if out.is_some() && self.persist.is_some() {
+            let job = sh.jobs.get(&id).expect("mutated job").clone();
+            let site = job.site_id;
+            self.wal_shard(site, &sh, vec![WalRecord::Job(job)]);
+        }
+        out
     }
 
     /// Ids of jobs at `site` in `state` (index lookup).
@@ -587,8 +807,14 @@ impl Store {
 
     pub fn insert_session(&self, session: Session) {
         self.routes.write().unwrap().session_site.insert(session.id, session.site_id);
-        let sh = self.shard_or_create(session.site_id);
-        sh.write().unwrap().sessions.insert(session.id, session);
+        let site = session.site_id;
+        let sh = self.shard_or_create(site);
+        let mut sh = sh.write().unwrap();
+        let rec = self.persist.is_some().then(|| WalRecord::Session(session.clone()));
+        sh.sessions.insert(session.id, session);
+        if let Some(rec) = rec {
+            self.wal_shard(site, &sh, vec![rec]);
+        }
     }
 
     pub fn session(&self, id: SessionId) -> Option<Session> {
@@ -615,7 +841,13 @@ impl Store {
     pub fn with_session_mut<T>(&self, id: SessionId, f: impl FnOnce(&mut Session) -> T) -> Option<T> {
         let sh = self.shard_of_session(id)?;
         let mut sh = sh.write().unwrap();
-        sh.sessions.get_mut(&id).map(f)
+        let out = sh.sessions.get_mut(&id).map(f);
+        if out.is_some() && self.persist.is_some() {
+            let s = sh.sessions.get(&id).expect("mutated session").clone();
+            let site = s.site_id;
+            self.wal_shard(site, &sh, vec![WalRecord::Session(s)]);
+        }
+        out
     }
 
     pub fn heartbeat(&self, session: SessionId, now: f64) -> Result<(), ApiError> {
@@ -623,14 +855,21 @@ impl Store {
             .shard_of_session(session)
             .ok_or_else(|| ApiError::NotFound(format!("session {session}")))?;
         let mut sh = sh.write().unwrap();
-        let s = sh
-            .sessions
-            .get_mut(&session)
-            .ok_or_else(|| ApiError::NotFound(format!("session {session}")))?;
-        if s.ended {
-            return Err(ApiError::BadRequest(format!("session {session} ended")));
+        {
+            let s = sh
+                .sessions
+                .get_mut(&session)
+                .ok_or_else(|| ApiError::NotFound(format!("session {session}")))?;
+            if s.ended {
+                return Err(ApiError::BadRequest(format!("session {session} ended")));
+            }
+            s.heartbeat_at = now;
         }
-        s.heartbeat_at = now;
+        if self.persist.is_some() {
+            let s = sh.sessions.get(&session).expect("heartbeated session").clone();
+            let site = s.site_id;
+            self.wal_shard(site, &sh, vec![WalRecord::Session(s)]);
+        }
         Ok(())
     }
 
@@ -655,7 +894,16 @@ impl Store {
         if ended {
             return Err(ApiError::BadRequest(format!("session {session} ended")));
         }
-        Ok(sh.acquire(session, now, max_nodes, max_jobs))
+        let out = sh.acquire(session, now, max_nodes, max_jobs);
+        if self.persist.is_some() {
+            let s = sh.sessions.get(&session).expect("acquiring session").clone();
+            let site = s.site_id;
+            let mut recs = Vec::with_capacity(out.len() + 1);
+            recs.push(WalRecord::Session(s));
+            recs.extend(out.iter().cloned().map(WalRecord::Job));
+            self.wal_shard(site, &sh, recs);
+        }
+        Ok(out)
     }
 
     /// End a session, releasing its jobs and recovering running ones.
@@ -668,8 +916,26 @@ impl Store {
         if !sh.sessions.contains_key(&session) {
             return Err(ApiError::NotFound(format!("session {session}")));
         }
+        let acquired: Vec<JobId> = sh
+            .sessions
+            .get(&session)
+            .map(|s| s.acquired.iter().copied().collect())
+            .unwrap_or_default();
+        let ev0 = sh.events.len();
         let mut terminals = Vec::new();
         sh.end_session(&self.event_seq, session, now, reason, &mut terminals);
+        if self.persist.is_some() {
+            let s = sh.sessions.get(&session).expect("ended session").clone();
+            let site = s.site_id;
+            let mut recs = vec![WalRecord::Session(s)];
+            for id in &acquired {
+                if let Some(j) = sh.jobs.get(id) {
+                    recs.push(WalRecord::Job(j.clone()));
+                }
+            }
+            recs.extend(Self::event_records(&sh, ev0));
+            self.wal_shard(site, &sh, recs);
+        }
         Ok(terminals)
     }
 
@@ -677,7 +943,7 @@ impl Store {
     /// (the fault-tolerance core, §4.4). Returns newly-terminal jobs.
     pub fn expire_stale(&self, now: f64, lease_timeout_s: f64) -> Vec<JobId> {
         let mut terminals = Vec::new();
-        for shard in self.all_shards() {
+        for (site, shard) in self.all_shards_keyed() {
             let mut sh = shard.write().unwrap();
             let stale: Vec<SessionId> = sh
                 .sessions
@@ -685,8 +951,33 @@ impl Store {
                 .filter(|s| !s.ended && now - s.heartbeat_at > lease_timeout_s)
                 .map(|s| s.id)
                 .collect();
-            for sid in stale {
-                sh.end_session(&self.event_seq, sid, now, "session lease expired", &mut terminals);
+            if stale.is_empty() {
+                continue;
+            }
+            let ev0 = sh.events.len();
+            let mut touched: Vec<JobId> = Vec::new();
+            for sid in &stale {
+                if self.persist.is_some() {
+                    if let Some(s) = sh.sessions.get(sid) {
+                        touched.extend(s.acquired.iter().copied());
+                    }
+                }
+                sh.end_session(&self.event_seq, *sid, now, "session lease expired", &mut terminals);
+            }
+            if self.persist.is_some() {
+                let mut recs = Vec::new();
+                for sid in &stale {
+                    if let Some(s) = sh.sessions.get(sid) {
+                        recs.push(WalRecord::Session(s.clone()));
+                    }
+                }
+                for id in &touched {
+                    if let Some(j) = sh.jobs.get(id) {
+                        recs.push(WalRecord::Job(j.clone()));
+                    }
+                }
+                recs.extend(Self::event_records(&sh, ev0));
+                self.wal_shard(site, &sh, recs);
             }
         }
         terminals
@@ -696,8 +987,14 @@ impl Store {
 
     pub fn insert_batch_job(&self, bj: BatchJob) {
         self.routes.write().unwrap().batch_site.insert(bj.id, bj.site_id);
-        let sh = self.shard_or_create(bj.site_id);
-        sh.write().unwrap().batch_jobs.insert(bj.id, bj);
+        let site = bj.site_id;
+        let sh = self.shard_or_create(site);
+        let mut sh = sh.write().unwrap();
+        let rec = self.persist.is_some().then(|| WalRecord::Batch(bj.clone()));
+        sh.batch_jobs.insert(bj.id, bj);
+        if let Some(rec) = rec {
+            self.wal_shard(site, &sh, vec![rec]);
+        }
     }
 
     pub fn batch_job(&self, id: BatchJobId) -> Option<BatchJob> {
@@ -727,7 +1024,13 @@ impl Store {
     pub fn with_batch_job_mut<T>(&self, id: BatchJobId, f: impl FnOnce(&mut BatchJob) -> T) -> Option<T> {
         let sh = self.shard_of_batch(id)?;
         let mut sh = sh.write().unwrap();
-        sh.batch_jobs.get_mut(&id).map(f)
+        let out = sh.batch_jobs.get_mut(&id).map(f);
+        if out.is_some() && self.persist.is_some() {
+            let bj = sh.batch_jobs.get(&id).expect("mutated batch job").clone();
+            let site = bj.site_id;
+            self.wal_shard(site, &sh, vec![WalRecord::Batch(bj)]);
+        }
+        out
     }
 
     /// Scheduler-driven batch-job status sync with timestamp bookkeeping.
@@ -755,6 +1058,11 @@ impl Store {
             }
             _ => {}
         }
+        if self.persist.is_some() {
+            let row = sh.batch_jobs.get(&id).expect("updated batch job").clone();
+            let site = row.site_id;
+            self.wal_shard(site, &sh, vec![WalRecord::Batch(row)]);
+        }
         Ok(())
     }
 
@@ -762,11 +1070,16 @@ impl Store {
 
     pub fn insert_titem(&self, item: TransferItem) {
         self.routes.write().unwrap().titem_site.insert(item.id, item.site_id);
-        let sh = self.shard_or_create(item.site_id);
+        let site = item.site_id;
+        let sh = self.shard_or_create(site);
         let mut sh = sh.write().unwrap();
         sh.titems_by_state.entry((item.direction, item.state)).or_default().insert(item.id);
         sh.titems_by_job.entry(item.job_id).or_default().push(item.id);
+        let rec = self.persist.is_some().then(|| WalRecord::Titem(item.clone()));
         sh.titems.insert(item.id, item);
+        if let Some(rec) = rec {
+            self.wal_shard(site, &sh, vec![rec]);
+        }
     }
 
     pub fn titem(&self, id: TransferItemId) -> Option<TransferItem> {
@@ -841,7 +1154,13 @@ impl Store {
     /// service path is [`Store::update_titems`].
     pub fn set_titem_state(&self, id: TransferItemId, state: TransferState, task_id: Option<XferTaskId>) {
         let sh = self.shard_of_titem(id).expect("set_titem_state: unknown item");
-        sh.write().unwrap().set_titem_state(id, state, task_id);
+        let mut sh = sh.write().unwrap();
+        sh.set_titem_state(id, state, task_id);
+        if self.persist.is_some() {
+            let t = sh.titems.get(&id).expect("updated titem").clone();
+            let site = t.site_id;
+            self.wal_shard(site, &sh, vec![WalRecord::Titem(t)]);
+        }
     }
 
     /// Bulk transfer-item status sync: validate every id, apply each
@@ -864,9 +1183,24 @@ impl Store {
         for &(id, state, task_id) in updates {
             let Some(sh) = self.shard_of_titem(id) else { continue };
             let mut sh = sh.write().unwrap();
+            let ev0 = sh.events.len();
             sh.set_titem_state(id, state, task_id);
             if state == TransferState::Done {
                 sh.complete_titem(&self.event_seq, id, now, &mut terminals);
+            }
+            if self.persist.is_some() {
+                let t = sh.titems.get(&id).expect("updated titem").clone();
+                let site = t.site_id;
+                let job_id = t.job_id;
+                let mut recs = vec![WalRecord::Titem(t)];
+                // Completion may have advanced the owning job.
+                if state == TransferState::Done {
+                    if let Some(j) = sh.jobs.get(&job_id) {
+                        recs.push(WalRecord::Job(j.clone()));
+                    }
+                }
+                recs.extend(Self::event_records(&sh, ev0));
+                self.wal_shard(site, &sh, recs);
             }
         }
         Ok(terminals)
@@ -917,9 +1251,7 @@ impl Store {
 
     /// Full index-coherence check across every shard (tests/properties).
     pub fn check_indexes(&self) -> Result<(), String> {
-        let shards: Vec<(SiteId, Arc<RwLock<Shard>>)> =
-            self.shards.read().unwrap().iter().map(|(k, v)| (*k, v.clone())).collect();
-        for (site, shard) in shards {
+        for (site, shard) in self.all_shards_keyed() {
             let sh = shard.read().unwrap();
             for (state, set) in &sh.jobs_by_state {
                 for id in set {
@@ -1133,6 +1465,45 @@ mod tests {
         assert_eq!(evs[0].job_id, a);
         assert_eq!(evs[1].job_id, b);
         assert_eq!(s.events_since(1).len(), 2);
+    }
+
+    #[test]
+    fn wal_mode_survives_reopen() {
+        let dir = std::env::temp_dir().join(format!("balsam-store-wal-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mode = PersistMode::Wal { dir: dir.clone(), snapshot_every: 4 };
+        let (jobs0, evs0) = {
+            let s = Store::open(&mode).unwrap();
+            s.insert_site(Site {
+                id: SiteId(1),
+                owner: UserId(1),
+                name: "theta".into(),
+                hostname: "h".into(),
+                path: "/p".into(),
+            });
+            let a = mk_job(&s, SiteId(1), JobState::Ready);
+            let b = mk_job(&s, SiteId(1), JobState::Ready);
+            // Enough transitions to force at least one snapshot rotation.
+            s.set_job_state(a, JobState::StagedIn, 2.0, "globus");
+            s.set_job_state(a, JobState::Preprocessed, 2.5, "");
+            s.set_job_state(b, JobState::StagedIn, 3.0, "");
+            (s.jobs_snapshot(), s.events())
+        };
+        let s2 = Store::open(&mode).unwrap();
+        s2.check_indexes().unwrap();
+        let jstr = |jobs: &[Job]| -> Vec<String> { jobs.iter().map(|j| j.to_json().to_string()).collect() };
+        let estr = |evs: &[Event]| -> Vec<String> { evs.iter().map(|e| e.to_json().to_string()).collect() };
+        assert_eq!(jstr(&s2.jobs_snapshot()), jstr(&jobs0));
+        assert_eq!(estr(&s2.events()), estr(&evs0));
+        // The global event sequence continues with no gap.
+        let last = evs0.last().unwrap().seq;
+        let a = jobs0[0].id;
+        s2.set_job_state(a, JobState::Running, 4.0, "");
+        assert_eq!(s2.events().last().unwrap().seq, last + 1);
+        // Fresh ids never collide with recovered ones.
+        let max_id = jobs0.iter().map(|j| j.id.0).max().unwrap();
+        assert!(s2.fresh_id() > max_id);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,104 @@
+//! Minimal error plumbing (replaces the external `anyhow`).
+//!
+//! The crate builds with **zero registry dependencies** so that the
+//! committed `Cargo.lock` is exact and `cargo build --locked` is
+//! deterministic offline (the CI supply-chain gate). This module provides
+//! the small slice of `anyhow` the codebase actually used: a boxed
+//! dyn-error alias, `err!` / `bail!` / `ensure!` macros, and a `Context`
+//! extension trait that prefixes error messages.
+
+/// Boxed dynamic error; `?` converts any `std::error::Error` into it.
+pub type Error = Box<dyn std::error::Error + Send + Sync + 'static>;
+
+/// Crate-wide result type (re-exported as `crate::Result`).
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Build an [`Error`] from a message string.
+pub fn err_msg(s: String) -> Error {
+    s.into()
+}
+
+/// Construct an [`Error`] from a format string (anyhow's `anyhow!`).
+#[macro_export]
+macro_rules! err {
+    ($($t:tt)*) => {
+        $crate::util::error::err_msg(format!($($t)*))
+    };
+}
+
+/// Return early with a formatted error (anyhow's `bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::util::error::err_msg(format!($($t)*)))
+    };
+}
+
+/// Return early with a formatted error unless `cond` holds (anyhow's
+/// `ensure!`).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return Err($crate::util::error::err_msg(format!($($t)*)));
+        }
+    };
+}
+
+/// Message-prefixing combinators for results (anyhow's `Context`).
+pub trait Context<T> {
+    /// Prefix the error with a static message.
+    fn context<C: std::fmt::Display>(self, msg: C) -> Result<T>;
+    /// Prefix the error with a lazily built message.
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: std::fmt::Display>(self, msg: C) -> Result<T> {
+        self.map_err(|e| err_msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.map_err(|e| err_msg(format!("{}: {e}", f())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> std::io::Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "boom"))
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn run() -> Result<()> {
+            io_fail()?;
+            Ok(())
+        }
+        assert!(run().unwrap_err().to_string().contains("boom"));
+    }
+
+    #[test]
+    fn context_prefixes_message() {
+        let e = io_fail().context("open wal").unwrap_err();
+        assert_eq!(e.to_string(), "open wal: boom");
+        let e = io_fail().with_context(|| format!("shard {}", 3)).unwrap_err();
+        assert_eq!(e.to_string(), "shard 3: boom");
+    }
+
+    #[test]
+    fn macros_format() {
+        fn run(n: u32) -> Result<u32> {
+            ensure!(n < 10, "n too large: {n}");
+            if n == 7 {
+                bail!("unlucky {n}");
+            }
+            Err(err!("fell through with {n}"))
+        }
+        assert_eq!(run(12).unwrap_err().to_string(), "n too large: 12");
+        assert_eq!(run(7).unwrap_err().to_string(), "unlucky 7");
+        assert_eq!(run(1).unwrap_err().to_string(), "fell through with 1");
+    }
+}

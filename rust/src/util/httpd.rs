@@ -20,7 +20,8 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{bail, err};
 
 /// Default worker-pool size: one per available core, bounded to keep the
 /// pool sane on very small or very large hosts.
@@ -179,8 +180,8 @@ fn read_request<R: BufRead>(reader: &mut R) -> Result<Request> {
     let mut line = String::new();
     reader.read_line(&mut line)?;
     let mut parts = line.split_whitespace();
-    let method = parts.next().ok_or_else(|| anyhow!("empty request line"))?.to_string();
-    let path = parts.next().ok_or_else(|| anyhow!("missing path"))?.to_string();
+    let method = parts.next().ok_or_else(|| err!("empty request line"))?.to_string();
+    let path = parts.next().ok_or_else(|| err!("missing path"))?.to_string();
     let version = parts.next().unwrap_or("");
     if !version.starts_with("HTTP/1.") {
         bail!("unsupported version {version:?}");
@@ -246,7 +247,7 @@ pub fn request(
         .split_whitespace()
         .nth(1)
         .and_then(|s| s.parse().ok())
-        .ok_or_else(|| anyhow!("bad status line {status_line:?}"))?;
+        .ok_or_else(|| err!("bad status line {status_line:?}"))?;
     let mut content_len: Option<usize> = None;
     loop {
         let mut h = String::new();

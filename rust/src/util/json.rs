@@ -321,6 +321,29 @@ impl fmt::Display for Json {
     }
 }
 
+/// Encode a key/value list as `[[k, v], ...]` (wire + WAL row helper).
+pub fn kv_to_json(kv: &[(String, String)]) -> Json {
+    Json::Arr(kv.iter().map(|(k, v)| Json::arr([Json::str(k.clone()), Json::str(v.clone())])).collect())
+}
+
+/// Decode `[[k, v], ...]`; malformed pairs are dropped.
+pub fn kv_from_json(j: &Json) -> Vec<(String, String)> {
+    j.as_arr()
+        .map(|a| {
+            a.iter()
+                .filter_map(|p| {
+                    Some((p.idx(0)?.as_str()?.to_string(), p.idx(1)?.as_str()?.to_string()))
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// Decode `[n, ...]` as u64s; non-numbers are dropped.
+pub fn u64s_from_json(j: &Json) -> Vec<u64> {
+    j.as_arr().map(|a| a.iter().filter_map(Json::as_u64).collect()).unwrap_or_default()
+}
+
 fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
     write!(f, "\"")?;
     for c in s.chars() {

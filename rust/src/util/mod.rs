@@ -1,9 +1,11 @@
 //! From-scratch substrate utilities.
 //!
-//! The build environment ships only the `xla` crate's dependency closure,
-//! so everything a production coordinator would normally pull from the
-//! ecosystem (PRNG, stats, JSON, YAML config, CLI parsing, HTTP transport,
-//! property testing) is implemented — and unit-tested — here.
+//! The crate builds with zero registry dependencies (the committed
+//! `Cargo.lock` is exact; CI asserts `cargo build --locked`), so
+//! everything a production coordinator would normally pull from the
+//! ecosystem (PRNG, stats, JSON, YAML config, CLI parsing, HTTP
+//! transport, SHA-256/HMAC, error plumbing, property testing) is
+//! implemented — and unit-tested — here.
 
 pub mod rng;
 pub mod stats;
@@ -12,3 +14,5 @@ pub mod yamlish;
 pub mod cli;
 pub mod check;
 pub mod httpd;
+pub mod error;
+pub mod sha256;

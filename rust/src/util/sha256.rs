@@ -1,0 +1,251 @@
+//! SHA-256 + HMAC-SHA256 (replaces the external `sha2`/`hmac` crates).
+//!
+//! Written against FIPS 180-4. The round constants are not transcribed:
+//! they are *derived at compile time* from their definition (the first 32
+//! fractional bits of the square/cube roots of the first 64 primes) with
+//! exact integer root extraction, then spot-checked against the published
+//! values in tests alongside the standard known-answer vectors.
+
+/// First 64 primes (K is derived from all 64, H from the first 8).
+const PRIMES: [u128; 64] = [
+    2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47, 53, 59, 61, 67, 71, 73, 79, 83, 89,
+    97, 101, 103, 107, 109, 113, 127, 131, 137, 139, 149, 151, 157, 163, 167, 173, 179, 181, 191,
+    193, 197, 199, 211, 223, 227, 229, 233, 239, 241, 251, 257, 263, 269, 271, 277, 281, 283, 293,
+    307, 311,
+];
+
+/// First 32 fractional bits of the e-th root of `p`: the low 32 bits of
+/// floor(p^(1/e) * 2^32), computed exactly by binary search on
+/// x^e <= p << (32*e).
+const fn root_frac(p: u128, e: u32) -> u32 {
+    let target = p << (32 * e);
+    let mut lo: u128 = 0;
+    let mut hi: u128 = 1 << 40;
+    while lo < hi {
+        let mid = (lo + hi + 1) / 2;
+        let mut pw: u128 = 1;
+        let mut i = 0;
+        while i < e {
+            pw *= mid;
+            i += 1;
+        }
+        if pw <= target {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    lo as u32
+}
+
+const fn k_table() -> [u32; 64] {
+    let mut k = [0u32; 64];
+    let mut i = 0;
+    while i < 64 {
+        k[i] = root_frac(PRIMES[i], 3);
+        i += 1;
+    }
+    k
+}
+
+const fn h_table() -> [u32; 8] {
+    let mut h = [0u32; 8];
+    let mut i = 0;
+    while i < 8 {
+        h[i] = root_frac(PRIMES[i], 2);
+        i += 1;
+    }
+    h
+}
+
+const K: [u32; 64] = k_table();
+const H0: [u32; 8] = h_table();
+
+/// Streaming SHA-256.
+pub struct Sha256 {
+    state: [u32; 8],
+    buf: [u8; 64],
+    buf_len: usize,
+    total: u64,
+}
+
+impl Default for Sha256 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sha256 {
+    pub fn new() -> Sha256 {
+        Sha256 { state: H0, buf: [0; 64], buf_len: 0, total: 0 }
+    }
+
+    pub fn update(&mut self, mut data: &[u8]) {
+        self.total = self.total.wrapping_add(data.len() as u64);
+        if self.buf_len > 0 {
+            let take = (64 - self.buf_len).min(data.len());
+            self.buf[self.buf_len..self.buf_len + take].copy_from_slice(&data[..take]);
+            self.buf_len += take;
+            data = &data[take..];
+            if self.buf_len == 64 {
+                let block = self.buf;
+                self.compress(&block);
+                self.buf_len = 0;
+            }
+        }
+        while data.len() >= 64 {
+            let mut block = [0u8; 64];
+            block.copy_from_slice(&data[..64]);
+            self.compress(&block);
+            data = &data[64..];
+        }
+        if !data.is_empty() {
+            self.buf[..data.len()].copy_from_slice(data);
+            self.buf_len = data.len();
+        }
+    }
+
+    pub fn finalize(mut self) -> [u8; 32] {
+        let bits = self.total.wrapping_mul(8);
+        self.update(&[0x80]);
+        while self.buf_len != 56 {
+            self.update(&[0]);
+        }
+        self.update(&bits.to_be_bytes());
+        let mut out = [0u8; 32];
+        for (i, w) in self.state.iter().enumerate() {
+            out[i * 4..i * 4 + 4].copy_from_slice(&w.to_be_bytes());
+        }
+        out
+    }
+
+    fn compress(&mut self, block: &[u8; 64]) {
+        let mut w = [0u32; 64];
+        for (i, chunk) in block.chunks_exact(4).enumerate() {
+            w[i] = u32::from_be_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        for i in 16..64 {
+            let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+            let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+            w[i] = w[i - 16].wrapping_add(s0).wrapping_add(w[i - 7]).wrapping_add(s1);
+        }
+        let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut h] = self.state;
+        for i in 0..64 {
+            let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+            let ch = (e & f) ^ (!e & g);
+            let t1 = h.wrapping_add(s1).wrapping_add(ch).wrapping_add(K[i]).wrapping_add(w[i]);
+            let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+            let maj = (a & b) ^ (a & c) ^ (b & c);
+            let t2 = s0.wrapping_add(maj);
+            h = g;
+            g = f;
+            f = e;
+            e = d.wrapping_add(t1);
+            d = c;
+            c = b;
+            b = a;
+            a = t1.wrapping_add(t2);
+        }
+        let add = [a, b, c, d, e, f, g, h];
+        for (s, v) in self.state.iter_mut().zip(add) {
+            *s = s.wrapping_add(v);
+        }
+    }
+}
+
+/// One-shot SHA-256.
+pub fn sha256(data: &[u8]) -> [u8; 32] {
+    let mut h = Sha256::new();
+    h.update(data);
+    h.finalize()
+}
+
+/// HMAC-SHA256 (RFC 2104 with a 64-byte block).
+pub fn hmac_sha256(key: &[u8], msg: &[u8]) -> [u8; 32] {
+    let mut k = [0u8; 64];
+    if key.len() > 64 {
+        k[..32].copy_from_slice(&sha256(key));
+    } else {
+        k[..key.len()].copy_from_slice(key);
+    }
+    let ipad: [u8; 64] = std::array::from_fn(|i| k[i] ^ 0x36);
+    let opad: [u8; 64] = std::array::from_fn(|i| k[i] ^ 0x5c);
+    let mut inner = Sha256::new();
+    inner.update(&ipad);
+    inner.update(msg);
+    let ih = inner.finalize();
+    let mut outer = Sha256::new();
+    outer.update(&opad);
+    outer.update(&ih);
+    outer.finalize()
+}
+
+/// Lowercase hex encoding.
+pub fn hex(bytes: &[u8]) -> String {
+    const DIGITS: &[u8; 16] = b"0123456789abcdef";
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push(DIGITS[(b >> 4) as usize] as char);
+        s.push(DIGITS[(b & 0xf) as usize] as char);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_constants_match_published_values() {
+        // FIPS 180-4 §4.2.2 / §5.3.3 spot checks.
+        assert_eq!(H0[0], 0x6a09e667);
+        assert_eq!(H0[7], 0x5be0cd19);
+        assert_eq!(K[0], 0x428a2f98);
+        assert_eq!(K[63], 0xc67178f2);
+    }
+
+    #[test]
+    fn known_answer_vectors() {
+        assert_eq!(
+            hex(&sha256(b"abc")),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        assert_eq!(
+            hex(&sha256(b"")),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+    }
+
+    #[test]
+    fn streaming_equals_one_shot() {
+        let data: Vec<u8> = (0u32..300).map(|i| (i * 7 + 3) as u8).collect();
+        let oneshot = sha256(&data);
+        let mut h = Sha256::new();
+        for b in &data {
+            h.update(&[*b]);
+        }
+        assert_eq!(h.finalize(), oneshot);
+        // Chunk sizes straddling the block boundary.
+        let mut h = Sha256::new();
+        h.update(&data[..63]);
+        h.update(&data[63..65]);
+        h.update(&data[65..]);
+        assert_eq!(h.finalize(), oneshot);
+    }
+
+    #[test]
+    fn hmac_rfc4231_case_1() {
+        let key = [0x0b_u8; 20];
+        assert_eq!(
+            hex(&hmac_sha256(&key, b"Hi There")),
+            "b0344c61d8db38535ca8afceaf0bf12b881dc200c9833da726e9376c2e32cff7"
+        );
+    }
+
+    #[test]
+    fn hmac_long_key_is_hashed_first() {
+        let long = [0xaa_u8; 100];
+        assert_eq!(hmac_sha256(&long, b"m"), hmac_sha256(&sha256(&long), b"m"));
+        assert_ne!(hmac_sha256(b"k1", b"m"), hmac_sha256(b"k2", b"m"));
+    }
+}
