@@ -4,23 +4,29 @@
 Usage: bench_trend.py <baseline.json> <current.json> [--max-drop 0.30]
 
 Compares the peak ephemeral req/s of the current bench run against the
-previous run's artifact (restored from the actions cache). Fails the job
-on a regression larger than --max-drop; a missing or unreadable baseline
-is tolerated (first run on a branch, expired cache).
+previous run's artifact (restored from the actions cache), tracked **per
+transport** ("per-request" and "keepalive") so a regression in one mode
+cannot hide behind the other's headline number. Transports present in
+only one of the two records are reported but not gated (e.g. the first
+run after the keep-alive transport landed). Fails the job on a regression
+larger than --max-drop; a missing or unreadable baseline is tolerated
+(first run on a branch, expired cache).
 """
 import json
 import sys
 
 
-def peak_reqs_per_s(doc):
-    rates = [
-        r["reqs_per_s"]
-        for r in doc.get("results", [])
-        if r.get("persist", "ephemeral") == "ephemeral"
-    ]
-    if not rates:
+def peaks_by_transport(doc):
+    """Peak ephemeral req/s keyed by transport mode."""
+    peaks = {}
+    for r in doc.get("results", []):
+        if r.get("persist", "ephemeral") != "ephemeral":
+            continue
+        t = r.get("transport", "per-request")
+        peaks[t] = max(peaks.get(t, 0.0), r["reqs_per_s"])
+    if not peaks:
         raise ValueError("no ephemeral results in bench record")
-    return max(rates)
+    return peaks
 
 
 def main(argv):
@@ -34,23 +40,32 @@ def main(argv):
 
     try:
         with open(baseline_path) as f:
-            baseline = peak_reqs_per_s(json.load(f))
+            baseline = peaks_by_transport(json.load(f))
     except (OSError, ValueError, KeyError) as e:
         print(f"no usable baseline ({e}); skipping trend check")
         return 0
 
     with open(current_path) as f:
-        current = peak_reqs_per_s(json.load(f))
+        current = peaks_by_transport(json.load(f))
 
-    delta = (current - baseline) / baseline if baseline > 0 else 0.0
-    print(f"baseline {baseline:.0f} req/s -> current {current:.0f} req/s ({delta:+.1%})")
-    if delta < -max_drop:
-        print(
-            f"::error::service throughput regressed {-delta:.1%} "
-            f"(gate: {max_drop:.0%}) — see BENCH_service.json"
-        )
-        return 1
-    return 0
+    failed = False
+    for transport in sorted(set(baseline) | set(current)):
+        base, cur = baseline.get(transport), current.get(transport)
+        if base is None:
+            print(f"{transport}: new transport at {cur:.0f} req/s (no baseline; not gated)")
+            continue
+        if cur is None:
+            print(f"{transport}: in baseline ({base:.0f} req/s) but missing now; not gated")
+            continue
+        delta = (cur - base) / base if base > 0 else 0.0
+        print(f"{transport}: baseline {base:.0f} req/s -> current {cur:.0f} req/s ({delta:+.1%})")
+        if delta < -max_drop:
+            print(
+                f"::error::{transport} throughput regressed {-delta:.1%} "
+                f"(gate: {max_drop:.0%}) — see BENCH_service.json"
+            )
+            failed = True
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":

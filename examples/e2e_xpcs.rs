@@ -24,7 +24,7 @@ use balsam::metrics::{job_table, stage_durations, summarize_stage};
 use balsam::runtime::local::{LocalResources, LoopbackTransfer};
 use balsam::runtime::real::RealExec;
 use balsam::service::api::{ApiConn, ApiRequest, JobCreate};
-use balsam::service::http_gw::{serve, HttpConn};
+use balsam::service::http_gw::HttpConn;
 use balsam::service::models::JobState;
 use balsam::service::ServiceCore;
 use balsam::site::agent::SiteAgent;
@@ -47,7 +47,15 @@ fn main() -> balsam::Result<()> {
     // --- central service over real sockets -------------------------------
     let svc = Arc::new(ServiceCore::new(b"e2e-secret"));
     let token = svc.admin_token();
-    let server = serve(svc.clone(), "127.0.0.1:0")?;
+    // A keep-alive connection pins a gateway worker while it lives; this
+    // driver holds 4 persistent connections (3 site agents + 1 client), so
+    // size the pool explicitly instead of trusting the core count.
+    let server = balsam::service::http_gw::serve_with(
+        svc.clone(),
+        "127.0.0.1:0",
+        8,
+        balsam::util::httpd::HttpConfig::default(),
+    )?;
     println!("service: http://{}", server.addr);
 
     // --- three sites with really-different route speeds & runtimes -------
@@ -61,7 +69,7 @@ fn main() -> balsam::Result<()> {
     let mut sites = Vec::new();
     let mut site_ids = BTreeMap::new();
     for (fac, bps, model) in site_defs {
-        let mut conn = HttpConn { addr: server.addr.clone() };
+        let mut conn = HttpConn::new(server.addr.clone());
         let site = conn
             .api(&token, ApiRequest::CreateSite {
                 name: fac.into(),
@@ -88,7 +96,7 @@ fn main() -> balsam::Result<()> {
             [("xpcs".to_string(), model.to_string())].into_iter().collect();
         sites.push(RealSite {
             agent: SiteAgent::new(cfg),
-            conn: HttpConn { addr: server.addr.clone() },
+            conn: HttpConn::new(server.addr.clone()),
             xfer: LoopbackTransfer::new(format!("/tmp/balsam-e2e/{fac}"), Some(bps)),
             sched: LocalResources::new(4),
             exec: RealExec::start_worker(
@@ -101,7 +109,7 @@ fn main() -> balsam::Result<()> {
     }
 
     // --- APS client: batched XPCS requests over HTTP, round-robin --------
-    let mut client_conn = HttpConn { addr: server.addr.clone() };
+    let mut client_conn = HttpConn::new(server.addr.clone());
     let facs: Vec<String> = site_ids.keys().cloned().collect();
     let t0 = std::time::Instant::now();
     let mut submitted = 0usize;

@@ -141,14 +141,23 @@ fn main() {
         let _ = std::hint::black_box(Json::parse(&payload).unwrap());
     });
 
-    // HTTP round trip on loopback.
+    // HTTP round trip on loopback: dial-per-request vs one persistent
+    // connection (the transport win keep-alive buys on the hot path).
+    use balsam::service::api::ApiConn;
+    use balsam::util::httpd::HttpConfig;
     let svc2 = std::sync::Arc::new(ServiceCore::new(b"bench"));
     let tok2 = svc2.admin_token();
-    let server = balsam::service::http_gw::serve(svc2, "127.0.0.1:0").unwrap();
+    let ka = HttpConfig { keep_alive: true, ..HttpConfig::default() };
+    let server =
+        balsam::service::http_gw::serve_with(svc2, "127.0.0.1:0", 4, ka.clone()).unwrap();
     let addr = server.addr.clone();
-    bench("http: API round trip (ListEvents)", 300, || {
-        let mut conn = balsam::service::http_gw::HttpConn { addr: addr.clone() };
-        use balsam::service::api::ApiConn;
+    bench("http: API round trip (new connection each)", 300, || {
+        let no_ka = HttpConfig { keep_alive: false, ..HttpConfig::default() };
+        let mut conn = balsam::service::http_gw::HttpConn::with_config(addr.clone(), no_ka);
+        let _ = std::hint::black_box(conn.api(&tok2, ApiRequest::ListEvents { since: 0 }));
+    });
+    let mut conn = balsam::service::http_gw::HttpConn::with_config(addr.clone(), ka);
+    bench("http: API round trip (keep-alive)", 300, || {
         let _ = std::hint::black_box(conn.api(&tok2, ApiRequest::ListEvents { since: 0 }));
     });
     server.stop();

@@ -3,13 +3,19 @@
 //! via `BENCH_QUICK=1` (the CI bench-smoke job).
 //!
 //! Drives N concurrent simulated launcher sessions over the HTTP gateway
-//! against the sharded service and reports aggregate req/s for 1 vs 8
-//! gateway worker threads on multi-site traffic — the paper's §4.5
-//! scalability instrument. Each launcher cycle is the bulk protocol:
-//! BulkCreateJobs -> SessionAcquire -> BulkUpdateJobState(RUNNING) ->
-//! SessionSync(RUN_DONE + POSTPROCESSED). Results are recorded in
-//! `BENCH_service.json` (override the path with `BENCH_OUT`) so the perf
-//! trajectory is tracked across PRs.
+//! against the sharded service and reports aggregate req/s — the paper's
+//! §4.5 scalability instrument. Two axes are swept:
+//!
+//! * **gateway workers** (1 vs 8): store-shard + worker-pool scaling;
+//! * **transport** (per-request connections vs HTTP/1.1 keep-alive): the
+//!   connection-persistence win — each launcher session holding one
+//!   pooled connection vs dialing per call.
+//!
+//! Each launcher cycle is the bulk protocol: BulkCreateJobs ->
+//! SessionAcquire -> BulkUpdateJobState(RUNNING) -> SessionSync(RUN_DONE +
+//! POSTPROCESSED). Results are recorded in `BENCH_service.json` (override
+//! the path with `BENCH_OUT`) so the perf trajectory is tracked across
+//! PRs; `bench_trend.py` gates on the peak req/s per transport.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -20,6 +26,7 @@ use balsam::service::api::{ApiConn, ApiRequest, JobCreate};
 use balsam::service::http_gw::{serve_with, HttpConn};
 use balsam::service::models::{JobId, JobState, SiteId};
 use balsam::service::{PersistMode, ServiceCore};
+use balsam::util::httpd::HttpConfig;
 use balsam::util::json::Json;
 
 const SITES: usize = 4;
@@ -27,13 +34,15 @@ const CLIENTS: usize = 8;
 
 struct PassResult {
     workers: usize,
+    transport: &'static str,
     persist: &'static str,
     reqs: u64,
     secs: f64,
     reqs_per_s: f64,
 }
 
-fn run_pass(workers: usize, secs: f64, wal_dir: Option<PathBuf>) -> PassResult {
+fn run_pass(workers: usize, keep_alive: bool, secs: f64, wal_dir: Option<PathBuf>) -> PassResult {
+    let transport = if keep_alive { "keepalive" } else { "per-request" };
     let persist = if wal_dir.is_some() { "wal" } else { "ephemeral" };
     let mode = match &wal_dir {
         Some(dir) => {
@@ -42,6 +51,7 @@ fn run_pass(workers: usize, secs: f64, wal_dir: Option<PathBuf>) -> PassResult {
         }
         None => PersistMode::Ephemeral,
     };
+    let http = HttpConfig { keep_alive, ..HttpConfig::default() };
     let svc = Arc::new(ServiceCore::with_persist(b"bench", mode).expect("open store"));
     let tok = svc.admin_token();
     let sites: Vec<SiteId> = (0..SITES)
@@ -64,7 +74,7 @@ fn run_pass(workers: usize, secs: f64, wal_dir: Option<PathBuf>) -> PassResult {
             site
         })
         .collect();
-    let server = serve_with(svc.clone(), "127.0.0.1:0", workers).unwrap();
+    let server = serve_with(svc.clone(), "127.0.0.1:0", workers, http.clone()).unwrap();
 
     let reqs = Arc::new(AtomicU64::new(0));
     let stop = Arc::new(AtomicBool::new(false));
@@ -76,8 +86,11 @@ fn run_pass(workers: usize, secs: f64, wal_dir: Option<PathBuf>) -> PassResult {
             let site = sites[c % SITES];
             let reqs = reqs.clone();
             let stop = stop.clone();
+            let http = http.clone();
             std::thread::spawn(move || {
-                let mut conn = HttpConn { addr };
+                // One persistent authenticated connection per launcher
+                // session (or a dial per call in per-request mode).
+                let mut conn = HttpConn::with_config(addr, http);
                 let mut api = |req: ApiRequest| {
                     reqs.fetch_add(1, Ordering::Relaxed);
                     conn.api(&tok, req)
@@ -132,7 +145,14 @@ fn run_pass(workers: usize, secs: f64, wal_dir: Option<PathBuf>) -> PassResult {
     if let Some(dir) = wal_dir {
         let _ = std::fs::remove_dir_all(dir);
     }
-    PassResult { workers, persist, reqs: n, secs: dt, reqs_per_s: n as f64 / dt }
+    PassResult { workers, transport, persist, reqs: n, secs: dt, reqs_per_s: n as f64 / dt }
+}
+
+fn print_pass(r: &PassResult) {
+    println!(
+        "workers {:>2} | {:>11} | {:>9}: {:>7} reqs in {:.2}s  ->  {:>8.0} req/s",
+        r.workers, r.transport, r.persist, r.reqs, r.secs, r.reqs_per_s
+    );
 }
 
 fn main() {
@@ -144,27 +164,27 @@ fn main() {
         if quick { ", quick" } else { "" }
     );
     let mut results = Vec::new();
-    for workers in [1usize, 8] {
-        let r = run_pass(workers, secs, None);
-        println!(
-            "gateway workers {:>2}: {:>7} reqs in {:.2}s  ->  {:>8.0} req/s",
-            r.workers, r.reqs, r.secs, r.reqs_per_s
-        );
+    // Worker scaling on the per-request transport (the historical
+    // baseline), then the keep-alive transport at 8 workers.
+    for (workers, keep_alive) in [(1usize, false), (8, false), (8, true)] {
+        let r = run_pass(workers, keep_alive, secs, None);
+        print_pass(&r);
         results.push(r);
     }
     let speedup = results[1].reqs_per_s / results[0].reqs_per_s.max(1e-9);
-    println!("aggregate speedup at 8 workers vs 1: {speedup:.2}x");
+    let ka_speedup = results[2].reqs_per_s / results[1].reqs_per_s.max(1e-9);
+    println!("aggregate speedup at 8 workers vs 1 (per-request): {speedup:.2}x");
+    println!("keep-alive speedup at 8 workers vs per-request: {ka_speedup:.2}x");
 
-    // Durability tax: the same 8-worker traffic with the per-shard WAL on.
+    // Durability tax: the same 8-worker keep-alive traffic with the
+    // per-shard WAL on.
     let wal_dir =
         std::env::temp_dir().join(format!("balsam-bench-wal-{}", std::process::id()));
-    let r = run_pass(8, secs, Some(wal_dir));
+    let r = run_pass(8, true, secs, Some(wal_dir));
+    print_pass(&r);
     println!(
-        "gateway workers  8 (wal): {:>7} reqs in {:.2}s  ->  {:>8.0} req/s  ({:.0}% of ephemeral)",
-        r.reqs,
-        r.secs,
-        r.reqs_per_s,
-        100.0 * r.reqs_per_s / results[1].reqs_per_s.max(1e-9)
+        "wal tax: {:.0}% of ephemeral keep-alive throughput",
+        100.0 * r.reqs_per_s / results[2].reqs_per_s.max(1e-9)
     );
     results.push(r);
 
@@ -182,6 +202,7 @@ fn main() {
                     .map(|r| {
                         Json::obj(vec![
                             ("gateway_workers", Json::num(r.workers as f64)),
+                            ("transport", Json::str(r.transport)),
                             ("persist", Json::str(r.persist)),
                             ("reqs", Json::num(r.reqs as f64)),
                             ("secs", Json::num(r.secs)),
@@ -192,6 +213,7 @@ fn main() {
             ),
         ),
         ("speedup_8_vs_1", Json::num(speedup)),
+        ("keepalive_speedup_8workers", Json::num(ka_speedup)),
     ]);
     let path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_service.json".to_string());
     std::fs::write(&path, out.to_string()).expect("write bench record");

@@ -38,6 +38,13 @@ pub enum Submission {
 }
 
 /// A light-source client (APS or ALS).
+///
+/// All API traffic goes through the [`ApiConn`] handed to [`Self::tick`]:
+/// in-process in simulated mode, a persistent keep-alive
+/// [`crate::service::http_gw::HttpConn`] in real-time mode — a client
+/// instance should be driven with ONE connection for its lifetime so the
+/// whole submission stream (including the per-batch Backlog polls of the
+/// shortest-backlog strategy) rides a single authenticated TCP stream.
 pub struct WorkloadClient {
     pub token: String,
     /// Light source endpoint name ("APS" | "ALS").
@@ -146,7 +153,7 @@ impl WorkloadClient {
             return;
         }
         let jobs: Vec<JobCreate> = (0..n).map(|_| self.make_job(site)).collect();
-        if let Ok(resp) = conn.api(&self.token.clone(), ApiRequest::BulkCreateJobs { jobs }) {
+        if let Ok(resp) = conn.api(&self.token, ApiRequest::BulkCreateJobs { jobs }) {
             let ids = resp.job_ids();
             self.submitted += ids.len();
             if let Some(entry) = self.per_site.iter_mut().find(|(s, _)| *s == site) {

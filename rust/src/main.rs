@@ -13,6 +13,7 @@ use std::sync::Arc;
 use balsam::service::persist::DEFAULT_SNAPSHOT_EVERY;
 use balsam::service::{http_gw, PersistMode, ServiceCore};
 use balsam::util::cli::Args;
+use balsam::util::httpd::{default_workers, HttpConfig};
 
 fn main() {
     let args = Args::from_env();
@@ -26,6 +27,8 @@ fn main() {
                 "usage: balsam <repro|service|runtime-check|state-graph> [options]\n\
                  \n  repro <id|all> [--fast] [--seed N]   ids: {:?}\
                  \n  service [--addr 127.0.0.1:8008] [--persist-dir DIR] [--snapshot-every N]\
+                 \n          [--workers N] [--no-keepalive] [--http-idle-timeout SECS]\
+                 \n          [--http-max-requests N]\
                  \n  runtime-check [--artifacts artifacts] [--model NAME]\
                  \n  state-graph",
                 balsam::experiments::ALL
@@ -58,11 +61,32 @@ fn cmd_service(args: &Args) -> balsam::Result<()> {
         None => PersistMode::Ephemeral,
     };
     let durable = matches!(mode, PersistMode::Wal { .. });
+    // Transport knobs: keep-alive (default on, also via the
+    // BALSAM_HTTP_KEEPALIVE env var), idle reap, per-connection request
+    // budget, gateway worker-pool size.
+    let mut http = HttpConfig::default();
+    if args.flag("no-keepalive") {
+        http.keep_alive = false;
+    }
+    let idle_secs = args.f64_or("http-idle-timeout", http.idle_timeout.as_secs_f64());
+    balsam::ensure!(
+        idle_secs.is_finite() && idle_secs > 0.0 && idle_secs <= 1e9,
+        "--http-idle-timeout must be seconds in (0, 1e9], got {idle_secs}"
+    );
+    http.idle_timeout = std::time::Duration::from_secs_f64(idle_secs);
+    http.max_requests_per_conn = args.u64_or("http-max-requests", 0) as usize;
+    let workers = args.u64_or("workers", default_workers() as u64) as usize;
+    let keep_alive = http.keep_alive;
+    let idle = http.idle_timeout.as_secs();
     let svc = Arc::new(ServiceCore::with_persist(b"balsam-demo-secret", mode)?);
     let token = svc.admin_token();
-    let server = http_gw::serve(svc, addr)?;
+    let server = http_gw::serve_with(svc, addr, workers, http)?;
     println!("balsam service on http://{}", server.addr);
     println!("admin token: {token}");
+    println!(
+        "transport: {} ({workers} workers, idle timeout {idle}s)",
+        if keep_alive { "HTTP/1.1 keep-alive" } else { "one request per connection" }
+    );
     if durable {
         println!("durable store: {} (WAL + snapshots; survives restarts)", args.str_or("persist-dir", ""));
     }

@@ -9,7 +9,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::util::httpd::{self, Request, Response, Server};
+use crate::util::httpd::{self, HttpClient, HttpConfig, Request, Response, Server};
 use crate::util::json::{kv_from_json, kv_to_json, u64s_from_json, Json};
 
 use super::api::*;
@@ -477,21 +477,29 @@ pub fn response_from_json(j: &Json) -> Result<ApiResponse, ApiError> {
 // ---------------------------------------------------------------------------
 
 /// Run a [`ServiceCore`] behind the HTTP gateway with the default worker
-/// pool. Timestamps are wall-clock seconds since server start, so
-/// event-log analysis works identically to simulated mode.
+/// pool and env-default transport config. Timestamps are wall-clock
+/// seconds since server start, so event-log analysis works identically to
+/// simulated mode.
 ///
 /// The service is shared as a plain `Arc` — [`ServiceCore::handle`] takes
 /// `&self`, so gateway workers dispatch concurrently and requests for
 /// different sites never contend (per-site store shards).
 pub fn serve(service: Arc<ServiceCore>, addr: &str) -> crate::Result<Server> {
-    serve_with(service, addr, httpd::default_workers())
+    serve_with(service, addr, httpd::default_workers(), HttpConfig::default())
 }
 
-/// [`serve`] with an explicit worker-pool size (the `service_throughput`
-/// bench compares 1 vs 8).
-pub fn serve_with(service: Arc<ServiceCore>, addr: &str, workers: usize) -> crate::Result<Server> {
+/// [`serve`] with an explicit worker-pool size and transport knobs:
+/// keep-alive on/off, idle timeout, max requests per connection (see
+/// [`HttpConfig`]). The `service_throughput` bench drives this with both
+/// transports; `balsam service` threads its CLI flags through here.
+pub fn serve_with(
+    service: Arc<ServiceCore>,
+    addr: &str,
+    workers: usize,
+    http: HttpConfig,
+) -> crate::Result<Server> {
     let t0 = Instant::now();
-    Server::serve_with_workers(addr, workers, move |req: Request| {
+    Server::serve_cfg(addr, workers, http, move |req: Request| {
         let now = t0.elapsed().as_secs_f64();
         let token = req
             .header("authorization")
@@ -529,16 +537,50 @@ pub fn serve_with(service: Arc<ServiceCore>, addr: &str, workers: usize) -> crat
 }
 
 /// Client-side [`ApiConn`] over HTTP — what every remote Balsam component
-/// uses in real-time mode.
+/// uses in real-time mode. Holds one pooled persistent connection (see
+/// [`HttpClient`]): a launcher session's whole lifetime of API calls rides
+/// a single authenticated TCP stream, reconnecting transparently when the
+/// server closes it (idle reap, max-requests budget, restart).
 pub struct HttpConn {
-    pub addr: String,
+    client: HttpClient,
+}
+
+impl HttpConn {
+    pub fn new(addr: impl Into<String>) -> HttpConn {
+        HttpConn { client: HttpClient::new(addr) }
+    }
+
+    /// Explicit transport config (tests force keep-alive on/off regardless
+    /// of the `BALSAM_HTTP_KEEPALIVE` env default).
+    pub fn with_config(addr: impl Into<String>, cfg: HttpConfig) -> HttpConn {
+        HttpConn { client: HttpClient::with_config(addr, cfg) }
+    }
+
+    pub fn addr(&self) -> &str {
+        self.client.addr()
+    }
+
+    /// TCP connections dialed so far — reuse tests assert `1` after many
+    /// API calls.
+    pub fn connects(&self) -> u64 {
+        self.client.connects()
+    }
 }
 
 impl ApiConn for HttpConn {
     fn api(&mut self, token: &str, req: ApiRequest) -> Result<ApiResponse, ApiError> {
         let body = request_to_json(&req).to_string();
-        let (status, text) = httpd::post_json(&self.addr, "/api", token, &body)
+        let auth = format!("Bearer {token}");
+        let (status, bytes) = self
+            .client
+            .request(
+                "POST",
+                "/api",
+                &[("authorization", &auth), ("content-type", "application/json")],
+                body.as_bytes(),
+            )
             .map_err(|e| ApiError::Transport(e.to_string()))?;
+        let text = String::from_utf8_lossy(&bytes);
         let parsed = Json::parse(&text).map_err(|e| ApiError::Transport(e.to_string()))?;
         if status == 200 {
             response_from_json(&parsed)
@@ -628,7 +670,7 @@ mod tests {
         let svc = Arc::new(ServiceCore::new(b"k"));
         let tok = svc.admin_token();
         let server = serve(svc.clone(), "127.0.0.1:0").unwrap();
-        let mut conn = HttpConn { addr: server.addr.clone() };
+        let mut conn = HttpConn::new(server.addr.clone());
 
         let site = conn
             .api(&tok, ApiRequest::CreateSite { name: "cori".into(), hostname: "c".into(), path: "/p".into() })
@@ -655,6 +697,34 @@ mod tests {
         // Bad token comes back as Unauthorized over the wire.
         let err = conn.api("balsam.1.bad", ApiRequest::SiteBacklog { site }).unwrap_err();
         assert_eq!(err, ApiError::Unauthorized);
+        server.stop();
+    }
+
+    /// Tentpole contract: a whole API session (including error responses)
+    /// rides one persistent connection when keep-alive is on.
+    #[test]
+    fn api_session_reuses_one_connection_across_errors() {
+        let svc = Arc::new(ServiceCore::new(b"ka"));
+        let tok = svc.admin_token();
+        let ka = HttpConfig { keep_alive: true, ..HttpConfig::default() };
+        let server = serve_with(svc.clone(), "127.0.0.1:0", 2, ka.clone()).unwrap();
+        let mut conn = HttpConn::with_config(server.addr.clone(), ka);
+
+        let site = conn
+            .api(&tok, ApiRequest::CreateSite { name: "s".into(), hostname: "h".into(), path: "/p".into() })
+            .unwrap()
+            .site_id();
+        // App-level errors (404 not-found, 401 bad token) must be framed
+        // so the connection stays usable — the error-response framing fix.
+        let err = conn.api(&tok, ApiRequest::SiteBacklog { site: SiteId(site.0 + 999) }).unwrap_err();
+        assert!(matches!(err, ApiError::NotFound(_)), "{err:?}");
+        let err = conn.api("balsam.1.bad", ApiRequest::SiteBacklog { site }).unwrap_err();
+        assert_eq!(err, ApiError::Unauthorized);
+        // And the same connection keeps serving successful calls.
+        for _ in 0..10 {
+            conn.api(&tok, ApiRequest::SiteBacklog { site }).unwrap();
+        }
+        assert_eq!(conn.connects(), 1, "session must hold one persistent connection");
         server.stop();
     }
 }

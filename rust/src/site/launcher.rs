@@ -90,16 +90,12 @@ impl Launcher {
         }
         let session = self.session.unwrap();
 
-        // Heartbeat.
-        if now >= self.next_heartbeat {
-            let _ = conn.api(&cfg.token, ApiRequest::SessionHeartbeat { session });
-            self.next_heartbeat = now + cfg.launcher.heartbeat_period;
-        }
-
         // Poll running jobs; report every completion in ONE SessionSync
         // round trip (the sync doubles as the heartbeat, so a busy
         // launcher's cycle is a single request — paper §4.5's batched
-        // status updates).
+        // status updates). The standalone heartbeat below is only sent on
+        // ticks where no sync went out, so each cycle costs at most one
+        // lease-refreshing call on the session's persistent connection.
         let done: Vec<(JobId, bool)> = self
             .running
             .iter()
@@ -127,6 +123,13 @@ impl Launcher {
             if conn.api(&cfg.token, ApiRequest::SessionSync { session, updates }).is_ok() {
                 self.next_heartbeat = now + cfg.launcher.heartbeat_period;
             }
+        }
+
+        // Heartbeat (skipped when the SessionSync above just refreshed the
+        // lease).
+        if now >= self.next_heartbeat {
+            let _ = conn.api(&cfg.token, ApiRequest::SessionHeartbeat { session });
+            self.next_heartbeat = now + cfg.launcher.heartbeat_period;
         }
 
         // Stop acquiring near the wall-time limit (jobs wouldn't finish).

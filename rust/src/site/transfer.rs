@@ -82,7 +82,11 @@ impl TransferModule {
     }
 
     /// Bundle pending items by (remote endpoint, direction) and submit up
-    /// to the concurrency budget.
+    /// to the concurrency budget. All Active marks across every task
+    /// submitted this tick go to the API in ONE SyncTransferItems round
+    /// trip at the end (each item keeps its own task id) — with the
+    /// keep-alive transport a whole submit cycle is one query per
+    /// direction plus one batched mark.
     fn submit_new(
         &mut self,
         now: f64,
@@ -94,6 +98,7 @@ impl TransferModule {
         if budget == 0 {
             return;
         }
+        let mut marks: Vec<(TransferItemId, TransferState, Option<XferTaskId>)> = Vec::new();
         // Stage-out first: result payloads are small and drain quickly,
         // and serving them first prevents a saturated stage-in pipeline
         // from starving result delivery (results must "track application
@@ -132,21 +137,23 @@ impl TransferModule {
                 };
                 for chunk in items.chunks(chunk_size) {
                     if budget == 0 {
-                        return;
+                        break;
                     }
                     let bytes: u64 = chunk.iter().map(|t| t.size_bytes).sum();
                     let ids: Vec<TransferItemId> = chunk.iter().map(|t| t.id).collect();
                     let tid = xfer.submit(now, &remote, &cfg.facility, direction, bytes, chunk.len());
                     self.tasks_submitted += 1;
-                    let _ = conn.api(&cfg.token, ApiRequest::UpdateTransferItems {
-                        ids: ids.clone(),
-                        state: TransferState::Active,
-                        task_id: Some(tid),
-                    });
+                    marks.extend(ids.iter().map(|&i| (i, TransferState::Active, Some(tid))));
                     self.active.insert(tid, ids);
                     budget -= 1;
                 }
+                if budget == 0 {
+                    break;
+                }
             }
+        }
+        if !marks.is_empty() {
+            let _ = conn.api(&cfg.token, ApiRequest::SyncTransferItems { updates: marks });
         }
     }
 }

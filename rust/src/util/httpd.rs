@@ -3,25 +3,34 @@
 //! The paper's architecture is "all components communicate with the API
 //! service as HTTPS clients" (§3.1). In real-time mode this transport
 //! carries the same JSON API the in-memory transport carries in simulated
-//! mode. One-request-per-connection keeps the implementation small; the
-//! service is localhost-scoped in this repo, so connection reuse is not a
-//! bottleneck (verified in benches).
+//! mode. The transport is **connection-persistent** end to end: the server
+//! runs an HTTP/1.1 keep-alive request loop per connection and the
+//! [`HttpClient`] pools one reusable connection per remote — a launcher
+//! session's thousands of round trips ride a single TCP stream instead of
+//! paying connect/teardown per call (the dominant per-request cost once
+//! the store itself is sharded; see `benches/service_throughput.rs`).
 //!
 //! The server uses a fixed accept/worker thread-pool model: one acceptor
 //! feeds a connection queue drained by N worker threads. Concurrency is
 //! therefore bounded (no thread-per-connection explosions under launcher
-//! storms) and tunable — the `service_throughput` bench drives the same
-//! handler with 1 vs 8 workers to measure gateway scaling.
+//! storms) and tunable. A worker owns a connection for as long as it is
+//! alive, so the idle timeout and max-requests-per-connection knobs in
+//! [`HttpConfig`] double as worker-slot reclamation: a client that goes
+//! silent or misbehaves is reaped and the slot serves someone else.
+//!
+//! All knobs default from `BALSAM_HTTP_KEEPALIVE` (unset/1 = keep-alive
+//! on, 0 = one-request-per-connection) so the CI matrix can exercise both
+//! transport modes without code changes.
 
-use std::io::{BufRead, BufReader, Read, Write};
-use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use crate::err;
 use crate::util::error::{Context, Result};
-use crate::{bail, err};
 
 /// Default worker-pool size: one per available core, bounded to keep the
 /// pool sane on very small or very large hosts.
@@ -29,11 +38,71 @@ pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(2, 16)
 }
 
+/// Whether keep-alive is enabled by default in this process: the
+/// `BALSAM_HTTP_KEEPALIVE` env var ("0"/"false"/"off" disables), else on.
+pub fn keepalive_from_env() -> bool {
+    !matches!(
+        std::env::var("BALSAM_HTTP_KEEPALIVE").as_deref(),
+        Ok("0") | Ok("false") | Ok("off")
+    )
+}
+
+/// Transport knobs shared by the keep-alive server and the pooled client.
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Persistent connections (HTTP/1.1 keep-alive). Defaults from
+    /// `BALSAM_HTTP_KEEPALIVE`; with `false` every response carries
+    /// `Connection: close` and the client dials per request — the
+    /// pre-keep-alive transport, kept as a CI matrix leg and bench
+    /// baseline.
+    pub keep_alive: bool,
+    /// Server: reap a connection idle this long between requests (also the
+    /// per-read timeout, so a stalled sender cannot pin a worker). The
+    /// value is advertised to clients via a `Keep-Alive: timeout=N` hint;
+    /// the pooled client discards connections idle past the hint instead
+    /// of racing the server's reaper.
+    pub idle_timeout: Duration,
+    /// Requests served per connection before the server closes it with
+    /// `Connection: close` (0 = unlimited). Bounds how long one client can
+    /// monopolize a worker slot.
+    pub max_requests_per_conn: usize,
+    /// Reject bodies larger than this with 400 — checked against
+    /// `Content-Length` *before* allocating, so a hostile header cannot
+    /// force an allocation.
+    pub max_body_bytes: usize,
+    /// Bound on a single request/header line.
+    pub max_line_bytes: usize,
+    /// Bound on the header count per request.
+    pub max_headers: usize,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            keep_alive: keepalive_from_env(),
+            idle_timeout: Duration::from_secs(30),
+            max_requests_per_conn: 0,
+            max_body_bytes: 64 << 20,
+            max_line_bytes: 8 << 10,
+            max_headers: 64,
+        }
+    }
+}
+
+/// Is `token` present in a comma-separated header value (case-insensitive,
+/// RFC 9112 list syntax)? Shared by the server's and the client's reading
+/// of `Connection` so both sides always interpret the header identically.
+fn header_has_token(value: &str, token: &str) -> bool {
+    value.split(',').any(|t| t.trim().eq_ignore_ascii_case(token))
+}
+
 /// A parsed HTTP request.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub method: String,
     pub path: String,
+    /// "HTTP/1.1" or "HTTP/1.0" (keep-alive is opt-in for 1.0 peers).
+    pub version: String,
     pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
 }
@@ -48,6 +117,21 @@ impl Request {
 
     pub fn body_str(&self) -> std::borrow::Cow<'_, str> {
         String::from_utf8_lossy(&self.body)
+    }
+
+    /// Does the `Connection` header contain `token`?
+    fn connection_has(&self, token: &str) -> bool {
+        self.header("connection").map(|v| header_has_token(v, token)).unwrap_or(false)
+    }
+
+    /// Whether the peer asked for the connection to close after this
+    /// request: explicit `Connection: close`, or an HTTP/1.0 peer that did
+    /// not opt into keep-alive.
+    pub fn wants_close(&self) -> bool {
+        if self.connection_has("close") {
+            return true;
+        }
+        self.version == "HTTP/1.0" && !self.connection_has("keep-alive")
     }
 }
 
@@ -64,6 +148,10 @@ impl Response {
         Response { status: 200, body: body.into_bytes(), content_type: "application/json" }
     }
 
+    /// Error response. Framing headers (`Content-Length`, `Connection`)
+    /// are written by [`write_response`] on every path, so a keep-alive
+    /// client can continue on the same connection after a 4xx instead of
+    /// desynchronizing.
     pub fn error(status: u16, msg: &str) -> Response {
         Response { status, body: msg.as_bytes().to_vec(), content_type: "text/plain" }
     }
@@ -89,12 +177,16 @@ pub struct Server {
     pub addr: String,
     pub workers: usize,
     stop: Arc<AtomicBool>,
+    /// Live connections (accept-time clones), so `stop()` can shut down
+    /// sockets that workers are blocked reading — a keep-alive connection
+    /// would otherwise pin its worker until the idle timeout.
+    conns: Arc<Mutex<Vec<(u64, TcpStream)>>>,
     handles: Vec<JoinHandle<()>>,
 }
 
 impl Server {
     /// Serve `handler` on `addr` ("127.0.0.1:0" picks a free port) with
-    /// the default worker-pool size.
+    /// the default worker-pool size and env-default transport config.
     pub fn serve<F>(addr: &str, handler: F) -> Result<Server>
     where
         F: Fn(Request) -> Response + Send + Sync + 'static,
@@ -102,11 +194,20 @@ impl Server {
         Server::serve_with_workers(addr, default_workers(), handler)
     }
 
-    /// Serve `handler` with a fixed pool of `workers` threads: the
-    /// acceptor enqueues accepted connections; workers drain the queue and
-    /// run the handler. With `workers == 1` requests fully serialize — the
-    /// baseline the `service_throughput` bench compares against.
+    /// [`Server::serve`] with a fixed pool of `workers` threads. With
+    /// `workers == 1` requests fully serialize — the baseline the
+    /// `service_throughput` bench compares against.
     pub fn serve_with_workers<F>(addr: &str, workers: usize, handler: F) -> Result<Server>
+    where
+        F: Fn(Request) -> Response + Send + Sync + 'static,
+    {
+        Server::serve_cfg(addr, workers, HttpConfig::default(), handler)
+    }
+
+    /// Fully-knobbed server: the acceptor enqueues accepted connections;
+    /// workers drain the queue and run the per-connection keep-alive
+    /// request loop under `cfg`.
+    pub fn serve_cfg<F>(addr: &str, workers: usize, cfg: HttpConfig, handler: F) -> Result<Server>
     where
         F: Fn(Request) -> Response + Send + Sync + 'static,
     {
@@ -115,21 +216,26 @@ impl Server {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let handler = Arc::new(handler);
+        let cfg = Arc::new(cfg);
         let workers = workers.max(1);
-        let (tx, rx) = mpsc::channel::<TcpStream>();
+        let conns: Arc<Mutex<Vec<(u64, TcpStream)>>> = Arc::default();
+        let (tx, rx) = mpsc::channel::<(u64, TcpStream)>();
         let rx = Arc::new(Mutex::new(rx));
         let mut handles = Vec::with_capacity(workers + 1);
         for _ in 0..workers {
             let rx = rx.clone();
             let h = handler.clone();
+            let cfg = cfg.clone();
+            let conns = conns.clone();
             handles.push(std::thread::spawn(move || loop {
                 // The guard's temporary is dropped at the end of this
                 // statement, so the queue lock is never held while a
-                // request is being served.
+                // connection is being served.
                 let next = rx.lock().unwrap().recv();
                 match next {
-                    Ok(stream) => {
-                        let _ = handle_conn(stream, &*h);
+                    Ok((id, stream)) => {
+                        let _ = handle_conn(stream, &*h, &cfg);
+                        conns.lock().unwrap().retain(|(i, _)| *i != id);
                     }
                     // Acceptor gone and queue drained: shut down.
                     Err(_) => break,
@@ -137,18 +243,24 @@ impl Server {
             }));
         }
         let stop2 = stop.clone();
+        let conns2 = conns.clone();
         handles.push(std::thread::spawn(move || {
+            let mut next_id = 0u64;
             while !stop2.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
                         // The accepted stream may inherit the listener's
                         // non-blocking flag on some platforms.
                         let _ = stream.set_nonblocking(false);
-                        if tx.send(stream).is_err() {
+                        next_id += 1;
+                        if let Ok(clone) = stream.try_clone() {
+                            conns2.lock().unwrap().push((next_id, clone));
+                        }
+                        if tx.send((next_id, stream)).is_err() {
                             break;
                         }
                     }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => {
                         std::thread::sleep(Duration::from_millis(1));
                     }
                     Err(_) => break,
@@ -156,123 +268,496 @@ impl Server {
             }
             // Dropping the sender lets workers drain and exit.
         }));
-        Ok(Server { addr: local.to_string(), workers, stop, handles })
+        Ok(Server { addr: local.to_string(), workers, stop, conns, handles })
     }
 
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::Relaxed);
+        // Join the acceptor FIRST (it was pushed last): once it is gone no
+        // new connection can be registered, so the sweep below is complete
+        // and cannot race a concurrent accept.
+        if let Some(acceptor) = self.handles.pop() {
+            let _ = acceptor.join();
+        }
+        // Kick workers out of blocking reads on live keep-alive
+        // connections; their request loops see EOF and return.
+        for (_, s) in self.conns.lock().unwrap().iter() {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
 }
 
-fn handle_conn<F: Fn(Request) -> Response>(stream: TcpStream, handler: &F) -> Result<()> {
-    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+/// Outcome of reading one request off a persistent connection.
+enum ReadOutcome {
+    Req(Request),
+    /// Peer closed (or the idle timeout fired) before sending anything —
+    /// the normal end of a keep-alive connection. Nothing to reply to.
+    Closed,
+    /// Protocol violation mid-request (malformed line, bad framing,
+    /// truncated body). The server replies 400 best-effort and closes:
+    /// after a framing error the byte stream cannot be resynchronized.
+    Bad(String),
+}
+
+/// Per-connection request loop: serve until the peer closes, asks for
+/// close, violates the protocol, exceeds the request budget, or goes
+/// silent past the idle timeout.
+fn handle_conn<F: Fn(Request) -> Response>(
+    stream: TcpStream,
+    handler: &F,
+    cfg: &HttpConfig,
+) -> Result<()> {
+    // One write per response + no Nagle: a pipelined launcher round trip
+    // is exactly one segment each way.
+    let _ = stream.set_nodelay(true);
+    stream.set_read_timeout(Some(cfg.idle_timeout))?;
     let mut reader = BufReader::new(stream.try_clone()?);
-    let req = read_request(&mut reader)?;
-    let resp = handler(req);
-    write_response(&mut &stream, &resp)?;
+    let mut out = stream;
+    let mut served = 0usize;
+    loop {
+        match read_request(&mut reader, cfg) {
+            ReadOutcome::Closed => break,
+            ReadOutcome::Bad(msg) => {
+                // Best-effort: the peer may have half-closed its write
+                // side and still be reading (the fault-injection tests
+                // assert this 400 arrives on a half-closed socket).
+                let _ = write_response(&mut out, &Response::error(400, &msg), false, cfg);
+                break;
+            }
+            ReadOutcome::Req(req) => {
+                served += 1;
+                let close = !cfg.keep_alive
+                    || req.wants_close()
+                    || (cfg.max_requests_per_conn > 0 && served >= cfg.max_requests_per_conn);
+                let resp = handler(req);
+                write_response(&mut out, &resp, !close, cfg)?;
+                if close {
+                    break;
+                }
+            }
+        }
+    }
     Ok(())
 }
 
-fn read_request<R: BufRead>(reader: &mut R) -> Result<Request> {
+/// Read one line, bounded by `max` bytes. `Ok(None)` = clean EOF at a
+/// line boundary; errors distinguish oversized lines, timeouts (mapped by
+/// the caller), and invalid UTF-8.
+fn read_line_bounded<R: BufRead>(reader: &mut R, max: usize) -> std::io::Result<Option<String>> {
     let mut line = String::new();
-    reader.read_line(&mut line)?;
-    let mut parts = line.split_whitespace();
-    let method = parts.next().ok_or_else(|| err!("empty request line"))?.to_string();
-    let path = parts.next().ok_or_else(|| err!("missing path"))?.to_string();
-    let version = parts.next().unwrap_or("");
-    if !version.starts_with("HTTP/1.") {
-        bail!("unsupported version {version:?}");
+    let n = reader.by_ref().take(max as u64 + 1).read_line(&mut line)?;
+    if n == 0 {
+        return Ok(None);
     }
-    let mut headers = Vec::new();
-    let mut content_len = 0usize;
+    if n > max {
+        return Err(std::io::Error::new(ErrorKind::InvalidData, "line too long"));
+    }
+    Ok(Some(line))
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+/// Parse one request. Every malformed input maps to `Bad` (the server
+/// replies 400 and closes) or `Closed`; nothing panics and no allocation
+/// is driven by unvalidated peer input.
+fn read_request<R: BufRead>(reader: &mut R, cfg: &HttpConfig) -> ReadOutcome {
+    // Request line; tolerate a stray CRLF from the previous request
+    // (RFC 9112 §2.2 asks servers to skip at least one empty line).
+    let mut line;
+    let mut skipped = 0;
     loop {
-        let mut h = String::new();
-        reader.read_line(&mut h)?;
+        line = match read_line_bounded(reader, cfg.max_line_bytes) {
+            Ok(None) => return ReadOutcome::Closed,
+            Ok(Some(l)) => l,
+            Err(e) if is_timeout(&e) => return ReadOutcome::Closed,
+            Err(e) => return ReadOutcome::Bad(format!("bad request line: {e}")),
+        };
+        if !line.trim_end().is_empty() {
+            break;
+        }
+        skipped += 1;
+        if skipped > 4 {
+            return ReadOutcome::Bad("leading junk before request line".into());
+        }
+    }
+    let mut parts = line.split_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) => (m.to_string(), p.to_string(), v.to_string()),
+        _ => return ReadOutcome::Bad(format!("malformed request line {:?}", line.trim_end())),
+    };
+    if parts.next().is_some() {
+        return ReadOutcome::Bad("malformed request line: trailing tokens".into());
+    }
+    if !version.starts_with("HTTP/1.") {
+        return ReadOutcome::Bad(format!("unsupported version {version:?}"));
+    }
+
+    // Headers. A started-but-unfinished request (timeout / EOF mid-headers)
+    // is a protocol violation, not an idle close.
+    let mut headers = Vec::new();
+    let mut content_len: Option<usize> = None;
+    loop {
+        let h = match read_line_bounded(reader, cfg.max_line_bytes) {
+            Ok(None) => return ReadOutcome::Bad("eof in headers".into()),
+            Ok(Some(l)) => l,
+            Err(e) if is_timeout(&e) => return ReadOutcome::Bad("timeout in headers".into()),
+            Err(e) => return ReadOutcome::Bad(format!("bad header: {e}")),
+        };
         let h = h.trim_end();
         if h.is_empty() {
             break;
         }
-        if let Some((k, v)) = h.split_once(':') {
-            let (k, v) = (k.trim().to_string(), v.trim().to_string());
-            if k.eq_ignore_ascii_case("content-length") {
-                content_len = v.parse().context("bad content-length")?;
-            }
-            headers.push((k, v));
+        if headers.len() >= cfg.max_headers {
+            return ReadOutcome::Bad("too many headers".into());
         }
+        let Some((k, v)) = h.split_once(':') else {
+            return ReadOutcome::Bad(format!("header without colon: {h:?}"));
+        };
+        let (k, v) = (k.trim().to_string(), v.trim().to_string());
+        if k.eq_ignore_ascii_case("content-length") {
+            let Ok(n) = v.parse::<usize>() else {
+                return ReadOutcome::Bad(format!("bad content-length {v:?}"));
+            };
+            if let Some(prev) = content_len {
+                if prev != n {
+                    return ReadOutcome::Bad("conflicting content-length headers".into());
+                }
+            }
+            if n > cfg.max_body_bytes {
+                return ReadOutcome::Bad(format!(
+                    "body too large: {n} > {} bytes",
+                    cfg.max_body_bytes
+                ));
+            }
+            content_len = Some(n);
+        }
+        if k.eq_ignore_ascii_case("transfer-encoding") {
+            return ReadOutcome::Bad("transfer-encoding not supported".into());
+        }
+        headers.push((k, v));
     }
-    let mut body = vec![0u8; content_len];
-    reader.read_exact(&mut body)?;
-    Ok(Request { method, path, headers, body })
+
+    // Body: exactly Content-Length bytes. A half-closed or stalled peer
+    // surfaces as a truncated body -> 400, freeing the worker slot.
+    let mut body = vec![0u8; content_len.unwrap_or(0)];
+    if let Err(e) = reader.read_exact(&mut body) {
+        let why = if is_timeout(&e) { "timeout".into() } else { e.to_string() };
+        return ReadOutcome::Bad(format!("truncated body: {why}"));
+    }
+    ReadOutcome::Req(Request { method, path, version, headers, body })
 }
 
-fn write_response<W: Write>(w: &mut W, resp: &Response) -> Result<()> {
+/// Write one response with exact framing: `Content-Length` always, plus
+/// the connection disposition (`keep-alive` with the server's idle-timeout
+/// hint, or `close`). Assembled into one buffer -> one segment on the wire.
+fn write_response<W: Write>(
+    w: &mut W,
+    resp: &Response,
+    keep_alive: bool,
+    cfg: &HttpConfig,
+) -> Result<()> {
+    let mut buf = Vec::with_capacity(resp.body.len() + 192);
     write!(
-        w,
-        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+        buf,
+        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\n",
         resp.status,
         resp.reason(),
         resp.content_type,
         resp.body.len()
     )?;
-    w.write_all(&resp.body)?;
+    if keep_alive {
+        // Sub-second timeouts advertise as 1 (never 0, which would tell
+        // clients there is no reuse window at all); >= 1 s truncates,
+        // staying conservative — the client adds its own margin on top.
+        let hint = cfg.idle_timeout.as_secs().max(1);
+        write!(buf, "connection: keep-alive\r\nkeep-alive: timeout={hint}\r\n")?;
+    } else {
+        write!(buf, "connection: close\r\n")?;
+    }
+    buf.extend_from_slice(b"\r\n");
+    buf.extend_from_slice(&resp.body);
+    w.write_all(&buf)?;
     w.flush()?;
     Ok(())
 }
 
-/// Blocking HTTP client: one request per connection.
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// One pooled connection plus the reuse bookkeeping the staleness checks
+/// need.
+struct PooledConn {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+    /// Server-advertised `Keep-Alive: timeout=N` hint.
+    timeout_hint: Option<Duration>,
+    last_used: Instant,
+}
+
+/// Where a request attempt failed — determines retry safety.
+enum SendError {
+    /// The request was not fully written: the server cannot have acted on
+    /// it (Content-Length framing means a partial request is a 400 on the
+    /// server side), so a retry on a fresh connection is safe for any
+    /// method.
+    Write(crate::util::error::Error),
+    /// The request was written but not one byte of status line came back.
+    /// The server may or may not have processed it: retried only for
+    /// idempotent methods.
+    EarlyRead(crate::util::error::Error),
+    /// Failed mid-response: never retried.
+    MidRead(crate::util::error::Error),
+}
+
+impl SendError {
+    fn into_inner(self) -> crate::util::error::Error {
+        match self {
+            SendError::Write(e) | SendError::EarlyRead(e) | SendError::MidRead(e) => e,
+        }
+    }
+}
+
+/// Blocking HTTP/1.1 client with one pooled persistent connection per
+/// remote. Reuses the connection across requests (honoring the server's
+/// `Connection: close` and `Keep-Alive: timeout` signals), detects stale
+/// pooled connections before reuse (FIN peek + idle-hint expiry), and
+/// retries at most once on a fresh connection when a reused one fails —
+/// for any method if the request was never fully sent, and additionally
+/// for idempotent GET/HEAD if no response byte arrived.
+pub struct HttpClient {
+    addr: String,
+    cfg: HttpConfig,
+    conn: Option<PooledConn>,
+    connects: u64,
+    requests: u64,
+}
+
+impl HttpClient {
+    pub fn new(addr: impl Into<String>) -> HttpClient {
+        HttpClient::with_config(addr, HttpConfig::default())
+    }
+
+    pub fn with_config(addr: impl Into<String>, cfg: HttpConfig) -> HttpClient {
+        HttpClient { addr: addr.into(), cfg, conn: None, connects: 0, requests: 0 }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// TCP connections dialed so far (tests assert reuse with `== 1`).
+    pub fn connects(&self) -> u64 {
+        self.connects
+    }
+
+    /// Requests completed successfully.
+    pub fn requests(&self) -> u64 {
+        self.requests
+    }
+
+    /// Is the pooled connection still usable? Expired hint or a pending
+    /// FIN/stray byte disqualifies it.
+    fn reusable(&self, c: &PooledConn) -> bool {
+        if !self.cfg.keep_alive {
+            return false;
+        }
+        let hint = c.timeout_hint.unwrap_or(self.cfg.idle_timeout);
+        // Safety margin (a quarter of the window, at most 1 s): losing the
+        // race against the server's reaper turns a cheap reconnect into an
+        // ambiguous mid-request failure. Sub-second server timeouts are
+        // advertised as `timeout=1`; the FIN peek below still catches a
+        // reaper that fired inside the margin.
+        let margin = (hint / 4).min(Duration::from_secs(1));
+        if c.last_used.elapsed() + margin >= hint {
+            return false;
+        }
+        // Peek without blocking: a server that closed while we were idle
+        // has a FIN queued (peek -> Ok(0)); stray unread bytes mean the
+        // framing desynchronized and the connection must not be reused.
+        if c.stream.set_nonblocking(true).is_err() {
+            return false;
+        }
+        let mut probe = [0u8; 1];
+        let alive =
+            matches!(c.stream.peek(&mut probe), Err(e) if e.kind() == ErrorKind::WouldBlock);
+        alive && c.stream.set_nonblocking(false).is_ok()
+    }
+
+    /// Take the pooled connection or dial a fresh one. `true` = reused.
+    fn checkout(&mut self) -> Result<(PooledConn, bool)> {
+        if let Some(c) = self.conn.take() {
+            if self.reusable(&c) {
+                return Ok((c, true));
+            }
+        }
+        let stream = TcpStream::connect(&self.addr).context("connect")?;
+        let _ = stream.set_nodelay(true);
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        let reader = BufReader::new(stream.try_clone()?);
+        self.connects += 1;
+        Ok((
+            PooledConn { stream, reader, timeout_hint: None, last_used: Instant::now() },
+            false,
+        ))
+    }
+
+    /// Issue one request, reusing the pooled connection when possible.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &[u8],
+    ) -> Result<(u16, Vec<u8>)> {
+        let idempotent =
+            method.eq_ignore_ascii_case("GET") || method.eq_ignore_ascii_case("HEAD");
+        let mut retried = false;
+        loop {
+            let (mut c, reused) = self.checkout()?;
+            match self.send_once(&mut c, method, path, headers, body) {
+                Ok((status, bytes, close)) => {
+                    c.last_used = Instant::now();
+                    if self.cfg.keep_alive && !close {
+                        self.conn = Some(c);
+                    }
+                    self.requests += 1;
+                    return Ok((status, bytes));
+                }
+                Err(e) => {
+                    // `c` is dropped: a failed connection is never pooled.
+                    let retriable = reused
+                        && !retried
+                        && match &e {
+                            SendError::Write(_) => true,
+                            SendError::EarlyRead(_) => idempotent,
+                            SendError::MidRead(_) => false,
+                        };
+                    if !retriable {
+                        return Err(e.into_inner());
+                    }
+                    retried = true;
+                }
+            }
+        }
+    }
+
+    /// One request/response exchange on `c`. Returns (status, body,
+    /// server-asked-close).
+    fn send_once(
+        &self,
+        c: &mut PooledConn,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &[u8],
+    ) -> std::result::Result<(u16, Vec<u8>, bool), SendError> {
+        // Assemble and send the whole request as one write.
+        let mut buf = Vec::with_capacity(body.len() + 256);
+        let head = (|| -> Result<()> {
+            write!(buf, "{method} {path} HTTP/1.1\r\nhost: balsam\r\ncontent-length: {}\r\n", body.len())?;
+            if !self.cfg.keep_alive {
+                write!(buf, "connection: close\r\n")?;
+            }
+            for (k, v) in headers {
+                write!(buf, "{k}: {v}\r\n")?;
+            }
+            write!(buf, "\r\n")?;
+            Ok(())
+        })();
+        if let Err(e) = head {
+            return Err(SendError::Write(e));
+        }
+        buf.extend_from_slice(body);
+        if let Err(e) = c.stream.write_all(&buf).and_then(|_| c.stream.flush()) {
+            return Err(SendError::Write(e.into()));
+        }
+
+        // Status line: zero bytes here is the ambiguous window.
+        let mut status_line = String::new();
+        match c.reader.read_line(&mut status_line) {
+            Ok(0) => return Err(SendError::EarlyRead(err!("connection closed before status"))),
+            Ok(_) => {}
+            Err(e) => return Err(SendError::EarlyRead(e.into())),
+        }
+        let status: u16 = match status_line.split_whitespace().nth(1).and_then(|s| s.parse().ok()) {
+            Some(s) => s,
+            None => return Err(SendError::MidRead(err!("bad status line {status_line:?}"))),
+        };
+
+        // Headers.
+        let mut content_len: Option<usize> = None;
+        let mut close = !self.cfg.keep_alive;
+        let mut hint: Option<Duration> = None;
+        loop {
+            let mut h = String::new();
+            match c.reader.read_line(&mut h) {
+                Ok(0) => return Err(SendError::MidRead(err!("eof in response headers"))),
+                Ok(_) => {}
+                Err(e) => return Err(SendError::MidRead(e.into())),
+            }
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                let (k, v) = (k.trim(), v.trim());
+                if k.eq_ignore_ascii_case("content-length") {
+                    content_len = v.parse().ok();
+                } else if k.eq_ignore_ascii_case("connection") {
+                    if header_has_token(v, "close") {
+                        close = true;
+                    }
+                } else if k.eq_ignore_ascii_case("keep-alive") {
+                    hint = v
+                        .split(',')
+                        .filter_map(|p| p.trim().strip_prefix("timeout=")?.parse::<u64>().ok())
+                        .next()
+                        .map(Duration::from_secs);
+                }
+            }
+        }
+        if let Some(h) = hint {
+            c.timeout_hint = Some(h);
+        }
+
+        // Body.
+        let mut bytes = Vec::new();
+        match content_len {
+            Some(n) => {
+                bytes.resize(n, 0);
+                if let Err(e) = c.reader.read_exact(&mut bytes) {
+                    return Err(SendError::MidRead(e.into()));
+                }
+            }
+            None => {
+                // No length: read-to-close (only valid when closing).
+                close = true;
+                if let Err(e) = c.reader.read_to_end(&mut bytes) {
+                    return Err(SendError::MidRead(e.into()));
+                }
+            }
+        }
+        Ok((status, bytes, close))
+    }
+}
+
+/// One-shot request on a dedicated connection (no pooling). Kept for
+/// callers without connection state; the persistent path is [`HttpClient`].
 pub fn request(
-    addr: impl ToSocketAddrs,
+    addr: &str,
     method: &str,
     path: &str,
     headers: &[(&str, &str)],
     body: &[u8],
 ) -> Result<(u16, Vec<u8>)> {
-    let mut stream = TcpStream::connect(addr).context("connect")?;
-    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
-    write!(stream, "{method} {path} HTTP/1.1\r\nhost: balsam\r\ncontent-length: {}\r\n", body.len())?;
-    for (k, v) in headers {
-        write!(stream, "{k}: {v}\r\n")?;
-    }
-    write!(stream, "\r\n")?;
-    stream.write_all(body)?;
-    stream.flush()?;
-
-    let mut reader = BufReader::new(stream);
-    let mut status_line = String::new();
-    reader.read_line(&mut status_line)?;
-    let status: u16 = status_line
-        .split_whitespace()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .ok_or_else(|| err!("bad status line {status_line:?}"))?;
-    let mut content_len: Option<usize> = None;
-    loop {
-        let mut h = String::new();
-        reader.read_line(&mut h)?;
-        let h = h.trim_end();
-        if h.is_empty() {
-            break;
-        }
-        if let Some((k, v)) = h.split_once(':') {
-            if k.trim().eq_ignore_ascii_case("content-length") {
-                content_len = v.trim().parse().ok();
-            }
-        }
-    }
-    let mut body = Vec::new();
-    match content_len {
-        Some(n) => {
-            body.resize(n, 0);
-            reader.read_exact(&mut body)?;
-        }
-        None => {
-            reader.read_to_end(&mut body)?;
-        }
-    }
-    Ok((status, body))
+    let cfg = HttpConfig { keep_alive: false, ..HttpConfig::default() };
+    HttpClient::with_config(addr, cfg).request(method, path, headers, body)
 }
 
 /// POST JSON convenience with a bearer token (the Balsam client pattern).
@@ -291,6 +776,20 @@ pub fn post_json(addr: &str, path: &str, token: &str, body: &str) -> Result<(u16
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Pcg;
+    use std::io::Cursor;
+
+    /// Echo server used across the tests.
+    fn echo_cfg(cfg: HttpConfig) -> Server {
+        Server::serve_cfg("127.0.0.1:0", 2, cfg, |req| {
+            Response::ok_json(req.body_str().into_owned())
+        })
+        .unwrap()
+    }
+
+    fn ka_cfg() -> HttpConfig {
+        HttpConfig { keep_alive: true, ..HttpConfig::default() }
+    }
 
     #[test]
     fn roundtrip_get() {
@@ -404,6 +903,256 @@ mod tests {
         let big = "x".repeat(1 << 20);
         let (_, body) = post_json(&srv.addr, "/big", "t", &big).unwrap();
         assert_eq!(body, (1 << 20).to_string());
+        srv.stop();
+    }
+
+    // --- keep-alive behaviour -------------------------------------------
+
+    #[test]
+    fn client_reuses_one_connection() {
+        let srv = echo_cfg(ka_cfg());
+        let mut client = HttpClient::with_config(&srv.addr, ka_cfg());
+        for i in 0..20 {
+            let body = format!("{{\"i\":{i}}}");
+            let (s, b) = client.request("POST", "/t", &[], body.as_bytes()).unwrap();
+            assert_eq!(s, 200);
+            assert_eq!(String::from_utf8_lossy(&b), body);
+        }
+        assert_eq!(client.connects(), 1, "20 requests must share one connection");
+        assert_eq!(client.requests(), 20);
+        srv.stop();
+    }
+
+    #[test]
+    fn keepalive_disabled_dials_per_request() {
+        let cfg = HttpConfig { keep_alive: false, ..HttpConfig::default() };
+        let srv = echo_cfg(cfg.clone());
+        let mut client = HttpClient::with_config(&srv.addr, cfg);
+        for _ in 0..3 {
+            client.request("POST", "/t", &[], b"{}").unwrap();
+        }
+        assert_eq!(client.connects(), 3);
+        srv.stop();
+    }
+
+    #[test]
+    fn two_requests_on_one_raw_socket() {
+        let srv = echo_cfg(ka_cfg());
+        let mut s = TcpStream::connect(&srv.addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        for i in 0..2 {
+            let body = format!("req{i}");
+            write!(s, "POST /t HTTP/1.1\r\ncontent-length: {}\r\n\r\n{}", body.len(), body)
+                .unwrap();
+            let mut reader = BufReader::new(s.try_clone().unwrap());
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.starts_with("HTTP/1.1 200"), "{line:?}");
+            let mut clen = 0usize;
+            loop {
+                let mut h = String::new();
+                reader.read_line(&mut h).unwrap();
+                if h.trim_end().is_empty() {
+                    break;
+                }
+                if let Some((k, v)) = h.split_once(':') {
+                    if k.eq_ignore_ascii_case("content-length") {
+                        clen = v.trim().parse().unwrap();
+                    }
+                    if k.eq_ignore_ascii_case("connection") {
+                        assert_eq!(v.trim(), "keep-alive");
+                    }
+                }
+            }
+            let mut body_buf = vec![0u8; clen];
+            reader.read_exact(&mut body_buf).unwrap();
+            assert_eq!(String::from_utf8_lossy(&body_buf), body);
+        }
+        srv.stop();
+    }
+
+    #[test]
+    fn server_max_requests_closes_and_client_redials() {
+        let cfg = HttpConfig { max_requests_per_conn: 2, ..ka_cfg() };
+        let srv = echo_cfg(cfg);
+        let mut client = HttpClient::with_config(&srv.addr, ka_cfg());
+        for _ in 0..4 {
+            let (s, _) = client.request("POST", "/t", &[], b"x").unwrap();
+            assert_eq!(s, 200);
+        }
+        // 2 requests per connection -> 4 requests = 2 dials.
+        assert_eq!(client.connects(), 2);
+        srv.stop();
+    }
+
+    #[test]
+    fn stale_pooled_connection_is_replaced() {
+        let cfg = HttpConfig { idle_timeout: Duration::from_millis(150), ..ka_cfg() };
+        let srv = echo_cfg(cfg);
+        let mut client = HttpClient::with_config(&srv.addr, ka_cfg());
+        client.request("POST", "/t", &[], b"a").unwrap();
+        // Outlive the server's reaper; the client must detect the dead
+        // pooled connection (hint expiry and/or FIN peek) and redial.
+        std::thread::sleep(Duration::from_millis(400));
+        let (s, b) = client.request("POST", "/t", &[], b"b").unwrap();
+        assert_eq!(s, 200);
+        assert_eq!(b, b"b");
+        assert_eq!(client.connects(), 2);
+        srv.stop();
+    }
+
+    #[test]
+    fn http10_peer_gets_connection_close() {
+        let srv = echo_cfg(ka_cfg());
+        let mut s = TcpStream::connect(&srv.addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        write!(s, "POST /t HTTP/1.0\r\ncontent-length: 1\r\n\r\nx").unwrap();
+        let mut text = String::new();
+        BufReader::new(s).read_to_string(&mut text).unwrap(); // server closes
+        assert!(text.starts_with("HTTP/1.1 200"));
+        assert!(text.to_ascii_lowercase().contains("connection: close"));
+        srv.stop();
+    }
+
+    // --- parser hardening (fault-injection satellite) --------------------
+
+    fn cfg_small() -> HttpConfig {
+        HttpConfig {
+            keep_alive: true,
+            max_body_bytes: 1 << 20,
+            max_line_bytes: 1 << 10,
+            max_headers: 16,
+            ..HttpConfig::default()
+        }
+    }
+
+    fn parse_bytes(bytes: &[u8]) -> ReadOutcome {
+        let mut cur = Cursor::new(bytes.to_vec());
+        read_request(&mut cur, &cfg_small())
+    }
+
+    #[test]
+    fn parser_rejects_malformed_inputs() {
+        let cases: &[&[u8]] = &[
+            b"GET\r\n\r\n",                                         // missing path+version
+            b"GET /x\r\n\r\n",                                      // missing version
+            b"GET /x SPDY/3\r\n\r\n",                               // bad protocol
+            b"GET /x HTTP/1.1 extra\r\n\r\n",                       // trailing token
+            b"POST /x HTTP/1.1\r\ncontent-length: ten\r\n\r\n",     // non-numeric CL
+            b"POST /x HTTP/1.1\r\ncontent-length: -5\r\n\r\n",      // negative CL
+            b"POST /x HTTP/1.1\r\ncontent-length: 99999999999999999999\r\n\r\n", // overflow
+            b"POST /x HTTP/1.1\r\ncontent-length: 9999999\r\n\r\n", // > max_body
+            b"POST /x HTTP/1.1\r\ncontent-length: 3\r\ncontent-length: 4\r\n\r\nabcd", // conflict
+            b"POST /x HTTP/1.1\r\nno-colon-header\r\n\r\n",         // header w/o colon
+            b"POST /x HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n", // chunked unsupported
+            b"POST /x HTTP/1.1\r\ncontent-length: 10\r\n\r\nabc",   // truncated body
+            b"POST /x HTTP/1.1\r\ncontent-length: 2\r\n",           // eof in headers
+            b"\xff\xfe garbage \x00\r\n\r\n",                       // invalid utf-8
+        ];
+        for c in cases {
+            match parse_bytes(c) {
+                ReadOutcome::Bad(_) => {}
+                ReadOutcome::Req(r) => panic!("accepted malformed input {c:?} as {r:?}"),
+                ReadOutcome::Closed => panic!("input {c:?} treated as clean close"),
+            }
+        }
+    }
+
+    #[test]
+    fn parser_header_case_and_duplicates_tolerance() {
+        // Header names are case-insensitive; same-value duplicate CL is
+        // tolerated (RFC 9110 allows coalescing identical values).
+        let raw =
+            b"POST /x HTTP/1.1\r\nCONTENT-LENGTH: 2\r\ncOnTeNt-LeNgTh: 2\r\nX-Custom: v\r\n\r\nok";
+        let req = match parse_bytes(raw) {
+            ReadOutcome::Req(r) => r,
+            ReadOutcome::Bad(msg) => panic!("rejected valid request: {msg}"),
+            ReadOutcome::Closed => panic!("valid request treated as close"),
+        };
+        assert_eq!(req.body, b"ok");
+        assert_eq!(req.header("x-custom"), Some("v"));
+    }
+
+    #[test]
+    fn parser_too_many_headers_and_oversized_line() {
+        let mut many = b"GET /x HTTP/1.1\r\n".to_vec();
+        for i in 0..32 {
+            many.extend_from_slice(format!("h{i}: v\r\n").as_bytes());
+        }
+        many.extend_from_slice(b"\r\n");
+        assert!(matches!(parse_bytes(&many), ReadOutcome::Bad(_)));
+
+        let mut long = b"GET /".to_vec();
+        long.extend_from_slice(&[b'a'; 4096]);
+        long.extend_from_slice(b" HTTP/1.1\r\n\r\n");
+        assert!(matches!(parse_bytes(&long), ReadOutcome::Bad(_)));
+    }
+
+    /// Property/fuzz-style sweep with the deterministic PRNG: random byte
+    /// soup and random mutations/truncations of a valid request must parse
+    /// to `Bad`/`Closed`/`Req` without panicking and without attempting
+    /// giant allocations (bounded by cfg.max_body_bytes).
+    #[test]
+    fn parser_fuzz_never_panics() {
+        let mut rng = Pcg::seeded(0x5eed_f00d);
+        let valid: Vec<u8> =
+            b"POST /api HTTP/1.1\r\nauthorization: Bearer t\r\ncontent-length: 11\r\n\r\n{\"type\":1}x"
+                .to_vec();
+        for round in 0..600 {
+            let bytes: Vec<u8> = match round % 3 {
+                // Pure random soup.
+                0 => {
+                    let len = (rng.next_u32() % 200) as usize;
+                    (0..len).map(|_| (rng.next_u32() & 0xff) as u8).collect()
+                }
+                // Valid request with random byte flips.
+                1 => {
+                    let mut b = valid.clone();
+                    for _ in 0..(1 + rng.next_u32() % 6) {
+                        let i = (rng.next_u32() as usize) % b.len();
+                        b[i] = (rng.next_u32() & 0xff) as u8;
+                    }
+                    b
+                }
+                // Valid request truncated at a random byte.
+                _ => {
+                    let cut = (rng.next_u32() as usize) % valid.len();
+                    valid[..cut].to_vec()
+                }
+            };
+            // Must not panic; allocation stays bounded by max_body_bytes.
+            let _ = parse_bytes(&bytes);
+        }
+    }
+
+    /// Socket-level: malformed requests get a framed 400 (or a clean
+    /// drop) and the server keeps serving fresh connections afterwards.
+    #[test]
+    fn malformed_request_gets_400_and_server_survives() {
+        let srv = echo_cfg(ka_cfg());
+        let garbage: &[&[u8]] = &[
+            b"NOT-HTTP\r\n\r\n",
+            b"POST /api HTTP/1.1\r\ncontent-length: nope\r\n\r\n",
+            b"POST /api HTTP/1.1\r\ncontent-length: 999999999999\r\n\r\n",
+        ];
+        for g in garbage {
+            let mut s = TcpStream::connect(&srv.addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+            s.write_all(g).unwrap();
+            let mut text = String::new();
+            let _ = BufReader::new(s).read_to_string(&mut text);
+            if !text.is_empty() {
+                assert!(text.starts_with("HTTP/1.1 400"), "expected 400, got {text:?}");
+                assert!(
+                    text.to_ascii_lowercase().contains("content-length:"),
+                    "400 must be framed: {text:?}"
+                );
+            }
+            // Server is still healthy.
+            let (st, body) = post_json(&srv.addr, "/ok", "t", "{}").unwrap();
+            assert_eq!(st, 200);
+            assert_eq!(body, "{}");
+        }
         srv.stop();
     }
 }

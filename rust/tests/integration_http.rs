@@ -45,7 +45,7 @@ fn full_round_trip_over_http_with_real_file_staging() {
     let token = svc.admin_token();
     let server = serve(svc.clone(), "127.0.0.1:0").unwrap();
 
-    let mut conn = HttpConn { addr: server.addr.clone() };
+    let mut conn = HttpConn::new(server.addr.clone());
     let site = conn
         .api(&token, ApiRequest::CreateSite {
             name: "local".into(),
@@ -86,7 +86,7 @@ fn full_round_trip_over_http_with_real_file_staging() {
     let mut xfer = LoopbackTransfer::new(&dir, None);
     let mut sched = LocalResources::new(4);
     let mut exec = FastExec { runs: BTreeMap::new(), next: 0 };
-    let mut agent_conn = HttpConn { addr: server.addr.clone() };
+    let mut agent_conn = HttpConn::new(server.addr.clone());
 
     let t0 = std::time::Instant::now();
     loop {
@@ -120,7 +120,7 @@ fn concurrent_http_clients_share_one_service() {
     let svc = Arc::new(ServiceCore::new(b"http-conc"));
     let token = svc.admin_token();
     let server = serve(svc.clone(), "127.0.0.1:0").unwrap();
-    let mut conn = HttpConn { addr: server.addr.clone() };
+    let mut conn = HttpConn::new(server.addr.clone());
     let site = conn
         .api(&token, ApiRequest::CreateSite {
             name: "s".into(),
@@ -141,7 +141,7 @@ fn concurrent_http_clients_share_one_service() {
             let addr = server.addr.clone();
             let tok = token.clone();
             std::thread::spawn(move || {
-                let mut c = HttpConn { addr };
+                let mut c = HttpConn::new(addr);
                 for _ in 0..10 {
                     c.api(&tok, ApiRequest::BulkCreateJobs {
                         jobs: vec![JobCreate::simple(site, "MD", "md_small")],
@@ -157,4 +157,182 @@ fn concurrent_http_clients_share_one_service() {
     assert_eq!(svc.store.job_count(), 60);
     svc.store.check_indexes().unwrap();
     server.stop();
+}
+
+// ---------------------------------------------------------------------------
+// Keep-alive protocol fault injection: misbehaving clients must never wedge
+// a gateway worker slot or desynchronize other connections.
+// ---------------------------------------------------------------------------
+
+mod fault_injection {
+    use super::*;
+    use balsam::service::http_gw::serve_with;
+    use balsam::util::httpd::{post_json, HttpConfig};
+    use std::io::{BufRead, BufReader, Read, Write};
+    use std::net::{Shutdown, TcpStream};
+    use std::time::Duration;
+
+    fn service() -> (Arc<ServiceCore>, String) {
+        let svc = Arc::new(ServiceCore::new(b"fault"));
+        let tok = svc.admin_token();
+        (svc, tok)
+    }
+
+    /// Read everything until the server closes; returns the raw text.
+    fn read_all(s: TcpStream) -> String {
+        let mut text = String::new();
+        let mut r = BufReader::new(s);
+        let _ = r.read_to_string(&mut text);
+        text
+    }
+
+    /// A good request must succeed — proves the (single) worker slot was
+    /// freed by whatever fault preceded this call.
+    fn assert_slot_free(addr: &str, tok: &str) {
+        let (status, _) = post_json(addr, "/api", tok, "{\"type\":\"ListEvents\",\"since\":0}")
+            .expect("worker slot not freed: good request failed");
+        assert_eq!(status, 200);
+    }
+
+    /// Client half-closes mid-body: Content-Length promises 100 bytes but
+    /// the write side shuts down after 7. The server must answer a framed
+    /// 400 on the still-open read side, close, and free the worker slot.
+    #[test]
+    fn half_close_mid_body_gets_400_and_frees_slot() {
+        let (svc, tok) = service();
+        let cfg = HttpConfig { keep_alive: true, ..HttpConfig::default() };
+        let server = serve_with(svc, "127.0.0.1:0", 1, cfg).unwrap();
+
+        let mut s = TcpStream::connect(&server.addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        write!(s, "POST /api HTTP/1.1\r\ncontent-length: 100\r\n\r\npartial").unwrap();
+        s.shutdown(Shutdown::Write).unwrap();
+        let text = read_all(s);
+        assert!(text.starts_with("HTTP/1.1 400"), "want 400 for truncated body, got {text:?}");
+        assert!(text.to_ascii_lowercase().contains("content-length:"), "unframed 400: {text:?}");
+        assert!(text.to_ascii_lowercase().contains("connection: close"), "{text:?}");
+
+        assert_slot_free(&server.addr, &tok);
+        server.stop();
+    }
+
+    /// Client opens a connection and goes silent past the idle timeout:
+    /// the server must reap it (worker slot freed) and keep serving other
+    /// connections. Run with ONE worker so a leaked slot would deadlock
+    /// the follow-up request.
+    #[test]
+    fn silent_connection_reaped_after_idle_timeout() {
+        let (svc, tok) = service();
+        let cfg = HttpConfig {
+            keep_alive: true,
+            idle_timeout: Duration::from_millis(200),
+            ..HttpConfig::default()
+        };
+        let server = serve_with(svc, "127.0.0.1:0", 1, cfg).unwrap();
+
+        let s = TcpStream::connect(&server.addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        // Say nothing. The server's idle reaper must close us...
+        let text = read_all(s);
+        assert!(text.is_empty(), "idle close must not produce a response, got {text:?}");
+        // ...and the single worker slot serves the next client.
+        assert_slot_free(&server.addr, &tok);
+
+        // Same, but going silent AFTER a completed request (mid-keep-alive
+        // idle, the common launcher-crash shape).
+        let mut s = TcpStream::connect(&server.addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        write!(s, "GET /api HTTP/1.1\r\n\r\n").unwrap();
+        let text = read_all(s); // response, then reaper-close at idle timeout
+        assert!(text.starts_with("HTTP/1.1 404"), "GET /api is 404, got {text:?}");
+        assert_slot_free(&server.addr, &tok);
+        server.stop();
+    }
+
+    /// After the server replies `Connection: close` (request budget
+    /// exhausted), a second request pipelined onto the same socket must
+    /// NOT be served: the connection just closes, and fresh connections
+    /// keep working.
+    #[test]
+    fn request_after_connection_close_is_ignored() {
+        let (svc, tok) = service();
+        let cfg = HttpConfig {
+            keep_alive: true,
+            max_requests_per_conn: 1,
+            ..HttpConfig::default()
+        };
+        let server = serve_with(svc, "127.0.0.1:0", 1, cfg).unwrap();
+
+        let mut s = TcpStream::connect(&server.addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let body = "{\"type\":\"ListEvents\",\"since\":0}";
+        let auth = format!("authorization: Bearer {tok}\r\n");
+        let req = format!("POST /api HTTP/1.1\r\n{auth}content-length: {}\r\n\r\n{body}", body.len());
+        // First request: served, with connection: close announced.
+        s.write_all(req.as_bytes()).unwrap();
+        let mut reader = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("HTTP/1.1 200"), "{line:?}");
+        let mut clen = 0usize;
+        let mut saw_close = false;
+        loop {
+            let mut h = String::new();
+            reader.read_line(&mut h).unwrap();
+            if h.trim_end().is_empty() {
+                break;
+            }
+            let lower = h.to_ascii_lowercase();
+            if let Some(v) = lower.strip_prefix("content-length:") {
+                clen = v.trim().parse().unwrap();
+            }
+            if lower.starts_with("connection:") && lower.contains("close") {
+                saw_close = true;
+            }
+        }
+        assert!(saw_close, "budget-exhausted response must announce connection: close");
+        let mut resp_body = vec![0u8; clen];
+        reader.read_exact(&mut resp_body).unwrap();
+        // Second request on the same socket: must never be answered (the
+        // write itself may fail with EPIPE if the server already closed —
+        // also a pass).
+        let _ = s.write_all(req.as_bytes());
+        let mut leftover = String::new();
+        let n = reader.read_to_string(&mut leftover).unwrap_or(0);
+        assert_eq!(n, 0, "server served a request after connection: close: {leftover:?}");
+
+        assert_slot_free(&server.addr, &tok);
+        server.stop();
+    }
+
+    /// Error-response framing: a keep-alive ApiConn that hits app-level
+    /// errors (bad JSON -> 400, bad route -> 404) must be able to keep
+    /// using the same connection — wrong Content-Length on an error reply
+    /// would desynchronize every call after it.
+    #[test]
+    fn keepalive_client_continues_after_error_responses() {
+        let (svc, tok) = service();
+        let ka = HttpConfig { keep_alive: true, ..HttpConfig::default() };
+        let server = serve_with(svc, "127.0.0.1:0", 2, ka.clone()).unwrap();
+        let mut conn = HttpConn::with_config(server.addr.clone(), ka);
+
+        let site = conn
+            .api(&tok, ApiRequest::CreateSite {
+                name: "s".into(),
+                hostname: "h".into(),
+                path: "/p".into(),
+            })
+            .unwrap()
+            .site_id();
+        for i in 0..10 {
+            // Alternate an error call with a good call on one connection.
+            if i % 2 == 0 {
+                conn.api("not-a-token", ApiRequest::SiteBacklog { site }).unwrap_err();
+            } else {
+                conn.api(&tok, ApiRequest::SiteBacklog { site }).unwrap();
+            }
+        }
+        assert_eq!(conn.connects(), 1, "errors must not cost the persistent connection");
+        server.stop();
+    }
 }

@@ -290,3 +290,104 @@ fn launcher_reconnects_and_finishes_work_after_restart() {
     svc.store.check_indexes().unwrap();
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+/// Keep-alive gateway regression: mutations arriving over ONE long-lived
+/// HTTP connection must persist exactly like in-process mutations — kill
+/// the service (server + store dropped), reopen the same dir, and the
+/// snapshots match. Guards the WAL append path against any transport-level
+/// reordering/batching a persistent connection might introduce.
+#[test]
+fn keepalive_gateway_mutations_survive_kill_and_reopen() {
+    use balsam::service::api::ApiConn;
+    use balsam::service::http_gw::{serve_with, HttpConn};
+    use balsam::util::httpd::HttpConfig;
+    use std::sync::Arc;
+
+    let dir = tmpdir("http-keepalive");
+    let mode = PersistMode::Wal { dir: dir.clone(), snapshot_every: 16 };
+    let state0 = {
+        let svc = Arc::new(ServiceCore::with_persist(b"recovery-secret", mode.clone()).unwrap());
+        let tok = svc.admin_token();
+        let ka = HttpConfig { keep_alive: true, ..HttpConfig::default() };
+        let server = serve_with(svc.clone(), "127.0.0.1:0", 2, ka.clone()).unwrap();
+        let mut conn = HttpConn::with_config(server.addr.clone(), ka);
+
+        // The same representative workload drive_workload() performs
+        // in-process, but over the wire on one persistent connection.
+        let site = conn
+            .api(&tok, ApiRequest::CreateSite {
+                name: "theta".into(),
+                hostname: "t1".into(),
+                path: "/projects/x".into(),
+            })
+            .unwrap()
+            .site_id();
+        conn.api(&tok, ApiRequest::RegisterApp {
+            site,
+            name: "EigenCorr".into(),
+            command_template: "corr {h5}".into(),
+            parameters: vec!["h5".into()],
+        })
+        .unwrap();
+        let mut jobs = Vec::new();
+        for i in 0..4 {
+            let mut jc = JobCreate::simple(site, "EigenCorr", "xpcs");
+            jc.tags = vec![("n".into(), format!("ka{i}"))];
+            if i % 2 == 0 {
+                jc.transfers_in = vec![("APS".into(), 878_000_000)];
+            }
+            jobs.push(jc);
+        }
+        conn.api(&tok, ApiRequest::BulkCreateJobs { jobs }).unwrap();
+        let items = conn
+            .api(&tok, ApiRequest::PendingTransferItems { site, direction: Direction::In, limit: 0 })
+            .unwrap()
+            .transfer_items();
+        assert_eq!(items.len(), 2);
+        conn.api(&tok, ApiRequest::SyncTransferItems {
+            updates: vec![
+                (items[0].id, TransferState::Done, Some(XferTaskId(7))),
+                (items[1].id, TransferState::Error, Some(XferTaskId(8))),
+            ],
+        })
+        .unwrap();
+        let sid = conn
+            .api(&tok, ApiRequest::CreateSession { site, batch_job: None })
+            .unwrap()
+            .session_id();
+        let acquired = conn
+            .api(&tok, ApiRequest::SessionAcquire { session: sid, max_nodes: 100, max_jobs: 2 })
+            .unwrap()
+            .jobs();
+        assert_eq!(acquired.len(), 2);
+        let ids: Vec<JobId> = acquired.iter().map(|j| j.id).collect();
+        conn.api(&tok, ApiRequest::BulkUpdateJobState {
+            jobs: ids.clone(),
+            to: JobState::Running,
+            data: String::new(),
+        })
+        .unwrap();
+        conn.api(&tok, ApiRequest::SessionSync {
+            session: sid,
+            updates: vec![
+                (ids[0], JobState::RunDone, String::new()),
+                (ids[0], JobState::Postprocessed, String::new()),
+            ],
+        })
+        .unwrap();
+        assert_eq!(conn.connects(), 1, "all mutations must ride one persistent connection");
+
+        let state = (jobs_json(&svc), sessions_json(&svc), titems_json(&svc), events_json(&svc));
+        server.stop();
+        state
+        // svc (last Arc) dropped here: process-death equivalent.
+    };
+    let svc2 = ServiceCore::with_persist(b"recovery-secret", mode).unwrap();
+    svc2.store.check_indexes().unwrap();
+    assert_eq!(
+        (jobs_json(&svc2), sessions_json(&svc2), titems_json(&svc2), events_json(&svc2)),
+        state0,
+        "keep-alive transport must not change what reaches the WAL"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -10,11 +10,12 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-use balsam::service::api::{ApiConn, ApiRequest, JobCreate};
+use balsam::service::api::{ApiConn, ApiRequest, JobCreate, JobFilter};
 use balsam::service::http_gw::{serve_with, HttpConn};
 use balsam::service::models::{JobId, JobState, SiteId};
 use balsam::service::state;
 use balsam::service::ServiceCore;
+use balsam::util::httpd::HttpConfig;
 
 const SITES: usize = 4;
 const THREADS: usize = 8; // two launcher sessions per site
@@ -178,7 +179,7 @@ fn concurrent_clients_through_gateway_pool() {
     let svc = Arc::new(ServiceCore::new(b"stress-http"));
     let tok = svc.admin_token();
     let sites = setup_sites(&svc, &tok);
-    let server = serve_with(svc.clone(), "127.0.0.1:0", 4).unwrap();
+    let server = serve_with(svc.clone(), "127.0.0.1:0", 4, HttpConfig::default()).unwrap();
 
     let handles: Vec<_> = (0..THREADS)
         .map(|t| {
@@ -186,7 +187,7 @@ fn concurrent_clients_through_gateway_pool() {
             let tok = tok.clone();
             let site = sites[t % SITES];
             std::thread::spawn(move || {
-                let mut conn = HttpConn { addr };
+                let mut conn = HttpConn::new(addr);
                 let sid = conn
                     .api(&tok, ApiRequest::CreateSession { site, batch_job: None })
                     .unwrap()
@@ -237,7 +238,7 @@ fn concurrent_clients_through_gateway_pool() {
 
     // Two sessions share each site, so a thread may exit with jobs it
     // created still runnable (acquired counts race); drain them now.
-    let mut drain = HttpConn { addr: server.addr.clone() };
+    let mut drain = HttpConn::new(server.addr.clone());
     for &site in &sites {
         let sid = drain
             .api(&tok, ApiRequest::CreateSession { site, batch_job: None })
@@ -281,6 +282,113 @@ fn concurrent_clients_through_gateway_pool() {
     let done: usize =
         sites.iter().map(|&s| svc.store.count_in_state(s, JobState::JobFinished)).sum();
     assert_eq!(done, THREADS * 5 * 4);
+    svc.store.check_indexes().unwrap();
+    server.stop();
+}
+
+/// Connection-reuse correctness (keep-alive tentpole): one launcher
+/// session issues 100 sequential SessionSync calls over a single pooled
+/// connection — every response must pair with its request (the failed-id
+/// list echoes exactly the update that was illegal) — while a second
+/// pooled client hammers the same gateway concurrently on another site.
+/// Any cross-talk between the two streams (a response delivered to the
+/// wrong client, or out of order within one connection) shows up as a
+/// wrong failed-list, a foreign site id in a ListJobs reply, or a job
+/// count mismatch at the end.
+#[test]
+fn sequential_syncs_share_one_connection_without_crosstalk() {
+    const SYNCS: usize = 100;
+    let svc = Arc::new(ServiceCore::new(b"stress-keepalive"));
+    let tok = svc.admin_token();
+    let sites = setup_sites(&svc, &tok);
+    let ka = HttpConfig { keep_alive: true, ..HttpConfig::default() };
+    let server = serve_with(svc.clone(), "127.0.0.1:0", 4, ka.clone()).unwrap();
+
+    let handles: Vec<_> = (0..2)
+        .map(|t| {
+            let addr = server.addr.clone();
+            let tok = tok.clone();
+            let site = sites[t];
+            let ka = ka.clone();
+            std::thread::spawn(move || {
+                let mut conn = HttpConn::with_config(addr, ka);
+                let jobs: Vec<JobCreate> =
+                    (0..SYNCS).map(|_| JobCreate::simple(site, "MD", "md_small")).collect();
+                let ids = conn
+                    .api(&tok, ApiRequest::BulkCreateJobs { jobs })
+                    .unwrap()
+                    .job_ids();
+                let sid = conn
+                    .api(&tok, ApiRequest::CreateSession { site, batch_job: None })
+                    .unwrap()
+                    .session_id();
+                let got = conn
+                    .api(&tok, ApiRequest::SessionAcquire {
+                        session: sid,
+                        max_nodes: 1_000_000,
+                        max_jobs: SYNCS,
+                    })
+                    .unwrap()
+                    .jobs();
+                assert_eq!(got.len(), SYNCS);
+                conn.api(&tok, ApiRequest::BulkUpdateJobState {
+                    jobs: ids.clone(),
+                    to: JobState::Running,
+                    data: String::new(),
+                })
+                .unwrap();
+                // 100 sequential SessionSync calls, one job per call, plus
+                // one deliberately-illegal update every 10th call: the
+                // response to call i must reference call i's own job.
+                for (i, &job) in ids.iter().enumerate() {
+                    let mut updates = vec![
+                        (job, JobState::RunDone, String::new()),
+                        (job, JobState::Postprocessed, String::new()),
+                    ];
+                    let expect_failed = if i % 10 == 9 {
+                        // Already POSTPROCESSED after the two updates above;
+                        // a second RUN_DONE for the same job is illegal and
+                        // must come back in THIS response's failed list.
+                        updates.push((job, JobState::RunDone, String::new()));
+                        vec![job]
+                    } else {
+                        vec![]
+                    };
+                    let failed = conn
+                        .api(&tok, ApiRequest::SessionSync { session: sid, updates })
+                        .unwrap()
+                        .job_ids();
+                    assert_eq!(failed, expect_failed, "sync #{i} paired with wrong response");
+                    // Periodic read-back: every job this client can see on
+                    // its site must be one of its own.
+                    if i % 25 == 24 {
+                        let mine = conn
+                            .api(&tok, ApiRequest::ListJobs {
+                                filter: JobFilter { site: Some(site), ..Default::default() },
+                            })
+                            .unwrap()
+                            .jobs();
+                        assert_eq!(mine.len(), SYNCS);
+                        for j in &mine {
+                            assert_eq!(j.site_id, site, "foreign job leaked into response");
+                        }
+                    }
+                }
+                assert_eq!(
+                    conn.connects(),
+                    1,
+                    "all {} calls must ride one persistent connection",
+                    SYNCS + 4
+                );
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    for &site in &sites[..2] {
+        assert_eq!(svc.store.count_in_state(site, JobState::JobFinished), SYNCS);
+    }
     svc.store.check_indexes().unwrap();
     server.stop();
 }
