@@ -3,29 +3,33 @@
 
 Usage: bench_trend.py <baseline.json> <current.json> [--max-drop 0.30]
 
-Compares the peak ephemeral req/s of the current bench run against the
-previous run's artifact (restored from the actions cache), tracked **per
-transport** ("per-request" and "keepalive") so a regression in one mode
-cannot hide behind the other's headline number. Transports present in
-only one of the two records are reported but not gated (e.g. the first
-run after the keep-alive transport landed). Fails the job on a regression
-larger than --max-drop; a missing or unreadable baseline is tolerated
-(first run on a branch, expired cache).
+Compares the peak req/s of the current bench run against the previous
+run's artifact (restored from the actions cache), tracked **per
+(transport, persist, fsync) combination** — e.g. "keepalive/ephemeral/
+none" vs "keepalive/wal/group" — so a regression in one mode cannot hide
+behind another's headline number, and the group-commit WAL leg gets its
+own baseline. Records written before the fsync axis existed derive
+"flush" (wal) / "none" (ephemeral) so old baselines stay comparable.
+Combinations present in only one of the two records are reported but not
+gated (e.g. the first run after a new leg lands). Fails the job on a
+regression larger than --max-drop; a missing or unreadable baseline is
+tolerated (first run on a branch, expired cache).
 """
 import json
 import sys
 
 
-def peaks_by_transport(doc):
-    """Peak ephemeral req/s keyed by transport mode."""
+def peaks_by_combo(doc):
+    """Peak req/s keyed by transport/persist/fsync."""
     peaks = {}
     for r in doc.get("results", []):
-        if r.get("persist", "ephemeral") != "ephemeral":
-            continue
-        t = r.get("transport", "per-request")
-        peaks[t] = max(peaks.get(t, 0.0), r["reqs_per_s"])
+        transport = r.get("transport", "per-request")
+        persist = r.get("persist", "ephemeral")
+        fsync = r.get("fsync", "flush" if persist == "wal" else "none")
+        key = f"{transport}/{persist}/{fsync}"
+        peaks[key] = max(peaks.get(key, 0.0), r["reqs_per_s"])
     if not peaks:
-        raise ValueError("no ephemeral results in bench record")
+        raise ValueError("no results in bench record")
     return peaks
 
 
@@ -40,28 +44,28 @@ def main(argv):
 
     try:
         with open(baseline_path) as f:
-            baseline = peaks_by_transport(json.load(f))
+            baseline = peaks_by_combo(json.load(f))
     except (OSError, ValueError, KeyError) as e:
         print(f"no usable baseline ({e}); skipping trend check")
         return 0
 
     with open(current_path) as f:
-        current = peaks_by_transport(json.load(f))
+        current = peaks_by_combo(json.load(f))
 
     failed = False
-    for transport in sorted(set(baseline) | set(current)):
-        base, cur = baseline.get(transport), current.get(transport)
+    for combo in sorted(set(baseline) | set(current)):
+        base, cur = baseline.get(combo), current.get(combo)
         if base is None:
-            print(f"{transport}: new transport at {cur:.0f} req/s (no baseline; not gated)")
+            print(f"{combo}: new combination at {cur:.0f} req/s (no baseline; not gated)")
             continue
         if cur is None:
-            print(f"{transport}: in baseline ({base:.0f} req/s) but missing now; not gated")
+            print(f"{combo}: in baseline ({base:.0f} req/s) but missing now; not gated")
             continue
         delta = (cur - base) / base if base > 0 else 0.0
-        print(f"{transport}: baseline {base:.0f} req/s -> current {cur:.0f} req/s ({delta:+.1%})")
+        print(f"{combo}: baseline {base:.0f} req/s -> current {cur:.0f} req/s ({delta:+.1%})")
         if delta < -max_drop:
             print(
-                f"::error::{transport} throughput regressed {-delta:.1%} "
+                f"::error::{combo} throughput regressed {-delta:.1%} "
                 f"(gate: {max_drop:.0%}) — see BENCH_service.json"
             )
             failed = True

@@ -4,18 +4,21 @@
 //!
 //! Drives N concurrent simulated launcher sessions over the HTTP gateway
 //! against the sharded service and reports aggregate req/s — the paper's
-//! §4.5 scalability instrument. Two axes are swept:
+//! §4.5 scalability instrument. Three axes are swept:
 //!
 //! * **gateway workers** (1 vs 8): store-shard + worker-pool scaling;
 //! * **transport** (per-request connections vs HTTP/1.1 keep-alive): the
 //!   connection-persistence win — each launcher session holding one
-//!   pooled connection vs dialing per call.
+//!   pooled connection vs dialing per call;
+//! * **fsync policy** (WAL flush-to-OS vs group commit vs fsync-always):
+//!   the durability tax, and how much of it group commit buys back.
 //!
 //! Each launcher cycle is the bulk protocol: BulkCreateJobs ->
 //! SessionAcquire -> BulkUpdateJobState(RUNNING) -> SessionSync(RUN_DONE +
 //! POSTPROCESSED). Results are recorded in `BENCH_service.json` (override
 //! the path with `BENCH_OUT`) so the perf trajectory is tracked across
-//! PRs; `bench_trend.py` gates on the peak req/s per transport.
+//! PRs; `bench_trend.py` gates on the peak req/s per (transport, persist,
+//! fsync) combination.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -25,7 +28,7 @@ use std::time::{Duration, Instant};
 use balsam::service::api::{ApiConn, ApiRequest, JobCreate};
 use balsam::service::http_gw::{serve_with, HttpConn};
 use balsam::service::models::{JobId, JobState, SiteId};
-use balsam::service::{PersistMode, ServiceCore};
+use balsam::service::{EventLogConfig, FsyncPolicy, PersistMode, ServiceCore};
 use balsam::util::httpd::HttpConfig;
 use balsam::util::json::Json;
 
@@ -36,18 +39,32 @@ struct PassResult {
     workers: usize,
     transport: &'static str,
     persist: &'static str,
+    /// "none" (ephemeral) / "flush" / "group" / "always".
+    fsync: &'static str,
     reqs: u64,
     secs: f64,
     reqs_per_s: f64,
 }
 
-fn run_pass(workers: usize, keep_alive: bool, secs: f64, wal_dir: Option<PathBuf>) -> PassResult {
+fn run_pass(
+    workers: usize,
+    keep_alive: bool,
+    secs: f64,
+    wal: Option<(PathBuf, FsyncPolicy)>,
+) -> PassResult {
     let transport = if keep_alive { "keepalive" } else { "per-request" };
-    let persist = if wal_dir.is_some() { "wal" } else { "ephemeral" };
-    let mode = match &wal_dir {
-        Some(dir) => {
+    let persist = if wal.is_some() { "wal" } else { "ephemeral" };
+    let fsync = wal.as_ref().map(|(_, f)| f.label()).unwrap_or("none");
+    let wal_dir = wal.as_ref().map(|(d, _)| d.clone());
+    let mode = match &wal {
+        Some((dir, policy)) => {
             let _ = std::fs::remove_dir_all(dir);
-            PersistMode::Wal { dir: dir.clone(), snapshot_every: 4096 }
+            PersistMode::Wal {
+                dir: dir.clone(),
+                snapshot_every: 4096,
+                fsync: *policy,
+                events: EventLogConfig::default(),
+            }
         }
         None => PersistMode::Ephemeral,
     };
@@ -145,13 +162,13 @@ fn run_pass(workers: usize, keep_alive: bool, secs: f64, wal_dir: Option<PathBuf
     if let Some(dir) = wal_dir {
         let _ = std::fs::remove_dir_all(dir);
     }
-    PassResult { workers, transport, persist, reqs: n, secs: dt, reqs_per_s: n as f64 / dt }
+    PassResult { workers, transport, persist, fsync, reqs: n, secs: dt, reqs_per_s: n as f64 / dt }
 }
 
 fn print_pass(r: &PassResult) {
     println!(
-        "workers {:>2} | {:>11} | {:>9}: {:>7} reqs in {:.2}s  ->  {:>8.0} req/s",
-        r.workers, r.transport, r.persist, r.reqs, r.secs, r.reqs_per_s
+        "workers {:>2} | {:>11} | {:>9}/{:<6}: {:>7} reqs in {:.2}s  ->  {:>8.0} req/s",
+        r.workers, r.transport, r.persist, r.fsync, r.reqs, r.secs, r.reqs_per_s
     );
 }
 
@@ -177,16 +194,32 @@ fn main() {
     println!("keep-alive speedup at 8 workers vs per-request: {ka_speedup:.2}x");
 
     // Durability tax: the same 8-worker keep-alive traffic with the
-    // per-shard WAL on.
-    let wal_dir =
-        std::env::temp_dir().join(format!("balsam-bench-wal-{}", std::process::id()));
-    let r = run_pass(8, true, secs, Some(wal_dir));
-    print_pass(&r);
+    // per-shard WAL on, across the fsync-policy axis — flush-to-OS, group
+    // commit (the ISSUE 4 acceptance leg), and fsync-per-append.
+    let wal_dir = std::env::temp_dir().join(format!("balsam-bench-wal-{}", std::process::id()));
+    let policies = [
+        FsyncPolicy::Never,
+        FsyncPolicy::Group { records: 64, interval_ms: 2 },
+        FsyncPolicy::Always,
+    ];
+    for policy in policies {
+        let r = run_pass(8, true, secs, Some((wal_dir.clone(), policy)));
+        print_pass(&r);
+        println!(
+            "wal/{} tax: {:.0}% of ephemeral keep-alive throughput",
+            r.fsync,
+            100.0 * r.reqs_per_s / results[2].reqs_per_s.max(1e-9)
+        );
+        results.push(r);
+    }
+    let flush_rps = results[3].reqs_per_s;
+    let group_rps = results[4].reqs_per_s;
+    let group_vs_flush = group_rps / flush_rps.max(1e-9);
     println!(
-        "wal tax: {:.0}% of ephemeral keep-alive throughput",
-        100.0 * r.reqs_per_s / results[2].reqs_per_s.max(1e-9)
+        "group-commit vs flush-only WAL: {:.2}x ({:.0}% — acceptance floor 75%)",
+        group_vs_flush,
+        100.0 * group_vs_flush
     );
-    results.push(r);
 
     let out = Json::obj(vec![
         ("bench", Json::str("service_throughput")),
@@ -204,6 +237,7 @@ fn main() {
                             ("gateway_workers", Json::num(r.workers as f64)),
                             ("transport", Json::str(r.transport)),
                             ("persist", Json::str(r.persist)),
+                            ("fsync", Json::str(r.fsync)),
                             ("reqs", Json::num(r.reqs as f64)),
                             ("secs", Json::num(r.secs)),
                             ("reqs_per_s", Json::num(r.reqs_per_s)),
@@ -214,6 +248,7 @@ fn main() {
         ),
         ("speedup_8_vs_1", Json::num(speedup)),
         ("keepalive_speedup_8workers", Json::num(ka_speedup)),
+        ("group_commit_vs_flush", Json::num(group_vs_flush)),
     ]);
     let path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_service.json".to_string());
     std::fs::write(&path, out.to_string()).expect("write bench record");

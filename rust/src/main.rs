@@ -11,7 +11,7 @@
 use std::sync::Arc;
 
 use balsam::service::persist::DEFAULT_SNAPSHOT_EVERY;
-use balsam::service::{http_gw, PersistMode, ServiceCore};
+use balsam::service::{http_gw, EventLogConfig, FsyncPolicy, PersistMode, ServiceCore};
 use balsam::util::cli::Args;
 use balsam::util::httpd::{default_workers, HttpConfig};
 
@@ -27,6 +27,8 @@ fn main() {
                 "usage: balsam <repro|service|runtime-check|state-graph> [options]\n\
                  \n  repro <id|all> [--fast] [--seed N]   ids: {:?}\
                  \n  service [--addr 127.0.0.1:8008] [--persist-dir DIR] [--snapshot-every N]\
+                 \n          [--fsync=never|always|group:K,Tms] [--events-segment-bytes N]\
+                 \n          [--events-retain-bytes N] [--events-retain-age SECS]\
                  \n          [--workers N] [--no-keepalive] [--http-idle-timeout SECS]\
                  \n          [--http-max-requests N]\
                  \n  runtime-check [--artifacts artifacts] [--model NAME]\
@@ -53,10 +55,28 @@ fn cmd_service(args: &Args) -> balsam::Result<()> {
     let addr = args.str_or("addr", "127.0.0.1:8008");
     // --persist-dir enables the durable WAL+snapshot backend: restarting
     // with the same dir recovers all jobs/sessions/transfers/events.
+    // --fsync picks the commit durability (flush-to-OS, fsync-always, or
+    // group commit — acks wait for a shared fsync; e.g. --fsync=group:64,5ms,
+    // where K is an advisory group-size bound and T the stall-recovery
+    // re-check period); the --events-* knobs size the segmented event log
+    // and its retention.
+    let fsync_spec = args.str_or("fsync", "never");
+    let fsync = FsyncPolicy::parse(fsync_spec);
+    balsam::ensure!(
+        fsync.is_some(),
+        "--fsync must be never|always|group|group:K,Tms — got '{fsync_spec}'"
+    );
+    let defaults = EventLogConfig::default();
     let mode = match args.get("persist-dir") {
         Some(dir) => PersistMode::Wal {
             dir: dir.into(),
             snapshot_every: args.u64_or("snapshot-every", DEFAULT_SNAPSHOT_EVERY),
+            fsync: fsync.unwrap(),
+            events: EventLogConfig {
+                segment_bytes: args.u64_or("events-segment-bytes", defaults.segment_bytes),
+                retain_bytes: args.u64_or("events-retain-bytes", defaults.retain_bytes),
+                retain_age_s: args.u64_or("events-retain-age", defaults.retain_age_s),
+            },
         },
         None => PersistMode::Ephemeral,
     };
@@ -88,7 +108,11 @@ fn cmd_service(args: &Args) -> balsam::Result<()> {
         if keep_alive { "HTTP/1.1 keep-alive" } else { "one request per connection" }
     );
     if durable {
-        println!("durable store: {} (WAL + snapshots; survives restarts)", args.str_or("persist-dir", ""));
+        println!(
+            "durable store: {} (WAL + snapshots + event segments; fsync={})",
+            args.str_or("persist-dir", ""),
+            fsync_spec
+        );
     }
     println!("POST JSON to /api with 'authorization: Bearer <token>'. Ctrl-C to stop.");
     loop {

@@ -114,6 +114,18 @@ pub struct Backlog {
     pub batch_nodes: u32,
 }
 
+/// One page of the merged event log (`ListEvents { since }`).
+///
+/// `truncated_before = Some(n)` means event-log retention has dropped
+/// events below global seq `n` that the request asked for — the page is
+/// complete from `n` on. Pagers treat it as an explicit "history starts
+/// at N" signal instead of silently missing events.
+#[derive(Debug, Clone, Default)]
+pub struct EventsPage {
+    pub truncated_before: Option<u64>,
+    pub events: Vec<Event>,
+}
+
 #[derive(Debug, Clone)]
 pub enum ApiResponse {
     Unit,
@@ -128,7 +140,7 @@ pub enum ApiResponse {
     BatchJobs(Vec<BatchJob>),
     TransferItems(Vec<TransferItem>),
     Backlog(Backlog),
-    Events(Vec<Event>),
+    Events(EventsPage),
 }
 
 macro_rules! expect_variant {
@@ -155,7 +167,13 @@ impl ApiResponse {
     expect_variant!(batch_jobs, BatchJobs, Vec<BatchJob>);
     expect_variant!(transfer_items, TransferItems, Vec<TransferItem>);
     expect_variant!(backlog, Backlog, Backlog);
-    expect_variant!(events, Events, Vec<Event>);
+    expect_variant!(events_page, Events, EventsPage);
+
+    /// The event page's events alone (most callers ignore the retention
+    /// marker; use [`ApiResponse::events_page`] to see it).
+    pub fn events(self) -> Vec<Event> {
+        self.events_page().events
+    }
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -165,6 +183,9 @@ pub enum ApiError {
     IllegalTransition { job: JobId, from: JobState, to: JobState },
     BadRequest(String),
     Transport(String),
+    /// Server-side failure (e.g. a poisoned durable store): the request
+    /// may not have been made durable. Served as a framed 500.
+    Internal(String),
 }
 
 impl std::fmt::Display for ApiError {
@@ -177,6 +198,7 @@ impl std::fmt::Display for ApiError {
             }
             ApiError::BadRequest(s) => write!(f, "bad request: {s}"),
             ApiError::Transport(s) => write!(f, "transport: {s}"),
+            ApiError::Internal(s) => write!(f, "internal: {s}"),
         }
     }
 }

@@ -82,14 +82,28 @@ impl ServiceCore {
 
     /// Entry point for every API interaction. `&self`: safe to call from
     /// any number of gateway worker threads concurrently.
+    ///
+    /// In a durability mode, a poisoned persist layer (any WAL / event
+    /// segment I/O failure) fails the request that hit it AND every
+    /// subsequent request with [`ApiError::Internal`] (a framed 500 over
+    /// HTTP): in-memory state may be ahead of the log, so continuing to
+    /// acknowledge mutations would silently diverge from what recovery
+    /// can replay.
     pub fn handle(&self, now: f64, token: &str, req: ApiRequest) -> Result<ApiResponse, ApiError> {
         self.calls.fetch_add(1, Ordering::Relaxed);
         let user = self.auth.validate(token).ok_or(ApiError::Unauthorized)?;
         if !self.store.user_exists(user) {
             return Err(ApiError::Unauthorized);
         }
+        if let Some(e) = self.store.persist_error() {
+            return Err(ApiError::Internal(e));
+        }
         self.expire_stale_sessions(now);
-        self.dispatch(now, user, req)
+        let out = self.dispatch(now, user, req);
+        if let Some(e) = self.store.persist_error() {
+            return Err(ApiError::Internal(e));
+        }
+        out
     }
 
     fn dispatch(&self, now: f64, user: UserId, req: ApiRequest) -> Result<ApiResponse, ApiError> {
@@ -177,13 +191,27 @@ impl ServiceCore {
                 self.store.heartbeat(session, now)?;
                 // Best-effort batch: an individual rejection (e.g. a job
                 // already recovered by lease expiry) must not abort the
-                // launcher's whole heartbeat cycle.
+                // launcher's whole heartbeat cycle. The authorized
+                // updates go through Store::transition_batch so that
+                // consecutive same-shard updates — the whole batch, for
+                // a launcher syncing its own site — share one WAL commit
+                // (one group fsync) instead of paying one per update.
                 let mut failed = Vec::new();
+                let mut authorized = Vec::new();
                 for (job, to, data) in updates {
-                    if self.transition_job(now, user, job, to, &data).is_err() {
+                    let ok = self
+                        .store
+                        .job_site(job)
+                        .is_some_and(|s| self.check_site(user, s).is_ok());
+                    if ok {
+                        authorized.push((job, to, data));
+                    } else {
                         failed.push(job);
                     }
                 }
+                let (mut rejected, terminals) = self.store.transition_batch(&authorized, now);
+                failed.append(&mut rejected);
+                self.propagate_terminals(now, terminals);
                 Ok(ApiResponse::JobIds(failed))
             }
             ApiRequest::SessionEnd { session } => {
@@ -272,7 +300,7 @@ impl ServiceCore {
                 }))
             }
             ApiRequest::ListEvents { since } => {
-                Ok(ApiResponse::Events(self.store.events_since(since)))
+                Ok(ApiResponse::Events(self.store.events_page(since as u64)?))
             }
         }
     }
@@ -441,8 +469,7 @@ impl ServiceCore {
     ) -> Result<(), ApiError> {
         let site = self
             .store
-            .job(id)
-            .map(|j| j.site_id)
+            .job_site(id)
             .ok_or_else(|| ApiError::NotFound(format!("job {id}")))?;
         self.check_site(user, site)?;
         let terminals = self.store.transition(id, to, now, data)?;

@@ -421,7 +421,21 @@ pub fn response_to_json(resp: &ApiResponse) -> Json {
                 ("batch_nodes", Json::num(b.batch_nodes as f64)),
             ]),
         ),
-        Events(x) => ("Events", Json::Arr(x.iter().map(Event::to_json).collect())),
+        // The legacy wire shape (a bare array) is kept whenever there is
+        // no truncation to report — the overwhelmingly common case — so
+        // pre-retention clients keep working against a new service; the
+        // object shape only appears once retention (a new-server opt-in)
+        // actually dropped history.
+        Events(p) => (
+            "Events",
+            match p.truncated_before {
+                None => Json::Arr(p.events.iter().map(Event::to_json).collect()),
+                Some(n) => Json::obj(vec![
+                    ("truncated_before", Json::num(n as f64)),
+                    ("events", Json::Arr(p.events.iter().map(Event::to_json).collect())),
+                ]),
+            },
+        ),
     };
     Json::obj(vec![("ok", Json::Bool(true)), ("type", Json::str(ty)), ("body", body)])
 }
@@ -467,7 +481,21 @@ pub fn response_from_json(j: &Json) -> Result<ApiResponse, ApiError> {
             inflight_nodes: b.get("inflight_nodes").and_then(Json::as_u64).unwrap_or(0) as u32,
             batch_nodes: b.get("batch_nodes").and_then(Json::as_u64).unwrap_or(0) as u32,
         }),
-        "Events" => ApiResponse::Events(b.as_arr().unwrap_or(&[]).iter().map(Event::from_json).collect()),
+        // Current shape: {"truncated_before": n|null, "events": [...]}.
+        // A bare array is the pre-retention wire shape (an older peer):
+        // accept it so version skew degrades to "no truncation info"
+        // instead of a silently empty page.
+        "Events" => ApiResponse::Events(EventsPage {
+            truncated_before: b.get("truncated_before").and_then(Json::as_u64),
+            events: b
+                .get("events")
+                .and_then(Json::as_arr)
+                .or_else(|| b.as_arr())
+                .unwrap_or(&[])
+                .iter()
+                .map(Event::from_json)
+                .collect(),
+        }),
         other => return Err(ApiError::Transport(format!("unknown response type {other}"))),
     })
 }
@@ -528,6 +556,9 @@ pub fn serve_with(
                 let status = match e {
                     ApiError::Unauthorized => 401,
                     ApiError::NotFound(_) => 404,
+                    // Poisoned durable store (or any server-side fault):
+                    // a framed 500, so keep-alive clients stay usable.
+                    ApiError::Internal(_) => 500,
                     _ => 400,
                 };
                 Response { status, body: body.to_string().into_bytes(), content_type: "application/json" }
@@ -589,6 +620,7 @@ impl ApiConn for HttpConn {
             Err(match status {
                 401 => ApiError::Unauthorized,
                 404 => ApiError::NotFound(msg),
+                500 => ApiError::Internal(msg),
                 _ => ApiError::BadRequest(msg),
             })
         }

@@ -21,7 +21,7 @@ pub mod core;
 pub mod auth;
 pub mod http_gw;
 
-pub use api::{ApiConn, ApiError, ApiRequest, ApiResponse, JobCreate, JobFilter};
+pub use api::{ApiConn, ApiError, ApiRequest, ApiResponse, EventsPage, JobCreate, JobFilter};
 pub use core::ServiceCore;
 pub use models::*;
-pub use persist::PersistMode;
+pub use persist::{EventLogConfig, FsyncPolicy, PersistMode};

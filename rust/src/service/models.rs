@@ -266,6 +266,11 @@ pub struct Session {
 
 /// One job lifecycle event (paper §4.1.4: "The Balsam service stores Balsam
 /// Job events with timestamps recorded at the job execution site").
+///
+/// The `to_json`/`from_json` codec below is shared by three consumers:
+/// HTTP wire payloads, WAL batch records, and the lines of the segmented
+/// per-shard event-log files (`site-<id>.events.NNNN`) — an event has
+/// exactly one serialized shape everywhere it rests.
 #[derive(Debug, Clone)]
 pub struct Event {
     /// Global, dense sequence number (total order across all site shards;

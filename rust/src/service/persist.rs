@@ -1,12 +1,22 @@
 //! Durable per-shard WAL + snapshot store backend (the paper's PostgreSQL
-//! role, §4.2).
+//! role, §4.2), with a **group-commit fsync pipeline** and a **segmented
+//! append-only event log**.
 //!
 //! The sharded [`super::store::Store`] keeps every table in memory; this
 //! module makes that state survive process death so launchers can
-//! reconnect across service restarts. The layout mirrors the sharding:
-//! **one append-only log per site shard plus one for the global tables**
-//! (`site-<id>.wal` / `global.wal`), with periodic compacting snapshots
-//! (`site-<id>.snap` / `global.snap`).
+//! reconnect across service restarts. The layout mirrors the sharding —
+//! per shard key there are now *three* kinds of files:
+//!
+//! * `site-<id>.wal` / `global.wal` — the write-ahead log: one atomic
+//!   JSON batch per store mutation (rows + events);
+//! * `site-<id>.snap` / `global.snap` — compacting snapshots holding
+//!   **live rows only** (zero event records), so rotation cost is
+//!   O(live rows), not O(all events ever);
+//! * `site-<id>.events.0001`, `.0002`, … — the segmented event log:
+//!   events are moved here at every snapshot rotation and **never
+//!   compacted**. Sealed segments are immutable; a size/age retention
+//!   policy may drop the oldest ones, and readers get an explicit
+//!   "truncated before seq N" marker instead of silently missing events.
 //!
 //! Records are *physical* row upserts ([`WalRecord`]: full rows encoded
 //! with the [`super::models`] JSON codecs) plus event appends carrying
@@ -15,28 +25,45 @@
 //! counters exactly — including cross-shard event interleavings that
 //! logical op replay could not reproduce.
 //!
+//! Durability ([`FsyncPolicy`]):
+//! * `Never` — appends are a single `write + flush` per store mutation
+//!   (durable to the OS: a process crash loses nothing, a power loss can
+//!   lose the tail);
+//! * `Always` — every append is fsynced before the mutation returns;
+//! * `Group { records, interval_ms }` — **group commit**: a mutation's
+//!   append is acknowledged only once an fsync covers it, but fsyncs are
+//!   shared. The first committer to wait becomes the *leader* and fsyncs
+//!   with the log mutex released, so every append that lands during the
+//!   fsync joins the next group; followers re-check every `interval_ms`
+//!   ms (a missed-wakeup guard) and the first to find the device free
+//!   leads the next group.
+//!
+//! Failure policy: any WAL/segment I/O error **poisons** the handle —
+//! the first error is recorded, every subsequent append fails fast, and
+//! the service layer turns the poisoned state into framed 500 responses
+//! instead of silently diverging from the log.
+//!
 //! Framing and crash tolerance:
 //! * every WAL line is one **atomic batch** — `{"lsn": n, "batch":
 //!   [{...}, ...]}` holding every row + event of a single store
-//!   mutation, so a compound operation (session acquire, transition with
-//!   consequences) commits or rolls back as a unit; a torn prefix can
-//!   never recover a session/job pair that disagrees. The per-shard LSN
-//!   is allocated under the shard's write lock, so file order equals
-//!   apply order within a shard;
-//! * appends are a single `write + flush` per store mutation (durable to
-//!   the OS; an fsync-per-record policy would serialize the hot path);
+//!   mutation, so a compound operation commits or rolls back as a unit;
 //! * a torn final line (crash mid-append) is detected and dropped on
-//!   recovery; corruption anywhere earlier is a hard error;
-//! * snapshot rotation writes `*.snap.tmp`, fsyncs, renames, then
+//!   recovery — in `Group` mode that means losing at most the final
+//!   un-fsynced group; corruption anywhere earlier is a hard error;
+//! * snapshot rotation archives the un-archived events to the active
+//!   segment (fsynced), writes `*.snap.tmp`, fsyncs, renames, then
 //!   truncates the WAL. The snapshot header records the highest LSN it
-//!   covers, and recovery skips WAL records at or below it — so a crash
-//!   between rename and truncate replays idempotently.
+//!   covers and recovery skips WAL records at or below it; WAL events
+//!   whose seq is already covered by the segments are deduplicated — so
+//!   a crash anywhere in the rotation window replays idempotently.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::fs::{self, File, OpenOptions};
-use std::io::{BufWriter, Write};
+use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 use crate::util::error::Context;
 use crate::util::json::Json;
@@ -47,6 +74,87 @@ use super::models::*;
 /// Default mutations-per-shard between compacting snapshots.
 pub const DEFAULT_SNAPSHOT_EVERY: u64 = 4096;
 
+/// When a mutation's append must be fsynced before it is acknowledged.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum FsyncPolicy {
+    /// `write + flush` only: durable to the OS page cache. A process
+    /// crash loses nothing; a power loss can lose the un-synced tail.
+    #[default]
+    Never,
+    /// fsync every append before acknowledging (maximum durability,
+    /// serializes the hot path).
+    Always,
+    /// Group commit: acknowledgements wait for an fsync, but concurrent
+    /// commits share fsyncs — the first waiter leads and fsyncs with all
+    /// locks released, so a group naturally collects every append that
+    /// lands during the previous fsync. `records` is an advisory
+    /// upper-bound tuning knob (groups close as fast as the device
+    /// allows, almost always far below it); `interval_ms` is the
+    /// follower re-check period — it guards against a missed wakeup, so
+    /// a follower leads at most `interval_ms` after the device becomes
+    /// free. (An fsync that never returns — a hung device — stalls the
+    /// shard's commits; no policy can acknowledge past a dead disk.)
+    Group { records: u64, interval_ms: u64 },
+}
+
+impl FsyncPolicy {
+    pub const DEFAULT_GROUP_RECORDS: u64 = 64;
+    pub const DEFAULT_GROUP_INTERVAL_MS: u64 = 5;
+
+    /// Parse a CLI / env spec: `never` (alias `flush`), `always`,
+    /// `group` (defaults), or `group:K,T` / `group:K,Tms`.
+    pub fn parse(s: &str) -> Option<FsyncPolicy> {
+        match s {
+            "never" | "flush" => return Some(FsyncPolicy::Never),
+            "always" => return Some(FsyncPolicy::Always),
+            "group" => {
+                return Some(FsyncPolicy::Group {
+                    records: FsyncPolicy::DEFAULT_GROUP_RECORDS,
+                    interval_ms: FsyncPolicy::DEFAULT_GROUP_INTERVAL_MS,
+                })
+            }
+            _ => {}
+        }
+        let spec = s.strip_prefix("group:")?;
+        let (k, t) = spec.split_once(',')?;
+        let records = k.trim().parse::<u64>().ok()?;
+        let t = t.trim();
+        let interval_ms = t.strip_suffix("ms").unwrap_or(t).trim().parse::<u64>().ok()?;
+        (records > 0).then_some(FsyncPolicy::Group { records, interval_ms })
+    }
+
+    /// Short label for bench records / logs.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FsyncPolicy::Never => "flush",
+            FsyncPolicy::Always => "always",
+            FsyncPolicy::Group { .. } => "group",
+        }
+    }
+}
+
+/// Segmented event-log sizing + retention knobs.
+#[derive(Debug, Clone)]
+pub struct EventLogConfig {
+    /// Seal the active segment once it exceeds this many bytes.
+    pub segment_bytes: u64,
+    /// 0 = keep everything; otherwise drop the oldest sealed segments
+    /// once a shard's total segment bytes exceed this.
+    pub retain_bytes: u64,
+    /// 0 = keep everything; otherwise drop sealed segments whose last
+    /// write is older than this many seconds. Retention is evaluated at
+    /// every archive (snapshot rotation) and on every reopen — a shard
+    /// idle for an entire process lifetime sheds aged segments at the
+    /// next restart.
+    pub retain_age_s: u64,
+}
+
+impl Default for EventLogConfig {
+    fn default() -> EventLogConfig {
+        EventLogConfig { segment_bytes: 4 << 20, retain_bytes: 0, retain_age_s: 0 }
+    }
+}
+
 /// Store durability mode, selectable at `ServiceCore` construction and
 /// threaded through the `balsam service` CLI flags.
 #[derive(Debug, Clone)]
@@ -54,10 +162,23 @@ pub enum PersistMode {
     /// In-memory only (simulations, benches, tests): state dies with the
     /// process.
     Ephemeral,
-    /// Per-shard write-ahead log + snapshots under `dir`; reopening the
-    /// same dir recovers the full store. `snapshot_every` counts WAL
-    /// records per shard between compactions (0 = never compact).
-    Wal { dir: PathBuf, snapshot_every: u64 },
+    /// Per-shard write-ahead log + snapshots + event segments under
+    /// `dir`; reopening the same dir recovers the full store.
+    /// `snapshot_every` counts WAL records per shard between compactions
+    /// (0 = never compact — events then stay in the WAL).
+    Wal { dir: PathBuf, snapshot_every: u64, fsync: FsyncPolicy, events: EventLogConfig },
+}
+
+impl PersistMode {
+    /// WAL mode with default snapshot / fsync / event-log settings.
+    pub fn wal(dir: impl Into<PathBuf>) -> PersistMode {
+        PersistMode::Wal {
+            dir: dir.into(),
+            snapshot_every: DEFAULT_SNAPSHOT_EVERY,
+            fsync: FsyncPolicy::default(),
+            events: EventLogConfig::default(),
+        }
+    }
 }
 
 /// One durable record: a full-row upsert or an event append.
@@ -126,21 +247,187 @@ pub fn snap_path(dir: &Path, key: ShardKey) -> PathBuf {
     dir.join(format!("{}.snap", file_stem(key)))
 }
 
+/// Event-log segment path for `key` under `dir` (exposed for tests).
+pub fn segment_path(dir: &Path, key: ShardKey, segno: u64) -> PathBuf {
+    dir.join(format!("{}.events.{:04}", file_stem(key), segno))
+}
+
+/// Metadata for one event-log segment (the last entry is the active one).
+#[derive(Debug, Clone)]
+struct SegmentMeta {
+    no: u64,
+    /// Seq of the segment's first event (`u64::MAX` while still empty).
+    first_seq: u64,
+    bytes: u64,
+}
+
+/// Per-shard segmented event log state (behind the shard's WAL mutex).
+#[derive(Debug, Default)]
+struct EventLog {
+    /// Sealed + active segments, ascending by number.
+    segments: Vec<SegmentMeta>,
+    /// Writer for the active (= last) segment; opened lazily.
+    writer: Option<BufWriter<File>>,
+    active_bytes: u64,
+    /// Highest event seq safely archived to segments.
+    archived_through: Option<u64>,
+    /// Retention dropped this shard's events below this seq.
+    truncated_before: Option<u64>,
+}
+
 struct WalFile {
     writer: BufWriter<File>,
+    /// Duplicate handle used by group-commit leaders to fsync with the
+    /// mutex released (committers keep appending into the next group).
+    sync_fd: Arc<File>,
     /// Next LSN to allocate (per-shard, 1-based).
     next_lsn: u64,
     /// Records appended since the last snapshot compaction.
     since_snapshot: u64,
+    /// Highest LSN written + flushed to the OS.
+    appended_lsn: u64,
+    /// Highest LSN known fsynced (tracked for Group/Always policies).
+    durable_lsn: u64,
+    /// A group fsync is in flight (the leader holds no lock meanwhile).
+    sync_running: bool,
+    /// Incremented on rotation so an in-flight leader's bookkeeping from
+    /// the pre-rotation file is discarded.
+    epoch: u64,
+    /// WAL bytes written since open / last rotation.
+    bytes_written: u64,
+    /// WAL length at the last fsync — the bytes that survive power loss
+    /// (exposed via [`Persist::durable_wal_len`] for crash-simulation
+    /// tests; meaningful under `Group` / `Always` only).
+    durable_bytes: u64,
+    events: EventLog,
 }
 
-/// Open WAL/snapshot files for one store. One writer per shard key, each
-/// behind its own mutex; the store appends while holding the owning
-/// shard's write lock, so per-shard record order equals apply order.
+struct WalCell {
+    wal: Mutex<WalFile>,
+    cv: Condvar,
+}
+
+/// First-I/O-error latch: once set, every append fails fast and the
+/// service layer surfaces 500s instead of diverging from the log.
+struct Poison {
+    flag: AtomicBool,
+    msg: Mutex<Option<String>>,
+}
+
+impl Poison {
+    fn new() -> Arc<Poison> {
+        Arc::new(Poison { flag: AtomicBool::new(false), msg: Mutex::new(None) })
+    }
+
+    fn set(&self, msg: String) {
+        let mut m = self.msg.lock().unwrap();
+        if m.is_none() {
+            eprintln!("persist: poisoned: {msg}");
+            *m = Some(msg);
+        }
+        self.flag.store(true, Ordering::Release);
+    }
+
+    fn get(&self) -> Option<String> {
+        if !self.flag.load(Ordering::Acquire) {
+            return None;
+        }
+        self.msg.lock().unwrap().clone()
+    }
+}
+
+/// Handle returned by [`Persist::append`] under [`FsyncPolicy::Group`]:
+/// blocks until an fsync covers the append (leader/follower group
+/// commit). MUST be awaited only after releasing the owning shard lock,
+/// so later mutations can append into — and share — the commit group.
+pub struct CommitWait {
+    cell: Arc<WalCell>,
+    lsn: u64,
+    interval: Duration,
+    poison: Arc<Poison>,
+}
+
+impl CommitWait {
+    /// Block until this commit's batch is durable (or the log poisons).
+    pub fn wait(self) -> Result<(), String> {
+        let mut wf = self.cell.wal.lock().unwrap();
+        loop {
+            if let Some(e) = self.poison.get() {
+                return Err(e);
+            }
+            if wf.durable_lsn >= self.lsn {
+                return Ok(());
+            }
+            if wf.sync_running {
+                // Follow the in-flight leader. The timeout is a
+                // missed-wakeup guard: on expiry the loop re-checks and
+                // leads as soon as no fsync is in flight.
+                let (g, _) = self.cell.cv.wait_timeout(wf, self.interval).unwrap();
+                wf = g;
+                continue;
+            }
+            // Become the leader: fsync everything appended so far with
+            // the mutex released.
+            wf.sync_running = true;
+            let target_lsn = wf.appended_lsn;
+            let target_bytes = wf.bytes_written;
+            let epoch = wf.epoch;
+            let fd = wf.sync_fd.clone();
+            drop(wf);
+            let res = fd.sync_data();
+            wf = self.cell.wal.lock().unwrap();
+            wf.sync_running = false;
+            match res {
+                Ok(()) => {
+                    if wf.epoch == epoch {
+                        wf.durable_lsn = wf.durable_lsn.max(target_lsn);
+                        wf.durable_bytes = wf.durable_bytes.max(target_bytes);
+                    }
+                    self.cell.cv.notify_all();
+                }
+                Err(e) => {
+                    let msg = format!("wal group fsync: {e}");
+                    self.poison.set(msg.clone());
+                    self.cell.cv.notify_all();
+                    return Err(msg);
+                }
+            }
+        }
+    }
+}
+
+/// Outcome of one [`Persist::append`].
+pub struct Appended {
+    /// Group-commit wait handle; `None` when the append is already
+    /// durable (or durability is not requested by the policy).
+    pub wait: Option<CommitWait>,
+    /// Set when this append triggered a snapshot rotation that archived
+    /// events through the given seq — the caller drops them from its
+    /// in-memory hot tail.
+    pub archived_through: Option<u64>,
+}
+
+/// One shard's recovered state, in apply order.
+pub struct RecoveredShard {
+    pub key: ShardKey,
+    pub records: Vec<WalRecord>,
+    /// Highest event seq already archived to this shard's segments
+    /// (those events are served from disk, not replayed into memory).
+    pub archived_through: Option<u64>,
+    /// Retention dropped this shard's events below this seq.
+    pub truncated_before: Option<u64>,
+}
+
+/// Open WAL/snapshot/segment files for one store. One cell per shard
+/// key; the store appends while holding the owning shard's write lock,
+/// so per-shard record order equals apply order.
 pub struct Persist {
     dir: PathBuf,
     snapshot_every: u64,
-    files: Mutex<BTreeMap<ShardKey, Arc<Mutex<WalFile>>>>,
+    fsync: FsyncPolicy,
+    events_cfg: EventLogConfig,
+    files: Mutex<BTreeMap<ShardKey, Arc<WalCell>>>,
+    poison: Arc<Poison>,
 }
 
 impl std::fmt::Debug for Persist {
@@ -148,6 +435,8 @@ impl std::fmt::Debug for Persist {
         f.debug_struct("Persist")
             .field("dir", &self.dir)
             .field("snapshot_every", &self.snapshot_every)
+            .field("fsync", &self.fsync)
+            .field("events", &self.events_cfg)
             .finish()
     }
 }
@@ -182,18 +471,68 @@ fn parse_line(line: &[u8]) -> Option<(u64, Vec<WalRecord>)> {
     Some((lsn, vec![rec]))
 }
 
+/// Parse one event-segment line.
+fn parse_event_line(line: &[u8]) -> Option<Event> {
+    let text = std::str::from_utf8(line).ok()?;
+    let j = Json::parse(text).ok()?;
+    j.get("seq")?;
+    Some(Event::from_json(&j))
+}
+
+fn open_append(path: &Path) -> crate::Result<(File, u64)> {
+    let file = OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let len = file.metadata().map(|m| m.len()).unwrap_or(0);
+    Ok((file, len))
+}
+
+/// fsync the persist directory itself: file creation and rename are
+/// directory-metadata operations, so a snapshot rename or a fresh event
+/// segment is power-loss-durable only once its dirent is synced too.
+fn sync_dir(dir: &Path) -> std::io::Result<()> {
+    File::open(dir)?.sync_all()
+}
+
+/// First newline-terminated line of `path` without reading the rest of
+/// the file. `Ok(None)` = the file has no terminated first line (empty,
+/// or a torn lone record).
+fn read_first_line(path: &Path) -> crate::Result<Option<Vec<u8>>> {
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut line = Vec::new();
+    BufReader::new(f)
+        .read_until(b'\n', &mut line)
+        .with_context(|| format!("read {}", path.display()))?;
+    if line.last() == Some(&b'\n') {
+        line.pop();
+        Ok(Some(line))
+    } else {
+        Ok(None)
+    }
+}
+
 impl Persist {
     /// Open (creating if needed) a persistence dir and recover its state.
-    /// Returns the recovered records per shard key, global tables first,
-    /// in apply order. Feed them to the store, then start appending.
-    pub fn open(dir: &Path, snapshot_every: u64) -> crate::Result<(Persist, Vec<(ShardKey, Vec<WalRecord>)>)> {
+    /// Returns the recovered shards, global tables first, in apply
+    /// order. Feed them to the store, then start appending.
+    pub fn open(
+        dir: &Path,
+        snapshot_every: u64,
+        fsync: FsyncPolicy,
+        events: EventLogConfig,
+    ) -> crate::Result<(Persist, Vec<RecoveredShard>)> {
         fs::create_dir_all(dir).with_context(|| format!("create persist dir {}", dir.display()))?;
         let mut keys: BTreeSet<ShardKey> = BTreeSet::new();
         for entry in fs::read_dir(dir).with_context(|| format!("read {}", dir.display()))? {
             let name = entry?.file_name().to_string_lossy().into_owned();
             let stem = match name.strip_suffix(".wal").or_else(|| name.strip_suffix(".snap")) {
                 Some(s) => s,
-                None => continue,
+                None => match name.find(".events.") {
+                    Some(i) => &name[..i],
+                    None => continue,
+                },
             };
             if stem == "global" {
                 keys.insert(None);
@@ -201,17 +540,207 @@ impl Persist {
                 keys.insert(Some(SiteId(n)));
             }
         }
-        let persist =
-            Persist { dir: dir.to_path_buf(), snapshot_every, files: Mutex::new(BTreeMap::new()) };
+        let persist = Persist {
+            dir: dir.to_path_buf(),
+            snapshot_every,
+            fsync,
+            events_cfg: events,
+            files: Mutex::new(BTreeMap::new()),
+            poison: Poison::new(),
+        };
         let mut recovered = Vec::new();
         // BTreeSet order puts None (global) first: site rows create their
         // shards before any shard rows are applied.
         for key in keys {
+            let mut events = persist.recover_events(key)?;
+            // Retention is otherwise only evaluated when a rotation
+            // archives events: applying it here too lets an *idle* shard
+            // (no further mutations) still shed aged/oversized segments
+            // across restarts.
+            persist.apply_retention(key, &mut events);
+            let archived_through = events.archived_through;
+            let truncated_before = events.truncated_before;
             let (records, next_lsn, since_snapshot) = persist.recover_key(key)?;
-            persist.install_writer(key, next_lsn, since_snapshot)?;
-            recovered.push((key, records));
+            persist.install_writer(key, next_lsn, since_snapshot, events)?;
+            recovered.push(RecoveredShard { key, records, archived_through, truncated_before });
         }
         Ok((persist, recovered))
+    }
+
+    /// First recorded I/O failure, if the handle is poisoned.
+    pub fn error(&self) -> Option<String> {
+        self.poison.get()
+    }
+
+    /// Fault-injection hook (tests): poison the handle as if an append
+    /// had failed — subsequent writes fail fast.
+    pub fn poison(&self, msg: &str) {
+        self.poison.set(msg.to_string());
+        let files = self.files.lock().unwrap();
+        for cell in files.values() {
+            cell.cv.notify_all();
+        }
+    }
+
+    /// WAL bytes covered by the last fsync for `key` — what survives a
+    /// power loss at this instant (crash-simulation hook; meaningful
+    /// under `Group` / `Always` policies).
+    pub fn durable_wal_len(&self, key: ShardKey) -> Option<u64> {
+        let cell = self.files.lock().unwrap().get(&key).cloned()?;
+        let wf = cell.wal.lock().unwrap();
+        Some(wf.durable_bytes)
+    }
+
+    /// Retention marker for `key`: events below the returned seq may
+    /// have been dropped with their segments.
+    pub fn truncated_before(&self, key: ShardKey) -> Option<u64> {
+        let cell = self.files.lock().unwrap().get(&key).cloned()?;
+        let wf = cell.wal.lock().unwrap();
+        wf.events.truncated_before
+    }
+
+    /// Archived events of `key` with `seq >= since`, read from the
+    /// segment files. Sealed segments are immutable and the active one is
+    /// append-only, so no shard lock is needed: a concurrent archive can
+    /// only expose a clean prefix (torn final line tolerated), and a
+    /// segment deleted mid-read is a retention race — tolerated, because
+    /// callers re-read the truncation marker *after* this returns.
+    /// Unreadable bytes or a corrupt complete record are real storage
+    /// damage and surface as an error, never as a silent gap.
+    pub fn read_archived(&self, key: ShardKey, since: u64) -> Result<Vec<Event>, String> {
+        let Some(cell) = self.files.lock().unwrap().get(&key).cloned() else {
+            return Ok(Vec::new());
+        };
+        let (metas, archived) = {
+            let wf = cell.wal.lock().unwrap();
+            (wf.events.segments.clone(), wf.events.archived_through)
+        };
+        if archived.is_none() {
+            return Ok(Vec::new());
+        }
+        let mut out = Vec::new();
+        for (i, meta) in metas.iter().enumerate() {
+            // Segments hold strictly increasing seqs: if the next segment
+            // starts at or below `since`, this one has nothing relevant.
+            if let Some(next) = metas.get(i + 1) {
+                if next.first_seq != u64::MAX && next.first_seq <= since {
+                    continue;
+                }
+            }
+            let path = segment_path(&self.dir, key, meta.no);
+            let bytes = match fs::read(&path) {
+                Ok(b) => b,
+                // Deleted between the meta snapshot and the read:
+                // retention advanced; the caller's marker re-read covers
+                // exactly the range that vanished.
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
+                Err(e) => return Err(format!("event segment read {}: {e}", path.display())),
+            };
+            let (lines, _partial) = split_records(&bytes);
+            for line in lines {
+                match parse_event_line(line) {
+                    Some(e) if e.seq >= since => out.push(e),
+                    Some(_) => {}
+                    None => return Err(format!("corrupt event record in {}", path.display())),
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Recover one key's segmented event log: discover segments, truncate
+    /// a torn active tail, and locate the archive high-water mark.
+    fn recover_events(&self, key: ShardKey) -> crate::Result<EventLog> {
+        let prefix = format!("{}.events.", file_stem(key));
+        let mut nums: Vec<u64> = Vec::new();
+        let dirents =
+            fs::read_dir(&self.dir).with_context(|| format!("read {}", self.dir.display()))?;
+        for entry in dirents {
+            let name = entry?.file_name().to_string_lossy().into_owned();
+            if let Some(suffix) = name.strip_prefix(&prefix) {
+                if let Ok(n) = suffix.parse::<u64>() {
+                    nums.push(n);
+                }
+            }
+        }
+        nums.sort_unstable();
+        let mut segments = Vec::new();
+        let mut archived_through = None;
+        let last_idx = nums.len().saturating_sub(1);
+        for (i, &no) in nums.iter().enumerate() {
+            let path = segment_path(&self.dir, key, no);
+            if i != last_idx {
+                // Sealed segments are immutable and were written
+                // line-atomically: recover their metadata from the first
+                // line + file length only, keeping startup cost O(number
+                // of segments), not O(total archive bytes). Full
+                // validation is deferred to the (loud) read path.
+                let len =
+                    fs::metadata(&path).with_context(|| format!("stat {}", path.display()))?.len();
+                let first_seq = match read_first_line(&path)? {
+                    Some(line) => {
+                        parse_event_line(&line)
+                            .ok_or_else(|| err!("corrupt event record in {}", path.display()))?
+                            .seq
+                    }
+                    None if len == 0 => u64::MAX,
+                    None => bail!("corrupt event segment {} (unterminated record)", path.display()),
+                };
+                segments.push(SegmentMeta { no, first_seq, bytes: len });
+                continue;
+            }
+            // The final (active) segment is the only one a crash can
+            // tear: read it in full, drop a torn tail, and take the
+            // archive high-water mark from its last record.
+            let bytes = fs::read(&path).with_context(|| format!("read {}", path.display()))?;
+            let valid_len = bytes.iter().rposition(|b| *b == b'\n').map(|p| p + 1).unwrap_or(0);
+            if valid_len < bytes.len() {
+                // Torn tail from a crash mid-archive: drop it so appends
+                // resume on a record boundary. The events are still in
+                // the WAL (archive happens before truncation).
+                let f = OpenOptions::new()
+                    .write(true)
+                    .open(&path)
+                    .with_context(|| format!("open {}", path.display()))?;
+                f.set_len(valid_len as u64)
+                    .with_context(|| format!("truncate {}", path.display()))?;
+            }
+            let (lines, _) = split_records(&bytes[..valid_len]);
+            let mut first_seq = u64::MAX;
+            if let Some(first) = lines.first() {
+                first_seq = parse_event_line(first)
+                    .ok_or_else(|| err!("corrupt event record in {}", path.display()))?
+                    .seq;
+            }
+            if let Some(last) = lines.last() {
+                let seq = parse_event_line(last)
+                    .ok_or_else(|| err!("corrupt event record in {}", path.display()))?
+                    .seq;
+                archived_through = Some(seq);
+            }
+            segments.push(SegmentMeta { no, first_seq, bytes: valid_len as u64 });
+        }
+        if archived_through.is_none() && segments.len() > 1 {
+            // The active segment was empty (crash between creation and
+            // the first archive write): the high-water mark lives in the
+            // sealed segment before it.
+            let prev = &segments[segments.len() - 2];
+            let path = segment_path(&self.dir, key, prev.no);
+            let bytes = fs::read(&path).with_context(|| format!("read {}", path.display()))?;
+            let (lines, _) = split_records(&bytes);
+            if let Some(last) = lines.last() {
+                let seq = parse_event_line(last)
+                    .ok_or_else(|| err!("corrupt event record in {}", path.display()))?
+                    .seq;
+                archived_through = Some(seq);
+            }
+        }
+        let truncated_before = match segments.first() {
+            Some(m) if m.no > 1 && m.first_seq != u64::MAX => Some(m.first_seq),
+            _ => None,
+        };
+        let active_bytes = segments.last().map(|m| m.bytes).unwrap_or(0);
+        Ok(EventLog { segments, writer: None, active_bytes, archived_through, truncated_before })
     }
 
     /// Recover one key: snapshot records first, then the WAL tail above
@@ -302,78 +831,283 @@ impl Persist {
         Ok((records, max_lsn + 1, wal_count))
     }
 
-    fn install_writer(&self, key: ShardKey, next_lsn: u64, since_snapshot: u64) -> crate::Result<()> {
+    /// Open `key`'s WAL file and build its cell (everything logged so
+    /// far — `len` bytes — counts as the durable baseline).
+    fn open_cell(
+        &self,
+        key: ShardKey,
+        next_lsn: u64,
+        since_snapshot: u64,
+        events: EventLog,
+    ) -> crate::Result<Arc<WalCell>> {
         let path = wal_path(&self.dir, key);
-        let file = OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(&path)
-            .with_context(|| format!("open {}", path.display()))?;
-        self.files.lock().unwrap().insert(
-            key,
-            Arc::new(Mutex::new(WalFile { writer: BufWriter::new(file), next_lsn, since_snapshot })),
-        );
+        let (file, len) = open_append(&path)?;
+        let sync_fd =
+            Arc::new(file.try_clone().with_context(|| format!("dup {}", path.display()))?);
+        Ok(Arc::new(WalCell {
+            wal: Mutex::new(WalFile {
+                writer: BufWriter::new(file),
+                sync_fd,
+                next_lsn,
+                since_snapshot,
+                appended_lsn: next_lsn - 1,
+                durable_lsn: next_lsn - 1,
+                sync_running: false,
+                epoch: 0,
+                bytes_written: len,
+                durable_bytes: len,
+                events,
+            }),
+            cv: Condvar::new(),
+        }))
+    }
+
+    fn install_writer(
+        &self,
+        key: ShardKey,
+        next_lsn: u64,
+        since_snapshot: u64,
+        events: EventLog,
+    ) -> crate::Result<()> {
+        let cell = self.open_cell(key, next_lsn, since_snapshot, events)?;
+        self.files.lock().unwrap().insert(key, cell);
         Ok(())
+    }
+
+    /// Get or lazily create the cell for `key`.
+    fn cell(&self, key: ShardKey) -> Result<Arc<WalCell>, String> {
+        let mut files = self.files.lock().unwrap();
+        if let Some(c) = files.get(&key) {
+            return Ok(c.clone());
+        }
+        match self.open_cell(key, 1, 0, EventLog::default()) {
+            Ok(cell) => {
+                files.insert(key, cell.clone());
+                Ok(cell)
+            }
+            Err(e) => {
+                let msg = format!("wal open {}: {e}", file_stem(key));
+                self.poison.set(msg.clone());
+                Err(msg)
+            }
+        }
     }
 
     /// Append `records` to `key`'s WAL; the caller holds the owning shard
     /// write lock, so record order matches apply order. When the
     /// per-shard record budget is exhausted, `snapshot` is invoked (under
-    /// the same lock — it sees exactly the logged state) and the log is
-    /// compacted. A dead disk panics: a durability-mode service must not
-    /// silently keep running without its log.
-    pub fn append(&self, key: ShardKey, records: &[WalRecord], snapshot: impl FnOnce() -> Vec<WalRecord>) {
+    /// the same lock — it sees exactly the logged state); its events are
+    /// archived to the segmented log and its rows become the snapshot.
+    ///
+    /// Returns the group-commit wait handle (await it AFTER releasing the
+    /// shard lock) and the archive high-water mark when rotation ran. Any
+    /// I/O error poisons the handle and fails this and all later appends.
+    pub fn append(
+        &self,
+        key: ShardKey,
+        records: &[WalRecord],
+        snapshot: impl FnOnce() -> (Vec<WalRecord>, Vec<Event>),
+    ) -> Result<Appended, String> {
         if records.is_empty() {
-            return;
+            return Ok(Appended { wait: None, archived_through: None });
         }
-        let file = {
-            let mut files = self.files.lock().unwrap();
-            files
-                .entry(key)
-                .or_insert_with(|| {
-                    let path = wal_path(&self.dir, key);
-                    let f = OpenOptions::new()
-                        .create(true)
-                        .append(true)
-                        .open(&path)
-                        .unwrap_or_else(|e| panic!("open {}: {e}", path.display()));
-                    Arc::new(Mutex::new(WalFile {
-                        writer: BufWriter::new(f),
-                        next_lsn: 1,
-                        since_snapshot: 0,
-                    }))
-                })
-                .clone()
-        };
-        let mut wf = file.lock().unwrap();
+        if let Some(e) = self.poison.get() {
+            return Err(e);
+        }
+        let cell = self.cell(key)?;
+        let mut wf = cell.wal.lock().unwrap();
         // One line = one atomic batch: the whole mutation (rows + events)
         // commits or is rolled back together by torn-tail recovery.
+        let lsn = wf.next_lsn;
         let line = Json::obj(vec![
-            ("lsn", Json::num(wf.next_lsn as f64)),
+            ("lsn", Json::num(lsn as f64)),
             ("batch", Json::Arr(records.iter().map(WalRecord::to_json).collect())),
         ]);
         wf.next_lsn += 1;
         let mut buf = line.to_string();
         buf.push('\n');
-        wf.writer.write_all(buf.as_bytes()).expect("wal append");
-        wf.writer.flush().expect("wal flush");
+        let io = wf.writer.write_all(buf.as_bytes()).and_then(|_| wf.writer.flush());
+        if let Err(e) = io {
+            let msg = format!("wal append {}: {e}", file_stem(key));
+            self.poison.set(msg.clone());
+            cell.cv.notify_all();
+            return Err(msg);
+        }
+        wf.appended_lsn = lsn;
+        wf.bytes_written += buf.len() as u64;
         wf.since_snapshot += records.len() as u64;
+
+        // Only `Always` fsyncs inline (under the log mutex — and the
+        // caller's shard lock — by design: that policy trades the hot
+        // path for per-append durability). `Group` NEVER fsyncs here:
+        // every group append hands back a CommitWait that the store
+        // awaits after releasing its shard lock, and that waiter-side
+        // leader election keeps fsyncs off both locks.
+        if matches!(self.fsync, FsyncPolicy::Always) {
+            match wf.sync_fd.sync_data() {
+                Ok(()) => {
+                    wf.durable_lsn = lsn;
+                    wf.durable_bytes = wf.bytes_written;
+                    cell.cv.notify_all();
+                }
+                Err(e) => {
+                    let msg = format!("wal fsync {}: {e}", file_stem(key));
+                    self.poison.set(msg.clone());
+                    cell.cv.notify_all();
+                    return Err(msg);
+                }
+            }
+        }
+
+        let mut archived_through = None;
         if self.snapshot_every > 0 && wf.since_snapshot >= self.snapshot_every {
-            self.rotate(key, &mut wf, snapshot());
+            archived_through = self.rotate(key, &mut wf, snapshot());
+            cell.cv.notify_all();
+            if let Some(e) = self.poison.get() {
+                return Err(e);
+            }
+        }
+
+        let wait = match self.fsync {
+            FsyncPolicy::Group { interval_ms, .. } if wf.durable_lsn < lsn => Some(CommitWait {
+                cell: cell.clone(),
+                lsn,
+                interval: Duration::from_millis(interval_ms.max(1)),
+                poison: self.poison.clone(),
+            }),
+            _ => None,
+        };
+        Ok(Appended { wait, archived_through })
+    }
+
+    /// Append `events` to the active segment (fsynced), sealing / rolling
+    /// / retaining segments as configured.
+    fn archive_events(
+        &self,
+        key: ShardKey,
+        el: &mut EventLog,
+        events: &[Event],
+    ) -> std::io::Result<Option<u64>> {
+        if events.is_empty() {
+            return Ok(el.archived_through);
+        }
+        if el.writer.is_none() {
+            let reopen =
+                el.segments.last().filter(|m| m.bytes < self.events_cfg.segment_bytes).cloned();
+            match reopen {
+                Some(meta) => {
+                    // Reopen the under-sized active segment from a prior
+                    // process life.
+                    let f = OpenOptions::new()
+                        .create(true)
+                        .append(true)
+                        .open(segment_path(&self.dir, key, meta.no))?;
+                    el.active_bytes = meta.bytes;
+                    el.writer = Some(BufWriter::new(f));
+                }
+                None => {
+                    let no = el.segments.last().map(|m| m.no + 1).unwrap_or(1);
+                    let f = OpenOptions::new()
+                        .create(true)
+                        .append(true)
+                        .open(segment_path(&self.dir, key, no))?;
+                    // Make the new segment's dirent durable before any
+                    // event is considered archived out of the WAL.
+                    sync_dir(&self.dir)?;
+                    el.segments.push(SegmentMeta { no, first_seq: u64::MAX, bytes: 0 });
+                    el.active_bytes = 0;
+                    el.writer = Some(BufWriter::new(f));
+                }
+            }
+        }
+        let mut buf = String::new();
+        for e in events {
+            buf.push_str(&e.to_json().to_string());
+            buf.push('\n');
+        }
+        let w = el.writer.as_mut().expect("active segment writer");
+        w.write_all(buf.as_bytes())?;
+        w.flush()?;
+        w.get_ref().sync_data()?;
+        el.active_bytes += buf.len() as u64;
+        let meta = el.segments.last_mut().expect("active segment meta");
+        meta.bytes = el.active_bytes;
+        if meta.first_seq == u64::MAX {
+            meta.first_seq = events[0].seq;
+        }
+        el.archived_through = events.last().map(|e| e.seq);
+        if el.active_bytes >= self.events_cfg.segment_bytes {
+            el.writer = None; // sealed; the next archive starts a new segment
+        }
+        self.apply_retention(key, el);
+        Ok(el.archived_through)
+    }
+
+    /// Drop the oldest sealed segments that violate the size/age caps.
+    /// The newest segment is never deleted — it anchors the segment
+    /// numbering and the archive high-water mark across reopens.
+    fn apply_retention(&self, key: ShardKey, el: &mut EventLog) {
+        let cfg = &self.events_cfg;
+        if cfg.retain_bytes == 0 && cfg.retain_age_s == 0 {
+            return;
+        }
+        while el.segments.len() > 1 {
+            let total: u64 = el.segments.iter().map(|m| m.bytes).sum();
+            let oldest_no = el.segments[0].no;
+            let path = segment_path(&self.dir, key, oldest_no);
+            let over_bytes = cfg.retain_bytes > 0 && total > cfg.retain_bytes;
+            let over_age = cfg.retain_age_s > 0
+                && fs::metadata(&path)
+                    .and_then(|m| m.modified())
+                    .ok()
+                    .and_then(|t| t.elapsed().ok())
+                    .map(|age| age.as_secs() > cfg.retain_age_s)
+                    .unwrap_or(false);
+            if !over_bytes && !over_age {
+                break;
+            }
+            if let Err(e) = fs::remove_file(&path) {
+                eprintln!("event-log retention: remove {}: {e}", path.display());
+                break;
+            }
+            el.segments.remove(0);
+            if let Some(first) = el.segments.first() {
+                if first.first_seq != u64::MAX {
+                    el.truncated_before = Some(first.first_seq);
+                }
+            }
         }
     }
 
-    /// Write a compacting snapshot covering everything logged so far,
-    /// then truncate the WAL. Failure is reported but non-fatal: the WAL
-    /// keeps the full history and rotation retries at the next threshold.
-    fn rotate(&self, key: ShardKey, wf: &mut WalFile, records: Vec<WalRecord>) {
+    /// Snapshot rotation: archive the un-archived events to the segment
+    /// log (fsynced), write a rows-only compacting snapshot, truncate the
+    /// WAL. Returns the archive high-water mark when events were
+    /// archived. An archive failure poisons the handle (continuing could
+    /// duplicate events in the segments); snapshot / truncate failures
+    /// are non-fatal — the WAL keeps the history and rotation retries at
+    /// the next threshold, and recovery deduplicates WAL events already
+    /// covered by the segments.
+    fn rotate(
+        &self,
+        key: ShardKey,
+        wf: &mut WalFile,
+        snapshot: (Vec<WalRecord>, Vec<Event>),
+    ) -> Option<u64> {
+        let (rows, events) = snapshot;
+        let archived = match self.archive_events(key, &mut wf.events, &events) {
+            Ok(_) => events.last().map(|e| e.seq),
+            Err(e) => {
+                self.poison.set(format!("event archive {}: {e}", file_stem(key)));
+                return None;
+            }
+        };
         let covered = wf.next_lsn - 1;
         let tmp = self.dir.join(format!("{}.snap.tmp", file_stem(key)));
         let snap = snap_path(&self.dir, key);
         let mut out = String::new();
         out.push_str(&Json::obj(vec![("snap_lsn", Json::num(covered as f64))]).to_string());
         out.push('\n');
-        for rec in &records {
+        for rec in &rows {
             out.push_str(&Json::obj(vec![("rec", rec.to_json())]).to_string());
             out.push('\n');
         }
@@ -382,14 +1116,28 @@ impl Persist {
             f.write_all(out.as_bytes())?;
             f.sync_all()?;
             fs::rename(&tmp, &snap)?;
+            // The rename is a directory-metadata op: sync the dirent
+            // BEFORE truncating the WAL, or a power loss could persist
+            // the truncation but not the snapshot it depends on.
+            sync_dir(&self.dir)?;
             let fresh = File::create(wal_path(&self.dir, key))?;
+            let sync_fd = fresh.try_clone()?;
             wf.writer = BufWriter::new(fresh);
+            wf.sync_fd = Arc::new(sync_fd);
             wf.since_snapshot = 0;
+            wf.bytes_written = 0;
+            wf.durable_bytes = 0;
+            // Everything logged so far now lives in the fsynced snapshot
+            // + segments: group waiters are satisfied, and any in-flight
+            // leader's stale bookkeeping is invalidated via the epoch.
+            wf.durable_lsn = wf.appended_lsn;
+            wf.epoch += 1;
             Ok(())
         })();
         if let Err(e) = result {
             eprintln!("wal snapshot rotation failed for {}: {e}", file_stem(key));
         }
+        archived
     }
 }
 
@@ -402,6 +1150,14 @@ mod tests {
         let _ = fs::remove_dir_all(&d);
         fs::create_dir_all(&d).unwrap();
         d
+    }
+
+    fn open_flush(dir: &Path, snapshot_every: u64) -> (Persist, Vec<RecoveredShard>) {
+        Persist::open(dir, snapshot_every, FsyncPolicy::Never, EventLogConfig::default()).unwrap()
+    }
+
+    fn no_snap() -> (Vec<WalRecord>, Vec<Event>) {
+        (Vec::new(), Vec::new())
     }
 
     fn job(id: u64, state: JobState) -> Job {
@@ -419,6 +1175,18 @@ mod tests {
             max_attempts: 3,
             session: None,
             created_at: 0.0,
+        }
+    }
+
+    fn ev(seq: u64) -> Event {
+        Event {
+            seq,
+            job_id: JobId(5),
+            site_id: SiteId(1),
+            ts: seq as f64,
+            from: JobState::Created,
+            to: JobState::Ready,
+            data: String::new(),
         }
     }
 
@@ -450,6 +1218,31 @@ mod tests {
     }
 
     #[test]
+    fn fsync_policy_parses() {
+        assert_eq!(FsyncPolicy::parse("never"), Some(FsyncPolicy::Never));
+        assert_eq!(FsyncPolicy::parse("flush"), Some(FsyncPolicy::Never));
+        assert_eq!(FsyncPolicy::parse("always"), Some(FsyncPolicy::Always));
+        assert_eq!(
+            FsyncPolicy::parse("group"),
+            Some(FsyncPolicy::Group {
+                records: FsyncPolicy::DEFAULT_GROUP_RECORDS,
+                interval_ms: FsyncPolicy::DEFAULT_GROUP_INTERVAL_MS,
+            })
+        );
+        assert_eq!(
+            FsyncPolicy::parse("group:8,2ms"),
+            Some(FsyncPolicy::Group { records: 8, interval_ms: 2 })
+        );
+        assert_eq!(
+            FsyncPolicy::parse("group:128,50"),
+            Some(FsyncPolicy::Group { records: 128, interval_ms: 50 })
+        );
+        assert_eq!(FsyncPolicy::parse("group:0,5"), None);
+        assert_eq!(FsyncPolicy::parse("sometimes"), None);
+        assert_eq!(FsyncPolicy::parse("group:"), None);
+    }
+
+    #[test]
     fn split_records_handles_partial_tail() {
         let (lines, partial) = split_records(b"a\nb\n");
         assert_eq!(lines, vec![b"a".as_slice(), b"b".as_slice()]);
@@ -472,16 +1265,17 @@ mod tests {
             WalRecord::Job(job(6, JobState::Created)),
         ];
         {
-            let (p, recovered) = Persist::open(&dir, 0).unwrap();
+            let (p, recovered) = open_flush(&dir, 0);
             assert!(recovered.is_empty());
-            p.append(key, &written, Vec::new);
-            p.append(None, &[WalRecord::User(User { id: UserId(1), name: "admin".into() })], Vec::new);
+            p.append(key, &written, no_snap).unwrap();
+            let user = [WalRecord::User(User { id: UserId(1), name: "admin".into() })];
+            p.append(None, &user, no_snap).unwrap();
         }
-        let (_p, recovered) = Persist::open(&dir, 0).unwrap();
+        let (_p, recovered) = open_flush(&dir, 0);
         assert_eq!(recovered.len(), 2);
-        assert_eq!(recovered[0].0, None);
-        assert_eq!(recovered[1].0, key);
-        assert_eq!(rec_strings(&recovered[1].1), rec_strings(&written));
+        assert_eq!(recovered[0].key, None);
+        assert_eq!(recovered[1].key, key);
+        assert_eq!(rec_strings(&recovered[1].records), rec_strings(&written));
         let _ = fs::remove_dir_all(&dir);
     }
 
@@ -490,19 +1284,22 @@ mod tests {
         let dir = tmpdir("rotate");
         let key = Some(SiteId(1));
         {
-            let (p, _) = Persist::open(&dir, 2).unwrap();
+            let (p, _) = open_flush(&dir, 2);
             // Threshold 2: this append rotates, compacting to one row.
-            p.append(key, &[WalRecord::Job(job(5, JobState::Ready)), WalRecord::Job(job(5, JobState::StagedIn))], || {
-                vec![WalRecord::Job(job(5, JobState::StagedIn))]
-            });
+            let recs = [
+                WalRecord::Job(job(5, JobState::Ready)),
+                WalRecord::Job(job(5, JobState::StagedIn)),
+            ];
+            p.append(key, &recs, || (vec![WalRecord::Job(job(5, JobState::StagedIn))], Vec::new()))
+                .unwrap();
             // Post-rotation append lands in the fresh WAL.
-            p.append(key, &[WalRecord::Job(job(6, JobState::Created))], Vec::new);
+            p.append(key, &[WalRecord::Job(job(6, JobState::Created))], no_snap).unwrap();
         }
         assert!(snap_path(&dir, key).exists());
-        let (_p, recovered) = Persist::open(&dir, 2).unwrap();
+        let (_p, recovered) = open_flush(&dir, 2);
         assert_eq!(recovered.len(), 1);
         assert_eq!(
-            rec_strings(&recovered[0].1),
+            rec_strings(&recovered[0].records),
             rec_strings(&[
                 WalRecord::Job(job(5, JobState::StagedIn)),
                 WalRecord::Job(job(6, JobState::Created)),
@@ -512,29 +1309,130 @@ mod tests {
     }
 
     #[test]
+    fn rotation_archives_events_and_keeps_snapshot_event_free() {
+        let dir = tmpdir("rotate-events");
+        let key = Some(SiteId(1));
+        {
+            let (p, _) = open_flush(&dir, 2);
+            p.append(
+                key,
+                &[WalRecord::Job(job(5, JobState::Ready)), WalRecord::Event(ev(0))],
+                || (vec![WalRecord::Job(job(5, JobState::Ready))], vec![ev(0)]),
+            )
+            .unwrap();
+        }
+        let snap = fs::read_to_string(snap_path(&dir, key)).unwrap();
+        assert!(!snap.contains("\"t\":\"event\""), "snapshot must hold rows only: {snap}");
+        assert!(segment_path(&dir, key, 1).exists());
+        let (p, recovered) = open_flush(&dir, 2);
+        assert_eq!(recovered[0].archived_through, Some(0));
+        // The archived event is served from the segment, not the WAL.
+        let rec = rec_strings(&recovered[0].records);
+        assert!(rec.iter().all(|s| !s.contains("\"t\":\"event\"")), "{rec:?}");
+        let arch = p.read_archived(key, 0).unwrap();
+        assert_eq!(arch.len(), 1);
+        assert_eq!(arch[0].seq, 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn segments_roll_and_retention_truncates() {
+        let dir = tmpdir("segments");
+        let key = Some(SiteId(1));
+        let cfg = EventLogConfig { segment_bytes: 1, retain_bytes: 0, retain_age_s: 0 };
+        {
+            let (p, _) = Persist::open(&dir, 1, FsyncPolicy::Never, cfg.clone()).unwrap();
+            // Every append rotates (threshold 1) and every archive seals
+            // its segment (1-byte cap): one segment per event.
+            for seq in 0..4u64 {
+                p.append(key, &[WalRecord::Event(ev(seq))], || (Vec::new(), vec![ev(seq)]))
+                    .unwrap();
+            }
+            assert_eq!(p.read_archived(key, 0).unwrap().len(), 4);
+            assert_eq!(p.read_archived(key, 2).unwrap().len(), 2);
+            assert_eq!(p.truncated_before(key), None);
+        }
+        // Reopen with a byte cap: the next archive drops old segments.
+        let cfg2 = EventLogConfig { segment_bytes: 1, retain_bytes: 100, retain_age_s: 0 };
+        let (p, recovered) = Persist::open(&dir, 1, FsyncPolicy::Never, cfg2).unwrap();
+        assert_eq!(recovered[0].archived_through, Some(3));
+        p.append(key, &[WalRecord::Event(ev(4))], || (Vec::new(), vec![ev(4)])).unwrap();
+        let t = p.truncated_before(key).expect("retention must set the truncation marker");
+        assert!(t > 0, "oldest segments dropped");
+        let remaining = p.read_archived(key, 0).unwrap();
+        assert_eq!(remaining.first().unwrap().seq, t, "events from the marker on are intact");
+        assert_eq!(remaining.last().unwrap().seq, 4);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn group_commit_acks_are_durable_and_tracked() {
+        let dir = tmpdir("group");
+        let key = Some(SiteId(1));
+        let (p, _) = Persist::open(
+            &dir,
+            0,
+            FsyncPolicy::Group { records: 2, interval_ms: 5 },
+            EventLogConfig::default(),
+        )
+        .unwrap();
+        for i in 0..5u64 {
+            let rec = [WalRecord::Job(job(10 + i, JobState::Created))];
+            let ap = p.append(key, &rec, no_snap).unwrap();
+            if let Some(w) = ap.wait {
+                w.wait().unwrap();
+            }
+        }
+        // Every acknowledged append is covered by an fsync.
+        let durable = p.durable_wal_len(key).unwrap();
+        let len = fs::metadata(wal_path(&dir, key)).unwrap().len();
+        assert_eq!(durable, len, "acknowledged tail must be fsynced");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn poisoned_handle_fails_fast() {
+        let dir = tmpdir("poison");
+        let key = Some(SiteId(1));
+        let (p, _) = open_flush(&dir, 0);
+        p.append(key, &[WalRecord::Job(job(5, JobState::Ready))], no_snap).unwrap();
+        assert!(p.error().is_none());
+        p.poison("injected disk failure");
+        assert!(p.error().unwrap().contains("injected"));
+        let err = p.append(key, &[WalRecord::Job(job(6, JobState::Ready))], no_snap).unwrap_err();
+        assert!(err.contains("injected"));
+        // The pre-poison record is still recoverable; the rejected one is
+        // not (it was never written).
+        drop(p);
+        let (_p, recovered) = open_flush(&dir, 0);
+        assert_eq!(recovered[0].records.len(), 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn torn_final_record_is_dropped() {
         let dir = tmpdir("torn");
         let key = Some(SiteId(1));
         {
-            let (p, _) = Persist::open(&dir, 0).unwrap();
-            p.append(key, &[WalRecord::Job(job(5, JobState::Ready))], Vec::new);
+            let (p, _) = open_flush(&dir, 0);
+            p.append(key, &[WalRecord::Job(job(5, JobState::Ready))], no_snap).unwrap();
         }
         // Simulate a crash mid-append: partial JSON, no trailing newline.
         let mut f = OpenOptions::new().append(true).open(wal_path(&dir, key)).unwrap();
         f.write_all(b"{\"lsn\":2,\"rec\":{\"t\":\"job\",\"r\":{\"id\":").unwrap();
         drop(f);
         {
-            let (p, recovered) = Persist::open(&dir, 0).unwrap();
+            let (p, recovered) = open_flush(&dir, 0);
             assert_eq!(
-                rec_strings(&recovered[0].1),
+                rec_strings(&recovered[0].records),
                 rec_strings(&[WalRecord::Job(job(5, JobState::Ready))])
             );
             // The torn tail was truncated on open: appends start on a
             // record boundary and the log stays parseable.
-            p.append(key, &[WalRecord::Job(job(6, JobState::Created))], Vec::new);
+            p.append(key, &[WalRecord::Job(job(6, JobState::Created))], no_snap).unwrap();
         }
-        let (_p, recovered) = Persist::open(&dir, 0).unwrap();
-        assert_eq!(recovered[0].1.len(), 2);
+        let (_p, recovered) = open_flush(&dir, 0);
+        assert_eq!(recovered[0].records.len(), 2);
         let _ = fs::remove_dir_all(&dir);
     }
 
@@ -543,15 +1441,15 @@ mod tests {
         let dir = tmpdir("lsn");
         let key = Some(SiteId(1));
         {
-            let (p, _) = Persist::open(&dir, 0).unwrap();
-            p.append(key, &[WalRecord::Job(job(5, JobState::Ready))], Vec::new);
+            let (p, _) = open_flush(&dir, 0);
+            p.append(key, &[WalRecord::Job(job(5, JobState::Ready))], no_snap).unwrap();
         }
         {
-            let (p, _) = Persist::open(&dir, 0).unwrap();
-            p.append(key, &[WalRecord::Job(job(6, JobState::Ready))], Vec::new);
+            let (p, _) = open_flush(&dir, 0);
+            p.append(key, &[WalRecord::Job(job(6, JobState::Ready))], no_snap).unwrap();
         }
-        let (_p, recovered) = Persist::open(&dir, 0).unwrap();
-        assert_eq!(recovered[0].1.len(), 2, "no records lost across reopen");
+        let (_p, recovered) = open_flush(&dir, 0);
+        assert_eq!(recovered[0].records.len(), 2, "no records lost across reopen");
         let _ = fs::remove_dir_all(&dir);
     }
 }

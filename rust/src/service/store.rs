@@ -30,9 +30,9 @@ use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
-use super::api::ApiError;
+use super::api::{ApiError, EventsPage};
 use super::models::*;
-use super::persist::{Persist, PersistMode, WalRecord};
+use super::persist::{CommitWait, Persist, PersistMode, ShardKey, WalRecord};
 use super::state;
 
 /// Read-mostly global tables: identity and topology.
@@ -62,7 +62,12 @@ struct Shard {
     sessions: BTreeMap<SessionId, Session>,
     batch_jobs: BTreeMap<BatchJobId, BatchJob>,
     titems: BTreeMap<TransferItemId, TransferItem>,
+    /// Hot tail of the event log: events not yet archived to the
+    /// segmented per-shard event files (everything, in ephemeral mode).
     events: Vec<Event>,
+    /// Memory holds every shard event with `seq >=` this; older events
+    /// are served from the persist layer's segments.
+    events_trimmed_before: u64,
     jobs_by_state: BTreeMap<JobState, BTreeSet<JobId>>,
     titems_by_state: BTreeMap<(Direction, TransferState), BTreeSet<TransferItemId>>,
     titems_by_job: BTreeMap<JobId, Vec<TransferItemId>>,
@@ -337,13 +342,31 @@ impl Store {
     pub fn open(mode: &PersistMode) -> crate::Result<Store> {
         match mode {
             PersistMode::Ephemeral => Ok(Store::new()),
-            PersistMode::Wal { dir, snapshot_every } => {
-                let (persist, recovered) = Persist::open(dir, *snapshot_every)?;
+            PersistMode::Wal { dir, snapshot_every, fsync, events } => {
+                let (persist, recovered) =
+                    Persist::open(dir, *snapshot_every, *fsync, events.clone())?;
                 let mut store = Store::new();
                 // Replay with `persist` unset: recovery must not re-log.
-                for (_key, records) in recovered {
-                    for rec in records {
+                for shard in recovered {
+                    let archived = shard.archived_through;
+                    for rec in shard.records {
+                        if let WalRecord::Event(e) = &rec {
+                            if archived.is_some_and(|a| e.seq <= a) {
+                                // Already durable in a segment (crash
+                                // between archive and WAL truncation):
+                                // count the seq, keep it out of memory.
+                                store.event_seq.fetch_max(e.seq + 1, Ordering::Relaxed);
+                                continue;
+                            }
+                        }
                         store.replay(rec);
+                    }
+                    if let Some(a) = archived {
+                        store.event_seq.fetch_max(a + 1, Ordering::Relaxed);
+                        if let Some(site) = shard.key {
+                            let sh = store.shard_or_create(site);
+                            sh.write().unwrap().events_trimmed_before = a + 1;
+                        }
                     }
                 }
                 store.persist = Some(Arc::new(persist));
@@ -442,35 +465,94 @@ impl Store {
     }
 
     /// Append shard-scoped records while the shard write guard is held.
-    fn wal_shard(&self, site: SiteId, sh: &Shard, records: Vec<WalRecord>) {
-        if let Some(p) = &self.persist {
-            p.append(Some(site), &records, || Self::shard_snapshot_records(sh));
+    /// Returns the group-commit wait handle, which the caller MUST await
+    /// via [`Store::await_commit`] only after releasing the shard lock —
+    /// that is what lets later mutations join the same commit group. When
+    /// the append triggered a snapshot rotation, the freshly archived
+    /// events are trimmed from the in-memory hot tail (they are served
+    /// from the segment files from now on).
+    fn wal_shard(
+        &self,
+        site: SiteId,
+        sh: &mut Shard,
+        records: Vec<WalRecord>,
+    ) -> Option<CommitWait> {
+        let p = self.persist.as_ref()?;
+        let appended = p.append(Some(site), &records, || Self::shard_snapshot(sh));
+        match appended {
+            Ok(appended) => {
+                if let Some(thru) = appended.archived_through {
+                    sh.events.retain(|e| e.seq > thru);
+                    sh.events_trimmed_before = thru + 1;
+                }
+                appended.wait
+            }
+            // Poisoned: recorded inside Persist, surfaced per-request by
+            // the service layer via Store::persist_error.
+            Err(_) => None,
         }
     }
 
-    /// Full compacted state of one shard (snapshot contents).
-    fn shard_snapshot_records(sh: &Shard) -> Vec<WalRecord> {
-        let mut out = Vec::new();
-        out.extend(sh.jobs.values().cloned().map(WalRecord::Job));
-        out.extend(sh.sessions.values().cloned().map(WalRecord::Session));
-        out.extend(sh.batch_jobs.values().cloned().map(WalRecord::Batch));
-        out.extend(sh.titems.values().cloned().map(WalRecord::Titem));
-        out.extend(sh.events.iter().cloned().map(WalRecord::Event));
-        out
+    /// Full compacted row state of one shard plus its un-archived events
+    /// (the snapshot holds live rows only; events go to the segmented
+    /// event log, so rotation cost is O(live rows)).
+    fn shard_snapshot(sh: &Shard) -> (Vec<WalRecord>, Vec<Event>) {
+        let mut rows = Vec::new();
+        rows.extend(sh.jobs.values().cloned().map(WalRecord::Job));
+        rows.extend(sh.sessions.values().cloned().map(WalRecord::Session));
+        rows.extend(sh.batch_jobs.values().cloned().map(WalRecord::Batch));
+        rows.extend(sh.titems.values().cloned().map(WalRecord::Titem));
+        (rows, sh.events.clone())
     }
 
-    /// Append a global-table record.
-    fn wal_global(&self, record: WalRecord) {
-        if let Some(p) = &self.persist {
-            let g = self.global.read().unwrap();
-            p.append(None, std::slice::from_ref(&record), || {
-                let mut out = Vec::new();
-                out.extend(g.users.values().cloned().map(WalRecord::User));
-                out.extend(g.sites.values().cloned().map(WalRecord::Site));
-                out.extend(g.apps.values().cloned().map(WalRecord::App));
-                out
-            });
+    /// Append a global-table record. The returned wait handle is awaited
+    /// by the caller after the global lock is released.
+    fn wal_global(&self, record: WalRecord) -> Option<CommitWait> {
+        let p = self.persist.as_ref()?;
+        let g = self.global.read().unwrap();
+        let appended = p.append(None, std::slice::from_ref(&record), || {
+            let mut rows = Vec::new();
+            rows.extend(g.users.values().cloned().map(WalRecord::User));
+            rows.extend(g.sites.values().cloned().map(WalRecord::Site));
+            rows.extend(g.apps.values().cloned().map(WalRecord::App));
+            (rows, Vec::new())
+        });
+        match appended {
+            Ok(a) => a.wait,
+            Err(_) => None,
         }
+    }
+
+    /// Block until a group-commit fsync covers the given append (no-op
+    /// for the other fsync policies). Call only after every lock the
+    /// mutation held has been released.
+    fn await_commit(wait: Option<CommitWait>) {
+        if let Some(w) = wait {
+            // A fsync failure poisons the persist handle; it is surfaced
+            // as a 500 by the service layer, so the result is advisory.
+            let _ = w.wait();
+        }
+    }
+
+    /// First persist-layer I/O failure, if any (the store is poisoned:
+    /// in-memory state may be ahead of the durable log, and all further
+    /// appends fail fast).
+    pub fn persist_error(&self) -> Option<String> {
+        self.persist.as_ref().and_then(|p| p.error())
+    }
+
+    /// Fault-injection hook (tests): poison the persist handle as if a
+    /// WAL write had failed.
+    pub fn poison_persist(&self, msg: &str) {
+        if let Some(p) = &self.persist {
+            p.poison(msg);
+        }
+    }
+
+    /// WAL bytes covered by the last fsync for `key` — what survives a
+    /// power loss at this instant (crash-simulation hook for tests).
+    pub fn wal_durable_len(&self, key: ShardKey) -> Option<u64> {
+        self.persist.as_ref().and_then(|p| p.durable_wal_len(key))
     }
 
     /// Events appended to `sh` since index `ev0`, as WAL records.
@@ -529,7 +611,7 @@ impl Store {
         let rec = self.persist.is_some().then(|| WalRecord::User(user.clone()));
         self.global.write().unwrap().users.insert(user.id, user);
         if let Some(rec) = rec {
-            self.wal_global(rec);
+            Self::await_commit(self.wal_global(rec));
         }
     }
 
@@ -549,7 +631,7 @@ impl Store {
         self.global.write().unwrap().sites.insert(id, site);
         self.shards.write().unwrap().entry(id).or_default();
         if let Some(rec) = rec {
-            self.wal_global(rec);
+            Self::await_commit(self.wal_global(rec));
         }
     }
 
@@ -561,7 +643,7 @@ impl Store {
         let rec = self.persist.is_some().then(|| WalRecord::App(app.clone()));
         self.global.write().unwrap().apps.insert(app.id, app);
         if let Some(rec) = rec {
-            self.wal_global(rec);
+            Self::await_commit(self.wal_global(rec));
         }
     }
 
@@ -596,9 +678,9 @@ impl Store {
         sh.jobs_by_state.entry(job.state).or_default().insert(job.id);
         let rec = self.persist.is_some().then(|| WalRecord::Job(job.clone()));
         sh.jobs.insert(job.id, job);
-        if let Some(rec) = rec {
-            self.wal_shard(site, &sh, vec![rec]);
-        }
+        let wait = rec.and_then(|rec| self.wal_shard(site, &mut sh, vec![rec]));
+        drop(sh);
+        Self::await_commit(wait);
     }
 
     pub fn job(&self, id: JobId) -> Option<Job> {
@@ -626,6 +708,12 @@ impl Store {
         self.routes.read().unwrap().children.get(&parent).cloned().unwrap_or_default()
     }
 
+    /// Owning site of `id` (routing-table lookup: no shard lock, no row
+    /// clone — the cheap existence + authorization probe).
+    pub fn job_site(&self, id: JobId) -> Option<SiteId> {
+        self.routes.read().unwrap().job_site.get(&id).copied()
+    }
+
     /// Unchecked state move (no legality check, no service consequences).
     /// Exposed for index property tests; the service path is [`Store::transition`].
     pub fn set_job_state(&self, id: JobId, to: JobState, ts: f64, data: &str) {
@@ -633,13 +721,16 @@ impl Store {
         let mut sh = sh.write().unwrap();
         let ev0 = sh.events.len();
         sh.set_job_state(&self.event_seq, id, to, ts, data);
+        let mut wait = None;
         if self.persist.is_some() && sh.events.len() > ev0 {
             let job = sh.jobs.get(&id).expect("set_job_state: unknown job").clone();
             let site = job.site_id;
             let mut recs = vec![WalRecord::Job(job)];
             recs.extend(Self::event_records(&sh, ev0));
-            self.wal_shard(site, &sh, recs);
+            wait = self.wal_shard(site, &mut sh, recs);
         }
+        drop(sh);
+        Self::await_commit(wait);
     }
 
     /// Legality-checked transition + service-side consequences, atomic
@@ -651,6 +742,7 @@ impl Store {
         let prior_session = sh.jobs.get(&id).and_then(|j| j.session);
         let ev0 = sh.events.len();
         let terminals = sh.transition(&self.event_seq, id, to, now, data)?;
+        let mut wait = None;
         if self.persist.is_some() {
             let job = sh.jobs.get(&id).expect("transitioned job").clone();
             let site = job.site_id;
@@ -662,9 +754,84 @@ impl Store {
                 }
             }
             recs.extend(Self::event_records(&sh, ev0));
-            self.wal_shard(site, &sh, recs);
+            wait = self.wal_shard(site, &mut sh, recs);
         }
+        drop(sh);
+        Self::await_commit(wait);
         Ok(terminals)
+    }
+
+    /// Apply an ordered sequence of legality-checked transitions (the
+    /// launcher bulk-sync protocol), coalescing consecutive same-shard
+    /// updates under one shard write lock and ONE WAL commit — a whole
+    /// SessionSync batch costs one group fsync per shard run instead of
+    /// one per update. Per-update rejections (unknown job, illegal edge)
+    /// are collected, never fatal. Returns `(rejected, terminals)`.
+    pub fn transition_batch(
+        &self,
+        updates: &[(JobId, JobState, String)],
+        now: f64,
+    ) -> (Vec<JobId>, Vec<JobId>) {
+        let sites: Vec<Option<SiteId>> = {
+            let routes = self.routes.read().unwrap();
+            updates.iter().map(|u| routes.job_site.get(&u.0).copied()).collect()
+        };
+        let mut rejected = Vec::new();
+        let mut terminals = Vec::new();
+        let mut i = 0usize;
+        while i < updates.len() {
+            let Some(site) = sites[i] else {
+                rejected.push(updates[i].0);
+                i += 1;
+                continue;
+            };
+            let Some(shard) = self.shard(site) else {
+                rejected.push(updates[i].0);
+                i += 1;
+                continue;
+            };
+            let mut sh = shard.write().unwrap();
+            let ev0 = sh.events.len();
+            let mut touched: Vec<JobId> = Vec::new();
+            let mut sessions: Vec<SessionId> = Vec::new();
+            while i < updates.len() && sites[i] == Some(site) {
+                let u = &updates[i];
+                let prior_session = sh.jobs.get(&u.0).and_then(|j| j.session);
+                match sh.transition(&self.event_seq, u.0, u.1, now, &u.2) {
+                    Ok(mut t) => {
+                        touched.push(u.0);
+                        sessions.extend(prior_session);
+                        terminals.append(&mut t);
+                    }
+                    Err(_) => rejected.push(u.0),
+                }
+                i += 1;
+            }
+            let mut wait = None;
+            if self.persist.is_some() && !touched.is_empty() {
+                touched.sort_unstable();
+                touched.dedup();
+                sessions.sort_unstable();
+                sessions.dedup();
+                let mut recs = Vec::new();
+                for id in &touched {
+                    if let Some(j) = sh.jobs.get(id) {
+                        recs.push(WalRecord::Job(j.clone()));
+                    }
+                }
+                // The consequences may have released jobs from sessions.
+                for sid in &sessions {
+                    if let Some(s) = sh.sessions.get(sid) {
+                        recs.push(WalRecord::Session(s.clone()));
+                    }
+                }
+                recs.extend(Self::event_records(&sh, ev0));
+                wait = self.wal_shard(site, &mut sh, recs);
+            }
+            drop(sh);
+            Self::await_commit(wait);
+        }
+        (rejected, terminals)
     }
 
     /// Initial routing of a freshly inserted job: AwaitingParents while any
@@ -691,13 +858,16 @@ impl Store {
             } else {
                 sh.advance_past_parents(&self.event_seq, id, now);
             }
+            let mut wait = None;
             if self.persist.is_some() && sh.events.len() > ev0 {
                 let job = sh.jobs.get(&id).expect("advanced job").clone();
                 let site = job.site_id;
                 let mut recs = vec![WalRecord::Job(job)];
                 recs.extend(Self::event_records(&sh, ev0));
-                self.wal_shard(site, &sh, recs);
+                wait = self.wal_shard(site, &mut sh, recs);
             }
+            drop(sh);
+            Self::await_commit(wait);
         }
     }
 
@@ -708,11 +878,14 @@ impl Store {
         let sh = self.shard_of_job(id)?;
         let mut sh = sh.write().unwrap();
         let out = sh.jobs.get_mut(&id).map(f);
+        let mut wait = None;
         if out.is_some() && self.persist.is_some() {
             let job = sh.jobs.get(&id).expect("mutated job").clone();
             let site = job.site_id;
-            self.wal_shard(site, &sh, vec![WalRecord::Job(job)]);
+            wait = self.wal_shard(site, &mut sh, vec![WalRecord::Job(job)]);
         }
+        drop(sh);
+        Self::await_commit(wait);
         out
     }
 
@@ -812,9 +985,9 @@ impl Store {
         let mut sh = sh.write().unwrap();
         let rec = self.persist.is_some().then(|| WalRecord::Session(session.clone()));
         sh.sessions.insert(session.id, session);
-        if let Some(rec) = rec {
-            self.wal_shard(site, &sh, vec![rec]);
-        }
+        let wait = rec.and_then(|rec| self.wal_shard(site, &mut sh, vec![rec]));
+        drop(sh);
+        Self::await_commit(wait);
     }
 
     pub fn session(&self, id: SessionId) -> Option<Session> {
@@ -842,11 +1015,14 @@ impl Store {
         let sh = self.shard_of_session(id)?;
         let mut sh = sh.write().unwrap();
         let out = sh.sessions.get_mut(&id).map(f);
+        let mut wait = None;
         if out.is_some() && self.persist.is_some() {
             let s = sh.sessions.get(&id).expect("mutated session").clone();
             let site = s.site_id;
-            self.wal_shard(site, &sh, vec![WalRecord::Session(s)]);
+            wait = self.wal_shard(site, &mut sh, vec![WalRecord::Session(s)]);
         }
+        drop(sh);
+        Self::await_commit(wait);
         out
     }
 
@@ -865,11 +1041,14 @@ impl Store {
             }
             s.heartbeat_at = now;
         }
+        let mut wait = None;
         if self.persist.is_some() {
             let s = sh.sessions.get(&session).expect("heartbeated session").clone();
             let site = s.site_id;
-            self.wal_shard(site, &sh, vec![WalRecord::Session(s)]);
+            wait = self.wal_shard(site, &mut sh, vec![WalRecord::Session(s)]);
         }
+        drop(sh);
+        Self::await_commit(wait);
         Ok(())
     }
 
@@ -895,14 +1074,17 @@ impl Store {
             return Err(ApiError::BadRequest(format!("session {session} ended")));
         }
         let out = sh.acquire(session, now, max_nodes, max_jobs);
+        let mut wait = None;
         if self.persist.is_some() {
             let s = sh.sessions.get(&session).expect("acquiring session").clone();
             let site = s.site_id;
             let mut recs = Vec::with_capacity(out.len() + 1);
             recs.push(WalRecord::Session(s));
             recs.extend(out.iter().cloned().map(WalRecord::Job));
-            self.wal_shard(site, &sh, recs);
+            wait = self.wal_shard(site, &mut sh, recs);
         }
+        drop(sh);
+        Self::await_commit(wait);
         Ok(out)
     }
 
@@ -924,6 +1106,7 @@ impl Store {
         let ev0 = sh.events.len();
         let mut terminals = Vec::new();
         sh.end_session(&self.event_seq, session, now, reason, &mut terminals);
+        let mut wait = None;
         if self.persist.is_some() {
             let s = sh.sessions.get(&session).expect("ended session").clone();
             let site = s.site_id;
@@ -934,8 +1117,10 @@ impl Store {
                 }
             }
             recs.extend(Self::event_records(&sh, ev0));
-            self.wal_shard(site, &sh, recs);
+            wait = self.wal_shard(site, &mut sh, recs);
         }
+        drop(sh);
+        Self::await_commit(wait);
         Ok(terminals)
     }
 
@@ -964,6 +1149,7 @@ impl Store {
                 }
                 sh.end_session(&self.event_seq, *sid, now, "session lease expired", &mut terminals);
             }
+            let mut wait = None;
             if self.persist.is_some() {
                 let mut recs = Vec::new();
                 for sid in &stale {
@@ -977,8 +1163,10 @@ impl Store {
                     }
                 }
                 recs.extend(Self::event_records(&sh, ev0));
-                self.wal_shard(site, &sh, recs);
+                wait = self.wal_shard(site, &mut sh, recs);
             }
+            drop(sh);
+            Self::await_commit(wait);
         }
         terminals
     }
@@ -992,9 +1180,9 @@ impl Store {
         let mut sh = sh.write().unwrap();
         let rec = self.persist.is_some().then(|| WalRecord::Batch(bj.clone()));
         sh.batch_jobs.insert(bj.id, bj);
-        if let Some(rec) = rec {
-            self.wal_shard(site, &sh, vec![rec]);
-        }
+        let wait = rec.and_then(|rec| self.wal_shard(site, &mut sh, vec![rec]));
+        drop(sh);
+        Self::await_commit(wait);
     }
 
     pub fn batch_job(&self, id: BatchJobId) -> Option<BatchJob> {
@@ -1025,11 +1213,14 @@ impl Store {
         let sh = self.shard_of_batch(id)?;
         let mut sh = sh.write().unwrap();
         let out = sh.batch_jobs.get_mut(&id).map(f);
+        let mut wait = None;
         if out.is_some() && self.persist.is_some() {
             let bj = sh.batch_jobs.get(&id).expect("mutated batch job").clone();
             let site = bj.site_id;
-            self.wal_shard(site, &sh, vec![WalRecord::Batch(bj)]);
+            wait = self.wal_shard(site, &mut sh, vec![WalRecord::Batch(bj)]);
         }
+        drop(sh);
+        Self::await_commit(wait);
         out
     }
 
@@ -1058,11 +1249,14 @@ impl Store {
             }
             _ => {}
         }
+        let mut wait = None;
         if self.persist.is_some() {
             let row = sh.batch_jobs.get(&id).expect("updated batch job").clone();
             let site = row.site_id;
-            self.wal_shard(site, &sh, vec![WalRecord::Batch(row)]);
+            wait = self.wal_shard(site, &mut sh, vec![WalRecord::Batch(row)]);
         }
+        drop(sh);
+        Self::await_commit(wait);
         Ok(())
     }
 
@@ -1077,9 +1271,9 @@ impl Store {
         sh.titems_by_job.entry(item.job_id).or_default().push(item.id);
         let rec = self.persist.is_some().then(|| WalRecord::Titem(item.clone()));
         sh.titems.insert(item.id, item);
-        if let Some(rec) = rec {
-            self.wal_shard(site, &sh, vec![rec]);
-        }
+        let wait = rec.and_then(|rec| self.wal_shard(site, &mut sh, vec![rec]));
+        drop(sh);
+        Self::await_commit(wait);
     }
 
     pub fn titem(&self, id: TransferItemId) -> Option<TransferItem> {
@@ -1156,52 +1350,84 @@ impl Store {
         let sh = self.shard_of_titem(id).expect("set_titem_state: unknown item");
         let mut sh = sh.write().unwrap();
         sh.set_titem_state(id, state, task_id);
+        let mut wait = None;
         if self.persist.is_some() {
             let t = sh.titems.get(&id).expect("updated titem").clone();
             let site = t.site_id;
-            self.wal_shard(site, &sh, vec![WalRecord::Titem(t)]);
+            wait = self.wal_shard(site, &mut sh, vec![WalRecord::Titem(t)]);
         }
+        drop(sh);
+        Self::await_commit(wait);
     }
 
-    /// Bulk transfer-item status sync: validate every id, apply each
-    /// update under its shard lock, advance owning jobs on completion.
-    /// Returns jobs that reached a terminal state (stage-out done).
+    /// Bulk transfer-item status sync: validate every id, then apply the
+    /// updates in order, coalescing consecutive same-shard runs under
+    /// one shard write lock and ONE WAL commit — a whole
+    /// SyncTransferItems batch costs one group fsync per shard run, not
+    /// one per item. Advances owning jobs on completion; returns jobs
+    /// that reached a terminal state (stage-out done).
     pub fn update_titems(
         &self,
         updates: &[(TransferItemId, TransferState, Option<XferTaskId>)],
         now: f64,
     ) -> Result<Vec<JobId>, ApiError> {
-        {
+        let sites: Vec<SiteId> = {
             let routes = self.routes.read().unwrap();
+            let mut sites = Vec::with_capacity(updates.len());
             for (id, _, _) in updates {
-                if !routes.titem_site.contains_key(id) {
-                    return Err(ApiError::NotFound(format!("transfer item {id}")));
+                match routes.titem_site.get(id) {
+                    Some(s) => sites.push(*s),
+                    None => return Err(ApiError::NotFound(format!("transfer item {id}"))),
                 }
             }
-        }
+            sites
+        };
         let mut terminals = Vec::new();
-        for &(id, state, task_id) in updates {
-            let Some(sh) = self.shard_of_titem(id) else { continue };
-            let mut sh = sh.write().unwrap();
+        let mut i = 0usize;
+        while i < updates.len() {
+            let site = sites[i];
+            let Some(shard) = self.shard(site) else {
+                i += 1;
+                continue;
+            };
+            let mut sh = shard.write().unwrap();
             let ev0 = sh.events.len();
-            sh.set_titem_state(id, state, task_id);
-            if state == TransferState::Done {
-                sh.complete_titem(&self.event_seq, id, now, &mut terminals);
-            }
-            if self.persist.is_some() {
-                let t = sh.titems.get(&id).expect("updated titem").clone();
-                let site = t.site_id;
-                let job_id = t.job_id;
-                let mut recs = vec![WalRecord::Titem(t)];
-                // Completion may have advanced the owning job.
+            let mut touched_items: Vec<TransferItemId> = Vec::new();
+            let mut touched_jobs: Vec<JobId> = Vec::new();
+            while i < updates.len() && sites[i] == site {
+                let (id, state, task_id) = updates[i];
+                sh.set_titem_state(id, state, task_id);
+                touched_items.push(id);
                 if state == TransferState::Done {
-                    if let Some(j) = sh.jobs.get(&job_id) {
+                    if let Some(job_id) = sh.titems.get(&id).map(|t| t.job_id) {
+                        touched_jobs.push(job_id);
+                    }
+                    sh.complete_titem(&self.event_seq, id, now, &mut terminals);
+                }
+                i += 1;
+            }
+            let mut wait = None;
+            if self.persist.is_some() {
+                touched_items.dedup();
+                touched_jobs.sort_unstable();
+                touched_jobs.dedup();
+                let mut recs = Vec::new();
+                for id in &touched_items {
+                    if let Some(t) = sh.titems.get(id) {
+                        recs.push(WalRecord::Titem(t.clone()));
+                    }
+                }
+                // Completions may have advanced the owning jobs.
+                for jid in &touched_jobs {
+                    if let Some(j) = sh.jobs.get(jid) {
                         recs.push(WalRecord::Job(j.clone()));
                     }
                 }
                 recs.extend(Self::event_records(&sh, ev0));
-                self.wal_shard(site, &sh, recs);
+                wait = self.wal_shard(site, &mut sh, recs);
             }
+            drop(sh);
+            Self::await_commit(wait);
         }
         Ok(terminals)
     }
@@ -1216,35 +1442,79 @@ impl Store {
 
     // ----- events ---------------------------------------------------------
 
-    /// Merged event log across all shards, ordered by global sequence.
+    /// Merged event log across all shards, ordered by global sequence:
+    /// the in-memory hot tail plus (in WAL mode) the cold history read
+    /// back from the per-shard event segments.
     ///
-    /// All shard read guards are held simultaneously (acquired in site
-    /// order) so the result is a consistent, gap-free cut: a sequence
-    /// number is allocated and committed under its shard's write lock, so
-    /// once every read guard is held, no event below the observed maximum
-    /// can still be in flight — a `since` pager never skips events. This
-    /// is the one deliberate exception to the one-lock-at-a-time rule;
-    /// it cannot deadlock because writers only ever hold a single shard
-    /// lock and readers acquire in a fixed order.
-    fn events_cut(&self, since: u64) -> Vec<Event> {
-        let shards = self.all_shards();
-        let guards: Vec<_> = shards.iter().map(|s| s.read().unwrap()).collect();
+    /// Phase 1 holds all shard read guards simultaneously (acquired in
+    /// site order) so the memory cut is consistent and gap-free: a
+    /// sequence number is allocated and committed under its shard's write
+    /// lock, so once every read guard is held, no event below the
+    /// observed maximum can still be in flight — a `since` pager never
+    /// skips events. This is the one deliberate exception to the
+    /// one-lock-at-a-time rule; it cannot deadlock because writers only
+    /// ever hold a single shard lock and readers acquire in a fixed
+    /// order.
+    ///
+    /// Phase 2 reads the cold segments with NO locks held (segment data
+    /// below each shard's captured trim point is immutable), so a large
+    /// archive scan never stalls mutations. Events at or above the
+    /// captured trim point are dropped from the archive read — they are
+    /// already in the memory cut, even if a concurrent rotation archives
+    /// them mid-scan. Archive read failures are loud ([`ApiError`]-level
+    /// at the public API), never a silent gap.
+    fn events_cut(&self, since: u64) -> Result<EventsPage, String> {
+        let shards = self.all_shards_keyed();
         let mut out = Vec::new();
-        for g in &guards {
-            out.extend(g.events.iter().filter(|e| e.seq >= since).cloned());
+        let mut cold: Vec<(SiteId, u64)> = Vec::new();
+        {
+            let guards: Vec<_> = shards.iter().map(|(k, s)| (*k, s.read().unwrap())).collect();
+            for (site, g) in &guards {
+                out.extend(g.events.iter().filter(|e| e.seq >= since).cloned());
+                if since < g.events_trimmed_before {
+                    cold.push((*site, g.events_trimmed_before));
+                }
+            }
+        }
+        let mut truncated_before: Option<u64> = None;
+        if let Some(p) = &self.persist {
+            for (site, upper) in cold {
+                let archived = p.read_archived(Some(site), since)?;
+                out.extend(archived.into_iter().filter(|e| e.seq < upper));
+                // Re-read the marker AFTER the scan: retention may have
+                // deleted segments mid-read (tolerated as missing files),
+                // and the post-read marker covers exactly what could
+                // have vanished — the page is complete from it on.
+                if let Some(t) = p.truncated_before(Some(site)) {
+                    if since < t {
+                        truncated_before = Some(truncated_before.map_or(t, |x| x.max(t)));
+                    }
+                }
+            }
         }
         out.sort_by_key(|e| e.seq);
-        out
+        Ok(EventsPage { truncated_before, events: out })
     }
 
     /// Merged event log across all shards, ordered by global sequence.
+    /// Panics if the segmented archive is unreadable (corrupt storage) —
+    /// the fallible paged path is [`Store::events_page`].
     pub fn events(&self) -> Vec<Event> {
-        self.events_cut(0)
+        self.events_cut(0).expect("event segments unreadable").events
     }
 
-    /// Events with sequence number >= `since`, ordered.
+    /// Events with sequence number >= `since`, ordered. Panics like
+    /// [`Store::events`]; the service path is [`Store::events_page`].
     pub fn events_since(&self, since: usize) -> Vec<Event> {
-        self.events_cut(since as u64)
+        self.events_cut(since as u64).expect("event segments unreadable").events
+    }
+
+    /// Events with sequence number >= `since` plus the retention marker:
+    /// `truncated_before = Some(n)` means events below `n` may have been
+    /// dropped by event-log retention and the page is complete from `n`.
+    /// An unreadable/corrupt archive is an error, never a silent gap.
+    pub fn events_page(&self, since: u64) -> Result<EventsPage, ApiError> {
+        self.events_cut(since).map_err(ApiError::Internal)
     }
 
     // ----- diagnostics ----------------------------------------------------
@@ -1469,9 +1739,15 @@ mod tests {
 
     #[test]
     fn wal_mode_survives_reopen() {
+        use crate::service::persist::{EventLogConfig, FsyncPolicy};
         let dir = std::env::temp_dir().join(format!("balsam-store-wal-{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
-        let mode = PersistMode::Wal { dir: dir.clone(), snapshot_every: 4 };
+        let mode = PersistMode::Wal {
+            dir: dir.clone(),
+            snapshot_every: 4,
+            fsync: FsyncPolicy::Group { records: 2, interval_ms: 5 },
+            events: EventLogConfig { segment_bytes: 256, retain_bytes: 0, retain_age_s: 0 },
+        };
         let (jobs0, evs0) = {
             let s = Store::open(&mode).unwrap();
             s.insert_site(Site {

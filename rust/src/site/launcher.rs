@@ -31,6 +31,9 @@ pub struct Launcher {
     pub end_by: f64,
     session: Option<SessionId>,
     running: BTreeMap<JobId, (RunId, u32)>,
+    /// Job-state updates whose SessionSync failed: retried on the next
+    /// sync so completions survive a transient outage or a lease loss.
+    pending_updates: Vec<(JobId, JobState, String)>,
     free_nodes: u32,
     next_heartbeat: f64,
     next_acquire: f64,
@@ -38,6 +41,9 @@ pub struct Launcher {
     pub exited: ExitReason,
     /// Completed-run counter (diagnostics).
     pub runs_done: u64,
+    /// Sessions established over this launcher's lifetime (first one plus
+    /// every re-registration after a lost lease).
+    pub sessions_established: u64,
 }
 
 impl Launcher {
@@ -49,13 +55,28 @@ impl Launcher {
             end_by,
             session: None,
             running: BTreeMap::new(),
+            pending_updates: Vec::new(),
             free_nodes: nodes,
             next_heartbeat: now,
             next_acquire: now,
             idle_since: Some(now),
             exited: ExitReason::StillRunning,
             runs_done: 0,
+            sessions_established: 0,
         }
+    }
+
+    /// Did this API error mean the session lease is gone at the service
+    /// (expired, recovered, or the service restarted ephemeral)? If so,
+    /// drop it — the next tick re-registers and resumes; a paper-§4.4
+    /// lease revocation must never kill the pilot.
+    fn lease_lost(&mut self, err: &crate::service::api::ApiError) -> bool {
+        use crate::service::api::ApiError;
+        if matches!(err, ApiError::NotFound(_) | ApiError::BadRequest(_)) {
+            self.session = None;
+            return true;
+        }
+        false
     }
 
     pub fn busy_nodes(&self) -> u32 {
@@ -78,17 +99,21 @@ impl Launcher {
         if self.exited != ExitReason::StillRunning {
             return false;
         }
-        // Session establishment.
+        // Session establishment (first tick, or re-registration after the
+        // service revoked/expired the previous lease).
         if self.session.is_none() {
             match conn.api(&cfg.token, ApiRequest::CreateSession {
                 site: cfg.site_id,
                 batch_job: Some(self.batch_job_id),
             }) {
-                Ok(resp) => self.session = Some(resp.session_id()),
+                Ok(resp) => {
+                    self.session = Some(resp.session_id());
+                    self.sessions_established += 1;
+                }
                 Err(_) => return true, // transient; retry next tick
             }
         }
-        let session = self.session.unwrap();
+        let Some(session) = self.session else { return true };
 
         // Poll running jobs; report every completion in ONE SessionSync
         // round trip (the sync doubles as the heartbeat, so a busy
@@ -104,32 +129,47 @@ impl Launcher {
                 RunStatus::Running => None,
             })
             .collect();
-        if !done.is_empty() {
-            let mut updates: Vec<(JobId, JobState, String)> = Vec::with_capacity(done.len() * 2);
-            for (job, ok) in done {
-                let (_, n) = self.running.remove(&job).unwrap();
-                self.free_nodes += n;
-                self.runs_done += 1;
-                if ok {
-                    updates.push((job, JobState::RunDone, String::new()));
-                    // Site-side postprocessing is trivial for these
-                    // workloads; perform it inline so stage-out becomes
-                    // actionable.
-                    updates.push((job, JobState::Postprocessed, String::new()));
-                } else {
-                    updates.push((job, JobState::RunError, String::new()));
-                }
+        let mut updates = std::mem::take(&mut self.pending_updates);
+        for (job, ok) in done {
+            let (_, n) = self.running.remove(&job).unwrap();
+            self.free_nodes += n;
+            self.runs_done += 1;
+            if ok {
+                updates.push((job, JobState::RunDone, String::new()));
+                // Site-side postprocessing is trivial for these
+                // workloads; perform it inline so stage-out becomes
+                // actionable.
+                updates.push((job, JobState::Postprocessed, String::new()));
+            } else {
+                updates.push((job, JobState::RunError, String::new()));
             }
-            if conn.api(&cfg.token, ApiRequest::SessionSync { session, updates }).is_ok() {
-                self.next_heartbeat = now + cfg.launcher.heartbeat_period;
+        }
+        if !updates.is_empty() {
+            match conn.api(&cfg.token, ApiRequest::SessionSync { session, updates: updates.clone() })
+            {
+                Ok(_) => self.next_heartbeat = now + cfg.launcher.heartbeat_period,
+                Err(e) => {
+                    // Keep the completions for the next sync — under a
+                    // new session if the lease is gone (the service may
+                    // then reject individual updates for recovered jobs,
+                    // which is its call to make; losing them here is not).
+                    self.pending_updates = updates;
+                    if self.lease_lost(&e) {
+                        return true;
+                    }
+                }
             }
         }
 
         // Heartbeat (skipped when the SessionSync above just refreshed the
         // lease).
         if now >= self.next_heartbeat {
-            let _ = conn.api(&cfg.token, ApiRequest::SessionHeartbeat { session });
             self.next_heartbeat = now + cfg.launcher.heartbeat_period;
+            if let Err(e) = conn.api(&cfg.token, ApiRequest::SessionHeartbeat { session }) {
+                if self.lease_lost(&e) {
+                    return true;
+                }
+            }
         }
 
         // Stop acquiring near the wall-time limit (jobs wouldn't finish).
@@ -143,29 +183,52 @@ impl Launcher {
                 JobMode::Mpi => self.free_nodes as usize,
                 JobMode::Serial => (self.free_nodes * cfg.launcher.jobs_per_node) as usize,
             };
-            if let Ok(resp) = conn.api(&cfg.token, ApiRequest::SessionAcquire {
+            match conn.api(&cfg.token, ApiRequest::SessionAcquire {
                 session,
                 max_nodes: self.free_nodes,
                 max_jobs,
             }) {
-                let mut started: Vec<JobId> = Vec::new();
-                for job in resp.jobs() {
-                    let n = job.num_nodes.min(self.free_nodes).max(1);
-                    if n > self.free_nodes {
-                        continue;
+                Ok(resp) => {
+                    let mut started: Vec<JobId> = Vec::new();
+                    for job in resp.jobs() {
+                        let n = job.num_nodes.min(self.free_nodes).max(1);
+                        if n > self.free_nodes {
+                            continue;
+                        }
+                        let run = exec.start(now, &cfg.facility, &job.workload, n);
+                        self.free_nodes -= n;
+                        self.running.insert(job.id, (run, n));
+                        started.push(job.id);
                     }
-                    let run = exec.start(now, &cfg.facility, &job.workload, n);
-                    self.free_nodes -= n;
-                    self.running.insert(job.id, (run, n));
-                    started.push(job.id);
+                    // One bulk round trip marks every started job RUNNING.
+                    // If it fails, the marks are replayed through the
+                    // session-sync pipeline: a lost Running mark would
+                    // make the job's eventual RunDone sync an illegal
+                    // edge (Preprocessed -> RunDone), silently wedging a
+                    // completed job at the service.
+                    if !started.is_empty() {
+                        let marks: Vec<(JobId, JobState, String)> = started
+                            .iter()
+                            .map(|&j| (j, JobState::Running, String::new()))
+                            .collect();
+                        let res = conn.api(&cfg.token, ApiRequest::BulkUpdateJobState {
+                            jobs: started,
+                            to: JobState::Running,
+                            data: String::new(),
+                        });
+                        if res.is_err() {
+                            // Order matters: the marks precede any
+                            // completion updates appended later, and a
+                            // mark the service already applied is simply
+                            // rejected as a no-op edge next sync.
+                            self.pending_updates.extend(marks);
+                        }
+                    }
                 }
-                // One bulk round trip marks every started job RUNNING.
-                if !started.is_empty() {
-                    let _ = conn.api(&cfg.token, ApiRequest::BulkUpdateJobState {
-                        jobs: started,
-                        to: JobState::Running,
-                        data: String::new(),
-                    });
+                Err(e) => {
+                    if self.lease_lost(&e) {
+                        return true;
+                    }
                 }
             }
         }
@@ -302,6 +365,35 @@ mod tests {
         for &i in &ids {
             assert_eq!(svc.store.job(i).unwrap().attempts, 3);
         }
+    }
+
+    #[test]
+    fn revoked_lease_reregisters_and_resumes() {
+        let (mut svc, cfg, site) = setup();
+        let ids = submit_simple(&mut svc, &cfg, 3);
+        let mut exec = SimExec::new(7);
+        let mut l = Launcher::new(BatchJobId(99), 1, 4, 0.0, 1e6);
+        // Establish the session and start work.
+        {
+            let mut conn = InProcConn { now: 1.0, svc: &mut svc };
+            assert!(l.tick(1.0, &cfg, &mut conn, &mut exec));
+        }
+        assert_eq!(l.sessions_established, 1);
+        let sid = svc.store.sessions_snapshot()[0].id;
+        // The service revokes the lease out from under the launcher
+        // (equivalent to a heartbeat expiry recovering its jobs).
+        svc.handle(2.0, &cfg.token, ApiRequest::SessionEnd { session: sid }).unwrap();
+        // The launcher must survive (no panic), drop the dead session,
+        // re-register, and drive the remaining work to completion.
+        let mut t = 3.0;
+        while ids.iter().any(|&i| !svc.store.job(i).unwrap().state.is_terminal()) {
+            let mut conn = InProcConn { now: t, svc: &mut svc };
+            assert!(l.tick(t, &cfg, &mut conn, &mut exec), "launcher died at t={t}");
+            t += 1.0;
+            assert!(t < 600.0, "jobs never finished after lease revocation");
+        }
+        assert!(l.sessions_established >= 2, "must have re-registered");
+        assert_eq!(svc.store.count_in_state(site, JobState::JobFinished), 3);
     }
 
     #[test]

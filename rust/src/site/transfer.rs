@@ -7,7 +7,7 @@
 //! **transfer batch size** (max files per task, Fig. 6) and the **max
 //! concurrent transfer tasks** per site (§4.5).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::service::api::{ApiConn, ApiRequest};
 use crate::service::models::{Direction, TransferItem, TransferItemId, TransferState, XferTaskId};
@@ -18,6 +18,10 @@ use crate::site::platform::{TransferBackend, XferStatus};
 pub struct TransferModule {
     /// In-flight tasks: backend task id -> items it carries.
     active: BTreeMap<XferTaskId, Vec<TransferItemId>>,
+    /// Status updates whose `SyncTransferItems` RPC failed: retried at
+    /// the next tick instead of being dropped — a transient service
+    /// outage must not strand items Active/Pending forever.
+    pending_sync: Vec<(TransferItemId, TransferState, Option<XferTaskId>)>,
     pub next_due: f64,
     /// Counters for diagnostics / benches.
     pub tasks_submitted: u64,
@@ -26,11 +30,72 @@ pub struct TransferModule {
 
 impl TransferModule {
     pub fn new() -> TransferModule {
-        TransferModule { active: BTreeMap::new(), next_due: 0.0, tasks_submitted: 0, items_completed: 0 }
+        TransferModule {
+            active: BTreeMap::new(),
+            pending_sync: Vec::new(),
+            next_due: 0.0,
+            tasks_submitted: 0,
+            items_completed: 0,
+        }
     }
 
     pub fn active_tasks(&self) -> usize {
         self.active.len()
+    }
+
+    /// Status updates awaiting a (re)send to the service.
+    pub fn pending_sync_len(&self) -> usize {
+        self.pending_sync.len()
+    }
+
+    /// Push a status batch to the API; on a *transient* failure
+    /// (transport drop, service 500) retain it, in order, for the next
+    /// tick. The server validates a batch before applying any of it, so
+    /// a *definitive* rejection (e.g. one id the service no longer
+    /// knows after an un-persisted restart) is isolated by resending
+    /// per item — the bad update alone is dropped, every other one
+    /// still lands instead of being wedged behind it forever.
+    fn sync_or_retain(
+        &mut self,
+        cfg: &SiteConfig,
+        conn: &mut dyn ApiConn,
+        updates: Vec<(TransferItemId, TransferState, Option<XferTaskId>)>,
+    ) {
+        use crate::service::api::ApiError;
+        let transient =
+            |e: &ApiError| matches!(e, ApiError::Transport(_) | ApiError::Internal(_));
+        if updates.is_empty() {
+            return;
+        }
+        match conn.api(&cfg.token, ApiRequest::SyncTransferItems { updates: updates.clone() }) {
+            Ok(_) => return,
+            Err(e) if transient(&e) => {
+                self.pending_sync.extend(updates);
+                return;
+            }
+            Err(e) if updates.len() == 1 => {
+                eprintln!("transfer sync: update for item {} dropped: {e}", updates[0].0);
+                return;
+            }
+            Err(_) => {}
+        }
+        // Definitive batch rejection: isolate the offender(s) per item.
+        // On the first transient failure, stop and retain everything from
+        // that update on — continuing past it could land a later update
+        // for the same item first and then replay the stale earlier one
+        // next tick (e.g. regressing a Done item back to Active).
+        let mut it = updates.into_iter();
+        while let Some(u) = it.next() {
+            match conn.api(&cfg.token, ApiRequest::SyncTransferItems { updates: vec![u] }) {
+                Ok(_) => {}
+                Err(e) if transient(&e) => {
+                    self.pending_sync.push(u);
+                    self.pending_sync.extend(it);
+                    return;
+                }
+                Err(e) => eprintln!("transfer sync: update for item {} dropped: {e}", u.0),
+            }
+        }
     }
 
     /// One sync step; returns next wake time.
@@ -53,6 +118,8 @@ impl TransferModule {
     /// Poll in-flight tasks; push every completion/error to the API in
     /// ONE SyncTransferItems round trip per tick (the paper's batched
     /// status synchronization — one sync covers many transfer tasks).
+    /// Any batch retained from a failed RPC last tick goes first, so
+    /// Done/Error transitions are delivered in order and never lost.
     fn poll_active(
         &mut self,
         now: f64,
@@ -61,7 +128,7 @@ impl TransferModule {
         xfer: &mut dyn TransferBackend,
     ) {
         let task_ids: Vec<XferTaskId> = self.active.keys().copied().collect();
-        let mut updates: Vec<(TransferItemId, TransferState, Option<XferTaskId>)> = Vec::new();
+        let mut updates = std::mem::take(&mut self.pending_sync);
         for tid in task_ids {
             match xfer.poll(now, tid) {
                 XferStatus::Done => {
@@ -76,9 +143,7 @@ impl TransferModule {
                 XferStatus::Queued | XferStatus::Active => {}
             }
         }
-        if !updates.is_empty() {
-            let _ = conn.api(&cfg.token, ApiRequest::SyncTransferItems { updates });
-        }
+        self.sync_or_retain(cfg, conn, updates);
     }
 
     /// Bundle pending items by (remote endpoint, direction) and submit up
@@ -98,6 +163,16 @@ impl TransferModule {
         if budget == 0 {
             return;
         }
+        // Items already handed to the backend (or awaiting a status
+        // retry) may still read Pending at the service if their Active
+        // marks failed to send — never submit them to a second task.
+        let in_flight: BTreeSet<TransferItemId> = self
+            .active
+            .values()
+            .flatten()
+            .copied()
+            .chain(self.pending_sync.iter().map(|u| u.0))
+            .collect();
         let mut marks: Vec<(TransferItemId, TransferState, Option<XferTaskId>)> = Vec::new();
         // Stage-out first: result payloads are small and drain quickly,
         // and serving them first prevents a saturated stage-in pipeline
@@ -119,6 +194,9 @@ impl TransferModule {
             // common endpoints".
             let mut by_remote: BTreeMap<String, Vec<TransferItem>> = BTreeMap::new();
             for item in pending {
+                if in_flight.contains(&item.id) {
+                    continue;
+                }
                 by_remote.entry(item.remote.clone()).or_default().push(item);
             }
             for (remote, items) in by_remote {
@@ -152,9 +230,10 @@ impl TransferModule {
                 }
             }
         }
-        if !marks.is_empty() {
-            let _ = conn.api(&cfg.token, ApiRequest::SyncTransferItems { updates: marks });
-        }
+        // On failure the marks are retained and retried next tick; the
+        // in-flight guard above keeps the still-Pending items from being
+        // fetched into a duplicate task meanwhile.
+        self.sync_or_retain(cfg, conn, marks);
     }
 }
 
@@ -304,6 +383,102 @@ mod tests {
         // Early tick is a no-op.
         let mut conn = InProcConn { now: 1.0, svc: &mut svc };
         assert_eq!(tm.tick(1.0, &cfg, &mut conn, &mut xfer), next);
+    }
+
+    /// Drops SyncTransferItems on the floor while `fail_syncs > 0`,
+    /// passing everything else through (transient service outage).
+    struct FlakySyncConn<'a, 'b> {
+        inner: InProcConn<'a>,
+        fail_syncs: &'b mut usize,
+    }
+
+    impl crate::service::api::ApiConn for FlakySyncConn<'_, '_> {
+        fn api(
+            &mut self,
+            token: &str,
+            req: ApiRequest,
+        ) -> Result<ApiResponse, crate::service::api::ApiError> {
+            if matches!(req, ApiRequest::SyncTransferItems { .. }) && *self.fail_syncs > 0 {
+                *self.fail_syncs -= 1;
+                return Err(crate::service::api::ApiError::Transport("injected".into()));
+            }
+            self.inner.api(token, req)
+        }
+    }
+
+    #[test]
+    fn failed_status_syncs_are_retried_not_dropped() {
+        let (mut svc, _tok, site, cfg) = setup(8, 4);
+        submit_jobs(&mut svc, &cfg.token, site, 4, 1_000_000);
+        let mut tm = TransferModule::new();
+        let mut xfer = SimTransfer::new(9);
+        let pending_at = |svc: &ServiceCore| {
+            svc.store
+                .titems_snapshot()
+                .iter()
+                .filter(|t| t.state == TransferState::Pending)
+                .count()
+        };
+        // Tick 1: tasks are submitted but the Active-marks RPC fails.
+        let mut fails = 1usize;
+        {
+            let mut conn = FlakySyncConn {
+                inner: InProcConn { now: 1.0, svc: &mut svc },
+                fail_syncs: &mut fails,
+            };
+            tm.tick(1.0, &cfg, &mut conn, &mut xfer);
+        }
+        let submitted = tm.tasks_submitted;
+        assert!(submitted > 0);
+        assert!(tm.pending_sync_len() > 0, "failed marks batch must be retained");
+        assert_eq!(pending_at(&svc), 4, "service saw nothing yet");
+        // Tick 2: the RPC still fails — and the still-Pending items must
+        // NOT be packed into duplicate backend tasks.
+        let mut fails = 1usize;
+        {
+            let mut conn = FlakySyncConn {
+                inner: InProcConn { now: 6.0, svc: &mut svc },
+                fail_syncs: &mut fails,
+            };
+            tm.next_due = 0.0;
+            tm.tick(6.0, &cfg, &mut conn, &mut xfer);
+        }
+        assert_eq!(tm.tasks_submitted, submitted, "no duplicate submission while marks pend");
+        // Tick 3: the service recovers; the retained batch lands (each
+        // item now Active, or already advanced past it by a Done that
+        // rode the same batch).
+        let mut fails = 0usize;
+        {
+            let mut conn = FlakySyncConn {
+                inner: InProcConn { now: 11.0, svc: &mut svc },
+                fail_syncs: &mut fails,
+            };
+            tm.next_due = 0.0;
+            tm.tick(11.0, &cfg, &mut conn, &mut xfer);
+        }
+        assert_eq!(tm.pending_sync_len(), 0);
+        assert_eq!(pending_at(&svc), 0, "retained marks delivered");
+        // Drive to completion with failures injected on some Done syncs:
+        // transitions arrive late but are never lost.
+        let mut t = 16.0;
+        let mut fails = 2usize;
+        loop {
+            {
+                let mut conn = FlakySyncConn {
+                    inner: InProcConn { now: t, svc: &mut svc },
+                    fail_syncs: &mut fails,
+                };
+                tm.next_due = 0.0;
+                tm.tick(t, &cfg, &mut conn, &mut xfer);
+            }
+            if svc.store.count_in_state(site, JobState::Preprocessed) == 4 {
+                break;
+            }
+            t += 5.0;
+            assert!(t < 600.0, "Done transitions were lost");
+        }
+        assert_eq!(tm.items_completed, 4);
+        svc.store.check_indexes().unwrap();
     }
 
     #[test]

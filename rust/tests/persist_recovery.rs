@@ -1,22 +1,43 @@
 //! Crash-recovery integration tests for the WAL + snapshot store backend.
 //!
-//! The acceptance bar (ISSUE 2): a `ServiceCore` opened in `Wal` mode,
-//! killed after N mutations and reopened on the same dir serves identical
-//! store snapshots and continues the global event sequence with no gaps —
-//! including after a deliberately truncated final WAL record (crash
-//! mid-append).
+//! The acceptance bar (ISSUE 2 + ISSUE 4): a `ServiceCore` opened in
+//! `Wal` mode, killed after N mutations and reopened on the same dir
+//! serves identical store snapshots and continues the global event
+//! sequence with no gaps — including after a deliberately truncated
+//! final WAL record (crash mid-append), after snapshot rotations that
+//! archive events to the segmented event log, and under every
+//! `FsyncPolicy` (the CI matrix sets `BALSAM_FSYNC=group` to run this
+//! whole file through the group-commit pipeline).
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use balsam::service::api::{ApiRequest, JobCreate};
 use balsam::service::models::*;
-use balsam::service::persist::{wal_path, PersistMode};
+use balsam::service::persist::{wal_path, EventLogConfig, FsyncPolicy, PersistMode};
 use balsam::service::ServiceCore;
 
 fn tmpdir(tag: &str) -> PathBuf {
     let d = std::env::temp_dir().join(format!("balsam-recovery-{}-{tag}", std::process::id()));
     let _ = std::fs::remove_dir_all(&d);
     d
+}
+
+/// Fsync policy under test: `BALSAM_FSYNC` (never|always|group[:K,T]) —
+/// the CI build-test matrix runs a `group` leg of this suite.
+fn fsync_from_env() -> FsyncPolicy {
+    match std::env::var("BALSAM_FSYNC") {
+        Ok(s) => FsyncPolicy::parse(&s).unwrap_or_else(|| panic!("bad BALSAM_FSYNC '{s}'")),
+        Err(_) => FsyncPolicy::Never,
+    }
+}
+
+fn wal_mode(dir: &Path, snapshot_every: u64) -> PersistMode {
+    PersistMode::Wal {
+        dir: dir.to_path_buf(),
+        snapshot_every,
+        fsync: fsync_from_env(),
+        events: EventLogConfig::default(),
+    }
 }
 
 fn jobs_json(svc: &ServiceCore) -> Vec<String> {
@@ -147,7 +168,7 @@ fn kill_and_reopen_serves_identical_snapshots() {
     let dir = tmpdir("roundtrip");
     // Small snapshot budget: the workload forces several compactions, so
     // recovery exercises snapshot + WAL tail, not just the WAL.
-    let mode = PersistMode::Wal { dir: dir.clone(), snapshot_every: 16 };
+    let mode = wal_mode(&dir, 16);
     let (jobs0, sessions0, titems0, batches0, events0) = {
         let svc = ServiceCore::with_persist(b"recovery-secret", mode.clone()).unwrap();
         let tok = svc.admin_token();
@@ -168,7 +189,7 @@ fn kill_and_reopen_serves_identical_snapshots() {
 #[test]
 fn event_sequence_continues_without_gaps() {
     let dir = tmpdir("seq");
-    let mode = PersistMode::Wal { dir: dir.clone(), snapshot_every: 16 };
+    let mode = wal_mode(&dir, 16);
     let (last_seq, running) = {
         let svc = ServiceCore::with_persist(b"recovery-secret", mode.clone()).unwrap();
         let tok = svc.admin_token();
@@ -215,7 +236,7 @@ fn event_sequence_continues_without_gaps() {
 fn truncated_final_wal_record_is_dropped() {
     let dir = tmpdir("torn");
     // snapshot_every = 0: no compaction, the WAL holds full history.
-    let mode = PersistMode::Wal { dir: dir.clone(), snapshot_every: 0 };
+    let mode = wal_mode(&dir, 0);
     let (site, state0) = {
         let svc = ServiceCore::with_persist(b"recovery-secret", mode.clone()).unwrap();
         let tok = svc.admin_token();
@@ -255,7 +276,7 @@ fn truncated_final_wal_record_is_dropped() {
 #[test]
 fn launcher_reconnects_and_finishes_work_after_restart() {
     let dir = tmpdir("reconnect");
-    let mode = PersistMode::Wal { dir: dir.clone(), snapshot_every: 8 };
+    let mode = wal_mode(&dir, 8);
     let (site, sid, ids) = {
         let svc = ServiceCore::with_persist(b"recovery-secret", mode.clone()).unwrap();
         let tok = svc.admin_token();
@@ -304,7 +325,7 @@ fn keepalive_gateway_mutations_survive_kill_and_reopen() {
     use std::sync::Arc;
 
     let dir = tmpdir("http-keepalive");
-    let mode = PersistMode::Wal { dir: dir.clone(), snapshot_every: 16 };
+    let mode = wal_mode(&dir, 16);
     let state0 = {
         let svc = Arc::new(ServiceCore::with_persist(b"recovery-secret", mode.clone()).unwrap());
         let tok = svc.admin_token();
@@ -389,5 +410,283 @@ fn keepalive_gateway_mutations_survive_kill_and_reopen() {
         state0,
         "keep-alive transport must not change what reaches the WAL"
     );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// ISSUE 4 acceptance: snapshots hold live rows only — zero event
+/// records — and the events survive via the segmented event log.
+#[test]
+fn snapshots_hold_zero_event_records() {
+    let dir = tmpdir("rowsnap");
+    // Tiny budget: the workload forces several rotations.
+    let mode = wal_mode(&dir, 8);
+    let events0 = {
+        let svc = ServiceCore::with_persist(b"recovery-secret", mode.clone()).unwrap();
+        let tok = svc.admin_token();
+        drive_workload(&svc, &tok);
+        events_json(&svc)
+    };
+    let mut snaps = 0;
+    let mut segments = 0;
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let name = entry.as_ref().unwrap().file_name().to_string_lossy().into_owned();
+        if name.ends_with(".snap") {
+            snaps += 1;
+            let body = std::fs::read_to_string(entry.unwrap().path()).unwrap();
+            assert!(!body.contains("\"t\":\"event\""), "{name} contains event records");
+        } else if name.contains(".events.") {
+            segments += 1;
+        }
+    }
+    assert!(snaps > 0, "workload must have produced at least one snapshot");
+    assert!(segments > 0, "rotation must have archived events to segments");
+    // The full event log is still served (memory tail + cold segments),
+    // identically after a reopen.
+    let svc2 = ServiceCore::with_persist(b"recovery-secret", mode).unwrap();
+    svc2.store.check_indexes().unwrap();
+    assert_eq!(events_json(&svc2), events0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Event-log pagination spans the in-memory hot tail and the cold
+/// segments, and a retention truncation is reported as an explicit
+/// "truncated before seq N" marker rather than a silent gap.
+#[test]
+fn events_page_spans_segments_and_reports_truncation() {
+    let drive = |dir: &Path, retain_bytes: u64| {
+        let mode = PersistMode::Wal {
+            dir: dir.to_path_buf(),
+            // Rotate constantly so events move to segments quickly, and
+            // keep segments tiny so several get sealed.
+            snapshot_every: 4,
+            fsync: fsync_from_env(),
+            events: EventLogConfig { segment_bytes: 512, retain_bytes, retain_age_s: 0 },
+        };
+        let svc = ServiceCore::with_persist(b"recovery-secret", mode.clone()).unwrap();
+        let tok = svc.admin_token();
+        let site = svc
+            .handle(0.0, &tok, ApiRequest::CreateSite {
+                name: "theta".into(),
+                hostname: "t1".into(),
+                path: "/p".into(),
+            })
+            .unwrap()
+            .site_id();
+        svc.handle(0.1, &tok, ApiRequest::RegisterApp {
+            site,
+            name: "MD".into(),
+            command_template: "md".into(),
+            parameters: vec![],
+        })
+        .unwrap();
+        // Each no-transfer job emits 2 events (STAGED_IN, PREPROCESSED).
+        for i in 0..40 {
+            let jc = JobCreate::simple(site, "MD", "md_small");
+            svc.handle(1.0 + i as f64, &tok, ApiRequest::BulkCreateJobs { jobs: vec![jc] })
+                .unwrap();
+        }
+        (svc, mode, site)
+    };
+
+    // Retention off: the full log pages back seamlessly across segments.
+    let dir = tmpdir("page-segments");
+    {
+        let (svc, mode, site) = drive(&dir, 0);
+        let all = svc.store.events();
+        assert_eq!(all.len(), 80);
+        for (i, e) in all.iter().enumerate() {
+            assert_eq!(e.seq, i as u64, "dense log");
+        }
+        let n_segments = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter(|e| {
+                e.as_ref().unwrap().file_name().to_string_lossy().contains(".events.")
+            })
+            .count();
+        assert!(n_segments >= 2, "expected several sealed segments, got {n_segments}");
+        let page = svc.store.events_page(0).unwrap();
+        assert_eq!(page.truncated_before, None);
+        assert_eq!(page.events.len(), 80);
+        // A pager starting mid-archive gets everything from `since` on —
+        // cold segments plus the memory tail, in order.
+        let page = svc.store.events_page(25).unwrap();
+        assert_eq!(page.truncated_before, None);
+        assert_eq!(page.events.first().unwrap().seq, 25);
+        assert_eq!(page.events.len(), 55);
+        let tail = svc.store.events_page(79).unwrap();
+        assert_eq!(tail.events.len(), 1);
+        // Same answers after a kill/reopen.
+        drop(svc);
+        let svc2 = ServiceCore::with_persist(b"recovery-secret", mode).unwrap();
+        let page = svc2.store.events_page(25).unwrap();
+        assert_eq!(page.truncated_before, None);
+        assert_eq!(page.events.first().unwrap().seq, 25);
+        assert_eq!(page.events.len(), 55);
+        let _ = site;
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Aggressive byte retention: old segments are dropped; a pager that
+    // asks for them gets the truncation marker and a complete page from
+    // the marker on.
+    let dir = tmpdir("page-truncated");
+    {
+        let (svc, _mode, _site) = drive(&dir, 1);
+        let page = svc.store.events_page(0).unwrap();
+        let t = page.truncated_before.expect("retention must report truncation");
+        assert!(t > 0);
+        assert_eq!(page.events.first().unwrap().seq, t, "complete from the marker on");
+        assert_eq!(page.events.last().unwrap().seq, 79);
+        let seqs: Vec<u64> = page.events.iter().map(|e| e.seq).collect();
+        let want: Vec<u64> = (t..=79).collect();
+        assert_eq!(seqs, want, "gap-free from the truncation point");
+        // A pager that starts at/after the marker sees no truncation.
+        let page = svc.store.events_page(t).unwrap();
+        assert_eq!(page.truncated_before, None);
+        assert_eq!(page.events.len(), (80 - t) as usize);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// ISSUE 4 acceptance: under `FsyncPolicy::Group` a power loss (simulated
+/// by truncating the WAL to its last-fsynced length) loses at most the
+/// final un-fsynced group — every acknowledged mutation up to the
+/// captured durability point survives, with a gap-free event sequence.
+#[test]
+fn group_commit_power_loss_loses_at_most_last_group() {
+    let dir = tmpdir("group-loss");
+    let mode = PersistMode::Wal {
+        dir: dir.clone(),
+        snapshot_every: 0, // no rotation: the WAL holds everything
+        fsync: FsyncPolicy::Group { records: 4, interval_ms: 2 },
+        events: EventLogConfig::default(),
+    };
+    let (site, durable_mid) = {
+        let svc = ServiceCore::with_persist(b"recovery-secret", mode.clone()).unwrap();
+        let tok = svc.admin_token();
+        let site = svc
+            .handle(0.0, &tok, ApiRequest::CreateSite {
+                name: "theta".into(),
+                hostname: "t1".into(),
+                path: "/p".into(),
+            })
+            .unwrap()
+            .site_id();
+        svc.handle(0.1, &tok, ApiRequest::RegisterApp {
+            site,
+            name: "MD".into(),
+            command_template: "md".into(),
+            parameters: vec![],
+        })
+        .unwrap();
+        let mut durable_mid = 0;
+        for i in 0..20 {
+            let jc = JobCreate::simple(site, "MD", "md_small");
+            svc.handle(1.0 + i as f64, &tok, ApiRequest::BulkCreateJobs { jobs: vec![jc] })
+                .unwrap();
+            if i == 9 {
+                // The acknowledgement above blocked on its group fsync,
+                // so the durable WAL prefix covers jobs 0..=9 right now.
+                durable_mid = svc.store.wal_durable_len(Some(site)).unwrap();
+            }
+        }
+        (site, durable_mid)
+    };
+    let wal = wal_path(&dir, Some(site));
+    let full = std::fs::read(&wal).unwrap();
+    assert!(durable_mid > 0 && (durable_mid as usize) <= full.len());
+    // Power loss at the instant the 10th ack returned: everything past
+    // the last fsync vanishes.
+    std::fs::write(&wal, &full[..durable_mid as usize]).unwrap();
+    let svc2 = ServiceCore::with_persist(b"recovery-secret", mode.clone()).unwrap();
+    svc2.store.check_indexes().unwrap();
+    let jobs = svc2.store.jobs_snapshot();
+    assert!(jobs.len() >= 10, "acknowledged mutations lost: {} < 10", jobs.len());
+    assert!(jobs.len() <= 20);
+    let evs = svc2.store.events();
+    for (i, e) in evs.iter().enumerate() {
+        assert_eq!(e.seq, i as u64, "gap-free event sequence up to the recovery point");
+    }
+    // Every acknowledged mutation is fsynced before its ack returns (the
+    // ack's waiter leads the group fsync itself when none is running):
+    // truncating to the durable length after the fact loses nothing.
+    let dir1 = tmpdir("group-loss-r1");
+    let mode1 = PersistMode::Wal {
+        dir: dir1.clone(),
+        snapshot_every: 0,
+        fsync: FsyncPolicy::Group { records: 1, interval_ms: 2 },
+        events: EventLogConfig::default(),
+    };
+    let (site1, jobs1) = {
+        let svc = ServiceCore::with_persist(b"recovery-secret", mode1.clone()).unwrap();
+        let tok = svc.admin_token();
+        let site = svc
+            .handle(0.0, &tok, ApiRequest::CreateSite {
+                name: "cori".into(),
+                hostname: "c1".into(),
+                path: "/p".into(),
+            })
+            .unwrap()
+            .site_id();
+        svc.handle(0.1, &tok, ApiRequest::RegisterApp {
+            site,
+            name: "MD".into(),
+            command_template: "md".into(),
+            parameters: vec![],
+        })
+        .unwrap();
+        for i in 0..5 {
+            let jc = JobCreate::simple(site, "MD", "md_small");
+            svc.handle(1.0 + i as f64, &tok, ApiRequest::BulkCreateJobs { jobs: vec![jc] })
+                .unwrap();
+        }
+        let durable = svc.store.wal_durable_len(Some(site)).unwrap();
+        let len = std::fs::metadata(wal_path(&dir1, Some(site))).unwrap().len();
+        assert_eq!(durable, len, "records=1: every ack is fsynced");
+        (site, svc.store.jobs_snapshot().len())
+    };
+    let svc3 = ServiceCore::with_persist(b"recovery-secret", mode1).unwrap();
+    assert_eq!(svc3.store.jobs_snapshot().len(), jobs1);
+    let _ = site1;
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&dir1);
+}
+
+/// Satellite (ISSUE 4): a WAL I/O failure must not panic a gateway
+/// worker mid-request — the request gets a framed 500 on the live
+/// keep-alive connection, and every subsequent request fails fast while
+/// the persist handle stays poisoned.
+#[test]
+fn poisoned_persist_serves_framed_500s() {
+    use balsam::service::api::{ApiConn, ApiError};
+    use balsam::service::http_gw::{serve_with, HttpConn};
+    use balsam::util::httpd::HttpConfig;
+    use std::sync::Arc;
+
+    let dir = tmpdir("poisoned");
+    let svc = Arc::new(ServiceCore::with_persist(b"recovery-secret", wal_mode(&dir, 0)).unwrap());
+    let tok = svc.admin_token();
+    let ka = HttpConfig { keep_alive: true, ..HttpConfig::default() };
+    let server = serve_with(svc.clone(), "127.0.0.1:0", 2, ka.clone()).unwrap();
+    let mut conn = HttpConn::with_config(server.addr.clone(), ka);
+    let site = conn
+        .api(&tok, ApiRequest::CreateSite {
+            name: "theta".into(),
+            hostname: "t1".into(),
+            path: "/p".into(),
+        })
+        .unwrap()
+        .site_id();
+    // Inject the I/O failure a real disk would have produced mid-append.
+    svc.store.poison_persist("injected: disk gone");
+    let err = conn.api(&tok, ApiRequest::CreateSession { site, batch_job: None }).unwrap_err();
+    assert!(matches!(err, ApiError::Internal(_)), "expected framed 500, got {err:?}");
+    // Fail-fast persists across requests — reads included: memory may be
+    // ahead of the log, so the service refuses to serve until restarted.
+    let err = conn.api(&tok, ApiRequest::SiteBacklog { site }).unwrap_err();
+    assert!(matches!(err, ApiError::Internal(_)), "{err:?}");
+    // The framed error kept the keep-alive connection usable throughout.
+    assert_eq!(conn.connects(), 1, "500s must be framed, not connection drops");
+    server.stop();
     let _ = std::fs::remove_dir_all(&dir);
 }
