@@ -14,9 +14,25 @@ Combinations present in only one of the two records are reported but not
 gated (e.g. the first run after a new leg lands). Fails the job on a
 regression larger than --max-drop; a missing or unreadable baseline is
 tolerated (first run on a branch, expired cache).
+
+The propagation-latency axis (the `"propagation"` object recorded since
+the push-mode subscription landed) is gated on two rules:
+
+* **push beats poll** within the same run — push-mode stage-in
+  propagation latency must be strictly below the polling baseline's
+  (an in-run invariant, robust to machine speed);
+* **push trend** — push avg latency must not exceed the baseline run's
+  by more than MAX_LATENCY_RATIO (3x; latency on shared CI runners is
+  noisy, so the cross-run gate is deliberately loose while the in-run
+  invariant stays strict).
 """
 import json
 import sys
+
+# Cross-run gate on push latency: fail only past this many times the
+# baseline (generous: absolute push latency is a few ms and CI runners
+# jitter; the strict signal is the in-run push-vs-poll invariant).
+MAX_LATENCY_RATIO = 3.0
 
 
 def peaks_by_combo(doc):
@@ -33,25 +49,7 @@ def peaks_by_combo(doc):
     return peaks
 
 
-def main(argv):
-    if len(argv) < 3:
-        print(__doc__)
-        return 2
-    baseline_path, current_path = argv[1], argv[2]
-    max_drop = 0.30
-    if "--max-drop" in argv:
-        max_drop = float(argv[argv.index("--max-drop") + 1])
-
-    try:
-        with open(baseline_path) as f:
-            baseline = peaks_by_combo(json.load(f))
-    except (OSError, ValueError, KeyError) as e:
-        print(f"no usable baseline ({e}); skipping trend check")
-        return 0
-
-    with open(current_path) as f:
-        current = peaks_by_combo(json.load(f))
-
+def gate_throughput(baseline, current, max_drop):
     failed = False
     for combo in sorted(set(baseline) | set(current)):
         base, cur = baseline.get(combo), current.get(combo)
@@ -69,6 +67,71 @@ def main(argv):
                 f"(gate: {max_drop:.0%}) — see BENCH_service.json"
             )
             failed = True
+    return failed
+
+
+def gate_propagation(baseline_doc, current_doc):
+    """Gate the push-vs-poll stage-in propagation axis. Returns failed."""
+    cur = current_doc.get("propagation")
+    if not cur:
+        print("propagation: no axis in current record (pre-push bench); not gated")
+        return False
+    push, poll = cur.get("push_avg_ms"), cur.get("poll_avg_ms")
+    print(
+        f"propagation: poll avg {poll:.2f} ms / push avg {push:.2f} ms "
+        f"(p95 {cur.get('poll_p95_ms', 0):.2f} / {cur.get('push_p95_ms', 0):.2f} ms)"
+    )
+    failed = False
+    if not (push < poll):
+        print(
+            "::error::push-mode stage-in propagation "
+            f"({push:.2f} ms) does not beat the polling baseline ({poll:.2f} ms)"
+        )
+        failed = True
+    base = (baseline_doc or {}).get("propagation") or {}
+    base_push = base.get("push_avg_ms")
+    if base_push:
+        ratio = push / base_push if base_push > 0 else 1.0
+        print(f"propagation push trend: baseline {base_push:.2f} ms -> {push:.2f} ms ({ratio:.2f}x)")
+        if ratio > MAX_LATENCY_RATIO:
+            print(
+                f"::error::push propagation latency regressed {ratio:.1f}x vs baseline "
+                f"(gate: {MAX_LATENCY_RATIO:.0f}x)"
+            )
+            failed = True
+    else:
+        print("propagation: no baseline for the axis; trend not gated")
+    return failed
+
+
+def main(argv):
+    if len(argv) < 3:
+        print(__doc__)
+        return 2
+    baseline_path, current_path = argv[1], argv[2]
+    max_drop = 0.30
+    if "--max-drop" in argv:
+        max_drop = float(argv[argv.index("--max-drop") + 1])
+
+    with open(current_path) as f:
+        current_doc = json.load(f)
+    current = peaks_by_combo(current_doc)
+
+    baseline_doc = None
+    try:
+        with open(baseline_path) as f:
+            baseline_doc = json.load(f)
+        baseline = peaks_by_combo(baseline_doc)
+    except (OSError, ValueError, KeyError) as e:
+        print(f"no usable baseline ({e}); throughput trend check skipped")
+        baseline = {}
+
+    failed = False
+    if baseline:
+        failed |= gate_throughput(baseline, current, max_drop)
+    # The propagation axis gates even without a baseline (the push-beats-
+    # poll rule is an in-run invariant).
+    failed |= gate_propagation(baseline_doc, current_doc)
     return 1 if failed else 0
 
 

@@ -19,6 +19,14 @@
 //! the path with `BENCH_OUT`) so the perf trajectory is tracked across
 //! PRs; `bench_trend.py` gates on the peak req/s per (transport, persist,
 //! fsync) combination.
+//!
+//! A fourth axis measures **stage-in propagation latency**: the time from
+//! a transfer-completion RPC landing at the service to an observer
+//! noticing the job turned PREPROCESSED — once with a `ListEvents` poll
+//! loop (the paper's site behaviour; latency ~ half the poll period) and
+//! once with a hanging `WatchEvents` subscription (push mode; latency ~
+//! one wakeup). Recorded under `"propagation"` in `BENCH_service.json`;
+//! `bench_trend.py` gates push < poll and the push latency trend.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -172,6 +180,119 @@ fn print_pass(r: &PassResult) {
     );
 }
 
+/// Observer poll period for the propagation baseline (ms). Short relative
+/// to the paper's multi-second site poll periods, so the recorded poll
+/// latency is a conservative lower bound on what push mode beats.
+const PROP_POLL_MS: u64 = 25;
+
+struct PropResult {
+    mode: &'static str,
+    iters: usize,
+    avg_ms: f64,
+    p95_ms: f64,
+}
+
+/// One stage-in propagation pass: for `iters` jobs, measure the time from
+/// the `UpdateTransferItems(Done)` RPC to an independent observer (its own
+/// HTTP connection) seeing the job's PREPROCESSED event — via a
+/// `WatchEvents` long poll (push) or a `ListEvents` + sleep loop (poll).
+fn run_propagation(push: bool, iters: usize) -> PropResult {
+    use balsam::service::models::{Direction, TransferState};
+
+    let http = HttpConfig { keep_alive: true, ..HttpConfig::default() };
+    let svc = Arc::new(ServiceCore::new(b"bench-prop"));
+    let tok = svc.admin_token();
+    let site = svc
+        .handle(0.0, &tok, ApiRequest::CreateSite {
+            name: "prop".into(),
+            hostname: "h".into(),
+            path: "/p".into(),
+        })
+        .unwrap()
+        .site_id();
+    svc.handle(0.0, &tok, ApiRequest::RegisterApp {
+        site,
+        name: "MD".into(),
+        command_template: "md".into(),
+        parameters: vec![],
+    })
+    .unwrap();
+    let server = serve_with(svc.clone(), "127.0.0.1:0", 4, http.clone()).unwrap();
+    let mut producer = HttpConn::with_config(server.addr.clone(), http.clone());
+
+    let mut lat_ms: Vec<f64> = Vec::with_capacity(iters);
+    let mut cursor: usize = 0;
+    for _ in 0..iters {
+        let mut jc = JobCreate::simple(site, "MD", "md_small");
+        jc.transfers_in = vec![("APS".into(), 1_000)];
+        let job = producer
+            .api(&tok, ApiRequest::BulkCreateJobs { jobs: vec![jc] })
+            .unwrap()
+            .job_ids()[0];
+        let item = producer
+            .api(&tok, ApiRequest::PendingTransferItems { site, direction: Direction::In, limit: 0 })
+            .unwrap()
+            .transfer_items()
+            .into_iter()
+            .find(|t| t.job_id == job)
+            .expect("created item is pending");
+        // Consume the creation events so the observer arms on the
+        // completion alone.
+        let page = producer
+            .api(&tok, ApiRequest::ListEvents { since: cursor })
+            .unwrap()
+            .events_page();
+        if let Some(last) = page.events.last() {
+            cursor = last.seq as usize + 1;
+        }
+        let (tx, rx) = std::sync::mpsc::channel::<Instant>();
+        let (addr, otok, ohttp, since) = (server.addr.clone(), tok.clone(), http.clone(), cursor);
+        let observer = std::thread::spawn(move || {
+            let mut conn = HttpConn::with_config(addr, ohttp);
+            loop {
+                let page = if push {
+                    conn.api(&otok, ApiRequest::WatchEvents {
+                        site: Some(site),
+                        since,
+                        timeout_ms: 2_000,
+                    })
+                } else {
+                    std::thread::sleep(Duration::from_millis(PROP_POLL_MS));
+                    conn.api(&otok, ApiRequest::ListEvents { since })
+                }
+                .unwrap()
+                .events_page();
+                if page.events.iter().any(|e| e.job_id == job && e.to == JobState::Preprocessed) {
+                    let _ = tx.send(Instant::now());
+                    return;
+                }
+            }
+        });
+        // Give the push observer time to arm its watch (an un-armed
+        // watch still sees the events — this only reduces jitter).
+        std::thread::sleep(Duration::from_millis(5));
+        let t0 = Instant::now();
+        producer
+            .api(&tok, ApiRequest::UpdateTransferItems {
+                ids: vec![item.id],
+                state: TransferState::Done,
+                task_id: None,
+            })
+            .unwrap();
+        let seen = rx.recv().expect("observer died");
+        observer.join().unwrap();
+        lat_ms.push(seen.duration_since(t0).as_secs_f64() * 1e3);
+    }
+    server.stop();
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let avg_ms = lat_ms.iter().sum::<f64>() / lat_ms.len() as f64;
+    // Nearest-rank p95: ceil(0.95 * n)-th smallest (1-based), so 20
+    // samples report the 19th value, not the maximum.
+    let rank = (lat_ms.len() as f64 * 0.95).ceil() as usize;
+    let p95_ms = lat_ms[rank.saturating_sub(1).min(lat_ms.len() - 1)];
+    PropResult { mode: if push { "push" } else { "poll" }, iters, avg_ms, p95_ms }
+}
+
 fn main() {
     let quick = std::env::var("BENCH_QUICK").is_ok();
     let secs = if quick { 1.5 } else { 6.0 };
@@ -221,6 +342,19 @@ fn main() {
         100.0 * group_vs_flush
     );
 
+    // Propagation-latency axis: poll baseline vs push-mode subscription.
+    let prop_iters = if quick { 20 } else { 60 };
+    let poll = run_propagation(false, prop_iters);
+    let push = run_propagation(true, prop_iters);
+    for p in [&poll, &push] {
+        println!(
+            "stage-in propagation [{:>4}]: avg {:.2} ms, p95 {:.2} ms ({} iters)",
+            p.mode, p.avg_ms, p.p95_ms, p.iters
+        );
+    }
+    let push_vs_poll = poll.avg_ms / push.avg_ms.max(1e-9);
+    println!("push-mode propagation speedup vs {PROP_POLL_MS}ms polling: {push_vs_poll:.1}x");
+
     let out = Json::obj(vec![
         ("bench", Json::str("service_throughput")),
         ("quick", Json::Bool(quick)),
@@ -249,6 +383,18 @@ fn main() {
         ("speedup_8_vs_1", Json::num(speedup)),
         ("keepalive_speedup_8workers", Json::num(ka_speedup)),
         ("group_commit_vs_flush", Json::num(group_vs_flush)),
+        (
+            "propagation",
+            Json::obj(vec![
+                ("poll_period_ms", Json::num(PROP_POLL_MS as f64)),
+                ("iters", Json::num(prop_iters as f64)),
+                ("poll_avg_ms", Json::num(poll.avg_ms)),
+                ("poll_p95_ms", Json::num(poll.p95_ms)),
+                ("push_avg_ms", Json::num(push.avg_ms)),
+                ("push_p95_ms", Json::num(push.p95_ms)),
+            ]),
+        ),
+        ("push_vs_poll_stagein", Json::num(push_vs_poll)),
     ]);
     let path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_service.json".to_string());
     std::fs::write(&path, out.to_string()).expect("write bench record");

@@ -1,7 +1,7 @@
 //! `balsam` CLI — leader entrypoint.
 //!
 //! Subcommands:
-//!   repro <id|all> [--fast] [--seed N]   regenerate a paper table/figure
+//!   repro `<id|all>` [--fast] [--seed N]   regenerate a paper table/figure
 //!   service [--addr A]                   run the central service over HTTP
 //!   runtime-check [--artifacts DIR]      load + execute the AOT artifacts
 //!   state-graph                          print the job state machine
@@ -30,7 +30,7 @@ fn main() {
                  \n          [--fsync=never|always|group:K,Tms] [--events-segment-bytes N]\
                  \n          [--events-retain-bytes N] [--events-retain-age SECS]\
                  \n          [--workers N] [--no-keepalive] [--http-idle-timeout SECS]\
-                 \n          [--http-max-requests N]\
+                 \n          [--http-max-requests N] [--subscribe-max-ms N]\
                  \n  runtime-check [--artifacts artifacts] [--model NAME]\
                  \n  state-graph",
                 balsam::experiments::ALL
@@ -98,7 +98,20 @@ fn cmd_service(args: &Args) -> balsam::Result<()> {
     let workers = args.u64_or("workers", default_workers() as u64) as usize;
     let keep_alive = http.keep_alive;
     let idle = http.idle_timeout.as_secs();
-    let svc = Arc::new(ServiceCore::with_persist(b"balsam-demo-secret", mode)?);
+    let mut core = ServiceCore::with_persist(b"balsam-demo-secret", mode)?;
+    // Server-side clamp on WatchEvents long polls: must stay below the
+    // pooled client's read timeout (with a 1 s margin) or armed
+    // subscribers would time out at the transport instead of renewing
+    // cleanly.
+    let cap_ms = balsam::util::httpd::CLIENT_READ_TIMEOUT.as_millis() as u64 - 1_000;
+    let subscribe_max = args.u64_or("subscribe-max-ms", core.subscribe_max_ms);
+    balsam::ensure!(
+        subscribe_max <= cap_ms,
+        "--subscribe-max-ms must be <= {cap_ms} (the transport read timeout minus margin), \
+         got {subscribe_max}"
+    );
+    core.subscribe_max_ms = subscribe_max;
+    let svc = Arc::new(core);
     let token = svc.admin_token();
     let server = http_gw::serve_with(svc, addr, workers, http)?;
     println!("balsam service on http://{}", server.addr);

@@ -3,12 +3,21 @@
 //! (paper §2). Every site module and client speaks this API — in-process
 //! in simulated mode, JSON-over-HTTP through [`super::http_gw`] in
 //! real-time mode.
+//!
+//! Wire encoding: a request is a JSON object `{"type": "<VariantName>",
+//! ...fields}` POSTed to `/api` with a bearer token; a response is
+//! `{"ok": true, "type": "<VariantName>", "body": ...}` (or `{"ok":
+//! false, "error": "..."}` with a 4xx/5xx status). The per-variant wire
+//! shapes are documented on [`ApiRequest`] / [`ApiResponse`]; the codecs
+//! live in [`super::http_gw`] and the row payloads reuse the
+//! `to_json`/`from_json` codecs on [`super::models`] types.
 
 use super::models::*;
 
 /// Job creation payload (one fine-grained task).
 #[derive(Debug, Clone)]
 pub struct JobCreate {
+    /// Site the job executes at (its shard owns the job row).
     pub site_id: SiteId,
     /// Registered App name at the site (must exist — the service rejects
     /// arbitrary command injection, paper §3.1 security model).
@@ -16,13 +25,18 @@ pub struct JobCreate {
     /// Workload class consumed by the execution backend
     /// (e.g. "md_small", "md_large", "xpcs").
     pub workload: String,
+    /// Node footprint of one run.
     pub num_nodes: u32,
+    /// App parameter bindings, `(name, value)`.
     pub params: Vec<(String, String)>,
+    /// Free-form labels for filtering, `(key, value)`.
     pub tags: Vec<(String, String)>,
     /// Stage-in requirements: (remote endpoint, bytes).
     pub transfers_in: Vec<(String, u64)>,
     /// Stage-out requirements: (remote endpoint, bytes).
     pub transfers_out: Vec<(String, u64)>,
+    /// DAG dependencies: the job stays `AWAITING_PARENTS` until every
+    /// parent reaches `JOB_FINISHED` (and fails if any parent fails).
     pub parents: Vec<JobId>,
 }
 
@@ -46,6 +60,7 @@ impl JobCreate {
 /// Filter for job list/count queries (the SDK's `Job.objects.filter(...)`).
 #[derive(Debug, Clone, Default)]
 pub struct JobFilter {
+    /// Restrict to one site's shard (`None` = all sites).
     pub site: Option<SiteId>,
     /// Empty = any state.
     pub states: Vec<JobState>,
@@ -55,49 +70,237 @@ pub struct JobFilter {
     pub limit: usize,
 }
 
+/// One service interaction. Each variant documents its JSON wire shape —
+/// the object POSTed to `/api` (the `"type"` discriminator is the variant
+/// name) — and the [`ApiResponse`] variant it returns.
 #[derive(Debug, Clone)]
 pub enum ApiRequest {
     // --- identity / topology ---
-    CreateUser { name: String },
-    CreateSite { name: String, hostname: String, path: String },
-    RegisterApp { site: SiteId, name: String, command_template: String, parameters: Vec<String> },
+    /// Create a user (admin only). Wire: `{"type":"CreateUser",
+    /// "name":s}` → [`ApiResponse::UserId`].
+    CreateUser {
+        /// Display name; not unique (ids are identity).
+        name: String,
+    },
+    /// Register an execution site owned by the caller. Wire:
+    /// `{"type":"CreateSite","name":s,"hostname":s,"path":s}` →
+    /// [`ApiResponse::SiteId`].
+    CreateSite {
+        /// Facility name (e.g. "theta"); matches a simulator facility.
+        name: String,
+        /// Login hostname of the site.
+        hostname: String,
+        /// Site directory path at the facility.
+        path: String,
+    },
+    /// Index an ApplicationDefinition at a site. Wire:
+    /// `{"type":"RegisterApp","site":n,"name":s,"command_template":s,
+    /// "parameters":[s,...]}` → [`ApiResponse::AppId`].
+    RegisterApp {
+        /// Owning site.
+        site: SiteId,
+        /// App name, unique per site.
+        name: String,
+        /// Shell template expanded at the site (metadata only server-side).
+        command_template: String,
+        /// Names of the template's parameters.
+        parameters: Vec<String>,
+    },
     // --- jobs ---
-    BulkCreateJobs { jobs: Vec<JobCreate> },
-    ListJobs { filter: JobFilter },
-    CountByState { site: SiteId },
-    UpdateJobState { job: JobId, to: JobState, data: String },
-    BulkUpdateJobState { jobs: Vec<JobId>, to: JobState, data: String },
+    /// Create many jobs in one call. Wire: `{"type":"BulkCreateJobs",
+    /// "jobs":[{...see [`JobCreate`] fields...},...]}` →
+    /// [`ApiResponse::JobIds`] in input order.
+    BulkCreateJobs {
+        /// Creation payloads, applied in order.
+        jobs: Vec<JobCreate>,
+    },
+    /// List jobs matching a filter. Wire: `{"type":"ListJobs","filter":
+    /// {"site":n|null,"states":[s,...],"tags":[[k,v],...],"limit":n}}` →
+    /// [`ApiResponse::Jobs`].
+    ListJobs {
+        /// Which jobs to return.
+        filter: JobFilter,
+    },
+    /// Per-state job counts at a site (zero-count states omitted). Wire:
+    /// `{"type":"CountByState","site":n}` → [`ApiResponse::Counts`].
+    CountByState {
+        /// Site to count at.
+        site: SiteId,
+    },
+    /// One legality-checked job transition. Wire:
+    /// `{"type":"UpdateJobState","job":n,"to":s,"data":s}` →
+    /// [`ApiResponse::Unit`]; an illegal edge is a 400.
+    UpdateJobState {
+        /// Job to move.
+        job: JobId,
+        /// Target state (`JobState::name` string on the wire).
+        to: JobState,
+        /// Free-form annotation recorded on the event.
+        data: String,
+    },
+    /// The same transition applied to many jobs; fails on the first
+    /// rejection. Wire: `{"type":"BulkUpdateJobState","jobs":[n,...],
+    /// "to":s,"data":s}` → [`ApiResponse::Unit`].
+    BulkUpdateJobState {
+        /// Jobs to move, in order.
+        jobs: Vec<JobId>,
+        /// Target state for every job.
+        to: JobState,
+        /// Annotation recorded on each event.
+        data: String,
+    },
     // --- sessions (launcher leases) ---
-    CreateSession { site: SiteId, batch_job: Option<BatchJobId> },
-    SessionAcquire { session: SessionId, max_nodes: u32, max_jobs: usize },
-    SessionHeartbeat { session: SessionId },
+    /// Open a launcher lease at a site. Wire: `{"type":"CreateSession",
+    /// "site":n,"batch_job":n|null}` → [`ApiResponse::SessionId`].
+    CreateSession {
+        /// Site the launcher runs at.
+        site: SiteId,
+        /// Pilot allocation backing this launcher, if any.
+        batch_job: Option<BatchJobId>,
+    },
+    /// Atomically acquire runnable jobs for a session (implicit
+    /// heartbeat). Wire: `{"type":"SessionAcquire","session":n,
+    /// "max_nodes":n,"max_jobs":n}` → [`ApiResponse::Jobs`].
+    SessionAcquire {
+        /// The acquiring lease.
+        session: SessionId,
+        /// Node budget across the acquired jobs.
+        max_nodes: u32,
+        /// Cap on acquired jobs.
+        max_jobs: usize,
+    },
+    /// Standalone lease refresh. Wire: `{"type":"SessionHeartbeat",
+    /// "session":n}` → [`ApiResponse::Unit`]; 400 once the session ended.
+    SessionHeartbeat {
+        /// Lease to refresh.
+        session: SessionId,
+    },
     /// One-round-trip launcher sync: heartbeat the session, then apply the
     /// batched per-job transitions in order (a job may appear twice, e.g.
     /// RUN_DONE then POSTPROCESSED). Best-effort per update; the response
     /// is `JobIds` listing the jobs whose transition was rejected, so the
-    /// launcher can re-fetch their state.
-    SessionSync { session: SessionId, updates: Vec<(JobId, JobState, String)> },
-    SessionEnd { session: SessionId },
+    /// launcher can re-fetch their state. Wire: `{"type":"SessionSync",
+    /// "session":n,"updates":[[job,state,data],...]}` →
+    /// [`ApiResponse::JobIds`] (the rejected jobs).
+    SessionSync {
+        /// Lease being refreshed.
+        session: SessionId,
+        /// Ordered `(job, to, data)` transitions.
+        updates: Vec<(JobId, JobState, String)>,
+    },
+    /// Graceful lease end: releases acquired jobs, recovers running ones.
+    /// Wire: `{"type":"SessionEnd","session":n}` → [`ApiResponse::Unit`].
+    SessionEnd {
+        /// Lease to end.
+        session: SessionId,
+    },
     // --- batch jobs (pilot allocations) ---
+    /// Request a pilot allocation. Wire: `{"type":"CreateBatchJob",
+    /// "site":n,"num_nodes":n,"wall_time_s":x,"mode":s,"queue":s,
+    /// "project":s}` → [`ApiResponse::BatchJobId`].
     CreateBatchJob {
+        /// Site the allocation is requested at.
         site: SiteId,
+        /// Allocation width in nodes.
         num_nodes: u32,
+        /// Requested wall time, seconds.
         wall_time_s: f64,
+        /// Launcher packing mode inside the allocation.
         mode: JobMode,
+        /// Local scheduler queue.
         queue: String,
+        /// Local scheduler project/account.
         project: String,
     },
-    ListBatchJobs { site: SiteId, active_only: bool },
-    UpdateBatchJob { id: BatchJobId, state: BatchJobState, local_id: Option<u64> },
+    /// List a site's batch jobs. Wire: `{"type":"ListBatchJobs","site":n,
+    /// "active_only":b}` → [`ApiResponse::BatchJobs`].
+    ListBatchJobs {
+        /// Site whose allocations to list.
+        site: SiteId,
+        /// Restrict to Pending/Queued/Running allocations.
+        active_only: bool,
+    },
+    /// Scheduler-module status sync for one allocation. Wire:
+    /// `{"type":"UpdateBatchJob","id":n,"state":s,"local_id":n|null}` →
+    /// [`ApiResponse::Unit`].
+    UpdateBatchJob {
+        /// Allocation to update.
+        id: BatchJobId,
+        /// Observed scheduler state.
+        state: BatchJobState,
+        /// Local scheduler id, once known.
+        local_id: Option<u64>,
+    },
     // --- transfer items ---
-    PendingTransferItems { site: SiteId, direction: Direction, limit: usize },
-    UpdateTransferItems { ids: Vec<TransferItemId>, state: TransferState, task_id: Option<XferTaskId> },
+    /// Pending transfer items whose owning job is in the actionable stage
+    /// (stage-in while READY, stage-out once POSTPROCESSED). Wire:
+    /// `{"type":"PendingTransferItems","site":n,"direction":s,
+    /// "limit":n}` → [`ApiResponse::TransferItems`].
+    PendingTransferItems {
+        /// Site whose shard is queried.
+        site: SiteId,
+        /// `"in"` (stage-in) or `"out"` (stage-out) on the wire.
+        direction: Direction,
+        /// Cap on returned items; 0 = unlimited.
+        limit: usize,
+    },
+    /// Move a batch of items to one state (legacy single-state bulk
+    /// update; the mixed-status path is [`ApiRequest::SyncTransferItems`]).
+    /// Wire: `{"type":"UpdateTransferItems","ids":[n,...],"state":s,
+    /// "task_id":n|null}` → [`ApiResponse::Unit`].
+    UpdateTransferItems {
+        /// Items to update.
+        ids: Vec<TransferItemId>,
+        /// Target state for all of them.
+        state: TransferState,
+        /// Transfer-task handle to record, if any.
+        task_id: Option<XferTaskId>,
+    },
     /// One-round-trip transfer-module sync: mixed per-item status updates
     /// (Done and Error batches from several transfer tasks in one call).
-    SyncTransferItems { updates: Vec<(TransferItemId, TransferState, Option<XferTaskId>)> },
+    /// Wire: `{"type":"SyncTransferItems","updates":[[id,state,
+    /// task|null],...]}` → [`ApiResponse::Unit`].
+    SyncTransferItems {
+        /// Ordered `(item, state, task)` updates.
+        updates: Vec<(TransferItemId, TransferState, Option<XferTaskId>)>,
+    },
     // --- monitoring ---
-    SiteBacklog { site: SiteId },
-    ListEvents { since: usize },
+    /// Aggregate backlog snapshot for one site. Wire:
+    /// `{"type":"SiteBacklog","site":n}` → [`ApiResponse::Backlog`].
+    SiteBacklog {
+        /// Site to aggregate.
+        site: SiteId,
+    },
+    /// One page of the merged event log from global sequence `since` on.
+    /// Wire: `{"type":"ListEvents","since":n}` → [`ApiResponse::Events`]
+    /// (see the [`EventsPage`] dual wire shape).
+    ListEvents {
+        /// First global sequence number wanted (cursor).
+        since: usize,
+    },
+    /// Long-poll subscription over the event log: returns immediately when
+    /// events with `seq >= since` exist (or the cursor predates event-log
+    /// retention — then `truncated_before` is set), otherwise hangs in the
+    /// gateway until a matching event is committed or `timeout_ms`
+    /// elapses (an empty page; the cursor stays valid and the client
+    /// re-arms). The server clamps `timeout_ms` to its subscribe cap so a
+    /// watch always answers within the transport's read timeout. Wire:
+    /// `{"type":"WatchEvents","site":n|null,"since":n,"timeout_ms":n}` →
+    /// [`ApiResponse::Events`]. Back-compat: an old server answers
+    /// `"unknown request type"` (a 400) — subscribers fall back to
+    /// [`ApiRequest::ListEvents`] polling.
+    WatchEvents {
+        /// Restrict to one site's shard — the caller must own that site.
+        /// `None` subscribes to every site's events and is admin-only
+        /// (otherwise omitting the filter would bypass the per-site
+        /// check). A site filter still pages on the *global* sequence
+        /// number.
+        site: Option<SiteId>,
+        /// First global sequence number wanted (cursor).
+        since: usize,
+        /// Max server-side hang, milliseconds (0 = non-blocking check).
+        timeout_ms: u64,
+    },
 }
 
 /// Aggregate backlog snapshot used by the Elastic Queue module and the
@@ -114,32 +317,60 @@ pub struct Backlog {
     pub batch_nodes: u32,
 }
 
-/// One page of the merged event log (`ListEvents { since }`).
+/// One page of the merged event log ([`ApiRequest::ListEvents`] /
+/// [`ApiRequest::WatchEvents`]).
 ///
 /// `truncated_before = Some(n)` means event-log retention has dropped
 /// events below global seq `n` that the request asked for — the page is
 /// complete from `n` on. Pagers treat it as an explicit "history starts
 /// at N" signal instead of silently missing events.
+///
+/// Wire shape is dual for back-compat: a bare JSON array of events (the
+/// pre-retention shape, emitted whenever there is no truncation to
+/// report, so old clients keep working) or `{"truncated_before":n,
+/// "events":[...]}` once retention actually dropped requested history.
+/// Decoders accept both.
 #[derive(Debug, Clone, Default)]
 pub struct EventsPage {
+    /// Retention marker: history below this global seq is gone.
     pub truncated_before: Option<u64>,
+    /// Events with `seq >= since`, ordered by global sequence.
     pub events: Vec<Event>,
 }
 
+/// A successful service reply. On the wire each variant is
+/// `{"ok":true,"type":"<VariantName>","body":...}`; the per-variant
+/// `body` shapes are noted below (row payloads use the
+/// [`super::models`] `to_json` codecs).
 #[derive(Debug, Clone)]
 pub enum ApiResponse {
+    /// No payload (`body` is `null`).
     Unit,
+    /// A created user id (`body` is a number).
     UserId(UserId),
+    /// A created site id (`body` is a number).
     SiteId(SiteId),
+    /// A registered app id (`body` is a number).
     AppId(AppId),
+    /// Job ids (`body` is an array of numbers). For
+    /// [`ApiRequest::BulkCreateJobs`] these are the created jobs in input
+    /// order; for [`ApiRequest::SessionSync`] the rejected updates.
     JobIds(Vec<JobId>),
+    /// Full job rows (`body` is an array of job objects).
     Jobs(Vec<Job>),
+    /// Per-state counts (`body` is an array of `[state, count]` pairs).
     Counts(Vec<(JobState, usize)>),
+    /// A created session id (`body` is a number).
     SessionId(SessionId),
+    /// A created batch-job id (`body` is a number).
     BatchJobId(BatchJobId),
+    /// Batch-job rows (`body` is an array of batch-job objects).
     BatchJobs(Vec<BatchJob>),
+    /// Transfer-item rows (`body` is an array of item objects).
     TransferItems(Vec<TransferItem>),
+    /// Backlog aggregates (`body` is an object with the four counters).
     Backlog(Backlog),
+    /// An event page — see the [`EventsPage`] dual wire shape.
     Events(EventsPage),
 }
 
@@ -176,12 +407,28 @@ impl ApiResponse {
     }
 }
 
+/// A failed service interaction — over HTTP these map to statuses
+/// (401 / 404 / 400 / 500) and back.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ApiError {
+    /// Missing/invalid token, or the caller does not own the touched
+    /// site (HTTP 401).
     Unauthorized,
+    /// The named entity does not exist (HTTP 404).
     NotFound(String),
-    IllegalTransition { job: JobId, from: JobState, to: JobState },
+    /// A job transition not permitted by the state machine (HTTP 400).
+    IllegalTransition {
+        /// Job whose transition was rejected.
+        job: JobId,
+        /// Its current state.
+        from: JobState,
+        /// The rejected target state.
+        to: JobState,
+    },
+    /// Malformed or semantically invalid request (HTTP 400).
     BadRequest(String),
+    /// Client-side transport failure (connect/send/frame); the request
+    /// may or may not have reached the service.
     Transport(String),
     /// Server-side failure (e.g. a poisoned durable store): the request
     /// may not have been made durable. Served as a framed 500.
@@ -209,5 +456,8 @@ impl std::error::Error for ApiError {}
 /// simulator transport and by the HTTP client transport; all site modules
 /// and clients are written against this trait.
 pub trait ApiConn {
+    /// Issue one authenticated request and wait for its response. A
+    /// blocking variant ([`ApiRequest::WatchEvents`]) may hang up to its
+    /// `timeout_ms` before answering.
     fn api(&mut self, token: &str, req: ApiRequest) -> Result<ApiResponse, ApiError>;
 }

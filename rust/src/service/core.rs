@@ -12,6 +12,7 @@
 //! locked in perpetuity" (paper §3.1).
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
 
 use super::api::*;
 use super::auth::TokenAuthority;
@@ -24,14 +25,41 @@ use super::store::Store;
 /// the service and affected jobs are reset").
 pub const DEFAULT_LEASE_TIMEOUT_S: f64 = 60.0;
 
+/// Default server-side cap on a `WatchEvents` hang: derived from the
+/// transport's read timeout with a 5 s margin, so an armed watch always
+/// answers (an empty page) before the subscriber's transport gives up on
+/// the connection — a long poll must renew, never desynchronize.
+pub const DEFAULT_SUBSCRIBE_MAX_MS: u64 =
+    crate::util::httpd::CLIENT_READ_TIMEOUT.as_millis() as u64 - 5_000;
+
 /// The central Balsam service.
 pub struct ServiceCore {
     pub store: Store,
     auth: TokenAuthority,
     admin: UserId,
     pub lease_timeout_s: f64,
+    /// Server-side clamp on `WatchEvents { timeout_ms }` (CLI:
+    /// `balsam service --subscribe-max-ms`).
+    pub subscribe_max_ms: u64,
+    /// Free subscription-parking slots. Every armed `WatchEvents` hang
+    /// pins the gateway worker thread that carries it, so parked watches
+    /// are capped — `http_gw::serve_with` sizes this to `workers - 1`,
+    /// guaranteeing at least one worker always remains for the writes
+    /// that wake the watchers. With no slot free a watch degrades to a
+    /// non-blocking probe (the subscriber re-arms), never to starvation.
+    subscribe_free: AtomicU64,
     /// Monotonic API-call counter (perf observability).
     calls: AtomicU64,
+}
+
+/// RAII permit for one parked `WatchEvents` hang; dropping it returns
+/// the slot.
+struct WatchSlot<'a>(&'a AtomicU64);
+
+impl Drop for WatchSlot<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
 }
 
 impl ServiceCore {
@@ -62,8 +90,39 @@ impl ServiceCore {
             auth: TokenAuthority::new(secret),
             admin,
             lease_timeout_s: DEFAULT_LEASE_TIMEOUT_S,
+            subscribe_max_ms: DEFAULT_SUBSCRIBE_MAX_MS,
+            // Unbounded until a gateway sizes it: in-process callers
+            // (simulations, tests) have no worker pool to starve.
+            subscribe_free: AtomicU64::new(u64::MAX),
             calls: AtomicU64::new(0),
         })
+    }
+
+    /// Cap the number of concurrently *parked* `WatchEvents` hangs (see
+    /// `subscribe_free`). Called by the gateway at serve time with
+    /// `workers - 1`; may be lowered to 0 to disable parking entirely
+    /// (every watch degrades to a non-blocking probe).
+    pub fn set_subscribe_slots(&self, slots: u64) {
+        self.subscribe_free.store(slots, Ordering::Relaxed);
+    }
+
+    /// Take a parking permit, or `None` when every slot is armed.
+    fn try_arm_watch(&self) -> Option<WatchSlot<'_>> {
+        let mut cur = self.subscribe_free.load(Ordering::Relaxed);
+        loop {
+            if cur == 0 {
+                return None;
+            }
+            match self.subscribe_free.compare_exchange(
+                cur,
+                cur - 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Some(WatchSlot(&self.subscribe_free)),
+                Err(seen) => cur = seen,
+            }
+        }
     }
 
     /// Issue a bearer token for an existing user.
@@ -301,6 +360,53 @@ impl ServiceCore {
             }
             ApiRequest::ListEvents { since } => {
                 Ok(ApiResponse::Events(self.store.events_page(since as u64)?))
+            }
+            ApiRequest::WatchEvents { site, since, timeout_ms } => {
+                // Long poll: answer immediately when the cursor already has
+                // something to read (events, or a retention marker for a
+                // cursor that fell behind), else park on the store's event
+                // watch until a commit moves the horizon or the clamped
+                // timeout fires. The wait runs outside every store lock —
+                // a hanging subscription never blocks writers.
+                //
+                // Authorization: a site filter requires owning that site;
+                // the unfiltered stream (every tenant's events) is
+                // admin-only — otherwise the per-site check would be
+                // bypassable by simply omitting the filter. (ListEvents
+                // keeps its legacy any-authenticated-user behavior for
+                // back-compat; WatchEvents is tenant-scoped from day one.)
+                match site {
+                    Some(s) => self.check_site(user, s)?,
+                    None if user != self.admin => return Err(ApiError::Unauthorized),
+                    None => {}
+                }
+                let since = since as u64;
+                let timeout = Duration::from_millis(timeout_ms.min(self.subscribe_max_ms));
+                // Bounded parking: arming requires a subscription slot;
+                // with none free (every other worker already pinned by a
+                // hang) the watch degrades to a non-blocking probe so
+                // writers can always reach a worker.
+                let slot = if timeout.is_zero() { None } else { self.try_arm_watch() };
+                let deadline = if slot.is_some() { Instant::now() + timeout } else { Instant::now() };
+                loop {
+                    // Horizon first: an event committed between the page
+                    // read and the wait re-triggers the wait immediately
+                    // instead of being missed until the next commit.
+                    let horizon = self.store.event_horizon();
+                    let page = self.store.events_page_for(site, since)?;
+                    if !page.events.is_empty() || page.truncated_before.is_some() {
+                        return Ok(ApiResponse::Events(page));
+                    }
+                    let left = deadline.saturating_duration_since(Instant::now());
+                    if left.is_zero() || !self.store.wait_events(horizon, left) {
+                        // Timed out (or the store is shutting down): an
+                        // empty page — the cursor stays valid, the
+                        // subscriber re-arms.
+                        return Ok(ApiResponse::Events(page));
+                    }
+                    // Woken: with a site filter the fresh event may belong
+                    // to another shard — loop and re-check.
+                }
             }
         }
     }
@@ -949,6 +1055,163 @@ mod tests {
         assert_eq!(b.runnable_nodes, 1);
         assert_eq!(b.inflight_nodes, 1);
         assert_eq!(b.batch_nodes, 0);
+    }
+
+    #[test]
+    fn watch_events_returns_immediately_when_events_exist() {
+        let (svc, tok, site) = setup();
+        create_one(&svc, &tok, site, false); // emits Ready/StagedIn/... events
+        let t0 = std::time::Instant::now();
+        let page = svc
+            .handle(2.0, &tok, ApiRequest::WatchEvents {
+                site: Some(site),
+                since: 0,
+                timeout_ms: 30_000,
+            })
+            .unwrap()
+            .events_page();
+        assert!(!page.events.is_empty());
+        assert!(page.truncated_before.is_none());
+        assert!(t0.elapsed() < Duration::from_secs(5), "watch must not hang past events");
+    }
+
+    #[test]
+    fn watch_events_times_out_with_empty_page() {
+        let (svc, tok, site) = setup();
+        create_one(&svc, &tok, site, false);
+        let cursor = svc.store.event_horizon() as usize;
+        let t0 = std::time::Instant::now();
+        let page = svc
+            .handle(2.0, &tok, ApiRequest::WatchEvents {
+                site: Some(site),
+                since: cursor,
+                timeout_ms: 50,
+            })
+            .unwrap()
+            .events_page();
+        assert!(page.events.is_empty());
+        assert!(t0.elapsed() >= Duration::from_millis(45), "must hang up to the timeout");
+        // Non-blocking probe: timeout_ms = 0 returns at once.
+        let t0 = std::time::Instant::now();
+        svc.handle(2.0, &tok, ApiRequest::WatchEvents { site: None, since: cursor, timeout_ms: 0 })
+            .unwrap();
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn watch_events_wakes_on_commit_from_another_thread() {
+        let (svc, tok, site) = setup();
+        let id = create_one(&svc, &tok, site, false);
+        let svc = std::sync::Arc::new(svc);
+        let cursor = svc.store.event_horizon() as usize;
+        let svc2 = svc.clone();
+        let tok2 = tok.clone();
+        let writer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(40));
+            svc2.handle(3.0, &tok2, ApiRequest::UpdateJobState {
+                job: id,
+                to: JobState::Running,
+                data: String::new(),
+            })
+            .unwrap();
+        });
+        let t0 = std::time::Instant::now();
+        let page = svc
+            .handle(3.0, &tok, ApiRequest::WatchEvents {
+                site: Some(site),
+                since: cursor,
+                timeout_ms: 20_000,
+            })
+            .unwrap()
+            .events_page();
+        writer.join().unwrap();
+        assert_eq!(page.events.len(), 1);
+        assert_eq!(page.events[0].to, JobState::Running);
+        assert!(t0.elapsed() < Duration::from_secs(10), "push must beat the timeout");
+    }
+
+    #[test]
+    fn watch_events_site_filter_ignores_foreign_shards() {
+        let (svc, tok, site) = setup();
+        // A second site whose traffic must NOT answer site-1 watches.
+        let other = svc
+            .handle(0.0, &tok, ApiRequest::CreateSite {
+                name: "cori".into(),
+                hostname: "c".into(),
+                path: "/p".into(),
+            })
+            .unwrap()
+            .site_id();
+        svc.handle(0.0, &tok, ApiRequest::RegisterApp {
+            site: other,
+            name: "EigenCorr".into(),
+            command_template: "corr".into(),
+            parameters: vec![],
+        })
+        .unwrap();
+        let cursor = svc.store.event_horizon() as usize;
+        create_one(&svc, &tok, other, false); // events on the OTHER shard
+        let page = svc
+            .handle(2.0, &tok, ApiRequest::WatchEvents {
+                site: Some(site),
+                since: cursor,
+                timeout_ms: 50,
+            })
+            .unwrap()
+            .events_page();
+        assert!(page.events.is_empty(), "foreign-site events leaked into the filter");
+        // Unfiltered watch sees them immediately.
+        let page = svc
+            .handle(2.0, &tok, ApiRequest::WatchEvents { site: None, since: cursor, timeout_ms: 0 })
+            .unwrap()
+            .events_page();
+        assert!(!page.events.is_empty());
+    }
+
+    #[test]
+    fn watch_parking_degrades_to_probe_when_slots_exhausted() {
+        let (svc, tok, site) = setup();
+        svc.set_subscribe_slots(0);
+        let cursor = svc.store.event_horizon() as usize;
+        let t0 = std::time::Instant::now();
+        let page = svc
+            .handle(1.0, &tok, ApiRequest::WatchEvents {
+                site: Some(site),
+                since: cursor,
+                timeout_ms: 10_000,
+            })
+            .unwrap()
+            .events_page();
+        assert!(page.events.is_empty());
+        assert!(t0.elapsed() < Duration::from_millis(500), "no slot: must not park");
+        // Slots restored: the same watch parks again.
+        svc.set_subscribe_slots(1);
+        let t0 = std::time::Instant::now();
+        svc.handle(1.0, &tok, ApiRequest::WatchEvents {
+            site: Some(site),
+            since: cursor,
+            timeout_ms: 50,
+        })
+        .unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(45));
+    }
+
+    #[test]
+    fn watch_events_foreign_site_unauthorized() {
+        let (svc, admin_tok, site) = setup();
+        let mallory = svc
+            .handle(0.0, &admin_tok, ApiRequest::CreateUser { name: "mallory".into() })
+            .unwrap()
+            .user_id();
+        let mtok = svc.token_for(mallory);
+        let req = ApiRequest::WatchEvents { site: Some(site), since: 0, timeout_ms: 0 };
+        let err = svc.handle(1.0, &mtok, req).unwrap_err();
+        assert_eq!(err, ApiError::Unauthorized);
+        // Omitting the filter must not bypass the per-site check: the
+        // unfiltered stream is admin-only.
+        let req = ApiRequest::WatchEvents { site: None, since: 0, timeout_ms: 0 };
+        let err = svc.handle(1.0, &mtok, req).unwrap_err();
+        assert_eq!(err, ApiError::Unauthorized);
     }
 
     #[test]

@@ -208,6 +208,12 @@ pub fn request_to_json(req: &ApiRequest) -> Json {
         ListEvents { since } => {
             Json::obj(vec![("type", Json::str("ListEvents")), ("since", Json::num(*since as f64))])
         }
+        WatchEvents { site, since, timeout_ms } => Json::obj(vec![
+            ("type", Json::str("WatchEvents")),
+            ("site", site.map(|s| Json::num(s.0 as f64)).unwrap_or(Json::Null)),
+            ("since", Json::num(*since as f64)),
+            ("timeout_ms", Json::num(*timeout_ms as f64)),
+        ]),
     }
 }
 
@@ -387,6 +393,13 @@ pub fn request_from_json(j: &Json) -> Result<ApiRequest, String> {
         "ListEvents" => ApiRequest::ListEvents {
             since: j.get("since").and_then(Json::as_u64).unwrap_or(0) as usize,
         },
+        // A missing/garbled timeout degrades to a non-blocking probe (0),
+        // never to an accidental server-side hang.
+        "WatchEvents" => ApiRequest::WatchEvents {
+            site: j.get("site").and_then(Json::as_u64).map(SiteId),
+            since: j.get("since").and_then(Json::as_u64).unwrap_or(0) as usize,
+            timeout_ms: j.get("timeout_ms").and_then(Json::as_u64).unwrap_or(0),
+        },
         other => return Err(format!("unknown request type {other}")),
     })
 }
@@ -527,7 +540,20 @@ pub fn serve_with(
     http: HttpConfig,
 ) -> crate::Result<Server> {
     let t0 = Instant::now();
-    Server::serve_cfg(addr, workers, http, move |req: Request| {
+    // On Server::stop, wake every armed WatchEvents long poll so its
+    // worker finishes the in-flight response and can be joined — a socket
+    // shutdown alone cannot unblock a handler parked on the store condvar.
+    // Arming first returns this gateway's generation: a core that already
+    // served (and stopped) once long-polls normally behind the fresh
+    // gateway, and a *stale* gateway's stop hook (overlapping restart)
+    // cannot close the channel out from under this one.
+    let watch_generation = service.store.open_watchers();
+    // Parked watches may pin at most workers - 1 threads: at least one
+    // worker always remains for the mutations that wake the watchers
+    // (with a single worker, watches degrade to non-blocking probes).
+    service.set_subscribe_slots(workers.max(1) as u64 - 1);
+    let stop_svc = service.clone();
+    let mut server = Server::serve_cfg(addr, workers, http, move |req: Request| {
         let now = t0.elapsed().as_secs_f64();
         let token = req
             .header("authorization")
@@ -564,7 +590,9 @@ pub fn serve_with(
                 Response { status, body: body.to_string().into_bytes(), content_type: "application/json" }
             }
         }
-    })
+    })?;
+    server.add_stop_hook(move || stop_svc.store.close_watchers(watch_generation));
+    Ok(server)
 }
 
 /// Client-side [`ApiConn`] over HTTP — what every remote Balsam component
@@ -668,6 +696,8 @@ mod tests {
                     (TransferItemId(12), TransferState::Error, None),
                 ],
             },
+            ApiRequest::WatchEvents { site: Some(SiteId(3)), since: 17, timeout_ms: 1500 },
+            ApiRequest::WatchEvents { site: None, since: 0, timeout_ms: 0 },
         ];
         for req in reqs {
             let j = request_to_json(&req);

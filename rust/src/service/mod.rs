@@ -12,10 +12,17 @@
 //! ([`http_gw`]) and is exercised over sockets, like the hosted AWS
 //! deployment in the paper.
 
+// The wire-facing modules (every `ApiRequest`/`ApiResponse` variant and
+// every row type/field crosses the HTTP and WAL boundaries) carry
+// `missing_docs` at warn level: with clippy's `-D warnings` and the CI
+// `RUSTDOCFLAGS="-D warnings" cargo doc` step this makes an undocumented
+// new public wire item a build failure, not a doc-rot vector.
+#[warn(missing_docs)]
 pub mod models;
 pub mod state;
 pub mod store;
 pub mod persist;
+#[warn(missing_docs)]
 pub mod api;
 pub mod core;
 pub mod auth;

@@ -13,7 +13,11 @@ macro_rules! id_type {
     ($(#[$doc:meta])* $name:ident) => {
         $(#[$doc])*
         #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
-        pub struct $name(pub u64);
+        pub struct $name(
+            /// Raw numeric id (issued by `Store::fresh_id`, dense across
+            /// all entity kinds).
+            pub u64,
+        );
 
         impl std::fmt::Display for $name {
             fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
@@ -60,7 +64,9 @@ id_type!(
 /// states"; names follow the Balsam REST API enumeration).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum JobState {
+    /// Just inserted; initial routing not yet applied.
     Created,
+    /// Blocked on unfinished parent jobs (DAG edge).
     AwaitingParents,
     /// Waiting for stage-in transfers.
     Ready,
@@ -68,21 +74,26 @@ pub enum JobState {
     StagedIn,
     /// Site-side preprocessing done; runnable by a launcher.
     Preprocessed,
+    /// Executing under a launcher session.
     Running,
+    /// The application run exited successfully.
     RunDone,
     /// Site-side postprocessing done; stage-out may begin.
     Postprocessed,
     /// Round trip complete (results delivered to the client endpoint).
     JobFinished,
+    /// The application run exited with an error.
     RunError,
     /// Launcher died / allocation expired while running.
     RunTimeout,
     /// Reset by the service or site for another attempt.
     RestartReady,
+    /// Terminal failure (retry budget exhausted or parent failed).
     Failed,
 }
 
 impl JobState {
+    /// Every state, in canonical (paper) order.
     pub const ALL: [JobState; 13] = [
         JobState::Created,
         JobState::AwaitingParents,
@@ -109,6 +120,7 @@ impl JobState {
         matches!(self, JobState::Preprocessed | JobState::RestartReady)
     }
 
+    /// Canonical wire/WAL name (the Balsam REST API enumeration string).
     pub fn name(self) -> &'static str {
         match self {
             JobState::Created => "CREATED",
@@ -127,6 +139,7 @@ impl JobState {
         }
     }
 
+    /// Inverse of [`JobState::name`]; `None` for unknown strings.
     pub fn from_name(s: &str) -> Option<JobState> {
         JobState::ALL.iter().copied().find(|st| st.name() == s)
     }
@@ -138,19 +151,27 @@ impl std::fmt::Display for JobState {
     }
 }
 
+/// A tenant of the service (paper §3.1 multi-tenancy root).
 #[derive(Debug, Clone)]
 pub struct User {
+    /// Identity (authorization compares owner ids).
     pub id: UserId,
+    /// Display name; `"admin"` is recovered as the service identity.
     pub name: String,
 }
 
+/// A user-owned execution endpoint (one facility deployment).
 #[derive(Debug, Clone)]
 pub struct Site {
+    /// Identity; also the shard key for everything at this site.
     pub id: SiteId,
+    /// Owning user — the only non-admin allowed to touch this site.
     pub owner: UserId,
     /// e.g. "theta", "summit", "cori" — must match a facility name.
     pub name: String,
+    /// Login hostname of the site.
     pub hostname: String,
+    /// Site directory path at the facility.
     pub path: String,
 }
 
@@ -159,68 +180,103 @@ pub struct Site {
 /// site, so maliciously submitted App data cannot alter local execution).
 #[derive(Debug, Clone)]
 pub struct App {
+    /// Identity.
     pub id: AppId,
+    /// Site the definition is indexed at.
     pub site_id: SiteId,
+    /// App name, unique per site; jobs reference it by name.
     pub name: String,
+    /// Shell template expanded at the site (server stores metadata only).
     pub command_template: String,
+    /// Names of the template's parameters.
     pub parameters: Vec<String>,
 }
 
+/// Which way a transfer item moves data relative to the site.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Direction {
+    /// Stage-in: remote endpoint -> site (before preprocessing).
     In,
+    /// Stage-out: site -> remote endpoint (after postprocessing).
     Out,
 }
 
+/// Lifecycle of one transfer item.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum TransferState {
+    /// Awaiting pickup by the site transfer module.
     Pending,
+    /// Bundled into an in-flight transfer task.
     Active,
+    /// Data delivered; the owning job may advance.
     Done,
+    /// The carrying transfer task failed.
     Error,
 }
 
 /// A file/directory that must be staged in or out for a Job.
 #[derive(Debug, Clone)]
 pub struct TransferItem {
+    /// Identity.
     pub id: TransferItemId,
+    /// Job whose data this item carries.
     pub job_id: JobId,
+    /// Site (shard) the item belongs to — the owning job's site.
     pub site_id: SiteId,
+    /// Stage-in or stage-out.
     pub direction: Direction,
     /// Remote endpoint name (e.g. "APS", "ALS") — protocol-specific URI in
     /// the real system, facility name in the simulator.
     pub remote: String,
+    /// Payload size (drives simulated transfer time and task batching).
     pub size_bytes: u64,
+    /// Current lifecycle state.
     pub state: TransferState,
     /// Globus-like task UUID registered by the site transfer module.
     pub task_id: Option<XferTaskId>,
 }
 
+/// A fine-grained task: one invocation of an App at a Site (paper §3.1).
 #[derive(Debug, Clone)]
 pub struct Job {
+    /// Identity.
     pub id: JobId,
+    /// Execution site (shard key).
     pub site_id: SiteId,
+    /// The registered App this job runs.
     pub app_id: AppId,
+    /// Current lifecycle state (see [`JobState`]).
     pub state: JobState,
+    /// App parameter bindings, `(name, value)`.
     pub params: Vec<(String, String)>,
+    /// Free-form labels for filtering, `(key, value)`.
     pub tags: Vec<(String, String)>,
+    /// Node footprint of one run.
     pub num_nodes: u32,
     /// Workload class consumed by the execution backend (e.g. "md_small").
     pub workload: String,
+    /// DAG dependencies (may live at other sites).
     pub parents: Vec<JobId>,
+    /// Runs started so far (incremented on RUNNING).
     pub attempts: u32,
+    /// Retry budget; exhausting it fails the job.
     pub max_attempts: u32,
     /// Session currently holding this job, if any.
     pub session: Option<SessionId>,
+    /// Service-clock creation time (seconds).
     pub created_at: f64,
 }
 
+/// Lifecycle of a pilot allocation at the local batch scheduler.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum BatchJobState {
     /// Created via API, not yet submitted to the local scheduler.
     Pending,
+    /// Submitted; waiting in the local queue.
     Queued,
+    /// The allocation is running (its launcher may be live).
     Running,
+    /// The allocation ended.
     Finished,
     /// Deleted before starting (e.g. elastic-queue wait timeout).
     Deleted,
@@ -230,25 +286,38 @@ pub enum BatchJobState {
 /// `serial` packs single-node jobs into one master per node).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum JobMode {
+    /// One multi-node app run per job.
     Mpi,
+    /// Single-node jobs packed many-per-node under one master.
     Serial,
 }
 
 /// A resource allocation request / pilot job (paper §3.1 "Balsam BatchJob").
 #[derive(Debug, Clone)]
 pub struct BatchJob {
+    /// Identity.
     pub id: BatchJobId,
+    /// Site the allocation is requested at (shard key).
     pub site_id: SiteId,
+    /// Allocation width in nodes.
     pub num_nodes: u32,
+    /// Requested wall time, seconds.
     pub wall_time_s: f64,
+    /// Launcher packing mode inside the allocation.
     pub mode: JobMode,
+    /// Local scheduler queue.
     pub queue: String,
+    /// Local scheduler project/account.
     pub project: String,
+    /// Observed scheduler state.
     pub state: BatchJobState,
     /// Local scheduler id once submitted.
     pub local_id: Option<u64>,
+    /// Service-clock creation time (seconds).
     pub created_at: f64,
+    /// When the allocation started running, if it has.
     pub started_at: Option<f64>,
+    /// When the allocation finished/was deleted, if it has.
     pub ended_at: Option<f64>,
 }
 
@@ -256,11 +325,17 @@ pub struct BatchJob {
 /// acquisition and enables crash recovery via heartbeat expiry.
 #[derive(Debug, Clone)]
 pub struct Session {
+    /// Identity.
     pub id: SessionId,
+    /// Site the launcher runs at (shard key).
     pub site_id: SiteId,
+    /// Pilot allocation backing this launcher, if any.
     pub batch_job_id: Option<BatchJobId>,
+    /// Service-clock time of the last lease refresh.
     pub heartbeat_at: f64,
+    /// Jobs exclusively held by this session.
     pub acquired: BTreeSet<JobId>,
+    /// Set once the session ended (gracefully or by lease expiry).
     pub ended: bool,
 }
 
@@ -274,17 +349,24 @@ pub struct Session {
 #[derive(Debug, Clone)]
 pub struct Event {
     /// Global, dense sequence number (total order across all site shards;
-    /// `ListEvents { since }` pages on it).
+    /// `ListEvents { since }` and `WatchEvents` page on it).
     pub seq: u64,
+    /// Job whose transition this records.
     pub job_id: JobId,
+    /// Site (shard) the job lives at.
     pub site_id: SiteId,
+    /// Service-clock timestamp of the transition (seconds).
     pub ts: f64,
+    /// State the job left.
     pub from: JobState,
+    /// State the job entered.
     pub to: JobState,
+    /// Free-form annotation supplied with the transition.
     pub data: String,
 }
 
 impl Direction {
+    /// Canonical wire/WAL name.
     pub fn name(self) -> &'static str {
         match self {
             Direction::In => "in",
@@ -292,6 +374,7 @@ impl Direction {
         }
     }
 
+    /// Inverse of [`Direction::name`]; `None` for unknown strings.
     pub fn from_name(s: &str) -> Option<Direction> {
         match s {
             "in" => Some(Direction::In),
@@ -302,6 +385,7 @@ impl Direction {
 }
 
 impl TransferState {
+    /// Canonical wire/WAL name.
     pub fn name(self) -> &'static str {
         match self {
             TransferState::Pending => "pending",
@@ -311,6 +395,7 @@ impl TransferState {
         }
     }
 
+    /// Inverse of [`TransferState::name`]; `None` for unknown strings.
     pub fn from_name(s: &str) -> Option<TransferState> {
         match s {
             "pending" => Some(TransferState::Pending),
@@ -323,6 +408,7 @@ impl TransferState {
 }
 
 impl BatchJobState {
+    /// Canonical wire/WAL name.
     pub fn name(self) -> &'static str {
         match self {
             BatchJobState::Pending => "pending",
@@ -333,6 +419,7 @@ impl BatchJobState {
         }
     }
 
+    /// Inverse of [`BatchJobState::name`]; `None` for unknown strings.
     pub fn from_name(s: &str) -> Option<BatchJobState> {
         match s {
             "pending" => Some(BatchJobState::Pending),
@@ -346,6 +433,7 @@ impl BatchJobState {
 }
 
 impl JobMode {
+    /// Canonical wire/WAL name.
     pub fn name(self) -> &'static str {
         match self {
             JobMode::Mpi => "mpi",
@@ -353,6 +441,7 @@ impl JobMode {
         }
     }
 
+    /// Inverse of [`JobMode::name`]; `None` for unknown strings.
     pub fn from_name(s: &str) -> Option<JobMode> {
         match s {
             "mpi" => Some(JobMode::Mpi),
@@ -383,6 +472,8 @@ fn get_str(j: &Json, key: &str) -> String {
 }
 
 impl User {
+    /// The canonical serialized shape (HTTP wire payloads and WAL /
+    /// snapshot records use this same encoding).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("id", Json::num(self.id.0 as f64)),
@@ -390,12 +481,16 @@ impl User {
         ])
     }
 
+    /// Decode [`User::to_json`] output; absent fields take zero-ish
+    /// defaults (lenient for wire/version skew).
     pub fn from_json(j: &Json) -> User {
         User { id: UserId(get_u64(j, "id")), name: get_str(j, "name") }
     }
 }
 
 impl Site {
+    /// The canonical serialized shape (HTTP wire payloads and WAL /
+    /// snapshot records use this same encoding).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("id", Json::num(self.id.0 as f64)),
@@ -406,6 +501,8 @@ impl Site {
         ])
     }
 
+    /// Decode [`Site::to_json`] output; absent fields take zero-ish
+    /// defaults (lenient for wire/version skew).
     pub fn from_json(j: &Json) -> Site {
         Site {
             id: SiteId(get_u64(j, "id")),
@@ -418,6 +515,8 @@ impl Site {
 }
 
 impl App {
+    /// The canonical serialized shape (HTTP wire payloads and WAL /
+    /// snapshot records use this same encoding).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("id", Json::num(self.id.0 as f64)),
@@ -431,6 +530,8 @@ impl App {
         ])
     }
 
+    /// Decode [`App::to_json`] output; absent fields take zero-ish
+    /// defaults (lenient for wire/version skew).
     pub fn from_json(j: &Json) -> App {
         App {
             id: AppId(get_u64(j, "id")),
@@ -447,6 +548,8 @@ impl App {
 }
 
 impl Job {
+    /// The canonical serialized shape (HTTP wire payloads and WAL /
+    /// snapshot records use this same encoding).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("id", Json::num(self.id.0 as f64)),
@@ -465,6 +568,8 @@ impl Job {
         ])
     }
 
+    /// Decode [`Job::to_json`] output; absent fields take zero-ish
+    /// defaults (lenient for wire/version skew).
     pub fn from_json(j: &Json) -> Job {
         Job {
             id: JobId(get_u64(j, "id")),
@@ -495,6 +600,8 @@ impl Job {
 }
 
 impl TransferItem {
+    /// The canonical serialized shape (HTTP wire payloads and WAL /
+    /// snapshot records use this same encoding).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("id", Json::num(self.id.0 as f64)),
@@ -508,6 +615,8 @@ impl TransferItem {
         ])
     }
 
+    /// Decode [`TransferItem::to_json`] output; absent fields take zero-ish
+    /// defaults (lenient for wire/version skew).
     pub fn from_json(j: &Json) -> TransferItem {
         TransferItem {
             id: TransferItemId(get_u64(j, "id")),
@@ -531,6 +640,8 @@ impl TransferItem {
 }
 
 impl BatchJob {
+    /// The canonical serialized shape (HTTP wire payloads and WAL /
+    /// snapshot records use this same encoding).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("id", Json::num(self.id.0 as f64)),
@@ -548,6 +659,8 @@ impl BatchJob {
         ])
     }
 
+    /// Decode [`BatchJob::to_json`] output; absent fields take zero-ish
+    /// defaults (lenient for wire/version skew).
     pub fn from_json(j: &Json) -> BatchJob {
         BatchJob {
             id: BatchJobId(get_u64(j, "id")),
@@ -575,6 +688,8 @@ impl BatchJob {
 }
 
 impl Session {
+    /// The canonical serialized shape (HTTP wire payloads and WAL /
+    /// snapshot records use this same encoding).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("id", Json::num(self.id.0 as f64)),
@@ -586,6 +701,8 @@ impl Session {
         ])
     }
 
+    /// Decode [`Session::to_json`] output; absent fields take zero-ish
+    /// defaults (lenient for wire/version skew).
     pub fn from_json(j: &Json) -> Session {
         Session {
             id: SessionId(get_u64(j, "id")),
@@ -605,6 +722,8 @@ impl Session {
 }
 
 impl Event {
+    /// The canonical serialized shape (HTTP wire payloads and WAL /
+    /// snapshot records use this same encoding).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("seq", Json::num(self.seq as f64)),
@@ -617,6 +736,8 @@ impl Event {
         ])
     }
 
+    /// Decode [`Event::to_json`] output; absent fields take zero-ish
+    /// defaults (lenient for wire/version skew).
     pub fn from_json(j: &Json) -> Event {
         Event {
             seq: get_u64(j, "seq"),

@@ -28,7 +28,8 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
 use super::api::{ApiError, EventsPage};
 use super::models::*;
@@ -53,6 +54,32 @@ struct Routes {
     titem_site: BTreeMap<TransferItemId, SiteId>,
     batch_site: BTreeMap<BatchJobId, SiteId>,
     children: BTreeMap<JobId, Vec<JobId>>,
+}
+
+/// Condvar parking lot for long-poll event subscribers ([`Store::wait_events`]).
+///
+/// One mutex guards all three facts — the published horizon, the closed
+/// flag, and the open generation — so a notification can never be lost
+/// between a watcher's predicate check and its wait, shutdown wakes every
+/// parked watcher exactly once, and a *stale* gateway's close (carrying an
+/// old generation) cannot shut the channel out from under a newer gateway
+/// serving the same store.
+#[derive(Debug, Default)]
+struct WatchState {
+    /// Highest *published* event horizon (the exclusive upper bound of
+    /// committed event sequence numbers).
+    horizon: u64,
+    /// Closed: all waits return immediately (gateway shutdown).
+    closed: bool,
+    /// Bumped by every [`Store::open_watchers`]; closes are tagged with
+    /// the generation they belong to and ignored when outdated.
+    generation: u64,
+}
+
+#[derive(Debug, Default)]
+struct EventWatch {
+    state: Mutex<WatchState>,
+    cv: Condvar,
 }
 
 /// One site's slice of the database plus its secondary indexes.
@@ -330,6 +357,7 @@ pub struct Store {
     routes: RwLock<Routes>,
     shards: RwLock<BTreeMap<SiteId, Arc<RwLock<Shard>>>>,
     persist: Option<Arc<Persist>>,
+    watch: EventWatch,
 }
 
 impl Store {
@@ -534,6 +562,93 @@ impl Store {
         }
     }
 
+    /// [`Store::await_commit`] plus watcher notification. Every mutating
+    /// method finishes through this, so a long-poll subscriber parked in
+    /// [`Store::wait_events`] wakes the moment an event it asked for is
+    /// applied — and, under group commit, only after the commit that
+    /// produced it is durable (the notify runs after the fsync wait).
+    fn commit_notify(&self, wait: Option<CommitWait>) {
+        Self::await_commit(wait);
+        self.notify_events();
+    }
+
+    // ----- event watchers -------------------------------------------------
+
+    /// The next global event sequence number to be allocated — equivalently
+    /// the exclusive upper bound of every event that exists. A subscriber
+    /// holding cursor `since` has something to read iff
+    /// `event_horizon() > since`.
+    pub fn event_horizon(&self) -> u64 {
+        self.event_seq.load(Ordering::Relaxed)
+    }
+
+    /// Publish the current horizon to parked watchers. No-op (no lock
+    /// contention beyond one uncontended mutex) when no event was appended
+    /// since the last publish.
+    fn notify_events(&self) {
+        let seq = self.event_horizon();
+        let mut g = self.watch.state.lock().unwrap();
+        if seq > g.horizon {
+            g.horizon = seq;
+            self.watch.cv.notify_all();
+        }
+    }
+
+    /// Park the calling thread until an event with `seq >= since` has been
+    /// committed, `timeout` elapses, or [`Store::close_watchers`] runs.
+    /// Returns `true` when the horizon moved past `since` — the caller
+    /// re-reads its event page (with a site filter the fresh event may
+    /// belong to another shard, so long-poll callers loop on the result).
+    pub fn wait_events(&self, since: u64, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.watch.state.lock().unwrap();
+        // Sync the published horizon: it lags the real counter until the
+        // first post-recovery mutation publishes, and a watcher must not
+        // park behind events that already exist.
+        let seq = self.event_seq.load(Ordering::Relaxed);
+        if seq > g.horizon {
+            g.horizon = seq;
+        }
+        loop {
+            if g.closed || g.horizon > since {
+                return g.horizon > since;
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return false;
+            }
+            g = self.watch.cv.wait_timeout(g, left).unwrap().0;
+        }
+    }
+
+    /// Wake every parked watcher and make all future [`Store::wait_events`]
+    /// calls return immediately — *unless* a newer
+    /// [`Store::open_watchers`] generation has superseded `generation`
+    /// (two gateways overlapping on one store during a restart: the old
+    /// server's stop hook must not shut the channel the new server is
+    /// serving on). Called on gateway shutdown via the HTTP server's stop
+    /// hook: an armed long-poll subscription must never outlive the
+    /// server that carries it.
+    pub fn close_watchers(&self, generation: u64) {
+        let mut g = self.watch.state.lock().unwrap();
+        if g.generation == generation {
+            g.closed = true;
+            self.watch.cv.notify_all();
+        }
+    }
+
+    /// Arm (or re-arm) the watch channel and return its new generation —
+    /// the token a matching [`Store::close_watchers`] must present.
+    /// Called when a gateway starts serving this store, so a previously
+    /// stopped server does not permanently degrade a later server's long
+    /// polls into immediate empty returns (client-side busy polling).
+    pub fn open_watchers(&self) -> u64 {
+        let mut g = self.watch.state.lock().unwrap();
+        g.generation += 1;
+        g.closed = false;
+        g.generation
+    }
+
     /// First persist-layer I/O failure, if any (the store is poisoned:
     /// in-memory state may be ahead of the durable log, and all further
     /// appends fail fast).
@@ -611,7 +726,7 @@ impl Store {
         let rec = self.persist.is_some().then(|| WalRecord::User(user.clone()));
         self.global.write().unwrap().users.insert(user.id, user);
         if let Some(rec) = rec {
-            Self::await_commit(self.wal_global(rec));
+            self.commit_notify(self.wal_global(rec));
         }
     }
 
@@ -631,7 +746,7 @@ impl Store {
         self.global.write().unwrap().sites.insert(id, site);
         self.shards.write().unwrap().entry(id).or_default();
         if let Some(rec) = rec {
-            Self::await_commit(self.wal_global(rec));
+            self.commit_notify(self.wal_global(rec));
         }
     }
 
@@ -643,7 +758,7 @@ impl Store {
         let rec = self.persist.is_some().then(|| WalRecord::App(app.clone()));
         self.global.write().unwrap().apps.insert(app.id, app);
         if let Some(rec) = rec {
-            Self::await_commit(self.wal_global(rec));
+            self.commit_notify(self.wal_global(rec));
         }
     }
 
@@ -680,7 +795,7 @@ impl Store {
         sh.jobs.insert(job.id, job);
         let wait = rec.and_then(|rec| self.wal_shard(site, &mut sh, vec![rec]));
         drop(sh);
-        Self::await_commit(wait);
+        self.commit_notify(wait);
     }
 
     pub fn job(&self, id: JobId) -> Option<Job> {
@@ -730,7 +845,7 @@ impl Store {
             wait = self.wal_shard(site, &mut sh, recs);
         }
         drop(sh);
-        Self::await_commit(wait);
+        self.commit_notify(wait);
     }
 
     /// Legality-checked transition + service-side consequences, atomic
@@ -757,7 +872,7 @@ impl Store {
             wait = self.wal_shard(site, &mut sh, recs);
         }
         drop(sh);
-        Self::await_commit(wait);
+        self.commit_notify(wait);
         Ok(terminals)
     }
 
@@ -829,7 +944,7 @@ impl Store {
                 wait = self.wal_shard(site, &mut sh, recs);
             }
             drop(sh);
-            Self::await_commit(wait);
+            self.commit_notify(wait);
         }
         (rejected, terminals)
     }
@@ -867,7 +982,7 @@ impl Store {
                 wait = self.wal_shard(site, &mut sh, recs);
             }
             drop(sh);
-            Self::await_commit(wait);
+            self.commit_notify(wait);
         }
     }
 
@@ -885,7 +1000,7 @@ impl Store {
             wait = self.wal_shard(site, &mut sh, vec![WalRecord::Job(job)]);
         }
         drop(sh);
-        Self::await_commit(wait);
+        self.commit_notify(wait);
         out
     }
 
@@ -987,7 +1102,7 @@ impl Store {
         sh.sessions.insert(session.id, session);
         let wait = rec.and_then(|rec| self.wal_shard(site, &mut sh, vec![rec]));
         drop(sh);
-        Self::await_commit(wait);
+        self.commit_notify(wait);
     }
 
     pub fn session(&self, id: SessionId) -> Option<Session> {
@@ -1022,7 +1137,7 @@ impl Store {
             wait = self.wal_shard(site, &mut sh, vec![WalRecord::Session(s)]);
         }
         drop(sh);
-        Self::await_commit(wait);
+        self.commit_notify(wait);
         out
     }
 
@@ -1048,7 +1163,7 @@ impl Store {
             wait = self.wal_shard(site, &mut sh, vec![WalRecord::Session(s)]);
         }
         drop(sh);
-        Self::await_commit(wait);
+        self.commit_notify(wait);
         Ok(())
     }
 
@@ -1084,7 +1199,7 @@ impl Store {
             wait = self.wal_shard(site, &mut sh, recs);
         }
         drop(sh);
-        Self::await_commit(wait);
+        self.commit_notify(wait);
         Ok(out)
     }
 
@@ -1120,7 +1235,7 @@ impl Store {
             wait = self.wal_shard(site, &mut sh, recs);
         }
         drop(sh);
-        Self::await_commit(wait);
+        self.commit_notify(wait);
         Ok(terminals)
     }
 
@@ -1166,7 +1281,7 @@ impl Store {
                 wait = self.wal_shard(site, &mut sh, recs);
             }
             drop(sh);
-            Self::await_commit(wait);
+            self.commit_notify(wait);
         }
         terminals
     }
@@ -1182,7 +1297,7 @@ impl Store {
         sh.batch_jobs.insert(bj.id, bj);
         let wait = rec.and_then(|rec| self.wal_shard(site, &mut sh, vec![rec]));
         drop(sh);
-        Self::await_commit(wait);
+        self.commit_notify(wait);
     }
 
     pub fn batch_job(&self, id: BatchJobId) -> Option<BatchJob> {
@@ -1220,7 +1335,7 @@ impl Store {
             wait = self.wal_shard(site, &mut sh, vec![WalRecord::Batch(bj)]);
         }
         drop(sh);
-        Self::await_commit(wait);
+        self.commit_notify(wait);
         out
     }
 
@@ -1256,7 +1371,7 @@ impl Store {
             wait = self.wal_shard(site, &mut sh, vec![WalRecord::Batch(row)]);
         }
         drop(sh);
-        Self::await_commit(wait);
+        self.commit_notify(wait);
         Ok(())
     }
 
@@ -1273,7 +1388,7 @@ impl Store {
         sh.titems.insert(item.id, item);
         let wait = rec.and_then(|rec| self.wal_shard(site, &mut sh, vec![rec]));
         drop(sh);
-        Self::await_commit(wait);
+        self.commit_notify(wait);
     }
 
     pub fn titem(&self, id: TransferItemId) -> Option<TransferItem> {
@@ -1357,7 +1472,7 @@ impl Store {
             wait = self.wal_shard(site, &mut sh, vec![WalRecord::Titem(t)]);
         }
         drop(sh);
-        Self::await_commit(wait);
+        self.commit_notify(wait);
     }
 
     /// Bulk transfer-item status sync: validate every id, then apply the
@@ -1427,7 +1542,7 @@ impl Store {
                 wait = self.wal_shard(site, &mut sh, recs);
             }
             drop(sh);
-            Self::await_commit(wait);
+            self.commit_notify(wait);
         }
         Ok(terminals)
     }
@@ -1477,23 +1592,40 @@ impl Store {
             }
         }
         let mut truncated_before: Option<u64> = None;
-        if let Some(p) = &self.persist {
-            for (site, upper) in cold {
-                let archived = p.read_archived(Some(site), since)?;
-                out.extend(archived.into_iter().filter(|e| e.seq < upper));
-                // Re-read the marker AFTER the scan: retention may have
-                // deleted segments mid-read (tolerated as missing files),
-                // and the post-read marker covers exactly what could
-                // have vanished — the page is complete from it on.
-                if let Some(t) = p.truncated_before(Some(site)) {
-                    if since < t {
-                        truncated_before = Some(truncated_before.map_or(t, |x| x.max(t)));
-                    }
-                }
+        for (site, upper) in cold {
+            if let Some(t) = self.merge_cold_events(site, since, upper, &mut out)? {
+                truncated_before = Some(truncated_before.map_or(t, |x| x.max(t)));
             }
         }
         out.sort_by_key(|e| e.seq);
         Ok(EventsPage { truncated_before, events: out })
+    }
+
+    /// Merge one shard's cold-archive events (`since <= seq < trim`) into
+    /// `out` and return the shard's retention marker, if the request
+    /// reaches below retained history. The marker is re-read AFTER the
+    /// archive scan: retention may delete segments mid-read (tolerated as
+    /// missing files), and the post-read marker covers exactly what could
+    /// have vanished — the page is complete from it on. Shared by the
+    /// global cut ([`Store::events_page`]) and the per-site subscription
+    /// path so the two can never drift apart.
+    fn merge_cold_events(
+        &self,
+        site: SiteId,
+        since: u64,
+        trim: u64,
+        out: &mut Vec<Event>,
+    ) -> Result<Option<u64>, String> {
+        let Some(p) = &self.persist else { return Ok(None) };
+        if since >= trim {
+            return Ok(None);
+        }
+        let archived = p.read_archived(Some(site), since)?;
+        out.extend(archived.into_iter().filter(|e| e.seq < trim));
+        match p.truncated_before(Some(site)) {
+            Some(t) if since < t => Ok(Some(t)),
+            _ => Ok(None),
+        }
     }
 
     /// Merged event log across all shards, ordered by global sequence.
@@ -1515,6 +1647,41 @@ impl Store {
     /// An unreadable/corrupt archive is an error, never a silent gap.
     pub fn events_page(&self, since: u64) -> Result<EventsPage, ApiError> {
         self.events_cut(since).map_err(ApiError::Internal)
+    }
+
+    /// [`Store::events_page`] optionally restricted to one site's shard.
+    /// The per-site path (the subscription hot path) reads a single shard
+    /// lock instead of taking the global consistent cut across every
+    /// shard — a hanging watcher re-checking its page never stalls other
+    /// sites' traffic.
+    pub fn events_page_for(
+        &self,
+        site: Option<SiteId>,
+        since: u64,
+    ) -> Result<EventsPage, ApiError> {
+        match site {
+            None => self.events_page(since),
+            Some(site) => self.site_events_cut(site, since).map_err(ApiError::Internal),
+        }
+    }
+
+    /// One shard's events with `seq >= since`: the in-memory hot tail plus
+    /// (in WAL mode) the cold history from that shard's event segments.
+    /// Gap-free for the same reason as [`Store::events_cut`] — a sequence
+    /// number is allocated and committed under this shard's write lock, so
+    /// the read guard sees every event below the observed maximum.
+    fn site_events_cut(&self, site: SiteId, since: u64) -> Result<EventsPage, String> {
+        let Some(shard) = self.shard(site) else {
+            return Ok(EventsPage::default());
+        };
+        let (mut out, trim) = {
+            let g = shard.read().unwrap();
+            let mem: Vec<Event> = g.events.iter().filter(|e| e.seq >= since).cloned().collect();
+            (mem, g.events_trimmed_before)
+        };
+        let truncated_before = self.merge_cold_events(site, since, trim, &mut out)?;
+        out.sort_by_key(|e| e.seq);
+        Ok(EventsPage { truncated_before, events: out })
     }
 
     // ----- diagnostics ----------------------------------------------------
@@ -1780,6 +1947,81 @@ mod tests {
         let max_id = jobs0.iter().map(|j| j.id.0).max().unwrap();
         assert!(s2.fresh_id() > max_id);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn wait_events_wakes_on_commit_and_times_out_when_idle() {
+        let s = std::sync::Arc::new(Store::new());
+        let a = mk_job(&s, SiteId(1), JobState::Ready);
+        let horizon = s.event_horizon();
+        // Nothing beyond the horizon yet: a bounded wait times out.
+        let t0 = Instant::now();
+        assert!(!s.wait_events(horizon, Duration::from_millis(30)));
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        // But a cursor behind the horizon returns immediately.
+        assert!(s.wait_events(horizon - 1, Duration::from_millis(0)));
+        // A mutation committed on another thread wakes a parked watcher.
+        let s2 = s.clone();
+        let writer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            s2.set_job_state(a, JobState::StagedIn, 1.0, "");
+        });
+        assert!(s.wait_events(horizon, Duration::from_secs(10)), "watcher never woke");
+        assert_eq!(s.events_page_for(Some(SiteId(1)), horizon).unwrap().events.len(), 1);
+        writer.join().unwrap();
+    }
+
+    #[test]
+    fn close_watchers_unparks_and_stays_closed() {
+        let s = std::sync::Arc::new(Store::new());
+        let horizon = s.event_horizon();
+        let generation = s.open_watchers();
+        let s2 = s.clone();
+        let parked = std::thread::spawn(move || s2.wait_events(horizon, Duration::from_secs(30)));
+        std::thread::sleep(Duration::from_millis(30));
+        let t0 = Instant::now();
+        s.close_watchers(generation);
+        // The parked watcher returns promptly (no event arrived: false).
+        assert!(!parked.join().unwrap());
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        // Closed is sticky: later waits return without parking.
+        let t0 = Instant::now();
+        s.wait_events(horizon, Duration::from_secs(30));
+        assert!(t0.elapsed() < Duration::from_secs(1));
+        // Re-opening (a fresh gateway over the same store) restores real
+        // parking instead of leaving long polls permanently degraded.
+        let next_generation = s.open_watchers();
+        let t0 = Instant::now();
+        assert!(!s.wait_events(horizon, Duration::from_millis(30)));
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        // A STALE close (the old gateway's stop hook firing after the new
+        // gateway armed) must not shut the new generation's channel.
+        s.close_watchers(generation);
+        let t0 = Instant::now();
+        assert!(!s.wait_events(horizon, Duration::from_millis(30)));
+        assert!(t0.elapsed() >= Duration::from_millis(25), "stale close degraded the channel");
+        // The matching generation still closes it.
+        s.close_watchers(next_generation);
+        let t0 = Instant::now();
+        s.wait_events(horizon, Duration::from_secs(30));
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn site_filtered_event_pages_split_by_shard() {
+        let s = Store::new();
+        let a = mk_job(&s, SiteId(1), JobState::Ready);
+        let b = mk_job(&s, SiteId(2), JobState::Ready);
+        s.set_job_state(a, JobState::StagedIn, 1.0, "");
+        s.set_job_state(b, JobState::StagedIn, 2.0, "");
+        let all = s.events_page_for(None, 0).unwrap().events;
+        let s1 = s.events_page_for(Some(SiteId(1)), 0).unwrap().events;
+        let s2 = s.events_page_for(Some(SiteId(2)), 0).unwrap().events;
+        assert_eq!(all.len(), s1.len() + s2.len());
+        assert!(s1.iter().all(|e| e.site_id == SiteId(1)));
+        assert!(s2.iter().all(|e| e.site_id == SiteId(2)));
+        // Unknown site: an empty page, not an error.
+        assert!(s.events_page_for(Some(SiteId(99)), 0).unwrap().events.is_empty());
     }
 
     #[test]

@@ -12,6 +12,7 @@ use crate::site::launcher::Launcher;
 use crate::site::platform::{ExecBackend, SchedulerBackend, TransferBackend};
 use crate::site::scheduler_mod::SchedulerModule;
 use crate::site::transfer::TransferModule;
+use crate::site::watch::EventWatcher;
 use crate::world::{InProcConn, World};
 
 pub struct SiteAgent {
@@ -20,6 +21,9 @@ pub struct SiteAgent {
     pub scheduler: SchedulerModule,
     pub elastic: ElasticModule,
     pub launchers: Vec<Launcher>,
+    /// Push-mode subscription cursor over this site's event stream
+    /// (consumed by [`SiteAgent::pump_events`]).
+    pub watcher: EventWatcher,
     next_launcher_tick: f64,
 }
 
@@ -31,8 +35,37 @@ impl SiteAgent {
             scheduler: SchedulerModule::new(),
             elastic: ElasticModule::new(),
             launchers: Vec::new(),
+            watcher: EventWatcher::new(),
             next_launcher_tick: 0.0,
         }
+    }
+
+    /// One push-mode pump: long-poll the service's event stream for this
+    /// site (blocking in the gateway up to `timeout_ms`; `0` is a
+    /// non-blocking probe, safe from simulated drivers) and convert the
+    /// observed events into immediate module wakeups — the transfer
+    /// module for new stage-in/out work, the launchers for jobs turning
+    /// runnable. Returns the number of events observed. Errors are
+    /// swallowed: the poll fallback in [`SiteAgent::step`] still drives
+    /// progress when the event channel is down.
+    pub fn pump_events(&mut self, conn: &mut dyn ApiConn, timeout_ms: u64) -> usize {
+        let site = Some(self.cfg.site_id);
+        let evs = match self.watcher.watch(conn, &self.cfg.token, site, timeout_ms) {
+            Ok(evs) => evs,
+            Err(_) => return 0,
+        };
+        if evs.is_empty() {
+            return 0;
+        }
+        self.transfer.notify_events(&evs);
+        for l in &mut self.launchers {
+            l.notify_events(&evs);
+        }
+        if evs.iter().any(|e| e.to.is_runnable()) {
+            // Launcher ticks are gated by the agent too: make them due.
+            self.next_launcher_tick = 0.0;
+        }
+        evs.len()
     }
 
     /// One agent step across all modules; returns next wake time.
@@ -64,7 +97,16 @@ impl SiteAgent {
                     }
                 }
             }
-            self.next_launcher_tick = now + self.cfg.launcher.acquire_period;
+            // The launcher gate also carries heartbeats, run-status polls
+            // and completion reporting — not just acquisition — so its
+            // cadence must survive a demoted (huge) acquire_period: bound
+            // it by the heartbeat period so the session lease can never
+            // expire between agent-driven ticks, and advance it
+            // drift-free like the module fallbacks.
+            let period =
+                self.cfg.launcher.acquire_period.min(self.cfg.launcher.heartbeat_period);
+            self.next_launcher_tick =
+                crate::site::advance_on_grid(self.next_launcher_tick, now, period);
             self.next_launcher_tick
         } else {
             self.next_launcher_tick
@@ -116,6 +158,50 @@ mod tests {
     use crate::service::api::{ApiRequest, JobCreate};
     use crate::service::models::JobState;
     use crate::sim::Engine;
+
+    /// The in-process pump is a non-blocking probe: it drains the site's
+    /// events, advances the cursor, and arms the modules.
+    #[test]
+    fn pump_events_advances_cursor_and_arms_modules() {
+        let mut world = World::standard(7, 8);
+        let tok = world.service.admin_token();
+        let site = world
+            .service
+            .handle(0.0, &tok, ApiRequest::CreateSite {
+                name: "theta".into(),
+                hostname: "h".into(),
+                path: "/p".into(),
+            })
+            .unwrap()
+            .site_id();
+        world
+            .service
+            .handle(0.0, &tok, ApiRequest::RegisterApp {
+                site,
+                name: "MD".into(),
+                command_template: "md".into(),
+                parameters: vec![],
+            })
+            .unwrap();
+        let mut jc = JobCreate::simple(site, "MD", "md_small");
+        jc.transfers_in = vec![("APS".into(), 1_000)];
+        world.service.handle(1.0, &tok, ApiRequest::BulkCreateJobs { jobs: vec![jc] }).unwrap();
+
+        let cfg = SiteConfig::defaults("theta", site, tok.clone());
+        let mut agent = SiteAgent::new(cfg);
+        let n = {
+            let mut conn = InProcConn { now: 2.0, svc: &mut world.service };
+            agent.pump_events(&mut conn, 0)
+        };
+        assert!(n > 0, "creation events must be observed");
+        assert!(agent.watcher.cursor > 0);
+        // Re-pump at the tail: nothing new.
+        let n = {
+            let mut conn = InProcConn { now: 2.0, svc: &mut world.service };
+            agent.pump_events(&mut conn, 0)
+        };
+        assert_eq!(n, 0);
+    }
 
     /// Full-pipeline smoke: jobs with stage-in/out flow end to end through
     /// transfer -> elastic -> scheduler -> launcher against the simulated

@@ -12,8 +12,17 @@ pub struct TransferConfig {
     pub batch_size: usize,
     /// Max concurrent transfer tasks the site keeps in flight (§4.5: 5).
     pub max_concurrent: usize,
-    /// Module sync period (s).
+    /// Fallback service-sync heartbeat period (s). With push-mode event
+    /// subscriptions this is a *safety net*, not the latency floor: the
+    /// module ticks immediately when a watched event signals new work,
+    /// and this period only bounds how stale it can get if the event
+    /// channel is down. Drift-free: late ticks stay on the original grid.
     pub poll_period: f64,
+    /// Backend task-status poll period (s) while transfer tasks are in
+    /// flight. This is a *local* poll against the transfer backend
+    /// (Globus-style task status), not a service round trip, so it stays
+    /// short even when `poll_period` is demoted to a long heartbeat.
+    pub task_poll_period: f64,
     /// Spread pending items evenly across free task slots instead of
     /// greedily packing `batch_size` per task. Greedy is what the paper's
     /// module does (and what makes its Fig. 6 batch-128 rate drop);
@@ -65,6 +74,10 @@ pub struct SiteConfig {
     pub launcher: LauncherConfig,
     /// Scheduler module sync period (s).
     pub scheduler_poll: f64,
+    /// How long each push-mode `WatchEvents` long poll asks the gateway to
+    /// hang (ms). The service clamps it to its own `--subscribe-max-ms`
+    /// cap; real-time drivers pass it to `SiteAgent::pump_events`.
+    pub subscribe_timeout_ms: u64,
 }
 
 impl SiteConfig {
@@ -80,6 +93,7 @@ impl SiteConfig {
                 // §Perf: 5 s costs ~12% end-to-end throughput vs 2 s (slot
                 // turnaround); below 2 s gains <5% (see EXPERIMENTS.md).
                 poll_period: 2.0,
+                task_poll_period: 2.0,
                 split_across_slots: true,
             },
             elastic: ElasticConfig {
@@ -100,6 +114,7 @@ impl SiteConfig {
                 jobs_per_node: 1,
             },
             scheduler_poll: 2.0,
+            subscribe_timeout_ms: 10_000,
         }
     }
 
@@ -109,6 +124,8 @@ impl SiteConfig {
         self.transfer.max_concurrent =
             y.u64_or("transfer.max_concurrent", self.transfer.max_concurrent as u64) as usize;
         self.transfer.poll_period = y.f64_or("transfer.poll_period", self.transfer.poll_period);
+        self.transfer.task_poll_period =
+            y.f64_or("transfer.task_poll_period", self.transfer.task_poll_period);
         self.elastic.enabled = y.bool_or("elastic_queue.enabled", self.elastic.enabled);
         self.elastic.block_nodes = y.u64_or("elastic_queue.block_nodes", self.elastic.block_nodes as u64) as u32;
         self.elastic.max_nodes = y.u64_or("elastic_queue.max_nodes", self.elastic.max_nodes as u64) as u32;
@@ -124,6 +141,7 @@ impl SiteConfig {
             y.u64_or("launcher.jobs_per_node", self.launcher.jobs_per_node as u64) as u32;
         self.launcher.idle_timeout_s = y.f64_or("launcher.idle_timeout_s", self.launcher.idle_timeout_s);
         self.scheduler_poll = y.f64_or("scheduler.sync_period", self.scheduler_poll);
+        self.subscribe_timeout_ms = y.u64_or("subscribe_timeout_ms", self.subscribe_timeout_ms);
         self
     }
 }
@@ -137,6 +155,8 @@ mod tests {
         let c = SiteConfig::defaults("theta", SiteId(1), "t".into());
         assert_eq!(c.transfer.batch_size, 16);
         assert_eq!(c.transfer.max_concurrent, 5);
+        assert_eq!(c.transfer.task_poll_period, c.transfer.poll_period);
+        assert_eq!(c.subscribe_timeout_ms, 10_000);
         assert_eq!(c.elastic.block_nodes, 8);
         assert_eq!(c.elastic.max_nodes, 32);
         assert_eq!(c.elastic.wall_time_s, 1200.0);
@@ -145,11 +165,13 @@ mod tests {
     #[test]
     fn yaml_overlay() {
         let y = Yaml::parse(
-            "transfer:\n  batch_size: 32\nelastic_queue:\n  max_nodes: 64\n  wall_time_min: 10\nlauncher:\n  job_mode: serial\n  jobs_per_node: 4\nscheduler:\n  sync_period: 1.5\n",
+            "subscribe_timeout_ms: 5000\ntransfer:\n  batch_size: 32\n  task_poll_period: 0.5\nelastic_queue:\n  max_nodes: 64\n  wall_time_min: 10\nlauncher:\n  job_mode: serial\n  jobs_per_node: 4\nscheduler:\n  sync_period: 1.5\n",
         )
         .unwrap();
         let c = SiteConfig::defaults("cori", SiteId(2), "t".into()).apply_yaml(&y);
         assert_eq!(c.transfer.batch_size, 32);
+        assert_eq!(c.transfer.task_poll_period, 0.5);
+        assert_eq!(c.subscribe_timeout_ms, 5000);
         assert_eq!(c.elastic.max_nodes, 64);
         assert_eq!(c.elastic.wall_time_s, 600.0);
         assert_eq!(c.launcher.mode, JobMode::Serial);

@@ -10,7 +10,7 @@
 use std::collections::BTreeMap;
 
 use crate::service::api::{ApiConn, ApiRequest};
-use crate::service::models::{BatchJobId, JobId, JobMode, JobState, SessionId};
+use crate::service::models::{BatchJobId, Event, JobId, JobMode, JobState, SessionId};
 use crate::site::config::SiteConfig;
 use crate::site::platform::{ExecBackend, RunId, RunStatus};
 
@@ -36,7 +36,11 @@ pub struct Launcher {
     pending_updates: Vec<(JobId, JobState, String)>,
     free_nodes: u32,
     next_heartbeat: f64,
+    /// Next fallback acquisition attempt (absolute time, drift-free grid).
     next_acquire: f64,
+    /// Push-mode kick: attempt an acquisition at the next tick regardless
+    /// of the fallback grid.
+    acquire_kick: bool,
     idle_since: Option<f64>,
     pub exited: ExitReason,
     /// Completed-run counter (diagnostics).
@@ -59,6 +63,7 @@ impl Launcher {
             free_nodes: nodes,
             next_heartbeat: now,
             next_acquire: now,
+            acquire_kick: false,
             idle_since: Some(now),
             exited: ExitReason::StillRunning,
             runs_done: 0,
@@ -77,6 +82,17 @@ impl Launcher {
             return true;
         }
         false
+    }
+
+    /// Push-mode wakeup: a job turning runnable (PREPROCESSED /
+    /// RESTART_READY) at this site makes the next acquisition attempt due
+    /// immediately — a stage-in completion propagates into a running job
+    /// in one event round trip, with `acquire_period` demoted to the
+    /// polled fallback.
+    pub fn notify_events(&mut self, events: &[Event]) {
+        if events.iter().any(|e| e.to.is_runnable()) {
+            self.acquire_kick = true;
+        }
     }
 
     pub fn busy_nodes(&self) -> u32 {
@@ -176,9 +192,15 @@ impl Launcher {
         let remaining = self.end_by - now;
         let accepting = remaining > 30.0;
 
-        // Acquire + start new jobs.
-        if accepting && now >= self.next_acquire && self.free_nodes > 0 {
-            self.next_acquire = now + cfg.launcher.acquire_period;
+        // Acquire + start new jobs: on the drift-free fallback grid, or
+        // immediately after a push-mode runnable event.
+        if accepting && (self.acquire_kick || now >= self.next_acquire) && self.free_nodes > 0 {
+            self.acquire_kick = false;
+            // Drift-free fallback like the transfer heartbeat; an
+            // event-kicked acquisition between grid points leaves the
+            // grid untouched.
+            self.next_acquire =
+                crate::site::advance_on_grid(self.next_acquire, now, cfg.launcher.acquire_period);
             let max_jobs = match cfg.launcher.mode {
                 JobMode::Mpi => self.free_nodes as usize,
                 JobMode::Serial => (self.free_nodes * cfg.launcher.jobs_per_node) as usize,
@@ -394,6 +416,41 @@ mod tests {
         }
         assert!(l.sessions_established >= 2, "must have re-registered");
         assert_eq!(svc.store.count_in_state(site, JobState::JobFinished), 3);
+    }
+
+    #[test]
+    fn event_wakeup_acquires_before_acquire_period() {
+        let (mut svc, mut cfg, _site) = setup();
+        // Acquisition poll effectively disabled: only a push-mode event
+        // can make the launcher acquire again.
+        cfg.launcher.acquire_period = 1e9;
+        let mut exec = SimExec::new(8);
+        let mut l = Launcher::new(BatchJobId(99), 1, 4, 0.0, 1e6);
+        {
+            // First tick: session established, nothing to acquire.
+            let mut conn = InProcConn { now: 1.0, svc: &mut svc };
+            assert!(l.tick(1.0, &cfg, &mut conn, &mut exec));
+        }
+        assert_eq!(l.running_jobs(), 0);
+        let ids = submit_simple(&mut svc, &cfg, 2);
+        {
+            // Without an event the poll fallback is ages away: no pickup.
+            let mut conn = InProcConn { now: 2.0, svc: &mut svc };
+            l.tick(2.0, &cfg, &mut conn, &mut exec);
+        }
+        assert_eq!(l.running_jobs(), 0, "poll fallback must be inert at 1e9s");
+        // The runnable event arrives over the watch channel: next tick
+        // acquires immediately.
+        let evs = svc.store.events();
+        let runnable: Vec<_> =
+            evs.iter().filter(|e| e.to.is_runnable()).cloned().collect();
+        assert!(!runnable.is_empty());
+        l.notify_events(&runnable);
+        {
+            let mut conn = InProcConn { now: 3.0, svc: &mut svc };
+            l.tick(3.0, &cfg, &mut conn, &mut exec);
+        }
+        assert_eq!(l.running_jobs(), ids.len());
     }
 
     #[test]

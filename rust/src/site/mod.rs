@@ -10,6 +10,9 @@
 //!   the runnable backlog;
 //! * [`launcher`] — the pilot job: acquires fine-grained jobs under a
 //!   heartbeated Session lease and packs them onto allocation nodes;
+//! * [`watch`] — the push-mode event subscription: a cursor over the
+//!   service's global event sequence, long-polled so transfer/launcher
+//!   wakeups arrive in one round trip instead of one poll period;
 //! * [`appdef`] — ApplicationDefinition templates (the only permissible
 //!   workflows at a site — the API cannot inject arbitrary commands);
 //! * [`platform`] — the uniform interfaces to transfer fabric, scheduler,
@@ -23,7 +26,59 @@ pub mod transfer;
 pub mod scheduler_mod;
 pub mod elastic;
 pub mod launcher;
+pub mod watch;
 pub mod agent;
 
 pub use agent::SiteAgent;
 pub use config::SiteConfig;
+pub use watch::EventWatcher;
+
+/// Advance a fallback-heartbeat deadline along its fixed grid: the first
+/// grid point strictly after `now`, keeping the schedule anchored at its
+/// origin (drift-free) instead of re-anchoring at the tick time — N late
+/// ticks must not push the heartbeat N delays behind. Shared by the
+/// transfer module's `next_due` and the launcher's `next_acquire`.
+///
+/// A deadline still in the future is returned unchanged. A non-positive
+/// `period`, or an unanchored deadline (`next <= 0`), re-anchors at
+/// `now + period`. Long gaps are skipped in O(1), not one step per
+/// missed period.
+pub(crate) fn advance_on_grid(next: f64, now: f64, period: f64) -> f64 {
+    if next > now {
+        return next;
+    }
+    if period <= 0.0 || next <= 0.0 {
+        return now + period;
+    }
+    let missed = ((now - next) / period).floor() + 1.0;
+    let candidate = next + missed * period;
+    // Float guard: land strictly after `now` even if the division
+    // rounded the missed-period count down.
+    if candidate <= now {
+        candidate + period
+    } else {
+        candidate
+    }
+}
+
+#[cfg(test)]
+mod grid_tests {
+    use super::advance_on_grid;
+
+    #[test]
+    fn grid_advance_is_drift_free_and_o1() {
+        // On-time tick: next grid point.
+        assert_eq!(advance_on_grid(2.0, 2.0, 2.0), 4.0);
+        // Late tick stays on the grid (4.0, not 2.7 + 2.0).
+        assert_eq!(advance_on_grid(2.0, 2.7, 2.0), 4.0);
+        // Long gap skips whole periods without bursting.
+        assert_eq!(advance_on_grid(4.0, 9.1, 2.0), 10.0);
+        // Future deadline untouched; unanchored/degenerate re-anchor.
+        assert_eq!(advance_on_grid(8.0, 3.0, 2.0), 8.0);
+        assert_eq!(advance_on_grid(0.0, 5.0, 2.0), 7.0);
+        assert_eq!(advance_on_grid(3.0, 5.0, 0.0), 5.0);
+        // A huge gap is exact and instant (no per-period loop).
+        let next = advance_on_grid(1.0, 1.0e9, 1.0);
+        assert!(next > 1.0e9 && next <= 1.0e9 + 2.0);
+    }
+}

@@ -6,11 +6,22 @@
 //! The two tuning knobs the paper studies are honored exactly: the
 //! **transfer batch size** (max files per task, Fig. 6) and the **max
 //! concurrent transfer tasks** per site (§4.5).
+//!
+//! Scheduling is **event-driven with a polled fallback**: a push-mode
+//! event (a job turning READY for stage-in or POSTPROCESSED for
+//! stage-out, delivered by [`crate::site::watch::EventWatcher`]) makes
+//! the next tick due immediately via [`TransferModule::notify_events`];
+//! the configured `poll_period` is demoted to a drift-free fallback
+//! heartbeat that only bounds staleness when the event channel is down.
+//! In-flight backend tasks are status-polled on the separate (local, no
+//! service round trip) `task_poll_period`.
 
 use std::collections::{BTreeMap, BTreeSet};
 
 use crate::service::api::{ApiConn, ApiRequest};
-use crate::service::models::{Direction, TransferItem, TransferItemId, TransferState, XferTaskId};
+use crate::service::models::{
+    Direction, Event, JobState, TransferItem, TransferItemId, TransferState, XferTaskId,
+};
 use crate::site::config::SiteConfig;
 use crate::site::platform::{TransferBackend, XferStatus};
 
@@ -22,7 +33,13 @@ pub struct TransferModule {
     /// the next tick instead of being dropped — a transient service
     /// outage must not strand items Active/Pending forever.
     pending_sync: Vec<(TransferItemId, TransferState, Option<XferTaskId>)>,
+    /// Event-driven kick: the next tick runs regardless of the heartbeat.
+    due_now: bool,
+    /// Next fallback-heartbeat tick (absolute time, drift-free grid).
     pub next_due: f64,
+    /// Next backend task-status poll while tasks (or unsent status
+    /// batches) are in flight.
+    next_task_poll: f64,
     /// Counters for diagnostics / benches.
     pub tasks_submitted: u64,
     pub items_completed: u64,
@@ -33,9 +50,22 @@ impl TransferModule {
         TransferModule {
             active: BTreeMap::new(),
             pending_sync: Vec::new(),
+            due_now: false,
             next_due: 0.0,
+            next_task_poll: 0.0,
             tasks_submitted: 0,
             items_completed: 0,
+        }
+    }
+
+    /// Push-mode wakeup: service events that can only mean new actionable
+    /// transfer work (a job entering READY — stage-in became fetchable —
+    /// or POSTPROCESSED — stage-out became actionable) make the next
+    /// [`TransferModule::tick`] due immediately instead of waiting for
+    /// the fallback heartbeat.
+    pub fn notify_events(&mut self, events: &[Event]) {
+        if events.iter().any(|e| matches!(e.to, JobState::Ready | JobState::Postprocessed)) {
+            self.due_now = true;
         }
     }
 
@@ -98,7 +128,22 @@ impl TransferModule {
         }
     }
 
-    /// One sync step; returns next wake time.
+    /// Is there in-flight work that needs backend status polls / status
+    /// retries between heartbeats?
+    fn has_inflight(&self) -> bool {
+        !self.active.is_empty() || !self.pending_sync.is_empty()
+    }
+
+    /// One sync step; returns next wake time. Runs when the fallback
+    /// heartbeat is due, when an event kicked the module
+    /// ([`TransferModule::notify_events`]), or when in-flight backend
+    /// tasks are due a status poll — otherwise a cheap no-op.
+    ///
+    /// A task-poll-only tick stays *local*: it polls the backend (and
+    /// delivers any resulting completions / retained status batches),
+    /// but never queries the service for new work — `PendingTransferItems`
+    /// fetches run only on event and heartbeat ticks, so demoting
+    /// `poll_period` really does demote the service polling rate.
     pub fn tick(
         &mut self,
         now: f64,
@@ -106,13 +151,32 @@ impl TransferModule {
         conn: &mut dyn ApiConn,
         xfer: &mut dyn TransferBackend,
     ) -> f64 {
-        if now < self.next_due {
-            return self.next_due;
+        let heartbeat_due = now >= self.next_due;
+        let task_due = self.has_inflight() && now >= self.next_task_poll;
+        if !self.due_now && !task_due && !heartbeat_due {
+            return self.next_wake(now);
         }
+        let fetch_new = self.due_now || heartbeat_due;
+        self.due_now = false;
         self.poll_active(now, cfg, conn, xfer);
-        self.submit_new(now, cfg, conn, xfer);
-        self.next_due = now + cfg.transfer.poll_period;
-        self.next_due
+        if fetch_new {
+            self.submit_new(now, cfg, conn, xfer);
+        }
+        // Drift-free fallback heartbeat (the old `next_due = now +
+        // poll_period` drifted by the lateness of every tick).
+        self.next_due = crate::site::advance_on_grid(self.next_due, now, cfg.transfer.poll_period);
+        self.next_task_poll = now + cfg.transfer.task_poll_period;
+        self.next_wake(now)
+    }
+
+    /// Earliest future time this module wants a tick: the heartbeat grid,
+    /// tightened to the backend task poll while work is in flight.
+    fn next_wake(&self, now: f64) -> f64 {
+        if self.has_inflight() {
+            self.next_due.min(self.next_task_poll.max(now))
+        } else {
+            self.next_due
+        }
     }
 
     /// Poll in-flight tasks; push every completion/error to the API in
@@ -383,6 +447,64 @@ mod tests {
         // Early tick is a no-op.
         let mut conn = InProcConn { now: 1.0, svc: &mut svc };
         assert_eq!(tm.tick(1.0, &cfg, &mut conn, &mut xfer), next);
+    }
+
+    /// The fallback heartbeat stays on the grid anchored at the first
+    /// tick: a late tick schedules the next one at the next grid point,
+    /// not `late_time + period` (the old fixed-delay drift, where every
+    /// delay pushed the whole schedule back permanently).
+    #[test]
+    fn fallback_heartbeat_is_drift_free() {
+        let (mut svc, _tok, _site, cfg) = setup(4, 2);
+        assert_eq!(cfg.transfer.poll_period, 2.0);
+        let mut tm = TransferModule::new();
+        let mut xfer = SimTransfer::new(11);
+        {
+            let mut conn = InProcConn { now: 0.0, svc: &mut svc };
+            assert_eq!(tm.tick(0.0, &cfg, &mut conn, &mut xfer), 2.0);
+        }
+        // Tick lands 0.7 s late: the next heartbeat is the 4.0 grid
+        // point, not 4.7.
+        {
+            let mut conn = InProcConn { now: 2.7, svc: &mut svc };
+            assert_eq!(tm.tick(2.7, &cfg, &mut conn, &mut xfer), 4.0);
+        }
+        // A very late tick skips whole periods without bursting and
+        // re-joins the grid.
+        {
+            let mut conn = InProcConn { now: 9.1, svc: &mut svc };
+            assert_eq!(tm.tick(9.1, &cfg, &mut conn, &mut xfer), 10.0);
+        }
+    }
+
+    /// A push-mode event makes the module act immediately between
+    /// heartbeats; without it the same early tick is a no-op.
+    #[test]
+    fn event_wakeup_overrides_heartbeat() {
+        let (mut svc, tok, site, cfg) = setup(4, 2);
+        let mut tm = TransferModule::new();
+        let mut xfer = SimTransfer::new(12);
+        {
+            // Establish the heartbeat grid before any work exists.
+            let mut conn = InProcConn { now: 0.0, svc: &mut svc };
+            tm.tick(0.0, &cfg, &mut conn, &mut xfer);
+        }
+        submit_jobs(&mut svc, &tok, site, 4, 1_000_000);
+        {
+            // Early tick without an event: heartbeat not due, no pickup.
+            let mut conn = InProcConn { now: 0.5, svc: &mut svc };
+            tm.tick(0.5, &cfg, &mut conn, &mut xfer);
+        }
+        assert_eq!(tm.active_tasks(), 0, "no event, no heartbeat: must not act");
+        // The READY events arrive over the watch channel: the next early
+        // tick submits.
+        let evs = svc.store.events();
+        tm.notify_events(&evs);
+        {
+            let mut conn = InProcConn { now: 1.0, svc: &mut svc };
+            tm.tick(1.0, &cfg, &mut conn, &mut xfer);
+        }
+        assert!(tm.active_tasks() > 0, "event wakeup must trigger submission");
     }
 
     /// Drops SyncTransferItems on the floor while `fail_syncs > 0`,

@@ -21,6 +21,11 @@
 //! All knobs default from `BALSAM_HTTP_KEEPALIVE` (unset/1 = keep-alive
 //! on, 0 = one-request-per-connection) so the CI matrix can exercise both
 //! transport modes without code changes.
+//!
+//! The transport also carries **hanging requests** (long polls): a
+//! handler may block before producing its response, which coexists with
+//! keep-alive (see the [`Server`] docs) and is how the gateway serves
+//! push-mode event subscriptions.
 
 use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -37,6 +42,14 @@ use crate::util::error::{Context, Result};
 pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(2, 16)
 }
+
+/// Read timeout the pooled [`HttpClient`] arms on every connection: the
+/// hard upper bound on how long any single request — including a hanging
+/// long poll — may go without a response byte. Server-side application
+/// hangs must stay strictly below this (the service's subscribe clamp is
+/// derived from it), or armed subscribers would tear down their pooled
+/// connections instead of renewing cleanly.
+pub const CLIENT_READ_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Whether keep-alive is enabled by default in this process: the
 /// `BALSAM_HTTP_KEEPALIVE` env var ("0"/"false"/"off" disables), else on.
@@ -149,9 +162,9 @@ impl Response {
     }
 
     /// Error response. Framing headers (`Content-Length`, `Connection`)
-    /// are written by [`write_response`] on every path, so a keep-alive
-    /// client can continue on the same connection after a 4xx instead of
-    /// desynchronizing.
+    /// are written by the server's response writer on every path, so a
+    /// keep-alive client can continue on the same connection after a 4xx
+    /// instead of desynchronizing.
     pub fn error(status: u16, msg: &str) -> Response {
         Response { status, body: msg.as_bytes().to_vec(), content_type: "text/plain" }
     }
@@ -173,6 +186,16 @@ impl Response {
 /// A running HTTP server (acceptor + worker pool); dropping it does not
 /// stop the threads — call [`Server::stop`] (tests) or let the process
 /// exit (examples).
+///
+/// Hanging requests (long polls): a handler is free to block before
+/// returning its response — the worker owns the connection for the
+/// duration, and the idle timeout cannot reap it meanwhile (reaping is a
+/// *read* timeout, and nothing reads while the handler runs). Two rules
+/// keep hanging handlers compatible with the rest of the transport:
+/// the application must bound its own hang below the client's read
+/// timeout (the gateway clamps subscribe timeouts), and it must register
+/// a [`Server::add_stop_hook`] that wakes every armed hang so `stop()`
+/// can drain the workers.
 pub struct Server {
     pub addr: String,
     pub workers: usize,
@@ -181,6 +204,11 @@ pub struct Server {
     /// sockets that workers are blocked reading — a keep-alive connection
     /// would otherwise pin its worker until the idle timeout.
     conns: Arc<Mutex<Vec<(u64, TcpStream)>>>,
+    /// Callbacks run inside `stop()` after the acceptor is gone but before
+    /// connections are shut down and workers joined — the hook point for
+    /// waking handler threads parked on application-level waits (armed
+    /// long-poll watchers), which no socket shutdown can unblock.
+    stop_hooks: Vec<Box<dyn FnOnce() + Send>>,
     handles: Vec<JoinHandle<()>>,
 }
 
@@ -268,7 +296,16 @@ impl Server {
             }
             // Dropping the sender lets workers drain and exit.
         }));
-        Ok(Server { addr: local.to_string(), workers, stop, conns, handles })
+        Ok(Server { addr: local.to_string(), workers, stop, conns, stop_hooks: Vec::new(), handles })
+    }
+
+    /// Register a callback to run inside [`Server::stop`], after the
+    /// acceptor has been joined and before live connections are shut down.
+    /// Handlers that park (long-poll watchers) register their wakeup here:
+    /// a parked worker thread is not blocked on its socket, so only an
+    /// application-level signal can release it for the join below.
+    pub fn add_stop_hook(&mut self, hook: impl FnOnce() + Send + 'static) {
+        self.stop_hooks.push(Box::new(hook));
     }
 
     pub fn stop(mut self) {
@@ -278,6 +315,12 @@ impl Server {
         // and cannot race a concurrent accept.
         if let Some(acceptor) = self.handles.pop() {
             let _ = acceptor.join();
+        }
+        // Wake handler threads parked on application-level waits (armed
+        // long-poll watchers) so they return a response and re-enter their
+        // read loop, where the socket shutdown below terminates them.
+        for hook in self.stop_hooks.drain(..) {
+            hook();
         }
         // Kick workers out of blocking reads on live keep-alive
         // connections; their request loops see EOF and return.
@@ -598,7 +641,7 @@ impl HttpClient {
         }
         let stream = TcpStream::connect(&self.addr).context("connect")?;
         let _ = stream.set_nodelay(true);
-        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        stream.set_read_timeout(Some(CLIENT_READ_TIMEOUT))?;
         let reader = BufReader::new(stream.try_clone()?);
         self.connects += 1;
         Ok((

@@ -8,11 +8,14 @@ use std::sync::Arc;
 use balsam::runtime::local::{LocalResources, LoopbackTransfer};
 use balsam::service::api::{ApiConn, ApiRequest, JobCreate};
 use balsam::service::http_gw::{serve, HttpConn};
-use balsam::service::models::JobState;
+use balsam::service::models::{BatchJobId, JobState};
 use balsam::service::ServiceCore;
 use balsam::site::agent::SiteAgent;
 use balsam::site::config::SiteConfig;
+use balsam::site::launcher::Launcher;
 use balsam::site::platform::{ExecBackend, RunId, RunStatus};
+use balsam::site::transfer::TransferModule;
+use balsam::site::watch::EventWatcher;
 
 /// Deterministic fake executor for the HTTP test (real PJRT is covered by
 /// integration_runtime.rs; here we isolate the transport).
@@ -91,13 +94,19 @@ fn full_round_trip_over_http_with_real_file_staging() {
     let t0 = std::time::Instant::now();
     loop {
         let now = t0.elapsed().as_secs_f64();
-        agent.step(now, &mut agent_conn, &mut xfer, &mut sched, &mut exec);
+        let next_wake = agent.step(now, &mut agent_conn, &mut xfer, &mut sched, &mut exec);
         let done = svc.store.count_in_state(site, JobState::JobFinished);
         if done == ids.len() {
             break;
         }
         assert!(now < 60.0, "round trips did not complete over HTTP");
-        std::thread::sleep(std::time::Duration::from_millis(20));
+        // The real-time drive pattern: instead of sleeping a fixed slice,
+        // long-poll the site's event stream until the next module wake —
+        // an event (stage-in done, job runnable) ends the wait early and
+        // the next step acts on it immediately. The site's
+        // `subscribe_timeout_ms` knob caps how long each watch may hang.
+        let headroom = ((next_wake - t0.elapsed().as_secs_f64()).max(0.0) * 1e3) as u64;
+        agent.pump_events(&mut agent_conn, headroom.min(agent.cfg.subscribe_timeout_ms));
     }
 
     // The event log shows the full lifecycle for each job, with wall-clock
@@ -156,6 +165,84 @@ fn concurrent_http_clients_share_one_service() {
     }
     assert_eq!(svc.store.job_count(), 60);
     svc.store.check_indexes().unwrap();
+    server.stop();
+}
+
+/// Tentpole acceptance: with every site-side service poll DISABLED
+/// (transfer poll period and launcher acquire period at 1e9 s), a job
+/// still flows submission -> stage-in -> run -> stage-out -> finished over
+/// the HTTP gateway, driven purely by push-mode `WatchEvents` wakeups — a
+/// transfer-task completion propagates to job state in one event round
+/// trip instead of up to one poll period. Under poll-only scheduling this
+/// loop could not finish inside the wall-clock bound.
+#[test]
+fn push_mode_completes_roundtrip_with_poll_fallback_disabled() {
+    let svc = Arc::new(ServiceCore::new(b"push-int"));
+    let token = svc.admin_token();
+    let server = serve(svc.clone(), "127.0.0.1:0").unwrap();
+    let mut conn = HttpConn::new(server.addr.clone());
+    let site = conn
+        .api(&token, ApiRequest::CreateSite {
+            name: "local".into(),
+            hostname: "localhost".into(),
+            path: "/tmp/balsam-push-int".into(),
+        })
+        .unwrap()
+        .site_id();
+    conn.api(&token, ApiRequest::RegisterApp {
+        site,
+        name: "MD".into(),
+        command_template: "md".into(),
+        parameters: vec![],
+    })
+    .unwrap();
+
+    let mut cfg = SiteConfig::defaults("local", site, token.clone());
+    // Poll fallbacks disabled: only events may schedule service work.
+    cfg.transfer.poll_period = 1e9;
+    cfg.launcher.acquire_period = 1e9;
+    // Local backend status polls (not service traffic) stay fast.
+    cfg.transfer.task_poll_period = 0.02;
+
+    let mut jc = JobCreate::simple(site, "MD", "md_small");
+    jc.transfers_in = vec![("APS".into(), 200_000)];
+    jc.transfers_out = vec![("APS".into(), 5_000)];
+    let job = conn.api(&token, ApiRequest::BulkCreateJobs { jobs: vec![jc] }).unwrap().job_ids()[0];
+
+    let dir = std::env::temp_dir().join(format!("balsam-push-int-{}", std::process::id()));
+    let mut xfer = LoopbackTransfer::new(&dir, None);
+    let mut exec = FastExec { runs: BTreeMap::new(), next: 0 };
+    let mut tm = TransferModule::new();
+    let mut launcher = Launcher::new(BatchJobId(1), 1, 4, 0.0, 1e9);
+    let mut watcher = EventWatcher::new();
+
+    let t0 = std::time::Instant::now();
+    loop {
+        // While backend work is in flight the watch stays short so the
+        // local task/run polls keep cadence; otherwise hang in the
+        // gateway until the next event.
+        let busy = tm.active_tasks() > 0 || launcher.running_jobs() > 0;
+        let timeout_ms = if busy { 20 } else { 1_000 };
+        let evs = watcher.watch(&mut conn, &token, Some(site), timeout_ms).unwrap();
+        tm.notify_events(&evs);
+        launcher.notify_events(&evs);
+        let now = t0.elapsed().as_secs_f64();
+        tm.tick(now, &cfg, &mut conn, &mut xfer);
+        assert!(launcher.tick(now, &cfg, &mut conn, &mut exec), "launcher must stay alive");
+        let state = svc.store.job(job).unwrap().state;
+        if state == JobState::JobFinished {
+            break;
+        }
+        assert!(
+            now < 30.0,
+            "push-mode pipeline stalled at {state:?} after {now:.1}s (polls are disabled: \
+             only event wakeups can drive progress)"
+        );
+    }
+    // The whole round trip completed at event speed, far inside a single
+    // (disabled) poll period — and the cursor saw every hop.
+    assert!(watcher.cursor > 0);
+    std::fs::remove_dir_all(&dir).ok();
     server.stop();
 }
 
@@ -303,6 +390,141 @@ mod fault_injection {
 
         assert_slot_free(&server.addr, &tok);
         server.stop();
+    }
+
+    /// A subscriber that disconnects mid-watch must not leak its worker
+    /// slot: the armed watch runs to its (short) timeout, the response
+    /// write fails on the dead socket, and the slot serves the next
+    /// client. Run with ONE worker so a leaked slot would deadlock the
+    /// follow-up request.
+    #[test]
+    fn watch_client_disconnect_frees_worker_slot() {
+        let (svc, tok) = service();
+        let cfg = HttpConfig { keep_alive: true, ..HttpConfig::default() };
+        let server = serve_with(svc.clone(), "127.0.0.1:0", 1, cfg).unwrap();
+        // With one worker the gateway disables parking (slots = 0);
+        // grant one slot explicitly so the watch genuinely arms and the
+        // test exercises a pinned-then-reclaimed worker.
+        svc.set_subscribe_slots(1);
+
+        let body = "{\"type\":\"WatchEvents\",\"since\":0,\"timeout_ms\":400}";
+        let mut s = TcpStream::connect(&server.addr).unwrap();
+        write!(
+            s,
+            "POST /api HTTP/1.1\r\nauthorization: Bearer {tok}\r\ncontent-length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        // Give the worker time to arm the watch, then vanish entirely.
+        std::thread::sleep(Duration::from_millis(100));
+        s.shutdown(Shutdown::Both).unwrap();
+        drop(s);
+        // The slot must come back once the armed watch expires (well
+        // before assert_slot_free's transport timeout).
+        assert_slot_free(&server.addr, &tok);
+        server.stop();
+    }
+
+    /// `Server::stop` with an armed watcher must wake it (via the stop
+    /// hook closing the store's watchers) and terminate promptly — a
+    /// hanging subscription must never wedge shutdown until its timeout.
+    #[test]
+    fn server_stop_with_armed_watcher_terminates_cleanly() {
+        let (svc, tok) = service();
+        let cfg = HttpConfig { keep_alive: true, ..HttpConfig::default() };
+        let server = serve_with(svc, "127.0.0.1:0", 2, cfg).unwrap();
+        let addr = server.addr.clone();
+        let watcher = std::thread::spawn(move || {
+            // 20 s watch: far longer than the shutdown bound below, so a
+            // pass proves stop() woke it rather than waited it out. The
+            // result does not matter (empty page or torn connection).
+            let body = "{\"type\":\"WatchEvents\",\"since\":0,\"timeout_ms\":20000}";
+            let _ = post_json(&addr, "/api", &tok, body);
+        });
+        std::thread::sleep(Duration::from_millis(150)); // let the watch arm
+        let t0 = std::time::Instant::now();
+        server.stop();
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "stop() must wake armed watchers, took {:?}",
+            t0.elapsed()
+        );
+        watcher.join().unwrap();
+    }
+
+    /// A watcher whose cursor predates event-log retention gets an
+    /// immediate `truncated_before` page instead of hanging forever
+    /// waiting for sequence numbers that can never be served again.
+    #[test]
+    fn watch_with_pre_retention_cursor_gets_truncated_before() {
+        use balsam::service::{EventLogConfig, FsyncPolicy, PersistMode};
+        let dir = std::env::temp_dir()
+            .join(format!("balsam-watch-trunc-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mode = PersistMode::Wal {
+            dir: dir.clone(),
+            // Rotate constantly, seal tiny segments, retain almost
+            // nothing: early events are guaranteed to be dropped.
+            snapshot_every: 4,
+            fsync: FsyncPolicy::Never,
+            events: EventLogConfig { segment_bytes: 512, retain_bytes: 1, retain_age_s: 0 },
+        };
+        let svc = Arc::new(ServiceCore::with_persist(b"watch-trunc", mode).unwrap());
+        let tok = svc.admin_token();
+        let site = svc
+            .handle(0.0, &tok, ApiRequest::CreateSite {
+                name: "s".into(),
+                hostname: "h".into(),
+                path: "/p".into(),
+            })
+            .unwrap()
+            .site_id();
+        svc.handle(0.0, &tok, ApiRequest::RegisterApp {
+            site,
+            name: "MD".into(),
+            command_template: "md".into(),
+            parameters: vec![],
+        })
+        .unwrap();
+        // Generate events (2 per no-transfer job) until retention has
+        // verifiably dropped history.
+        for i in 0..200 {
+            svc.handle(i as f64, &tok, ApiRequest::BulkCreateJobs {
+                jobs: vec![JobCreate::simple(site, "MD", "md_small")],
+            })
+            .unwrap();
+            if svc.store.events_page(0).unwrap().truncated_before.is_some() {
+                break;
+            }
+        }
+        assert!(
+            svc.store.events_page(0).unwrap().truncated_before.is_some(),
+            "retention never kicked in — test setup is wrong"
+        );
+
+        let cfg = HttpConfig { keep_alive: true, ..HttpConfig::default() };
+        let server = serve_with(svc.clone(), "127.0.0.1:0", 2, cfg.clone()).unwrap();
+        let mut conn = HttpConn::with_config(server.addr.clone(), cfg);
+        let t0 = std::time::Instant::now();
+        // Cursor 0 predates retained history; the long timeout must be
+        // irrelevant — the marker answers immediately.
+        let page = conn
+            .api(&tok, ApiRequest::WatchEvents { site: Some(site), since: 0, timeout_ms: 20_000 })
+            .unwrap()
+            .events_page();
+        assert!(t0.elapsed() < Duration::from_secs(5), "truncated watch must not hang");
+        let t = page.truncated_before.expect("must report the retention marker");
+        assert!(t > 0);
+        assert_eq!(page.events.first().unwrap().seq, t, "complete from the marker on");
+        // An EventWatcher consuming that page jumps its cursor and counts
+        // the gap; the next watch is a clean tail re-arm.
+        let mut w = EventWatcher::new();
+        let evs = w.watch(&mut conn, &tok, Some(site), 0).unwrap();
+        assert!(!evs.is_empty());
+        assert_eq!(w.truncations, 1);
+        assert_eq!(w.cursor, evs.last().unwrap().seq + 1);
+        server.stop();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     /// Error-response framing: a keep-alive ApiConn that hits app-level
