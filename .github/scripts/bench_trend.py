@@ -2,18 +2,26 @@
 """Perf-trend gate for BENCH_service.json.
 
 Usage: bench_trend.py <baseline.json> <current.json> [--max-drop 0.30]
+       [--max-metrics-overhead 0.05]
 
 Compares the peak req/s of the current bench run against the previous
 run's artifact (restored from the actions cache), tracked **per
-(transport, persist, fsync) combination** — e.g. "keepalive/ephemeral/
-none" vs "keepalive/wal/group" — so a regression in one mode cannot hide
-behind another's headline number, and the group-commit WAL leg gets its
-own baseline. Records written before the fsync axis existed derive
-"flush" (wal) / "none" (ephemeral) so old baselines stay comparable.
+(transport, persist, fsync, metrics) combination** — e.g. "keepalive/
+ephemeral/none/on" vs "keepalive/wal/group/on" — so a regression in one
+mode cannot hide behind another's headline number, and the group-commit
+WAL leg gets its own baseline. Records written before the fsync axis
+existed derive "flush" (wal) / "none" (ephemeral), and records written
+before the metrics axis derive "on" (uninstrumented builds measured the
+same hot path recording now takes), so old baselines stay comparable.
 Combinations present in only one of the two records are reported but not
 gated (e.g. the first run after a new leg lands). Fails the job on a
 regression larger than --max-drop; a missing or unreadable baseline is
 tolerated (first run on a branch, expired cache).
+
+The metrics-overhead axis is an in-run invariant: for every combo the
+record measured both with recording on and off (currently the hottest
+leg, keepalive/wal/group), the "on" peak must be within
+--max-metrics-overhead (default 5%) of the "off" peak.
 
 The propagation-latency axis (the `"propagation"` object recorded since
 the push-mode subscription landed) is gated on two rules:
@@ -36,13 +44,14 @@ MAX_LATENCY_RATIO = 3.0
 
 
 def peaks_by_combo(doc):
-    """Peak req/s keyed by transport/persist/fsync."""
+    """Peak req/s keyed by transport/persist/fsync/metrics."""
     peaks = {}
     for r in doc.get("results", []):
         transport = r.get("transport", "per-request")
         persist = r.get("persist", "ephemeral")
         fsync = r.get("fsync", "flush" if persist == "wal" else "none")
-        key = f"{transport}/{persist}/{fsync}"
+        metrics = r.get("metrics", "on")
+        key = f"{transport}/{persist}/{fsync}/{metrics}"
         peaks[key] = max(peaks.get(key, 0.0), r["reqs_per_s"])
     if not peaks:
         raise ValueError("no results in bench record")
@@ -67,6 +76,35 @@ def gate_throughput(baseline, current, max_drop):
                 f"(gate: {max_drop:.0%}) — see BENCH_service.json"
             )
             failed = True
+    return failed
+
+
+def gate_metrics_overhead(current, max_overhead):
+    """In-run gate: the "on" peak must stay within max_overhead of the
+    "off" peak for every combo measured both ways. Returns failed."""
+    failed = False
+    gated = False
+    for combo, off_rps in sorted(current.items()):
+        if not combo.endswith("/off"):
+            continue
+        on_rps = current.get(combo[: -len("off")] + "on")
+        if on_rps is None or off_rps <= 0:
+            continue
+        gated = True
+        overhead = 1.0 - on_rps / off_rps
+        base = combo[: -len("/off")]
+        print(
+            f"metrics overhead [{base}]: off {off_rps:.0f} req/s -> on {on_rps:.0f} req/s "
+            f"({overhead:+.1%})"
+        )
+        if overhead > max_overhead:
+            print(
+                f"::error::metrics recording costs {overhead:.1%} on {base} "
+                f"(gate: {max_overhead:.0%})"
+            )
+            failed = True
+    if not gated:
+        print("metrics overhead: no on/off pair in current record (pre-metrics bench); not gated")
     return failed
 
 
@@ -112,6 +150,9 @@ def main(argv):
     max_drop = 0.30
     if "--max-drop" in argv:
         max_drop = float(argv[argv.index("--max-drop") + 1])
+    max_metrics_overhead = 0.05
+    if "--max-metrics-overhead" in argv:
+        max_metrics_overhead = float(argv[argv.index("--max-metrics-overhead") + 1])
 
     with open(current_path) as f:
         current_doc = json.load(f)
@@ -129,8 +170,9 @@ def main(argv):
     failed = False
     if baseline:
         failed |= gate_throughput(baseline, current, max_drop)
-    # The propagation axis gates even without a baseline (the push-beats-
-    # poll rule is an in-run invariant).
+    # The metrics-overhead and propagation axes gate even without a
+    # baseline (both are in-run invariants).
+    failed |= gate_metrics_overhead(current, max_metrics_overhead)
     failed |= gate_propagation(baseline_doc, current_doc)
     return 1 if failed else 0
 

@@ -11,14 +11,17 @@
 //!   connection-persistence win — each launcher session holding one
 //!   pooled connection vs dialing per call;
 //! * **fsync policy** (WAL flush-to-OS vs group commit vs fsync-always):
-//!   the durability tax, and how much of it group commit buys back.
+//!   the durability tax, and how much of it group commit buys back;
+//! * **metrics** (recording on vs `--no-metrics`-style off): the
+//!   observability overhead on the hottest leg (keep-alive + group-commit
+//!   WAL) — `bench_trend.py` gates it at <= 5%.
 //!
 //! Each launcher cycle is the bulk protocol: BulkCreateJobs ->
 //! SessionAcquire -> BulkUpdateJobState(RUNNING) -> SessionSync(RUN_DONE +
 //! POSTPROCESSED). Results are recorded in `BENCH_service.json` (override
 //! the path with `BENCH_OUT`) so the perf trajectory is tracked across
 //! PRs; `bench_trend.py` gates on the peak req/s per (transport, persist,
-//! fsync) combination.
+//! fsync, metrics) combination.
 //!
 //! A fourth axis measures **stage-in propagation latency**: the time from
 //! a transfer-completion RPC landing at the service to an observer
@@ -49,6 +52,8 @@ struct PassResult {
     persist: &'static str,
     /// "none" (ephemeral) / "flush" / "group" / "always".
     fsync: &'static str,
+    /// "on" / "off" — whether metric recording was enabled for the pass.
+    metrics: &'static str,
     reqs: u64,
     secs: f64,
     reqs_per_s: f64,
@@ -59,10 +64,15 @@ fn run_pass(
     keep_alive: bool,
     secs: f64,
     wal: Option<(PathBuf, FsyncPolicy)>,
+    metrics_on: bool,
 ) -> PassResult {
+    // The registry is process-global; restore recording after the pass so
+    // later passes (and the propagation legs) stay instrumented.
+    balsam::util::metrics::set_enabled(metrics_on);
     let transport = if keep_alive { "keepalive" } else { "per-request" };
     let persist = if wal.is_some() { "wal" } else { "ephemeral" };
     let fsync = wal.as_ref().map(|(_, f)| f.label()).unwrap_or("none");
+    let metrics = if metrics_on { "on" } else { "off" };
     let wal_dir = wal.as_ref().map(|(d, _)| d.clone());
     let mode = match &wal {
         Some((dir, policy)) => {
@@ -170,13 +180,24 @@ fn run_pass(
     if let Some(dir) = wal_dir {
         let _ = std::fs::remove_dir_all(dir);
     }
-    PassResult { workers, transport, persist, fsync, reqs: n, secs: dt, reqs_per_s: n as f64 / dt }
+    balsam::util::metrics::set_enabled(true);
+    PassResult {
+        workers,
+        transport,
+        persist,
+        fsync,
+        metrics,
+        reqs: n,
+        secs: dt,
+        reqs_per_s: n as f64 / dt,
+    }
 }
 
 fn print_pass(r: &PassResult) {
     println!(
-        "workers {:>2} | {:>11} | {:>9}/{:<6}: {:>7} reqs in {:.2}s  ->  {:>8.0} req/s",
-        r.workers, r.transport, r.persist, r.fsync, r.reqs, r.secs, r.reqs_per_s
+        "workers {:>2} | {:>11} | {:>9}/{:<6} | metrics {:<3}: {:>7} reqs in {:.2}s  ->  \
+         {:>8.0} req/s",
+        r.workers, r.transport, r.persist, r.fsync, r.metrics, r.reqs, r.secs, r.reqs_per_s
     );
 }
 
@@ -305,7 +326,7 @@ fn main() {
     // Worker scaling on the per-request transport (the historical
     // baseline), then the keep-alive transport at 8 workers.
     for (workers, keep_alive) in [(1usize, false), (8, false), (8, true)] {
-        let r = run_pass(workers, keep_alive, secs, None);
+        let r = run_pass(workers, keep_alive, secs, None, true);
         print_pass(&r);
         results.push(r);
     }
@@ -324,7 +345,7 @@ fn main() {
         FsyncPolicy::Always,
     ];
     for policy in policies {
-        let r = run_pass(8, true, secs, Some((wal_dir.clone(), policy)));
+        let r = run_pass(8, true, secs, Some((wal_dir.clone(), policy)), true);
         print_pass(&r);
         println!(
             "wal/{} tax: {:.0}% of ephemeral keep-alive throughput",
@@ -341,6 +362,24 @@ fn main() {
         group_vs_flush,
         100.0 * group_vs_flush
     );
+
+    // Metrics-overhead axis: re-run the hottest durable leg (keep-alive +
+    // group-commit WAL) with recording off. bench_trend.py compares this
+    // in-run pair and gates the overhead at <= 5%.
+    let off = run_pass(
+        8,
+        true,
+        secs,
+        Some((wal_dir.clone(), FsyncPolicy::Group { records: 64, interval_ms: 2 })),
+        false,
+    );
+    print_pass(&off);
+    let metrics_overhead = 1.0 - group_rps / off.reqs_per_s.max(1e-9);
+    println!(
+        "metrics recording overhead on keepalive/wal/group: {:.1}% (gate: <= 5%)",
+        100.0 * metrics_overhead
+    );
+    results.push(off);
 
     // Propagation-latency axis: poll baseline vs push-mode subscription.
     let prop_iters = if quick { 20 } else { 60 };
@@ -372,6 +411,7 @@ fn main() {
                             ("transport", Json::str(r.transport)),
                             ("persist", Json::str(r.persist)),
                             ("fsync", Json::str(r.fsync)),
+                            ("metrics", Json::str(r.metrics)),
                             ("reqs", Json::num(r.reqs as f64)),
                             ("secs", Json::num(r.secs)),
                             ("reqs_per_s", Json::num(r.reqs_per_s)),
@@ -383,6 +423,7 @@ fn main() {
         ("speedup_8_vs_1", Json::num(speedup)),
         ("keepalive_speedup_8workers", Json::num(ka_speedup)),
         ("group_commit_vs_flush", Json::num(group_vs_flush)),
+        ("metrics_overhead", Json::num(metrics_overhead)),
         (
             "propagation",
             Json::obj(vec![

@@ -30,7 +30,7 @@ fn main() {
                  \n          [--fsync=never|always|group:K,Tms] [--events-segment-bytes N]\
                  \n          [--events-retain-bytes N] [--events-retain-age SECS]\
                  \n          [--workers N] [--no-keepalive] [--http-idle-timeout SECS]\
-                 \n          [--http-max-requests N] [--subscribe-max-ms N]\
+                 \n          [--http-max-requests N] [--subscribe-max-ms N] [--no-metrics]\
                  \n  runtime-check [--artifacts artifacts] [--model NAME]\
                  \n  state-graph",
                 balsam::experiments::ALL
@@ -111,6 +111,10 @@ fn cmd_service(args: &Args) -> balsam::Result<()> {
          got {subscribe_max}"
     );
     core.subscribe_max_ms = subscribe_max;
+    // --no-metrics turns hot-path recording into cheap no-ops; /metrics
+    // and /healthz stay routable (the exposition just stops advancing).
+    let metrics_on = !args.flag("no-metrics");
+    balsam::util::metrics::set_enabled(metrics_on);
     let svc = Arc::new(core);
     let token = svc.admin_token();
     let server = http_gw::serve_with(svc, addr, workers, http)?;
@@ -127,6 +131,10 @@ fn cmd_service(args: &Args) -> balsam::Result<()> {
             fsync_spec
         );
     }
+    println!(
+        "observability: GET /metrics (Prometheus) and /healthz, recording {}",
+        if metrics_on { "on" } else { "off (--no-metrics)" }
+    );
     println!("POST JSON to /api with 'authorization: Bearer <token>'. Ctrl-C to stop.");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -303,6 +303,41 @@ pub enum ApiRequest {
     },
 }
 
+impl ApiRequest {
+    /// The wire `"type"` discriminator for this variant — the stable
+    /// endpoint name. Doubles as the `endpoint` label value for the
+    /// gateway's per-endpoint metrics
+    /// ([`crate::util::metrics::api_observe`]); the metric registry's
+    /// [`crate::util::metrics::ENDPOINTS`] list must contain every name
+    /// returned here (pinned by a gateway test).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ApiRequest::CreateUser { .. } => "CreateUser",
+            ApiRequest::CreateSite { .. } => "CreateSite",
+            ApiRequest::RegisterApp { .. } => "RegisterApp",
+            ApiRequest::BulkCreateJobs { .. } => "BulkCreateJobs",
+            ApiRequest::ListJobs { .. } => "ListJobs",
+            ApiRequest::CountByState { .. } => "CountByState",
+            ApiRequest::UpdateJobState { .. } => "UpdateJobState",
+            ApiRequest::BulkUpdateJobState { .. } => "BulkUpdateJobState",
+            ApiRequest::CreateSession { .. } => "CreateSession",
+            ApiRequest::SessionAcquire { .. } => "SessionAcquire",
+            ApiRequest::SessionHeartbeat { .. } => "SessionHeartbeat",
+            ApiRequest::SessionSync { .. } => "SessionSync",
+            ApiRequest::SessionEnd { .. } => "SessionEnd",
+            ApiRequest::CreateBatchJob { .. } => "CreateBatchJob",
+            ApiRequest::ListBatchJobs { .. } => "ListBatchJobs",
+            ApiRequest::UpdateBatchJob { .. } => "UpdateBatchJob",
+            ApiRequest::PendingTransferItems { .. } => "PendingTransferItems",
+            ApiRequest::UpdateTransferItems { .. } => "UpdateTransferItems",
+            ApiRequest::SyncTransferItems { .. } => "SyncTransferItems",
+            ApiRequest::SiteBacklog { .. } => "SiteBacklog",
+            ApiRequest::ListEvents { .. } => "ListEvents",
+            ApiRequest::WatchEvents { .. } => "WatchEvents",
+        }
+    }
+}
+
 /// Aggregate backlog snapshot used by the Elastic Queue module and the
 /// shortest-backlog client strategy (paper §3.2, §4.6).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]

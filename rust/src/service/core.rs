@@ -19,6 +19,7 @@ use super::auth::TokenAuthority;
 use super::models::*;
 use super::persist::PersistMode;
 use super::store::Store;
+use crate::util::metrics;
 
 /// Default lease: a launcher missing heartbeats for this long is presumed
 /// dead and its jobs are reset (paper: "the stale heartbeat is detected by
@@ -59,6 +60,7 @@ struct WatchSlot<'a>(&'a AtomicU64);
 impl Drop for WatchSlot<'_> {
     fn drop(&mut self) {
         self.0.fetch_add(1, Ordering::Relaxed);
+        metrics::WATCH_SLOTS_FREE.inc();
     }
 }
 
@@ -104,6 +106,11 @@ impl ServiceCore {
     /// (every watch degrades to a non-blocking probe).
     pub fn set_subscribe_slots(&self, slots: u64) {
         self.subscribe_free.store(slots, Ordering::Relaxed);
+        // Gauge mirror for the sizing guidance in docs/OPERATIONS.md.
+        // Process-global, so it tracks the most recently sized gateway
+        // (in practice: the one serving) — clamped because the in-process
+        // default is the u64::MAX sentinel.
+        metrics::WATCH_SLOTS_FREE.set(slots.min(i64::MAX as u64) as i64);
     }
 
     /// Take a parking permit, or `None` when every slot is armed.
@@ -119,7 +126,10 @@ impl ServiceCore {
                 Ordering::Relaxed,
                 Ordering::Relaxed,
             ) {
-                Ok(_) => return Some(WatchSlot(&self.subscribe_free)),
+                Ok(_) => {
+                    metrics::WATCH_SLOTS_FREE.dec();
+                    return Some(WatchSlot(&self.subscribe_free));
+                }
                 Err(seen) => cur = seen,
             }
         }

@@ -11,6 +11,7 @@ use std::time::Instant;
 
 use crate::util::httpd::{self, HttpClient, HttpConfig, Request, Response, Server};
 use crate::util::json::{kv_from_json, kv_to_json, u64s_from_json, Json};
+use crate::util::metrics;
 
 use super::api::*;
 use super::core::ServiceCore;
@@ -555,6 +556,34 @@ pub fn serve_with(
     let stop_svc = service.clone();
     let mut server = Server::serve_cfg(addr, workers, http, move |req: Request| {
         let now = t0.elapsed().as_secs_f64();
+        // Unauthenticated operational endpoints, routed before anything
+        // else. Neither touches the watch-parking permits (`/metrics`
+        // under keep-alive must never starve a WatchEvents subscriber —
+        // pinned by the `metrics_health` suite) and neither parses a
+        // body, so a scrape stays cheap even while the store is wedged.
+        if req.method == "GET" && req.path == "/healthz" {
+            return match service.store.persist_error() {
+                // Poisoned durable store: in-memory state may be ahead of
+                // the log and every mutation 500s — tell the orchestrator
+                // to stop routing here.
+                Some(e) => Response::error(503, &format!("persist poisoned: {e}")),
+                None if service.store.watchers_closed() => Response::error(503, "stopping"),
+                None => Response {
+                    status: 200,
+                    body: b"ok\n".to_vec(),
+                    content_type: "text/plain",
+                },
+            };
+        }
+        if req.method == "GET" && req.path == "/metrics" {
+            let mut body = metrics::render();
+            service.store.render_metrics(&mut body);
+            return Response {
+                status: 200,
+                body: body.into_bytes(),
+                content_type: "text/plain; version=0.0.4",
+            };
+        }
         let token = req
             .header("authorization")
             .and_then(|h| h.strip_prefix("Bearer "))
@@ -571,7 +600,14 @@ pub fn serve_with(
             Ok(r) => r,
             Err(e) => return Response::error(400, &e),
         };
+        // Per-endpoint observability: the label is the wire discriminator
+        // (captured before `api_req` moves into the handler), the latency
+        // is handler wall time — for WatchEvents that includes the
+        // server-side park, so its histogram reads as hang duration.
+        let endpoint = api_req.name();
+        let t_req = metrics::clock();
         let result = service.handle(now, &token, api_req);
+        metrics::api_observe(endpoint, result.is_err(), t_req);
         match result {
             Ok(resp) => Response::ok_json(response_to_json(&resp).to_string()),
             Err(e) => {
@@ -760,6 +796,75 @@ mod tests {
         let err = conn.api("balsam.1.bad", ApiRequest::SiteBacklog { site }).unwrap_err();
         assert_eq!(err, ApiError::Unauthorized);
         server.stop();
+    }
+
+    /// Every `ApiRequest` variant's wire name must have a slot in the
+    /// metric registry's endpoint label list — an unlisted name would
+    /// silently land in the terminal `"other"` slot and vanish from
+    /// per-endpoint dashboards. Also pins that `name()` IS the wire
+    /// `"type"` discriminator.
+    #[test]
+    fn every_endpoint_has_a_metric_slot() {
+        let reqs = vec![
+            ApiRequest::CreateUser { name: "u".into() },
+            ApiRequest::CreateSite { name: "s".into(), hostname: "h".into(), path: "/p".into() },
+            ApiRequest::RegisterApp {
+                site: SiteId(1),
+                name: "a".into(),
+                command_template: "c".into(),
+                parameters: vec![],
+            },
+            ApiRequest::BulkCreateJobs { jobs: vec![] },
+            ApiRequest::ListJobs { filter: JobFilter::default() },
+            ApiRequest::CountByState { site: SiteId(1) },
+            ApiRequest::UpdateJobState { job: JobId(1), to: JobState::Running, data: "".into() },
+            ApiRequest::BulkUpdateJobState { jobs: vec![], to: JobState::Running, data: "".into() },
+            ApiRequest::CreateSession { site: SiteId(1), batch_job: None },
+            ApiRequest::SessionAcquire { session: SessionId(1), max_nodes: 1, max_jobs: 1 },
+            ApiRequest::SessionHeartbeat { session: SessionId(1) },
+            ApiRequest::SessionSync { session: SessionId(1), updates: vec![] },
+            ApiRequest::SessionEnd { session: SessionId(1) },
+            ApiRequest::CreateBatchJob {
+                site: SiteId(1),
+                num_nodes: 1,
+                wall_time_s: 1.0,
+                mode: JobMode::Mpi,
+                queue: "q".into(),
+                project: "p".into(),
+            },
+            ApiRequest::ListBatchJobs { site: SiteId(1), active_only: false },
+            ApiRequest::UpdateBatchJob {
+                id: BatchJobId(1),
+                state: BatchJobState::Pending,
+                local_id: None,
+            },
+            ApiRequest::PendingTransferItems {
+                site: SiteId(1),
+                direction: Direction::In,
+                limit: 0,
+            },
+            ApiRequest::UpdateTransferItems {
+                ids: vec![],
+                state: TransferState::Done,
+                task_id: None,
+            },
+            ApiRequest::SyncTransferItems { updates: vec![] },
+            ApiRequest::SiteBacklog { site: SiteId(1) },
+            ApiRequest::ListEvents { since: 0 },
+            ApiRequest::WatchEvents { site: None, since: 0, timeout_ms: 0 },
+        ];
+        for req in &reqs {
+            assert!(
+                metrics::ENDPOINTS.contains(&req.name()),
+                "no metric endpoint slot for {}",
+                req.name()
+            );
+            let j = request_to_json(req);
+            assert_eq!(j.get("type").and_then(Json::as_str), Some(req.name()));
+        }
+        // One slot per variant plus the terminal catch-all.
+        assert_eq!(metrics::ENDPOINTS.len(), reqs.len() + 1);
+        assert_eq!(metrics::ENDPOINTS.last(), Some(&"other"));
     }
 
     /// Tentpole contract: a whole API session (including error responses)

@@ -67,6 +67,7 @@ use std::time::Duration;
 
 use crate::util::error::Context;
 use crate::util::json::Json;
+use crate::util::metrics;
 use crate::{bail, err};
 
 use super::models::*;
@@ -326,6 +327,9 @@ impl Poison {
             *m = Some(msg);
         }
         self.flag.store(true, Ordering::Release);
+        // Alert surface: `/healthz` flips to 503 on the same latch, but a
+        // scrape-only deployment sees it here.
+        metrics::PERSIST_POISONED.set(1);
     }
 
     fn get(&self) -> Option<String> {
@@ -373,12 +377,17 @@ impl CommitWait {
             let target_bytes = wf.bytes_written;
             let epoch = wf.epoch;
             let fd = wf.sync_fd.clone();
+            // Records this fsync will newly cover — the group-commit batch.
+            let batch = target_lsn.saturating_sub(wf.durable_lsn);
             drop(wf);
+            let t_sync = metrics::clock();
             let res = fd.sync_data();
             wf = self.cell.wal.lock().unwrap();
             wf.sync_running = false;
             match res {
                 Ok(()) => {
+                    metrics::WAL_FSYNC_SECONDS.observe_since(t_sync);
+                    metrics::WAL_GROUP_COMMIT_RECORDS.observe(batch as f64);
                     if wf.epoch == epoch {
                         wf.durable_lsn = wf.durable_lsn.max(target_lsn);
                         wf.durable_bytes = wf.durable_bytes.max(target_bytes);
@@ -926,6 +935,7 @@ impl Persist {
         wf.next_lsn += 1;
         let mut buf = line.to_string();
         buf.push('\n');
+        let t_io = metrics::clock();
         let io = wf.writer.write_all(buf.as_bytes()).and_then(|_| wf.writer.flush());
         if let Err(e) = io {
             let msg = format!("wal append {}: {e}", file_stem(key));
@@ -933,6 +943,7 @@ impl Persist {
             cell.cv.notify_all();
             return Err(msg);
         }
+        metrics::WAL_APPEND_SECONDS.observe_since(t_io);
         wf.appended_lsn = lsn;
         wf.bytes_written += buf.len() as u64;
         wf.since_snapshot += records.len() as u64;
@@ -944,8 +955,10 @@ impl Persist {
         // awaits after releasing its shard lock, and that waiter-side
         // leader election keeps fsyncs off both locks.
         if matches!(self.fsync, FsyncPolicy::Always) {
+            let t_sync = metrics::clock();
             match wf.sync_fd.sync_data() {
                 Ok(()) => {
+                    metrics::WAL_FSYNC_SECONDS.observe_since(t_sync);
                     wf.durable_lsn = lsn;
                     wf.durable_bytes = wf.bytes_written;
                     cell.cv.notify_all();

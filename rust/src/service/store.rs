@@ -35,6 +35,7 @@ use super::api::{ApiError, EventsPage};
 use super::models::*;
 use super::persist::{CommitWait, Persist, PersistMode, ShardKey, WalRecord};
 use super::state;
+use crate::util::metrics;
 
 /// Read-mostly global tables: identity and topology.
 #[derive(Debug, Default)]
@@ -609,13 +610,33 @@ impl Store {
         if seq > g.horizon {
             g.horizon = seq;
         }
+        // Park/wake accounting: `parked` flips once per call, on the
+        // first actual condvar wait — an immediate answer (events already
+        // exist, zero timeout) is not a park, and a woken watcher that
+        // returns `true` after having parked counts as a wake (timeouts
+        // and shutdown drains do not).
+        let mut parked = false;
         loop {
             if g.closed || g.horizon > since {
+                if parked {
+                    metrics::WATCH_PARKED.dec();
+                    if g.horizon > since {
+                        metrics::WATCH_WAKE_TOTAL.inc();
+                    }
+                }
                 return g.horizon > since;
             }
             let left = deadline.saturating_duration_since(Instant::now());
             if left.is_zero() {
+                if parked {
+                    metrics::WATCH_PARKED.dec();
+                }
                 return false;
+            }
+            if !parked {
+                parked = true;
+                metrics::WATCH_PARK_TOTAL.inc();
+                metrics::WATCH_PARKED.inc();
             }
             g = self.watch.cv.wait_timeout(g, left).unwrap().0;
         }
@@ -647,6 +668,35 @@ impl Store {
         g.generation += 1;
         g.closed = false;
         g.generation
+    }
+
+    /// Whether the watch channel is currently closed (a gateway's stop
+    /// hook ran and no newer gateway re-armed it). The health endpoint
+    /// reports 503 in this state: the process is draining, new long polls
+    /// would return immediately instead of parking.
+    pub fn watchers_closed(&self) -> bool {
+        self.watch.state.lock().unwrap().closed
+    }
+
+    /// Append this store's per-shard gauges to a Prometheus text scrape:
+    /// the in-memory hot-tail event depth per site shard
+    /// (`balsam_events_hot_depth{site="N"}`). Computed at scrape time —
+    /// the shard set is dynamic, so these series are not statics in
+    /// [`crate::util::metrics`] (its `family_names` still catalogs the
+    /// family). Takes each shard read lock briefly; never called on the
+    /// request hot path.
+    pub fn render_metrics(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        let _ = writeln!(
+            out,
+            "# HELP balsam_events_hot_depth In-memory hot-tail events held per site shard."
+        );
+        let _ = writeln!(out, "# TYPE balsam_events_hot_depth gauge");
+        let shards = self.shards.read().unwrap();
+        for (site, sh) in shards.iter() {
+            let depth = sh.read().unwrap().events.len();
+            let _ = writeln!(out, "balsam_events_hot_depth{{site=\"{}\"}} {depth}", site.0);
+        }
     }
 
     /// First persist-layer I/O failure, if any (the store is poisoned:

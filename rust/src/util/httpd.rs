@@ -36,6 +36,7 @@ use std::time::{Duration, Instant};
 
 use crate::err;
 use crate::util::error::{Context, Result};
+use crate::util::metrics;
 
 /// Default worker-pool size: one per available core, bounded to keep the
 /// pool sane on very small or very large hosts.
@@ -178,6 +179,7 @@ impl Response {
             404 => "Not Found",
             409 => "Conflict",
             500 => "Internal Server Error",
+            503 => "Service Unavailable",
             _ => "Unknown",
         }
     }
@@ -246,6 +248,7 @@ impl Server {
         let handler = Arc::new(handler);
         let cfg = Arc::new(cfg);
         let workers = workers.max(1);
+        metrics::HTTP_WORKER_POOL_SIZE.set(workers as i64);
         let conns: Arc<Mutex<Vec<(u64, TcpStream)>>> = Arc::default();
         let (tx, rx) = mpsc::channel::<(u64, TcpStream)>();
         let rx = Arc::new(Mutex::new(rx));
@@ -262,7 +265,10 @@ impl Server {
                 let next = rx.lock().unwrap().recv();
                 match next {
                     Ok((id, stream)) => {
+                        metrics::HTTP_WORKERS_BUSY.inc();
                         let _ = handle_conn(stream, &*h, &cfg);
+                        metrics::HTTP_WORKERS_BUSY.dec();
+                        metrics::HTTP_CONNECTIONS_OPEN.dec();
                         conns.lock().unwrap().retain(|(i, _)| *i != id);
                     }
                     // Acceptor gone and queue drained: shut down.
@@ -281,10 +287,15 @@ impl Server {
                         // non-blocking flag on some platforms.
                         let _ = stream.set_nonblocking(false);
                         next_id += 1;
+                        metrics::HTTP_CONNECTIONS_TOTAL.inc();
+                        metrics::HTTP_CONNECTIONS_OPEN.inc();
                         if let Ok(clone) = stream.try_clone() {
                             conns2.lock().unwrap().push((next_id, clone));
                         }
                         if tx.send((next_id, stream)).is_err() {
+                            // Shutdown race: no worker will serve (and
+                            // close out) this connection.
+                            metrics::HTTP_CONNECTIONS_OPEN.dec();
                             break;
                         }
                     }

@@ -1,0 +1,596 @@
+//! Lock-free service metrics: a process-global registry of atomic
+//! counters, gauges, and fixed-bucket histograms with Prometheus text
+//! exposition.
+//!
+//! Design constraints (the hot-path contract):
+//!
+//! * **Static registration** — every metric is a `static` in this module,
+//!   walked once by [`render`] and cataloged in [`family_names`]; nothing
+//!   registers at runtime, so recording needs no lock and no lookup beyond
+//!   an array index or a short `&'static str` scan.
+//! * **Zero allocation on the hot path** — recording is one or two relaxed
+//!   atomic RMWs (plus an `Instant` read for latency points); strings are
+//!   only built at scrape time by [`render`].
+//! * **Globally disableable** — `balsam service --no-metrics` calls
+//!   [`set_enabled`]`(false)` and every recording op degrades to one
+//!   relaxed load and a branch. The switch is meant to be thrown once at
+//!   process start (the throughput bench flips it between passes): paired
+//!   gauge updates can tear if it is toggled while traffic is in flight.
+//!
+//! The registry is served by the gateway's unauthenticated `GET /metrics`
+//! endpoint ([`crate::service::http_gw`]); the store appends its per-shard
+//! `balsam_events_hot_depth` series at scrape time (the shard set is
+//! dynamic, so those gauges are computed on read rather than registered
+//! here). Every family name is cataloged in `docs/OPERATIONS.md`, and the
+//! `metrics_health` integration suite asserts the doc and the registry
+//! agree.
+//!
+//! Not to be confused with [`crate::metrics`], the *evaluation* metrics
+//! module (paper tables over the event log) — this module is runtime
+//! observability for the live service.
+
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Process-global recording switch (see [`set_enabled`]).
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Is metric recording currently enabled? One relaxed load — callers on
+/// the hot path may use this to skip even the `Instant::now()` read (see
+/// [`clock`]).
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Enable or disable all metric recording (`balsam service --no-metrics`;
+/// the bench's instrumentation-overhead axis). Rendering keeps working
+/// while disabled — values simply stop moving.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// A timestamp for a latency observation, or `None` when recording is
+/// disabled — so a disabled process does not even pay the clock read.
+/// Pair with [`Histogram::observe_since`].
+pub fn clock() -> Option<Instant> {
+    if enabled() {
+        Some(Instant::now())
+    } else {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Primitives
+// ---------------------------------------------------------------------------
+
+/// Monotonically increasing counter (Prometheus `counter`).
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    /// New counter at zero (`const`: counters live in statics).
+    pub const fn new() -> Counter {
+        Counter { v: AtomicU64::new(0) }
+    }
+
+    /// Add one.
+    pub fn inc(&self) {
+        if enabled() {
+            self.v.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        if enabled() {
+            self.v.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed value (Prometheus `gauge`).
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    /// New gauge at zero (`const`: gauges live in statics).
+    pub const fn new() -> Gauge {
+        Gauge { v: AtomicI64::new(0) }
+    }
+
+    /// Set the value outright.
+    pub fn set(&self, v: i64) {
+        if enabled() {
+            self.v.store(v, Ordering::Relaxed);
+        }
+    }
+
+    /// Add one.
+    pub fn inc(&self) {
+        if enabled() {
+            self.v.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Subtract one.
+    pub fn dec(&self) {
+        if enabled() {
+            self.v.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Current value.
+    pub fn get(&self) -> i64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Bucket slots per histogram: up to [`MAX_BOUNDS`] finite `le` bounds
+/// plus the implicit `+Inf` overflow bucket.
+const MAX_BUCKETS: usize = 16;
+/// Maximum number of finite bucket bounds a [`Histogram`] accepts.
+pub const MAX_BOUNDS: usize = MAX_BUCKETS - 1;
+
+/// Fixed-bucket histogram (Prometheus `histogram`). Bounds are a
+/// `&'static` slice fixed at construction; observing is a linear scan of
+/// at most [`MAX_BOUNDS`] comparisons plus three relaxed RMWs. The running
+/// sum is kept as an integer in `1/scale` units (e.g. nanoseconds for
+/// `scale = 1e9`) so it stays a single atomic add.
+pub struct Histogram {
+    bounds: &'static [f64],
+    scale: f64,
+    buckets: [AtomicU64; MAX_BUCKETS],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    /// New histogram over `bounds` (ascending upper bounds, at most
+    /// [`MAX_BOUNDS`]); `scale` converts observed values to the integer
+    /// unit the sum accumulates in (`1e9` for seconds → nanoseconds,
+    /// `1.0` for plain counts).
+    pub const fn new(bounds: &'static [f64], scale: f64) -> Histogram {
+        assert!(bounds.len() <= MAX_BOUNDS, "too many histogram bounds");
+        Histogram {
+            bounds,
+            scale,
+            buckets: [const { AtomicU64::new(0) }; MAX_BUCKETS],
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation.
+    pub fn observe(&self, v: f64) {
+        if !enabled() {
+            return;
+        }
+        let mut i = 0;
+        while i < self.bounds.len() && v > self.bounds[i] {
+            i += 1;
+        }
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let scaled = v * self.scale;
+        if scaled > 0.0 {
+            self.sum.fetch_add(scaled as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Record the elapsed seconds since `t0` (from [`clock`]); a `None`
+    /// timestamp — recording was disabled when the operation started — is
+    /// a no-op.
+    pub fn observe_since(&self, t0: Option<Instant>) {
+        if let Some(t0) = t0 {
+            self.observe(t0.elapsed().as_secs_f64());
+        }
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The registry: every exported metric is a static below
+// ---------------------------------------------------------------------------
+
+/// Latency bucket bounds, seconds: 50µs .. 2.5s, roughly ×2–2.5 steps —
+/// sized for gateway round trips (tens of µs in-process, ms with fsync).
+#[rustfmt::skip]
+pub const LATENCY_BOUNDS: &[f64] = &[
+    0.00005, 0.0001, 0.00025, 0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5,
+    1.0, 2.5,
+];
+
+/// Group-commit batch-size bucket bounds (WAL lines per fsync).
+pub const BATCH_BOUNDS: &[f64] =
+    &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0];
+
+/// Endpoint label values for the per-endpoint API families — the wire
+/// `"type"` discriminators (`ApiRequest::name`), plus a terminal `"other"`
+/// slot for anything unrecognized. `service::api` pins that every variant
+/// maps into this list.
+pub const ENDPOINTS: &[&str] = &[
+    "CreateUser",
+    "CreateSite",
+    "RegisterApp",
+    "BulkCreateJobs",
+    "ListJobs",
+    "CountByState",
+    "UpdateJobState",
+    "BulkUpdateJobState",
+    "CreateSession",
+    "SessionAcquire",
+    "SessionHeartbeat",
+    "SessionSync",
+    "SessionEnd",
+    "CreateBatchJob",
+    "ListBatchJobs",
+    "UpdateBatchJob",
+    "PendingTransferItems",
+    "UpdateTransferItems",
+    "SyncTransferItems",
+    "SiteBacklog",
+    "ListEvents",
+    "WatchEvents",
+    "other",
+];
+
+/// TCP connections accepted by the gateway listener (`util::httpd`).
+pub static HTTP_CONNECTIONS_TOTAL: Counter = Counter::new();
+/// Accepted connections not yet finished (queued + in service); minus
+/// [`HTTP_WORKERS_BUSY`] this is the accept-queue backlog.
+pub static HTTP_CONNECTIONS_OPEN: Gauge = Gauge::new();
+/// Worker threads currently inside a connection's request loop.
+pub static HTTP_WORKERS_BUSY: Gauge = Gauge::new();
+/// Configured gateway worker-pool size (set at serve time).
+pub static HTTP_WORKER_POOL_SIZE: Gauge = Gauge::new();
+
+/// Per-endpoint request counts, indexed like [`ENDPOINTS`].
+pub static API_REQUESTS_TOTAL: [Counter; ENDPOINTS.len()] =
+    [const { Counter::new() }; ENDPOINTS.len()];
+/// Per-endpoint error counts (requests that returned an `ApiError`).
+pub static API_ERRORS_TOTAL: [Counter; ENDPOINTS.len()] =
+    [const { Counter::new() }; ENDPOINTS.len()];
+/// Per-endpoint request latency (seconds, gateway handler wall time).
+pub static API_REQUEST_SECONDS: [Histogram; ENDPOINTS.len()] =
+    [const { Histogram::new(LATENCY_BOUNDS, 1e9) }; ENDPOINTS.len()];
+
+/// WAL append latency: buffered write + flush of one record batch.
+pub static WAL_APPEND_SECONDS: Histogram = Histogram::new(LATENCY_BOUNDS, 1e9);
+/// WAL fsync latency (`fsync=always` inline syncs and group-commit
+/// leader syncs).
+pub static WAL_FSYNC_SECONDS: Histogram = Histogram::new(LATENCY_BOUNDS, 1e9);
+/// WAL lines (atomic append batches) made durable by one group-commit
+/// fsync — the batching the leader election buys.
+pub static WAL_GROUP_COMMIT_RECORDS: Histogram = Histogram::new(BATCH_BOUNDS, 1.0);
+
+/// Long-poll watchers that parked on the event condvar.
+pub static WATCH_PARK_TOTAL: Counter = Counter::new();
+/// Parked watchers woken by an event (as opposed to timing out).
+pub static WATCH_WAKE_TOTAL: Counter = Counter::new();
+/// Watchers currently parked on the event condvar.
+pub static WATCH_PARKED: Gauge = Gauge::new();
+/// Free `WatchEvents` parking permits (gateway sizes this to
+/// `workers - 1`; zero means new watches degrade to non-blocking probes).
+pub static WATCH_SLOTS_FREE: Gauge = Gauge::new();
+
+/// 1 once a WAL / event-segment I/O failure has poisoned the persist
+/// handle (all further mutations fail with framed 500s until restart).
+pub static PERSIST_POISONED: Gauge = Gauge::new();
+
+/// Record one API request outcome: `endpoint` is the wire discriminator
+/// (`ApiRequest::name`; unknown names land in the `"other"` slot), `error`
+/// whether the handler returned an `ApiError`, `started` the [`clock`]
+/// timestamp taken before dispatch.
+pub fn api_observe(endpoint: &str, error: bool, started: Option<Instant>) {
+    if !enabled() {
+        return;
+    }
+    let idx = ENDPOINTS.iter().position(|e| *e == endpoint).unwrap_or(ENDPOINTS.len() - 1);
+    API_REQUESTS_TOTAL[idx].inc();
+    if error {
+        API_ERRORS_TOTAL[idx].inc();
+    }
+    API_REQUEST_SECONDS[idx].observe_since(started);
+}
+
+// ---------------------------------------------------------------------------
+// Exposition
+// ---------------------------------------------------------------------------
+
+/// Every family name this process exports — the statics above plus the
+/// store's scrape-time `balsam_events_hot_depth` series. The doc-check
+/// test pins that `docs/OPERATIONS.md` catalogs each of these.
+pub fn family_names() -> &'static [&'static str] {
+    &[
+        "balsam_http_connections_total",
+        "balsam_http_connections_open",
+        "balsam_http_workers_busy",
+        "balsam_http_worker_pool_size",
+        "balsam_api_requests_total",
+        "balsam_api_errors_total",
+        "balsam_api_request_seconds",
+        "balsam_wal_append_seconds",
+        "balsam_wal_fsync_seconds",
+        "balsam_wal_group_commit_records",
+        "balsam_watch_park_total",
+        "balsam_watch_wake_total",
+        "balsam_watch_parked",
+        "balsam_watch_slots_free",
+        "balsam_persist_poisoned",
+        "balsam_events_hot_depth",
+    ]
+}
+
+fn header(out: &mut String, name: &str, kind: &str, help: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+fn counter_family(out: &mut String, name: &str, help: &str, c: &Counter) {
+    header(out, name, "counter", help);
+    let _ = writeln!(out, "{name} {}", c.get());
+}
+
+fn gauge_family(out: &mut String, name: &str, help: &str, g: &Gauge) {
+    header(out, name, "gauge", help);
+    let _ = writeln!(out, "{name} {}", g.get());
+}
+
+/// One histogram's series; `label` is an optional `key="value"` pair
+/// prepended to the `le` label (the per-endpoint families).
+fn histogram_series(out: &mut String, name: &str, label: Option<(&str, &str)>, h: &Histogram) {
+    let prefix = match label {
+        Some((k, v)) => format!("{k}=\"{v}\","),
+        None => String::new(),
+    };
+    let suffix = match label {
+        Some((k, v)) => format!("{{{k}=\"{v}\"}}"),
+        None => String::new(),
+    };
+    let mut cum = 0u64;
+    for (i, b) in h.bounds.iter().enumerate() {
+        cum += h.buckets[i].load(Ordering::Relaxed);
+        let _ = writeln!(out, "{name}_bucket{{{prefix}le=\"{b}\"}} {cum}");
+    }
+    cum += h.buckets[h.bounds.len()].load(Ordering::Relaxed);
+    let _ = writeln!(out, "{name}_bucket{{{prefix}le=\"+Inf\"}} {cum}");
+    let sum = h.sum.load(Ordering::Relaxed) as f64 / h.scale;
+    let _ = writeln!(out, "{name}_sum{suffix} {sum}");
+    let _ = writeln!(out, "{name}_count{suffix} {}", h.count());
+}
+
+/// Render the whole registry in the Prometheus text exposition format
+/// (version 0.0.4). Scrape-path only: allocates freely. Per-endpoint
+/// series appear once the endpoint has served at least one request (the
+/// family headers are always present).
+pub fn render() -> String {
+    let mut out = String::with_capacity(16 * 1024);
+    counter_family(
+        &mut out,
+        "balsam_http_connections_total",
+        "TCP connections accepted by the gateway listener.",
+        &HTTP_CONNECTIONS_TOTAL,
+    );
+    gauge_family(
+        &mut out,
+        "balsam_http_connections_open",
+        "Accepted connections not yet finished (queued + in service).",
+        &HTTP_CONNECTIONS_OPEN,
+    );
+    gauge_family(
+        &mut out,
+        "balsam_http_workers_busy",
+        "Gateway workers currently serving a connection.",
+        &HTTP_WORKERS_BUSY,
+    );
+    gauge_family(
+        &mut out,
+        "balsam_http_worker_pool_size",
+        "Configured gateway worker-pool size.",
+        &HTTP_WORKER_POOL_SIZE,
+    );
+
+    header(&mut out, "balsam_api_requests_total", "counter", "API requests served, by endpoint.");
+    for (i, ep) in ENDPOINTS.iter().enumerate() {
+        if API_REQUESTS_TOTAL[i].get() > 0 {
+            let _ = writeln!(
+                out,
+                "balsam_api_requests_total{{endpoint=\"{ep}\"}} {}",
+                API_REQUESTS_TOTAL[i].get()
+            );
+        }
+    }
+    header(
+        &mut out,
+        "balsam_api_errors_total",
+        "counter",
+        "API requests that returned an error, by endpoint.",
+    );
+    for (i, ep) in ENDPOINTS.iter().enumerate() {
+        if API_ERRORS_TOTAL[i].get() > 0 {
+            let _ = writeln!(
+                out,
+                "balsam_api_errors_total{{endpoint=\"{ep}\"}} {}",
+                API_ERRORS_TOTAL[i].get()
+            );
+        }
+    }
+    header(
+        &mut out,
+        "balsam_api_request_seconds",
+        "histogram",
+        "API request latency (gateway handler wall time), by endpoint.",
+    );
+    for (i, ep) in ENDPOINTS.iter().enumerate() {
+        if API_REQUEST_SECONDS[i].count() > 0 {
+            histogram_series(
+                &mut out,
+                "balsam_api_request_seconds",
+                Some(("endpoint", ep)),
+                &API_REQUEST_SECONDS[i],
+            );
+        }
+    }
+
+    header(
+        &mut out,
+        "balsam_wal_append_seconds",
+        "histogram",
+        "WAL append latency (buffered write + flush of one record batch).",
+    );
+    histogram_series(&mut out, "balsam_wal_append_seconds", None, &WAL_APPEND_SECONDS);
+    header(
+        &mut out,
+        "balsam_wal_fsync_seconds",
+        "histogram",
+        "WAL fsync latency (inline fsync=always syncs and group-commit leader syncs).",
+    );
+    histogram_series(&mut out, "balsam_wal_fsync_seconds", None, &WAL_FSYNC_SECONDS);
+    header(
+        &mut out,
+        "balsam_wal_group_commit_records",
+        "histogram",
+        "WAL lines made durable by one group-commit fsync.",
+    );
+    histogram_series(&mut out, "balsam_wal_group_commit_records", None, &WAL_GROUP_COMMIT_RECORDS);
+
+    counter_family(
+        &mut out,
+        "balsam_watch_park_total",
+        "Long-poll watchers that parked on the event condvar.",
+        &WATCH_PARK_TOTAL,
+    );
+    counter_family(
+        &mut out,
+        "balsam_watch_wake_total",
+        "Parked watchers woken by an event (vs timing out).",
+        &WATCH_WAKE_TOTAL,
+    );
+    gauge_family(
+        &mut out,
+        "balsam_watch_parked",
+        "Watchers currently parked on the event condvar.",
+        &WATCH_PARKED,
+    );
+    gauge_family(
+        &mut out,
+        "balsam_watch_slots_free",
+        "Free WatchEvents parking permits (0: new watches degrade to probes).",
+        &WATCH_SLOTS_FREE,
+    );
+    gauge_family(
+        &mut out,
+        "balsam_persist_poisoned",
+        "1 once a WAL/event-segment I/O failure poisoned the persist handle.",
+        &PERSIST_POISONED,
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    /// Serializes the tests that flip or depend on the process-global
+    /// [`ENABLED`] switch — they share one registry and one process.
+    static SWITCH: Mutex<()> = Mutex::new(());
+
+    /// Counter / gauge / histogram semantics plus the global disable
+    /// switch, in ONE test: the switch is process-global, so flipping it
+    /// must not race sibling tests that assert recording works.
+    #[test]
+    fn primitives_and_disable_switch() {
+        let _serial = SWITCH.lock().unwrap();
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+
+        let g = Gauge::new();
+        g.set(7);
+        g.inc();
+        g.dec();
+        g.dec();
+        assert_eq!(g.get(), 6);
+
+        static H: Histogram = Histogram::new(&[0.001, 0.01, 0.1], 1e9);
+        H.observe(0.0005); // bucket 0
+        H.observe(0.05); // bucket 2
+        H.observe(5.0); // overflow
+        assert_eq!(H.count(), 3);
+        assert_eq!(H.buckets[0].load(Ordering::Relaxed), 1);
+        assert_eq!(H.buckets[2].load(Ordering::Relaxed), 1);
+        assert_eq!(H.buckets[3].load(Ordering::Relaxed), 1);
+        // Sum accumulates in 1/scale units (all three observations,
+        // including the overflow one): 5.0505 s ≈ 5.0505e9 ns.
+        let sum_ns = H.sum.load(Ordering::Relaxed);
+        assert!((5_050_000_000..5_051_000_000).contains(&sum_ns), "{sum_ns}");
+
+        set_enabled(false);
+        assert!(clock().is_none());
+        c.inc();
+        g.inc();
+        H.observe(0.5);
+        set_enabled(true);
+        assert_eq!(c.get(), 5, "disabled counter must not move");
+        assert_eq!(g.get(), 6, "disabled gauge must not move");
+        assert_eq!(H.count(), 3, "disabled histogram must not move");
+    }
+
+    /// Exposition is structurally valid: HELP/TYPE headers for every
+    /// family, cumulative buckets ending at +Inf, sum/count lines. Values
+    /// are not asserted — the registry is process-global and sibling
+    /// tests (and the service under test) move it concurrently.
+    #[test]
+    fn render_exposition_format() {
+        let _serial = SWITCH.lock().unwrap();
+        api_observe("SessionSync", false, clock());
+        api_observe("not-a-real-endpoint", true, None);
+        let text = render();
+        for name in family_names() {
+            if *name == "balsam_events_hot_depth" {
+                continue; // rendered by the store at scrape time
+            }
+            assert!(text.contains(&format!("# TYPE {name} ")), "missing TYPE for {name}");
+            assert!(text.contains(&format!("# HELP {name} ")), "missing HELP for {name}");
+        }
+        assert!(text.contains("balsam_api_requests_total{endpoint=\"SessionSync\"}"));
+        assert!(text.contains("balsam_api_requests_total{endpoint=\"other\"}"));
+        assert!(text.contains("balsam_api_errors_total{endpoint=\"other\"}"));
+        assert!(text.contains("balsam_wal_fsync_seconds_bucket{le=\"+Inf\"}"));
+        assert!(text.contains("balsam_wal_fsync_seconds_sum"));
+        assert!(text.contains("balsam_wal_fsync_seconds_count"));
+        // Every exposed family is cataloged in family_names().
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let fam = rest.split_whitespace().next().unwrap();
+                assert!(family_names().contains(&fam), "family {fam} not in family_names()");
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_bucket_edges_are_le() {
+        static H: Histogram = Histogram::new(&[1.0, 2.0], 1.0);
+        H.observe(1.0); // le="1" (inclusive upper bound)
+        H.observe(2.0); // le="2"
+        H.observe(2.0001); // +Inf
+        assert_eq!(H.buckets[0].load(Ordering::Relaxed), 1);
+        assert_eq!(H.buckets[1].load(Ordering::Relaxed), 1);
+        assert_eq!(H.buckets[2].load(Ordering::Relaxed), 1);
+    }
+}

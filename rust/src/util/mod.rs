@@ -15,4 +15,11 @@ pub mod cli;
 pub mod check;
 pub mod httpd;
 pub mod error;
+// The metrics registry is operator-facing (every exported family is
+// cataloged in docs/OPERATIONS.md), so like the wire-facing service
+// modules it carries `missing_docs` at warn level: with the CI
+// `RUSTDOCFLAGS="-D warnings" cargo doc` step an undocumented public
+// metric item is a build failure, not a doc-rot vector.
+#[warn(missing_docs)]
+pub mod metrics;
 pub mod sha256;

@@ -120,6 +120,20 @@ fn full_round_trip_over_http_with_real_file_staging() {
         assert!(path.contains(&JobState::Running));
     }
     assert!(svc.calls() > 50, "expected many HTTP API calls, saw {}", svc.calls());
+
+    // Observability piggyback: after a real workload the gateway's
+    // unauthenticated scrape surfaces are live and populated.
+    let (status, body) =
+        balsam::util::httpd::request(&server.addr, "GET", "/healthz", &[], &[]).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(String::from_utf8_lossy(&body).trim(), "ok");
+    let (status, body) =
+        balsam::util::httpd::request(&server.addr, "GET", "/metrics", &[], &[]).unwrap();
+    assert_eq!(status, 200);
+    let text = String::from_utf8_lossy(&body);
+    assert!(text.contains("balsam_api_requests_total{endpoint=\"BulkCreateJobs\"}"), "{text}");
+    assert!(text.contains("# TYPE balsam_api_request_seconds histogram"), "{text}");
+
     std::fs::remove_dir_all(&dir).ok();
     server.stop();
 }

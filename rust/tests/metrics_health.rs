@@ -1,0 +1,244 @@
+//! Observability integration: the gateway's unauthenticated `/metrics`
+//! and `/healthz` endpoints against a live service — health flips on
+//! persist poisoning, scrapes never consume a watch-parking permit, and
+//! an HTTP round trip under the group-commit WAL populates every
+//! subsystem's series. The registry is process-global, so every value
+//! assertion here is monotone (`>= 1`, `contains`) — never exact.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use balsam::service::api::{ApiConn, ApiRequest, JobCreate};
+use balsam::service::http_gw::{serve_with, HttpConn};
+use balsam::service::models::SiteId;
+use balsam::service::{EventLogConfig, FsyncPolicy, PersistMode, ServiceCore};
+use balsam::util::httpd::{post_json, request, HttpConfig};
+use balsam::util::metrics;
+
+fn wal_service(tag: &str, fsync: FsyncPolicy) -> (Arc<ServiceCore>, String, std::path::PathBuf) {
+    let dir = std::env::temp_dir().join(format!("balsam-metrics-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mode = PersistMode::Wal {
+        dir: dir.clone(),
+        snapshot_every: 4096,
+        fsync,
+        events: EventLogConfig::default(),
+    };
+    let svc = Arc::new(ServiceCore::with_persist(b"metrics-int", mode).unwrap());
+    let tok = svc.admin_token();
+    (svc, tok, dir)
+}
+
+fn create_site(svc: &ServiceCore, tok: &str) -> SiteId {
+    let site = svc
+        .handle(0.0, tok, ApiRequest::CreateSite {
+            name: "obs".into(),
+            hostname: "h".into(),
+            path: "/p".into(),
+        })
+        .unwrap()
+        .site_id();
+    svc.handle(0.0, tok, ApiRequest::RegisterApp {
+        site,
+        name: "MD".into(),
+        command_template: "md".into(),
+        parameters: vec![],
+    })
+    .unwrap();
+    site
+}
+
+/// GET an operational endpoint (no auth header, dedicated connection).
+fn get(addr: &str, path: &str) -> (u16, String) {
+    let (status, body) = request(addr, "GET", path, &[], &[]).unwrap();
+    (status, String::from_utf8_lossy(&body).into_owned())
+}
+
+/// Value of one exposition series (exact name including any labels).
+fn series_value(text: &str, series: &str) -> Option<f64> {
+    text.lines().find_map(|l| {
+        l.strip_prefix(series)
+            .and_then(|rest| rest.strip_prefix(' '))
+            .and_then(|v| v.trim().parse().ok())
+    })
+}
+
+/// `/healthz` is 200 on a healthy durable store and flips to 503 the
+/// moment a WAL I/O failure poisons the persist handle — with the
+/// `balsam_persist_poisoned` gauge latching to 1 on the same event.
+#[test]
+fn healthz_flips_503_when_persist_poisons() {
+    metrics::set_enabled(true);
+    let (svc, _tok, dir) = wal_service("health", FsyncPolicy::Never);
+    let cfg = HttpConfig { keep_alive: true, ..HttpConfig::default() };
+    let server = serve_with(svc.clone(), "127.0.0.1:0", 2, cfg).unwrap();
+
+    let (status, body) = get(&server.addr, "/healthz");
+    assert_eq!(status, 200, "healthy store must probe 200: {body}");
+    assert_eq!(body.trim(), "ok");
+
+    // Inject the WAL fault (same hook persist_recovery.rs uses).
+    svc.store.poison_persist("injected: disk gone");
+
+    let (status, body) = get(&server.addr, "/healthz");
+    assert_eq!(status, 503, "poisoned store must probe 503: {body}");
+    assert!(body.contains("persist poisoned"), "{body}");
+    assert!(body.contains("injected: disk gone"), "{body}");
+
+    // The scrape surface agrees (and needs no auth either).
+    let (status, text) = get(&server.addr, "/metrics");
+    assert_eq!(status, 200, "scrapes must keep working while poisoned");
+    assert_eq!(series_value(&text, "balsam_persist_poisoned"), Some(1.0), "{text}");
+
+    server.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `/metrics` and `/healthz` never occupy a `WatchEvents` parking permit:
+/// with 2 workers the gateway grants exactly 1 permit, a subscriber holds
+/// it parked, and scrapes still answer immediately on the remaining
+/// worker — then the parked subscriber is woken by a real event, proving
+/// the scrape did not displace it.
+#[test]
+fn metrics_scrape_never_occupies_a_parking_slot() {
+    metrics::set_enabled(true);
+    let svc = Arc::new(ServiceCore::new(b"metrics-park"));
+    let tok = svc.admin_token();
+    let site = create_site(&svc, &tok);
+    let cfg = HttpConfig { keep_alive: true, ..HttpConfig::default() };
+    let server = serve_with(svc.clone(), "127.0.0.1:0", 2, cfg).unwrap();
+
+    let since = svc.store.event_horizon();
+    let addr = server.addr.clone();
+    let wtok = tok.clone();
+    let watcher = std::thread::spawn(move || {
+        let body = format!("{{\"type\":\"WatchEvents\",\"since\":{since},\"timeout_ms\":10000}}");
+        post_json(&addr, "/api", &wtok, &body).unwrap()
+    });
+    // Let the watch arm and park (it holds the single permit and pins one
+    // of the two workers for up to 10 s).
+    std::thread::sleep(Duration::from_millis(200));
+
+    // Scrapes must answer promptly on the remaining worker: if either
+    // endpoint needed a parking permit (or a worker beyond the one left),
+    // these would stall toward the 10 s watch timeout.
+    for path in ["/metrics", "/healthz"] {
+        let t0 = Instant::now();
+        let (status, _) = get(&server.addr, path);
+        assert_eq!(status, 200);
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "{path} stalled {:?} behind a parked watcher",
+            t0.elapsed()
+        );
+    }
+
+    // The subscriber still holds its slot: a real event wakes it well
+    // before its 10 s timeout.
+    let t_wake = Instant::now();
+    svc.handle(0.0, &tok, ApiRequest::BulkCreateJobs {
+        jobs: vec![JobCreate::simple(site, "MD", "md_small")],
+    })
+    .unwrap();
+    let (status, body) = watcher.join().unwrap();
+    assert_eq!(status, 200);
+    assert!(
+        t_wake.elapsed() < Duration::from_secs(5),
+        "watch must wake on the event, not time out ({:?})",
+        t_wake.elapsed()
+    );
+    assert!(body.contains("events"), "woken watch must carry an events page: {body}");
+
+    // And the park itself was recorded.
+    let (_, text) = get(&server.addr, "/metrics");
+    assert!(series_value(&text, "balsam_watch_park_total").unwrap_or(0.0) >= 1.0, "{text}");
+    server.stop();
+}
+
+/// One durable HTTP round trip (group-commit WAL) populates every
+/// subsystem's families: per-endpoint request counts and latency
+/// histograms, WAL append/fsync latency, group-commit batch sizes,
+/// watcher park counters, connection gauges, and the store's per-shard
+/// hot-depth series.
+#[test]
+fn metrics_populated_after_durable_round_trip() {
+    metrics::set_enabled(true);
+    let group = FsyncPolicy::Group { records: 64, interval_ms: 2 };
+    let (svc, tok, dir) = wal_service("populate", group);
+    let site = create_site(&svc, &tok);
+    let cfg = HttpConfig { keep_alive: true, ..HttpConfig::default() };
+    let server = serve_with(svc.clone(), "127.0.0.1:0", 2, cfg.clone()).unwrap();
+    let mut conn = HttpConn::with_config(server.addr.clone(), cfg);
+
+    // Durable mutations (each BulkCreateJobs awaits a group commit) plus
+    // a read and a short watch that genuinely parks (nothing newer than
+    // the horizon exists, so it waits out its timeout).
+    for _ in 0..3 {
+        conn.api(&tok, ApiRequest::BulkCreateJobs {
+            jobs: vec![JobCreate::simple(site, "MD", "md_small")],
+        })
+        .unwrap();
+    }
+    conn.api(&tok, ApiRequest::ListEvents { since: 0 }).unwrap();
+    let horizon = svc.store.event_horizon();
+    conn.api(&tok, ApiRequest::WatchEvents { site: Some(site), since: horizon, timeout_ms: 150 })
+        .unwrap();
+
+    let (status, text) = get(&server.addr, "/metrics");
+    assert_eq!(status, 200);
+
+    // Per-endpoint series carry the wire discriminator as the label.
+    for series in [
+        "balsam_api_requests_total{endpoint=\"BulkCreateJobs\"}",
+        "balsam_api_requests_total{endpoint=\"ListEvents\"}",
+        "balsam_api_requests_total{endpoint=\"WatchEvents\"}",
+        "balsam_api_request_seconds_count{endpoint=\"BulkCreateJobs\"}",
+    ] {
+        assert!(series_value(&text, series).unwrap_or(0.0) >= 1.0, "{series} missing:\n{text}");
+    }
+    // WAL instrumentation: appends, group-leader fsyncs, batch sizes.
+    for series in [
+        "balsam_wal_append_seconds_count",
+        "balsam_wal_fsync_seconds_count",
+        "balsam_wal_group_commit_records_count",
+        "balsam_watch_park_total",
+        "balsam_http_connections_total",
+    ] {
+        assert!(series_value(&text, series).unwrap_or(0.0) >= 1.0, "{series} missing:\n{text}");
+    }
+    // The WatchEvents histogram saw the park: its recorded wall time is
+    // at least the 150 ms hang, so the +Inf bucket is populated while the
+    // smallest bucket stays behind it (sanity of the le layout).
+    let inf = "balsam_api_request_seconds_bucket{endpoint=\"WatchEvents\",le=\"+Inf\"}";
+    assert!(series_value(&text, inf).unwrap_or(0.0) >= 1.0, "{text}");
+    // Store-side scrape-time series: one gauge per live site shard.
+    assert!(
+        series_value(&text, &format!("balsam_events_hot_depth{{site=\"{}\"}}", site.0))
+            .unwrap_or(0.0)
+            >= 1.0,
+        "{text}"
+    );
+    // Worker-pool gauge reflects the serve_with sizing.
+    assert!(series_value(&text, "balsam_http_worker_pool_size").unwrap_or(0.0) >= 1.0);
+
+    server.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Doc-check: `docs/OPERATIONS.md` catalogs every family the registry
+/// exports — a metric added without documentation fails here.
+#[test]
+fn operations_doc_catalogs_every_exported_metric() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("docs")
+        .join("OPERATIONS.md");
+    let doc =
+        std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+    for name in metrics::family_names() {
+        assert!(
+            doc.contains(name),
+            "metric family `{name}` is exported but not cataloged in docs/OPERATIONS.md"
+        );
+    }
+}
