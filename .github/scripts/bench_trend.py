@@ -33,6 +33,14 @@ the push-mode subscription landed) is gated on two rules:
   by more than MAX_LATENCY_RATIO (3x; latency on shared CI runners is
   noisy, so the cross-run gate is deliberately loose while the in-run
   invariant stays strict).
+
+The loadgen axis (the `"loadgen"` object recorded since the open-loop
+harness landed) gates the declared max sustainable rps per
+(mix, sites, sessions) combo against the baseline run, with a loose
+threshold (MAX_LOADGEN_DROP): open-loop capacity on shared runners is
+the noisiest number in the record, and the strict per-leg throughput
+gates above already catch ordinary regressions. Every current combo
+must also actually carry a declaration (a `declared_by` verdict).
 """
 import json
 import sys
@@ -41,6 +49,14 @@ import sys
 # baseline (generous: absolute push latency is a few ms and CI runners
 # jitter; the strict signal is the in-run push-vs-poll invariant).
 MAX_LATENCY_RATIO = 3.0
+
+# Cross-run gate on declared max sustainable rps: fail only when a combo
+# loses more than this fraction of its declared capacity. Deliberately
+# looser than --max-drop: the stop rule quantizes capacity to ladder
+# rungs (the CI quick ladder steps by 4x, so losing a single rung reads
+# as a ~75% drop) — the gate fires only when the declaration falls by
+# more than one full rung.
+MAX_LOADGEN_DROP = 0.80
 
 
 def peaks_by_combo(doc):
@@ -142,6 +158,66 @@ def gate_propagation(baseline_doc, current_doc):
     return failed
 
 
+def loadgen_combos(doc):
+    """Declared max sustainable rps keyed by mix/s<sites>/w<sessions>.
+
+    Returns {} for records written before the loadgen axis existed.
+    Raises ValueError on a malformed combo (the axis exists but a combo
+    lacks its declaration) so a half-written record fails loudly.
+    """
+    axis = (doc or {}).get("loadgen")
+    if not axis:
+        return {}
+    combos = {}
+    for c in axis.get("combos", []):
+        try:
+            key = f"{c['mix']}/s{int(c['sites'])}/w{int(c['sessions'])}"
+            rps = float(c["max_sustainable_rps"])
+            declared_by = c["declared_by"]
+        except (KeyError, TypeError, ValueError) as e:
+            raise ValueError(f"malformed loadgen combo {c!r}: {e}") from e
+        if not declared_by:
+            raise ValueError(f"loadgen combo {key} carries no declaration")
+        combos[key] = rps
+    return combos
+
+
+def gate_loadgen(baseline_doc, current_doc):
+    """Gate the declared max sustainable rps per loadgen combo. Returns
+    failed. New/missing combos are reported, not gated."""
+    try:
+        current = loadgen_combos(current_doc)
+    except ValueError as e:
+        print(f"::error::loadgen axis in current record is malformed: {e}")
+        return True
+    if not current:
+        print("loadgen: no axis in current record (pre-loadgen bench); not gated")
+        return False
+    try:
+        baseline = loadgen_combos(baseline_doc)
+    except ValueError as e:
+        print(f"loadgen: unusable baseline axis ({e}); trend not gated")
+        baseline = {}
+    failed = False
+    for combo in sorted(set(baseline) | set(current)):
+        base, cur = baseline.get(combo), current.get(combo)
+        if base is None:
+            print(f"loadgen {combo}: new combo declares {cur:.0f} rps (no baseline; not gated)")
+            continue
+        if cur is None:
+            print(f"loadgen {combo}: in baseline ({base:.0f} rps) but missing now; not gated")
+            continue
+        delta = (cur - base) / base if base > 0 else 0.0
+        print(f"loadgen {combo}: baseline {base:.0f} rps -> current {cur:.0f} rps ({delta:+.1%})")
+        if delta < -MAX_LOADGEN_DROP:
+            print(
+                f"::error::loadgen {combo} max sustainable rps regressed {-delta:.1%} "
+                f"(gate: {MAX_LOADGEN_DROP:.0%}) — see the loadgen axis in BENCH_service.json"
+            )
+            failed = True
+    return failed
+
+
 def main(argv):
     if len(argv) < 3:
         print(__doc__)
@@ -174,6 +250,7 @@ def main(argv):
     # baseline (both are in-run invariants).
     failed |= gate_metrics_overhead(current, max_metrics_overhead)
     failed |= gate_propagation(baseline_doc, current_doc)
+    failed |= gate_loadgen(baseline_doc, current_doc)
     return 1 if failed else 0
 
 

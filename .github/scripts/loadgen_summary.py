@@ -1,0 +1,57 @@
+#!/usr/bin/env python3
+"""Render a loadgen sweep (BENCH_loadgen.json) as a markdown summary table.
+
+Usage: loadgen_summary.py <BENCH_loadgen.json>  >> $GITHUB_STEP_SUMMARY
+
+Prints a per-combo table (mix, sites, sessions, declared max sustainable
+rps, verdict, tripped rung) to stdout. Exits non-zero unless at least one
+combo was declared by an actual stop rule ("failure-rate" or
+"median-latency"): the CI quick ladder is deliberately steep enough to
+overload any runner, so every combo ending in "ladder-exhausted" means
+the harness never reached the saturation point it exists to find — a
+broken sweep, not a fast machine.
+"""
+import json
+import sys
+
+STOP_RULES = {"failure-rate", "median-latency"}
+
+
+def main(argv):
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    with open(argv[1]) as f:
+        doc = json.load(f)
+    combos = doc.get("combos", [])
+    if not combos:
+        print("::error::loadgen record has no combos")
+        return 1
+
+    print("### Loadgen capacity sweep (open-loop, stop-and-declare)")
+    print()
+    print("| mix | sites | sessions | max sustainable rps | declared by | stopped at rps |")
+    print("| --- | ---: | ---: | ---: | --- | ---: |")
+    declared = 0
+    for c in combos:
+        stopped = c.get("stopped_at_rps")
+        stopped_s = f"{stopped:.0f}" if stopped is not None else "—"
+        print(
+            f"| {c['mix']} | {c['sites']} | {c['sessions']} "
+            f"| {c['max_sustainable_rps']:.0f} | {c['declared_by']} | {stopped_s} |"
+        )
+        if c["declared_by"] in STOP_RULES:
+            declared += 1
+    print()
+    print(f"{declared}/{len(combos)} combo(s) declared capacity via a stop rule.")
+    if declared == 0:
+        print(
+            "::error::no loadgen combo tripped a stop rule — every ladder ran to "
+            "exhaustion, so no max sustainable rps was actually measured"
+        )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

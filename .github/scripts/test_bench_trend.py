@@ -1,0 +1,261 @@
+"""Unit tests for bench_trend.py — the CI perf gate itself.
+
+Run: python3 -m pytest .github/scripts/test_bench_trend.py -q
+(a blocking CI step; the gate is load-bearing enough to deserve tests).
+"""
+import json
+
+import pytest
+
+import bench_trend as bt
+
+
+def result(rps, transport="keepalive", persist="wal", fsync="group", metrics="on", **extra):
+    r = {
+        "transport": transport,
+        "persist": persist,
+        "fsync": fsync,
+        "metrics": metrics,
+        "reqs_per_s": rps,
+    }
+    r.update(extra)
+    return r
+
+
+# ---------------------------------------------------------------------------
+# peaks_by_combo: 4-axis key derivation + back-compat defaults
+# ---------------------------------------------------------------------------
+
+
+def test_peaks_key_is_four_axis():
+    doc = {"results": [result(100.0), result(250.0), result(90.0, metrics="off")]}
+    peaks = bt.peaks_by_combo(doc)
+    assert peaks == {
+        "keepalive/wal/group/on": 250.0,
+        "keepalive/wal/group/off": 90.0,
+    }
+
+
+def test_peaks_takes_max_per_combo():
+    doc = {"results": [result(100.0), result(70.0), result(130.0)]}
+    assert bt.peaks_by_combo(doc)["keepalive/wal/group/on"] == 130.0
+
+
+def test_back_compat_pre_transport_pre_persist_record():
+    # The oldest records carried only reqs_per_s: transport defaults to
+    # per-request, persist to ephemeral, fsync to none, metrics to on.
+    doc = {"results": [{"reqs_per_s": 42.0}]}
+    assert bt.peaks_by_combo(doc) == {"per-request/ephemeral/none/on": 42.0}
+
+
+def test_back_compat_pre_fsync_record_derives_from_persist():
+    # Records written before the fsync axis: wal legs measured
+    # flush-to-OS, ephemeral legs have nothing to sync.
+    doc = {
+        "results": [
+            {"transport": "keepalive", "persist": "wal", "reqs_per_s": 10.0},
+            {"transport": "keepalive", "persist": "ephemeral", "reqs_per_s": 20.0},
+        ]
+    }
+    peaks = bt.peaks_by_combo(doc)
+    assert peaks == {
+        "keepalive/wal/flush/on": 10.0,
+        "keepalive/ephemeral/none/on": 20.0,
+    }
+
+
+def test_back_compat_pre_metrics_record_defaults_on():
+    doc = {"results": [{"transport": "keepalive", "persist": "wal", "fsync": "group", "reqs_per_s": 5.0}]}
+    assert bt.peaks_by_combo(doc) == {"keepalive/wal/group/on": 5.0}
+
+
+def test_empty_results_raise():
+    with pytest.raises(ValueError):
+        bt.peaks_by_combo({"results": []})
+    with pytest.raises(ValueError):
+        bt.peaks_by_combo({})
+
+
+# ---------------------------------------------------------------------------
+# gate_throughput: regression-threshold math
+# ---------------------------------------------------------------------------
+
+
+def test_throughput_gate_passes_within_threshold():
+    base = {"a/b/c/on": 100.0}
+    assert bt.gate_throughput(base, {"a/b/c/on": 71.0}, max_drop=0.30) is False
+
+
+def test_throughput_gate_fails_past_threshold():
+    base = {"a/b/c/on": 100.0}
+    assert bt.gate_throughput(base, {"a/b/c/on": 69.0}, max_drop=0.30) is True
+
+
+def test_throughput_gate_boundary_is_strict():
+    # delta == -max_drop exactly does not fail (the gate is "< -max_drop").
+    base = {"a/b/c/on": 100.0}
+    assert bt.gate_throughput(base, {"a/b/c/on": 70.0}, max_drop=0.30) is False
+
+
+def test_throughput_new_and_missing_combos_not_gated():
+    base = {"old/leg/none/on": 100.0}
+    cur = {"new/leg/none/on": 1.0}
+    assert bt.gate_throughput(base, cur, max_drop=0.30) is False
+
+
+def test_throughput_zero_baseline_does_not_divide():
+    assert bt.gate_throughput({"a/b/c/on": 0.0}, {"a/b/c/on": 0.0}, max_drop=0.30) is False
+
+
+def test_throughput_improvement_passes():
+    base = {"a/b/c/on": 100.0}
+    assert bt.gate_throughput(base, {"a/b/c/on": 500.0}, max_drop=0.30) is False
+
+
+# ---------------------------------------------------------------------------
+# gate_metrics_overhead
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_overhead_within_gate_passes():
+    cur = {"keepalive/wal/group/off": 100.0, "keepalive/wal/group/on": 96.0}
+    assert bt.gate_metrics_overhead(cur, max_overhead=0.05) is False
+
+
+def test_metrics_overhead_past_gate_fails():
+    cur = {"keepalive/wal/group/off": 100.0, "keepalive/wal/group/on": 94.0}
+    assert bt.gate_metrics_overhead(cur, max_overhead=0.05) is True
+
+
+def test_metrics_overhead_no_pair_is_not_gated():
+    # Pre-metrics records have no /off leg: nothing to compare.
+    cur = {"keepalive/wal/group/on": 100.0}
+    assert bt.gate_metrics_overhead(cur, max_overhead=0.05) is False
+
+
+def test_metrics_overhead_faster_with_recording_passes():
+    cur = {"keepalive/wal/group/off": 100.0, "keepalive/wal/group/on": 104.0}
+    assert bt.gate_metrics_overhead(cur, max_overhead=0.05) is False
+
+
+# ---------------------------------------------------------------------------
+# loadgen axis: key derivation + gate
+# ---------------------------------------------------------------------------
+
+
+def combo(mix="sync", sites=1, sessions=2, rps=1000.0, declared_by="failure-rate"):
+    return {
+        "mix": mix,
+        "sites": sites,
+        "sessions": sessions,
+        "max_sustainable_rps": rps,
+        "declared_by": declared_by,
+        "stopped_at_rps": 4000.0,
+        "steps": [],
+    }
+
+
+def test_loadgen_combos_keying():
+    doc = {"loadgen": {"combos": [combo(), combo(mix="watch", sites=4, sessions=8, rps=2.5)]}}
+    assert bt.loadgen_combos(doc) == {"sync/s1/w2": 1000.0, "watch/s4/w8": 2.5}
+
+
+def test_loadgen_combos_absent_axis_is_empty():
+    assert bt.loadgen_combos({}) == {}
+    assert bt.loadgen_combos(None) == {}
+    assert bt.loadgen_combos({"loadgen": {}}) == {}
+
+
+def test_loadgen_combos_malformed_raise():
+    with pytest.raises(ValueError):
+        bt.loadgen_combos({"loadgen": {"combos": [{"mix": "sync"}]}})
+    with pytest.raises(ValueError):
+        bt.loadgen_combos({"loadgen": {"combos": [combo(declared_by="")]}})
+
+
+def test_loadgen_gate_within_threshold_passes():
+    # One quantization rung down (-75% on the 4x ladder) stays inside the
+    # 80% gate.
+    base = {"loadgen": {"combos": [combo(rps=1000.0)]}}
+    cur = {"loadgen": {"combos": [combo(rps=250.0)]}}
+    assert bt.gate_loadgen(base, cur) is False
+
+
+def test_loadgen_gate_past_threshold_fails():
+    base = {"loadgen": {"combos": [combo(rps=1000.0)]}}
+    cur = {"loadgen": {"combos": [combo(rps=150.0)]}}
+    assert bt.gate_loadgen(base, cur) is True
+
+
+def test_loadgen_gate_new_and_missing_combos_not_gated():
+    base = {"loadgen": {"combos": [combo(mix="submit")]}}
+    cur = {"loadgen": {"combos": [combo(mix="watch")]}}
+    assert bt.gate_loadgen(base, cur) is False
+
+
+def test_loadgen_gate_no_axis_not_gated():
+    assert bt.gate_loadgen({}, {}) is False
+    assert bt.gate_loadgen({"loadgen": {"combos": [combo()]}}, {}) is False
+
+
+def test_loadgen_gate_malformed_current_fails():
+    cur = {"loadgen": {"combos": [{"mix": "sync"}]}}
+    assert bt.gate_loadgen({}, cur) is True
+
+
+def test_loadgen_gate_malformed_baseline_tolerated():
+    base = {"loadgen": {"combos": [{"mix": "sync"}]}}
+    cur = {"loadgen": {"combos": [combo()]}}
+    assert bt.gate_loadgen(base, cur) is False
+
+
+# ---------------------------------------------------------------------------
+# main(): end-to-end over real files
+# ---------------------------------------------------------------------------
+
+
+def write_doc(path, results, propagation=None, loadgen=None):
+    doc = {"results": results}
+    if propagation:
+        doc["propagation"] = propagation
+    if loadgen:
+        doc["loadgen"] = loadgen
+    path.write_text(json.dumps(doc))
+
+
+GOOD_PROP = {"push_avg_ms": 1.0, "poll_avg_ms": 10.0, "push_p95_ms": 2.0, "poll_p95_ms": 12.0}
+
+
+def test_main_passes_on_healthy_run(tmp_path):
+    base, cur = tmp_path / "base.json", tmp_path / "cur.json"
+    write_doc(base, [result(100.0)], GOOD_PROP, {"combos": [combo(rps=1000.0)]})
+    write_doc(cur, [result(95.0)], GOOD_PROP, {"combos": [combo(rps=900.0)]})
+    assert bt.main(["bench_trend.py", str(base), str(cur)]) == 0
+
+
+def test_main_fails_on_throughput_regression(tmp_path):
+    base, cur = tmp_path / "base.json", tmp_path / "cur.json"
+    write_doc(base, [result(100.0)], GOOD_PROP)
+    write_doc(cur, [result(10.0)], GOOD_PROP)
+    assert bt.main(["bench_trend.py", str(base), str(cur)]) == 1
+
+
+def test_main_fails_on_loadgen_regression(tmp_path):
+    base, cur = tmp_path / "base.json", tmp_path / "cur.json"
+    write_doc(base, [result(100.0)], GOOD_PROP, {"combos": [combo(rps=10000.0)]})
+    write_doc(cur, [result(100.0)], GOOD_PROP, {"combos": [combo(rps=100.0)]})
+    assert bt.main(["bench_trend.py", str(base), str(cur)]) == 1
+
+
+def test_main_tolerates_missing_baseline(tmp_path):
+    cur = tmp_path / "cur.json"
+    write_doc(cur, [result(100.0)], GOOD_PROP, {"combos": [combo()]})
+    assert bt.main(["bench_trend.py", str(tmp_path / "nope.json"), str(cur)]) == 0
+
+
+def test_main_honors_max_drop_flag(tmp_path):
+    base, cur = tmp_path / "base.json", tmp_path / "cur.json"
+    write_doc(base, [result(100.0)], GOOD_PROP)
+    write_doc(cur, [result(60.0)], GOOD_PROP)
+    assert bt.main(["bench_trend.py", str(base), str(cur)]) == 1
+    assert bt.main(["bench_trend.py", str(base), str(cur), "--max-drop", "0.50"]) == 0

@@ -305,12 +305,11 @@ fn run_propagation(push: bool, iters: usize) -> PropResult {
         lat_ms.push(seen.duration_since(t0).as_secs_f64() * 1e3);
     }
     server.stop();
-    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let avg_ms = lat_ms.iter().sum::<f64>() / lat_ms.len() as f64;
-    // Nearest-rank p95: ceil(0.95 * n)-th smallest (1-based), so 20
-    // samples report the 19th value, not the maximum.
-    let rank = (lat_ms.len() as f64 * 0.95).ceil() as usize;
-    let p95_ms = lat_ms[rank.saturating_sub(1).min(lat_ms.len() - 1)];
+    // Nearest-rank p95 (ceil(0.95 * n)-th smallest, 1-based): 20 samples
+    // report the 19th value, not the maximum. Shared with the loadgen SLO
+    // verdicts so every p95 in the bench record means the same thing.
+    let p95_ms = balsam::util::stats::percentile_nearest_rank(&lat_ms, 95.0);
     PropResult { mode: if push { "push" } else { "poll" }, iters, avg_ms, p95_ms }
 }
 
@@ -394,6 +393,31 @@ fn main() {
     let push_vs_poll = poll.avg_ms / push.avg_ms.max(1e-9);
     println!("push-mode propagation speedup vs {PROP_POLL_MS}ms polling: {push_vs_poll:.1}x");
 
+    // Open-loop capacity axis: the `balsam loadgen` sweep (see
+    // src/loadgen/). Each combo ladders offered rps until a stop rule
+    // (failure rate / median latency) trips and declares the max
+    // sustainable rps — bench_trend.py gates that number per combo.
+    println!("== loadgen: open-loop capacity sweep ==");
+    let mut lg_cfg = balsam::loadgen::LoadgenConfig::quick();
+    if !quick {
+        // Full runs afford longer rungs and a second site count; the
+        // ladder shape stays the quick one so the stop rule still trips.
+        lg_cfg.step_secs = 1.5;
+        lg_cfg.sites_list = vec![1, 4];
+        lg_cfg.sessions_list = vec![4];
+    }
+    let loadgen_report = balsam::loadgen::run(&lg_cfg).expect("loadgen sweep");
+    for c in &loadgen_report.combos {
+        println!(
+            "loadgen mix={:>6} sites={} sessions={}: max sustainable {:>8.0} rps ({})",
+            c.mix.label(),
+            c.sites,
+            c.sessions,
+            c.max_sustainable_rps,
+            c.declared_by
+        );
+    }
+
     let out = Json::obj(vec![
         ("bench", Json::str("service_throughput")),
         ("quick", Json::Bool(quick)),
@@ -436,6 +460,7 @@ fn main() {
             ]),
         ),
         ("push_vs_poll_stagein", Json::num(push_vs_poll)),
+        ("loadgen", loadgen_report.to_json()),
     ]);
     let path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_service.json".to_string());
     std::fs::write(&path, out.to_string()).expect("write bench record");

@@ -29,6 +29,7 @@
 pub mod util;
 pub mod sim;
 pub mod service;
+pub mod loadgen;
 pub mod substrates;
 pub mod site;
 pub mod client;

@@ -1,0 +1,349 @@
+//! Payload mixes: what each open-loop tick actually sends.
+//!
+//! A mix shapes the request stream after one of the traffic patterns the
+//! paper's deployment sees, so "max sustainable rps" is declared per
+//! workload rather than for one synthetic endpoint:
+//!
+//! - **submit-heavy** — the light-source edge during a burst: mostly
+//!   `BulkCreateJobs`, with the monitoring reads (`CountByState`,
+//!   `ListJobs`) an experiment dashboard issues alongside.
+//! - **sync-heavy** — launcher steady state: the acquire → run →
+//!   `SessionSync` lifecycle loop that dominates interior traffic at the
+//!   compute sites.
+//! - **watch-heavy** — subscriber steady state: `WatchEvents` cursor
+//!   probes and `ListEvents` pages over a trickle of job creations that
+//!   keeps events flowing.
+//!
+//! Each sender thread owns one [`MixDriver`]: a small state machine that
+//! emits the next request for its tick, watches responses to learn ids
+//! (acquired jobs, event cursors), and resets itself on errors so one
+//! rejected transition doesn't wedge the stream.
+
+use crate::service::{ApiRequest, ApiResponse, JobCreate, JobFilter, JobState, SessionId, SiteId};
+use crate::util::rng::Pcg;
+
+/// Which traffic pattern a sweep combo offers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mix {
+    /// Light-source burst: job creation dominates.
+    SubmitHeavy,
+    /// Launcher lifecycle loop: acquire/update/sync dominates.
+    SyncHeavy,
+    /// Event subscribers: watch/list dominates.
+    WatchHeavy,
+}
+
+impl Mix {
+    /// Every mix, sweep order.
+    pub fn all() -> [Mix; 3] {
+        [Mix::SubmitHeavy, Mix::SyncHeavy, Mix::WatchHeavy]
+    }
+
+    /// Parse a CLI/env spelling.
+    pub fn parse(s: &str) -> Option<Mix> {
+        match s.trim() {
+            "submit" | "submit-heavy" => Some(Mix::SubmitHeavy),
+            "sync" | "sync-heavy" => Some(Mix::SyncHeavy),
+            "watch" | "watch-heavy" => Some(Mix::WatchHeavy),
+            _ => None,
+        }
+    }
+
+    /// Stable label used in reports, JSON, and trend-gate keys.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Mix::SubmitHeavy => "submit",
+            Mix::SyncHeavy => "sync",
+            Mix::WatchHeavy => "watch",
+        }
+    }
+
+    /// The `endpoint` label values whose server-side
+    /// `balsam_api_request_seconds` histograms make up this mix's
+    /// latency SLO. `WatchEvents` is deliberately absent everywhere: its
+    /// histogram includes intentional long-poll park time, which would
+    /// read as latency when it is the feature working as designed (the
+    /// drivers only send non-blocking probes, but excluding the family
+    /// keeps the verdict robust if other subscribers share the process).
+    pub fn latency_endpoints(&self) -> &'static [&'static str] {
+        match self {
+            Mix::SubmitHeavy => &["BulkCreateJobs", "CountByState", "ListJobs"],
+            Mix::SyncHeavy => {
+                &["BulkCreateJobs", "SessionAcquire", "BulkUpdateJobState", "SessionSync"]
+            }
+            Mix::WatchHeavy => &["ListEvents", "BulkCreateJobs"],
+        }
+    }
+}
+
+/// Sync-heavy lifecycle position (see [`MixDriver::next_request`]).
+#[derive(Debug, Clone, PartialEq)]
+enum SyncPhase {
+    /// Feed the queue with runnable jobs.
+    Create,
+    /// Lease runnable jobs into the session.
+    Acquire,
+    /// Move the acquired batch to Running.
+    Run(Vec<crate::service::JobId>),
+    /// Report run completion + postprocess in one SessionSync.
+    Sync(Vec<crate::service::JobId>),
+}
+
+/// Per-sender request synthesizer for one mix.
+#[derive(Debug)]
+pub struct MixDriver {
+    mix: Mix,
+    /// Site this sender's traffic targets.
+    site: SiteId,
+    /// Launcher lease (sync-heavy only; created during setup).
+    session: SessionId,
+    /// Registered app name jobs are created against.
+    app: String,
+    phase: SyncPhase,
+    /// Event cursor for watch-heavy pagers.
+    since: usize,
+}
+
+/// How many jobs one `BulkCreateJobs` tick carries. Small on purpose:
+/// the open-loop rate is in *requests*, and each job leaves rows and
+/// events behind, so a long sweep step must not balloon memory.
+const CREATE_BATCH: usize = 2;
+
+impl MixDriver {
+    /// A driver for `mix`, sending against `site` with lease `session`
+    /// (pass any session id for mixes that never use it) and app `app`.
+    pub fn new(mix: Mix, site: SiteId, session: SessionId, app: &str) -> MixDriver {
+        MixDriver { mix, site, session, app: app.to_string(), phase: SyncPhase::Create, since: 0 }
+    }
+
+    fn create_jobs(&self, n: usize) -> ApiRequest {
+        let jobs =
+            (0..n).map(|_| JobCreate::simple(self.site, &self.app, "loadgen")).collect::<Vec<_>>();
+        ApiRequest::BulkCreateJobs { jobs }
+    }
+
+    /// The request this sender's next tick fires. `g` drives the
+    /// probabilistic parts of the mix; the lifecycle parts are
+    /// deterministic from response history.
+    pub fn next_request(&mut self, g: &mut Pcg) -> ApiRequest {
+        match self.mix {
+            Mix::SubmitHeavy => {
+                let roll = g.f64();
+                if roll < 0.8 {
+                    self.create_jobs(CREATE_BATCH)
+                } else if roll < 0.9 {
+                    ApiRequest::CountByState { site: self.site }
+                } else {
+                    ApiRequest::ListJobs {
+                        filter: JobFilter { site: Some(self.site), limit: 32, ..JobFilter::default() },
+                    }
+                }
+            }
+            Mix::SyncHeavy => match &self.phase {
+                SyncPhase::Create => self.create_jobs(CREATE_BATCH * 2),
+                SyncPhase::Acquire => ApiRequest::SessionAcquire {
+                    session: self.session,
+                    max_nodes: 8,
+                    max_jobs: CREATE_BATCH * 2,
+                },
+                SyncPhase::Run(jobs) => ApiRequest::BulkUpdateJobState {
+                    jobs: jobs.clone(),
+                    to: JobState::Running,
+                    data: String::new(),
+                },
+                SyncPhase::Sync(jobs) => ApiRequest::SessionSync {
+                    session: self.session,
+                    updates: jobs
+                        .iter()
+                        .flat_map(|&j| {
+                            [
+                                (j, JobState::RunDone, String::new()),
+                                (j, JobState::Postprocessed, String::new()),
+                            ]
+                        })
+                        .collect(),
+                },
+            },
+            Mix::WatchHeavy => {
+                let roll = g.f64();
+                if roll < 0.6 {
+                    // Non-blocking probe: timeout 0 never parks a worker,
+                    // so the offered rate stays honest.
+                    ApiRequest::WatchEvents { site: Some(self.site), since: self.since, timeout_ms: 0 }
+                } else if roll < 0.8 {
+                    ApiRequest::ListEvents { since: self.since }
+                } else {
+                    self.create_jobs(1)
+                }
+            }
+        }
+    }
+
+    /// Learn from a successful response: advance the sync lifecycle and
+    /// the event cursor.
+    pub fn observe(&mut self, req_was_acquire_or_events: &ApiRequest, resp: &ApiResponse) {
+        match (req_was_acquire_or_events, resp) {
+            (ApiRequest::BulkCreateJobs { .. }, _) if self.mix == Mix::SyncHeavy => {
+                self.phase = SyncPhase::Acquire;
+            }
+            (ApiRequest::SessionAcquire { .. }, ApiResponse::Jobs(jobs)) => {
+                if jobs.is_empty() {
+                    // Queue drained (another sender took them): refill.
+                    self.phase = SyncPhase::Create;
+                } else {
+                    self.phase = SyncPhase::Run(jobs.iter().map(|j| j.id).collect());
+                }
+            }
+            (ApiRequest::BulkUpdateJobState { jobs, .. }, _) => {
+                self.phase = SyncPhase::Sync(jobs.clone());
+            }
+            (ApiRequest::SessionSync { .. }, _) => {
+                self.phase = SyncPhase::Create;
+            }
+            (
+                ApiRequest::WatchEvents { .. } | ApiRequest::ListEvents { .. },
+                ApiResponse::Events(page),
+            ) => {
+                if let Some(last) = page.events.last() {
+                    self.since = (last.seq + 1) as usize;
+                } else if let Some(t) = page.truncated_before {
+                    self.since = self.since.max(t as usize);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// A request failed (transport or 4xx/5xx): restart the lifecycle
+    /// from a safe state so the stream keeps flowing.
+    pub fn on_error(&mut self) {
+        self.phase = SyncPhase::Create;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::{ApiConn, ServiceCore};
+
+    /// In-process conn: drives the mix machines against a real core.
+    struct Direct {
+        svc: ServiceCore,
+        token: String,
+        now: f64,
+    }
+
+    impl Direct {
+        fn call(&mut self, req: ApiRequest) -> Result<ApiResponse, crate::service::ApiError> {
+            self.now += 0.01;
+            self.svc.handle(self.now, &self.token, req)
+        }
+    }
+
+    fn setup() -> (Direct, SiteId, SessionId) {
+        let svc = ServiceCore::new(b"loadgen-test");
+        let token = svc.admin_token();
+        let mut d = Direct { svc, token, now: 0.0 };
+        let site = d
+            .call(ApiRequest::CreateSite {
+                name: "mixsite".into(),
+                hostname: "h".into(),
+                path: "/p".into(),
+            })
+            .unwrap()
+            .site_id();
+        d.call(ApiRequest::RegisterApp {
+            site,
+            name: "loadapp".into(),
+            command_template: "echo {x}".into(),
+            parameters: vec!["x".into()],
+        })
+        .unwrap();
+        let session =
+            d.call(ApiRequest::CreateSession { site, batch_job: None }).unwrap().session_id();
+        (d, site, session)
+    }
+
+    #[test]
+    fn parse_and_labels_roundtrip() {
+        for mix in Mix::all() {
+            assert_eq!(Mix::parse(mix.label()), Some(mix));
+            assert_eq!(Mix::parse(&format!("{}-heavy", mix.label())), Some(mix));
+        }
+        assert_eq!(Mix::parse("nope"), None);
+    }
+
+    #[test]
+    fn latency_endpoints_are_registered_and_exclude_watch() {
+        for mix in Mix::all() {
+            for ep in mix.latency_endpoints() {
+                assert!(
+                    crate::util::metrics::ENDPOINTS.contains(ep),
+                    "{ep} not a registered endpoint label"
+                );
+                assert_ne!(*ep, "WatchEvents", "park time must not enter the latency SLO");
+            }
+        }
+    }
+
+    /// The sync-heavy machine walks its whole lifecycle against a real
+    /// core without ever sending an illegal transition.
+    #[test]
+    fn sync_mix_lifecycle_round_trips() {
+        let (mut d, site, session) = setup();
+        let mut drv = MixDriver::new(Mix::SyncHeavy, site, session, "loadapp");
+        let mut g = Pcg::seeded(7);
+        let mut synced = 0;
+        for _ in 0..40 {
+            let req = drv.next_request(&mut g);
+            if matches!(req, ApiRequest::SessionSync { .. }) {
+                synced += 1;
+            }
+            match d.call(req.clone()) {
+                Ok(resp) => {
+                    if let ApiResponse::JobIds(rejected) = &resp {
+                        if matches!(req, ApiRequest::SessionSync { .. }) {
+                            assert!(rejected.is_empty(), "sync rejected: {rejected:?}");
+                        }
+                    }
+                    drv.observe(&req, &resp);
+                }
+                Err(e) => panic!("sync mix sent an illegal request {req:?}: {e:?}"),
+            }
+        }
+        assert!(synced >= 2, "lifecycle never reached SessionSync");
+    }
+
+    /// Submit- and watch-heavy streams run clean against a real core and
+    /// the watch cursor actually advances.
+    #[test]
+    fn submit_and_watch_mixes_run_clean() {
+        let (mut d, site, session) = setup();
+        for mix in [Mix::SubmitHeavy, Mix::WatchHeavy] {
+            let mut drv = MixDriver::new(mix, site, session, "loadapp");
+            let mut g = Pcg::seeded(11);
+            for _ in 0..60 {
+                let req = drv.next_request(&mut g);
+                let resp = d.call(req.clone()).unwrap_or_else(|e| {
+                    panic!("{} mix sent an illegal request {req:?}: {e:?}", mix.label())
+                });
+                drv.observe(&req, &resp);
+            }
+            if mix == Mix::WatchHeavy {
+                assert!(drv.since > 0, "watch cursor never advanced");
+            }
+        }
+    }
+
+    /// Errors reset the lifecycle to Create rather than wedging.
+    #[test]
+    fn on_error_resets_lifecycle() {
+        let (_, site, session) = setup();
+        let mut drv = MixDriver::new(Mix::SyncHeavy, site, session, "loadapp");
+        drv.phase = SyncPhase::Run(vec![]);
+        drv.on_error();
+        assert_eq!(drv.phase, SyncPhase::Create);
+        let mut g = Pcg::seeded(3);
+        assert!(matches!(drv.next_request(&mut g), ApiRequest::BulkCreateJobs { .. }));
+    }
+}

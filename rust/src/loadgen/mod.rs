@@ -1,0 +1,678 @@
+//! `balsam loadgen` — open-loop load harness with SLO stop rules.
+//!
+//! The benches measure closed-loop req/s (each worker fires its next
+//! request when the previous one answers), which systematically hides
+//! queueing delay: a slow server slows the *offered* load down, so the
+//! measured latency stays flattering ("coordinated omission"). This
+//! module is the paper-grade instrument instead: an **open-loop** driver
+//! fires requests on a fixed-rate schedule regardless of completion
+//! ([`schedule::OpenLoopPlan`]), sweeps a geometric ladder of target rps
+//! across combos of payload mix × sites × launcher sessions
+//! ([`mix::Mix`]), and reads the resulting latency distributions from the
+//! service's own `/metrics` endpoint
+//! (`balsam_api_request_seconds{endpoint=...}`,
+//! `balsam_wal_fsync_seconds`) via the [`prom`] scraper — the same
+//! histograms production alerting consumes.
+//!
+//! Each ladder rung records offered vs achieved rps, failure rate, and
+//! server-side p50/p95/p99; a **stop-and-declare** rule — failure rate or
+//! median latency over threshold, after the IC scalability harness's
+//! `STOP_FAILURE_RATE` / `ALLOWABLE_LATENCY` — halts the ladder and
+//! declares the max sustainable rps (the best rung that passed). Results
+//! land under the `loadgen` axis of `BENCH_service.json` so
+//! `.github/scripts/bench_trend.py` gates capacity regressions cross-run,
+//! and `balsam loadgen` prints one `DECLARE` line per combo for humans.
+
+pub mod mix;
+pub mod prom;
+pub mod schedule;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::service::{
+    http_gw, ApiConn, ApiRequest, FsyncPolicy, PersistMode, ServiceCore, SessionId, SiteId,
+};
+use crate::util::httpd;
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+use mix::{Mix, MixDriver};
+use prom::{Hist, Scrape};
+use schedule::OpenLoopPlan;
+
+/// App name the harness registers at every site it creates.
+const LOADGEN_APP: &str = "loadgen-app";
+
+/// What to sweep and when to stop.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Attach to a running service: `(addr, bearer token)`. `None`
+    /// self-hosts a fresh in-process service per combo (hermetic: every
+    /// combo starts from an empty store).
+    pub target: Option<(String, String)>,
+    /// Payload mixes to sweep.
+    pub mixes: Vec<Mix>,
+    /// Site counts to sweep.
+    pub sites_list: Vec<usize>,
+    /// Sender (launcher-session) counts to sweep. Each sender is one
+    /// thread with one keep-alive connection and its own session.
+    pub sessions_list: Vec<usize>,
+    /// First ladder rung, requests/second.
+    pub rps_start: f64,
+    /// Geometric ladder step factor (> 1).
+    pub rps_factor: f64,
+    /// Max ladder rungs per combo.
+    pub rps_steps: usize,
+    /// Seconds each rung offers load for.
+    pub step_secs: f64,
+    /// Stop rule: halt the ladder when `(errors + skipped) / planned`
+    /// exceeds this (the IC harness's `STOP_FAILURE_RATE`).
+    pub stop_failure_rate: f64,
+    /// Stop rule: halt when server-side median latency exceeds this many
+    /// milliseconds (the IC harness's median-latency stop).
+    pub stop_median_ms: f64,
+    /// A sender this far behind schedule *skips* overdue ticks (counted
+    /// as failures) instead of firing a burst of stale requests.
+    pub max_lag_s: f64,
+    /// Gateway worker threads when self-hosting.
+    pub workers: usize,
+    /// Self-host with WAL persistence under this dir (per-combo subdirs)
+    /// instead of ephemeral — exercises `balsam_wal_fsync_seconds`.
+    pub wal: Option<(PathBuf, FsyncPolicy)>,
+    /// PRNG seed for the probabilistic mix choices.
+    pub seed: u64,
+    /// Print per-rung and DECLARE lines to stderr.
+    pub log: bool,
+}
+
+impl Default for LoadgenConfig {
+    /// The full capacity sweep: 12 combos, ladder 100 → ~51k rps.
+    fn default() -> LoadgenConfig {
+        LoadgenConfig {
+            target: None,
+            mixes: Mix::all().to_vec(),
+            sites_list: vec![1, 4],
+            sessions_list: vec![2, 8],
+            rps_start: 100.0,
+            rps_factor: 2.0,
+            rps_steps: 10,
+            step_secs: 3.0,
+            stop_failure_rate: 0.4,
+            stop_median_ms: 300.0,
+            max_lag_s: 0.25,
+            workers: httpd::default_workers(),
+            wal: None,
+            seed: 0x10adCE4,
+            log: true,
+        }
+    }
+}
+
+impl LoadgenConfig {
+    /// CI smoke sweep: 3 combos, short rungs, a ladder steep enough
+    /// (×4 up to ~13M rps) that the stop rule is guaranteed to fire on
+    /// any real machine — the declare path runs on every PR.
+    pub fn quick() -> LoadgenConfig {
+        LoadgenConfig {
+            sites_list: vec![1],
+            sessions_list: vec![2],
+            rps_start: 200.0,
+            rps_factor: 4.0,
+            rps_steps: 9,
+            step_secs: 0.5,
+            ..LoadgenConfig::default()
+        }
+    }
+}
+
+/// One ladder rung's measurements.
+#[derive(Debug, Clone)]
+pub struct StepReport {
+    /// Target rate this rung offered.
+    pub offered_rps: f64,
+    /// Ticks the open-loop schedule defined.
+    pub planned: u64,
+    /// Requests actually sent (`ok + errors`).
+    pub issued: u64,
+    /// Requests answered successfully.
+    pub ok: u64,
+    /// Requests answered with an error (transport or 4xx/5xx).
+    pub errors: u64,
+    /// Overdue ticks dropped by senders that fell behind schedule.
+    pub skipped: u64,
+    /// Wall time the rung took.
+    pub elapsed_s: f64,
+    /// `ok / elapsed_s`.
+    pub achieved_rps: f64,
+    /// `(errors + skipped) / planned` — skipped ticks are load the
+    /// system failed to absorb, not a reprieve.
+    pub failure_rate: f64,
+    /// Server-side latency quantiles over the mix's SLO endpoints
+    /// (scrape delta), milliseconds. `None` when no observation landed.
+    pub p50_ms: Option<f64>,
+    /// 95th percentile, ms.
+    pub p95_ms: Option<f64>,
+    /// 99th percentile, ms.
+    pub p99_ms: Option<f64>,
+    /// WAL fsync p95 over the rung, ms (`None` when not persisting).
+    pub fsync_p95_ms: Option<f64>,
+}
+
+/// One (mix, sites, sessions) combo: its ladder and verdict.
+#[derive(Debug, Clone)]
+pub struct ComboReport {
+    /// Payload mix offered.
+    pub mix: Mix,
+    /// Sites traffic was spread over.
+    pub sites: usize,
+    /// Concurrent senders.
+    pub sessions: usize,
+    /// Ladder rungs actually run (stops at the first rule trip).
+    pub steps: Vec<StepReport>,
+    /// Best achieved rps among rungs that passed the stop rules; 0 when
+    /// the very first rung failed.
+    pub max_sustainable_rps: f64,
+    /// `"failure-rate"`, `"median-latency"`, or `"ladder-exhausted"`
+    /// (every rung passed — the declared max is a lower bound).
+    pub declared_by: &'static str,
+    /// The offered rate of the rung that tripped the rule, if any.
+    pub stopped_at_rps: Option<f64>,
+}
+
+/// A full sweep.
+#[derive(Debug, Clone, Default)]
+pub struct LoadgenReport {
+    /// One entry per combo, sweep order.
+    pub combos: Vec<ComboReport>,
+}
+
+/// Which stop rule (if any) a rung trips. The declare decision is pure
+/// so the SLO math is unit-testable without a server.
+pub fn stop_reason(cfg: &LoadgenConfig, step: &StepReport) -> Option<&'static str> {
+    if step.failure_rate > cfg.stop_failure_rate {
+        Some("failure-rate")
+    } else if step.p50_ms.is_some_and(|p| p > cfg.stop_median_ms) {
+        Some("median-latency")
+    } else {
+        None
+    }
+}
+
+/// Run the configured sweep. Combos run sequentially (they share the
+/// machine — parallel combos would measure each other).
+pub fn run(cfg: &LoadgenConfig) -> crate::Result<LoadgenReport> {
+    let mut combos = Vec::new();
+    for &sites in &cfg.sites_list {
+        for &sessions in &cfg.sessions_list {
+            for &m in &cfg.mixes {
+                combos.push(run_combo(cfg, m, sites, sessions, combos.len() as u64)?);
+            }
+        }
+    }
+    Ok(LoadgenReport { combos })
+}
+
+/// The service a combo drives: either a fresh self-hosted one (with its
+/// gateway handle, stopped after the combo) or an external attach.
+struct Target {
+    addr: String,
+    token: String,
+    server: Option<httpd::Server>,
+}
+
+fn open_target(cfg: &LoadgenConfig, combo_idx: u64) -> crate::Result<Target> {
+    if let Some((addr, token)) = &cfg.target {
+        return Ok(Target { addr: addr.clone(), token: token.clone(), server: None });
+    }
+    let secret = format!("loadgen-secret-{}-{combo_idx}", cfg.seed);
+    let mode = match &cfg.wal {
+        None => PersistMode::Ephemeral,
+        Some((dir, fsync)) => {
+            let mut m = PersistMode::wal(dir.join(format!("combo-{combo_idx}")));
+            if let PersistMode::Wal { fsync: f, .. } = &mut m {
+                *f = *fsync;
+            }
+            m
+        }
+    };
+    let svc = Arc::new(ServiceCore::with_persist(secret.as_bytes(), mode)?);
+    let token = svc.admin_token();
+    let server = http_gw::serve_with(
+        svc,
+        "127.0.0.1:0",
+        cfg.workers,
+        httpd::HttpConfig::default(),
+    )?;
+    Ok(Target { addr: server.addr.clone(), token, server: Some(server) })
+}
+
+fn run_combo(
+    cfg: &LoadgenConfig,
+    m: Mix,
+    sites: usize,
+    sessions: usize,
+    combo_idx: u64,
+) -> crate::Result<ComboReport> {
+    let target = open_target(cfg, combo_idx)?;
+    let sites = sites.max(1);
+    let sessions = sessions.max(1);
+
+    // Topology setup (not measured: it precedes the baseline scrape).
+    let mut admin = http_gw::HttpConn::new(target.addr.clone());
+    let mut site_ids: Vec<SiteId> = Vec::with_capacity(sites);
+    for i in 0..sites {
+        let site = admin
+            .api(
+                &target.token,
+                ApiRequest::CreateSite {
+                    name: format!("loadgen-{combo_idx}-{i}"),
+                    hostname: "loadgen".into(),
+                    path: format!("/loadgen/{combo_idx}/{i}"),
+                },
+            )
+            .map_err(|e| crate::util::error::err_msg(format!("loadgen setup: CreateSite: {e}")))?
+            .site_id();
+        admin
+            .api(
+                &target.token,
+                ApiRequest::RegisterApp {
+                    site,
+                    name: LOADGEN_APP.into(),
+                    command_template: "echo {n}".into(),
+                    parameters: vec!["n".into()],
+                },
+            )
+            .map_err(|e| crate::util::error::err_msg(format!("loadgen setup: RegisterApp: {e}")))?;
+        site_ids.push(site);
+    }
+    let mut sender_sessions: Vec<(SiteId, SessionId)> = Vec::with_capacity(sessions);
+    for s in 0..sessions {
+        let site = site_ids[s % site_ids.len()];
+        let sid = admin
+            .api(&target.token, ApiRequest::CreateSession { site, batch_job: None })
+            .map_err(|e| crate::util::error::err_msg(format!("loadgen setup: CreateSession: {e}")))?
+            .session_id();
+        sender_sessions.push((site, sid));
+    }
+
+    let mut steps: Vec<StepReport> = Vec::new();
+    let mut max_sustainable = 0.0f64;
+    let mut declared_by: &'static str = "ladder-exhausted";
+    let mut stopped_at: Option<f64> = None;
+    let mut offered = cfg.rps_start;
+    for rung in 0..cfg.rps_steps {
+        let plan = OpenLoopPlan { rps: offered, senders: sessions, duration_s: cfg.step_secs };
+        let step = run_step(cfg, m, &target, &sender_sessions, plan, combo_idx, rung as u64)?;
+        if cfg.log {
+            eprintln!(
+                "loadgen mix={} sites={} sessions={}: offered {:.0} rps -> achieved {:.0} rps, \
+                 failures {:.1}% ({} err, {} skipped of {}), p50 {} p95 {} p99 {} ms",
+                m.label(),
+                sites,
+                sessions,
+                step.offered_rps,
+                step.achieved_rps,
+                step.failure_rate * 100.0,
+                step.errors,
+                step.skipped,
+                step.planned,
+                fmt_ms(step.p50_ms),
+                fmt_ms(step.p95_ms),
+                fmt_ms(step.p99_ms),
+            );
+        }
+        let reason = stop_reason(cfg, &step);
+        let failure_rate = step.failure_rate;
+        let p50 = step.p50_ms;
+        steps.push(step);
+        if let Some(r) = reason {
+            declared_by = r;
+            stopped_at = Some(offered);
+            if cfg.log {
+                let detail = match r {
+                    "failure-rate" => format!(
+                        "failure rate {:.1}% > {:.1}%",
+                        failure_rate * 100.0,
+                        cfg.stop_failure_rate * 100.0
+                    ),
+                    _ => format!(
+                        "median latency {} ms > {:.0} ms",
+                        fmt_ms(p50),
+                        cfg.stop_median_ms
+                    ),
+                };
+                eprintln!(
+                    "DECLARE loadgen mix={} sites={} sessions={}: max sustainable {:.0} rps \
+                     (stop rule: {detail} at offered {:.0} rps)",
+                    m.label(),
+                    sites,
+                    sessions,
+                    max_sustainable,
+                    offered,
+                );
+            }
+            break;
+        }
+        max_sustainable = max_sustainable.max(steps.last().map_or(0.0, |s| s.achieved_rps));
+        offered *= cfg.rps_factor;
+    }
+    if declared_by == "ladder-exhausted" && cfg.log {
+        eprintln!(
+            "DECLARE loadgen mix={} sites={} sessions={}: max sustainable {:.0} rps \
+             (ladder exhausted at offered {:.0} rps — a lower bound)",
+            m.label(),
+            sites,
+            sessions,
+            max_sustainable,
+            offered / cfg.rps_factor,
+        );
+    }
+
+    if let Some(server) = target.server {
+        server.stop();
+    }
+    Ok(ComboReport {
+        mix: m,
+        sites,
+        sessions,
+        steps,
+        max_sustainable_rps: max_sustainable,
+        declared_by,
+        stopped_at_rps: stopped_at,
+    })
+}
+
+/// Per-sender tallies for one rung.
+#[derive(Debug, Default, Clone, Copy)]
+struct SenderStats {
+    ok: u64,
+    errors: u64,
+    skipped: u64,
+}
+
+fn run_step(
+    cfg: &LoadgenConfig,
+    m: Mix,
+    target: &Target,
+    sender_sessions: &[(SiteId, SessionId)],
+    plan: OpenLoopPlan,
+    combo_idx: u64,
+    rung: u64,
+) -> crate::Result<StepReport> {
+    let before = scrape(&target.addr)?;
+    let start = Instant::now();
+    let stats: Vec<SenderStats> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..plan.senders)
+            .map(|s| {
+                let (site, session) = sender_sessions[s];
+                let mut driver = MixDriver::new(m, site, session, LOADGEN_APP);
+                let mut g = Pcg::new(cfg.seed ^ rung.wrapping_mul(0x9e37), combo_idx * 64 + s as u64);
+                let mut conn = http_gw::HttpConn::new(target.addr.clone());
+                let token = target.token.clone();
+                let max_lag = Duration::from_secs_f64(cfg.max_lag_s);
+                scope.spawn(move || {
+                    let mut st = SenderStats::default();
+                    for tick in plan.sender_ticks(s) {
+                        let deadline = plan.deadline(tick);
+                        let now = start.elapsed();
+                        if now < deadline {
+                            std::thread::sleep(deadline - now);
+                        } else if now - deadline > max_lag {
+                            // Open-loop discipline: never fire a burst of
+                            // stale requests to catch up — drop the tick
+                            // and let it count against the failure rate.
+                            st.skipped += 1;
+                            continue;
+                        }
+                        let req = driver.next_request(&mut g);
+                        match conn.api(&token, req.clone()) {
+                            Ok(resp) => {
+                                st.ok += 1;
+                                driver.observe(&req, &resp);
+                            }
+                            Err(_) => {
+                                st.errors += 1;
+                                driver.on_error();
+                            }
+                        }
+                    }
+                    st
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap_or_default()).collect()
+    });
+    let elapsed_s = start.elapsed().as_secs_f64().max(1e-9);
+    let after = scrape(&target.addr)?;
+
+    let planned = plan.planned_ticks();
+    let (ok, errors, skipped) = stats.iter().fold((0, 0, 0), |(o, e, k), s| {
+        (o + s.ok, e + s.errors, k + s.skipped)
+    });
+    let (p50_ms, p95_ms, p99_ms) = latency_quantiles_ms(m, &before, &after);
+    let fsync_p95_ms = fsync_p95_ms(&before, &after);
+    Ok(StepReport {
+        offered_rps: plan.rps,
+        planned,
+        issued: ok + errors,
+        ok,
+        errors,
+        skipped,
+        elapsed_s,
+        achieved_rps: ok as f64 / elapsed_s,
+        failure_rate: if planned == 0 { 0.0 } else { (errors + skipped) as f64 / planned as f64 },
+        p50_ms,
+        p95_ms,
+        p99_ms,
+        fsync_p95_ms,
+    })
+}
+
+/// One `/metrics` scrape, parsed.
+fn scrape(addr: &str) -> crate::Result<Scrape> {
+    let (status, body) = httpd::request(addr, "GET", "/metrics", &[], &[])?;
+    crate::ensure!(status == 200, "GET /metrics returned {status}");
+    let text = String::from_utf8(body)
+        .map_err(|e| crate::util::error::err_msg(format!("/metrics not UTF-8: {e}")))?;
+    Scrape::parse(&text).map_err(crate::util::error::err_msg)
+}
+
+/// Merge the scrape-delta latency histograms of the mix's SLO endpoints
+/// and report (p50, p95, p99) in milliseconds.
+fn latency_quantiles_ms(
+    m: Mix,
+    before: &Scrape,
+    after: &Scrape,
+) -> (Option<f64>, Option<f64>, Option<f64>) {
+    let mut acc = Hist::default();
+    for ep in m.latency_endpoints() {
+        let Some(a) = after.histogram("balsam_api_request_seconds", &[("endpoint", ep)]) else {
+            continue;
+        };
+        let d = match before.histogram("balsam_api_request_seconds", &[("endpoint", ep)]) {
+            // Counter reset (shouldn't happen within a run) falls back to
+            // the absolute histogram rather than reporting nothing.
+            Some(b) => a.delta(&b).unwrap_or(a),
+            None => a,
+        };
+        acc.merge(&d);
+    }
+    let q = |p: f64| acc.quantile(p).map(|s| s * 1000.0);
+    (q(0.50), q(0.95), q(0.99))
+}
+
+/// WAL fsync p95 over the rung, ms; `None` when nothing synced.
+fn fsync_p95_ms(before: &Scrape, after: &Scrape) -> Option<f64> {
+    let a = after.histogram("balsam_wal_fsync_seconds", &[])?;
+    let d = match before.histogram("balsam_wal_fsync_seconds", &[]) {
+        Some(b) => a.delta(&b).unwrap_or(a),
+        None => a,
+    };
+    if d.is_empty() {
+        return None;
+    }
+    d.quantile(0.95).map(|s| s * 1000.0)
+}
+
+fn fmt_ms(v: Option<f64>) -> String {
+    match v {
+        Some(v) => format!("{v:.2}"),
+        None => "-".to_string(),
+    }
+}
+
+fn opt_num(v: Option<f64>) -> Json {
+    match v {
+        Some(v) => Json::num(v),
+        None => Json::Null,
+    }
+}
+
+impl StepReport {
+    /// JSON record for one rung (the `steps` array of the report).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("offered_rps", Json::num(self.offered_rps)),
+            ("planned", Json::num(self.planned as f64)),
+            ("issued", Json::num(self.issued as f64)),
+            ("ok", Json::num(self.ok as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("skipped", Json::num(self.skipped as f64)),
+            ("elapsed_s", Json::num(self.elapsed_s)),
+            ("achieved_rps", Json::num(self.achieved_rps)),
+            ("failure_rate", Json::num(self.failure_rate)),
+            ("p50_ms", opt_num(self.p50_ms)),
+            ("p95_ms", opt_num(self.p95_ms)),
+            ("p99_ms", opt_num(self.p99_ms)),
+            ("fsync_p95_ms", opt_num(self.fsync_p95_ms)),
+        ])
+    }
+}
+
+impl ComboReport {
+    /// JSON record for one combo (an entry of `loadgen.combos`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mix", Json::str(self.mix.label())),
+            ("sites", Json::num(self.sites as f64)),
+            ("sessions", Json::num(self.sessions as f64)),
+            ("max_sustainable_rps", Json::num(self.max_sustainable_rps)),
+            ("declared_by", Json::str(self.declared_by)),
+            ("stopped_at_rps", opt_num(self.stopped_at_rps)),
+            ("steps", Json::Arr(self.steps.iter().map(StepReport::to_json).collect())),
+        ])
+    }
+}
+
+impl LoadgenReport {
+    /// The `loadgen` axis recorded in `BENCH_service.json` (and the whole
+    /// of `BENCH_loadgen.json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "combos",
+            Json::Arr(self.combos.iter().map(ComboReport::to_json).collect()),
+        )])
+    }
+
+    /// One human line per combo (the CI step-summary table rows).
+    pub fn summary_rows(&self) -> Vec<String> {
+        self.combos
+            .iter()
+            .map(|c| {
+                format!(
+                    "| {} | {} | {} | {:.0} | {} | {} |",
+                    c.mix.label(),
+                    c.sites,
+                    c.sessions,
+                    c.max_sustainable_rps,
+                    c.declared_by,
+                    c.stopped_at_rps.map_or_else(|| "-".into(), |r| format!("{r:.0}")),
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step(failure_rate: f64, p50_ms: Option<f64>) -> StepReport {
+        StepReport {
+            offered_rps: 100.0,
+            planned: 100,
+            issued: 100,
+            ok: 100,
+            errors: 0,
+            skipped: 0,
+            elapsed_s: 1.0,
+            achieved_rps: 100.0,
+            failure_rate,
+            p50_ms,
+            p95_ms: p50_ms,
+            p99_ms: p50_ms,
+            fsync_p95_ms: None,
+        }
+    }
+
+    #[test]
+    fn stop_rules_match_the_exemplar_semantics() {
+        let cfg = LoadgenConfig::default();
+        // Healthy rung: under both thresholds.
+        assert_eq!(stop_reason(&cfg, &step(0.0, Some(5.0))), None);
+        // Failure rate dominates (checked first, like STOP_FAILURE_RATE).
+        assert_eq!(stop_reason(&cfg, &step(0.5, Some(5.0))), Some("failure-rate"));
+        assert_eq!(stop_reason(&cfg, &step(0.5, Some(9999.0))), Some("failure-rate"));
+        // Median latency trips on its own.
+        assert_eq!(stop_reason(&cfg, &step(0.0, Some(301.0))), Some("median-latency"));
+        // No latency observed (e.g. every request errored before the SLO
+        // endpoints): only the failure rate can trip.
+        assert_eq!(stop_reason(&cfg, &step(0.0, None)), None);
+        // Exactly at threshold passes ("over threshold" stops).
+        assert_eq!(stop_reason(&cfg, &step(0.4, Some(300.0))), None);
+    }
+
+    #[test]
+    fn report_json_shape_is_stable() {
+        let report = LoadgenReport {
+            combos: vec![ComboReport {
+                mix: Mix::SyncHeavy,
+                sites: 2,
+                sessions: 4,
+                steps: vec![step(0.1, Some(2.5))],
+                max_sustainable_rps: 99.5,
+                declared_by: "failure-rate",
+                stopped_at_rps: Some(200.0),
+            }],
+        };
+        let j = report.to_json();
+        let combo = j.get("combos").and_then(|c| c.idx(0)).unwrap();
+        assert_eq!(combo.get("mix").and_then(Json::as_str), Some("sync"));
+        assert_eq!(combo.get("sites").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(combo.get("sessions").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(combo.get("max_sustainable_rps").and_then(Json::as_f64), Some(99.5));
+        assert_eq!(combo.get("declared_by").and_then(Json::as_str), Some("failure-rate"));
+        let s0 = combo.get("steps").and_then(|s| s.idx(0)).unwrap();
+        assert_eq!(s0.get("p50_ms").and_then(Json::as_f64), Some(2.5));
+        assert!(matches!(s0.get("fsync_p95_ms"), Some(Json::Null)));
+        // The whole thing survives a serialize/parse round trip.
+        let reparsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(reparsed.to_string(), j.to_string());
+        // Summary rows: one per combo, pipe-table shaped.
+        let rows = report.summary_rows();
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].contains("| sync | 2 | 4 | 100 |") || rows[0].contains("| sync | 2 | 4 |"));
+    }
+
+    #[test]
+    fn quick_config_ladder_is_guaranteed_to_trip() {
+        let cfg = LoadgenConfig::quick();
+        // The last rung's offered rate must exceed anything a real
+        // machine sustains over HTTP (so CI always exercises the declare
+        // path via a stop rule, not ladder exhaustion).
+        let top = cfg.rps_start * cfg.rps_factor.powi(cfg.rps_steps as i32 - 1);
+        assert!(top > 1.0e7, "quick ladder tops out at {top} rps — not guaranteed to trip");
+        assert!(cfg.step_secs <= 1.0, "quick rungs must stay short for CI");
+    }
+}

@@ -1,0 +1,410 @@
+//! Prometheus text-exposition parser for the loadgen metrics scraper.
+//!
+//! The load harness reads its latency distributions from the service's
+//! own `GET /metrics` endpoint (`util::metrics::render` plus the store's
+//! scrape-time series) instead of re-instrumenting the client side: the
+//! server-side `balsam_api_request_seconds{endpoint=...}` histograms are
+//! what production alerting consumes, so the SLO verdicts measure the
+//! same distribution operators will stare at. This module parses the
+//! text format (version 0.0.4) far enough for that job: sample lines
+//! with optional labels (including escaped label values), histogram
+//! reassembly from `_bucket`/`_sum`/`_count` series, delta between two
+//! scrapes, and `histogram_quantile`-style estimation.
+//!
+//! Round-trip against [`crate::util::metrics::render`] output is pinned
+//! by the unit tests below.
+
+/// One sample line: `name{k="v",...} value`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    /// Metric name (for histograms the suffixed series name, e.g.
+    /// `balsam_api_request_seconds_bucket`).
+    pub name: String,
+    /// Label pairs in exposition order.
+    pub labels: Vec<(String, String)>,
+    /// Parsed value (`+Inf`/`-Inf`/`NaN` accepted).
+    pub value: f64,
+}
+
+impl Sample {
+    /// Value of the label `key`, if present.
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    /// Does this sample carry every requested `(key, value)` pair?
+    /// (Extra labels on the sample are allowed — callers match on the
+    /// labels they care about, like a PromQL selector.)
+    fn matches(&self, labels: &[(&str, &str)]) -> bool {
+        labels.iter().all(|(k, v)| self.label(k) == Some(*v))
+    }
+}
+
+/// A parsed scrape: every sample line of one `/metrics` response.
+#[derive(Debug, Clone, Default)]
+pub struct Scrape {
+    samples: Vec<Sample>,
+}
+
+/// A histogram reassembled from one scrape: cumulative bucket counts
+/// keyed by their `le` upper bounds, plus the `_sum`/`_count` series.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Hist {
+    /// `(le_bound, cumulative_count)` in ascending bound order; the last
+    /// entry is the `+Inf` bucket (bound `f64::INFINITY`).
+    pub buckets: Vec<(f64, f64)>,
+    /// Sum of observed values.
+    pub sum: f64,
+    /// Total observations.
+    pub count: f64,
+}
+
+impl Scrape {
+    /// Parse a text-exposition document. Comment (`# ...`) and blank
+    /// lines are skipped; a malformed sample line is an error (the
+    /// loadgen must not silently compute SLO verdicts over a scrape it
+    /// misread).
+    pub fn parse(text: &str) -> Result<Scrape, String> {
+        let mut samples = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            samples.push(
+                parse_sample(line).map_err(|e| format!("line {}: {e}: {line:?}", lineno + 1))?,
+            );
+        }
+        Ok(Scrape { samples })
+    }
+
+    /// Every parsed sample.
+    pub fn samples(&self) -> &[Sample] {
+        &self.samples
+    }
+
+    /// The value of the first sample named `name` matching all requested
+    /// labels (extra labels on the sample are ignored).
+    pub fn value(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        self.samples.iter().find(|s| s.name == name && s.matches(labels)).map(|s| s.value)
+    }
+
+    /// Reassemble the histogram family `name` restricted to `labels`
+    /// (e.g. `("endpoint", "SessionSync")`): collects the
+    /// `<name>_bucket` series (sorted by their `le` bound), `<name>_sum`
+    /// and `<name>_count`. `None` when no bucket series matches — a
+    /// family whose endpoint has not served a request yet.
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Option<Hist> {
+        let bucket_name = format!("{name}_bucket");
+        let mut buckets: Vec<(f64, f64)> = Vec::new();
+        for s in &self.samples {
+            if s.name == bucket_name && s.matches(labels) {
+                let le = parse_float(s.label("le")?).ok()?;
+                buckets.push((le, s.value));
+            }
+        }
+        if buckets.is_empty() {
+            return None;
+        }
+        buckets.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let sum = self.value(&format!("{name}_sum"), labels).unwrap_or(0.0);
+        let count = self
+            .value(&format!("{name}_count"), labels)
+            .unwrap_or_else(|| buckets.last().map(|b| b.1).unwrap_or(0.0));
+        Some(Hist { buckets, sum, count })
+    }
+}
+
+impl Hist {
+    /// No observations?
+    pub fn is_empty(&self) -> bool {
+        self.count <= 0.0
+    }
+
+    /// The histogram of observations recorded *between* `base` and
+    /// `self` (two scrapes of the same monotonically-growing family):
+    /// bucket-wise cumulative-count difference. `None` when the bucket
+    /// bound layouts differ (different metric, or a process restart
+    /// reset the registry — counts going backwards).
+    pub fn delta(&self, base: &Hist) -> Option<Hist> {
+        if self.buckets.len() != base.buckets.len() {
+            return None;
+        }
+        let mut buckets = Vec::with_capacity(self.buckets.len());
+        for (&(le, cum), &(ble, bcum)) in self.buckets.iter().zip(&base.buckets) {
+            if le.total_cmp(&ble) != std::cmp::Ordering::Equal || cum < bcum {
+                return None;
+            }
+            buckets.push((le, cum - bcum));
+        }
+        if self.count < base.count {
+            return None;
+        }
+        Some(Hist { buckets, sum: self.sum - base.sum, count: self.count - base.count })
+    }
+
+    /// Accumulate another histogram with the same bucket layout into this
+    /// one (summing a mix's per-endpoint families into one distribution).
+    /// Mismatched layouts are ignored rather than corrupting the merge.
+    pub fn merge(&mut self, other: &Hist) {
+        if self.buckets.is_empty() {
+            *self = other.clone();
+            return;
+        }
+        if self.buckets.len() != other.buckets.len() {
+            return;
+        }
+        for (b, ob) in self.buckets.iter_mut().zip(&other.buckets) {
+            b.1 += ob.1;
+        }
+        self.sum += other.sum;
+        self.count += other.count;
+    }
+
+    /// `histogram_quantile`-style estimate: find the bucket the q-th
+    /// observation (q in [0, 1]) falls in and interpolate linearly inside
+    /// it. Observations in the `+Inf` bucket report the highest finite
+    /// bound (the value is only known to be "past the last bucket").
+    /// `None` on an empty histogram.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        let total = self.buckets.last()?.1;
+        if total <= 0.0 {
+            return None;
+        }
+        let rank = q.clamp(0.0, 1.0) * total;
+        let mut prev_le = 0.0;
+        let mut prev_cum = 0.0;
+        for &(le, cum) in &self.buckets {
+            if cum >= rank && cum > prev_cum {
+                if le.is_infinite() {
+                    return Some(prev_le);
+                }
+                let frac = ((rank - prev_cum) / (cum - prev_cum)).clamp(0.0, 1.0);
+                return Some(prev_le + (le - prev_le) * frac);
+            }
+            if cum > prev_cum {
+                prev_cum = cum;
+                prev_le = le;
+            }
+        }
+        // rank > every cumulative count (float slop): the last bucket.
+        let &(le, _) = self.buckets.last()?;
+        Some(if le.is_infinite() { prev_le } else { le })
+    }
+}
+
+/// Parse `name{k="v",...} value` or `name value`.
+fn parse_sample(line: &str) -> Result<Sample, String> {
+    let name_end = line
+        .find(|c: char| c == '{' || c.is_whitespace())
+        .ok_or("no value separator")?;
+    let name = line[..name_end].to_string();
+    if name.is_empty() {
+        return Err("empty metric name".into());
+    }
+    let rest = &line[name_end..];
+    let (labels, value_part) = if let Some(body) = rest.strip_prefix('{') {
+        let (labels, after) = parse_labels(body)?;
+        (labels, after)
+    } else {
+        (Vec::new(), rest)
+    };
+    let value_str = value_part.split_whitespace().next().ok_or("missing value")?;
+    let value = parse_float(value_str)?;
+    Ok(Sample { name, labels, value })
+}
+
+/// Parse `k="v",k2="v2"}` (after the opening brace); returns the pairs
+/// and the remainder after the closing brace. Label values support the
+/// exposition-format escapes `\\`, `\"` and `\n`.
+fn parse_labels(mut s: &str) -> Result<(Vec<(String, String)>, &str), String> {
+    let mut labels = Vec::new();
+    loop {
+        s = s.trim_start_matches([' ', ',']);
+        if let Some(rest) = s.strip_prefix('}') {
+            return Ok((labels, rest));
+        }
+        let eq = s.find('=').ok_or("label without '='")?;
+        let key = s[..eq].trim().to_string();
+        if key.is_empty() {
+            return Err("empty label name".into());
+        }
+        s = s[eq + 1..].strip_prefix('"').ok_or("label value not quoted")?;
+        let mut value = String::new();
+        let mut chars = s.char_indices();
+        let close = loop {
+            let (i, c) = chars.next().ok_or("unterminated label value")?;
+            match c {
+                '"' => break i,
+                '\\' => match chars.next().ok_or("dangling escape")? {
+                    (_, '\\') => value.push('\\'),
+                    (_, '"') => value.push('"'),
+                    (_, 'n') => value.push('\n'),
+                    (_, other) => return Err(format!("unknown escape \\{other}")),
+                },
+                c => value.push(c),
+            }
+        };
+        labels.push((key, value));
+        s = &s[close + 1..];
+    }
+}
+
+/// Exposition float: ordinary f64 plus `+Inf` / `-Inf` / `NaN`.
+fn parse_float(s: &str) -> Result<f64, String> {
+    match s {
+        "+Inf" | "Inf" => Ok(f64::INFINITY),
+        "-Inf" => Ok(f64::NEG_INFINITY),
+        "NaN" => Ok(f64::NAN),
+        _ => s.parse::<f64>().map_err(|e| format!("bad float {s:?}: {e}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::metrics;
+
+    #[test]
+    fn parses_plain_and_labeled_samples() {
+        let text = "\
+# HELP x help text with {braces} and \"quotes\"
+# TYPE x counter
+x 42
+y{a=\"1\",b=\"two\"} 3.5
+z{le=\"+Inf\"} 7
+";
+        let s = Scrape::parse(text).unwrap();
+        assert_eq!(s.samples().len(), 3);
+        assert_eq!(s.value("x", &[]), Some(42.0));
+        assert_eq!(s.value("y", &[("b", "two")]), Some(3.5));
+        assert_eq!(s.value("y", &[("a", "1"), ("b", "two")]), Some(3.5));
+        assert_eq!(s.value("y", &[("a", "2")]), None);
+        assert!(s.value("z", &[("le", "+Inf")]).unwrap() == 7.0);
+    }
+
+    #[test]
+    fn escaped_label_values_roundtrip() {
+        let text = "f{path=\"C:\\\\tmp\",msg=\"say \\\"hi\\\"\",nl=\"a\\nb\"} 1\n";
+        let s = Scrape::parse(text).unwrap();
+        let sample = &s.samples()[0];
+        assert_eq!(sample.label("path"), Some("C:\\tmp"));
+        assert_eq!(sample.label("msg"), Some("say \"hi\""));
+        assert_eq!(sample.label("nl"), Some("a\nb"));
+    }
+
+    #[test]
+    fn malformed_lines_are_errors() {
+        for bad in [
+            "name_only",
+            "x{unclosed=\"v\" 1",
+            "x{noquote=v} 1",
+            "x{k=\"bad escape \\x\"} 1",
+            "x notafloat",
+        ] {
+            assert!(Scrape::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn histogram_reassembly_and_quantiles() {
+        let text = "\
+h_bucket{le=\"0.1\"} 10
+h_bucket{le=\"0.5\"} 30
+h_bucket{le=\"+Inf\"} 40
+h_sum 12.5
+h_count 40
+";
+        let s = Scrape::parse(text).unwrap();
+        let h = s.histogram("h", &[]).unwrap();
+        assert_eq!(h.count, 40.0);
+        assert_eq!(h.sum, 12.5);
+        assert_eq!(h.buckets.len(), 3);
+        // p25 is the 10th observation: exactly the first bucket edge.
+        assert!((h.quantile(0.25).unwrap() - 0.1).abs() < 1e-9);
+        // p50 is the 20th: halfway through the (0.1, 0.5] bucket's 20.
+        assert!((h.quantile(0.5).unwrap() - 0.3).abs() < 1e-9);
+        // Observations in +Inf report the last finite bound.
+        assert!((h.quantile(0.999).unwrap() - 0.5).abs() < 1e-9);
+        assert!(s.histogram("h", &[("endpoint", "nope")]).is_none());
+    }
+
+    #[test]
+    fn histogram_delta_between_scrapes() {
+        let base = Scrape::parse("h_bucket{le=\"1\"} 5\nh_bucket{le=\"+Inf\"} 6\nh_sum 4\nh_count 6\n")
+            .unwrap()
+            .histogram("h", &[])
+            .unwrap();
+        let later =
+            Scrape::parse("h_bucket{le=\"1\"} 9\nh_bucket{le=\"+Inf\"} 12\nh_sum 10\nh_count 12\n")
+                .unwrap()
+                .histogram("h", &[])
+                .unwrap();
+        let d = later.delta(&base).unwrap();
+        assert_eq!(d.count, 6.0);
+        assert_eq!(d.sum, 6.0);
+        assert_eq!(d.buckets, vec![(1.0, 4.0), (f64::INFINITY, 6.0)]);
+        // Counts going backwards (process restart) refuse to diff.
+        assert!(base.delta(&later).is_none());
+    }
+
+    #[test]
+    fn merge_accumulates_same_layout() {
+        let a = Scrape::parse("h_bucket{le=\"1\"} 2\nh_bucket{le=\"+Inf\"} 3\nh_sum 2\nh_count 3\n")
+            .unwrap()
+            .histogram("h", &[])
+            .unwrap();
+        let mut acc = Hist::default();
+        acc.merge(&a);
+        acc.merge(&a);
+        assert_eq!(acc.count, 6.0);
+        assert_eq!(acc.buckets[0].1, 4.0);
+    }
+
+    #[test]
+    fn empty_histogram_has_no_quantile() {
+        let h = Hist { buckets: vec![(1.0, 0.0), (f64::INFINITY, 0.0)], sum: 0.0, count: 0.0 };
+        assert!(h.quantile(0.5).is_none());
+        assert!(h.is_empty());
+    }
+
+    /// Round-trip against the real registry exposition: every histogram
+    /// family `util::metrics::render` emits must reassemble with exactly
+    /// the registry's bucket bounds plus `+Inf`, in ascending order.
+    /// Values are not asserted — the registry is process-global and
+    /// sibling tests move it concurrently.
+    #[test]
+    fn roundtrips_registry_exposition() {
+        // Ensure at least one per-endpoint family has series to parse.
+        // Sibling tests may briefly flip the global recording switch off,
+        // so retry until the observation lands.
+        let s = loop {
+            metrics::set_enabled(true);
+            metrics::api_observe("SessionSync", false, metrics::clock());
+            let s = Scrape::parse(&metrics::render()).expect("render() output must parse");
+            if s.histogram("balsam_api_request_seconds", &[("endpoint", "SessionSync")]).is_some() {
+                break s;
+            }
+            std::thread::yield_now();
+        };
+        for name in ["balsam_wal_fsync_seconds", "balsam_wal_append_seconds"] {
+            let h = s.histogram(name, &[]).unwrap_or_else(|| panic!("no histogram {name}"));
+            assert_eq!(h.buckets.len(), metrics::LATENCY_BOUNDS.len() + 1, "{name}");
+            for (b, bound) in h.buckets.iter().zip(metrics::LATENCY_BOUNDS) {
+                assert_eq!(b.0, *bound, "{name} bound mismatch");
+            }
+            assert!(h.buckets.last().unwrap().0.is_infinite(), "{name} missing +Inf");
+            // Cumulative counts never decrease across buckets.
+            for w in h.buckets.windows(2) {
+                assert!(w[1].1 >= w[0].1, "{name} buckets not cumulative");
+            }
+        }
+        let ep = s
+            .histogram("balsam_api_request_seconds", &[("endpoint", "SessionSync")])
+            .expect("per-endpoint histogram after api_observe");
+        assert!(ep.buckets.last().unwrap().0.is_infinite());
+        // Plain counter/gauge families parse as unlabeled samples.
+        assert!(s.value("balsam_http_connections_total", &[]).is_some());
+        assert!(s.value("balsam_persist_poisoned", &[]).is_some());
+    }
+}

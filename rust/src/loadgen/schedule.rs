@@ -1,0 +1,145 @@
+//! Open-loop send schedule.
+//!
+//! The defining property of an open-loop load generator is that request
+//! *send times* are fixed up front by the offered rate, independent of
+//! how long the server takes to answer — a slow response does not slow
+//! the arrival process down, so queueing delay shows up in the measured
+//! latency instead of being silently absorbed (the "coordinated
+//! omission" failure mode of closed-loop drivers).
+//!
+//! A plan at `rps` over `duration_s` seconds defines tick `i` at offset
+//! `i / rps` seconds from the step start, for `i in 0..ceil(rps *
+//! duration_s)`. Ticks are partitioned across `senders` round-robin
+//! (sender `s` owns ticks `i ≡ s (mod senders)`), so each sender walks
+//! its own arithmetic sequence of deadlines and no coordination is
+//! needed at runtime. A sender that falls too far behind its schedule
+//! *skips* the overdue ticks and counts them against the failure rate —
+//! dropping load on the floor is a failure of the system under test,
+//! not a reprieve.
+
+use std::time::Duration;
+
+/// Fixed-rate open-loop schedule for one sweep step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpenLoopPlan {
+    /// Offered request rate, requests/second across all senders. Must
+    /// be finite and > 0.
+    pub rps: f64,
+    /// Number of concurrent sender threads the ticks are split over.
+    pub senders: usize,
+    /// Step duration in seconds.
+    pub duration_s: f64,
+}
+
+impl OpenLoopPlan {
+    /// Total ticks the plan offers: `ceil(rps * duration_s)`.
+    pub fn planned_ticks(&self) -> u64 {
+        (self.rps * self.duration_s).ceil().max(0.0) as u64
+    }
+
+    /// Offset from step start of tick `i`.
+    pub fn deadline(&self, tick: u64) -> Duration {
+        Duration::from_secs_f64(tick as f64 / self.rps)
+    }
+
+    /// The ticks owned by `sender` (0-based), in deadline order.
+    pub fn sender_ticks(&self, sender: usize) -> SenderTicks {
+        SenderTicks { next: sender as u64, stride: self.senders.max(1) as u64, end: self.planned_ticks() }
+    }
+}
+
+/// Iterator over one sender's tick indices.
+#[derive(Debug, Clone)]
+pub struct SenderTicks {
+    next: u64,
+    stride: u64,
+    end: u64,
+}
+
+impl Iterator for SenderTicks {
+    type Item = u64;
+
+    fn next(&mut self) -> Option<u64> {
+        if self.next >= self.end {
+            return None;
+        }
+        let tick = self.next;
+        self.next += self.stride;
+        Some(tick)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn planned_ticks_rounds_up() {
+        let plan = OpenLoopPlan { rps: 10.0, senders: 1, duration_s: 1.05 };
+        assert_eq!(plan.planned_ticks(), 11);
+        let plan = OpenLoopPlan { rps: 3.0, senders: 1, duration_s: 1.0 };
+        assert_eq!(plan.planned_ticks(), 3);
+    }
+
+    #[test]
+    fn deadlines_follow_the_offered_rate() {
+        let plan = OpenLoopPlan { rps: 200.0, senders: 4, duration_s: 1.0 };
+        assert_eq!(plan.deadline(0), Duration::ZERO);
+        let d1 = plan.deadline(1).as_secs_f64();
+        assert!((d1 - 0.005).abs() < 1e-12);
+        // Deadlines depend only on the global tick index, not the sender
+        // split: offered rate is constant regardless of concurrency.
+        let d100 = plan.deadline(100).as_secs_f64();
+        assert!((d100 - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn senders_partition_the_ticks() {
+        // Property: for random (rps, senders, duration), the per-sender
+        // tick streams are disjoint, sorted, and union to 0..planned.
+        crate::util::check::forall(
+            "schedule::partition",
+            0x10ad,
+            200,
+            |g: &mut Pcg| {
+                let rps = 1.0 + g.f64() * 500.0;
+                let senders = 1 + g.below(8) as usize;
+                let duration_s = 0.1 + g.f64() * 3.0;
+                OpenLoopPlan { rps, senders, duration_s }
+            },
+            |plan| {
+                let planned = plan.planned_ticks();
+                let mut seen = vec![false; planned as usize];
+                for s in 0..plan.senders {
+                    let mut prev: Option<u64> = None;
+                    for tick in plan.sender_ticks(s) {
+                        crate::prop_assert!(tick < planned, "tick {tick} out of range {planned}");
+                        crate::prop_assert!(
+                            prev.is_none_or(|p| tick > p),
+                            "sender {s} ticks not strictly increasing"
+                        );
+                        crate::prop_assert!(
+                            !seen[tick as usize],
+                            "tick {tick} owned by two senders"
+                        );
+                        seen[tick as usize] = true;
+                        prev = Some(tick);
+                    }
+                }
+                crate::prop_assert!(
+                    seen.iter().all(|&x| x),
+                    "some tick owned by no sender"
+                );
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn zero_senders_degrades_to_one() {
+        let plan = OpenLoopPlan { rps: 5.0, senders: 0, duration_s: 1.0 };
+        let ticks: Vec<u64> = plan.sender_ticks(0).collect();
+        assert_eq!(ticks, vec![0, 1, 2, 3, 4]);
+    }
+}

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   repro `<id|all>` [--fast] [--seed N]   regenerate a paper table/figure
 //!   service [--addr A]                   run the central service over HTTP
+//!   loadgen [--quick] [--out FILE]       open-loop capacity sweep + SLO verdict
 //!   runtime-check [--artifacts DIR]      load + execute the AOT artifacts
 //!   state-graph                          print the job state machine
 //!
@@ -20,17 +21,23 @@ fn main() {
     let result = match args.subcommand() {
         Some("repro") => cmd_repro(&args),
         Some("service") => cmd_service(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("runtime-check") => cmd_runtime_check(&args),
         Some("state-graph") => cmd_state_graph(),
         _ => {
             eprintln!(
-                "usage: balsam <repro|service|runtime-check|state-graph> [options]\n\
+                "usage: balsam <repro|service|loadgen|runtime-check|state-graph> [options]\n\
                  \n  repro <id|all> [--fast] [--seed N]   ids: {:?}\
                  \n  service [--addr 127.0.0.1:8008] [--persist-dir DIR] [--snapshot-every N]\
                  \n          [--fsync=never|always|group:K,Tms] [--events-segment-bytes N]\
                  \n          [--events-retain-bytes N] [--events-retain-age SECS]\
                  \n          [--workers N] [--no-keepalive] [--http-idle-timeout SECS]\
                  \n          [--http-max-requests N] [--subscribe-max-ms N] [--no-metrics]\
+                 \n  loadgen [--quick] [--out FILE] [--target ADDR --token T]\
+                 \n          [--mix submit,sync,watch] [--sites 1,4] [--sessions 2,8]\
+                 \n          [--rps-start N] [--rps-factor X] [--rps-steps N] [--step-secs S]\
+                 \n          [--stop-failure-rate F] [--stop-median-ms MS] [--workers N]\
+                 \n          [--wal-dir DIR] [--fsync=never|always|group:K,Tms] [--seed N]\
                  \n  runtime-check [--artifacts artifacts] [--model NAME]\
                  \n  state-graph",
                 balsam::experiments::ALL
@@ -139,6 +146,84 @@ fn cmd_service(args: &Args) -> balsam::Result<()> {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+fn cmd_loadgen(args: &Args) -> balsam::Result<()> {
+    // Capacity sweep (see docs/OPERATIONS.md "Capacity testing"): open-loop
+    // rps ladder per (mix × sites × sessions) combo with stop-and-declare
+    // SLO rules. Self-hosts a fresh service per combo unless --target (+
+    // --token) attaches to a running one.
+    let mut cfg = if args.flag("quick") {
+        balsam::loadgen::LoadgenConfig::quick()
+    } else {
+        balsam::loadgen::LoadgenConfig::default()
+    };
+    if let Some(addr) = args.get("target") {
+        let token = args.get("token");
+        balsam::ensure!(token.is_some(), "--target requires --token <bearer token>");
+        cfg.target = Some((addr.to_string(), token.unwrap().to_string()));
+    }
+    if let Some(spec) = args.get("mix") {
+        let mut mixes = Vec::new();
+        for part in spec.split(',') {
+            let m = balsam::loadgen::mix::Mix::parse(part);
+            balsam::ensure!(m.is_some(), "--mix must be submit|sync|watch (comma-separated), got '{part}'");
+            mixes.push(m.unwrap());
+        }
+        cfg.mixes = mixes;
+    }
+    if let Some(spec) = args.get("sites") {
+        cfg.sites_list = parse_usize_list("sites", spec)?;
+    }
+    if let Some(spec) = args.get("sessions") {
+        cfg.sessions_list = parse_usize_list("sessions", spec)?;
+    }
+    cfg.rps_start = args.f64_or("rps-start", cfg.rps_start);
+    cfg.rps_factor = args.f64_or("rps-factor", cfg.rps_factor);
+    cfg.rps_steps = args.u64_or("rps-steps", cfg.rps_steps as u64) as usize;
+    cfg.step_secs = args.f64_or("step-secs", cfg.step_secs);
+    cfg.stop_failure_rate = args.f64_or("stop-failure-rate", cfg.stop_failure_rate);
+    cfg.stop_median_ms = args.f64_or("stop-median-ms", cfg.stop_median_ms);
+    cfg.workers = args.u64_or("workers", cfg.workers as u64) as usize;
+    cfg.seed = args.u64_or("seed", cfg.seed);
+    balsam::ensure!(
+        cfg.rps_start > 0.0 && cfg.rps_factor > 1.0 && cfg.step_secs > 0.0,
+        "--rps-start must be > 0, --rps-factor > 1, --step-secs > 0"
+    );
+    if let Some(dir) = args.get("wal-dir") {
+        let fsync_spec = args.str_or("fsync", "group");
+        let fsync = FsyncPolicy::parse(fsync_spec);
+        balsam::ensure!(
+            fsync.is_some(),
+            "--fsync must be never|always|group|group:K,Tms — got '{fsync_spec}'"
+        );
+        cfg.wal = Some((dir.into(), fsync.unwrap()));
+    }
+
+    let report = balsam::loadgen::run(&cfg)?;
+    let json = report.to_json().to_string();
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, &json)
+            .map_err(|e| balsam::util::error::err_msg(format!("write {out}: {e}")))?;
+        eprintln!("loadgen report written to {out}");
+    } else {
+        println!("{json}");
+    }
+    Ok(())
+}
+
+fn parse_usize_list(flag: &str, spec: &str) -> balsam::Result<Vec<usize>> {
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let n: usize = part
+            .trim()
+            .parse()
+            .map_err(|_| balsam::util::error::err_msg(format!("--{flag}: bad count '{part}'")))?;
+        balsam::ensure!(n > 0, "--{flag}: counts must be > 0");
+        out.push(n);
+    }
+    balsam::ensure!(!out.is_empty(), "--{flag}: empty list");
+    Ok(out)
 }
 
 fn cmd_runtime_check(args: &Args) -> balsam::Result<()> {

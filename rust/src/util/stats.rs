@@ -78,13 +78,18 @@ impl Summary {
 }
 
 /// Percentile of an unsorted slice (linear interpolation, q in [0,100]).
+///
+/// Total on its domain edges: an empty slice is `NaN`, a single sample is
+/// that sample for every q, and q outside [0, 100] clamps to the min/max
+/// instead of indexing out of bounds (q = 101 on a 2-sample slice used to
+/// compute rank 1.01 and panic on `v[2]`).
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
     let mut v: Vec<f64> = xs.to_vec();
     v.sort_by(f64::total_cmp);
-    let rank = (q / 100.0) * (v.len() - 1) as f64;
+    let rank = (q.clamp(0.0, 100.0) / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
     if lo == hi {
@@ -92,6 +97,23 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
     } else {
         v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
     }
+}
+
+/// Nearest-rank percentile (q in [0,100]): the smallest sample such that
+/// at least `q%` of the data is ≤ it — `sorted[ceil(q/100 · n) - 1]`,
+/// clamped so q ≤ 0 gives the min and q ≥ 100 the max. Unlike the
+/// interpolating [`percentile`] this always returns an actual sample,
+/// which is what an SLO check wants on small N: the p99 of 10 latencies
+/// is the worst observed sample, not a value between the two worst that
+/// nobody measured. Empty input is `NaN`.
+pub fn percentile_nearest_rank(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(f64::total_cmp);
+    let k = ((q.clamp(0.0, 100.0) / 100.0) * v.len() as f64).ceil() as usize;
+    v[k.clamp(1, v.len()) - 1]
 }
 
 /// Fixed-bin histogram over [lo, hi) with overflow/underflow buckets.
@@ -229,6 +251,76 @@ mod tests {
     #[test]
     fn percentile_of_empty_is_nan() {
         assert!(percentile(&[], 50.0).is_nan());
+        assert!(percentile_nearest_rank(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_edge_cases_are_total() {
+        // Single sample: every q returns it.
+        for q in [-10.0, 0.0, 37.5, 99.0, 100.0, 250.0] {
+            assert_eq!(percentile(&[7.0], q), 7.0);
+            assert_eq!(percentile_nearest_rank(&[7.0], q), 7.0);
+        }
+        // Out-of-range q clamps instead of panicking (q=101 on two
+        // samples used to index past the end).
+        assert_eq!(percentile(&[1.0, 2.0], 101.0), 2.0);
+        assert_eq!(percentile(&[1.0, 2.0], -5.0), 1.0);
+        // NaN q degrades to the min rather than panicking.
+        assert_eq!(percentile(&[1.0, 2.0], f64::NAN), 1.0);
+        assert_eq!(percentile_nearest_rank(&[1.0, 2.0], f64::NAN), 1.0);
+    }
+
+    #[test]
+    fn nearest_rank_small_n() {
+        let xs = [5.0, 1.0, 9.0, 3.0]; // sorted: 1 3 5 9
+        // p99 of a small sample is the worst actual observation, not an
+        // interpolated value nobody measured.
+        assert_eq!(percentile_nearest_rank(&xs, 99.0), 9.0);
+        assert_eq!(percentile_nearest_rank(&xs, 100.0), 9.0);
+        // ceil(0.5 * 4) = 2nd smallest.
+        assert_eq!(percentile_nearest_rank(&xs, 50.0), 3.0);
+        // ceil(0.25 * 4) = 1st smallest.
+        assert_eq!(percentile_nearest_rank(&xs, 25.0), 1.0);
+        assert_eq!(percentile_nearest_rank(&xs, 0.0), 1.0);
+        // p95 of 10 samples is the 10th (worst), p90 the 9th.
+        let ten: Vec<f64> = (1..=10).map(f64::from).collect();
+        assert_eq!(percentile_nearest_rank(&ten, 95.0), 10.0);
+        assert_eq!(percentile_nearest_rank(&ten, 90.0), 9.0);
+    }
+
+    /// Property: both percentile flavors are total over arbitrary inputs
+    /// and q values, bounded by [min, max], monotone in q, and the
+    /// nearest-rank result is always an actual sample.
+    #[test]
+    fn percentile_properties() {
+        crate::util::check::forall(
+            "stats::percentile",
+            0x57a7,
+            300,
+            |g: &mut crate::util::rng::Pcg| {
+                let n = 1 + g.below(40) as usize;
+                let xs: Vec<f64> = (0..n).map(|_| g.f64() * 2000.0 - 1000.0).collect();
+                let q1 = g.f64() * 160.0 - 30.0; // deliberately out of range
+                let q2 = g.f64() * 160.0 - 30.0;
+                (xs, q1, q2)
+            },
+            |(xs, q1, q2)| {
+                let (lo, hi) = (q1.min(*q2), q1.max(*q2));
+                for f in [percentile, percentile_nearest_rank] {
+                    let (a, b) = (f(xs, lo), f(xs, hi));
+                    crate::prop_assert!(a.is_finite() && b.is_finite(), "non-finite percentile");
+                    let (min, max) = (percentile(xs, 0.0), percentile(xs, 100.0));
+                    crate::prop_assert!(min <= a && b <= max, "outside sample range");
+                    crate::prop_assert!(a <= b, "not monotone in q: p({lo})={a} > p({hi})={b}");
+                }
+                let nr = percentile_nearest_rank(xs, hi);
+                crate::prop_assert!(
+                    xs.iter().any(|&x| x == nr),
+                    "nearest-rank {nr} is not a sample"
+                );
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -1,0 +1,101 @@
+//! End-to-end smoke of the open-loop load harness: a tiny self-hosted
+//! sweep must complete, declare a verdict per combo, measure server-side
+//! latency from `/metrics`, and serialize the report the `loadgen` axis
+//! of `BENCH_service.json` expects. Rates and rungs are kept small — this
+//! pins the machinery (open-loop accounting, scrape deltas, stop rule,
+//! JSON shape), not the capacity of the CI runner.
+
+use balsam::loadgen::mix::Mix;
+use balsam::loadgen::{run, LoadgenConfig};
+use balsam::util::json::Json;
+
+fn smoke_config() -> LoadgenConfig {
+    LoadgenConfig {
+        mixes: vec![Mix::SyncHeavy],
+        sites_list: vec![1],
+        sessions_list: vec![2],
+        rps_start: 40.0,
+        rps_factor: 4.0,
+        rps_steps: 2,
+        step_secs: 0.4,
+        workers: 4,
+        log: false,
+        ..LoadgenConfig::default()
+    }
+}
+
+#[test]
+fn sweep_measures_and_declares() {
+    let report = run(&smoke_config()).expect("loadgen sweep");
+    assert_eq!(report.combos.len(), 1);
+    let combo = &report.combos[0];
+    assert_eq!((combo.mix, combo.sites, combo.sessions), (Mix::SyncHeavy, 1, 2));
+    assert!(!combo.steps.is_empty() && combo.steps.len() <= 2);
+    assert!(
+        ["failure-rate", "median-latency", "ladder-exhausted"].contains(&combo.declared_by),
+        "unknown verdict {}",
+        combo.declared_by
+    );
+
+    let first = &combo.steps[0];
+    assert_eq!(first.offered_rps, 40.0);
+    // 40 rps over 0.4 s = 16 planned ticks, every one accounted for.
+    assert_eq!(first.planned, 16);
+    assert_eq!(first.issued + first.skipped, first.planned);
+    assert_eq!(first.ok + first.errors, first.issued);
+    assert!(first.elapsed_s > 0.0);
+    assert!((0.0..=1.0).contains(&first.failure_rate));
+
+    // 40 rps of the sync lifecycle is trivially sustainable: the first
+    // rung must pass, mostly succeed, and carry server-side latency read
+    // back from /metrics.
+    assert!(first.ok > first.planned / 2, "only {}/{} ok", first.ok, first.planned);
+    let p50 = first.p50_ms.expect("server-side p50 from /metrics");
+    let p95 = first.p95_ms.expect("server-side p95 from /metrics");
+    let p99 = first.p99_ms.expect("server-side p99 from /metrics");
+    assert!(p50 > 0.0 && p50 <= p95 && p95 <= p99, "quantiles out of order: {p50} {p95} {p99}");
+    // Ephemeral self-host: nothing fsyncs.
+    assert!(first.fsync_p95_ms.is_none());
+    if combo.declared_by == "ladder-exhausted" {
+        assert!(combo.max_sustainable_rps >= first.achieved_rps);
+        assert!(combo.stopped_at_rps.is_none());
+    } else {
+        assert!(combo.stopped_at_rps.is_some());
+    }
+
+    // The report round-trips through the JSON codec with the axis shape
+    // bench_trend.py keys on.
+    let j = Json::parse(&report.to_json().to_string()).expect("report JSON parses");
+    let c = j.get("combos").and_then(|c| c.idx(0)).expect("combos[0]");
+    for field in ["mix", "sites", "sessions", "max_sustainable_rps", "declared_by", "steps"] {
+        assert!(c.get(field).is_some(), "combo missing {field}");
+    }
+    let s0 = c.get("steps").and_then(|s| s.idx(0)).expect("steps[0]");
+    assert_eq!(s0.get("offered_rps").and_then(Json::as_f64), Some(40.0));
+    assert_eq!(s0.get("planned").and_then(Json::as_f64), Some(16.0));
+}
+
+/// An unsustainable offered rate must trip the failure-rate stop rule:
+/// two senders cannot honor a 200k rps schedule, so overdue ticks are
+/// skipped and counted as failures, the ladder halts, and the combo still
+/// reports a (possibly zero) declared capacity instead of hanging.
+#[test]
+fn overload_trips_the_stop_rule() {
+    let cfg = LoadgenConfig {
+        mixes: vec![Mix::SubmitHeavy],
+        rps_start: 200_000.0,
+        rps_factor: 4.0,
+        rps_steps: 3,
+        step_secs: 0.3,
+        ..smoke_config()
+    };
+    let report = run(&cfg).expect("loadgen sweep");
+    let combo = &report.combos[0];
+    assert_eq!(combo.declared_by, "failure-rate");
+    assert_eq!(combo.steps.len(), 1, "ladder must halt at the tripped rung");
+    assert_eq!(combo.stopped_at_rps, Some(200_000.0));
+    assert_eq!(combo.max_sustainable_rps, 0.0, "no rung passed");
+    let step = &combo.steps[0];
+    assert!(step.skipped > 0, "an impossible schedule must shed ticks");
+    assert!(step.failure_rate > cfg.stop_failure_rate);
+}
