@@ -1,0 +1,117 @@
+#!/usr/bin/env python3
+"""Render + gate a fairness probe record (BENCH_fairness.json).
+
+Usage: fairness_summary.py <BENCH_fairness.json>  >> $GITHUB_STEP_SUMMARY
+
+The probe (`balsam loadgen --fairness`) runs two phases on an identical
+self-hosted topology: a control phase with only polite tenants, then a
+contended phase that adds greedy tenants offering far past their
+per-principal quota. This script renders the per-class table and fails
+the job when isolation breaks:
+
+* **polite p99 degradation** — contended polite p99 must stay within
+  MAX_DEGRADATION (2x) of the control phase's. A greedy tenant past its
+  quota must absorb its own punishment, not inflate its neighbours'
+  tail.
+* **throttle placement** — the greedy class must actually be rejected
+  (a probe where the limiter never engaged measured nothing), and the
+  polite class must see zero rejections (polite senders stay under
+  quota and honor Retry-After, so any 429 on them is a limiter bug).
+* **measurement integrity** — both phases must produce polite latency
+  samples; a degradation ratio of None means a phase starved and the
+  verdict is vacuous.
+"""
+import json
+import sys
+
+# Contended-vs-control polite p99 ceiling. Loose on purpose: shared CI
+# runners jitter, and the probe's in-run invariants (rejections land on
+# the greedy class only) carry the strict signal.
+MAX_DEGRADATION = 2.0
+
+CLASSES = ("baseline", "polite", "greedy")
+
+
+def class_row(name, c):
+    """One markdown table row for a tenant class."""
+    def ms(v):
+        return f"{v:.2f}" if isinstance(v, (int, float)) else "—"
+
+    return (
+        f"| {name} | {int(c['issued'])} | {int(c['ok'])} | {int(c['rejected'])} "
+        f"| {int(c['errors'])} | {int(c['deferred'])} | {ms(c.get('p50_ms'))} "
+        f"| {ms(c.get('p99_ms'))} |"
+    )
+
+
+def gate(doc):
+    """Gate one fairness record. Returns (failed, list of output lines)."""
+    lines = []
+    failed = False
+    for cls in CLASSES:
+        if not isinstance(doc.get(cls), dict):
+            return True, [f"::error::fairness record missing class '{cls}'"]
+
+    lines.append("### Fairness probe (greedy tenant vs polite tenants)")
+    lines.append("")
+    lines.append(
+        f"{int(doc.get('polite_senders', 0))} polite + "
+        f"{int(doc.get('greedy_senders', 0))} greedy tenant(s), per-principal limit "
+        f"{int(doc.get('rate_limit_rps', 0))} rps (burst {int(doc.get('rate_limit_burst', 0))})"
+    )
+    lines.append("")
+    lines.append("| class | issued | ok | rejected | errors | deferred | p50 ms | p99 ms |")
+    lines.append("| --- | ---: | ---: | ---: | ---: | ---: | ---: | ---: |")
+    for cls in CLASSES:
+        lines.append(class_row(cls, doc[cls]))
+    lines.append("")
+
+    greedy, polite = doc["greedy"], doc["polite"]
+    if greedy["rejected"] <= 0:
+        lines.append(
+            "::error::the rate limiter never rejected the greedy tenant — "
+            "the probe exercised nothing"
+        )
+        failed = True
+    if polite["rejected"] > 0:
+        lines.append(
+            f"::error::polite tenants absorbed {int(polite['rejected'])} rejection(s); "
+            "under-quota principals must never be throttled"
+        )
+        failed = True
+
+    degradation = doc.get("degradation_p99")
+    if isinstance(degradation, (int, float)):
+        verdict = "within" if degradation <= MAX_DEGRADATION else "PAST"
+        lines.append(
+            f"Polite p99 under contention: {degradation:.2f}x the control phase "
+            f"({verdict} the {MAX_DEGRADATION:.0f}x gate)."
+        )
+        if degradation > MAX_DEGRADATION:
+            lines.append(
+                f"::error::polite-tenant p99 degraded {degradation:.2f}x with a greedy "
+                f"tenant running (gate: {MAX_DEGRADATION:.0f}x) — backpressure is not fair"
+            )
+            failed = True
+    else:
+        lines.append(
+            "::error::no polite p99 degradation ratio — a phase produced no latency "
+            "samples, so the fairness verdict is vacuous"
+        )
+        failed = True
+    return failed, lines
+
+
+def main(argv):
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    with open(argv[1]) as f:
+        doc = json.load(f)
+    failed, lines = gate(doc)
+    print("\n".join(lines))
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -173,6 +173,31 @@ def test_loadgen_combos_malformed_raise():
         bt.loadgen_combos({"loadgen": {"combos": [combo(declared_by="")]}})
 
 
+def test_loadgen_combos_tolerate_rejected_rung_key():
+    # Since the admission-control split, every rung carries a `rejected`
+    # count next to ok/errors. The gate keys only on combo-level fields,
+    # so both new records (with the key) and old baselines (without it)
+    # must parse identically.
+    new = combo()
+    new["steps"] = [{"offered_rps": 40.0, "ok": 10, "errors": 1, "rejected": 5, "skipped": 0}]
+    old = combo(mix="watch")
+    old["steps"] = [{"offered_rps": 40.0, "ok": 10, "errors": 1, "skipped": 0}]
+    doc = {"loadgen": {"combos": [new, old]}}
+    assert bt.loadgen_combos(doc) == {"sync/s1/w2": 1000.0, "watch/s1/w2": 1000.0}
+
+
+def test_loadgen_gate_across_rejected_schema_change():
+    # A new record (rejected in steps) gated against an old baseline
+    # (no rejected key) compares cleanly — the schema change is additive.
+    base_combo = combo(rps=1000.0)
+    base_combo["steps"] = [{"ok": 10, "errors": 0, "skipped": 0}]
+    cur_combo = combo(rps=900.0)
+    cur_combo["steps"] = [{"ok": 10, "errors": 0, "rejected": 3, "skipped": 0}]
+    base = {"loadgen": {"combos": [base_combo]}}
+    cur = {"loadgen": {"combos": [cur_combo]}}
+    assert bt.gate_loadgen(base, cur) is False
+
+
 def test_loadgen_gate_within_threshold_passes():
     # One quantization rung down (-75% on the 4x ladder) stays inside the
     # 80% gate.

@@ -1,0 +1,89 @@
+"""Unit tests for fairness_summary.py — the CI fairness gate itself.
+
+Run: python3 -m pytest .github/scripts/test_fairness_summary.py -q
+(a blocking CI step, same contract as test_bench_trend.py).
+"""
+import json
+
+import fairness_summary as fs
+
+
+def klass(issued=100, ok=90, rejected=0, errors=0, deferred=10, p50=1.0, p99=5.0):
+    return {
+        "issued": issued,
+        "ok": ok,
+        "rejected": rejected,
+        "errors": errors,
+        "deferred": deferred,
+        "p50_ms": p50,
+        "p99_ms": p99,
+    }
+
+
+def report(degradation=1.2, greedy_rejected=400, polite_rejected=0):
+    return {
+        "polite_senders": 3,
+        "greedy_senders": 1,
+        "rate_limit_rps": 50,
+        "rate_limit_burst": 100,
+        "baseline": klass(),
+        "polite": klass(rejected=polite_rejected),
+        "greedy": klass(issued=500, ok=100, rejected=greedy_rejected, deferred=0),
+        "degradation_p99": degradation,
+    }
+
+
+def test_healthy_record_passes():
+    failed, lines = fs.gate(report())
+    assert failed is False
+    assert not any(l.startswith("::error::") for l in lines)
+    # The summary leads with the table and states the verdict.
+    assert any("| class |" in l for l in lines)
+    assert any("1.20x" in l for l in lines)
+
+
+def test_degradation_past_gate_fails():
+    failed, lines = fs.gate(report(degradation=2.5))
+    assert failed is True
+    assert any("degraded 2.50x" in l for l in lines)
+
+
+def test_degradation_boundary_passes():
+    # Exactly 2.0x is within the gate (the check is "> MAX_DEGRADATION").
+    failed, _ = fs.gate(report(degradation=2.0))
+    assert failed is False
+
+
+def test_missing_degradation_fails():
+    # A starved phase yields degradation_p99: null — vacuous verdict.
+    failed, lines = fs.gate(report(degradation=None))
+    assert failed is True
+    assert any("vacuous" in l for l in lines)
+
+
+def test_limiter_never_engaging_fails():
+    failed, lines = fs.gate(report(greedy_rejected=0))
+    assert failed is True
+    assert any("never rejected" in l for l in lines)
+
+
+def test_polite_rejections_fail():
+    failed, lines = fs.gate(report(polite_rejected=3))
+    assert failed is True
+    assert any("polite tenants absorbed 3" in l for l in lines)
+
+
+def test_missing_class_fails_loudly():
+    doc = report()
+    del doc["greedy"]
+    failed, lines = fs.gate(doc)
+    assert failed is True
+    assert any("missing class 'greedy'" in l for l in lines)
+
+
+def test_main_end_to_end(tmp_path):
+    good, bad = tmp_path / "good.json", tmp_path / "bad.json"
+    good.write_text(json.dumps(report()))
+    bad.write_text(json.dumps(report(degradation=9.0)))
+    assert fs.main(["fairness_summary.py", str(good)]) == 0
+    assert fs.main(["fairness_summary.py", str(bad)]) == 1

@@ -276,6 +276,7 @@ fn run_propagation(push: bool, iters: usize) -> PropResult {
                         site: Some(site),
                         since,
                         timeout_ms: 2_000,
+                        max_events: 0,
                     })
                 } else {
                     std::thread::sleep(Duration::from_millis(PROP_POLL_MS));

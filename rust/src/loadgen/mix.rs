@@ -169,7 +169,12 @@ impl MixDriver {
                 if roll < 0.6 {
                     // Non-blocking probe: timeout 0 never parks a worker,
                     // so the offered rate stays honest.
-                    ApiRequest::WatchEvents { site: Some(self.site), since: self.since, timeout_ms: 0 }
+                    ApiRequest::WatchEvents {
+                        site: Some(self.site),
+                        since: self.since,
+                        timeout_ms: 0,
+                        max_events: 0,
+                    }
                 } else if roll < 0.8 {
                     ApiRequest::ListEvents { since: self.since }
                 } else {

@@ -133,12 +133,19 @@ pub struct StepReport {
     pub offered_rps: f64,
     /// Ticks the open-loop schedule defined.
     pub planned: u64,
-    /// Requests actually sent (`ok + errors`).
+    /// Requests actually sent (`ok + errors + rejected`).
     pub issued: u64,
     /// Requests answered successfully.
     pub ok: u64,
-    /// Requests answered with an error (transport or 4xx/5xx).
+    /// Requests answered with an error (transport or non-backpressure
+    /// 4xx/5xx).
     pub errors: u64,
+    /// Requests the service *refused with backpressure* (a framed
+    /// 429/503 + `Retry-After`). Deliberate admission control, not a
+    /// malfunction: kept out of `errors` and out of the failure-rate
+    /// stop rule, so a shedding-but-healthy gateway reads as reduced
+    /// capacity (lower `achieved_rps`), never as a broken one.
+    pub rejected: u64,
     /// Overdue ticks dropped by senders that fell behind schedule.
     pub skipped: u64,
     /// Wall time the rung took.
@@ -388,6 +395,7 @@ fn run_combo(
 struct SenderStats {
     ok: u64,
     errors: u64,
+    rejected: u64,
     skipped: u64,
 }
 
@@ -431,6 +439,13 @@ fn run_step(
                                 st.ok += 1;
                                 driver.observe(&req, &resp);
                             }
+                            // A framed 429/503 is the gateway doing its
+                            // job, not a failure — and it never consumed
+                            // the request, so the driver's lifecycle
+                            // state is still valid (no on_error reset).
+                            Err(crate::service::ApiError::Backpressure { .. }) => {
+                                st.rejected += 1;
+                            }
                             Err(_) => {
                                 st.errors += 1;
                                 driver.on_error();
@@ -447,17 +462,18 @@ fn run_step(
     let after = scrape(&target.addr)?;
 
     let planned = plan.planned_ticks();
-    let (ok, errors, skipped) = stats.iter().fold((0, 0, 0), |(o, e, k), s| {
-        (o + s.ok, e + s.errors, k + s.skipped)
+    let (ok, errors, rejected, skipped) = stats.iter().fold((0, 0, 0, 0), |(o, e, r, k), s| {
+        (o + s.ok, e + s.errors, r + s.rejected, k + s.skipped)
     });
     let (p50_ms, p95_ms, p99_ms) = latency_quantiles_ms(m, &before, &after);
     let fsync_p95_ms = fsync_p95_ms(&before, &after);
     Ok(StepReport {
         offered_rps: plan.rps,
         planned,
-        issued: ok + errors,
+        issued: ok + errors + rejected,
         ok,
         errors,
+        rejected,
         skipped,
         elapsed_s,
         achieved_rps: ok as f64 / elapsed_s,
@@ -467,6 +483,293 @@ fn run_step(
         p99_ms,
         fsync_p95_ms,
     })
+}
+
+/// Fairness probe: does per-principal rate limiting actually protect
+/// polite tenants from a greedy one? Two phases on identical topology —
+/// a control with only the polite tenants offering load, then the same
+/// sweep with the greedy tenants hammering far past their quota — and
+/// the verdict is the polite class's client-observed p99 ratio between
+/// them. CI gates on that ratio (see `fairness_summary.py`).
+#[derive(Debug, Clone)]
+pub struct FairnessConfig {
+    /// Polite tenants: each offers `polite_rps` (below its per-principal
+    /// quota) and honors `Retry-After` if it is ever throttled.
+    pub polite: usize,
+    /// Greedy tenants: each offers `greedy_rps` (far beyond the quota)
+    /// and ignores every `Retry-After` hint.
+    pub greedy: usize,
+    /// Offered rate per polite tenant, rps.
+    pub polite_rps: f64,
+    /// Offered rate per greedy tenant, rps.
+    pub greedy_rps: f64,
+    /// Seconds each phase offers load for.
+    pub duration_s: f64,
+    /// Per-principal `(rps, burst)` the gateway enforces.
+    pub rate_limit: (u64, u64),
+    /// Gateway worker threads.
+    pub workers: usize,
+    /// PRNG seed (kept for config parity; the probe is deterministic).
+    pub seed: u64,
+    /// Print phase summaries to stderr.
+    pub log: bool,
+}
+
+impl Default for FairnessConfig {
+    fn default() -> FairnessConfig {
+        FairnessConfig {
+            polite: 3,
+            greedy: 1,
+            polite_rps: 20.0,
+            greedy_rps: 400.0,
+            duration_s: 3.0,
+            rate_limit: (50, 100),
+            workers: httpd::default_workers(),
+            seed: 0xFA13,
+            log: true,
+        }
+    }
+}
+
+impl FairnessConfig {
+    /// CI smoke shape: short phases, same contention ratio.
+    pub fn quick() -> FairnessConfig {
+        FairnessConfig { duration_s: 1.0, ..FairnessConfig::default() }
+    }
+}
+
+/// Aggregate client-side tallies for one tenant class in one phase.
+#[derive(Debug, Clone, Default)]
+pub struct TenantClassStats {
+    /// Requests actually sent (`ok + rejected + errors`).
+    pub issued: u64,
+    /// Requests answered successfully.
+    pub ok: u64,
+    /// Requests refused with backpressure (framed 429/503).
+    pub rejected: u64,
+    /// Transport or non-backpressure 4xx/5xx answers.
+    pub errors: u64,
+    /// Ticks a polite sender dropped because a `Retry-After` window was
+    /// open (greedy senders never defer).
+    pub deferred: u64,
+    /// Client-observed latency quantiles over successful requests, ms.
+    pub p50_ms: Option<f64>,
+    /// 99th percentile, ms.
+    pub p99_ms: Option<f64>,
+}
+
+/// The fairness probe's verdict (the whole of `BENCH_fairness.json`).
+#[derive(Debug, Clone)]
+pub struct FairnessReport {
+    /// Polite tenant count.
+    pub polite_senders: usize,
+    /// Greedy tenant count.
+    pub greedy_senders: usize,
+    /// Per-principal `(rps, burst)` that was enforced.
+    pub rate_limit: (u64, u64),
+    /// Polite class with NO greedy tenants running (control phase).
+    pub baseline: TenantClassStats,
+    /// Polite class with the greedy tenants running.
+    pub polite: TenantClassStats,
+    /// The greedy class itself (expected mostly rejected).
+    pub greedy: TenantClassStats,
+    /// `polite.p99_ms / baseline.p99_ms` — the number CI gates on.
+    /// `None` when either phase produced no latency samples.
+    pub degradation_p99: Option<f64>,
+}
+
+/// Run the two-phase fairness probe (control, then contended).
+pub fn run_fairness(cfg: &FairnessConfig) -> crate::Result<FairnessReport> {
+    let (baseline, _) = fairness_phase(cfg, false)?;
+    let (polite, greedy) = fairness_phase(cfg, true)?;
+    let degradation_p99 = match (baseline.p99_ms, polite.p99_ms) {
+        (Some(b), Some(c)) if b > 0.0 => Some(c / b),
+        _ => None,
+    };
+    if cfg.log {
+        eprintln!(
+            "fairness: baseline polite p99 {} ms; contended polite p99 {} ms \
+             (x{} vs baseline); greedy {}/{} rejected",
+            fmt_ms(baseline.p99_ms),
+            fmt_ms(polite.p99_ms),
+            degradation_p99.map_or_else(|| "-".into(), |d| format!("{d:.2}")),
+            greedy.rejected,
+            greedy.issued,
+        );
+    }
+    Ok(FairnessReport {
+        polite_senders: cfg.polite,
+        greedy_senders: cfg.greedy,
+        rate_limit: cfg.rate_limit,
+        baseline,
+        polite,
+        greedy,
+        degradation_p99,
+    })
+}
+
+/// One phase: self-host a rate-limited gateway, one principal per
+/// tenant, open-loop senders per tenant, client-observed latencies per
+/// class. Greedy tenants exist in both phases (identical topology and
+/// ids); they only *send* when `greedy_on`.
+fn fairness_phase(
+    cfg: &FairnessConfig,
+    greedy_on: bool,
+) -> crate::Result<(TenantClassStats, TenantClassStats)> {
+    let secret = format!("fairness-{}-{greedy_on}", cfg.seed);
+    let svc = Arc::new(ServiceCore::new(secret.as_bytes()));
+    let admin_tok = svc.admin_token();
+    let gw = http_gw::GatewayConfig { rate_limit: Some(cfg.rate_limit), admin_exempt: true };
+    let server = http_gw::serve_with_limits(
+        svc.clone(),
+        "127.0.0.1:0",
+        cfg.workers,
+        httpd::HttpConfig::default(),
+        gw,
+    )?;
+    let mut admin = http_gw::HttpConn::new(server.addr.clone());
+    // (is_greedy, bearer token, owned site) per tenant principal.
+    let mut tenants: Vec<(bool, String, SiteId)> = Vec::new();
+    for i in 0..cfg.polite + cfg.greedy {
+        let is_greedy = i >= cfg.polite;
+        let user = admin
+            .api(&admin_tok, ApiRequest::CreateUser { name: format!("tenant-{i}") })
+            .map_err(|e| crate::util::error::err_msg(format!("fairness setup: CreateUser: {e}")))?
+            .user_id();
+        let token = svc.token_for(user);
+        let mut conn = http_gw::HttpConn::new(server.addr.clone());
+        let site = conn
+            .api(
+                &token,
+                ApiRequest::CreateSite {
+                    name: format!("fair-{i}"),
+                    hostname: "fair".into(),
+                    path: format!("/fair/{i}"),
+                },
+            )
+            .map_err(|e| crate::util::error::err_msg(format!("fairness setup: CreateSite: {e}")))?
+            .site_id();
+        tenants.push((is_greedy, token, site));
+    }
+
+    let start = Instant::now();
+    let results: Vec<(bool, TenantClassStats, Vec<f64>)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = tenants
+            .iter()
+            .map(|(is_greedy, token, site)| {
+                let is_greedy = *is_greedy;
+                let site = *site;
+                let token = token.clone();
+                let addr = server.addr.clone();
+                let rps = if is_greedy { cfg.greedy_rps } else { cfg.polite_rps };
+                let active = !is_greedy || greedy_on;
+                scope.spawn(move || {
+                    let mut st = TenantClassStats::default();
+                    let mut lat: Vec<f64> = Vec::new();
+                    if !active {
+                        return (is_greedy, st, lat);
+                    }
+                    let mut conn = http_gw::HttpConn::new(addr);
+                    let plan = OpenLoopPlan { rps, senders: 1, duration_s: cfg.duration_s };
+                    let mut pause_until: Option<Instant> = None;
+                    for tick in plan.sender_ticks(0) {
+                        let deadline = plan.deadline(tick);
+                        let now = start.elapsed();
+                        if now < deadline {
+                            std::thread::sleep(deadline - now);
+                        }
+                        if let Some(p) = pause_until {
+                            if Instant::now() < p {
+                                st.deferred += 1;
+                                continue;
+                            }
+                            pause_until = None;
+                        }
+                        let t0 = Instant::now();
+                        st.issued += 1;
+                        match conn.api(&token, ApiRequest::CountByState { site }) {
+                            Ok(_) => {
+                                st.ok += 1;
+                                lat.push(t0.elapsed().as_secs_f64() * 1e3);
+                            }
+                            Err(crate::service::ApiError::Backpressure { retry_after_s }) => {
+                                st.rejected += 1;
+                                if !is_greedy {
+                                    pause_until =
+                                        Some(Instant::now() + Duration::from_secs(retry_after_s));
+                                }
+                            }
+                            Err(_) => st.errors += 1,
+                        }
+                    }
+                    (is_greedy, st, lat)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap_or_default()).collect()
+    });
+    server.stop();
+
+    let mut polite = TenantClassStats::default();
+    let mut greedy = TenantClassStats::default();
+    let mut polite_lat: Vec<f64> = Vec::new();
+    let mut greedy_lat: Vec<f64> = Vec::new();
+    for (is_greedy, st, lat) in results {
+        let (acc, acc_lat) =
+            if is_greedy { (&mut greedy, &mut greedy_lat) } else { (&mut polite, &mut polite_lat) };
+        acc.issued += st.issued;
+        acc.ok += st.ok;
+        acc.rejected += st.rejected;
+        acc.errors += st.errors;
+        acc.deferred += st.deferred;
+        acc_lat.extend(lat);
+    }
+    polite.p50_ms = quantile_ms(&mut polite_lat, 0.50);
+    polite.p99_ms = quantile_ms(&mut polite_lat, 0.99);
+    greedy.p50_ms = quantile_ms(&mut greedy_lat, 0.50);
+    greedy.p99_ms = quantile_ms(&mut greedy_lat, 0.99);
+    Ok((polite, greedy))
+}
+
+/// Nearest-rank quantile over client-observed latencies, ms.
+fn quantile_ms(samples: &mut [f64], q: f64) -> Option<f64> {
+    if samples.is_empty() {
+        return None;
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((samples.len() - 1) as f64 * q).round() as usize;
+    Some(samples[idx])
+}
+
+impl TenantClassStats {
+    /// JSON record for one class in one phase.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("issued", Json::num(self.issued as f64)),
+            ("ok", Json::num(self.ok as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("deferred", Json::num(self.deferred as f64)),
+            ("p50_ms", opt_num(self.p50_ms)),
+            ("p99_ms", opt_num(self.p99_ms)),
+        ])
+    }
+}
+
+impl FairnessReport {
+    /// The whole of `BENCH_fairness.json`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("polite_senders", Json::num(self.polite_senders as f64)),
+            ("greedy_senders", Json::num(self.greedy_senders as f64)),
+            ("rate_limit_rps", Json::num(self.rate_limit.0 as f64)),
+            ("rate_limit_burst", Json::num(self.rate_limit.1 as f64)),
+            ("baseline", self.baseline.to_json()),
+            ("polite", self.polite.to_json()),
+            ("greedy", self.greedy.to_json()),
+            ("degradation_p99", opt_num(self.degradation_p99)),
+        ])
+    }
 }
 
 /// One `/metrics` scrape, parsed.
@@ -538,6 +841,7 @@ impl StepReport {
             ("issued", Json::num(self.issued as f64)),
             ("ok", Json::num(self.ok as f64)),
             ("errors", Json::num(self.errors as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
             ("skipped", Json::num(self.skipped as f64)),
             ("elapsed_s", Json::num(self.elapsed_s)),
             ("achieved_rps", Json::num(self.achieved_rps)),
@@ -605,6 +909,7 @@ mod tests {
             issued: 100,
             ok: 100,
             errors: 0,
+            rejected: 0,
             skipped: 0,
             elapsed_s: 1.0,
             achieved_rps: 100.0,
@@ -655,6 +960,7 @@ mod tests {
         assert_eq!(combo.get("declared_by").and_then(Json::as_str), Some("failure-rate"));
         let s0 = combo.get("steps").and_then(|s| s.idx(0)).unwrap();
         assert_eq!(s0.get("p50_ms").and_then(Json::as_f64), Some(2.5));
+        assert_eq!(s0.get("rejected").and_then(Json::as_f64), Some(0.0));
         assert!(matches!(s0.get("fsync_p95_ms"), Some(Json::Null)));
         // The whole thing survives a serialize/parse round trip.
         let reparsed = Json::parse(&j.to_string()).unwrap();

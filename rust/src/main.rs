@@ -33,11 +33,16 @@ fn main() {
                  \n          [--events-retain-bytes N] [--events-retain-age SECS]\
                  \n          [--workers N] [--no-keepalive] [--http-idle-timeout SECS]\
                  \n          [--http-max-requests N] [--subscribe-max-ms N] [--no-metrics]\
+                 \n          [--accept-queue-limit N] [--watch-page-max N]\
+                 \n          [--rate-limit RPS,BURST] [--rate-limit-admin-exempt]\
                  \n  loadgen [--quick] [--out FILE] [--target ADDR --token T]\
                  \n          [--mix submit,sync,watch] [--sites 1,4] [--sessions 2,8]\
                  \n          [--rps-start N] [--rps-factor X] [--rps-steps N] [--step-secs S]\
                  \n          [--stop-failure-rate F] [--stop-median-ms MS] [--workers N]\
                  \n          [--wal-dir DIR] [--fsync=never|always|group:K,Tms] [--seed N]\
+                 \n  loadgen --fairness [--quick] [--out FILE] [--polite N] [--greedy N]\
+                 \n          [--polite-rps R] [--greedy-rps R] [--fairness-secs S]\
+                 \n          [--rate-limit RPS,BURST] [--workers N] [--seed N]\
                  \n  runtime-check [--artifacts artifacts] [--model NAME]\
                  \n  state-graph",
                 balsam::experiments::ALL
@@ -102,10 +107,31 @@ fn cmd_service(args: &Args) -> balsam::Result<()> {
     );
     http.idle_timeout = std::time::Duration::from_secs_f64(idle_secs);
     http.max_requests_per_conn = args.u64_or("http-max-requests", 0) as usize;
+    // --accept-queue-limit bounds the transport's admission queue: past
+    // it the gateway sheds with a framed 503 + Retry-After instead of
+    // queueing without bound (0 disables shedding).
+    http.accept_queue_limit =
+        args.u64_or("accept-queue-limit", http.accept_queue_limit as u64) as usize;
     let workers = args.u64_or("workers", default_workers() as u64) as usize;
     let keep_alive = http.keep_alive;
     let idle = http.idle_timeout.as_secs();
+    // --rate-limit RPS,BURST turns on the per-principal token bucket;
+    // --rate-limit-admin-exempt keeps the bootstrap admin unthrottled
+    // for break-glass operations.
+    let mut gw = http_gw::GatewayConfig::default();
+    if let Some(spec) = args.get("rate-limit") {
+        let rl = parse_rate_limit(spec);
+        balsam::ensure!(
+            rl.is_some(),
+            "--rate-limit must be RPS,BURST (positive integers), got '{spec}'"
+        );
+        gw.rate_limit = rl;
+    }
+    gw.admin_exempt = args.flag("rate-limit-admin-exempt");
     let mut core = ServiceCore::with_persist(b"balsam-demo-secret", mode)?;
+    // --watch-page-max clamps one WatchEvents page server-side (the
+    // credit ceiling; clients may only lower it per request, 0 = no cap).
+    core.watch_page_max = args.u64_or("watch-page-max", core.watch_page_max as u64) as usize;
     // Server-side clamp on WatchEvents long polls: must stay below the
     // pooled client's read timeout (with a 1 s margin) or armed
     // subscribers would time out at the transport instead of renewing
@@ -124,9 +150,20 @@ fn cmd_service(args: &Args) -> balsam::Result<()> {
     balsam::util::metrics::set_enabled(metrics_on);
     let svc = Arc::new(core);
     let token = svc.admin_token();
-    let server = http_gw::serve_with(svc, addr, workers, http)?;
+    let rate_limited = gw.rate_limit;
+    let admin_exempt = gw.admin_exempt;
+    let queue_limit = http.accept_queue_limit;
+    let server = http_gw::serve_with_limits(svc, addr, workers, http, gw)?;
     println!("balsam service on http://{}", server.addr);
     println!("admin token: {token}");
+    match rate_limited {
+        Some((rps, burst)) => println!(
+            "admission: accept queue limit {queue_limit}, per-principal rate limit \
+             {rps} rps (burst {burst}){}",
+            if admin_exempt { ", admin exempt" } else { "" }
+        ),
+        None => println!("admission: accept queue limit {queue_limit}, no rate limit"),
+    }
     println!(
         "transport: {} ({workers} workers, idle timeout {idle}s)",
         if keep_alive { "HTTP/1.1 keep-alive" } else { "one request per connection" }
@@ -149,6 +186,11 @@ fn cmd_service(args: &Args) -> balsam::Result<()> {
 }
 
 fn cmd_loadgen(args: &Args) -> balsam::Result<()> {
+    // --fairness runs the greedy-vs-polite tenant probe instead of the
+    // capacity ladder (see docs/OPERATIONS.md "Backpressure & quotas").
+    if args.flag("fairness") {
+        return cmd_loadgen_fairness(args);
+    }
     // Capacity sweep (see docs/OPERATIONS.md "Capacity testing"): open-loop
     // rps ladder per (mix × sites × sessions) combo with stop-and-declare
     // SLO rules. Self-hosts a fresh service per combo unless --target (+
@@ -210,6 +252,55 @@ fn cmd_loadgen(args: &Args) -> balsam::Result<()> {
         println!("{json}");
     }
     Ok(())
+}
+
+fn cmd_loadgen_fairness(args: &Args) -> balsam::Result<()> {
+    let mut cfg = if args.flag("quick") {
+        balsam::loadgen::FairnessConfig::quick()
+    } else {
+        balsam::loadgen::FairnessConfig::default()
+    };
+    cfg.polite = args.u64_or("polite", cfg.polite as u64) as usize;
+    cfg.greedy = args.u64_or("greedy", cfg.greedy as u64) as usize;
+    cfg.polite_rps = args.f64_or("polite-rps", cfg.polite_rps);
+    cfg.greedy_rps = args.f64_or("greedy-rps", cfg.greedy_rps);
+    cfg.duration_s = args.f64_or("fairness-secs", cfg.duration_s);
+    if let Some(spec) = args.get("rate-limit") {
+        let rl = parse_rate_limit(spec);
+        balsam::ensure!(
+            rl.is_some(),
+            "--rate-limit must be RPS,BURST (positive integers), got '{spec}'"
+        );
+        cfg.rate_limit = rl.unwrap();
+    }
+    cfg.workers = args.u64_or("workers", cfg.workers as u64) as usize;
+    cfg.seed = args.u64_or("seed", cfg.seed);
+    balsam::ensure!(
+        cfg.polite >= 1 && cfg.greedy >= 1,
+        "--fairness needs at least one polite and one greedy tenant"
+    );
+    balsam::ensure!(
+        cfg.polite_rps > 0.0 && cfg.greedy_rps > 0.0 && cfg.duration_s > 0.0,
+        "--polite-rps, --greedy-rps and --fairness-secs must be > 0"
+    );
+    let report = balsam::loadgen::run_fairness(&cfg)?;
+    let json = report.to_json().to_string();
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, &json)
+            .map_err(|e| balsam::util::error::err_msg(format!("write {out}: {e}")))?;
+        eprintln!("fairness report written to {out}");
+    } else {
+        println!("{json}");
+    }
+    Ok(())
+}
+
+/// `RPS,BURST` — two positive integers.
+fn parse_rate_limit(spec: &str) -> Option<(u64, u64)> {
+    let (rps, burst) = spec.split_once(',')?;
+    let rps: u64 = rps.trim().parse().ok()?;
+    let burst: u64 = burst.trim().parse().ok()?;
+    (rps > 0 && burst > 0).then_some((rps, burst))
 }
 
 fn parse_usize_list(flag: &str, spec: &str) -> balsam::Result<Vec<usize>> {

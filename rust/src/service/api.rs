@@ -300,6 +300,14 @@ pub enum ApiRequest {
         since: usize,
         /// Max server-side hang, milliseconds (0 = non-blocking check).
         timeout_ms: u64,
+        /// Credit: max events the subscriber is ready to buffer in one
+        /// page (0 = server default). The server truncates the page to
+        /// `min(max_events, server cap)` oldest events; the cursor
+        /// (`last.seq + 1`) stays valid, so a slow subscriber simply
+        /// pages more often instead of forcing unbounded buffering.
+        /// Wire: optional `"max_events"` field — absent means 0, so old
+        /// clients keep working against new servers and vice versa.
+        max_events: usize,
     },
 }
 
@@ -468,6 +476,16 @@ pub enum ApiError {
     /// Server-side failure (e.g. a poisoned durable store): the request
     /// may not have been made durable. Served as a framed 500.
     Internal(String),
+    /// The service refused the request under load (HTTP 429 from the
+    /// per-principal rate limiter, or a framed 503 from transport load
+    /// shedding). The request was NOT processed; retry after
+    /// `retry_after_s` seconds (plus jitter). Never a lease-loss or
+    /// state-machine signal — callers back off and repeat the same
+    /// request.
+    Backpressure {
+        /// Server's `Retry-After` hint, seconds (≥ 1).
+        retry_after_s: u64,
+    },
 }
 
 impl std::fmt::Display for ApiError {
@@ -481,6 +499,9 @@ impl std::fmt::Display for ApiError {
             ApiError::BadRequest(s) => write!(f, "bad request: {s}"),
             ApiError::Transport(s) => write!(f, "transport: {s}"),
             ApiError::Internal(s) => write!(f, "internal: {s}"),
+            ApiError::Backpressure { retry_after_s } => {
+                write!(f, "backpressure: retry after {retry_after_s}s")
+            }
         }
     }
 }

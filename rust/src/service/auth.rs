@@ -9,6 +9,10 @@
 //! JWT authentication tokens were securely generated for each Balsam
 //! site", §4.1.2).
 
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
 use crate::util::sha256::{hex, hmac_sha256};
 
 use super::models::UserId;
@@ -56,6 +60,88 @@ impl TokenAuthority {
     }
 }
 
+/// Per-principal token-bucket rate limiter (the gateway's admission
+/// quota, paper §3.1's multi-tenant service boundary).
+///
+/// Each authenticated [`UserId`] gets an independent bucket holding up
+/// to `burst` tokens, refilled continuously at `rps` tokens/second; one
+/// request spends one token. An empty bucket means the request is
+/// refused with 429 + `Retry-After` (the caller computes the hint via
+/// the returned deficit). Buckets are lazily created full, so a quiet
+/// principal always has its full burst available.
+///
+/// The map is guarded by one `Mutex` — admission is a ~100ns critical
+/// section (one hash lookup + float math), orders of magnitude below
+/// the request work it gates, so a sharded or lock-free map would be
+/// speculative complexity here.
+#[derive(Debug)]
+pub struct RateLimiter {
+    /// Sustained refill rate, tokens (requests) per second.
+    rps: f64,
+    /// Bucket capacity: the tolerated burst above the sustained rate.
+    burst: f64,
+    /// Principals exempt from limiting (e.g. the admin user when the
+    /// `--rate-limit-admin-exempt` knob is on).
+    exempt: Vec<UserId>,
+    /// `user → (tokens, last refill instant)`.
+    buckets: Mutex<HashMap<UserId, (f64, Instant)>>,
+}
+
+/// Outcome of one admission check.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Admission {
+    /// Token spent; process the request.
+    Admit,
+    /// Bucket empty; refuse 429 with this `Retry-After` hint (seconds,
+    /// ≥ 1: the time until one token refills, rounded up).
+    Throttle(u64),
+}
+
+impl RateLimiter {
+    /// A limiter admitting `rps` sustained requests/second with bursts
+    /// up to `burst`. Both are clamped to ≥ 1 (a zero rate is expressed
+    /// by not installing a limiter at all).
+    pub fn new(rps: u64, burst: u64) -> RateLimiter {
+        RateLimiter {
+            rps: rps.max(1) as f64,
+            burst: burst.max(1) as f64,
+            exempt: Vec::new(),
+            buckets: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Exempt a principal (admin) from limiting.
+    pub fn exempt(mut self, user: UserId) -> RateLimiter {
+        self.exempt.push(user);
+        self
+    }
+
+    /// Admit or throttle one request from `user`, now.
+    pub fn check(&self, user: UserId) -> Admission {
+        self.check_at(user, Instant::now())
+    }
+
+    /// Clock-injected admission (tests drive time explicitly).
+    pub fn check_at(&self, user: UserId, now: Instant) -> Admission {
+        if self.exempt.contains(&user) {
+            return Admission::Admit;
+        }
+        let mut buckets = self.buckets.lock().unwrap_or_else(|e| e.into_inner());
+        let (tokens, last) = buckets.entry(user).or_insert((self.burst, now));
+        let elapsed = now.saturating_duration_since(*last).as_secs_f64();
+        *tokens = (*tokens + elapsed * self.rps).min(self.burst);
+        *last = now;
+        if *tokens >= 1.0 {
+            *tokens -= 1.0;
+            Admission::Admit
+        } else {
+            // Seconds until one whole token refills, rounded up.
+            let wait = (1.0 - *tokens) / self.rps;
+            Admission::Throttle((wait.ceil() as u64).max(1))
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -98,5 +184,58 @@ mod tests {
         assert_eq!(auth.validate(""), None);
         assert_eq!(auth.validate("balsam.1"), None);
         assert_eq!(auth.validate("x.y.z"), None);
+    }
+
+    #[test]
+    fn bucket_admits_burst_then_throttles() {
+        let rl = RateLimiter::new(10, 3);
+        let t0 = Instant::now();
+        for _ in 0..3 {
+            assert_eq!(rl.check_at(UserId(1), t0), Admission::Admit);
+        }
+        match rl.check_at(UserId(1), t0) {
+            Admission::Throttle(s) => assert!(s >= 1),
+            other => panic!("expected throttle, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bucket_refills_at_rps() {
+        let rl = RateLimiter::new(10, 1);
+        let t0 = Instant::now();
+        assert_eq!(rl.check_at(UserId(1), t0), Admission::Admit);
+        assert!(matches!(rl.check_at(UserId(1), t0), Admission::Throttle(_)));
+        // 10 rps → one token back after 100ms.
+        let t1 = t0 + std::time::Duration::from_millis(150);
+        assert_eq!(rl.check_at(UserId(1), t1), Admission::Admit);
+    }
+
+    #[test]
+    fn principals_have_independent_buckets() {
+        let rl = RateLimiter::new(1, 1);
+        let t0 = Instant::now();
+        assert_eq!(rl.check_at(UserId(1), t0), Admission::Admit);
+        assert!(matches!(rl.check_at(UserId(1), t0), Admission::Throttle(_)));
+        // A different principal still has its full burst.
+        assert_eq!(rl.check_at(UserId(2), t0), Admission::Admit);
+    }
+
+    #[test]
+    fn exempt_principal_is_never_throttled() {
+        let rl = RateLimiter::new(1, 1).exempt(UserId(0));
+        let t0 = Instant::now();
+        for _ in 0..100 {
+            assert_eq!(rl.check_at(UserId(0), t0), Admission::Admit);
+        }
+    }
+
+    #[test]
+    fn retry_after_hint_reflects_refill_deficit() {
+        // 1 rps, burst 1: after spending the token the deficit is a full
+        // token → 1s hint.
+        let rl = RateLimiter::new(1, 1);
+        let t0 = Instant::now();
+        assert_eq!(rl.check_at(UserId(9), t0), Admission::Admit);
+        assert_eq!(rl.check_at(UserId(9), t0), Admission::Throttle(1));
     }
 }

@@ -33,6 +33,13 @@ pub const DEFAULT_LEASE_TIMEOUT_S: f64 = 60.0;
 pub const DEFAULT_SUBSCRIBE_MAX_MS: u64 =
     crate::util::httpd::CLIENT_READ_TIMEOUT.as_millis() as u64 - 5_000;
 
+/// Default server-side cap on one `WatchEvents` page (events per
+/// response). Bounds what a single slow subscriber can make the server
+/// buffer and serialize in one response; subscribers with a deep cursor
+/// simply page more often (credit-based flow control). Clients may lower
+/// it per request via `WatchEvents { max_events }`, never raise it.
+pub const DEFAULT_WATCH_PAGE_MAX: usize = 1024;
+
 /// The central Balsam service.
 pub struct ServiceCore {
     pub store: Store,
@@ -42,6 +49,10 @@ pub struct ServiceCore {
     /// Server-side clamp on `WatchEvents { timeout_ms }` (CLI:
     /// `balsam service --subscribe-max-ms`).
     pub subscribe_max_ms: u64,
+    /// Server-side clamp on one `WatchEvents` page, events (CLI:
+    /// `balsam service --watch-page-max`; 0 = unlimited). A per-request
+    /// `max_events` credit can only lower it.
+    pub watch_page_max: usize,
     /// Free subscription-parking slots. Every armed `WatchEvents` hang
     /// pins the gateway worker thread that carries it, so parked watches
     /// are capped — `http_gw::serve_with` sizes this to `workers - 1`,
@@ -93,6 +104,7 @@ impl ServiceCore {
             admin,
             lease_timeout_s: DEFAULT_LEASE_TIMEOUT_S,
             subscribe_max_ms: DEFAULT_SUBSCRIBE_MAX_MS,
+            watch_page_max: DEFAULT_WATCH_PAGE_MAX,
             // Unbounded until a gateway sizes it: in-process callers
             // (simulations, tests) have no worker pool to starve.
             subscribe_free: AtomicU64::new(u64::MAX),
@@ -142,6 +154,21 @@ impl ServiceCore {
 
     pub fn admin_token(&self) -> String {
         self.auth.issue(self.admin)
+    }
+
+    /// Authenticate a bearer token without dispatching a request — the
+    /// gateway's rate limiter keys its per-principal buckets on this
+    /// *before* spending a worker on [`ServiceCore::handle`]. Same
+    /// validation as `handle` (signature + user existence), so a
+    /// throttled identity is always one that could have been served.
+    pub fn authenticate(&self, token: &str) -> Option<UserId> {
+        self.auth.validate(token).filter(|&u| self.store.user_exists(u))
+    }
+
+    /// The bootstrap admin principal (the rate limiter's exempt identity
+    /// when `--rate-limit-admin-exempt` is on).
+    pub fn admin_user(&self) -> UserId {
+        self.admin
     }
 
     /// API calls served so far.
@@ -371,7 +398,7 @@ impl ServiceCore {
             ApiRequest::ListEvents { since } => {
                 Ok(ApiResponse::Events(self.store.events_page(since as u64)?))
             }
-            ApiRequest::WatchEvents { site, since, timeout_ms } => {
+            ApiRequest::WatchEvents { site, since, timeout_ms, max_events } => {
                 // Long poll: answer immediately when the cursor already has
                 // something to read (events, or a retention marker for a
                 // cursor that fell behind), else park on the store's event
@@ -391,6 +418,15 @@ impl ServiceCore {
                     None => {}
                 }
                 let since = since as u64;
+                // Page credit: the subscriber's max_events can only lower
+                // the server's own page cap (0 on either side = "no
+                // opinion"). The capped page keeps the OLDEST events, so
+                // the `last.seq + 1` cursor never skips history.
+                let cap = match (max_events, self.watch_page_max) {
+                    (0, server) => server,
+                    (client, 0) => client,
+                    (client, server) => client.min(server),
+                };
                 let timeout = Duration::from_millis(timeout_ms.min(self.subscribe_max_ms));
                 // Bounded parking: arming requires a subscription slot;
                 // with none free (every other worker already pinned by a
@@ -403,7 +439,7 @@ impl ServiceCore {
                     // read and the wait re-triggers the wait immediately
                     // instead of being missed until the next commit.
                     let horizon = self.store.event_horizon();
-                    let page = self.store.events_page_for(site, since)?;
+                    let page = self.store.events_page_limited(site, since, cap)?;
                     if !page.events.is_empty() || page.truncated_before.is_some() {
                         return Ok(ApiResponse::Events(page));
                     }
@@ -1077,6 +1113,7 @@ mod tests {
                 site: Some(site),
                 since: 0,
                 timeout_ms: 30_000,
+                max_events: 0,
             })
             .unwrap()
             .events_page();
@@ -1096,6 +1133,7 @@ mod tests {
                 site: Some(site),
                 since: cursor,
                 timeout_ms: 50,
+                max_events: 0,
             })
             .unwrap()
             .events_page();
@@ -1103,7 +1141,7 @@ mod tests {
         assert!(t0.elapsed() >= Duration::from_millis(45), "must hang up to the timeout");
         // Non-blocking probe: timeout_ms = 0 returns at once.
         let t0 = std::time::Instant::now();
-        svc.handle(2.0, &tok, ApiRequest::WatchEvents { site: None, since: cursor, timeout_ms: 0 })
+        svc.handle(2.0, &tok, ApiRequest::WatchEvents { site: None, since: cursor, timeout_ms: 0, max_events: 0 })
             .unwrap();
         assert!(t0.elapsed() < Duration::from_millis(500));
     }
@@ -1131,6 +1169,7 @@ mod tests {
                 site: Some(site),
                 since: cursor,
                 timeout_ms: 20_000,
+                max_events: 0,
             })
             .unwrap()
             .events_page();
@@ -1166,13 +1205,14 @@ mod tests {
                 site: Some(site),
                 since: cursor,
                 timeout_ms: 50,
+                max_events: 0,
             })
             .unwrap()
             .events_page();
         assert!(page.events.is_empty(), "foreign-site events leaked into the filter");
         // Unfiltered watch sees them immediately.
         let page = svc
-            .handle(2.0, &tok, ApiRequest::WatchEvents { site: None, since: cursor, timeout_ms: 0 })
+            .handle(2.0, &tok, ApiRequest::WatchEvents { site: None, since: cursor, timeout_ms: 0, max_events: 0 })
             .unwrap()
             .events_page();
         assert!(!page.events.is_empty());
@@ -1189,6 +1229,7 @@ mod tests {
                 site: Some(site),
                 since: cursor,
                 timeout_ms: 10_000,
+                max_events: 0,
             })
             .unwrap()
             .events_page();
@@ -1201,9 +1242,85 @@ mod tests {
             site: Some(site),
             since: cursor,
             timeout_ms: 50,
+            max_events: 0,
         })
         .unwrap();
         assert!(t0.elapsed() >= Duration::from_millis(45));
+    }
+
+    /// Tentpole scenario: a stalled, tiny-credit subscriber never wedges
+    /// commits. Writers keep committing at full speed while a watcher
+    /// stalled at the old horizon pulls nothing; it then drains the whole
+    /// backlog in bounded `max_events` pages, gap-free, with oversized
+    /// credit asks clamped by the server-side cap.
+    #[test]
+    fn stalled_watcher_never_wedges_commits() {
+        let (mut svc, tok, site) = setup();
+        svc.watch_page_max = 3;
+        let base = svc.store.event_horizon();
+        // Burst of commits while the subscriber is stalled: every commit
+        // must succeed immediately — a slow or absent watcher has no
+        // handle on the write path (the wait runs outside store locks and
+        // the page credit bounds what any later pull serializes).
+        let t0 = std::time::Instant::now();
+        for i in 0..40u32 {
+            svc.handle(1.0 + f64::from(i), &tok, ApiRequest::BulkCreateJobs {
+                jobs: vec![JobCreate::simple(site, "EigenCorr", "xpcs")],
+            })
+            .unwrap();
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "commits wedged behind a stalled watcher");
+        let horizon = svc.store.event_horizon();
+        assert!(horizon - base >= 40, "burst must have committed events");
+        // The stalled subscriber wakes up and drains with 2-event credit:
+        // each page honors min(client 2, server 3) and starts exactly at
+        // the cursor — bounded pages, no gaps, full coverage.
+        let mut since = base as usize;
+        let mut seen = 0u64;
+        loop {
+            let page = svc
+                .handle(50.0, &tok, ApiRequest::WatchEvents {
+                    site: Some(site),
+                    since,
+                    timeout_ms: 0,
+                    max_events: 2,
+                })
+                .unwrap()
+                .events_page();
+            if page.events.is_empty() {
+                break;
+            }
+            assert!(page.events.len() <= 2, "credit violated: {} events", page.events.len());
+            assert_eq!(page.events[0].seq, since as u64, "page must start at the cursor");
+            for w in page.events.windows(2) {
+                assert!(w[0].seq < w[1].seq);
+            }
+            seen += page.events.len() as u64;
+            since = (page.events.last().unwrap().seq + 1) as usize;
+        }
+        assert_eq!(seen, horizon - base, "bounded pages must cover the whole backlog");
+        // Credit clamps: an oversized ask is capped by the server; a zero
+        // ask takes the server default.
+        let page = svc
+            .handle(51.0, &tok, ApiRequest::WatchEvents {
+                site: Some(site),
+                since: base as usize,
+                timeout_ms: 0,
+                max_events: 1000,
+            })
+            .unwrap()
+            .events_page();
+        assert_eq!(page.events.len(), 3, "server cap must clamp oversized credit");
+        let page = svc
+            .handle(51.0, &tok, ApiRequest::WatchEvents {
+                site: Some(site),
+                since: base as usize,
+                timeout_ms: 0,
+                max_events: 0,
+            })
+            .unwrap()
+            .events_page();
+        assert_eq!(page.events.len(), 3, "zero credit takes the server default cap");
     }
 
     #[test]
@@ -1214,12 +1331,12 @@ mod tests {
             .unwrap()
             .user_id();
         let mtok = svc.token_for(mallory);
-        let req = ApiRequest::WatchEvents { site: Some(site), since: 0, timeout_ms: 0 };
+        let req = ApiRequest::WatchEvents { site: Some(site), since: 0, timeout_ms: 0, max_events: 0 };
         let err = svc.handle(1.0, &mtok, req).unwrap_err();
         assert_eq!(err, ApiError::Unauthorized);
         // Omitting the filter must not bypass the per-site check: the
         // unfiltered stream is admin-only.
-        let req = ApiRequest::WatchEvents { site: None, since: 0, timeout_ms: 0 };
+        let req = ApiRequest::WatchEvents { site: None, since: 0, timeout_ms: 0, max_events: 0 };
         let err = svc.handle(1.0, &mtok, req).unwrap_err();
         assert_eq!(err, ApiError::Unauthorized);
     }

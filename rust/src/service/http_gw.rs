@@ -9,11 +9,14 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::util::httpd::{self, HttpClient, HttpConfig, Request, Response, Server};
+use crate::util::httpd::{
+    self, HttpClient, HttpConfig, Request, Response, Server, SHED_RETRY_AFTER_S,
+};
 use crate::util::json::{kv_from_json, kv_to_json, u64s_from_json, Json};
 use crate::util::metrics;
 
 use super::api::*;
+use super::auth::{Admission, RateLimiter};
 use super::core::ServiceCore;
 use super::models::*;
 
@@ -209,11 +212,12 @@ pub fn request_to_json(req: &ApiRequest) -> Json {
         ListEvents { since } => {
             Json::obj(vec![("type", Json::str("ListEvents")), ("since", Json::num(*since as f64))])
         }
-        WatchEvents { site, since, timeout_ms } => Json::obj(vec![
+        WatchEvents { site, since, timeout_ms, max_events } => Json::obj(vec![
             ("type", Json::str("WatchEvents")),
             ("site", site.map(|s| Json::num(s.0 as f64)).unwrap_or(Json::Null)),
             ("since", Json::num(*since as f64)),
             ("timeout_ms", Json::num(*timeout_ms as f64)),
+            ("max_events", Json::num(*max_events as f64)),
         ]),
     }
 }
@@ -395,11 +399,14 @@ pub fn request_from_json(j: &Json) -> Result<ApiRequest, String> {
             since: j.get("since").and_then(Json::as_u64).unwrap_or(0) as usize,
         },
         // A missing/garbled timeout degrades to a non-blocking probe (0),
-        // never to an accidental server-side hang.
+        // never to an accidental server-side hang. A missing `max_events`
+        // (old client) is 0 = server default — wire back-compat for the
+        // page-credit field.
         "WatchEvents" => ApiRequest::WatchEvents {
             site: j.get("site").and_then(Json::as_u64).map(SiteId),
             since: j.get("since").and_then(Json::as_u64).unwrap_or(0) as usize,
             timeout_ms: j.get("timeout_ms").and_then(Json::as_u64).unwrap_or(0),
+            max_events: j.get("max_events").and_then(Json::as_u64).unwrap_or(0) as usize,
         },
         other => return Err(format!("unknown request type {other}")),
     })
@@ -530,6 +537,37 @@ pub fn serve(service: Arc<ServiceCore>, addr: &str) -> crate::Result<Server> {
     serve_with(service, addr, httpd::default_workers(), HttpConfig::default())
 }
 
+/// Gateway-level admission knobs, beyond the transport's [`HttpConfig`].
+#[derive(Debug, Clone, Default)]
+pub struct GatewayConfig {
+    /// Per-principal token bucket: `Some((rps, burst))` installs the
+    /// limiter (CLI: `--rate-limit=RPS,BURST`); `None` = unlimited.
+    /// Throttled requests get 429 + `Retry-After` and count in
+    /// `balsam_api_throttled_total`.
+    pub rate_limit: Option<(u64, u64)>,
+    /// Exempt the bootstrap admin principal from the rate limit (CLI:
+    /// `--rate-limit-admin-exempt`) — operator tooling keeps working
+    /// while tenants are throttled.
+    pub admin_exempt: bool,
+}
+
+/// Which API requests the gateway sheds *first* under pressure: cheap
+/// reads whose callers poll and can harmlessly retry. Writes (job state,
+/// session sync, transfers) and `WatchEvents` (the push fabric; parked
+/// watches are already slot-bounded) keep flowing until the transport's
+/// hard limit sheds everything.
+fn sheddable_read(req: &ApiRequest) -> bool {
+    matches!(
+        req,
+        ApiRequest::ListEvents { .. }
+            | ApiRequest::ListJobs { .. }
+            | ApiRequest::CountByState { .. }
+            | ApiRequest::SiteBacklog { .. }
+            | ApiRequest::ListBatchJobs { .. }
+            | ApiRequest::PendingTransferItems { .. }
+    )
+}
+
 /// [`serve`] with an explicit worker-pool size and transport knobs:
 /// keep-alive on/off, idle timeout, max requests per connection (see
 /// [`HttpConfig`]). The `service_throughput` bench drives this with both
@@ -540,7 +578,40 @@ pub fn serve_with(
     workers: usize,
     http: HttpConfig,
 ) -> crate::Result<Server> {
+    serve_with_limits(service, addr, workers, http, GatewayConfig::default())
+}
+
+/// [`serve_with`] plus gateway admission control ([`GatewayConfig`]).
+/// Overload is a handled condition here, not a failure mode:
+///
+/// 1. the transport sheds whole requests with framed 503s once its
+///    accept queue passes [`HttpConfig::accept_queue_limit`];
+/// 2. this gateway sheds *cheap reads* with 503s already at half that
+///    depth (writes keep flowing — see [`sheddable_read`]);
+/// 3. the per-principal token bucket turns one tenant's burst into that
+///    tenant's 429s instead of everyone's latency.
+///
+/// `/healthz` and `/metrics` bypass all three (and the transport's
+/// pre-body shed path), so a saturated gateway stays observable.
+pub fn serve_with_limits(
+    service: Arc<ServiceCore>,
+    addr: &str,
+    workers: usize,
+    http: HttpConfig,
+    gw: GatewayConfig,
+) -> crate::Result<Server> {
     let t0 = Instant::now();
+    let limiter = gw.rate_limit.map(|(rps, burst)| {
+        let rl = RateLimiter::new(rps, burst);
+        if gw.admin_exempt {
+            rl.exempt(service.admin_user())
+        } else {
+            rl
+        }
+    });
+    // Soft-shed threshold for cheap reads: half the transport's hard
+    // limit (0 = soft shedding off, matching a disabled hard limit).
+    let soft_shed_at = http.accept_queue_limit / 2;
     // On Server::stop, wake every armed WatchEvents long poll so its
     // worker finishes the in-flight response and can be joined — a socket
     // shutdown alone cannot unblock a handler parked on the store condvar.
@@ -572,6 +643,7 @@ pub fn serve_with(
                     status: 200,
                     body: b"ok\n".to_vec(),
                     content_type: "text/plain",
+                    retry_after: None,
                 },
             };
         }
@@ -582,6 +654,7 @@ pub fn serve_with(
                 status: 200,
                 body: body.into_bytes(),
                 content_type: "text/plain; version=0.0.4",
+                retry_after: None,
             };
         }
         let token = req
@@ -592,6 +665,20 @@ pub fn serve_with(
         if req.method != "POST" || req.path != "/api" {
             return Response::error(404, "POST /api only");
         }
+        // Per-principal admission, before spending any parse work on the
+        // body. An unknown/invalid token falls through — `handle` turns
+        // it into the usual 401, and anonymous junk can't fill a bucket.
+        if let Some(rl) = &limiter {
+            if let Some(user) = service.authenticate(&token) {
+                if let Admission::Throttle(retry_s) = rl.check(user) {
+                    metrics::API_THROTTLED_TOTAL.inc();
+                    return Response::too_many_requests(
+                        &format!("rate limit exceeded for user {}", user.0),
+                        retry_s,
+                    );
+                }
+            }
+        }
         let parsed = match Json::parse(&req.body_str()) {
             Ok(j) => j,
             Err(e) => return Response::error(400, &format!("bad json: {e}")),
@@ -600,6 +687,13 @@ pub fn serve_with(
             Ok(r) => r,
             Err(e) => return Response::error(400, &e),
         };
+        // Soft shed: past half the accept-queue limit, refuse cheap reads
+        // with 503 + Retry-After so the remaining workers drain writes
+        // (the transport's pre-body shed takes over at the full limit).
+        if soft_shed_at > 0 && req.backlog >= soft_shed_at && sheddable_read(&api_req) {
+            metrics::HTTP_SHED_TOTAL.inc();
+            return Response::unavailable("overloaded: shedding reads", SHED_RETRY_AFTER_S);
+        }
         // Per-endpoint observability: the label is the wire discriminator
         // (captured before `api_req` moves into the handler), the latency
         // is handler wall time — for WatchEvents that includes the
@@ -615,15 +709,24 @@ pub fn serve_with(
                     ("ok", Json::Bool(false)),
                     ("error", Json::str(e.to_string())),
                 ]);
-                let status = match e {
-                    ApiError::Unauthorized => 401,
-                    ApiError::NotFound(_) => 404,
+                let (status, retry_after) = match &e {
+                    ApiError::Unauthorized => (401, None),
+                    ApiError::NotFound(_) => (404, None),
                     // Poisoned durable store (or any server-side fault):
                     // a framed 500, so keep-alive clients stay usable.
-                    ApiError::Internal(_) => 500,
-                    _ => 400,
+                    ApiError::Internal(_) => (500, None),
+                    // Totality: backpressure normally originates in this
+                    // gateway (above), but any core-raised variant still
+                    // reaches the wire as a well-formed 429.
+                    ApiError::Backpressure { retry_after_s } => (429, Some(*retry_after_s)),
+                    _ => (400, None),
                 };
-                Response { status, body: body.to_string().into_bytes(), content_type: "application/json" }
+                Response {
+                    status,
+                    body: body.to_string().into_bytes(),
+                    content_type: "application/json",
+                    retry_after,
+                }
             }
         }
     })?;
@@ -666,15 +769,23 @@ impl ApiConn for HttpConn {
     fn api(&mut self, token: &str, req: ApiRequest) -> Result<ApiResponse, ApiError> {
         let body = request_to_json(&req).to_string();
         let auth = format!("Bearer {token}");
-        let (status, bytes) = self
+        let (status, bytes, retry_after) = self
             .client
-            .request(
+            .request_with_retry_after(
                 "POST",
                 "/api",
                 &[("authorization", &auth), ("content-type", "application/json")],
                 body.as_bytes(),
             )
             .map_err(|e| ApiError::Transport(e.to_string()))?;
+        // Backpressure first: a framed 429 (rate limit) or 503 (load
+        // shed) means "not processed, retry later" — it carries the
+        // server's Retry-After and must never be mistaken for a lease
+        // loss or bad request. The shed path may answer with a plain-text
+        // body, so decode before any JSON parse.
+        if status == 429 || status == 503 {
+            return Err(ApiError::Backpressure { retry_after_s: retry_after.unwrap_or(1).max(1) });
+        }
         let text = String::from_utf8_lossy(&bytes);
         let parsed = Json::parse(&text).map_err(|e| ApiError::Transport(e.to_string()))?;
         if status == 200 {
@@ -732,8 +843,13 @@ mod tests {
                     (TransferItemId(12), TransferState::Error, None),
                 ],
             },
-            ApiRequest::WatchEvents { site: Some(SiteId(3)), since: 17, timeout_ms: 1500 },
-            ApiRequest::WatchEvents { site: None, since: 0, timeout_ms: 0 },
+            ApiRequest::WatchEvents {
+                site: Some(SiteId(3)),
+                since: 17,
+                timeout_ms: 1500,
+                max_events: 64,
+            },
+            ApiRequest::WatchEvents { site: None, since: 0, timeout_ms: 0, max_events: 0 },
         ];
         for req in reqs {
             let j = request_to_json(&req);
@@ -851,7 +967,7 @@ mod tests {
             ApiRequest::SyncTransferItems { updates: vec![] },
             ApiRequest::SiteBacklog { site: SiteId(1) },
             ApiRequest::ListEvents { since: 0 },
-            ApiRequest::WatchEvents { site: None, since: 0, timeout_ms: 0 },
+            ApiRequest::WatchEvents { site: None, since: 0, timeout_ms: 0, max_events: 0 },
         ];
         for req in &reqs {
             assert!(
@@ -865,6 +981,84 @@ mod tests {
         // One slot per variant plus the terminal catch-all.
         assert_eq!(metrics::ENDPOINTS.len(), reqs.len() + 1);
         assert_eq!(metrics::ENDPOINTS.last(), Some(&"other"));
+    }
+
+    /// Per-principal rate limiting end to end: a tenant that exhausts its
+    /// burst gets a framed 429 decoded as [`ApiError::Backpressure`] with
+    /// the server's Retry-After, while the exempt admin and an
+    /// independent polite tenant keep being served on the same gateway.
+    #[test]
+    fn rate_limiter_throttles_per_principal_with_retry_after() {
+        let svc = Arc::new(ServiceCore::new(b"rl"));
+        let admin_tok = svc.admin_token();
+        let gw = GatewayConfig { rate_limit: Some((1, 3)), admin_exempt: true };
+        let server =
+            serve_with_limits(svc.clone(), "127.0.0.1:0", 2, HttpConfig::default(), gw).unwrap();
+        let mut conn = HttpConn::new(server.addr.clone());
+
+        let greedy = conn
+            .api(&admin_tok, ApiRequest::CreateUser { name: "greedy".into() })
+            .unwrap()
+            .user_id();
+        let polite = conn
+            .api(&admin_tok, ApiRequest::CreateUser { name: "polite".into() })
+            .unwrap()
+            .user_id();
+        let gtok = svc.token_for(greedy);
+        let ptok = svc.token_for(polite);
+        let site = conn
+            .api(&gtok, ApiRequest::CreateSite { name: "s".into(), hostname: "h".into(), path: "/p".into() })
+            .unwrap()
+            .site_id();
+
+        // Burn through the greedy tenant's bucket (one token already went
+        // to CreateSite); the bucket refills at 1 rps so a tight loop must
+        // hit Throttle within the remaining burst + 1 calls.
+        let mut throttled = None;
+        for _ in 0..10 {
+            match conn.api(&gtok, ApiRequest::SiteBacklog { site }) {
+                Ok(_) => {}
+                Err(e) => {
+                    throttled = Some(e);
+                    break;
+                }
+            }
+        }
+        match throttled {
+            Some(ApiError::Backpressure { retry_after_s }) => assert!(retry_after_s >= 1),
+            other => panic!("expected Backpressure, got {other:?}"),
+        }
+        // Backpressure is per-principal: the polite tenant and the exempt
+        // admin are still admitted on the very next calls.
+        conn.api(&ptok, ApiRequest::ListEvents { since: 0 }).unwrap();
+        conn.api(&admin_tok, ApiRequest::ListEvents { since: 0 }).unwrap();
+        server.stop();
+    }
+
+    /// `/healthz` and `/metrics` must stay scrapeable while tenants are
+    /// throttled — they carry no token and never consult the limiter.
+    #[test]
+    fn health_and_metrics_bypass_the_rate_limiter() {
+        let svc = Arc::new(ServiceCore::new(b"byp"));
+        let tok = svc.admin_token();
+        // Admin NOT exempt and a bucket of one: the second API call is
+        // throttled, proving the scrapes below didn't ride on quota.
+        let gw = GatewayConfig { rate_limit: Some((1, 1)), admin_exempt: false };
+        let server =
+            serve_with_limits(svc.clone(), "127.0.0.1:0", 2, HttpConfig::default(), gw).unwrap();
+        let mut conn = HttpConn::new(server.addr.clone());
+
+        conn.api(&tok, ApiRequest::ListEvents { since: 0 }).unwrap();
+        let err = conn.api(&tok, ApiRequest::ListEvents { since: 0 }).unwrap_err();
+        assert!(matches!(err, ApiError::Backpressure { .. }), "{err:?}");
+
+        let mut scrape = HttpClient::new(server.addr.clone());
+        for path in ["/healthz", "/metrics"] {
+            let (status, body) = scrape.request("GET", path, &[], b"").unwrap();
+            assert_eq!(status, 200, "{path} must bypass the limiter");
+            assert!(!body.is_empty());
+        }
+        server.stop();
     }
 
     /// Tentpole contract: a whole API session (including error responses)

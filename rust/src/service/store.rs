@@ -1715,6 +1715,26 @@ impl Store {
         }
     }
 
+    /// [`Store::events_page_for`] with a page-size credit: at most `max`
+    /// events are returned (0 = unlimited), keeping the *oldest* so the
+    /// subscriber's `last.seq + 1` cursor advances without gaps — the
+    /// credit-based flow control behind `WatchEvents { max_events }`. A
+    /// slow subscriber bounds what the server buffers per response and
+    /// simply pages more often; the retention marker is unaffected (it
+    /// describes history below `since`, not the capped tail).
+    pub fn events_page_limited(
+        &self,
+        site: Option<SiteId>,
+        since: u64,
+        max: usize,
+    ) -> Result<EventsPage, ApiError> {
+        let mut page = self.events_page_for(site, since)?;
+        if max > 0 && page.events.len() > max {
+            page.events.truncate(max);
+        }
+        Ok(page)
+    }
+
     /// One shard's events with `seq >= since`: the in-memory hot tail plus
     /// (in WAL mode) the cold history from that shard's event segments.
     /// Gap-free for the same reason as [`Store::events_cut`] — a sequence

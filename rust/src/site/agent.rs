@@ -47,10 +47,12 @@ impl SiteAgent {
     /// module for new stage-in/out work, the launchers for jobs turning
     /// runnable. Returns the number of events observed. Errors are
     /// swallowed: the poll fallback in [`SiteAgent::step`] still drives
-    /// progress when the event channel is down.
-    pub fn pump_events(&mut self, conn: &mut dyn ApiConn, timeout_ms: u64) -> usize {
+    /// progress when the event channel is down. `now` lets the watcher
+    /// honor a gateway `Retry-After` cooldown (see
+    /// [`EventWatcher::watch`]); throttled pumps read as zero events.
+    pub fn pump_events(&mut self, conn: &mut dyn ApiConn, now: f64, timeout_ms: u64) -> usize {
         let site = Some(self.cfg.site_id);
-        let evs = match self.watcher.watch(conn, &self.cfg.token, site, timeout_ms) {
+        let evs = match self.watcher.watch(conn, &self.cfg.token, site, timeout_ms, now) {
             Ok(evs) => evs,
             Err(_) => return 0,
         };
@@ -191,14 +193,14 @@ mod tests {
         let mut agent = SiteAgent::new(cfg);
         let n = {
             let mut conn = InProcConn { now: 2.0, svc: &mut world.service };
-            agent.pump_events(&mut conn, 0)
+            agent.pump_events(&mut conn, 2.0, 0)
         };
         assert!(n > 0, "creation events must be observed");
         assert!(agent.watcher.cursor > 0);
         // Re-pump at the tail: nothing new.
         let n = {
             let mut conn = InProcConn { now: 2.0, svc: &mut world.service };
-            agent.pump_events(&mut conn, 0)
+            agent.pump_events(&mut conn, 2.0, 0)
         };
         assert_eq!(n, 0);
     }

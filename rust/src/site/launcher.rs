@@ -41,6 +41,9 @@ pub struct Launcher {
     /// Push-mode kick: attempt an acquisition at the next tick regardless
     /// of the fallback grid.
     acquire_kick: bool,
+    /// Honored `Retry-After`: no API call before this time after the
+    /// gateway answered 429/503 (absolute, includes jitter).
+    backoff_until: f64,
     idle_since: Option<f64>,
     pub exited: ExitReason,
     /// Completed-run counter (diagnostics).
@@ -64,6 +67,7 @@ impl Launcher {
             next_heartbeat: now,
             next_acquire: now,
             acquire_kick: false,
+            backoff_until: 0.0,
             idle_since: Some(now),
             exited: ExitReason::StillRunning,
             runs_done: 0,
@@ -79,6 +83,31 @@ impl Launcher {
         use crate::service::api::ApiError;
         if matches!(err, ApiError::NotFound(_) | ApiError::BadRequest(_)) {
             self.session = None;
+            return true;
+        }
+        false
+    }
+
+    /// Honor a gateway 429/503: defer every API call (the next whole
+    /// tick) by the server's `Retry-After` plus deterministic
+    /// per-launcher jitter — a throttled fleet must not re-arrive in
+    /// lockstep. The deferral is capped at the heartbeat period so an
+    /// honored hint can never starve the lease it is protecting; the
+    /// session is NOT dropped (backpressure is never a lease signal).
+    /// Returns `true` when the error was backpressure, so the caller can
+    /// end the tick — once throttled, nothing else should be sent.
+    fn note_backpressure(
+        &mut self,
+        now: f64,
+        cfg: &SiteConfig,
+        err: &crate::service::api::ApiError,
+    ) -> bool {
+        use crate::service::api::ApiError;
+        if let ApiError::Backpressure { retry_after_s } = err {
+            let base = *retry_after_s as f64;
+            let jitter = (self.local_alloc_id % 97) as f64 / 97.0 * base * 0.5;
+            let cap = cfg.launcher.heartbeat_period.max(1.0);
+            self.backoff_until = now + (base + jitter).min(cap);
             return true;
         }
         false
@@ -115,6 +144,12 @@ impl Launcher {
         if self.exited != ExitReason::StillRunning {
             return false;
         }
+        // Backpressure backoff: while an honored Retry-After is pending,
+        // the launcher stays silent (no heartbeat, no acquire, no sync) —
+        // retries are what the throttled gateway asked us not to send.
+        if now < self.backoff_until {
+            return true;
+        }
         // Session establishment (first tick, or re-registration after the
         // service revoked/expired the previous lease).
         if self.session.is_none() {
@@ -126,7 +161,10 @@ impl Launcher {
                     self.session = Some(resp.session_id());
                     self.sessions_established += 1;
                 }
-                Err(_) => return true, // transient; retry next tick
+                Err(e) => {
+                    self.note_backpressure(now, cfg, &e);
+                    return true; // transient; retry next tick
+                }
             }
         }
         let Some(session) = self.session else { return true };
@@ -170,6 +208,9 @@ impl Launcher {
                     // then reject individual updates for recovered jobs,
                     // which is its call to make; losing them here is not).
                     self.pending_updates = updates;
+                    if self.note_backpressure(now, cfg, &e) {
+                        return true;
+                    }
                     if self.lease_lost(&e) {
                         return true;
                     }
@@ -182,6 +223,9 @@ impl Launcher {
         if now >= self.next_heartbeat {
             self.next_heartbeat = now + cfg.launcher.heartbeat_period;
             if let Err(e) = conn.api(&cfg.token, ApiRequest::SessionHeartbeat { session }) {
+                if self.note_backpressure(now, cfg, &e) {
+                    return true;
+                }
                 if self.lease_lost(&e) {
                     return true;
                 }
@@ -248,6 +292,9 @@ impl Launcher {
                     }
                 }
                 Err(e) => {
+                    if self.note_backpressure(now, cfg, &e) {
+                        return true;
+                    }
                     if self.lease_lost(&e) {
                         return true;
                     }
@@ -451,6 +498,58 @@ mod tests {
             l.tick(3.0, &cfg, &mut conn, &mut exec);
         }
         assert_eq!(l.running_jobs(), ids.len());
+    }
+
+    /// Satellite contract: heartbeats under a rate-limited gateway back
+    /// off per `Retry-After` without losing the lease — a 429 is never a
+    /// lease-loss signal and the deferral silences the launcher until
+    /// the hint expires.
+    #[test]
+    fn backpressure_defers_heartbeat_without_losing_the_lease() {
+        use crate::service::api::{ApiError, ApiResponse};
+
+        struct Throttled {
+            calls: usize,
+        }
+        impl ApiConn for Throttled {
+            fn api(&mut self, _t: &str, _r: ApiRequest) -> Result<ApiResponse, ApiError> {
+                self.calls += 1;
+                Err(ApiError::Backpressure { retry_after_s: 2 })
+            }
+        }
+
+        let (mut svc, cfg, _site) = setup();
+        submit_simple(&mut svc, &cfg, 1);
+        let mut exec = SimExec::new(11);
+        let mut l = Launcher::new(BatchJobId(99), 1, 4, 0.0, 1e6);
+        {
+            let mut conn = InProcConn { now: 1.0, svc: &mut svc };
+            assert!(l.tick(1.0, &cfg, &mut conn, &mut exec));
+        }
+        assert_eq!(l.sessions_established, 1);
+
+        // The gateway starts throttling; force a heartbeat due now.
+        let mut throttled = Throttled { calls: 0 };
+        l.next_heartbeat = 2.0;
+        assert!(l.tick(2.0, &cfg, &mut throttled, &mut exec));
+        let after_first = throttled.calls;
+        assert!(after_first >= 1, "a call must have been attempted");
+        assert_eq!(l.sessions_established, 1, "429 must not drop the session");
+
+        // While the honored Retry-After (2 s) is pending: total silence.
+        assert!(l.tick(2.5, &cfg, &mut throttled, &mut exec));
+        assert!(l.tick(3.0, &cfg, &mut throttled, &mut exec));
+        assert_eq!(throttled.calls, after_first, "must stay silent during backoff");
+
+        // Gateway recovered: the SAME session heartbeats again (lease
+        // kept; no re-registration, no SessionEnd happened server-side).
+        l.next_heartbeat = 0.0;
+        {
+            let mut conn = InProcConn { now: 10.0, svc: &mut svc };
+            assert!(l.tick(10.0, &cfg, &mut conn, &mut exec));
+        }
+        assert_eq!(l.sessions_established, 1, "lease survived the throttle");
+        assert!(svc.store.sessions_snapshot().iter().all(|s| !s.ended));
     }
 
     #[test]

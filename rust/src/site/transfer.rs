@@ -35,6 +35,9 @@ pub struct TransferModule {
     pending_sync: Vec<(TransferItemId, TransferState, Option<XferTaskId>)>,
     /// Event-driven kick: the next tick runs regardless of the heartbeat.
     due_now: bool,
+    /// Honored `Retry-After`: no service round trip before this time
+    /// after the gateway answered 429/503 (absolute, includes jitter).
+    backoff_until: f64,
     /// Next fallback-heartbeat tick (absolute time, drift-free grid).
     pub next_due: f64,
     /// Next backend task-status poll while tasks (or unsent status
@@ -51,6 +54,7 @@ impl TransferModule {
             active: BTreeMap::new(),
             pending_sync: Vec::new(),
             due_now: false,
+            backoff_until: 0.0,
             next_due: 0.0,
             next_task_poll: 0.0,
             tasks_submitted: 0,
@@ -78,6 +82,26 @@ impl TransferModule {
         self.pending_sync.len()
     }
 
+    /// Honor a gateway 429/503: go quiet until `Retry-After` (plus
+    /// deterministic per-site jitter) expires. Returns `true` when the
+    /// error was backpressure. Retained batches plus the in-flight guard
+    /// make the deferral safe: nothing is lost and nothing is submitted
+    /// twice while the module waits.
+    fn note_backpressure(
+        &mut self,
+        now: f64,
+        cfg: &SiteConfig,
+        err: &crate::service::api::ApiError,
+    ) -> bool {
+        if let crate::service::api::ApiError::Backpressure { retry_after_s } = err {
+            let base = *retry_after_s as f64;
+            let jitter = (cfg.site_id.0 % 89) as f64 / 89.0 * base * 0.5;
+            self.backoff_until = self.backoff_until.max(now + base + jitter);
+            return true;
+        }
+        false
+    }
+
     /// Push a status batch to the API; on a *transient* failure
     /// (transport drop, service 500) retain it, in order, for the next
     /// tick. The server validates a batch before applying any of it, so
@@ -87,19 +111,29 @@ impl TransferModule {
     /// still lands instead of being wedged behind it forever.
     fn sync_or_retain(
         &mut self,
+        now: f64,
         cfg: &SiteConfig,
         conn: &mut dyn ApiConn,
         updates: Vec<(TransferItemId, TransferState, Option<XferTaskId>)>,
     ) {
         use crate::service::api::ApiError;
-        let transient =
-            |e: &ApiError| matches!(e, ApiError::Transport(_) | ApiError::Internal(_));
+        // Backpressure (a gateway 429/503 with Retry-After) is transient
+        // for retention purposes AND carries a deferral — the batch is
+        // retained intact and the module goes quiet until the hint
+        // expires, never re-sending into the throttle.
+        let transient = |e: &ApiError| {
+            matches!(
+                e,
+                ApiError::Transport(_) | ApiError::Internal(_) | ApiError::Backpressure { .. }
+            )
+        };
         if updates.is_empty() {
             return;
         }
         match conn.api(&cfg.token, ApiRequest::SyncTransferItems { updates: updates.clone() }) {
             Ok(_) => return,
             Err(e) if transient(&e) => {
+                self.note_backpressure(now, cfg, &e);
                 self.pending_sync.extend(updates);
                 return;
             }
@@ -119,6 +153,7 @@ impl TransferModule {
             match conn.api(&cfg.token, ApiRequest::SyncTransferItems { updates: vec![u] }) {
                 Ok(_) => {}
                 Err(e) if transient(&e) => {
+                    self.note_backpressure(now, cfg, &e);
                     self.pending_sync.push(u);
                     self.pending_sync.extend(it);
                     return;
@@ -151,6 +186,13 @@ impl TransferModule {
         conn: &mut dyn ApiConn,
         xfer: &mut dyn TransferBackend,
     ) -> f64 {
+        // Honored Retry-After: stay silent (no service round trips at
+        // all) until the deferral expires; the wake hint pushes the
+        // caller past it. `due_now` is left set so a deferred event kick
+        // fires on the first tick after the backoff.
+        if now < self.backoff_until {
+            return self.next_wake(now).max(self.backoff_until);
+        }
         let heartbeat_due = now >= self.next_due;
         let task_due = self.has_inflight() && now >= self.next_task_poll;
         if !self.due_now && !task_due && !heartbeat_due {
@@ -159,7 +201,7 @@ impl TransferModule {
         let fetch_new = self.due_now || heartbeat_due;
         self.due_now = false;
         self.poll_active(now, cfg, conn, xfer);
-        if fetch_new {
+        if fetch_new && now >= self.backoff_until {
             self.submit_new(now, cfg, conn, xfer);
         }
         // Drift-free fallback heartbeat (the old `next_due = now +
@@ -207,7 +249,7 @@ impl TransferModule {
                 XferStatus::Queued | XferStatus::Active => {}
             }
         }
-        self.sync_or_retain(cfg, conn, updates);
+        self.sync_or_retain(now, cfg, conn, updates);
     }
 
     /// Bundle pending items by (remote endpoint, direction) and submit up
@@ -246,12 +288,21 @@ impl TransferModule {
             if budget == 0 {
                 break;
             }
-            let Ok(resp) = conn.api(&cfg.token, ApiRequest::PendingTransferItems {
+            let resp = match conn.api(&cfg.token, ApiRequest::PendingTransferItems {
                 site: cfg.site_id,
                 direction,
                 limit: cfg.transfer.batch_size * budget,
-            }) else {
-                continue;
+            }) {
+                Ok(r) => r,
+                Err(e) => {
+                    // A throttled fetch stops the whole submit cycle —
+                    // retrying the other direction would just hammer the
+                    // same gateway the hint asked us to spare.
+                    if self.note_backpressure(now, cfg, &e) {
+                        break;
+                    }
+                    continue;
+                }
             };
             let pending = resp.transfer_items();
             // Group by remote endpoint — "batches transfer items between
@@ -297,7 +348,7 @@ impl TransferModule {
         // On failure the marks are retained and retried next tick; the
         // in-flight guard above keeps the still-Pending items from being
         // fetched into a duplicate task meanwhile.
-        self.sync_or_retain(cfg, conn, marks);
+        self.sync_or_retain(now, cfg, conn, marks);
     }
 }
 
@@ -598,6 +649,103 @@ mod tests {
             }
             t += 5.0;
             assert!(t < 600.0, "Done transitions were lost");
+        }
+        assert_eq!(tm.items_completed, 4);
+        svc.store.check_indexes().unwrap();
+    }
+
+    /// Answers SyncTransferItems with a gateway-style 429 while
+    /// `throttle_syncs > 0`, counting every API round trip.
+    struct ThrottledSyncConn<'a, 'b> {
+        inner: InProcConn<'a>,
+        throttle_syncs: &'b mut usize,
+        calls: &'b mut usize,
+    }
+
+    impl crate::service::api::ApiConn for ThrottledSyncConn<'_, '_> {
+        fn api(
+            &mut self,
+            token: &str,
+            req: ApiRequest,
+        ) -> Result<ApiResponse, crate::service::api::ApiError> {
+            *self.calls += 1;
+            if matches!(req, ApiRequest::SyncTransferItems { .. }) && *self.throttle_syncs > 0 {
+                *self.throttle_syncs -= 1;
+                return Err(crate::service::api::ApiError::Backpressure { retry_after_s: 2 });
+            }
+            self.inner.api(token, req)
+        }
+    }
+
+    /// Satellite pin: a throttled (429 + Retry-After) status sync retains
+    /// the batch, silences the module for the hinted window, and retries
+    /// without ever packing the still-Pending items into duplicate
+    /// backend tasks.
+    #[test]
+    fn backpressure_retains_batches_without_duplicate_submission() {
+        let (mut svc, _tok, site, cfg) = setup(8, 4);
+        submit_jobs(&mut svc, &cfg.token, site, 4, 1_000_000);
+        let mut tm = TransferModule::new();
+        let mut xfer = SimTransfer::new(21);
+        let pending_at = |svc: &ServiceCore| {
+            svc.store
+                .titems_snapshot()
+                .iter()
+                .filter(|t| t.state == TransferState::Pending)
+                .count()
+        };
+        // Tick 1: tasks are submitted, the Active-marks sync gets a 429
+        // with Retry-After: 2. The batch is retained and the backoff arms.
+        let mut throttles = 1usize;
+        let mut calls = 0usize;
+        {
+            let mut conn = ThrottledSyncConn {
+                inner: InProcConn { now: 1.0, svc: &mut svc },
+                throttle_syncs: &mut throttles,
+                calls: &mut calls,
+            };
+            tm.tick(1.0, &cfg, &mut conn, &mut xfer);
+        }
+        let submitted = tm.tasks_submitted;
+        assert!(submitted > 0);
+        assert!(tm.pending_sync_len() > 0, "throttled marks batch must be retained");
+        assert_eq!(pending_at(&svc), 4, "service saw no marks yet");
+        // Tick 2 at t=2.0: inside the Retry-After window. The module must
+        // be completely silent — zero service round trips — even with the
+        // heartbeat forced due, and the wake hint must clear the window.
+        let calls_after_throttle = calls;
+        {
+            let mut conn = ThrottledSyncConn {
+                inner: InProcConn { now: 2.0, svc: &mut svc },
+                throttle_syncs: &mut throttles,
+                calls: &mut calls,
+            };
+            tm.next_due = 0.0;
+            let wake = tm.tick(2.0, &cfg, &mut conn, &mut xfer);
+            assert!(wake >= 3.0, "wake hint must not re-enter the Retry-After window");
+        }
+        assert_eq!(calls, calls_after_throttle, "no round trips during backoff");
+        assert_eq!(tm.tasks_submitted, submitted, "no duplicate submission while throttled");
+        // Tick 3 at t=5.0: past the window (2s hint + <1s jitter). The
+        // retained batch lands exactly once; nothing was submitted twice.
+        {
+            let mut conn = InProcConn { now: 5.0, svc: &mut svc };
+            tm.next_due = 0.0;
+            tm.tick(5.0, &cfg, &mut conn, &mut xfer);
+        }
+        assert_eq!(tm.pending_sync_len(), 0);
+        assert_eq!(pending_at(&svc), 0, "retained marks delivered after backoff");
+        assert_eq!(tm.tasks_submitted, submitted, "recovery must not duplicate tasks");
+        // Drive to completion: every item finishes exactly once.
+        let mut t = 10.0;
+        while svc.store.count_in_state(site, JobState::Preprocessed) < 4 {
+            {
+                let mut conn = InProcConn { now: t, svc: &mut svc };
+                tm.next_due = 0.0;
+                tm.tick(t, &cfg, &mut conn, &mut xfer);
+            }
+            t += 5.0;
+            assert!(t < 600.0, "staging never completed after backpressure");
         }
         assert_eq!(tm.items_completed, 4);
         svc.store.check_indexes().unwrap();

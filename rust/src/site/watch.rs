@@ -32,6 +32,16 @@ pub struct EventWatcher {
     /// in `[old cursor, new cursor)` were dropped before this watcher
     /// read them.
     pub truncations: u64,
+    /// Per-page credit: the most events one watch round trip may return
+    /// (`0` accepts the server default). A slow consumer sets this to
+    /// bound how much the gateway buffers and serializes on its behalf;
+    /// the cursor pages through the backlog gap-free either way.
+    pub max_events: usize,
+    /// Honored `Retry-After`: watch calls before this time are silent
+    /// no-ops (absolute, includes jitter).
+    pub cooldown_until: f64,
+    /// Watch round trips answered with 429/503 (diagnostics).
+    pub throttled: u64,
 }
 
 impl EventWatcher {
@@ -52,15 +62,41 @@ impl EventWatcher {
     /// timed out — re-arm by calling again. `site = None` subscribes to
     /// every site's events; a site filter still pages on the global
     /// sequence.
+    ///
+    /// Backpressure is absorbed here: a gateway 429/503 arms a cooldown
+    /// for the hinted `Retry-After` window (plus deterministic jitter)
+    /// and reads as an empty page, as do calls made while the cooldown
+    /// is armed — those send nothing at all. The event channel is a
+    /// wakeup accelerator, so degrading to "no events" is always safe:
+    /// the module poll fallbacks still drive progress.
     pub fn watch(
         &mut self,
         conn: &mut dyn ApiConn,
         token: &str,
         site: Option<SiteId>,
         timeout_ms: u64,
+        now: f64,
     ) -> Result<Vec<Event>, ApiError> {
-        let req = ApiRequest::WatchEvents { site, since: self.cursor as usize, timeout_ms };
-        let page = conn.api(token, req)?.events_page();
+        if now < self.cooldown_until {
+            return Ok(Vec::new());
+        }
+        let req = ApiRequest::WatchEvents {
+            site,
+            since: self.cursor as usize,
+            timeout_ms,
+            max_events: self.max_events,
+        };
+        let page = match conn.api(token, req) {
+            Ok(resp) => resp.events_page(),
+            Err(ApiError::Backpressure { retry_after_s }) => {
+                self.throttled += 1;
+                let base = retry_after_s as f64;
+                let jitter = (self.cursor % 83) as f64 / 83.0 * base * 0.5;
+                self.cooldown_until = self.cooldown_until.max(now + base + jitter);
+                return Ok(Vec::new());
+            }
+            Err(e) => return Err(e),
+        };
         self.watches += 1;
         if let Some(t) = page.truncated_before {
             if t > self.cursor {
@@ -109,7 +145,7 @@ mod tests {
         let mut w = EventWatcher::new();
         let evs = {
             let mut conn = InProcConn { now: 2.0, svc: &mut svc };
-            w.watch(&mut conn, &tok, Some(site), 0).unwrap()
+            w.watch(&mut conn, &tok, Some(site), 0, 2.0).unwrap()
         };
         assert!(!evs.is_empty());
         assert_eq!(w.cursor, evs.last().unwrap().seq + 1);
@@ -117,10 +153,136 @@ mod tests {
         // leaves the cursor alone.
         let again = {
             let mut conn = InProcConn { now: 2.0, svc: &mut svc };
-            w.watch(&mut conn, &tok, Some(site), 0).unwrap()
+            w.watch(&mut conn, &tok, Some(site), 0, 2.0).unwrap()
         };
         assert!(again.is_empty());
         assert_eq!(w.watches, 2);
         assert_eq!(w.truncations, 0);
+    }
+
+    /// Per-page credit: a `max_events` watcher drains a deep backlog in
+    /// bounded pages, gap-free, and a `0` credit takes whole pages.
+    #[test]
+    fn credit_pages_through_backlog_gap_free() {
+        let mut svc = ServiceCore::new(b"w2");
+        let tok = svc.admin_token();
+        let site = svc
+            .handle(0.0, &tok, ApiRequest::CreateSite {
+                name: "theta".into(),
+                hostname: "h".into(),
+                path: "/p".into(),
+            })
+            .unwrap()
+            .site_id();
+        svc.handle(0.0, &tok, ApiRequest::RegisterApp {
+            site,
+            name: "MD".into(),
+            command_template: "md".into(),
+            parameters: vec![],
+        })
+        .unwrap();
+        svc.handle(1.0, &tok, ApiRequest::BulkCreateJobs {
+            jobs: (0..5).map(|_| JobCreate::simple(site, "MD", "md_small")).collect(),
+        })
+        .unwrap();
+        let total = {
+            let mut w = EventWatcher::new();
+            let mut conn = InProcConn { now: 2.0, svc: &mut svc };
+            w.watch(&mut conn, &tok, Some(site), 0, 2.0).unwrap().len()
+        };
+        assert!(total >= 5, "expected a backlog, saw {total} events");
+        let mut w = EventWatcher::new();
+        w.max_events = 2;
+        let mut seen = Vec::new();
+        for _ in 0..total + 1 {
+            let mut conn = InProcConn { now: 2.0, svc: &mut svc };
+            let page = w.watch(&mut conn, &tok, Some(site), 0, 2.0).unwrap();
+            assert!(page.len() <= 2, "credit violated: {} events in one page", page.len());
+            if page.is_empty() {
+                break;
+            }
+            seen.extend(page);
+        }
+        assert_eq!(seen.len(), total, "paged drain must miss nothing");
+        assert!(seen.windows(2).all(|p| p[0].seq < p[1].seq), "pages must stay ordered");
+        assert_eq!(w.truncations, 0);
+    }
+
+    /// Counts WatchEvents round trips and answers them all with a
+    /// gateway-style 429 + Retry-After.
+    struct ThrottledWatchConn<'a, 'b> {
+        inner: InProcConn<'a>,
+        calls: &'b mut usize,
+    }
+
+    impl crate::service::api::ApiConn for ThrottledWatchConn<'_, '_> {
+        fn api(
+            &mut self,
+            token: &str,
+            req: ApiRequest,
+        ) -> Result<crate::service::api::ApiResponse, ApiError> {
+            if matches!(req, ApiRequest::WatchEvents { .. }) {
+                *self.calls += 1;
+                return Err(ApiError::Backpressure { retry_after_s: 2 });
+            }
+            self.inner.api(token, req)
+        }
+    }
+
+    /// A throttled watch reads as an empty page, arms a cooldown for the
+    /// hinted window (during which no round trips happen at all), and
+    /// resumes cleanly afterwards without losing cursor position.
+    #[test]
+    fn backpressure_cooldown_suppresses_watch_round_trips() {
+        let mut svc = ServiceCore::new(b"w3");
+        let tok = svc.admin_token();
+        let site = svc
+            .handle(0.0, &tok, ApiRequest::CreateSite {
+                name: "theta".into(),
+                hostname: "h".into(),
+                path: "/p".into(),
+            })
+            .unwrap()
+            .site_id();
+        svc.handle(0.0, &tok, ApiRequest::RegisterApp {
+            site,
+            name: "MD".into(),
+            command_template: "md".into(),
+            parameters: vec![],
+        })
+        .unwrap();
+        svc.handle(1.0, &tok, ApiRequest::BulkCreateJobs {
+            jobs: vec![JobCreate::simple(site, "MD", "md_small")],
+        })
+        .unwrap();
+
+        let mut w = EventWatcher::new();
+        let mut calls = 0usize;
+        // Throttled: absorbed as an empty page, cooldown armed.
+        let evs = {
+            let mut conn =
+                ThrottledWatchConn { inner: InProcConn { now: 1.0, svc: &mut svc }, calls: &mut calls };
+            w.watch(&mut conn, &tok, Some(site), 0, 1.0).unwrap()
+        };
+        assert!(evs.is_empty());
+        assert_eq!(w.throttled, 1);
+        assert_eq!(calls, 1);
+        assert!(w.cooldown_until >= 3.0, "cooldown must cover the Retry-After hint");
+        // Inside the window: completely silent, not even a round trip.
+        let evs = {
+            let mut conn =
+                ThrottledWatchConn { inner: InProcConn { now: 2.0, svc: &mut svc }, calls: &mut calls };
+            w.watch(&mut conn, &tok, Some(site), 0, 2.0).unwrap()
+        };
+        assert!(evs.is_empty());
+        assert_eq!(calls, 1, "no watch round trips during the cooldown");
+        // Past the window: the watch resumes from the original cursor and
+        // delivers the backlog.
+        let evs = {
+            let mut conn = InProcConn { now: 5.0, svc: &mut svc };
+            w.watch(&mut conn, &tok, Some(site), 0, 5.0).unwrap()
+        };
+        assert!(!evs.is_empty(), "backlog must be delivered after the cooldown");
+        assert_eq!(w.cursor, evs.last().unwrap().seq + 1);
     }
 }

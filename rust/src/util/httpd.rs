@@ -29,7 +29,7 @@
 
 use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -51,6 +51,23 @@ pub fn default_workers() -> usize {
 /// derived from it), or armed subscribers would tear down their pooled
 /// connections instead of renewing cleanly.
 pub const CLIENT_READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// `Retry-After` seconds advertised on transport-level shed responses.
+/// Deliberately short: shedding is a transient queue condition, and the
+/// honoring clients add their own jitter on top.
+pub const SHED_RETRY_AFTER_S: u64 = 1;
+
+/// Paths exempt from load shedding. A saturated gateway that cannot be
+/// scraped is unobservable exactly when observability matters most, so
+/// the operational endpoints are admitted even when every other request
+/// is being shed (they are cheap, unauthenticated, and never park).
+pub const SHED_EXEMPT_PATHS: &[&str] = &["/healthz", "/metrics"];
+
+fn shed_exempt(path: &str) -> bool {
+    // Ignore any query string: the exemption is per-endpoint.
+    let bare = path.split('?').next().unwrap_or(path);
+    SHED_EXEMPT_PATHS.contains(&bare)
+}
 
 /// Whether keep-alive is enabled by default in this process: the
 /// `BALSAM_HTTP_KEEPALIVE` env var ("0"/"false"/"off" disables), else on.
@@ -88,6 +105,16 @@ pub struct HttpConfig {
     pub max_line_bytes: usize,
     /// Bound on the header count per request.
     pub max_headers: usize,
+    /// Admission control: once the accept-queue backlog (connections
+    /// accepted but not yet picked up by a worker) reaches this depth,
+    /// workers shed incoming requests with a framed `503` +
+    /// `Retry-After` *before reading the body* (the head is parsed so
+    /// [`SHED_EXEMPT_PATHS`] stay reachable), and past **4x** this depth
+    /// the acceptor sheds whole connections with a canned 503 without
+    /// reading a byte — the hard bound that fixes the historical
+    /// unbounded-enqueue overload collapse. `0` disables shedding (the
+    /// pre-bound behavior, kept for tests and closed environments).
+    pub accept_queue_limit: usize,
 }
 
 impl Default for HttpConfig {
@@ -99,6 +126,7 @@ impl Default for HttpConfig {
             max_body_bytes: 64 << 20,
             max_line_bytes: 8 << 10,
             max_headers: 64,
+            accept_queue_limit: 512,
         }
     }
 }
@@ -119,6 +147,11 @@ pub struct Request {
     pub version: String,
     pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
+    /// Accept-queue backlog sampled when this request was admitted —
+    /// handlers use it for application-level soft shedding (cheap reads
+    /// first) below the transport's hard `accept_queue_limit`. Zero for
+    /// requests parsed outside a server worker (tests, direct parsing).
+    pub backlog: usize,
 }
 
 impl Request {
@@ -155,11 +188,20 @@ pub struct Response {
     pub status: u16,
     pub body: Vec<u8>,
     pub content_type: &'static str,
+    /// Emit a `Retry-After: N` header (seconds). Set on every
+    /// backpressure response (429/503) so honoring clients can back off
+    /// instead of hammering.
+    pub retry_after: Option<u64>,
 }
 
 impl Response {
     pub fn ok_json(body: String) -> Response {
-        Response { status: 200, body: body.into_bytes(), content_type: "application/json" }
+        Response {
+            status: 200,
+            body: body.into_bytes(),
+            content_type: "application/json",
+            retry_after: None,
+        }
     }
 
     /// Error response. Framing headers (`Content-Length`, `Connection`)
@@ -167,7 +209,24 @@ impl Response {
     /// keep-alive client can continue on the same connection after a 4xx
     /// instead of desynchronizing.
     pub fn error(status: u16, msg: &str) -> Response {
-        Response { status, body: msg.as_bytes().to_vec(), content_type: "text/plain" }
+        Response {
+            status,
+            body: msg.as_bytes().to_vec(),
+            content_type: "text/plain",
+            retry_after: None,
+        }
+    }
+
+    /// `503 Service Unavailable` + `Retry-After`: the load-shedding
+    /// response (overloaded, not broken — come back shortly).
+    pub fn unavailable(msg: &str, retry_after_s: u64) -> Response {
+        Response { retry_after: Some(retry_after_s), ..Response::error(503, msg) }
+    }
+
+    /// `429 Too Many Requests` + `Retry-After`: the per-principal
+    /// rate-limit response.
+    pub fn too_many_requests(msg: &str, retry_after_s: u64) -> Response {
+        Response { retry_after: Some(retry_after_s), ..Response::error(429, msg) }
     }
 
     fn reason(&self) -> &'static str {
@@ -178,6 +237,7 @@ impl Response {
             401 => "Unauthorized",
             404 => "Not Found",
             409 => "Conflict",
+            429 => "Too Many Requests",
             500 => "Internal Server Error",
             503 => "Service Unavailable",
             _ => "Unknown",
@@ -252,12 +312,18 @@ impl Server {
         let conns: Arc<Mutex<Vec<(u64, TcpStream)>>> = Arc::default();
         let (tx, rx) = mpsc::channel::<(u64, TcpStream)>();
         let rx = Arc::new(Mutex::new(rx));
+        // Accept-queue depth: connections enqueued but not yet picked up
+        // by a worker. The control signal for admission decisions — a
+        // plain atomic (not a metrics gauge) so shedding keeps working
+        // under `--no-metrics`.
+        let queued: Arc<AtomicUsize> = Arc::default();
         let mut handles = Vec::with_capacity(workers + 1);
         for _ in 0..workers {
             let rx = rx.clone();
             let h = handler.clone();
             let cfg = cfg.clone();
             let conns = conns.clone();
+            let queued = queued.clone();
             handles.push(std::thread::spawn(move || loop {
                 // The guard's temporary is dropped at the end of this
                 // statement, so the queue lock is never held while a
@@ -265,8 +331,10 @@ impl Server {
                 let next = rx.lock().unwrap().recv();
                 match next {
                     Ok((id, stream)) => {
+                        let depth = queued.fetch_sub(1, Ordering::Relaxed).saturating_sub(1);
+                        metrics::HTTP_ACCEPT_QUEUE_DEPTH.set(depth as i64);
                         metrics::HTTP_WORKERS_BUSY.inc();
-                        let _ = handle_conn(stream, &*h, &cfg);
+                        let _ = handle_conn(stream, &*h, &cfg, &queued);
                         metrics::HTTP_WORKERS_BUSY.dec();
                         metrics::HTTP_CONNECTIONS_OPEN.dec();
                         conns.lock().unwrap().retain(|(i, _)| *i != id);
@@ -278,6 +346,7 @@ impl Server {
         }
         let stop2 = stop.clone();
         let conns2 = conns.clone();
+        let queued2 = queued.clone();
         handles.push(std::thread::spawn(move || {
             let mut next_id = 0u64;
             while !stop2.load(Ordering::Relaxed) {
@@ -286,16 +355,32 @@ impl Server {
                         // The accepted stream may inherit the listener's
                         // non-blocking flag on some platforms.
                         let _ = stream.set_nonblocking(false);
-                        next_id += 1;
                         metrics::HTTP_CONNECTIONS_TOTAL.inc();
+                        // Hard bound (4x the shed threshold): past it the
+                        // acceptor refuses the connection outright with a
+                        // canned 503 + Retry-After — it cannot inspect
+                        // the path without reading (which would let one
+                        // slow client stall all accepts), so this tier
+                        // only engages when the worker-side shedding has
+                        // already been overrun.
+                        let limit = cfg.accept_queue_limit;
+                        if limit > 0 && queued2.load(Ordering::Relaxed) >= limit.saturating_mul(4)
+                        {
+                            shed_connection(stream);
+                            continue;
+                        }
+                        next_id += 1;
                         metrics::HTTP_CONNECTIONS_OPEN.inc();
                         if let Ok(clone) = stream.try_clone() {
                             conns2.lock().unwrap().push((next_id, clone));
                         }
+                        let depth = queued2.fetch_add(1, Ordering::Relaxed) + 1;
+                        metrics::HTTP_ACCEPT_QUEUE_DEPTH.set(depth as i64);
                         if tx.send((next_id, stream)).is_err() {
                             // Shutdown race: no worker will serve (and
                             // close out) this connection.
                             metrics::HTTP_CONNECTIONS_OPEN.dec();
+                            queued2.fetch_sub(1, Ordering::Relaxed);
                             break;
                         }
                     }
@@ -344,7 +429,28 @@ impl Server {
     }
 }
 
-/// Outcome of reading one request off a persistent connection.
+/// Refuse a connection at the acceptor with a canned framed 503 +
+/// `Retry-After`, without reading a byte from the peer. Best-effort: the
+/// write is bounded by a short timeout so a peer with a wedged receive
+/// window cannot stall the accept loop.
+fn shed_connection(stream: TcpStream) {
+    metrics::HTTP_SHED_TOTAL.inc();
+    let mut s = stream;
+    let _ = s.set_write_timeout(Some(Duration::from_secs(1)));
+    let body = "overloaded";
+    let _ = write!(
+        s,
+        "HTTP/1.1 503 Service Unavailable\r\ncontent-type: text/plain\r\n\
+         content-length: {}\r\nretry-after: {SHED_RETRY_AFTER_S}\r\nconnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = s.flush();
+}
+
+/// Outcome of reading one request off a persistent connection (the
+/// tests' composed head+body parse; the serving path uses
+/// [`HeadOutcome`] so it can shed between head and body).
+#[cfg(test)]
 enum ReadOutcome {
     Req(Request),
     /// Peer closed (or the idle timeout fired) before sending anything —
@@ -356,13 +462,25 @@ enum ReadOutcome {
     Bad(String),
 }
 
+/// Outcome of reading a request *head* (request line + headers) — the
+/// shed decision point: method, path and declared body length are known,
+/// but no body byte has been read yet.
+enum HeadOutcome {
+    /// Parsed head plus the declared `Content-Length` still on the wire.
+    Head(Request, usize),
+    Closed,
+    Bad(String),
+}
+
 /// Per-connection request loop: serve until the peer closes, asks for
 /// close, violates the protocol, exceeds the request budget, or goes
-/// silent past the idle timeout.
+/// silent past the idle timeout. `queued` is the server's accept-queue
+/// depth — the admission-control signal sampled per request.
 fn handle_conn<F: Fn(Request) -> Response>(
     stream: TcpStream,
     handler: &F,
     cfg: &HttpConfig,
+    queued: &AtomicUsize,
 ) -> Result<()> {
     // One write per response + no Nagle: a pipelined launcher round trip
     // is exactly one segment each way.
@@ -372,17 +490,39 @@ fn handle_conn<F: Fn(Request) -> Response>(
     let mut out = stream;
     let mut served = 0usize;
     loop {
-        match read_request(&mut reader, cfg) {
-            ReadOutcome::Closed => break,
-            ReadOutcome::Bad(msg) => {
+        match read_head(&mut reader, cfg) {
+            HeadOutcome::Closed => break,
+            HeadOutcome::Bad(msg) => {
                 // Best-effort: the peer may have half-closed its write
                 // side and still be reading (the fault-injection tests
                 // assert this 400 arrives on a half-closed socket).
                 let _ = write_response(&mut out, &Response::error(400, &msg), false, cfg);
                 break;
             }
-            ReadOutcome::Req(req) => {
+            HeadOutcome::Head(mut req, content_len) => {
                 served += 1;
+                let backlog = queued.load(Ordering::Relaxed);
+                // Load shedding before the body is read: when the accept
+                // queue is past the configured depth, spending time (and
+                // memory) consuming this request's body only deepens the
+                // collapse. The operational endpoints are exempt so an
+                // overloaded gateway remains observable.
+                if cfg.accept_queue_limit > 0
+                    && backlog >= cfg.accept_queue_limit
+                    && !shed_exempt(&req.path)
+                {
+                    metrics::HTTP_SHED_TOTAL.inc();
+                    let resp =
+                        Response::unavailable("overloaded: accept queue full", SHED_RETRY_AFTER_S);
+                    // The unread body makes the stream unframed: close.
+                    let _ = write_response(&mut out, &resp, false, cfg);
+                    break;
+                }
+                if let Err(msg) = read_body(&mut reader, content_len, &mut req.body) {
+                    let _ = write_response(&mut out, &Response::error(400, &msg), false, cfg);
+                    break;
+                }
+                req.backlog = backlog;
                 let close = !cfg.keep_alive
                     || req.wants_close()
                     || (cfg.max_requests_per_conn > 0 && served >= cfg.max_requests_per_conn);
@@ -416,39 +556,40 @@ fn is_timeout(e: &std::io::Error) -> bool {
     matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
 }
 
-/// Parse one request. Every malformed input maps to `Bad` (the server
-/// replies 400 and closes) or `Closed`; nothing panics and no allocation
-/// is driven by unvalidated peer input.
-fn read_request<R: BufRead>(reader: &mut R, cfg: &HttpConfig) -> ReadOutcome {
+/// Parse a request head (request line + headers, body NOT consumed).
+/// Every malformed input maps to `Bad` (the server replies 400 and
+/// closes) or `Closed`; nothing panics and no allocation is driven by
+/// unvalidated peer input.
+fn read_head<R: BufRead>(reader: &mut R, cfg: &HttpConfig) -> HeadOutcome {
     // Request line; tolerate a stray CRLF from the previous request
     // (RFC 9112 §2.2 asks servers to skip at least one empty line).
     let mut line;
     let mut skipped = 0;
     loop {
         line = match read_line_bounded(reader, cfg.max_line_bytes) {
-            Ok(None) => return ReadOutcome::Closed,
+            Ok(None) => return HeadOutcome::Closed,
             Ok(Some(l)) => l,
-            Err(e) if is_timeout(&e) => return ReadOutcome::Closed,
-            Err(e) => return ReadOutcome::Bad(format!("bad request line: {e}")),
+            Err(e) if is_timeout(&e) => return HeadOutcome::Closed,
+            Err(e) => return HeadOutcome::Bad(format!("bad request line: {e}")),
         };
         if !line.trim_end().is_empty() {
             break;
         }
         skipped += 1;
         if skipped > 4 {
-            return ReadOutcome::Bad("leading junk before request line".into());
+            return HeadOutcome::Bad("leading junk before request line".into());
         }
     }
     let mut parts = line.split_whitespace();
     let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
         (Some(m), Some(p), Some(v)) => (m.to_string(), p.to_string(), v.to_string()),
-        _ => return ReadOutcome::Bad(format!("malformed request line {:?}", line.trim_end())),
+        _ => return HeadOutcome::Bad(format!("malformed request line {:?}", line.trim_end())),
     };
     if parts.next().is_some() {
-        return ReadOutcome::Bad("malformed request line: trailing tokens".into());
+        return HeadOutcome::Bad("malformed request line: trailing tokens".into());
     }
     if !version.starts_with("HTTP/1.") {
-        return ReadOutcome::Bad(format!("unsupported version {version:?}"));
+        return HeadOutcome::Bad(format!("unsupported version {version:?}"));
     }
 
     // Headers. A started-but-unfinished request (timeout / EOF mid-headers)
@@ -457,33 +598,33 @@ fn read_request<R: BufRead>(reader: &mut R, cfg: &HttpConfig) -> ReadOutcome {
     let mut content_len: Option<usize> = None;
     loop {
         let h = match read_line_bounded(reader, cfg.max_line_bytes) {
-            Ok(None) => return ReadOutcome::Bad("eof in headers".into()),
+            Ok(None) => return HeadOutcome::Bad("eof in headers".into()),
             Ok(Some(l)) => l,
-            Err(e) if is_timeout(&e) => return ReadOutcome::Bad("timeout in headers".into()),
-            Err(e) => return ReadOutcome::Bad(format!("bad header: {e}")),
+            Err(e) if is_timeout(&e) => return HeadOutcome::Bad("timeout in headers".into()),
+            Err(e) => return HeadOutcome::Bad(format!("bad header: {e}")),
         };
         let h = h.trim_end();
         if h.is_empty() {
             break;
         }
         if headers.len() >= cfg.max_headers {
-            return ReadOutcome::Bad("too many headers".into());
+            return HeadOutcome::Bad("too many headers".into());
         }
         let Some((k, v)) = h.split_once(':') else {
-            return ReadOutcome::Bad(format!("header without colon: {h:?}"));
+            return HeadOutcome::Bad(format!("header without colon: {h:?}"));
         };
         let (k, v) = (k.trim().to_string(), v.trim().to_string());
         if k.eq_ignore_ascii_case("content-length") {
             let Ok(n) = v.parse::<usize>() else {
-                return ReadOutcome::Bad(format!("bad content-length {v:?}"));
+                return HeadOutcome::Bad(format!("bad content-length {v:?}"));
             };
             if let Some(prev) = content_len {
                 if prev != n {
-                    return ReadOutcome::Bad("conflicting content-length headers".into());
+                    return HeadOutcome::Bad("conflicting content-length headers".into());
                 }
             }
             if n > cfg.max_body_bytes {
-                return ReadOutcome::Bad(format!(
+                return HeadOutcome::Bad(format!(
                     "body too large: {n} > {} bytes",
                     cfg.max_body_bytes
                 ));
@@ -491,19 +632,45 @@ fn read_request<R: BufRead>(reader: &mut R, cfg: &HttpConfig) -> ReadOutcome {
             content_len = Some(n);
         }
         if k.eq_ignore_ascii_case("transfer-encoding") {
-            return ReadOutcome::Bad("transfer-encoding not supported".into());
+            return HeadOutcome::Bad("transfer-encoding not supported".into());
         }
         headers.push((k, v));
     }
+    let req = Request { method, path, version, headers, body: Vec::new(), backlog: 0 };
+    HeadOutcome::Head(req, content_len.unwrap_or(0))
+}
 
-    // Body: exactly Content-Length bytes. A half-closed or stalled peer
-    // surfaces as a truncated body -> 400, freeing the worker slot.
-    let mut body = vec![0u8; content_len.unwrap_or(0)];
-    if let Err(e) = reader.read_exact(&mut body) {
+/// Body phase: exactly `content_len` bytes into `body`. A half-closed or
+/// stalled peer surfaces as a truncated body -> 400, freeing the worker
+/// slot.
+fn read_body<R: BufRead>(
+    reader: &mut R,
+    content_len: usize,
+    body: &mut Vec<u8>,
+) -> std::result::Result<(), String> {
+    body.resize(content_len, 0);
+    if let Err(e) = reader.read_exact(body) {
         let why = if is_timeout(&e) { "timeout".into() } else { e.to_string() };
-        return ReadOutcome::Bad(format!("truncated body: {why}"));
+        return Err(format!("truncated body: {why}"));
     }
-    ReadOutcome::Req(Request { method, path, version, headers, body })
+    Ok(())
+}
+
+/// Parse one whole request (head + body). The serving path sheds between
+/// the two phases ([`handle_conn`]); this composition is kept for the
+/// parser-hardening tests, which exercise head and body as one unit.
+#[cfg(test)]
+fn read_request<R: BufRead>(reader: &mut R, cfg: &HttpConfig) -> ReadOutcome {
+    match read_head(reader, cfg) {
+        HeadOutcome::Closed => ReadOutcome::Closed,
+        HeadOutcome::Bad(msg) => ReadOutcome::Bad(msg),
+        HeadOutcome::Head(mut req, content_len) => {
+            match read_body(reader, content_len, &mut req.body) {
+                Ok(()) => ReadOutcome::Req(req),
+                Err(msg) => ReadOutcome::Bad(msg),
+            }
+        }
+    }
 }
 
 /// Write one response with exact framing: `Content-Length` always, plus
@@ -524,6 +691,9 @@ fn write_response<W: Write>(
         resp.content_type,
         resp.body.len()
     )?;
+    if let Some(secs) = resp.retry_after {
+        write!(buf, "retry-after: {secs}\r\n")?;
+    }
     if keep_alive {
         // Sub-second timeouts advertise as 1 (never 0, which would tell
         // clients there is no reuse window at all); >= 1 s truncates,
@@ -669,19 +839,37 @@ impl HttpClient {
         headers: &[(&str, &str)],
         body: &[u8],
     ) -> Result<(u16, Vec<u8>)> {
+        self.request_with_retry_after(method, path, headers, body)
+            .map(|(status, bytes, _)| (status, bytes))
+    }
+
+    /// [`HttpClient::request`] that also surfaces the response's
+    /// `Retry-After` header (seconds), present on backpressure responses
+    /// (429 rate-limited / 503 shed). Those arrive as complete framed
+    /// responses, so by construction they can never consume the
+    /// at-most-once retry below — the retry only fires when no (or a
+    /// partial) response came back. Callers honor the hint with jittered
+    /// backoff instead of hammering a server that just said "later".
+    pub fn request_with_retry_after(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &[u8],
+    ) -> Result<(u16, Vec<u8>, Option<u64>)> {
         let idempotent =
             method.eq_ignore_ascii_case("GET") || method.eq_ignore_ascii_case("HEAD");
         let mut retried = false;
         loop {
             let (mut c, reused) = self.checkout()?;
             match self.send_once(&mut c, method, path, headers, body) {
-                Ok((status, bytes, close)) => {
+                Ok((status, bytes, close, retry_after)) => {
                     c.last_used = Instant::now();
                     if self.cfg.keep_alive && !close {
                         self.conn = Some(c);
                     }
                     self.requests += 1;
-                    return Ok((status, bytes));
+                    return Ok((status, bytes, retry_after));
                 }
                 Err(e) => {
                     // `c` is dropped: a failed connection is never pooled.
@@ -702,7 +890,7 @@ impl HttpClient {
     }
 
     /// One request/response exchange on `c`. Returns (status, body,
-    /// server-asked-close).
+    /// server-asked-close, `Retry-After` seconds if present).
     fn send_once(
         &self,
         c: &mut PooledConn,
@@ -710,7 +898,7 @@ impl HttpClient {
         path: &str,
         headers: &[(&str, &str)],
         body: &[u8],
-    ) -> std::result::Result<(u16, Vec<u8>, bool), SendError> {
+    ) -> std::result::Result<(u16, Vec<u8>, bool, Option<u64>), SendError> {
         // Assemble and send the whole request as one write.
         let mut buf = Vec::with_capacity(body.len() + 256);
         let head = (|| -> Result<()> {
@@ -748,6 +936,7 @@ impl HttpClient {
         let mut content_len: Option<usize> = None;
         let mut close = !self.cfg.keep_alive;
         let mut hint: Option<Duration> = None;
+        let mut retry_after: Option<u64> = None;
         loop {
             let mut h = String::new();
             match c.reader.read_line(&mut h) {
@@ -773,6 +962,11 @@ impl HttpClient {
                         .filter_map(|p| p.trim().strip_prefix("timeout=")?.parse::<u64>().ok())
                         .next()
                         .map(Duration::from_secs);
+                } else if k.eq_ignore_ascii_case("retry-after") {
+                    // Delta-seconds form only (the HTTP-date form is not
+                    // emitted by this transport); unparseable values are
+                    // ignored rather than failing the response.
+                    retry_after = v.parse().ok();
                 }
             }
         }
@@ -797,7 +991,7 @@ impl HttpClient {
                 }
             }
         }
-        Ok((status, bytes, close))
+        Ok((status, bytes, close, retry_after))
     }
 }
 
@@ -1065,6 +1259,133 @@ mod tests {
         BufReader::new(s).read_to_string(&mut text).unwrap(); // server closes
         assert!(text.starts_with("HTTP/1.1 200"));
         assert!(text.to_ascii_lowercase().contains("connection: close"));
+        srv.stop();
+    }
+
+    // --- admission control (load shedding + Retry-After) -----------------
+
+    #[test]
+    fn retry_after_header_roundtrips() {
+        let srv = Server::serve_cfg("127.0.0.1:0", 2, ka_cfg(), |req| match req.path.as_str() {
+            "/limited" => Response::too_many_requests("slow down", 7),
+            "/shed" => Response::unavailable("overloaded", 3),
+            _ => Response::ok_json("{}".into()),
+        })
+        .unwrap();
+        let mut client = HttpClient::with_config(&srv.addr, ka_cfg());
+        let (s, _, ra) = client.request_with_retry_after("POST", "/limited", &[], b"{}").unwrap();
+        assert_eq!((s, ra), (429, Some(7)));
+        let (s, _, ra) = client.request_with_retry_after("POST", "/shed", &[], b"{}").unwrap();
+        assert_eq!((s, ra), (503, Some(3)));
+        let (s, _, ra) = client.request_with_retry_after("POST", "/ok", &[], b"{}").unwrap();
+        assert_eq!((s, ra), (200, None));
+        srv.stop();
+    }
+
+    /// A framed 429/503 is a complete response: it must never consume the
+    /// client's single retry (no duplicate request may reach the server)
+    /// and the pooled connection stays reusable.
+    #[test]
+    fn backpressure_responses_never_consume_the_retry() {
+        use std::sync::atomic::AtomicU64;
+        let hits = Arc::new(AtomicU64::new(0));
+        let h2 = hits.clone();
+        let srv = Server::serve_cfg("127.0.0.1:0", 2, ka_cfg(), move |_req| {
+            let n = h2.fetch_add(1, Ordering::SeqCst);
+            if n == 0 {
+                Response::too_many_requests("limited", 1)
+            } else {
+                Response::ok_json("{}".into())
+            }
+        })
+        .unwrap();
+        let mut client = HttpClient::with_config(&srv.addr, ka_cfg());
+        let (s, _, ra) = client.request_with_retry_after("POST", "/t", &[], b"{}").unwrap();
+        assert_eq!((s, ra), (429, Some(1)));
+        let (s, _, _) = client.request_with_retry_after("POST", "/t", &[], b"{}").unwrap();
+        assert_eq!(s, 200);
+        // Exactly two requests reached the server (no hidden retry), on
+        // one pooled connection (a 429 does not poison the pool).
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+        assert_eq!(client.connects(), 1);
+        srv.stop();
+    }
+
+    /// Full overload path: with the accept queue past its limit, queued
+    /// requests are shed with a framed 503 + Retry-After before their
+    /// body is read, a connection arriving past the 4x hard bound is
+    /// refused by the acceptor outright — and `/healthz` is served
+    /// normally through all of it.
+    #[test]
+    fn overloaded_server_sheds_with_retry_after_but_serves_healthz() {
+        use std::sync::Condvar;
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g2 = gate.clone();
+        let cfg = HttpConfig {
+            accept_queue_limit: 1,
+            idle_timeout: Duration::from_millis(500),
+            ..ka_cfg()
+        };
+        let srv = Server::serve_cfg("127.0.0.1:0", 1, cfg, move |req| {
+            if req.path == "/block" {
+                let (m, cv) = &*g2;
+                let mut released = m.lock().unwrap();
+                while !*released {
+                    released = cv.wait(released).unwrap();
+                }
+            }
+            Response::ok_json("\"ok\"".into())
+        })
+        .unwrap();
+
+        // Pin the only worker on a parked handler.
+        let mut blocker = TcpStream::connect(&srv.addr).unwrap();
+        write!(blocker, "POST /block HTTP/1.1\r\ncontent-length: 0\r\n\r\n").unwrap();
+        std::thread::sleep(Duration::from_millis(150));
+
+        // Fill the accept queue past the 4x hard bound: q0 (a write that
+        // must be shed), q1 (a /healthz that must not be), q2/q3 (filler).
+        let mut q: Vec<TcpStream> = (0..4).map(|_| TcpStream::connect(&srv.addr).unwrap()).collect();
+        write!(q[0], "POST /api HTTP/1.1\r\ncontent-length: 2\r\n\r\n{{}}").unwrap();
+        write!(q[1], "GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        std::thread::sleep(Duration::from_millis(150));
+
+        // Depth is now 4 = 4x the limit: the acceptor refuses this
+        // connection with a canned 503 without reading a byte.
+        let refused = TcpStream::connect(&srv.addr).unwrap();
+        refused.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut text = String::new();
+        BufReader::new(refused).read_to_string(&mut text).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503"), "acceptor shed expected, got {text:?}");
+        assert!(text.to_ascii_lowercase().contains("retry-after:"), "{text:?}");
+
+        // Release the worker and end the blocker connection so the queue
+        // drains.
+        {
+            let (m, cv) = &*gate;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        let _ = blocker.shutdown(std::net::Shutdown::Both);
+
+        // q0: queued write, shed pre-body with a framed 503 + Retry-After.
+        q[0].set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut text = String::new();
+        BufReader::new(q[0].try_clone().unwrap()).read_to_string(&mut text).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503"), "queued shed expected, got {text:?}");
+        assert!(text.to_ascii_lowercase().contains("retry-after:"), "{text:?}");
+        assert!(text.to_ascii_lowercase().contains("content-length:"), "must be framed: {text:?}");
+
+        // q1: /healthz bypasses the shed path even while shedding.
+        q[1].set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut line = String::new();
+        let mut reader = BufReader::new(q[1].try_clone().unwrap());
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("HTTP/1.1 200"), "healthz must bypass shedding, got {line:?}");
+
+        for s in &q {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
         srv.stop();
     }
 

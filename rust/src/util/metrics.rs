@@ -256,6 +256,16 @@ pub static HTTP_CONNECTIONS_OPEN: Gauge = Gauge::new();
 pub static HTTP_WORKERS_BUSY: Gauge = Gauge::new();
 /// Configured gateway worker-pool size (set at serve time).
 pub static HTTP_WORKER_POOL_SIZE: Gauge = Gauge::new();
+/// Accept-queue backlog right now: connections accepted but not yet
+/// picked up by a worker (mirror of the admission-control signal; the
+/// shed decision reads a plain atomic so it works under `--no-metrics`).
+pub static HTTP_ACCEPT_QUEUE_DEPTH: Gauge = Gauge::new();
+/// Requests/connections refused with a 503 + `Retry-After` by transport
+/// load shedding (worker pre-body sheds + acceptor hard-bound refusals).
+pub static HTTP_SHED_TOTAL: Counter = Counter::new();
+/// API requests refused with a 429 + `Retry-After` by the gateway's
+/// per-principal token-bucket rate limiter.
+pub static API_THROTTLED_TOTAL: Counter = Counter::new();
 
 /// Per-endpoint request counts, indexed like [`ENDPOINTS`].
 pub static API_REQUESTS_TOTAL: [Counter; ENDPOINTS.len()] =
@@ -319,6 +329,9 @@ pub fn family_names() -> &'static [&'static str] {
         "balsam_http_connections_open",
         "balsam_http_workers_busy",
         "balsam_http_worker_pool_size",
+        "balsam_http_accept_queue_depth",
+        "balsam_http_shed_total",
+        "balsam_api_throttled_total",
         "balsam_api_requests_total",
         "balsam_api_errors_total",
         "balsam_api_request_seconds",
@@ -401,6 +414,24 @@ pub fn render() -> String {
         "balsam_http_worker_pool_size",
         "Configured gateway worker-pool size.",
         &HTTP_WORKER_POOL_SIZE,
+    );
+    gauge_family(
+        &mut out,
+        "balsam_http_accept_queue_depth",
+        "Accept-queue backlog (connections accepted, not yet picked up by a worker).",
+        &HTTP_ACCEPT_QUEUE_DEPTH,
+    );
+    counter_family(
+        &mut out,
+        "balsam_http_shed_total",
+        "Requests/connections refused 503 + Retry-After by transport load shedding.",
+        &HTTP_SHED_TOTAL,
+    );
+    counter_family(
+        &mut out,
+        "balsam_api_throttled_total",
+        "API requests refused 429 + Retry-After by the per-principal rate limiter.",
+        &API_THROTTLED_TOTAL,
     );
 
     header(&mut out, "balsam_api_requests_total", "counter", "API requests served, by endpoint.");

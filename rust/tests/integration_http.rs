@@ -106,7 +106,8 @@ fn full_round_trip_over_http_with_real_file_staging() {
         // the next step acts on it immediately. The site's
         // `subscribe_timeout_ms` knob caps how long each watch may hang.
         let headroom = ((next_wake - t0.elapsed().as_secs_f64()).max(0.0) * 1e3) as u64;
-        agent.pump_events(&mut agent_conn, headroom.min(agent.cfg.subscribe_timeout_ms));
+        let now = t0.elapsed().as_secs_f64();
+        agent.pump_events(&mut agent_conn, now, headroom.min(agent.cfg.subscribe_timeout_ms));
     }
 
     // The event log shows the full lifecycle for each job, with wall-clock
@@ -237,7 +238,8 @@ fn push_mode_completes_roundtrip_with_poll_fallback_disabled() {
         // gateway until the next event.
         let busy = tm.active_tasks() > 0 || launcher.running_jobs() > 0;
         let timeout_ms = if busy { 20 } else { 1_000 };
-        let evs = watcher.watch(&mut conn, &token, Some(site), timeout_ms).unwrap();
+        let now = t0.elapsed().as_secs_f64();
+        let evs = watcher.watch(&mut conn, &token, Some(site), timeout_ms, now).unwrap();
         tm.notify_events(&evs);
         launcher.notify_events(&evs);
         let now = t0.elapsed().as_secs_f64();
@@ -523,7 +525,12 @@ mod fault_injection {
         // Cursor 0 predates retained history; the long timeout must be
         // irrelevant — the marker answers immediately.
         let page = conn
-            .api(&tok, ApiRequest::WatchEvents { site: Some(site), since: 0, timeout_ms: 20_000 })
+            .api(&tok, ApiRequest::WatchEvents {
+                site: Some(site),
+                since: 0,
+                timeout_ms: 20_000,
+                max_events: 0,
+            })
             .unwrap()
             .events_page();
         assert!(t0.elapsed() < Duration::from_secs(5), "truncated watch must not hang");
@@ -533,7 +540,7 @@ mod fault_injection {
         // An EventWatcher consuming that page jumps its cursor and counts
         // the gap; the next watch is a clean tail re-arm.
         let mut w = EventWatcher::new();
-        let evs = w.watch(&mut conn, &tok, Some(site), 0).unwrap();
+        let evs = w.watch(&mut conn, &tok, Some(site), 0, 0.0).unwrap();
         assert!(!evs.is_empty());
         assert_eq!(w.truncations, 1);
         assert_eq!(w.cursor, evs.last().unwrap().seq + 1);

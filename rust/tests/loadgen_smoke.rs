@@ -6,7 +6,7 @@
 //! JSON shape), not the capacity of the CI runner.
 
 use balsam::loadgen::mix::Mix;
-use balsam::loadgen::{run, LoadgenConfig};
+use balsam::loadgen::{run, run_fairness, FairnessConfig, LoadgenConfig};
 use balsam::util::json::Json;
 
 fn smoke_config() -> LoadgenConfig {
@@ -42,7 +42,9 @@ fn sweep_measures_and_declares() {
     // 40 rps over 0.4 s = 16 planned ticks, every one accounted for.
     assert_eq!(first.planned, 16);
     assert_eq!(first.issued + first.skipped, first.planned);
-    assert_eq!(first.ok + first.errors, first.issued);
+    assert_eq!(first.ok + first.errors + first.rejected, first.issued);
+    // No rate limiter and no saturation at 40 rps: nothing rejected.
+    assert_eq!(first.rejected, 0);
     assert!(first.elapsed_s > 0.0);
     assert!((0.0..=1.0).contains(&first.failure_rate));
 
@@ -98,4 +100,50 @@ fn overload_trips_the_stop_rule() {
     let step = &combo.steps[0];
     assert!(step.skipped > 0, "an impossible schedule must shed ticks");
     assert!(step.failure_rate > cfg.stop_failure_rate);
+}
+
+/// Tentpole scenario: one greedy tenant hammering far past its
+/// per-principal quota must be the one absorbing the 429s, while N
+/// polite tenants under quota keep being served within the latency SLO.
+/// Latency ratios are asserted loosely (CI machines are noisy); the
+/// strict 2x gate runs in the CI fairness leg over longer phases.
+#[test]
+fn greedy_tenant_is_throttled_polite_tenants_are_served() {
+    let cfg = FairnessConfig {
+        polite: 2,
+        greedy: 1,
+        polite_rps: 10.0,
+        greedy_rps: 200.0,
+        duration_s: 0.6,
+        rate_limit: (25, 25),
+        workers: 4,
+        log: false,
+        ..FairnessConfig::default()
+    };
+    let report = run_fairness(&cfg).expect("fairness probe");
+    // The greedy tenant offered ~8x its quota: most answers are 429s,
+    // and they land on the greedy principal only.
+    assert!(report.greedy.issued > 0);
+    assert!(
+        report.greedy.rejected > report.greedy.issued / 2,
+        "greedy tenant must be mostly throttled: {}/{} rejected",
+        report.greedy.rejected,
+        report.greedy.issued
+    );
+    assert_eq!(report.polite.rejected, 0, "polite tenants must never absorb the throttle");
+    assert_eq!(report.baseline.rejected, 0);
+    // Polite tenants keep being served under contention, within the
+    // declared 300 ms SLO (loopback: normally well under 10 ms).
+    assert!(report.polite.ok > 0);
+    let p50 = report.polite.p50_ms.expect("polite latency measured under contention");
+    assert!(p50 < 300.0, "polite p50 {p50} ms breaches the SLO under a greedy tenant");
+
+    // Report shape: the whole thing survives a JSON round trip with the
+    // fields fairness_summary.py gates on.
+    let j = Json::parse(&report.to_json().to_string()).expect("fairness JSON parses");
+    for field in ["baseline", "polite", "greedy", "degradation_p99", "rate_limit_rps"] {
+        assert!(j.get(field).is_some(), "fairness report missing {field}");
+    }
+    let greedy = j.get("greedy").unwrap();
+    assert!(greedy.get("rejected").and_then(Json::as_f64).unwrap() > 0.0);
 }

@@ -181,7 +181,12 @@ fn metrics_populated_after_durable_round_trip() {
     }
     conn.api(&tok, ApiRequest::ListEvents { since: 0 }).unwrap();
     let horizon = svc.store.event_horizon();
-    conn.api(&tok, ApiRequest::WatchEvents { site: Some(site), since: horizon, timeout_ms: 150 })
+    conn.api(&tok, ApiRequest::WatchEvents {
+        site: Some(site),
+        since: horizon,
+        timeout_ms: 150,
+        max_events: 0,
+    })
         .unwrap();
 
     let (status, text) = get(&server.addr, "/metrics");
@@ -223,6 +228,68 @@ fn metrics_populated_after_durable_round_trip() {
 
     server.stop();
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite pin: the operational endpoints bypass load shedding. While
+/// a flood keeps the 8-deep accept queue saturated and the gateway is
+/// actively answering 503s on `/api`, `/metrics` and `/healthz` keep
+/// answering 200 — and the shed counter proves the overload was real,
+/// not a quiet server.
+#[test]
+fn scrapes_succeed_while_the_gateway_sheds() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    metrics::set_enabled(true);
+    let svc = Arc::new(ServiceCore::new(b"metrics-shed"));
+    let tok = svc.admin_token();
+    // One worker + a shallow queue: a dozen concurrent dialers keep the
+    // backlog pinned past the limit for the whole test window, while
+    // staying far below the 4x blind-shed tier (which is path-unaware
+    // and would shed scrapes too).
+    let cfg = HttpConfig { accept_queue_limit: 8, ..HttpConfig::default() };
+    let server = serve_with(svc.clone(), "127.0.0.1:0", 1, cfg).unwrap();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let floods: Vec<_> = (0..12)
+        .map(|_| {
+            let addr = server.addr.clone();
+            let tok = tok.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut sheds = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    if let Ok((status, _)) =
+                        post_json(&addr, "/api", &tok, "{\"type\":\"ListEvents\",\"since\":0}")
+                    {
+                        if status == 503 || status == 429 {
+                            sheds += 1;
+                        }
+                    }
+                }
+                sheds
+            })
+        })
+        .collect();
+
+    // Scrape in the middle of the flood: both operational endpoints must
+    // answer 200 even as /api connections are shed around them.
+    std::thread::sleep(Duration::from_millis(300));
+    for path in ["/healthz", "/metrics"] {
+        let t0 = Instant::now();
+        let (status, body) = get(&server.addr, path);
+        assert_eq!(status, 200, "{path} must bypass shedding: {body}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "{path} took {:?} under flood",
+            t0.elapsed()
+        );
+    }
+    std::thread::sleep(Duration::from_millis(200));
+    stop.store(true, Ordering::Relaxed);
+    let shed_seen: u64 = floods.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(shed_seen > 0, "flood never tripped the 8-deep accept queue");
+    let (_, text) = get(&server.addr, "/metrics");
+    assert!(series_value(&text, "balsam_http_shed_total").unwrap_or(0.0) >= 1.0, "{text}");
+    server.stop();
 }
 
 /// Doc-check: `docs/OPERATIONS.md` catalogs every family the registry
