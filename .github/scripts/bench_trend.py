@@ -6,13 +6,19 @@ Usage: bench_trend.py <baseline.json> <current.json> [--max-drop 0.30]
 
 Compares the peak req/s of the current bench run against the previous
 run's artifact (restored from the actions cache), tracked **per
-(transport, persist, fsync, metrics) combination** — e.g. "keepalive/
-ephemeral/none/on" vs "keepalive/wal/group/on" — so a regression in one
-mode cannot hide behind another's headline number, and the group-commit
-WAL leg gets its own baseline. Records written before the fsync axis
-existed derive "flush" (wal) / "none" (ephemeral), and records written
-before the metrics axis derive "on" (uninstrumented builds measured the
-same hot path recording now takes), so old baselines stay comparable.
+(transport, persist, fsync, codec, metrics) combination** — e.g.
+"keepalive/ephemeral/none/json/on" vs "keepalive/wal/group/binary/on" —
+so a regression in one mode cannot hide behind another's headline
+number, and the group-commit WAL leg gets its own baseline. Records
+written before the fsync axis existed derive "flush" (wal) / "none"
+(ephemeral), records written before the metrics axis derive "on"
+(uninstrumented builds measured the same hot path recording now takes),
+and records written before the codec axis derive "json", so old
+baselines stay comparable.
+
+The wire-codec axis is an in-run invariant: every combo measured with
+the binary frame codec must beat its JSON sibling by at least
+MIN_CODEC_SPEEDUP (1.5x).
 Combinations present in only one of the two records are reported but not
 gated (e.g. the first run after a new leg lands). Fails the job on a
 regression larger than --max-drop; a missing or unreadable baseline is
@@ -50,6 +56,11 @@ import sys
 # jitter; the strict signal is the in-run push-vs-poll invariant).
 MAX_LATENCY_RATIO = 3.0
 
+# In-run gate on the wire-codec axis: the binary frame codec must carry
+# at least this multiple of the JSON sibling's req/s on every combo
+# measured with both codecs (the sync-heavy keepalive/wal/group leg).
+MIN_CODEC_SPEEDUP = 1.5
+
 # Cross-run gate on declared max sustainable rps: fail only when a combo
 # loses more than this fraction of its declared capacity. Deliberately
 # looser than --max-drop: the stop rule quantizes capacity to ladder
@@ -60,14 +71,20 @@ MAX_LOADGEN_DROP = 0.80
 
 
 def peaks_by_combo(doc):
-    """Peak req/s keyed by transport/persist/fsync/metrics."""
+    """Peak req/s keyed by transport/persist/fsync/codec/metrics.
+
+    The codec axis sits BEFORE metrics so the metrics-overhead gate's
+    "/off" suffix pairing keeps working. Records written before the codec
+    axis existed derive "json" (that is what they measured).
+    """
     peaks = {}
     for r in doc.get("results", []):
         transport = r.get("transport", "per-request")
         persist = r.get("persist", "ephemeral")
         fsync = r.get("fsync", "flush" if persist == "wal" else "none")
+        codec = r.get("codec", "json")
         metrics = r.get("metrics", "on")
-        key = f"{transport}/{persist}/{fsync}/{metrics}"
+        key = f"{transport}/{persist}/{fsync}/{codec}/{metrics}"
         peaks[key] = max(peaks.get(key, 0.0), r["reqs_per_s"])
     if not peaks:
         raise ValueError("no results in bench record")
@@ -121,6 +138,37 @@ def gate_metrics_overhead(current, max_overhead):
             failed = True
     if not gated:
         print("metrics overhead: no on/off pair in current record (pre-metrics bench); not gated")
+    return failed
+
+
+def gate_codec_speedup(current):
+    """In-run gate on the wire-codec axis: every combo measured with the
+    binary frame codec must beat its JSON sibling (same transport/persist/
+    fsync/metrics) by at least MIN_CODEC_SPEEDUP. Records without a binary
+    combo (pre-codec benches) are not gated. Returns failed."""
+    failed = False
+    gated = False
+    for combo, bin_rps in sorted(current.items()):
+        if "/binary/" not in combo:
+            continue
+        json_rps = current.get(combo.replace("/binary/", "/json/"))
+        if json_rps is None or json_rps <= 0:
+            print(f"codec speedup [{combo}]: no JSON sibling in record; not gated")
+            continue
+        gated = True
+        speedup = bin_rps / json_rps
+        print(
+            f"codec speedup [{combo}]: json {json_rps:.0f} req/s -> "
+            f"binary {bin_rps:.0f} req/s ({speedup:.2f}x)"
+        )
+        if speedup < MIN_CODEC_SPEEDUP:
+            print(
+                f"::error::binary codec is only {speedup:.2f}x JSON on {combo} "
+                f"(gate: >= {MIN_CODEC_SPEEDUP:.1f}x)"
+            )
+            failed = True
+    if not gated:
+        print("codec speedup: no binary combo in current record (pre-codec bench); not gated")
     return failed
 
 
@@ -249,6 +297,7 @@ def main(argv):
     # The metrics-overhead and propagation axes gate even without a
     # baseline (both are in-run invariants).
     failed |= gate_metrics_overhead(current, max_metrics_overhead)
+    failed |= gate_codec_speedup(current)
     failed |= gate_propagation(baseline_doc, current_doc)
     failed |= gate_loadgen(baseline_doc, current_doc)
     return 1 if failed else 0

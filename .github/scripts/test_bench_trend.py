@@ -10,11 +10,14 @@ import pytest
 import bench_trend as bt
 
 
-def result(rps, transport="keepalive", persist="wal", fsync="group", metrics="on", **extra):
+def result(
+    rps, transport="keepalive", persist="wal", fsync="group", codec="json", metrics="on", **extra
+):
     r = {
         "transport": transport,
         "persist": persist,
         "fsync": fsync,
+        "codec": codec,
         "metrics": metrics,
         "reqs_per_s": rps,
     }
@@ -23,29 +26,38 @@ def result(rps, transport="keepalive", persist="wal", fsync="group", metrics="on
 
 
 # ---------------------------------------------------------------------------
-# peaks_by_combo: 4-axis key derivation + back-compat defaults
+# peaks_by_combo: 5-axis key derivation + back-compat defaults
 # ---------------------------------------------------------------------------
 
 
-def test_peaks_key_is_four_axis():
-    doc = {"results": [result(100.0), result(250.0), result(90.0, metrics="off")]}
+def test_peaks_key_is_five_axis():
+    doc = {
+        "results": [
+            result(100.0),
+            result(250.0),
+            result(90.0, metrics="off"),
+            result(400.0, codec="binary"),
+        ]
+    }
     peaks = bt.peaks_by_combo(doc)
     assert peaks == {
-        "keepalive/wal/group/on": 250.0,
-        "keepalive/wal/group/off": 90.0,
+        "keepalive/wal/group/json/on": 250.0,
+        "keepalive/wal/group/json/off": 90.0,
+        "keepalive/wal/group/binary/on": 400.0,
     }
 
 
 def test_peaks_takes_max_per_combo():
     doc = {"results": [result(100.0), result(70.0), result(130.0)]}
-    assert bt.peaks_by_combo(doc)["keepalive/wal/group/on"] == 130.0
+    assert bt.peaks_by_combo(doc)["keepalive/wal/group/json/on"] == 130.0
 
 
 def test_back_compat_pre_transport_pre_persist_record():
     # The oldest records carried only reqs_per_s: transport defaults to
-    # per-request, persist to ephemeral, fsync to none, metrics to on.
+    # per-request, persist to ephemeral, fsync to none, codec to json,
+    # metrics to on.
     doc = {"results": [{"reqs_per_s": 42.0}]}
-    assert bt.peaks_by_combo(doc) == {"per-request/ephemeral/none/on": 42.0}
+    assert bt.peaks_by_combo(doc) == {"per-request/ephemeral/none/json/on": 42.0}
 
 
 def test_back_compat_pre_fsync_record_derives_from_persist():
@@ -59,14 +71,30 @@ def test_back_compat_pre_fsync_record_derives_from_persist():
     }
     peaks = bt.peaks_by_combo(doc)
     assert peaks == {
-        "keepalive/wal/flush/on": 10.0,
-        "keepalive/ephemeral/none/on": 20.0,
+        "keepalive/wal/flush/json/on": 10.0,
+        "keepalive/ephemeral/none/json/on": 20.0,
     }
 
 
 def test_back_compat_pre_metrics_record_defaults_on():
     doc = {"results": [{"transport": "keepalive", "persist": "wal", "fsync": "group", "reqs_per_s": 5.0}]}
-    assert bt.peaks_by_combo(doc) == {"keepalive/wal/group/on": 5.0}
+    assert bt.peaks_by_combo(doc) == {"keepalive/wal/group/json/on": 5.0}
+
+
+def test_back_compat_pre_codec_record_defaults_json():
+    # Records written before the codec axis measured the JSON envelope.
+    doc = {
+        "results": [
+            {
+                "transport": "keepalive",
+                "persist": "wal",
+                "fsync": "group",
+                "metrics": "off",
+                "reqs_per_s": 7.0,
+            }
+        ]
+    }
+    assert bt.peaks_by_combo(doc) == {"keepalive/wal/group/json/off": 7.0}
 
 
 def test_empty_results_raise():
@@ -118,24 +146,65 @@ def test_throughput_improvement_passes():
 
 
 def test_metrics_overhead_within_gate_passes():
-    cur = {"keepalive/wal/group/off": 100.0, "keepalive/wal/group/on": 96.0}
+    cur = {"keepalive/wal/group/json/off": 100.0, "keepalive/wal/group/json/on": 96.0}
     assert bt.gate_metrics_overhead(cur, max_overhead=0.05) is False
 
 
 def test_metrics_overhead_past_gate_fails():
-    cur = {"keepalive/wal/group/off": 100.0, "keepalive/wal/group/on": 94.0}
+    cur = {"keepalive/wal/group/json/off": 100.0, "keepalive/wal/group/json/on": 94.0}
     assert bt.gate_metrics_overhead(cur, max_overhead=0.05) is True
 
 
 def test_metrics_overhead_no_pair_is_not_gated():
     # Pre-metrics records have no /off leg: nothing to compare.
-    cur = {"keepalive/wal/group/on": 100.0}
+    cur = {"keepalive/wal/group/json/on": 100.0}
     assert bt.gate_metrics_overhead(cur, max_overhead=0.05) is False
 
 
 def test_metrics_overhead_faster_with_recording_passes():
-    cur = {"keepalive/wal/group/off": 100.0, "keepalive/wal/group/on": 104.0}
+    cur = {"keepalive/wal/group/json/off": 100.0, "keepalive/wal/group/json/on": 104.0}
     assert bt.gate_metrics_overhead(cur, max_overhead=0.05) is False
+
+
+def test_metrics_overhead_pairs_within_codec():
+    # The codec axis sits before metrics in the key, so an on/off pair is
+    # matched within ONE codec — a binary /off leg must not pair with the
+    # json /on leg.
+    cur = {"keepalive/wal/group/binary/off": 1000.0, "keepalive/wal/group/json/on": 100.0}
+    assert bt.gate_metrics_overhead(cur, max_overhead=0.05) is False
+
+
+# ---------------------------------------------------------------------------
+# gate_codec_speedup (in-run invariant)
+# ---------------------------------------------------------------------------
+
+
+def test_codec_gate_passes_at_speedup():
+    cur = {"keepalive/wal/group/json/on": 100.0, "keepalive/wal/group/binary/on": 160.0}
+    assert bt.gate_codec_speedup(cur) is False
+
+
+def test_codec_gate_fails_below_speedup():
+    cur = {"keepalive/wal/group/json/on": 100.0, "keepalive/wal/group/binary/on": 140.0}
+    assert bt.gate_codec_speedup(cur) is True
+
+
+def test_codec_gate_boundary_is_inclusive():
+    # speedup == MIN_CODEC_SPEEDUP exactly passes (the gate is "<").
+    cur = {"keepalive/wal/group/json/on": 100.0, "keepalive/wal/group/binary/on": 150.0}
+    assert bt.gate_codec_speedup(cur) is False
+
+
+def test_codec_gate_no_binary_combo_not_gated():
+    cur = {"keepalive/wal/group/json/on": 100.0}
+    assert bt.gate_codec_speedup(cur) is False
+
+
+def test_codec_gate_orphan_binary_combo_not_gated():
+    # A binary combo without a json sibling (shape drift) is reported,
+    # not gated — there is nothing sound to compare against.
+    cur = {"keepalive/wal/group/binary/on": 100.0}
+    assert bt.gate_codec_speedup(cur) is False
 
 
 # ---------------------------------------------------------------------------
@@ -255,6 +324,20 @@ def test_main_passes_on_healthy_run(tmp_path):
     base, cur = tmp_path / "base.json", tmp_path / "cur.json"
     write_doc(base, [result(100.0)], GOOD_PROP, {"combos": [combo(rps=1000.0)]})
     write_doc(cur, [result(95.0)], GOOD_PROP, {"combos": [combo(rps=900.0)]})
+    assert bt.main(["bench_trend.py", str(base), str(cur)]) == 0
+
+
+def test_main_fails_on_codec_speedup_below_gate(tmp_path):
+    base, cur = tmp_path / "base.json", tmp_path / "cur.json"
+    write_doc(base, [result(100.0)], GOOD_PROP)
+    write_doc(cur, [result(100.0), result(120.0, codec="binary")], GOOD_PROP)
+    assert bt.main(["bench_trend.py", str(base), str(cur)]) == 1
+
+
+def test_main_passes_with_healthy_codec_pair(tmp_path):
+    base, cur = tmp_path / "base.json", tmp_path / "cur.json"
+    write_doc(base, [result(100.0)], GOOD_PROP)
+    write_doc(cur, [result(100.0), result(200.0, codec="binary")], GOOD_PROP)
     assert bt.main(["bench_trend.py", str(base), str(cur)]) == 0
 
 

@@ -14,14 +14,17 @@
 //!   the durability tax, and how much of it group commit buys back;
 //! * **metrics** (recording on vs `--no-metrics`-style off): the
 //!   observability overhead on the hottest leg (keep-alive + group-commit
-//!   WAL) — `bench_trend.py` gates it at <= 5%.
+//!   WAL) — `bench_trend.py` gates it at <= 5%;
+//! * **codec** (JSON envelopes vs binary frames): the wire-serialization
+//!   tax on the same sync-heavy durable leg — `bench_trend.py` gates
+//!   binary >= 1.5x the JSON sibling in-run.
 //!
 //! Each launcher cycle is the bulk protocol: BulkCreateJobs ->
 //! SessionAcquire -> BulkUpdateJobState(RUNNING) -> SessionSync(RUN_DONE +
 //! POSTPROCESSED). Results are recorded in `BENCH_service.json` (override
 //! the path with `BENCH_OUT`) so the perf trajectory is tracked across
 //! PRs; `bench_trend.py` gates on the peak req/s per (transport, persist,
-//! fsync, metrics) combination.
+//! fsync, codec, metrics) combination.
 //!
 //! A fourth axis measures **stage-in propagation latency**: the time from
 //! a transfer-completion RPC landing at the service to an observer
@@ -39,7 +42,7 @@ use std::time::{Duration, Instant};
 use balsam::service::api::{ApiConn, ApiRequest, JobCreate};
 use balsam::service::http_gw::{serve_with, HttpConn};
 use balsam::service::models::{JobId, JobState, SiteId};
-use balsam::service::{EventLogConfig, FsyncPolicy, PersistMode, ServiceCore};
+use balsam::service::{EventLogConfig, FsyncPolicy, PersistMode, ServiceCore, Wire};
 use balsam::util::httpd::HttpConfig;
 use balsam::util::json::Json;
 
@@ -52,6 +55,8 @@ struct PassResult {
     persist: &'static str,
     /// "none" (ephemeral) / "flush" / "group" / "always".
     fsync: &'static str,
+    /// "json" / "binary" — the wire codec the launcher sessions spoke.
+    codec: &'static str,
     /// "on" / "off" — whether metric recording was enabled for the pass.
     metrics: &'static str,
     reqs: u64,
@@ -64,6 +69,7 @@ fn run_pass(
     keep_alive: bool,
     secs: f64,
     wal: Option<(PathBuf, FsyncPolicy)>,
+    wire: Wire,
     metrics_on: bool,
 ) -> PassResult {
     // The registry is process-global; restore recording after the pass so
@@ -72,6 +78,7 @@ fn run_pass(
     let transport = if keep_alive { "keepalive" } else { "per-request" };
     let persist = if wal.is_some() { "wal" } else { "ephemeral" };
     let fsync = wal.as_ref().map(|(_, f)| f.label()).unwrap_or("none");
+    let codec = wire.label();
     let metrics = if metrics_on { "on" } else { "off" };
     let wal_dir = wal.as_ref().map(|(d, _)| d.clone());
     let mode = match &wal {
@@ -124,8 +131,10 @@ fn run_pass(
             let http = http.clone();
             std::thread::spawn(move || {
                 // One persistent authenticated connection per launcher
-                // session (or a dial per call in per-request mode).
-                let mut conn = HttpConn::with_config(addr, http);
+                // session (or a dial per call in per-request mode). The
+                // wire codec is pinned explicitly so pass labels stay
+                // truthful regardless of the ambient BALSAM_WIRE.
+                let mut conn = HttpConn::with_wire(addr, http, wire);
                 let mut api = |req: ApiRequest| {
                     reqs.fetch_add(1, Ordering::Relaxed);
                     conn.api(&tok, req)
@@ -186,6 +195,7 @@ fn run_pass(
         transport,
         persist,
         fsync,
+        codec,
         metrics,
         reqs: n,
         secs: dt,
@@ -195,9 +205,10 @@ fn run_pass(
 
 fn print_pass(r: &PassResult) {
     println!(
-        "workers {:>2} | {:>11} | {:>9}/{:<6} | metrics {:<3}: {:>7} reqs in {:.2}s  ->  \
-         {:>8.0} req/s",
-        r.workers, r.transport, r.persist, r.fsync, r.metrics, r.reqs, r.secs, r.reqs_per_s
+        "workers {:>2} | {:>11} | {:>9}/{:<6} | {:>6} | metrics {:<3}: {:>7} reqs in {:.2}s  \
+         ->  {:>8.0} req/s",
+        r.workers, r.transport, r.persist, r.fsync, r.codec, r.metrics, r.reqs, r.secs,
+        r.reqs_per_s
     );
 }
 
@@ -326,7 +337,7 @@ fn main() {
     // Worker scaling on the per-request transport (the historical
     // baseline), then the keep-alive transport at 8 workers.
     for (workers, keep_alive) in [(1usize, false), (8, false), (8, true)] {
-        let r = run_pass(workers, keep_alive, secs, None, true);
+        let r = run_pass(workers, keep_alive, secs, None, Wire::Json, true);
         print_pass(&r);
         results.push(r);
     }
@@ -345,7 +356,7 @@ fn main() {
         FsyncPolicy::Always,
     ];
     for policy in policies {
-        let r = run_pass(8, true, secs, Some((wal_dir.clone(), policy)), true);
+        let r = run_pass(8, true, secs, Some((wal_dir.clone(), policy)), Wire::Json, true);
         print_pass(&r);
         println!(
             "wal/{} tax: {:.0}% of ephemeral keep-alive throughput",
@@ -371,6 +382,7 @@ fn main() {
         true,
         secs,
         Some((wal_dir.clone(), FsyncPolicy::Group { records: 64, interval_ms: 2 })),
+        Wire::Json,
         false,
     );
     print_pass(&off);
@@ -380,6 +392,26 @@ fn main() {
         100.0 * metrics_overhead
     );
     results.push(off);
+
+    // Wire-codec axis: the same sync-heavy durable leg (keep-alive +
+    // group-commit WAL, the chatty interior path) with the binary frame
+    // codec on every launcher connection. bench_trend.py pairs this with
+    // the JSON sibling in-run and gates binary >= MIN_CODEC_SPEEDUP x.
+    let bin = run_pass(
+        8,
+        true,
+        secs,
+        Some((wal_dir.clone(), FsyncPolicy::Group { records: 64, interval_ms: 2 })),
+        Wire::Binary,
+        true,
+    );
+    print_pass(&bin);
+    let codec_speedup = bin.reqs_per_s / group_rps.max(1e-9);
+    println!(
+        "binary frame codec vs JSON on keepalive/wal/group: {codec_speedup:.2}x \
+         (bench_trend gate: >= 1.5x)"
+    );
+    results.push(bin);
 
     // Propagation-latency axis: poll baseline vs push-mode subscription.
     let prop_iters = if quick { 20 } else { 60 };
@@ -436,6 +468,7 @@ fn main() {
                             ("transport", Json::str(r.transport)),
                             ("persist", Json::str(r.persist)),
                             ("fsync", Json::str(r.fsync)),
+                            ("codec", Json::str(r.codec)),
                             ("metrics", Json::str(r.metrics)),
                             ("reqs", Json::num(r.reqs as f64)),
                             ("secs", Json::num(r.secs)),
@@ -449,6 +482,7 @@ fn main() {
         ("keepalive_speedup_8workers", Json::num(ka_speedup)),
         ("group_commit_vs_flush", Json::num(group_vs_flush)),
         ("metrics_overhead", Json::num(metrics_overhead)),
+        ("codec_speedup_sync_heavy", Json::num(codec_speedup)),
         (
             "propagation",
             Json::obj(vec![

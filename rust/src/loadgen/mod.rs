@@ -32,7 +32,8 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::service::{
-    http_gw, ApiConn, ApiRequest, FsyncPolicy, PersistMode, ServiceCore, SessionId, SiteId,
+    http_gw, wire_from_env, ApiConn, ApiRequest, FsyncPolicy, PersistMode, ServiceCore, SessionId,
+    SiteId, Wire,
 };
 use crate::util::httpd;
 use crate::util::json::Json;
@@ -80,6 +81,10 @@ pub struct LoadgenConfig {
     /// Self-host with WAL persistence under this dir (per-combo subdirs)
     /// instead of ephemeral — exercises `balsam_wal_fsync_seconds`.
     pub wal: Option<(PathBuf, FsyncPolicy)>,
+    /// Wire codec every sender (and the setup connection) speaks —
+    /// `balsam loadgen --wire binary` sweeps the same ladder over binary
+    /// frames. Defaults from the `BALSAM_WIRE` env var (JSON when unset).
+    pub wire: Wire,
     /// PRNG seed for the probabilistic mix choices.
     pub seed: u64,
     /// Print per-rung and DECLARE lines to stderr.
@@ -103,6 +108,7 @@ impl Default for LoadgenConfig {
             max_lag_s: 0.25,
             workers: httpd::default_workers(),
             wal: None,
+            wire: wire_from_env(),
             seed: 0x10adCE4,
             log: true,
         }
@@ -266,7 +272,8 @@ fn run_combo(
     let sessions = sessions.max(1);
 
     // Topology setup (not measured: it precedes the baseline scrape).
-    let mut admin = http_gw::HttpConn::new(target.addr.clone());
+    let mut admin =
+        http_gw::HttpConn::with_wire(target.addr.clone(), httpd::HttpConfig::default(), cfg.wire);
     let mut site_ids: Vec<SiteId> = Vec::with_capacity(sites);
     for i in 0..sites {
         let site = admin
@@ -416,7 +423,11 @@ fn run_step(
                 let (site, session) = sender_sessions[s];
                 let mut driver = MixDriver::new(m, site, session, LOADGEN_APP);
                 let mut g = Pcg::new(cfg.seed ^ rung.wrapping_mul(0x9e37), combo_idx * 64 + s as u64);
-                let mut conn = http_gw::HttpConn::new(target.addr.clone());
+                let mut conn = http_gw::HttpConn::with_wire(
+                    target.addr.clone(),
+                    httpd::HttpConfig::default(),
+                    cfg.wire,
+                );
                 let token = target.token.clone();
                 let max_lag = Duration::from_secs_f64(cfg.max_lag_s);
                 scope.spawn(move || {
@@ -619,7 +630,11 @@ fn fairness_phase(
     let secret = format!("fairness-{}-{greedy_on}", cfg.seed);
     let svc = Arc::new(ServiceCore::new(secret.as_bytes()));
     let admin_tok = svc.admin_token();
-    let gw = http_gw::GatewayConfig { rate_limit: Some(cfg.rate_limit), admin_exempt: true };
+    let gw = http_gw::GatewayConfig {
+        rate_limit: Some(cfg.rate_limit),
+        admin_exempt: true,
+        ..Default::default()
+    };
     let server = http_gw::serve_with_limits(
         svc.clone(),
         "127.0.0.1:0",

@@ -35,8 +35,10 @@ fn main() {
                  \n          [--http-max-requests N] [--subscribe-max-ms N] [--no-metrics]\
                  \n          [--accept-queue-limit N] [--watch-page-max N]\
                  \n          [--rate-limit RPS,BURST] [--rate-limit-admin-exempt]\
+                 \n          [--wire json|binary]\
                  \n  loadgen [--quick] [--out FILE] [--target ADDR --token T]\
                  \n          [--mix submit,sync,watch] [--sites 1,4] [--sessions 2,8]\
+                 \n          [--wire json|binary]\
                  \n          [--rps-start N] [--rps-factor X] [--rps-steps N] [--step-secs S]\
                  \n          [--stop-failure-rate F] [--stop-median-ms MS] [--workers N]\
                  \n          [--wal-dir DIR] [--fsync=never|always|group:K,Tms] [--seed N]\
@@ -128,6 +130,15 @@ fn cmd_service(args: &Args) -> balsam::Result<()> {
         gw.rate_limit = rl;
     }
     gw.admin_exempt = args.flag("rate-limit-admin-exempt");
+    // --wire binary (default) negotiates both envelope encodings per
+    // request; --wire json answers binary-frame requests with 415 so
+    // capable clients fall back to JSON (JSON is always accepted).
+    let wire_spec = args.str_or("wire", "binary");
+    balsam::ensure!(
+        matches!(wire_spec, "json" | "binary"),
+        "--wire must be json|binary, got '{wire_spec}'"
+    );
+    gw.binary = wire_spec == "binary";
     let mut core = ServiceCore::with_persist(b"balsam-demo-secret", mode)?;
     // --watch-page-max clamps one WatchEvents page server-side (the
     // credit ceiling; clients may only lower it per request, 0 = no cap).
@@ -152,6 +163,7 @@ fn cmd_service(args: &Args) -> balsam::Result<()> {
     let token = svc.admin_token();
     let rate_limited = gw.rate_limit;
     let admin_exempt = gw.admin_exempt;
+    let binary_frames = gw.binary;
     let queue_limit = http.accept_queue_limit;
     let server = http_gw::serve_with_limits(svc, addr, workers, http, gw)?;
     println!("balsam service on http://{}", server.addr);
@@ -167,6 +179,14 @@ fn cmd_service(args: &Args) -> balsam::Result<()> {
     println!(
         "transport: {} ({workers} workers, idle timeout {idle}s)",
         if keep_alive { "HTTP/1.1 keep-alive" } else { "one request per connection" }
+    );
+    println!(
+        "wire: {}",
+        if binary_frames {
+            "JSON + binary frames (negotiated per request via Content-Type/Accept)"
+        } else {
+            "JSON only (--wire json; binary frames answered with 415)"
+        }
     );
     if durable {
         println!(
@@ -228,6 +248,12 @@ fn cmd_loadgen(args: &Args) -> balsam::Result<()> {
     cfg.stop_median_ms = args.f64_or("stop-median-ms", cfg.stop_median_ms);
     cfg.workers = args.u64_or("workers", cfg.workers as u64) as usize;
     cfg.seed = args.u64_or("seed", cfg.seed);
+    // --wire overrides the BALSAM_WIRE env default the config picked up.
+    if let Some(spec) = args.get("wire") {
+        let w = balsam::service::Wire::parse(spec);
+        balsam::ensure!(w.is_some(), "--wire must be json|binary, got '{spec}'");
+        cfg.wire = w.unwrap();
+    }
     balsam::ensure!(
         cfg.rps_start > 0.0 && cfg.rps_factor > 1.0 && cfg.step_secs > 0.0,
         "--rps-start must be > 0, --rps-factor > 1, --step-secs > 0"

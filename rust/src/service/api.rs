@@ -9,8 +9,9 @@
 //! `{"ok": true, "type": "<VariantName>", "body": ...}` (or `{"ok":
 //! false, "error": "..."}` with a 4xx/5xx status). The per-variant wire
 //! shapes are documented on [`ApiRequest`] / [`ApiResponse`]; the codecs
-//! live in [`super::http_gw`] and the row payloads reuse the
-//! `to_json`/`from_json` codecs on [`super::models`] types.
+//! live in [`super::codec`] (JSON plus a negotiated binary frame
+//! encoding) and the JSON row payloads reuse the `to_json`/`from_json`
+//! codecs on [`super::models`] types.
 
 use super::models::*;
 

@@ -1,0 +1,989 @@
+//! The binary frame codec (`application/x-balsam-frame`).
+//!
+//! Built for the chatty interior paths — a launcher's `SessionSync`, the
+//! transfer module's `SyncTransferItems`, a watcher's `WatchEvents` page
+//! — where hand-rolled JSON costs a tree of `String` allocations per
+//! request. Frames decode straight off the request buffer with a borrowed
+//! cursor: no intermediate value tree, one allocation per owned string
+//! field, `Vec` capacities bounded by the bytes actually present.
+//!
+//! ## Frame layout
+//!
+//! ```text
+//! request   = 0x01  tag:u8  fields...
+//! ok-resp   = 0x02  tag:u8  fields...
+//! err-resp  = 0x03  msg:str
+//!
+//! u64/u32/usize = LEB128 varint (7 bits per byte, little-endian groups)
+//! f64           = 8 bytes, IEEE-754 bits little-endian
+//! bool          = 1 byte (0/1)
+//! str           = varint byte-length + UTF-8 bytes
+//! option<T>     = presence byte (0/1) + T when present
+//! vec<T>        = varint count + count items
+//! enum          = u8 (declaration-order index; `JobState` via `ALL`)
+//! ```
+//!
+//! Request/response `tag` is the variant's declaration-order index in
+//! [`ApiRequest`]/[`ApiResponse`] — appending a variant is wire-safe,
+//! reordering is not (same contract as the JSON `"type"` names, just
+//! positional). Unknown tags, truncated bodies, and trailing bytes all
+//! decode to an error string that the gateway answers as a framed 400.
+
+use crate::service::api::*;
+use crate::service::models::*;
+
+use super::{WireCodec, CT_FRAME};
+
+const KIND_REQUEST: u8 = 0x01;
+const KIND_OK: u8 = 0x02;
+const KIND_ERR: u8 = 0x03;
+
+/// [`WireCodec`] over the binary frame encoding.
+pub struct FrameCodec;
+
+impl WireCodec for FrameCodec {
+    fn content_type(&self) -> &'static str {
+        CT_FRAME
+    }
+
+    fn encode_request(&self, req: &ApiRequest, out: &mut Vec<u8>) {
+        encode_request(req, out);
+    }
+
+    fn decode_request(&self, body: &[u8]) -> Result<ApiRequest, String> {
+        decode_request(body)
+    }
+
+    fn encode_ok(&self, resp: &ApiResponse, out: &mut Vec<u8>) {
+        encode_ok(resp, out);
+    }
+
+    fn encode_err(&self, msg: &str, out: &mut Vec<u8>) {
+        out.push(KIND_ERR);
+        put_str(out, msg);
+    }
+
+    fn decode_ok(&self, body: &[u8]) -> Result<ApiResponse, ApiError> {
+        decode_response(body).map_err(ApiError::Transport)?.map_err(ApiError::Transport)
+    }
+
+    fn decode_err(&self, body: &[u8]) -> String {
+        let mut c = Cur::new(body);
+        match c.u8() {
+            Ok(KIND_ERR) => c.string().unwrap_or_else(|_| "unknown".into()),
+            _ => "unknown".into(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Primitives
+// ---------------------------------------------------------------------------
+
+fn put_u64(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u64(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_opt(out: &mut Vec<u8>, v: Option<u64>) {
+    match v {
+        None => out.push(0),
+        Some(n) => {
+            out.push(1);
+            put_u64(out, n);
+        }
+    }
+}
+
+fn put_opt_f64(out: &mut Vec<u8>, v: Option<f64>) {
+    match v {
+        None => out.push(0),
+        Some(x) => {
+            out.push(1);
+            put_f64(out, x);
+        }
+    }
+}
+
+fn put_kv(out: &mut Vec<u8>, kv: &[(String, String)]) {
+    put_u64(out, kv.len() as u64);
+    for (k, v) in kv {
+        put_str(out, k);
+        put_str(out, v);
+    }
+}
+
+fn put_xfers(out: &mut Vec<u8>, xs: &[(String, u64)]) {
+    put_u64(out, xs.len() as u64);
+    for (r, s) in xs {
+        put_str(out, r);
+        put_u64(out, *s);
+    }
+}
+
+fn put_ids<T: Copy>(out: &mut Vec<u8>, ids: &[T], f: impl Fn(T) -> u64) {
+    put_u64(out, ids.len() as u64);
+    for &i in ids {
+        put_u64(out, f(i));
+    }
+}
+
+/// Borrowing decode cursor. Every read is bounds-checked against the
+/// frame; errors are plain strings that surface as framed 400s.
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+const E_TRUNC: &str = "truncated frame";
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Cur<'a> {
+        Cur { b, i: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        let v = *self.b.get(self.i).ok_or(E_TRUNC)?;
+        self.i += 1;
+        Ok(v)
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        let mut v: u64 = 0;
+        for shift in (0..64).step_by(7) {
+            let b = self.u8()?;
+            v |= u64::from(b & 0x7f) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+        }
+        Err("varint overflow".into())
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(self.u64()? as u32)
+    }
+
+    fn usize(&mut self) -> Result<usize, String> {
+        Ok(self.u64()? as usize)
+    }
+
+    fn f64(&mut self) -> Result<f64, String> {
+        if self.remaining() < 8 {
+            return Err(E_TRUNC.into());
+        }
+        let mut bytes = [0u8; 8];
+        bytes.copy_from_slice(&self.b[self.i..self.i + 8]);
+        self.i += 8;
+        Ok(f64::from_bits(u64::from_le_bytes(bytes)))
+    }
+
+    fn bool(&mut self) -> Result<bool, String> {
+        Ok(self.u8()? != 0)
+    }
+
+    /// Borrowed string slice — the zero-copy read; callers own-ify only
+    /// when the decoded type demands a `String`.
+    fn str(&mut self) -> Result<&'a str, String> {
+        let n = self.usize()?;
+        if self.remaining() < n {
+            return Err(E_TRUNC.into());
+        }
+        let s = std::str::from_utf8(&self.b[self.i..self.i + n]).map_err(|_| "bad utf-8 in frame")?;
+        self.i += n;
+        Ok(s)
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.str().map(String::from)
+    }
+
+    /// Collection count, validated against the bytes left: every element
+    /// costs at least one byte, so a frame can never make us reserve more
+    /// capacity than its own length (no allocation blowup from a forged
+    /// count).
+    fn count(&mut self) -> Result<usize, String> {
+        let n = self.usize()?;
+        if n > self.remaining() {
+            return Err(E_TRUNC.into());
+        }
+        Ok(n)
+    }
+
+    fn opt(&mut self) -> Result<Option<u64>, String> {
+        match self.u8()? {
+            0 => Ok(None),
+            _ => Ok(Some(self.u64()?)),
+        }
+    }
+
+    fn opt_f64(&mut self) -> Result<Option<f64>, String> {
+        match self.u8()? {
+            0 => Ok(None),
+            _ => Ok(Some(self.f64()?)),
+        }
+    }
+
+    fn kv(&mut self) -> Result<Vec<(String, String)>, String> {
+        let n = self.count()?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push((self.string()?, self.string()?));
+        }
+        Ok(out)
+    }
+
+    fn xfers(&mut self) -> Result<Vec<(String, u64)>, String> {
+        let n = self.count()?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push((self.string()?, self.u64()?));
+        }
+        Ok(out)
+    }
+
+    fn ids<T>(&mut self, f: impl Fn(u64) -> T) -> Result<Vec<T>, String> {
+        let n = self.count()?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(f(self.u64()?));
+        }
+        Ok(out)
+    }
+
+    fn finish(&self) -> Result<(), String> {
+        if self.remaining() != 0 {
+            return Err("trailing bytes in frame".into());
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Enums — u8 declaration-order indices
+// ---------------------------------------------------------------------------
+
+fn put_jstate(out: &mut Vec<u8>, s: JobState) {
+    out.push(JobState::ALL.iter().position(|&x| x == s).unwrap_or(0) as u8);
+}
+
+fn jstate(c: &mut Cur) -> Result<JobState, String> {
+    let i = c.u8()? as usize;
+    JobState::ALL.get(i).copied().ok_or_else(|| format!("bad job state {i}"))
+}
+
+fn put_dir(out: &mut Vec<u8>, d: Direction) {
+    out.push(match d {
+        Direction::In => 0,
+        Direction::Out => 1,
+    });
+}
+
+fn dir(c: &mut Cur) -> Result<Direction, String> {
+    match c.u8()? {
+        0 => Ok(Direction::In),
+        1 => Ok(Direction::Out),
+        n => Err(format!("bad direction {n}")),
+    }
+}
+
+fn put_tstate(out: &mut Vec<u8>, s: TransferState) {
+    out.push(match s {
+        TransferState::Pending => 0,
+        TransferState::Active => 1,
+        TransferState::Done => 2,
+        TransferState::Error => 3,
+    });
+}
+
+fn tstate(c: &mut Cur) -> Result<TransferState, String> {
+    match c.u8()? {
+        0 => Ok(TransferState::Pending),
+        1 => Ok(TransferState::Active),
+        2 => Ok(TransferState::Done),
+        3 => Ok(TransferState::Error),
+        n => Err(format!("bad transfer state {n}")),
+    }
+}
+
+fn put_bstate(out: &mut Vec<u8>, s: BatchJobState) {
+    out.push(match s {
+        BatchJobState::Pending => 0,
+        BatchJobState::Queued => 1,
+        BatchJobState::Running => 2,
+        BatchJobState::Finished => 3,
+        BatchJobState::Deleted => 4,
+    });
+}
+
+fn bstate(c: &mut Cur) -> Result<BatchJobState, String> {
+    match c.u8()? {
+        0 => Ok(BatchJobState::Pending),
+        1 => Ok(BatchJobState::Queued),
+        2 => Ok(BatchJobState::Running),
+        3 => Ok(BatchJobState::Finished),
+        4 => Ok(BatchJobState::Deleted),
+        n => Err(format!("bad batch-job state {n}")),
+    }
+}
+
+fn put_mode(out: &mut Vec<u8>, m: JobMode) {
+    out.push(match m {
+        JobMode::Mpi => 0,
+        JobMode::Serial => 1,
+    });
+}
+
+fn mode(c: &mut Cur) -> Result<JobMode, String> {
+    match c.u8()? {
+        0 => Ok(JobMode::Mpi),
+        1 => Ok(JobMode::Serial),
+        n => Err(format!("bad job mode {n}")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rows
+// ---------------------------------------------------------------------------
+
+fn put_job(out: &mut Vec<u8>, j: &Job) {
+    put_u64(out, j.id.0);
+    put_u64(out, j.site_id.0);
+    put_u64(out, j.app_id.0);
+    put_jstate(out, j.state);
+    put_kv(out, &j.params);
+    put_kv(out, &j.tags);
+    put_u64(out, j.num_nodes as u64);
+    put_str(out, &j.workload);
+    put_ids(out, &j.parents, |p| p.0);
+    put_u64(out, j.attempts as u64);
+    put_u64(out, j.max_attempts as u64);
+    put_opt(out, j.session.map(|s| s.0));
+    put_f64(out, j.created_at);
+}
+
+fn job(c: &mut Cur) -> Result<Job, String> {
+    Ok(Job {
+        id: JobId(c.u64()?),
+        site_id: SiteId(c.u64()?),
+        app_id: AppId(c.u64()?),
+        state: jstate(c)?,
+        params: c.kv()?,
+        tags: c.kv()?,
+        num_nodes: c.u32()?,
+        workload: c.string()?,
+        parents: c.ids(JobId)?,
+        attempts: c.u32()?,
+        max_attempts: c.u32()?,
+        session: c.opt()?.map(SessionId),
+        created_at: c.f64()?,
+    })
+}
+
+fn put_batch_job(out: &mut Vec<u8>, b: &BatchJob) {
+    put_u64(out, b.id.0);
+    put_u64(out, b.site_id.0);
+    put_u64(out, b.num_nodes as u64);
+    put_f64(out, b.wall_time_s);
+    put_mode(out, b.mode);
+    put_str(out, &b.queue);
+    put_str(out, &b.project);
+    put_bstate(out, b.state);
+    put_opt(out, b.local_id);
+    put_f64(out, b.created_at);
+    put_opt_f64(out, b.started_at);
+    put_opt_f64(out, b.ended_at);
+}
+
+fn batch_job(c: &mut Cur) -> Result<BatchJob, String> {
+    Ok(BatchJob {
+        id: BatchJobId(c.u64()?),
+        site_id: SiteId(c.u64()?),
+        num_nodes: c.u32()?,
+        wall_time_s: c.f64()?,
+        mode: mode(c)?,
+        queue: c.string()?,
+        project: c.string()?,
+        state: bstate(c)?,
+        local_id: c.opt()?,
+        created_at: c.f64()?,
+        started_at: c.opt_f64()?,
+        ended_at: c.opt_f64()?,
+    })
+}
+
+fn put_transfer_item(out: &mut Vec<u8>, t: &TransferItem) {
+    put_u64(out, t.id.0);
+    put_u64(out, t.job_id.0);
+    put_u64(out, t.site_id.0);
+    put_dir(out, t.direction);
+    put_str(out, &t.remote);
+    put_u64(out, t.size_bytes);
+    put_tstate(out, t.state);
+    put_opt(out, t.task_id.map(|x| x.0));
+}
+
+fn transfer_item(c: &mut Cur) -> Result<TransferItem, String> {
+    Ok(TransferItem {
+        id: TransferItemId(c.u64()?),
+        job_id: JobId(c.u64()?),
+        site_id: SiteId(c.u64()?),
+        direction: dir(c)?,
+        remote: c.string()?,
+        size_bytes: c.u64()?,
+        state: tstate(c)?,
+        task_id: c.opt()?.map(XferTaskId),
+    })
+}
+
+fn put_event(out: &mut Vec<u8>, e: &Event) {
+    put_u64(out, e.seq);
+    put_u64(out, e.job_id.0);
+    put_u64(out, e.site_id.0);
+    put_f64(out, e.ts);
+    put_jstate(out, e.from);
+    put_jstate(out, e.to);
+    put_str(out, &e.data);
+}
+
+fn event(c: &mut Cur) -> Result<Event, String> {
+    Ok(Event {
+        seq: c.u64()?,
+        job_id: JobId(c.u64()?),
+        site_id: SiteId(c.u64()?),
+        ts: c.f64()?,
+        from: jstate(c)?,
+        to: jstate(c)?,
+        data: c.string()?,
+    })
+}
+
+fn put_job_create(out: &mut Vec<u8>, jc: &JobCreate) {
+    put_u64(out, jc.site_id.0);
+    put_str(out, &jc.app);
+    put_str(out, &jc.workload);
+    put_u64(out, jc.num_nodes as u64);
+    put_kv(out, &jc.params);
+    put_kv(out, &jc.tags);
+    put_xfers(out, &jc.transfers_in);
+    put_xfers(out, &jc.transfers_out);
+    put_ids(out, &jc.parents, |p| p.0);
+}
+
+fn job_create(c: &mut Cur) -> Result<JobCreate, String> {
+    Ok(JobCreate {
+        site_id: SiteId(c.u64()?),
+        app: c.string()?,
+        workload: c.string()?,
+        num_nodes: c.u32()?,
+        params: c.kv()?,
+        tags: c.kv()?,
+        transfers_in: c.xfers()?,
+        transfers_out: c.xfers()?,
+        parents: c.ids(JobId)?,
+    })
+}
+
+fn put_filter(out: &mut Vec<u8>, f: &JobFilter) {
+    put_opt(out, f.site.map(|s| s.0));
+    put_u64(out, f.states.len() as u64);
+    for &s in &f.states {
+        put_jstate(out, s);
+    }
+    put_kv(out, &f.tags);
+    put_u64(out, f.limit as u64);
+}
+
+fn filter(c: &mut Cur) -> Result<JobFilter, String> {
+    let site = c.opt()?.map(SiteId);
+    let n = c.count()?;
+    let mut states = Vec::with_capacity(n);
+    for _ in 0..n {
+        states.push(jstate(c)?);
+    }
+    Ok(JobFilter { site, states, tags: c.kv()?, limit: c.usize()? })
+}
+
+// ---------------------------------------------------------------------------
+// Envelopes
+// ---------------------------------------------------------------------------
+
+/// Variant tags: declaration-order index in [`ApiRequest`].
+fn request_tag(req: &ApiRequest) -> u8 {
+    use ApiRequest::*;
+    match req {
+        CreateUser { .. } => 0,
+        CreateSite { .. } => 1,
+        RegisterApp { .. } => 2,
+        BulkCreateJobs { .. } => 3,
+        ListJobs { .. } => 4,
+        CountByState { .. } => 5,
+        UpdateJobState { .. } => 6,
+        BulkUpdateJobState { .. } => 7,
+        CreateSession { .. } => 8,
+        SessionAcquire { .. } => 9,
+        SessionHeartbeat { .. } => 10,
+        SessionSync { .. } => 11,
+        SessionEnd { .. } => 12,
+        CreateBatchJob { .. } => 13,
+        ListBatchJobs { .. } => 14,
+        UpdateBatchJob { .. } => 15,
+        PendingTransferItems { .. } => 16,
+        UpdateTransferItems { .. } => 17,
+        SyncTransferItems { .. } => 18,
+        SiteBacklog { .. } => 19,
+        ListEvents { .. } => 20,
+        WatchEvents { .. } => 21,
+    }
+}
+
+/// Serialize a request frame (`0x01 tag fields...`) into `out`.
+pub fn encode_request(req: &ApiRequest, out: &mut Vec<u8>) {
+    use ApiRequest::*;
+    out.push(KIND_REQUEST);
+    out.push(request_tag(req));
+    match req {
+        CreateUser { name } => put_str(out, name),
+        CreateSite { name, hostname, path } => {
+            put_str(out, name);
+            put_str(out, hostname);
+            put_str(out, path);
+        }
+        RegisterApp { site, name, command_template, parameters } => {
+            put_u64(out, site.0);
+            put_str(out, name);
+            put_str(out, command_template);
+            put_u64(out, parameters.len() as u64);
+            for p in parameters {
+                put_str(out, p);
+            }
+        }
+        BulkCreateJobs { jobs } => {
+            put_u64(out, jobs.len() as u64);
+            for jc in jobs {
+                put_job_create(out, jc);
+            }
+        }
+        ListJobs { filter } => put_filter(out, filter),
+        CountByState { site } => put_u64(out, site.0),
+        UpdateJobState { job, to, data } => {
+            put_u64(out, job.0);
+            put_jstate(out, *to);
+            put_str(out, data);
+        }
+        BulkUpdateJobState { jobs, to, data } => {
+            put_ids(out, jobs, |j| j.0);
+            put_jstate(out, *to);
+            put_str(out, data);
+        }
+        CreateSession { site, batch_job } => {
+            put_u64(out, site.0);
+            put_opt(out, batch_job.map(|b| b.0));
+        }
+        SessionAcquire { session, max_nodes, max_jobs } => {
+            put_u64(out, session.0);
+            put_u64(out, *max_nodes as u64);
+            put_u64(out, *max_jobs as u64);
+        }
+        SessionHeartbeat { session } => put_u64(out, session.0),
+        SessionSync { session, updates } => {
+            put_u64(out, session.0);
+            put_u64(out, updates.len() as u64);
+            for (job, to, data) in updates {
+                put_u64(out, job.0);
+                put_jstate(out, *to);
+                put_str(out, data);
+            }
+        }
+        SessionEnd { session } => put_u64(out, session.0),
+        CreateBatchJob { site, num_nodes, wall_time_s, mode, queue, project } => {
+            put_u64(out, site.0);
+            put_u64(out, *num_nodes as u64);
+            put_f64(out, *wall_time_s);
+            put_mode(out, *mode);
+            put_str(out, queue);
+            put_str(out, project);
+        }
+        ListBatchJobs { site, active_only } => {
+            put_u64(out, site.0);
+            out.push(*active_only as u8);
+        }
+        UpdateBatchJob { id, state, local_id } => {
+            put_u64(out, id.0);
+            put_bstate(out, *state);
+            put_opt(out, *local_id);
+        }
+        PendingTransferItems { site, direction, limit } => {
+            put_u64(out, site.0);
+            put_dir(out, *direction);
+            put_u64(out, *limit as u64);
+        }
+        UpdateTransferItems { ids, state, task_id } => {
+            put_ids(out, ids, |i| i.0);
+            put_tstate(out, *state);
+            put_opt(out, task_id.map(|t| t.0));
+        }
+        SyncTransferItems { updates } => {
+            put_u64(out, updates.len() as u64);
+            for (id, st, task) in updates {
+                put_u64(out, id.0);
+                put_tstate(out, *st);
+                put_opt(out, task.map(|t| t.0));
+            }
+        }
+        SiteBacklog { site } => put_u64(out, site.0),
+        ListEvents { since } => put_u64(out, *since as u64),
+        WatchEvents { site, since, timeout_ms, max_events } => {
+            put_opt(out, site.map(|s| s.0));
+            put_u64(out, *since as u64);
+            put_u64(out, *timeout_ms);
+            put_u64(out, *max_events as u64);
+        }
+    }
+}
+
+/// Decode a request frame. Mirrors the JSON decoder's strictness: the
+/// hot `SessionSync`/`SyncTransferItems` tuples are strict, and a bad
+/// enum index anywhere is an error (binary has no lenient name fallback
+/// — an out-of-range byte is corruption, not version skew).
+pub fn decode_request(body: &[u8]) -> Result<ApiRequest, String> {
+    let mut c = Cur::new(body);
+    if c.u8()? != KIND_REQUEST {
+        return Err("bad frame kind".into());
+    }
+    let tag = c.u8()?;
+    let req = match tag {
+        0 => ApiRequest::CreateUser { name: c.string()? },
+        1 => ApiRequest::CreateSite { name: c.string()?, hostname: c.string()?, path: c.string()? },
+        2 => ApiRequest::RegisterApp {
+            site: SiteId(c.u64()?),
+            name: c.string()?,
+            command_template: c.string()?,
+            parameters: {
+                let n = c.count()?;
+                let mut ps = Vec::with_capacity(n);
+                for _ in 0..n {
+                    ps.push(c.string()?);
+                }
+                ps
+            },
+        },
+        3 => ApiRequest::BulkCreateJobs {
+            jobs: {
+                let n = c.count()?;
+                let mut jobs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    jobs.push(job_create(&mut c)?);
+                }
+                jobs
+            },
+        },
+        4 => ApiRequest::ListJobs { filter: filter(&mut c)? },
+        5 => ApiRequest::CountByState { site: SiteId(c.u64()?) },
+        6 => ApiRequest::UpdateJobState {
+            job: JobId(c.u64()?),
+            to: jstate(&mut c)?,
+            data: c.string()?,
+        },
+        7 => ApiRequest::BulkUpdateJobState {
+            jobs: c.ids(JobId)?,
+            to: jstate(&mut c)?,
+            data: c.string()?,
+        },
+        8 => ApiRequest::CreateSession {
+            site: SiteId(c.u64()?),
+            batch_job: c.opt()?.map(BatchJobId),
+        },
+        9 => ApiRequest::SessionAcquire {
+            session: SessionId(c.u64()?),
+            max_nodes: c.u32()?,
+            max_jobs: c.usize()?,
+        },
+        10 => ApiRequest::SessionHeartbeat { session: SessionId(c.u64()?) },
+        11 => {
+            let session = SessionId(c.u64()?);
+            let n = c.count()?;
+            let mut updates = Vec::with_capacity(n);
+            for _ in 0..n {
+                updates.push((JobId(c.u64()?), jstate(&mut c)?, c.string()?));
+            }
+            ApiRequest::SessionSync { session, updates }
+        }
+        12 => ApiRequest::SessionEnd { session: SessionId(c.u64()?) },
+        13 => ApiRequest::CreateBatchJob {
+            site: SiteId(c.u64()?),
+            num_nodes: c.u32()?,
+            wall_time_s: c.f64()?,
+            mode: mode(&mut c)?,
+            queue: c.string()?,
+            project: c.string()?,
+        },
+        14 => ApiRequest::ListBatchJobs { site: SiteId(c.u64()?), active_only: c.bool()? },
+        15 => ApiRequest::UpdateBatchJob {
+            id: BatchJobId(c.u64()?),
+            state: bstate(&mut c)?,
+            local_id: c.opt()?,
+        },
+        16 => ApiRequest::PendingTransferItems {
+            site: SiteId(c.u64()?),
+            direction: dir(&mut c)?,
+            limit: c.usize()?,
+        },
+        17 => ApiRequest::UpdateTransferItems {
+            ids: c.ids(TransferItemId)?,
+            state: tstate(&mut c)?,
+            task_id: c.opt()?.map(XferTaskId),
+        },
+        18 => {
+            let n = c.count()?;
+            let mut updates = Vec::with_capacity(n);
+            for _ in 0..n {
+                updates.push((TransferItemId(c.u64()?), tstate(&mut c)?, c.opt()?.map(XferTaskId)));
+            }
+            ApiRequest::SyncTransferItems { updates }
+        }
+        19 => ApiRequest::SiteBacklog { site: SiteId(c.u64()?) },
+        20 => ApiRequest::ListEvents { since: c.usize()? },
+        21 => ApiRequest::WatchEvents {
+            site: c.opt()?.map(SiteId),
+            since: c.usize()?,
+            timeout_ms: c.u64()?,
+            max_events: c.usize()?,
+        },
+        n => return Err(format!("unknown request tag {n}")),
+    };
+    c.finish()?;
+    Ok(req)
+}
+
+/// Variant tags: declaration-order index in [`ApiResponse`].
+fn response_tag(resp: &ApiResponse) -> u8 {
+    use ApiResponse::*;
+    match resp {
+        Unit => 0,
+        UserId(_) => 1,
+        SiteId(_) => 2,
+        AppId(_) => 3,
+        JobIds(_) => 4,
+        Jobs(_) => 5,
+        Counts(_) => 6,
+        SessionId(_) => 7,
+        BatchJobId(_) => 8,
+        BatchJobs(_) => 9,
+        TransferItems(_) => 10,
+        Backlog(_) => 11,
+        Events(_) => 12,
+    }
+}
+
+/// Serialize a success frame (`0x02 tag fields...`) into `out`.
+pub fn encode_ok(resp: &ApiResponse, out: &mut Vec<u8>) {
+    use ApiResponse::*;
+    out.push(KIND_OK);
+    out.push(response_tag(resp));
+    match resp {
+        Unit => {}
+        UserId(x) => put_u64(out, x.0),
+        SiteId(x) => put_u64(out, x.0),
+        AppId(x) => put_u64(out, x.0),
+        SessionId(x) => put_u64(out, x.0),
+        BatchJobId(x) => put_u64(out, x.0),
+        JobIds(x) => put_ids(out, x, |i| i.0),
+        Jobs(x) => {
+            put_u64(out, x.len() as u64);
+            for j in x {
+                put_job(out, j);
+            }
+        }
+        Counts(x) => {
+            put_u64(out, x.len() as u64);
+            for (s, n) in x {
+                put_jstate(out, *s);
+                put_u64(out, *n as u64);
+            }
+        }
+        BatchJobs(x) => {
+            put_u64(out, x.len() as u64);
+            for b in x {
+                put_batch_job(out, b);
+            }
+        }
+        TransferItems(x) => {
+            put_u64(out, x.len() as u64);
+            for t in x {
+                put_transfer_item(out, t);
+            }
+        }
+        Backlog(b) => {
+            put_u64(out, b.backlog_jobs as u64);
+            put_u64(out, b.runnable_nodes as u64);
+            put_u64(out, b.inflight_nodes as u64);
+            put_u64(out, b.batch_nodes as u64);
+        }
+        Events(p) => {
+            put_opt(out, p.truncated_before);
+            put_u64(out, p.events.len() as u64);
+            for e in &p.events {
+                put_event(out, e);
+            }
+        }
+    }
+}
+
+/// Decode a response frame: `Ok(Ok(resp))` for a success frame,
+/// `Ok(Err(msg))` for an error frame, `Err(msg)` for a malformed one.
+#[allow(clippy::type_complexity)]
+pub fn decode_response(body: &[u8]) -> Result<Result<ApiResponse, String>, String> {
+    let mut c = Cur::new(body);
+    match c.u8()? {
+        KIND_ERR => return Ok(Err(c.string()?)),
+        KIND_OK => {}
+        _ => return Err("bad frame kind".into()),
+    }
+    let tag = c.u8()?;
+    let resp = match tag {
+        0 => ApiResponse::Unit,
+        1 => ApiResponse::UserId(UserId(c.u64()?)),
+        2 => ApiResponse::SiteId(SiteId(c.u64()?)),
+        3 => ApiResponse::AppId(AppId(c.u64()?)),
+        4 => ApiResponse::JobIds(c.ids(JobId)?),
+        5 => {
+            let n = c.count()?;
+            let mut jobs = Vec::with_capacity(n);
+            for _ in 0..n {
+                jobs.push(job(&mut c)?);
+            }
+            ApiResponse::Jobs(jobs)
+        }
+        6 => {
+            let n = c.count()?;
+            let mut counts = Vec::with_capacity(n);
+            for _ in 0..n {
+                counts.push((jstate(&mut c)?, c.usize()?));
+            }
+            ApiResponse::Counts(counts)
+        }
+        7 => ApiResponse::SessionId(SessionId(c.u64()?)),
+        8 => ApiResponse::BatchJobId(BatchJobId(c.u64()?)),
+        9 => {
+            let n = c.count()?;
+            let mut bs = Vec::with_capacity(n);
+            for _ in 0..n {
+                bs.push(batch_job(&mut c)?);
+            }
+            ApiResponse::BatchJobs(bs)
+        }
+        10 => {
+            let n = c.count()?;
+            let mut ts = Vec::with_capacity(n);
+            for _ in 0..n {
+                ts.push(transfer_item(&mut c)?);
+            }
+            ApiResponse::TransferItems(ts)
+        }
+        11 => ApiResponse::Backlog(Backlog {
+            backlog_jobs: c.usize()?,
+            runnable_nodes: c.u32()?,
+            inflight_nodes: c.u32()?,
+            batch_nodes: c.u32()?,
+        }),
+        12 => {
+            let truncated_before = c.opt()?;
+            let n = c.count()?;
+            let mut events = Vec::with_capacity(n);
+            for _ in 0..n {
+                events.push(event(&mut c)?);
+            }
+            ApiResponse::Events(EventsPage { truncated_before, events })
+        }
+        n => return Err(format!("unknown response tag {n}")),
+    };
+    c.finish()?;
+    Ok(Ok(resp))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn varint_roundtrip(v: u64) {
+        let mut buf = Vec::new();
+        put_u64(&mut buf, v);
+        let mut c = Cur::new(&buf);
+        assert_eq!(c.u64().unwrap(), v);
+        assert_eq!(c.remaining(), 0);
+    }
+
+    #[test]
+    fn varints_roundtrip_across_widths() {
+        for v in [0, 1, 127, 128, 300, 16_383, 16_384, u32::MAX as u64, u64::MAX] {
+            varint_roundtrip(v);
+        }
+    }
+
+    #[test]
+    fn truncated_and_malformed_frames_error() {
+        let mut buf = Vec::new();
+        encode_request(
+            &ApiRequest::SessionSync {
+                session: SessionId(7),
+                updates: vec![(JobId(1), JobState::RunDone, "x".into())],
+            },
+            &mut buf,
+        );
+        // Every proper prefix of a valid frame must decode to an error,
+        // never panic or succeed.
+        for cut in 0..buf.len() {
+            assert!(decode_request(&buf[..cut]).is_err(), "prefix {cut} decoded");
+        }
+        // Trailing garbage after a complete frame is rejected too.
+        let mut noisy = buf.clone();
+        noisy.push(0xff);
+        assert_eq!(decode_request(&noisy).unwrap_err(), "trailing bytes in frame");
+        // Unknown tag and bad kind byte.
+        assert_eq!(decode_request(&[KIND_REQUEST, 250]).unwrap_err(), "unknown request tag 250");
+        assert_eq!(decode_request(&[0x7e, 0]).unwrap_err(), "bad frame kind");
+        assert!(decode_request(&[]).is_err());
+    }
+
+    #[test]
+    fn forged_count_cannot_reserve_past_frame_length() {
+        // A SessionSync frame claiming u64::MAX updates but carrying no
+        // bytes for them: the count check fails before any reservation.
+        let mut buf = vec![KIND_REQUEST, 11];
+        put_u64(&mut buf, 1); // session
+        put_u64(&mut buf, u64::MAX); // forged update count
+        assert!(decode_request(&buf).is_err());
+    }
+
+    #[test]
+    fn error_frames_roundtrip() {
+        let mut buf = Vec::new();
+        FrameCodec.encode_err("not found: site 9", &mut buf);
+        assert_eq!(FrameCodec.decode_err(&buf), "not found: site 9");
+        match FrameCodec.decode_ok(&buf) {
+            Err(ApiError::Transport(m)) => assert_eq!(m, "not found: site 9"),
+            other => panic!("expected Transport, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,554 @@
+//! The JSON envelope codec — the original (and default) wire encoding.
+//!
+//! A request is `{"type":"<Variant>", ...fields}`; a success response is
+//! `{"ok":true,"type":"<Variant>","body":...}`; an error response is
+//! `{"ok":false,"error":"..."}`. Row payloads reuse the
+//! `to_json`/`from_json` codecs on [`crate::service::models`] types, so a
+//! row has exactly one JSON shape on the wire and in the WAL. These
+//! functions moved here verbatim from `http_gw` when the codec layer was
+//! extracted; `http_gw` re-exports them for compatibility.
+
+use crate::service::api::*;
+use crate::service::models::*;
+use crate::util::json::{kv_from_json, kv_to_json, u64s_from_json, Json};
+
+use super::{WireCodec, CT_JSON};
+
+/// [`WireCodec`] over the JSON envelope encoding.
+pub struct JsonCodec;
+
+impl WireCodec for JsonCodec {
+    fn content_type(&self) -> &'static str {
+        CT_JSON
+    }
+
+    fn encode_request(&self, req: &ApiRequest, out: &mut Vec<u8>) {
+        out.extend_from_slice(request_to_json(req).to_string().as_bytes());
+    }
+
+    fn decode_request(&self, body: &[u8]) -> Result<ApiRequest, String> {
+        let j = Json::parse(&String::from_utf8_lossy(body)).map_err(|e| format!("bad json: {e}"))?;
+        request_from_json(&j)
+    }
+
+    fn encode_ok(&self, resp: &ApiResponse, out: &mut Vec<u8>) {
+        out.extend_from_slice(response_to_json(resp).to_string().as_bytes());
+    }
+
+    fn encode_err(&self, msg: &str, out: &mut Vec<u8>) {
+        let body = Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))]);
+        out.extend_from_slice(body.to_string().as_bytes());
+    }
+
+    fn decode_ok(&self, body: &[u8]) -> Result<ApiResponse, ApiError> {
+        let text = String::from_utf8_lossy(body);
+        let parsed = Json::parse(&text).map_err(|e| ApiError::Transport(e.to_string()))?;
+        response_from_json(&parsed)
+    }
+
+    fn decode_err(&self, body: &[u8]) -> String {
+        Json::parse(&String::from_utf8_lossy(body))
+            .ok()
+            .and_then(|j| j.get("error").and_then(Json::as_str).map(String::from))
+            .unwrap_or_else(|| "unknown".to_string())
+    }
+}
+
+fn xfers_to_json(xs: &[(String, u64)]) -> Json {
+    Json::Arr(xs.iter().map(|(r, s)| Json::arr([Json::str(r.clone()), Json::num(*s as f64)])).collect())
+}
+
+fn xfers_from_json(j: &Json) -> Vec<(String, u64)> {
+    j.as_arr()
+        .map(|a| {
+            a.iter()
+                .filter_map(|p| Some((p.idx(0)?.as_str()?.to_string(), p.idx(1)?.as_u64()?)))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+fn ids_to_json<T: Copy>(ids: &[T], f: impl Fn(T) -> u64) -> Json {
+    Json::Arr(ids.iter().map(|&i| Json::num(f(i) as f64)).collect())
+}
+
+// Lenient wire decoders: unknown names fall back to a safe default
+// rather than erroring (strict paths use `T::from_name` directly).
+fn dir_from(s: &str) -> Direction {
+    Direction::from_name(s).unwrap_or(Direction::In)
+}
+
+fn tstate_from(s: &str) -> TransferState {
+    TransferState::from_name(s).unwrap_or(TransferState::Pending)
+}
+
+fn bstate_from(s: &str) -> BatchJobState {
+    BatchJobState::from_name(s).unwrap_or(BatchJobState::Pending)
+}
+
+fn mode_from(s: &str) -> JobMode {
+    JobMode::from_name(s).unwrap_or(JobMode::Mpi)
+}
+
+/// Encode a request envelope as `{"type":"<Variant>", ...fields}`.
+pub fn request_to_json(req: &ApiRequest) -> Json {
+    use ApiRequest::*;
+    match req {
+        CreateUser { name } => Json::obj(vec![("type", Json::str("CreateUser")), ("name", Json::str(name.clone()))]),
+        CreateSite { name, hostname, path } => Json::obj(vec![
+            ("type", Json::str("CreateSite")),
+            ("name", Json::str(name.clone())),
+            ("hostname", Json::str(hostname.clone())),
+            ("path", Json::str(path.clone())),
+        ]),
+        RegisterApp { site, name, command_template, parameters } => Json::obj(vec![
+            ("type", Json::str("RegisterApp")),
+            ("site", Json::num(site.0 as f64)),
+            ("name", Json::str(name.clone())),
+            ("command_template", Json::str(command_template.clone())),
+            ("parameters", Json::Arr(parameters.iter().map(|p| Json::str(p.clone())).collect())),
+        ]),
+        BulkCreateJobs { jobs } => Json::obj(vec![
+            ("type", Json::str("BulkCreateJobs")),
+            (
+                "jobs",
+                Json::Arr(
+                    jobs.iter()
+                        .map(|jc| {
+                            Json::obj(vec![
+                                ("site_id", Json::num(jc.site_id.0 as f64)),
+                                ("app", Json::str(jc.app.clone())),
+                                ("workload", Json::str(jc.workload.clone())),
+                                ("num_nodes", Json::num(jc.num_nodes as f64)),
+                                ("params", kv_to_json(&jc.params)),
+                                ("tags", kv_to_json(&jc.tags)),
+                                ("transfers_in", xfers_to_json(&jc.transfers_in)),
+                                ("transfers_out", xfers_to_json(&jc.transfers_out)),
+                                ("parents", ids_to_json(&jc.parents, |p| p.0)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+        ListJobs { filter } => Json::obj(vec![("type", Json::str("ListJobs")), ("filter", filter_to_json(filter))]),
+        CountByState { site } => {
+            Json::obj(vec![("type", Json::str("CountByState")), ("site", Json::num(site.0 as f64))])
+        }
+        UpdateJobState { job, to, data } => Json::obj(vec![
+            ("type", Json::str("UpdateJobState")),
+            ("job", Json::num(job.0 as f64)),
+            ("to", Json::str(to.name())),
+            ("data", Json::str(data.clone())),
+        ]),
+        BulkUpdateJobState { jobs, to, data } => Json::obj(vec![
+            ("type", Json::str("BulkUpdateJobState")),
+            ("jobs", ids_to_json(jobs, |j| j.0)),
+            ("to", Json::str(to.name())),
+            ("data", Json::str(data.clone())),
+        ]),
+        CreateSession { site, batch_job } => Json::obj(vec![
+            ("type", Json::str("CreateSession")),
+            ("site", Json::num(site.0 as f64)),
+            ("batch_job", batch_job.map(|b| Json::num(b.0 as f64)).unwrap_or(Json::Null)),
+        ]),
+        SessionAcquire { session, max_nodes, max_jobs } => Json::obj(vec![
+            ("type", Json::str("SessionAcquire")),
+            ("session", Json::num(session.0 as f64)),
+            ("max_nodes", Json::num(*max_nodes as f64)),
+            ("max_jobs", Json::num(*max_jobs as f64)),
+        ]),
+        SessionHeartbeat { session } => Json::obj(vec![
+            ("type", Json::str("SessionHeartbeat")),
+            ("session", Json::num(session.0 as f64)),
+        ]),
+        SessionSync { session, updates } => Json::obj(vec![
+            ("type", Json::str("SessionSync")),
+            ("session", Json::num(session.0 as f64)),
+            (
+                "updates",
+                Json::Arr(
+                    updates
+                        .iter()
+                        .map(|(job, to, data)| {
+                            Json::arr([
+                                Json::num(job.0 as f64),
+                                Json::str(to.name()),
+                                Json::str(data.clone()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+        SessionEnd { session } => {
+            Json::obj(vec![("type", Json::str("SessionEnd")), ("session", Json::num(session.0 as f64))])
+        }
+        CreateBatchJob { site, num_nodes, wall_time_s, mode, queue, project } => Json::obj(vec![
+            ("type", Json::str("CreateBatchJob")),
+            ("site", Json::num(site.0 as f64)),
+            ("num_nodes", Json::num(*num_nodes as f64)),
+            ("wall_time_s", Json::num(*wall_time_s)),
+            ("mode", Json::str(mode.name())),
+            ("queue", Json::str(queue.clone())),
+            ("project", Json::str(project.clone())),
+        ]),
+        ListBatchJobs { site, active_only } => Json::obj(vec![
+            ("type", Json::str("ListBatchJobs")),
+            ("site", Json::num(site.0 as f64)),
+            ("active_only", Json::Bool(*active_only)),
+        ]),
+        UpdateBatchJob { id, state, local_id } => Json::obj(vec![
+            ("type", Json::str("UpdateBatchJob")),
+            ("id", Json::num(id.0 as f64)),
+            ("state", Json::str(state.name())),
+            ("local_id", local_id.map(|l| Json::num(l as f64)).unwrap_or(Json::Null)),
+        ]),
+        PendingTransferItems { site, direction, limit } => Json::obj(vec![
+            ("type", Json::str("PendingTransferItems")),
+            ("site", Json::num(site.0 as f64)),
+            ("direction", Json::str(direction.name())),
+            ("limit", Json::num(*limit as f64)),
+        ]),
+        UpdateTransferItems { ids, state, task_id } => Json::obj(vec![
+            ("type", Json::str("UpdateTransferItems")),
+            ("ids", ids_to_json(ids, |i| i.0)),
+            ("state", Json::str(state.name())),
+            ("task_id", task_id.map(|t| Json::num(t.0 as f64)).unwrap_or(Json::Null)),
+        ]),
+        SyncTransferItems { updates } => Json::obj(vec![
+            ("type", Json::str("SyncTransferItems")),
+            (
+                "updates",
+                Json::Arr(
+                    updates
+                        .iter()
+                        .map(|(id, st, task)| {
+                            Json::arr([
+                                Json::num(id.0 as f64),
+                                Json::str(st.name()),
+                                task.map(|t| Json::num(t.0 as f64)).unwrap_or(Json::Null),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+        SiteBacklog { site } => {
+            Json::obj(vec![("type", Json::str("SiteBacklog")), ("site", Json::num(site.0 as f64))])
+        }
+        ListEvents { since } => {
+            Json::obj(vec![("type", Json::str("ListEvents")), ("since", Json::num(*since as f64))])
+        }
+        WatchEvents { site, since, timeout_ms, max_events } => Json::obj(vec![
+            ("type", Json::str("WatchEvents")),
+            ("site", site.map(|s| Json::num(s.0 as f64)).unwrap_or(Json::Null)),
+            ("since", Json::num(*since as f64)),
+            ("timeout_ms", Json::num(*timeout_ms as f64)),
+            ("max_events", Json::num(*max_events as f64)),
+        ]),
+    }
+}
+
+fn filter_to_json(f: &JobFilter) -> Json {
+    Json::obj(vec![
+        ("site", f.site.map(|s| Json::num(s.0 as f64)).unwrap_or(Json::Null)),
+        ("states", Json::Arr(f.states.iter().map(|s| Json::str(s.name())).collect())),
+        ("tags", kv_to_json(&f.tags)),
+        ("limit", Json::num(f.limit as f64)),
+    ])
+}
+
+fn filter_from_json(j: &Json) -> JobFilter {
+    JobFilter {
+        site: j.get("site").and_then(Json::as_u64).map(SiteId),
+        states: j
+            .get("states")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(|s| s.as_str().and_then(JobState::from_name)).collect())
+            .unwrap_or_default(),
+        tags: j.get("tags").map(kv_from_json).unwrap_or_default(),
+        limit: j.get("limit").and_then(Json::as_u64).unwrap_or(0) as usize,
+    }
+}
+
+/// Decode a request envelope; the error string becomes the framed 400.
+pub fn request_from_json(j: &Json) -> Result<ApiRequest, String> {
+    let ty = j.get("type").and_then(Json::as_str).ok_or("missing type")?;
+    let site = || j.get("site").and_then(Json::as_u64).map(SiteId).ok_or("missing site");
+    let get_str = |k: &str| j.get(k).and_then(Json::as_str).unwrap_or("").to_string();
+    Ok(match ty {
+        "CreateUser" => ApiRequest::CreateUser { name: get_str("name") },
+        "CreateSite" => ApiRequest::CreateSite {
+            name: get_str("name"),
+            hostname: get_str("hostname"),
+            path: get_str("path"),
+        },
+        "RegisterApp" => ApiRequest::RegisterApp {
+            site: site()?,
+            name: get_str("name"),
+            command_template: get_str("command_template"),
+            parameters: j
+                .get("parameters")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(|s| s.as_str().map(String::from)).collect())
+                .unwrap_or_default(),
+        },
+        "BulkCreateJobs" => ApiRequest::BulkCreateJobs {
+            jobs: j
+                .get("jobs")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .map(|jc| JobCreate {
+                            site_id: SiteId(jc.get("site_id").and_then(Json::as_u64).unwrap_or(0)),
+                            app: jc.get("app").and_then(Json::as_str).unwrap_or("").into(),
+                            workload: jc.get("workload").and_then(Json::as_str).unwrap_or("").into(),
+                            num_nodes: jc.get("num_nodes").and_then(Json::as_u64).unwrap_or(1) as u32,
+                            params: jc.get("params").map(kv_from_json).unwrap_or_default(),
+                            tags: jc.get("tags").map(kv_from_json).unwrap_or_default(),
+                            transfers_in: jc.get("transfers_in").map(xfers_from_json).unwrap_or_default(),
+                            transfers_out: jc.get("transfers_out").map(xfers_from_json).unwrap_or_default(),
+                            parents: jc
+                                .get("parents")
+                                .map(u64s_from_json)
+                                .unwrap_or_default()
+                                .into_iter()
+                                .map(JobId)
+                                .collect(),
+                        })
+                        .collect()
+                })
+                .unwrap_or_default(),
+        },
+        "ListJobs" => ApiRequest::ListJobs {
+            filter: j.get("filter").map(filter_from_json).unwrap_or_default(),
+        },
+        "CountByState" => ApiRequest::CountByState { site: site()? },
+        "UpdateJobState" => ApiRequest::UpdateJobState {
+            job: JobId(j.get("job").and_then(Json::as_u64).ok_or("missing job")?),
+            to: JobState::from_name(&get_str("to")).ok_or("bad state")?,
+            data: get_str("data"),
+        },
+        "BulkUpdateJobState" => ApiRequest::BulkUpdateJobState {
+            jobs: j.get("jobs").map(u64s_from_json).unwrap_or_default().into_iter().map(JobId).collect(),
+            to: JobState::from_name(&get_str("to")).ok_or("bad state")?,
+            data: get_str("data"),
+        },
+        "CreateSession" => ApiRequest::CreateSession {
+            site: site()?,
+            batch_job: j.get("batch_job").and_then(Json::as_u64).map(BatchJobId),
+        },
+        "SessionAcquire" => ApiRequest::SessionAcquire {
+            session: SessionId(j.get("session").and_then(Json::as_u64).ok_or("missing session")?),
+            max_nodes: j.get("max_nodes").and_then(Json::as_u64).unwrap_or(0) as u32,
+            max_jobs: j.get("max_jobs").and_then(Json::as_u64).unwrap_or(0) as usize,
+        },
+        "SessionHeartbeat" => ApiRequest::SessionHeartbeat {
+            session: SessionId(j.get("session").and_then(Json::as_u64).ok_or("missing session")?),
+        },
+        "SessionSync" => {
+            // Strict decode: a malformed tuple is a request error, not a
+            // silent drop — the endpoint's contract is that every update
+            // is either applied or reported back in the failed list.
+            let mut updates = Vec::new();
+            if let Some(a) = j.get("updates").and_then(Json::as_arr) {
+                for u in a {
+                    let job = u
+                        .idx(0)
+                        .and_then(Json::as_u64)
+                        .ok_or("SessionSync update: bad job id")?;
+                    let to = u
+                        .idx(1)
+                        .and_then(Json::as_str)
+                        .and_then(JobState::from_name)
+                        .ok_or("SessionSync update: bad state")?;
+                    let data = u.idx(2).and_then(Json::as_str).unwrap_or("").to_string();
+                    updates.push((JobId(job), to, data));
+                }
+            }
+            ApiRequest::SessionSync {
+                session: SessionId(j.get("session").and_then(Json::as_u64).ok_or("missing session")?),
+                updates,
+            }
+        }
+        "SessionEnd" => ApiRequest::SessionEnd {
+            session: SessionId(j.get("session").and_then(Json::as_u64).ok_or("missing session")?),
+        },
+        "CreateBatchJob" => ApiRequest::CreateBatchJob {
+            site: site()?,
+            num_nodes: j.get("num_nodes").and_then(Json::as_u64).unwrap_or(0) as u32,
+            wall_time_s: j.get("wall_time_s").and_then(Json::as_f64).unwrap_or(0.0),
+            mode: mode_from(&get_str("mode")),
+            queue: get_str("queue"),
+            project: get_str("project"),
+        },
+        "ListBatchJobs" => ApiRequest::ListBatchJobs {
+            site: site()?,
+            active_only: j.get("active_only").and_then(Json::as_bool).unwrap_or(false),
+        },
+        "UpdateBatchJob" => ApiRequest::UpdateBatchJob {
+            id: BatchJobId(j.get("id").and_then(Json::as_u64).ok_or("missing id")?),
+            state: bstate_from(&get_str("state")),
+            local_id: j.get("local_id").and_then(Json::as_u64),
+        },
+        "PendingTransferItems" => ApiRequest::PendingTransferItems {
+            site: site()?,
+            direction: dir_from(&get_str("direction")),
+            limit: j.get("limit").and_then(Json::as_u64).unwrap_or(0) as usize,
+        },
+        "UpdateTransferItems" => ApiRequest::UpdateTransferItems {
+            ids: j.get("ids").map(u64s_from_json).unwrap_or_default().into_iter().map(TransferItemId).collect(),
+            state: tstate_from(&get_str("state")),
+            task_id: j.get("task_id").and_then(Json::as_u64).map(XferTaskId),
+        },
+        "SyncTransferItems" => {
+            // Strict decode: an unknown state string must not default to
+            // Pending (that would silently reset a live item).
+            let mut updates = Vec::new();
+            if let Some(a) = j.get("updates").and_then(Json::as_arr) {
+                for u in a {
+                    let id = u
+                        .idx(0)
+                        .and_then(Json::as_u64)
+                        .ok_or("SyncTransferItems update: bad item id")?;
+                    let state = u
+                        .idx(1)
+                        .and_then(Json::as_str)
+                        .and_then(TransferState::from_name)
+                        .ok_or("SyncTransferItems update: bad state")?;
+                    let task = u.idx(2).and_then(Json::as_u64).map(XferTaskId);
+                    updates.push((TransferItemId(id), state, task));
+                }
+            }
+            ApiRequest::SyncTransferItems { updates }
+        }
+        "SiteBacklog" => ApiRequest::SiteBacklog { site: site()? },
+        "ListEvents" => ApiRequest::ListEvents {
+            since: j.get("since").and_then(Json::as_u64).unwrap_or(0) as usize,
+        },
+        // A missing/garbled timeout degrades to a non-blocking probe (0),
+        // never to an accidental server-side hang. A missing `max_events`
+        // (old client) is 0 = server default — wire back-compat for the
+        // page-credit field.
+        "WatchEvents" => ApiRequest::WatchEvents {
+            site: j.get("site").and_then(Json::as_u64).map(SiteId),
+            since: j.get("since").and_then(Json::as_u64).unwrap_or(0) as usize,
+            timeout_ms: j.get("timeout_ms").and_then(Json::as_u64).unwrap_or(0),
+            max_events: j.get("max_events").and_then(Json::as_u64).unwrap_or(0) as usize,
+        },
+        other => return Err(format!("unknown request type {other}")),
+    })
+}
+
+/// Encode a success envelope as `{"ok":true,"type":...,"body":...}`.
+pub fn response_to_json(resp: &ApiResponse) -> Json {
+    use ApiResponse::*;
+    let (ty, body) = match resp {
+        Unit => ("Unit", Json::Null),
+        UserId(x) => ("UserId", Json::num(x.0 as f64)),
+        SiteId(x) => ("SiteId", Json::num(x.0 as f64)),
+        AppId(x) => ("AppId", Json::num(x.0 as f64)),
+        JobIds(x) => ("JobIds", ids_to_json(x, |i| i.0)),
+        Jobs(x) => ("Jobs", Json::Arr(x.iter().map(Job::to_json).collect())),
+        Counts(x) => (
+            "Counts",
+            Json::Arr(
+                x.iter()
+                    .map(|(s, n)| Json::arr([Json::str(s.name()), Json::num(*n as f64)]))
+                    .collect(),
+            ),
+        ),
+        SessionId(x) => ("SessionId", Json::num(x.0 as f64)),
+        BatchJobId(x) => ("BatchJobId", Json::num(x.0 as f64)),
+        BatchJobs(x) => ("BatchJobs", Json::Arr(x.iter().map(BatchJob::to_json).collect())),
+        TransferItems(x) => ("TransferItems", Json::Arr(x.iter().map(TransferItem::to_json).collect())),
+        Backlog(b) => (
+            "Backlog",
+            Json::obj(vec![
+                ("backlog_jobs", Json::num(b.backlog_jobs as f64)),
+                ("runnable_nodes", Json::num(b.runnable_nodes as f64)),
+                ("inflight_nodes", Json::num(b.inflight_nodes as f64)),
+                ("batch_nodes", Json::num(b.batch_nodes as f64)),
+            ]),
+        ),
+        // The legacy wire shape (a bare array) is kept whenever there is
+        // no truncation to report — the overwhelmingly common case — so
+        // pre-retention clients keep working against a new service; the
+        // object shape only appears once retention (a new-server opt-in)
+        // actually dropped history.
+        Events(p) => (
+            "Events",
+            match p.truncated_before {
+                None => Json::Arr(p.events.iter().map(Event::to_json).collect()),
+                Some(n) => Json::obj(vec![
+                    ("truncated_before", Json::num(n as f64)),
+                    ("events", Json::Arr(p.events.iter().map(Event::to_json).collect())),
+                ]),
+            },
+        ),
+    };
+    Json::obj(vec![("ok", Json::Bool(true)), ("type", Json::str(ty)), ("body", body)])
+}
+
+/// Decode a response envelope; an error envelope (or unknown type)
+/// becomes [`ApiError::Transport`].
+pub fn response_from_json(j: &Json) -> Result<ApiResponse, ApiError> {
+    if j.get("ok").and_then(Json::as_bool) != Some(true) {
+        let msg = j.get("error").and_then(Json::as_str).unwrap_or("unknown").to_string();
+        return Err(ApiError::Transport(msg));
+    }
+    let ty = j.get("type").and_then(Json::as_str).unwrap_or("");
+    let b = j.get("body").unwrap_or(&Json::Null);
+    let u = |b: &Json| b.as_u64().unwrap_or(0);
+    Ok(match ty {
+        "Unit" => ApiResponse::Unit,
+        "UserId" => ApiResponse::UserId(UserId(u(b))),
+        "SiteId" => ApiResponse::SiteId(SiteId(u(b))),
+        "AppId" => ApiResponse::AppId(AppId(u(b))),
+        "SessionId" => ApiResponse::SessionId(SessionId(u(b))),
+        "BatchJobId" => ApiResponse::BatchJobId(BatchJobId(u(b))),
+        "JobIds" => ApiResponse::JobIds(u64s_from_json(b).into_iter().map(JobId).collect()),
+        "Jobs" => ApiResponse::Jobs(b.as_arr().unwrap_or(&[]).iter().map(Job::from_json).collect()),
+        "Counts" => ApiResponse::Counts(
+            b.as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|p| {
+                    Some((
+                        JobState::from_name(p.idx(0)?.as_str()?)?,
+                        p.idx(1)?.as_u64()? as usize,
+                    ))
+                })
+                .collect(),
+        ),
+        "BatchJobs" => {
+            ApiResponse::BatchJobs(b.as_arr().unwrap_or(&[]).iter().map(BatchJob::from_json).collect())
+        }
+        "TransferItems" => {
+            ApiResponse::TransferItems(b.as_arr().unwrap_or(&[]).iter().map(TransferItem::from_json).collect())
+        }
+        "Backlog" => ApiResponse::Backlog(Backlog {
+            backlog_jobs: b.get("backlog_jobs").and_then(Json::as_u64).unwrap_or(0) as usize,
+            runnable_nodes: b.get("runnable_nodes").and_then(Json::as_u64).unwrap_or(0) as u32,
+            inflight_nodes: b.get("inflight_nodes").and_then(Json::as_u64).unwrap_or(0) as u32,
+            batch_nodes: b.get("batch_nodes").and_then(Json::as_u64).unwrap_or(0) as u32,
+        }),
+        // Current shape: {"truncated_before": n|null, "events": [...]}.
+        // A bare array is the pre-retention wire shape (an older peer):
+        // accept it so version skew degrades to "no truncation info"
+        // instead of a silently empty page.
+        "Events" => ApiResponse::Events(EventsPage {
+            truncated_before: b.get("truncated_before").and_then(Json::as_u64),
+            events: b
+                .get("events")
+                .and_then(Json::as_arr)
+                .or_else(|| b.as_arr())
+                .unwrap_or(&[])
+                .iter()
+                .map(Event::from_json)
+                .collect(),
+        }),
+        other => return Err(ApiError::Transport(format!("unknown response type {other}"))),
+    })
+}

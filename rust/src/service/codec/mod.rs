@@ -1,0 +1,143 @@
+//! Wire codec layer: one trait, two encodings.
+//!
+//! Serialization for [`ApiRequest`]/[`ApiResponse`] lives here, behind
+//! the [`WireCodec`] trait, so the HTTP gateway ([`super::http_gw`]) is
+//! codec-agnostic: it negotiates an encoding per request and dispatches.
+//! Two implementations exist:
+//!
+//! * [`json::JsonCodec`] — the original JSON envelope
+//!   (`application/json`). Default and compatibility surface: any peer
+//!   that predates this module speaks it unchanged.
+//! * [`frame::FrameCodec`] — a length-prefixed binary frame
+//!   (`application/x-balsam-frame`) for the chatty interior paths
+//!   (`SessionSync`, `SyncTransferItems`, `WatchEvents`): tag byte +
+//!   varint-length fields, decoded straight off the request buffer with
+//!   no intermediate tree.
+//!
+//! Negotiation is standard HTTP content negotiation: the request body's
+//! encoding is declared by `Content-Type`, the desired response encoding
+//! by `Accept`. Absent/unknown headers mean JSON, so old clients never
+//! see a frame. A server with the binary codec disabled answers frame
+//! requests with 415 and clients fall back to JSON permanently
+//! ([`super::http_gw::HttpConn`]).
+//!
+//! Row/enum encodings on [`super::models`] types are *not* routed
+//! through this trait: WAL and event-log segments stay JSON regardless
+//! of the wire codec, so durable state never depends on a transport
+//! knob.
+
+use super::api::{ApiError, ApiRequest, ApiResponse};
+
+pub mod frame;
+pub mod json;
+
+/// Content type of the JSON envelope encoding (the default).
+pub const CT_JSON: &str = "application/json";
+
+/// Content type of the binary frame encoding.
+pub const CT_FRAME: &str = "application/x-balsam-frame";
+
+/// One wire encoding for API envelopes. Encoders append to a
+/// caller-owned buffer so per-connection scratch space is reusable;
+/// decoders read from a borrowed byte slice.
+pub trait WireCodec: Sync {
+    /// The `Content-Type` value this codec produces and consumes.
+    fn content_type(&self) -> &'static str;
+
+    /// Serialize a request envelope into `out` (appended; callers clear).
+    fn encode_request(&self, req: &ApiRequest, out: &mut Vec<u8>);
+
+    /// Decode a request body. The error string becomes the framed 400
+    /// message, exactly like a malformed-JSON body today.
+    fn decode_request(&self, body: &[u8]) -> Result<ApiRequest, String>;
+
+    /// Serialize a success envelope into `out`.
+    fn encode_ok(&self, resp: &ApiResponse, out: &mut Vec<u8>);
+
+    /// Serialize an error envelope carrying `msg` into `out`.
+    fn encode_err(&self, msg: &str, out: &mut Vec<u8>);
+
+    /// Decode a 200 body. A well-formed *error* envelope (the gateway
+    /// never sends one with a 200, but transports can surprise) decodes
+    /// to [`ApiError::Transport`], matching the JSON client's behavior.
+    fn decode_ok(&self, body: &[u8]) -> Result<ApiResponse, ApiError>;
+
+    /// Best-effort error-message extraction from a non-200 body
+    /// (`"unknown"` when the body is not a recognizable error envelope).
+    fn decode_err(&self, body: &[u8]) -> String;
+}
+
+/// A negotiated wire encoding — the two [`WireCodec`] implementations as
+/// a copyable knob (CLI `--wire`, client env `BALSAM_WIRE`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Wire {
+    /// JSON envelopes (`application/json`) — the default.
+    Json,
+    /// Binary frames (`application/x-balsam-frame`).
+    Binary,
+}
+
+impl Wire {
+    /// The codec implementation behind this knob value.
+    pub fn codec(self) -> &'static dyn WireCodec {
+        match self {
+            Wire::Json => &json::JsonCodec,
+            Wire::Binary => &frame::FrameCodec,
+        }
+    }
+
+    /// The `Content-Type` this encoding travels under.
+    pub fn content_type(self) -> &'static str {
+        match self {
+            Wire::Json => CT_JSON,
+            Wire::Binary => CT_FRAME,
+        }
+    }
+
+    /// Metric-label / CLI value: `"json"` or `"binary"`.
+    pub fn label(self) -> &'static str {
+        match self {
+            Wire::Json => "json",
+            Wire::Binary => "binary",
+        }
+    }
+
+    /// Parse a CLI/config value (`"json"`, `"binary"`, or the alias
+    /// `"frame"`); `None` for anything else.
+    pub fn parse(s: &str) -> Option<Wire> {
+        match s {
+            "json" => Some(Wire::Json),
+            "binary" | "frame" => Some(Wire::Binary),
+            _ => None,
+        }
+    }
+}
+
+/// Client-side default from the `BALSAM_WIRE` env var: `binary` (or
+/// `frame`) opts into binary frames; anything else — including unset —
+/// is JSON, the compatibility surface.
+pub fn wire_from_env() -> Wire {
+    match std::env::var("BALSAM_WIRE").as_deref() {
+        Ok("binary") | Ok("frame") => Wire::Binary,
+        _ => Wire::Json,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_knob_parses_and_labels() {
+        assert_eq!(Wire::parse("json"), Some(Wire::Json));
+        assert_eq!(Wire::parse("binary"), Some(Wire::Binary));
+        assert_eq!(Wire::parse("frame"), Some(Wire::Binary));
+        assert_eq!(Wire::parse("yaml"), None);
+        assert_eq!(Wire::Json.label(), "json");
+        assert_eq!(Wire::Binary.label(), "binary");
+        assert_eq!(Wire::Json.content_type(), CT_JSON);
+        assert_eq!(Wire::Binary.content_type(), CT_FRAME);
+        assert_eq!(Wire::Json.codec().content_type(), CT_JSON);
+        assert_eq!(Wire::Binary.codec().content_type(), CT_FRAME);
+    }
+}

@@ -24,11 +24,14 @@ pub mod store;
 pub mod persist;
 #[warn(missing_docs)]
 pub mod api;
+#[warn(missing_docs)]
+pub mod codec;
 pub mod core;
 pub mod auth;
 pub mod http_gw;
 
 pub use api::{ApiConn, ApiError, ApiRequest, ApiResponse, EventsPage, JobCreate, JobFilter};
+pub use codec::{wire_from_env, Wire};
 pub use core::ServiceCore;
 pub use models::*;
 pub use persist::{EventLogConfig, FsyncPolicy, PersistMode};

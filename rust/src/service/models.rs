@@ -7,7 +7,9 @@
 
 use std::collections::BTreeSet;
 
-use crate::util::json::{kv_from_json, kv_to_json, u64s_from_json, Json};
+use crate::util::json::{
+    get_str, get_u64, ids_json, kv_from_json, kv_to_json, opt_num, u64s_from_json, Json,
+};
 
 macro_rules! id_type {
     ($(#[$doc:meta])* $name:ident) => {
@@ -454,22 +456,6 @@ impl JobMode {
 // ---------------------------------------------------------------------------
 // Row codecs (wire payloads + WAL/snapshot records)
 // ---------------------------------------------------------------------------
-
-fn ids_json<T: Copy>(ids: impl IntoIterator<Item = T>, f: impl Fn(T) -> u64) -> Json {
-    Json::Arr(ids.into_iter().map(|i| Json::num(f(i) as f64)).collect())
-}
-
-fn opt_num(v: Option<u64>) -> Json {
-    v.map(|x| Json::num(x as f64)).unwrap_or(Json::Null)
-}
-
-fn get_u64(j: &Json, key: &str) -> u64 {
-    j.get(key).and_then(Json::as_u64).unwrap_or(0)
-}
-
-fn get_str(j: &Json, key: &str) -> String {
-    j.get(key).and_then(Json::as_str).unwrap_or("").to_string()
-}
 
 impl User {
     /// The canonical serialized shape (HTTP wire payloads and WAL /

@@ -3,6 +3,7 @@
 //! [`crate::util::yamlish`], or built programmatically by experiments.
 
 use crate::service::models::{JobMode, SiteId};
+use crate::service::{wire_from_env, Wire};
 use crate::util::yamlish::Yaml;
 
 #[derive(Debug, Clone)]
@@ -78,6 +79,10 @@ pub struct SiteConfig {
     /// hang (ms). The service clamps it to its own `--subscribe-max-ms`
     /// cap; real-time drivers pass it to `SiteAgent::pump_events`.
     pub subscribe_timeout_ms: u64,
+    /// Wire codec the site's service connections speak (`wire: json |
+    /// binary` in the YAML file). Binary-capable sites fall back to JSON
+    /// permanently if the service answers 415.
+    pub wire: Wire,
 }
 
 impl SiteConfig {
@@ -115,7 +120,18 @@ impl SiteConfig {
             },
             scheduler_poll: 2.0,
             subscribe_timeout_ms: 10_000,
+            wire: wire_from_env(),
         }
+    }
+
+    /// Dial the central service with this site's wire codec — the one
+    /// constructor site drivers should use for their `ApiConn`.
+    pub fn dial(&self, addr: impl Into<String>) -> crate::service::http_gw::HttpConn {
+        crate::service::http_gw::HttpConn::with_wire(
+            addr,
+            crate::util::httpd::HttpConfig::default(),
+            self.wire,
+        )
     }
 
     /// Overlay settings from a parsed YAML site file.
@@ -142,6 +158,9 @@ impl SiteConfig {
         self.launcher.idle_timeout_s = y.f64_or("launcher.idle_timeout_s", self.launcher.idle_timeout_s);
         self.scheduler_poll = y.f64_or("scheduler.sync_period", self.scheduler_poll);
         self.subscribe_timeout_ms = y.u64_or("subscribe_timeout_ms", self.subscribe_timeout_ms);
+        if let Some(w) = Wire::parse(y.str_or("wire", "")) {
+            self.wire = w;
+        }
         self
     }
 }
@@ -165,17 +184,21 @@ mod tests {
     #[test]
     fn yaml_overlay() {
         let y = Yaml::parse(
-            "subscribe_timeout_ms: 5000\ntransfer:\n  batch_size: 32\n  task_poll_period: 0.5\nelastic_queue:\n  max_nodes: 64\n  wall_time_min: 10\nlauncher:\n  job_mode: serial\n  jobs_per_node: 4\nscheduler:\n  sync_period: 1.5\n",
+            "subscribe_timeout_ms: 5000\nwire: binary\ntransfer:\n  batch_size: 32\n  task_poll_period: 0.5\nelastic_queue:\n  max_nodes: 64\n  wall_time_min: 10\nlauncher:\n  job_mode: serial\n  jobs_per_node: 4\nscheduler:\n  sync_period: 1.5\n",
         )
         .unwrap();
         let c = SiteConfig::defaults("cori", SiteId(2), "t".into()).apply_yaml(&y);
         assert_eq!(c.transfer.batch_size, 32);
         assert_eq!(c.transfer.task_poll_period, 0.5);
         assert_eq!(c.subscribe_timeout_ms, 5000);
+        assert_eq!(c.wire, Wire::Binary);
         assert_eq!(c.elastic.max_nodes, 64);
         assert_eq!(c.elastic.wall_time_s, 600.0);
         assert_eq!(c.launcher.mode, JobMode::Serial);
         assert_eq!(c.launcher.jobs_per_node, 4);
         assert_eq!(c.scheduler_poll, 1.5);
+        // An absent or unrecognized value keeps the prior codec.
+        let y2 = Yaml::parse("wire: yaml\n").unwrap();
+        assert_eq!(c.clone().apply_yaml(&y2).wire, Wire::Binary);
     }
 }

@@ -204,6 +204,12 @@ impl Response {
         }
     }
 
+    /// `200 OK` with an arbitrary body and content type — the negotiated
+    /// wire-codec path, where the body may be a binary frame.
+    pub fn ok_bytes(body: Vec<u8>, content_type: &'static str) -> Response {
+        Response { status: 200, body, content_type, retry_after: None }
+    }
+
     /// Error response. Framing headers (`Content-Length`, `Connection`)
     /// are written by the server's response writer on every path, so a
     /// keep-alive client can continue on the same connection after a 4xx
@@ -237,6 +243,7 @@ impl Response {
             401 => "Unauthorized",
             404 => "Not Found",
             409 => "Conflict",
+            415 => "Unsupported Media Type",
             429 => "Too Many Requests",
             500 => "Internal Server Error",
             503 => "Service Unavailable",
@@ -522,6 +529,12 @@ fn handle_conn<F: Fn(Request) -> Response>(
                     let _ = write_response(&mut out, &Response::error(400, &msg), false, cfg);
                     break;
                 }
+                if !req.body.is_empty() {
+                    metrics::http_bytes_read(
+                        req.header("content-type").unwrap_or(""),
+                        req.body.len() as u64,
+                    );
+                }
                 req.backlog = backlog;
                 let close = !cfg.keep_alive
                     || req.wants_close()
@@ -705,6 +718,7 @@ fn write_response<W: Write>(
     }
     buf.extend_from_slice(b"\r\n");
     buf.extend_from_slice(&resp.body);
+    metrics::http_bytes_written(resp.content_type, buf.len() as u64);
     w.write_all(&buf)?;
     w.flush()?;
     Ok(())

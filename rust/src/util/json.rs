@@ -1,9 +1,11 @@
 //! Minimal JSON value + serializer/parser (replaces the unavailable `serde`).
 //!
 //! Used for the artifact manifest (`artifacts/manifest.json`), the HTTP
-//! API payloads, and experiment report emission. Supports the full JSON
-//! grammar except `\u` surrogate pairs beyond the BMP (sufficient for our
-//! machine-generated documents).
+//! API payloads (as the JSON backend of [`crate::service::codec`]), and
+//! experiment report emission. Supports the full JSON grammar including
+//! `\u` surrogate pairs; a lone surrogate decodes to U+FFFD. The parser
+//! rejects trailing garbage after the top-level value and bounds nesting
+//! at [`MAX_DEPTH`] so adversarial documents cannot blow the stack.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -91,7 +93,7 @@ impl Json {
 
     /// Parse a JSON document.
     pub fn parse(s: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        let mut p = Parser { b: s.as_bytes(), i: 0, depth: 0 };
         p.ws();
         let v = p.value()?;
         p.ws();
@@ -101,6 +103,11 @@ impl Json {
         Ok(v)
     }
 }
+
+/// Max container nesting the parser accepts. Deep enough for every
+/// document this codebase produces, shallow enough that a malicious
+/// `[[[[...` body errors instead of overflowing the recursive descent.
+pub const MAX_DEPTH: usize = 128;
 
 #[derive(Debug, PartialEq)]
 pub struct JsonError {
@@ -119,11 +126,20 @@ impl std::error::Error for JsonError {}
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
     fn err(&self, msg: &str) -> JsonError {
         JsonError { at: self.i, msg: msg.to_string() }
+    }
+
+    fn descend(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("too deeply nested"));
+        }
+        Ok(())
     }
 
     fn ws(&mut self) {
@@ -168,11 +184,13 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
+        self.descend()?;
         self.eat(b'{')?;
         let mut m = BTreeMap::new();
         self.ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -188,6 +206,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(m));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -196,11 +215,13 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
+        self.descend()?;
         self.eat(b'[')?;
         let mut v = Vec::new();
         self.ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(v));
         }
         loop {
@@ -211,6 +232,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(v));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -240,15 +262,29 @@ impl<'a> Parser<'a> {
                         Some(b'b') => s.push('\u{8}'),
                         Some(b'f') => s.push('\u{c}'),
                         Some(b'u') => {
-                            if self.i + 4 >= self.b.len() {
-                                return Err(self.err("bad \\u escape"));
-                            }
-                            let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                            let hi = self.hex4(self.i + 1)?;
                             self.i += 4;
+                            if (0xD800..=0xDBFF).contains(&hi) {
+                                // High surrogate: combine with a following
+                                // \uDC00-\uDFFF; a lone one decodes U+FFFD.
+                                let lo = match (self.b.get(self.i + 1), self.b.get(self.i + 2)) {
+                                    (Some(b'\\'), Some(b'u')) => self.hex4(self.i + 3).ok(),
+                                    _ => None,
+                                };
+                                match lo {
+                                    Some(lo) if (0xDC00..=0xDFFF).contains(&lo) => {
+                                        let cp =
+                                            0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+                                        s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                                        self.i += 6;
+                                    }
+                                    _ => s.push('\u{fffd}'),
+                                }
+                            } else {
+                                // Also maps a lone low surrogate to U+FFFD
+                                // (char::from_u32 rejects surrogate values).
+                                s.push(char::from_u32(hi).unwrap_or('\u{fffd}'));
+                            }
                         }
                         _ => return Err(self.err("bad escape")),
                     }
@@ -264,6 +300,15 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Four hex digits starting at byte `at` (does not advance `i`).
+    fn hex4(&self, at: usize) -> Result<u32, JsonError> {
+        if at + 4 > self.b.len() {
+            return Err(self.err("bad \\u escape"));
+        }
+        let hex = std::str::from_utf8(&self.b[at..at + 4]).map_err(|_| self.err("bad \\u escape"))?;
+        u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u escape"))
     }
 
     fn number(&mut self) -> Result<Json, JsonError> {
@@ -344,6 +389,27 @@ pub fn u64s_from_json(j: &Json) -> Vec<u64> {
     j.as_arr().map(|a| a.iter().filter_map(Json::as_u64).collect()).unwrap_or_default()
 }
 
+/// Encode ids as a JSON number array via an id-to-u64 projection (the
+/// one id-array encoder shared by the row and envelope codecs).
+pub fn ids_json<T: Copy>(ids: impl IntoIterator<Item = T>, f: impl Fn(T) -> u64) -> Json {
+    Json::Arr(ids.into_iter().map(|i| Json::num(f(i) as f64)).collect())
+}
+
+/// `Some(n)` as a number, `None` as `null` (optional-id wire shape).
+pub fn opt_num(v: Option<u64>) -> Json {
+    v.map(|x| Json::num(x as f64)).unwrap_or(Json::Null)
+}
+
+/// Lenient u64 field read: missing / non-numeric decodes 0.
+pub fn get_u64(j: &Json, key: &str) -> u64 {
+    j.get(key).and_then(Json::as_u64).unwrap_or(0)
+}
+
+/// Lenient string field read: missing / non-string decodes "".
+pub fn get_str(j: &Json, key: &str) -> String {
+    j.get(key).and_then(Json::as_str).unwrap_or("").to_string()
+}
+
 fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
     write!(f, "\"")?;
     for c in s.chars() {
@@ -406,6 +472,55 @@ mod tests {
         assert!(Json::parse("[1, 2").is_err());
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse("").is_err());
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        assert!(Json::parse("{\"a\":1}junk").is_err());
+        assert!(Json::parse("[1] [2]").is_err());
+        assert!(Json::parse("null x").is_err());
+        assert!(Json::parse("\"s\"\"t\"").is_err());
+        // Trailing whitespace alone is fine.
+        assert_eq!(Json::parse(" {\"a\":1} \n").unwrap().get("a").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn nesting_is_bounded() {
+        let deep_ok = "[".repeat(MAX_DEPTH) + &"]".repeat(MAX_DEPTH);
+        assert!(Json::parse(&deep_ok).is_ok());
+        let too_deep = "[".repeat(MAX_DEPTH + 1) + &"]".repeat(MAX_DEPTH + 1);
+        let e = Json::parse(&too_deep).unwrap_err();
+        assert!(e.msg.contains("nested"), "unexpected error: {e}");
+        // Mixed object/array nesting counts both container kinds.
+        let mixed = "{\"a\":".repeat(MAX_DEPTH) + "1" + &"}".repeat(MAX_DEPTH);
+        assert!(Json::parse(&mixed).is_err(), "object+1 levels must also trip");
+    }
+
+    #[test]
+    fn surrogate_escapes() {
+        // A valid pair combines to one astral scalar.
+        assert_eq!(Json::parse("\"\\ud83d\\ude00\"").unwrap(), Json::str("\u{1F600}"));
+        // Lone high, lone low, and high + non-surrogate all decode U+FFFD
+        // (leniently, like every other unpaired-input path here).
+        assert_eq!(Json::parse("\"\\ud800\"").unwrap(), Json::str("\u{fffd}"));
+        assert_eq!(Json::parse("\"\\udc00\"").unwrap(), Json::str("\u{fffd}"));
+        assert_eq!(Json::parse("\"\\ud800x\"").unwrap(), Json::str("\u{fffd}x"));
+        assert_eq!(Json::parse("\"\\ud800\\u0041\"").unwrap(), Json::str("\u{fffd}A"));
+        // Truncated escapes still error.
+        assert!(Json::parse("\"\\ud83d\\ude0\"").is_err());
+        assert!(Json::parse("\"\\u12\"").is_err());
+    }
+
+    #[test]
+    fn lenient_field_helpers() {
+        let j = Json::obj(vec![("n", Json::num(7.0)), ("s", Json::str("x"))]);
+        assert_eq!(get_u64(&j, "n"), 7);
+        assert_eq!(get_u64(&j, "missing"), 0);
+        assert_eq!(get_str(&j, "s"), "x");
+        assert_eq!(get_str(&j, "n"), "");
+        assert_eq!(opt_num(Some(3)).to_string(), "3");
+        assert_eq!(opt_num(None), Json::Null);
+        assert_eq!(ids_json([1u64, 2], |x| x).to_string(), "[1,2]");
     }
 
     #[test]

@@ -247,6 +247,25 @@ pub const ENDPOINTS: &[&str] = &[
     "other",
 ];
 
+/// Codec label values for the wire-size and by-codec request families:
+/// the negotiated encoding (`application/json` → `"json"`,
+/// `application/x-balsam-frame` → `"binary"`), with a terminal `"other"`
+/// slot for any other content type (scrapes, health checks, plain-text
+/// shed bodies).
+pub const CODECS: &[&str] = &["json", "binary", "other"];
+
+/// Map a `Content-Type` value to its [`CODECS`] index (prefix match, so
+/// parameters like `; charset=` don't land in `"other"`).
+pub fn codec_index(content_type: &str) -> usize {
+    if content_type.starts_with("application/x-balsam-frame") {
+        1
+    } else if content_type.starts_with("application/json") {
+        0
+    } else {
+        2
+    }
+}
+
 /// TCP connections accepted by the gateway listener (`util::httpd`).
 pub static HTTP_CONNECTIONS_TOTAL: Counter = Counter::new();
 /// Accepted connections not yet finished (queued + in service); minus
@@ -266,6 +285,33 @@ pub static HTTP_SHED_TOTAL: Counter = Counter::new();
 /// API requests refused with a 429 + `Retry-After` by the gateway's
 /// per-principal token-bucket rate limiter.
 pub static API_THROTTLED_TOTAL: Counter = Counter::new();
+
+/// Request body bytes read by the gateway, indexed like [`CODECS`] by the
+/// request `Content-Type`. Body bytes only — headers are near-constant
+/// per request, and the body is where a wire-encoding change shows up.
+pub static HTTP_BYTES_READ_TOTAL: [Counter; CODECS.len()] =
+    [const { Counter::new() }; CODECS.len()];
+/// Response bytes written by the gateway (status line + headers + body —
+/// the full on-the-wire buffer), indexed like [`CODECS`] by the response
+/// `Content-Type`.
+pub static HTTP_BYTES_WRITTEN_TOTAL: [Counter; CODECS.len()] =
+    [const { Counter::new() }; CODECS.len()];
+/// API requests served, indexed like [`CODECS`] by the negotiated request
+/// codec (`/api` only speaks the first two; `"other"` stays zero).
+pub static API_REQUESTS_BY_CODEC_TOTAL: [Counter; CODECS.len()] =
+    [const { Counter::new() }; CODECS.len()];
+
+/// Count `n` request-body bytes read, classified by the request's
+/// `Content-Type` (see [`codec_index`]).
+pub fn http_bytes_read(content_type: &str, n: u64) {
+    HTTP_BYTES_READ_TOTAL[codec_index(content_type)].add(n);
+}
+
+/// Count `n` response bytes written, classified by the response's
+/// `Content-Type` (see [`codec_index`]).
+pub fn http_bytes_written(content_type: &str, n: u64) {
+    HTTP_BYTES_WRITTEN_TOTAL[codec_index(content_type)].add(n);
+}
 
 /// Per-endpoint request counts, indexed like [`ENDPOINTS`].
 pub static API_REQUESTS_TOTAL: [Counter; ENDPOINTS.len()] =
@@ -331,7 +377,10 @@ pub fn family_names() -> &'static [&'static str] {
         "balsam_http_worker_pool_size",
         "balsam_http_accept_queue_depth",
         "balsam_http_shed_total",
+        "balsam_http_bytes_read_total",
+        "balsam_http_bytes_written_total",
         "balsam_api_throttled_total",
+        "balsam_api_requests_by_codec_total",
         "balsam_api_requests_total",
         "balsam_api_errors_total",
         "balsam_api_request_seconds",
@@ -360,6 +409,18 @@ fn counter_family(out: &mut String, name: &str, help: &str, c: &Counter) {
 fn gauge_family(out: &mut String, name: &str, help: &str, g: &Gauge) {
     header(out, name, "gauge", help);
     let _ = writeln!(out, "{name} {}", g.get());
+}
+
+/// One codec-labeled counter family (indexed like [`CODECS`]); like the
+/// per-endpoint families, series appear once nonzero but the headers are
+/// always present.
+fn codec_counter_family(out: &mut String, name: &str, help: &str, cs: &[Counter; CODECS.len()]) {
+    header(out, name, "counter", help);
+    for (i, codec) in CODECS.iter().enumerate() {
+        if cs[i].get() > 0 {
+            let _ = writeln!(out, "{name}{{codec=\"{codec}\"}} {}", cs[i].get());
+        }
+    }
 }
 
 /// One histogram's series; `label` is an optional `key="value"` pair
@@ -427,11 +488,29 @@ pub fn render() -> String {
         "Requests/connections refused 503 + Retry-After by transport load shedding.",
         &HTTP_SHED_TOTAL,
     );
+    codec_counter_family(
+        &mut out,
+        "balsam_http_bytes_read_total",
+        "Request body bytes read by the gateway, by request codec.",
+        &HTTP_BYTES_READ_TOTAL,
+    );
+    codec_counter_family(
+        &mut out,
+        "balsam_http_bytes_written_total",
+        "Response bytes written by the gateway (headers + body), by response codec.",
+        &HTTP_BYTES_WRITTEN_TOTAL,
+    );
     counter_family(
         &mut out,
         "balsam_api_throttled_total",
         "API requests refused 429 + Retry-After by the per-principal rate limiter.",
         &API_THROTTLED_TOTAL,
+    );
+    codec_counter_family(
+        &mut out,
+        "balsam_api_requests_by_codec_total",
+        "API requests served, by negotiated wire codec.",
+        &API_REQUESTS_BY_CODEC_TOTAL,
     );
 
     header(&mut out, "balsam_api_requests_total", "counter", "API requests served, by endpoint.");
@@ -612,6 +691,27 @@ mod tests {
                 assert!(family_names().contains(&fam), "family {fam} not in family_names()");
             }
         }
+    }
+
+    /// The content-type classifier and the codec-labeled families: prefix
+    /// match (parameters don't demote to "other"), and recorded bytes
+    /// render under the right `codec` label.
+    #[test]
+    fn codec_classifier_and_labeled_families() {
+        let _serial = SWITCH.lock().unwrap();
+        assert_eq!(codec_index("application/json"), 0);
+        assert_eq!(codec_index("application/json; charset=utf-8"), 0);
+        assert_eq!(codec_index("application/x-balsam-frame"), 1);
+        assert_eq!(codec_index("text/plain"), 2);
+        assert_eq!(codec_index(""), 2);
+
+        http_bytes_read("application/x-balsam-frame", 64);
+        http_bytes_written("application/json", 128);
+        API_REQUESTS_BY_CODEC_TOTAL[1].inc();
+        let text = render();
+        assert!(text.contains("balsam_http_bytes_read_total{codec=\"binary\"}"));
+        assert!(text.contains("balsam_http_bytes_written_total{codec=\"json\"}"));
+        assert!(text.contains("balsam_api_requests_by_codec_total{codec=\"binary\"}"));
     }
 
     #[test]

@@ -1,0 +1,468 @@
+//! Codec equivalence suite: every [`ApiRequest`]/[`ApiResponse`] variant,
+//! with Pcg-randomized payloads (empty collections, unicode and
+//! astral-plane strings, max-size strings, ids up to 2^53), must satisfy
+//!
+//! ```text
+//! binary_decode(binary_encode(x)) == x == json_decode(json_encode(x))
+//! ```
+//!
+//! Equality is via canonical JSON re-serialization (the API enums carry
+//! no `PartialEq` by design — the wire shapes are the contract). The
+//! malformed-frame half: every proper prefix of every valid frame, random
+//! byte noise, and forged collection counts must decode to an error
+//! without panicking and without reserving memory past the frame length.
+
+use balsam::service::api::{
+    ApiError, ApiRequest, ApiResponse, Backlog, EventsPage, JobCreate, JobFilter,
+};
+use balsam::service::codec::json::{request_to_json, response_to_json};
+use balsam::service::codec::{frame, json, Wire, WireCodec};
+use balsam::service::models::*;
+use balsam::util::rng::Pcg;
+
+// ---------------------------------------------------------------------------
+// Randomized payload generators (deterministic: seeded Pcg)
+// ---------------------------------------------------------------------------
+
+/// Random string from adversarial pieces: empties, JSON-escape-heavy
+/// text, multi-byte UTF-8, astral-plane (surrogate-pair) code points.
+fn rstr(g: &mut Pcg) -> String {
+    const PIECES: &[&str] = &[
+        "",
+        "a",
+        "loadgen-app",
+        "π≈3.14159",
+        "\"quoted\"",
+        "back\\slash",
+        "line\nbreak\ttab",
+        "𝛿𓀀 astral",
+        "emoji 🚀🔬",
+        "ctrl \u{1}\u{1f}\u{7f}",
+        "日本語",
+    ];
+    let n = g.below(4) as usize;
+    (0..n).map(|_| *g.choose(PIECES)).collect()
+}
+
+/// Random id in [0, 2^53): bit-exact through the JSON number path.
+fn id(g: &mut Pcg) -> u64 {
+    g.next_u64() >> 11
+}
+
+/// Random f64 exactly representable in decimal AND binary (0.5 steps),
+/// so the JSON text roundtrip is lossless by construction.
+fn rf(g: &mut Pcg) -> f64 {
+    g.next_u32() as f64 + if g.chance(0.5) { 0.5 } else { 0.0 }
+}
+
+fn kv(g: &mut Pcg) -> Vec<(String, String)> {
+    (0..g.below(3)).map(|_| (rstr(g), rstr(g))).collect()
+}
+
+fn xfers(g: &mut Pcg) -> Vec<(String, u64)> {
+    (0..g.below(3)).map(|_| (rstr(g), id(g))).collect()
+}
+
+fn jstate(g: &mut Pcg) -> JobState {
+    *g.choose(&JobState::ALL)
+}
+
+fn tstate(g: &mut Pcg) -> TransferState {
+    *g.choose(&[
+        TransferState::Pending,
+        TransferState::Active,
+        TransferState::Done,
+        TransferState::Error,
+    ])
+}
+
+fn bstate(g: &mut Pcg) -> BatchJobState {
+    *g.choose(&[
+        BatchJobState::Pending,
+        BatchJobState::Queued,
+        BatchJobState::Running,
+        BatchJobState::Finished,
+        BatchJobState::Deleted,
+    ])
+}
+
+fn job_create(g: &mut Pcg) -> JobCreate {
+    JobCreate {
+        site_id: SiteId(id(g)),
+        app: rstr(g),
+        workload: rstr(g),
+        num_nodes: g.next_u32(),
+        params: kv(g),
+        tags: kv(g),
+        transfers_in: xfers(g),
+        transfers_out: xfers(g),
+        parents: (0..g.below(3)).map(|_| JobId(id(g))).collect(),
+    }
+}
+
+fn job(g: &mut Pcg) -> Job {
+    Job {
+        id: JobId(id(g)),
+        site_id: SiteId(id(g)),
+        app_id: AppId(id(g)),
+        state: jstate(g),
+        params: kv(g),
+        tags: kv(g),
+        num_nodes: g.next_u32(),
+        workload: rstr(g),
+        parents: (0..g.below(3)).map(|_| JobId(id(g))).collect(),
+        attempts: g.next_u32(),
+        max_attempts: g.next_u32(),
+        session: g.chance(0.5).then(|| SessionId(id(g))),
+        created_at: rf(g),
+    }
+}
+
+fn batch_job(g: &mut Pcg) -> BatchJob {
+    BatchJob {
+        id: BatchJobId(id(g)),
+        site_id: SiteId(id(g)),
+        num_nodes: g.next_u32(),
+        wall_time_s: rf(g),
+        mode: if g.chance(0.5) { JobMode::Mpi } else { JobMode::Serial },
+        queue: rstr(g),
+        project: rstr(g),
+        state: bstate(g),
+        local_id: g.chance(0.5).then(|| id(g)),
+        created_at: rf(g),
+        started_at: g.chance(0.5).then(|| rf(g)),
+        ended_at: g.chance(0.5).then(|| rf(g)),
+    }
+}
+
+fn transfer_item(g: &mut Pcg) -> TransferItem {
+    TransferItem {
+        id: TransferItemId(id(g)),
+        job_id: JobId(id(g)),
+        site_id: SiteId(id(g)),
+        direction: if g.chance(0.5) { Direction::In } else { Direction::Out },
+        remote: rstr(g),
+        size_bytes: id(g),
+        state: tstate(g),
+        task_id: g.chance(0.5).then(|| XferTaskId(id(g))),
+    }
+}
+
+fn event(g: &mut Pcg) -> Event {
+    Event {
+        seq: id(g),
+        job_id: JobId(id(g)),
+        site_id: SiteId(id(g)),
+        ts: rf(g),
+        from: jstate(g),
+        to: jstate(g),
+        data: rstr(g),
+    }
+}
+
+/// One randomized instance of every request variant (all 22).
+fn all_requests(g: &mut Pcg) -> Vec<ApiRequest> {
+    vec![
+        ApiRequest::CreateUser { name: rstr(g) },
+        ApiRequest::CreateSite { name: rstr(g), hostname: rstr(g), path: rstr(g) },
+        ApiRequest::RegisterApp {
+            site: SiteId(id(g)),
+            name: rstr(g),
+            command_template: rstr(g),
+            parameters: (0..g.below(4)).map(|_| rstr(g)).collect(),
+        },
+        ApiRequest::BulkCreateJobs { jobs: (0..g.below(4)).map(|_| job_create(g)).collect() },
+        ApiRequest::ListJobs {
+            filter: JobFilter {
+                site: g.chance(0.5).then(|| SiteId(id(g))),
+                states: (0..g.below(3)).map(|_| jstate(g)).collect(),
+                tags: kv(g),
+                limit: g.next_u32() as usize,
+            },
+        },
+        ApiRequest::CountByState { site: SiteId(id(g)) },
+        ApiRequest::UpdateJobState { job: JobId(id(g)), to: jstate(g), data: rstr(g) },
+        ApiRequest::BulkUpdateJobState {
+            jobs: (0..g.below(4)).map(|_| JobId(id(g))).collect(),
+            to: jstate(g),
+            data: rstr(g),
+        },
+        ApiRequest::CreateSession {
+            site: SiteId(id(g)),
+            batch_job: g.chance(0.5).then(|| BatchJobId(id(g))),
+        },
+        ApiRequest::SessionAcquire {
+            session: SessionId(id(g)),
+            max_nodes: g.next_u32(),
+            max_jobs: g.next_u32() as usize,
+        },
+        ApiRequest::SessionHeartbeat { session: SessionId(id(g)) },
+        ApiRequest::SessionSync {
+            session: SessionId(id(g)),
+            updates: (0..g.below(4)).map(|_| (JobId(id(g)), jstate(g), rstr(g))).collect(),
+        },
+        ApiRequest::SessionEnd { session: SessionId(id(g)) },
+        ApiRequest::CreateBatchJob {
+            site: SiteId(id(g)),
+            num_nodes: g.next_u32(),
+            wall_time_s: rf(g),
+            mode: if g.chance(0.5) { JobMode::Mpi } else { JobMode::Serial },
+            queue: rstr(g),
+            project: rstr(g),
+        },
+        ApiRequest::ListBatchJobs { site: SiteId(id(g)), active_only: g.chance(0.5) },
+        ApiRequest::UpdateBatchJob {
+            id: BatchJobId(id(g)),
+            state: bstate(g),
+            local_id: g.chance(0.5).then(|| id(g)),
+        },
+        ApiRequest::PendingTransferItems {
+            site: SiteId(id(g)),
+            direction: if g.chance(0.5) { Direction::In } else { Direction::Out },
+            limit: g.next_u32() as usize,
+        },
+        ApiRequest::UpdateTransferItems {
+            ids: (0..g.below(4)).map(|_| TransferItemId(id(g))).collect(),
+            state: tstate(g),
+            task_id: g.chance(0.5).then(|| XferTaskId(id(g))),
+        },
+        ApiRequest::SyncTransferItems {
+            updates: (0..g.below(4))
+                .map(|_| {
+                    (TransferItemId(id(g)), tstate(g), g.chance(0.5).then(|| XferTaskId(id(g))))
+                })
+                .collect(),
+        },
+        ApiRequest::SiteBacklog { site: SiteId(id(g)) },
+        ApiRequest::ListEvents { since: g.next_u32() as usize },
+        ApiRequest::WatchEvents {
+            site: g.chance(0.5).then(|| SiteId(id(g))),
+            since: g.next_u32() as usize,
+            timeout_ms: id(g),
+            max_events: g.next_u32() as usize,
+        },
+    ]
+}
+
+/// One randomized instance of every response variant (all 13).
+fn all_responses(g: &mut Pcg) -> Vec<ApiResponse> {
+    vec![
+        ApiResponse::Unit,
+        ApiResponse::UserId(UserId(id(g))),
+        ApiResponse::SiteId(SiteId(id(g))),
+        ApiResponse::AppId(AppId(id(g))),
+        ApiResponse::JobIds((0..g.below(4)).map(|_| JobId(id(g))).collect()),
+        ApiResponse::Jobs((0..g.below(3)).map(|_| job(g)).collect()),
+        ApiResponse::Counts((0..g.below(3)).map(|_| (jstate(g), g.next_u32() as usize)).collect()),
+        ApiResponse::SessionId(SessionId(id(g))),
+        ApiResponse::BatchJobId(BatchJobId(id(g))),
+        ApiResponse::BatchJobs((0..g.below(3)).map(|_| batch_job(g)).collect()),
+        ApiResponse::TransferItems((0..g.below(3)).map(|_| transfer_item(g)).collect()),
+        ApiResponse::Backlog(Backlog {
+            backlog_jobs: g.next_u32() as usize,
+            runnable_nodes: g.next_u32(),
+            inflight_nodes: g.next_u32(),
+            batch_nodes: g.next_u32(),
+        }),
+        ApiResponse::Events(EventsPage {
+            truncated_before: g.chance(0.5).then(|| id(g)),
+            events: (0..g.below(3)).map(|_| event(g)).collect(),
+        }),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Triple-equality roundtrips
+// ---------------------------------------------------------------------------
+
+/// `binary_decode(binary_encode(x)) == x == json_decode(json_encode(x))`,
+/// judged by canonical JSON re-serialization.
+fn assert_request_roundtrips(req: &ApiRequest) {
+    let canon = request_to_json(req).to_string();
+    for wire in [Wire::Json, Wire::Binary] {
+        let c = wire.codec();
+        let mut buf = Vec::new();
+        c.encode_request(req, &mut buf);
+        let dec = c
+            .decode_request(&buf)
+            .unwrap_or_else(|e| panic!("{} decode of {}: {e}", wire.label(), req.name()));
+        assert_eq!(
+            request_to_json(&dec).to_string(),
+            canon,
+            "{} roundtrip of {} diverged",
+            wire.label(),
+            req.name()
+        );
+    }
+}
+
+fn assert_response_roundtrips(resp: &ApiResponse) {
+    let canon = response_to_json(resp).to_string();
+    for wire in [Wire::Json, Wire::Binary] {
+        let c = wire.codec();
+        let mut buf = Vec::new();
+        c.encode_ok(resp, &mut buf);
+        let dec = c
+            .decode_ok(&buf)
+            .unwrap_or_else(|e| panic!("{} decode_ok of {canon}: {e}", wire.label()));
+        assert_eq!(
+            response_to_json(&dec).to_string(),
+            canon,
+            "{} roundtrip diverged",
+            wire.label()
+        );
+    }
+}
+
+#[test]
+fn every_request_variant_roundtrips_through_both_codecs() {
+    for seed in 0..16u64 {
+        let mut g = Pcg::seeded(0xC0DEC ^ seed);
+        let reqs = all_requests(&mut g);
+        assert_eq!(reqs.len(), 22, "a new ApiRequest variant is missing from this suite");
+        for req in &reqs {
+            assert_request_roundtrips(req);
+        }
+    }
+}
+
+#[test]
+fn every_response_variant_roundtrips_through_both_codecs() {
+    for seed in 0..16u64 {
+        let mut g = Pcg::seeded(0xD0DEC ^ seed);
+        let resps = all_responses(&mut g);
+        assert_eq!(resps.len(), 13, "a new ApiResponse variant is missing from this suite");
+        for resp in &resps {
+            assert_response_roundtrips(resp);
+        }
+    }
+}
+
+#[test]
+fn max_size_strings_and_empty_collections_roundtrip() {
+    // 256 KiB of escape-heavy text: far past any inline-buffer fast path.
+    let big: String = "x\"\\\n𝛿".repeat(32 * 1024);
+    assert_request_roundtrips(&ApiRequest::CreateUser { name: big.clone() });
+    assert_request_roundtrips(&ApiRequest::SessionSync {
+        session: SessionId(u64::MAX >> 11),
+        updates: vec![(JobId(0), JobState::RunDone, big.clone())],
+    });
+    // Explicit empties everywhere a collection can be empty.
+    assert_request_roundtrips(&ApiRequest::BulkCreateJobs { jobs: vec![] });
+    assert_request_roundtrips(&ApiRequest::BulkUpdateJobState {
+        jobs: vec![],
+        to: JobState::Created,
+        data: String::new(),
+    });
+    assert_request_roundtrips(&ApiRequest::SyncTransferItems { updates: vec![] });
+    assert_request_roundtrips(&ApiRequest::ListJobs { filter: JobFilter::default() });
+    assert_response_roundtrips(&ApiResponse::JobIds(vec![]));
+    assert_response_roundtrips(&ApiResponse::Jobs(vec![]));
+    assert_response_roundtrips(&ApiResponse::Events(EventsPage::default()));
+    let mut err = Vec::new();
+    frame::FrameCodec.encode_err(&big, &mut err);
+    assert_eq!(frame::FrameCodec.decode_err(&err), big);
+}
+
+#[test]
+fn error_envelopes_roundtrip_in_both_codecs() {
+    for msg in ["", "not found: site 9", "π 🚀 \"quoted\\path\"\n"] {
+        for wire in [Wire::Json, Wire::Binary] {
+            let c = wire.codec();
+            let mut buf = Vec::new();
+            c.encode_err(msg, &mut buf);
+            assert_eq!(c.decode_err(&buf), msg, "{} error envelope", wire.label());
+            match c.decode_ok(&buf) {
+                Err(ApiError::Transport(m)) => assert_eq!(m, msg),
+                other => panic!("error envelope must decode_ok to Transport, got {other:?}"),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Malformed frames: errors, never panics, never allocation blowup
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_prefix_of_every_frame_errors_cleanly() {
+    let mut g = Pcg::seeded(0xBADF);
+    for req in all_requests(&mut g) {
+        let mut buf = Vec::new();
+        frame::encode_request(&req, &mut buf);
+        for cut in 0..buf.len() {
+            assert!(
+                frame::decode_request(&buf[..cut]).is_err(),
+                "{}: prefix {cut}/{} decoded",
+                req.name(),
+                buf.len()
+            );
+        }
+        buf.push(0xff);
+        assert_eq!(frame::decode_request(&buf).unwrap_err(), "trailing bytes in frame");
+    }
+    for resp in all_responses(&mut g) {
+        let mut buf = Vec::new();
+        frame::encode_ok(&resp, &mut buf);
+        for cut in 0..buf.len() {
+            assert!(frame::decode_response(&buf[..cut]).is_err(), "prefix {cut} decoded");
+        }
+        buf.push(0xff);
+        assert_eq!(frame::decode_response(&buf).unwrap_err(), "trailing bytes in frame");
+    }
+}
+
+#[test]
+fn random_byte_noise_never_panics_either_decoder() {
+    let mut g = Pcg::seeded(0xF422);
+    for _ in 0..2_000 {
+        let n = g.below(64) as usize;
+        let mut noise: Vec<u8> = (0..n).map(|_| g.next_u32() as u8).collect();
+        let _ = frame::decode_request(&noise);
+        let _ = frame::decode_response(&noise);
+        let _ = json::JsonCodec.decode_request(&noise);
+        let _ = json::JsonCodec.decode_ok(&noise);
+        // Same noise behind a valid-looking frame header: exercises the
+        // per-variant field decoders instead of dying at the kind byte.
+        noise.insert(0, (g.next_u32() % 24) as u8);
+        noise.insert(0, 0x01);
+        let _ = frame::decode_request(&noise);
+        noise[0] = 0x02;
+        let _ = frame::decode_response(&noise);
+    }
+}
+
+#[test]
+fn forged_counts_cannot_reserve_past_frame_length() {
+    // A tiny frame claiming a huge collection must fail the count check
+    // (one byte minimum per element) before any Vec reservation. A forged
+    // string length must likewise fail its bounds check.
+    let huge = u64::MAX >> 1;
+    // BulkCreateJobs (tag 3) with a forged job count.
+    let mut f = vec![0x01, 3];
+    put_varint(&mut f, huge);
+    assert!(frame::decode_request(&f).is_err());
+    // Jobs response (tag 5) with a forged row count.
+    let mut f = vec![0x02, 5];
+    put_varint(&mut f, huge);
+    assert!(frame::decode_response(&f).is_err());
+    // CreateUser (tag 0) with a forged string length.
+    let mut f = vec![0x01, 0];
+    put_varint(&mut f, huge);
+    f.extend_from_slice(b"tiny");
+    assert_eq!(frame::decode_request(&f).unwrap_err(), "truncated frame");
+}
+
+/// Local LEB128 writer so forged-frame tests don't depend on encoder
+/// internals.
+fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}

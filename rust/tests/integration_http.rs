@@ -9,7 +9,7 @@ use balsam::runtime::local::{LocalResources, LoopbackTransfer};
 use balsam::service::api::{ApiConn, ApiRequest, JobCreate};
 use balsam::service::http_gw::{serve, HttpConn};
 use balsam::service::models::{BatchJobId, JobState};
-use balsam::service::ServiceCore;
+use balsam::service::{ServiceCore, Wire};
 use balsam::site::agent::SiteAgent;
 use balsam::site::config::SiteConfig;
 use balsam::site::launcher::Launcher;
@@ -76,20 +76,24 @@ fn full_round_trip_over_http_with_real_file_staging() {
         .collect();
     let ids = conn.api(&token, ApiRequest::BulkCreateJobs { jobs }).unwrap().job_ids();
 
-    // Site agent over HTTP with real file staging.
+    // Site agent over HTTP with real file staging. The agent's connection
+    // speaks binary frames while the admin connection above stays JSON —
+    // mixed-codec peers on one gateway is the compatibility surface the
+    // codec layer guarantees.
     let mut cfg = SiteConfig::defaults("local", site, token.clone());
+    cfg.wire = Wire::Binary;
     cfg.transfer.poll_period = 0.1;
     cfg.scheduler_poll = 0.1;
     cfg.elastic.poll_period = 0.1;
     cfg.elastic.block_nodes = 2;
     cfg.elastic.max_nodes = 4;
     cfg.launcher.acquire_period = 0.05;
+    let mut agent_conn = cfg.dial(server.addr.clone());
     let mut agent = SiteAgent::new(cfg);
     let dir = std::env::temp_dir().join(format!("balsam-http-int-{}", std::process::id()));
     let mut xfer = LoopbackTransfer::new(&dir, None);
     let mut sched = LocalResources::new(4);
     let mut exec = FastExec { runs: BTreeMap::new(), next: 0 };
-    let mut agent_conn = HttpConn::new(server.addr.clone());
 
     let t0 = std::time::Instant::now();
     loop {
@@ -121,6 +125,7 @@ fn full_round_trip_over_http_with_real_file_staging() {
         assert!(path.contains(&JobState::Running));
     }
     assert!(svc.calls() > 50, "expected many HTTP API calls, saw {}", svc.calls());
+    assert_eq!(agent_conn.wire(), Wire::Binary, "binary-capable server must not force a fallback");
 
     // Observability piggyback: after a real workload the gateway's
     // unauthenticated scrape surfaces are live and populated.
