@@ -47,6 +47,22 @@ threshold (MAX_LOADGEN_DROP): open-loop capacity on shared runners is
 the noisiest number in the record, and the strict per-leg throughput
 gates above already catch ordinary regressions. Every current combo
 must also actually carry a declaration (a `declared_by` verdict).
+
+The scenario axis (the `"scenario"` object recorded since the
+two-beamline end-to-end suite landed) is gated on three rules:
+
+* **push beats poll by MIN_SCENARIO_RATIO** within the same run — the
+  push-mode client's trigger-to-result p95 must be at least 3x below
+  the in-run poll-mode client's (both clients ran against the same
+  fleet in the same record, so the ratio is machine-speed-robust);
+* **integrity is absolute** — lost, duplicated, and undelivered results
+  must all be zero; a scenario record that dropped work is a failing
+  record regardless of its latency;
+* **push trend** — push p95 must not exceed the baseline run's by more
+  than MAX_LATENCY_RATIO (same looseness rationale as propagation).
+
+Records written before the scenario axis existed are not gated
+(back-compat: the combo key derives to "absent", reported only).
 """
 import json
 import sys
@@ -60,6 +76,11 @@ MAX_LATENCY_RATIO = 3.0
 # at least this multiple of the JSON sibling's req/s on every combo
 # measured with both codecs (the sync-heavy keepalive/wal/group leg).
 MIN_CODEC_SPEEDUP = 1.5
+
+# In-run gate on the scenario axis: the push-mode client's
+# trigger-to-result p95 must be at least this many times below the
+# poll-mode client's, measured against the same fleet in the same run.
+MIN_SCENARIO_RATIO = 3.0
 
 # Cross-run gate on declared max sustainable rps: fail only when a combo
 # loses more than this fraction of its declared capacity. Deliberately
@@ -266,6 +287,82 @@ def gate_loadgen(baseline_doc, current_doc):
     return failed
 
 
+def scenario_stats(doc):
+    """The scenario axis as a validated dict, or None when absent.
+
+    Back-compat derivation: records written before the scenario suite
+    landed (no `"scenario"` object) derive to None and are not gated.
+    Records that carry the axis must carry the full combo — latency pair
+    plus the three integrity counters — or the record fails loudly.
+    """
+    axis = (doc or {}).get("scenario")
+    if not axis:
+        return None
+    try:
+        return {
+            "push_p95_ms": float(axis["push_p95_ms"]),
+            "poll_p95_ms": float(axis["poll_p95_ms"]),
+            "lost": int(axis["lost"]),
+            "duplicates": int(axis["duplicates"]),
+            "undelivered": int(axis["undelivered"]),
+        }
+    except (KeyError, TypeError, ValueError) as e:
+        raise ValueError(f"malformed scenario axis {axis!r}: {e}") from e
+
+
+def gate_scenario(baseline_doc, current_doc):
+    """Gate the end-to-end scenario axis (push vs poll trigger-to-result
+    p95 + result integrity). Returns failed."""
+    try:
+        cur = scenario_stats(current_doc)
+    except ValueError as e:
+        print(f"::error::scenario axis in current record is malformed: {e}")
+        return True
+    if cur is None:
+        print("scenario: no axis in current record (pre-scenario bench); not gated")
+        return False
+    failed = False
+    push, poll = cur["push_p95_ms"], cur["poll_p95_ms"]
+    ratio = poll / push if push > 0 else 0.0
+    print(
+        f"scenario trigger-to-result: push p95 {push:.1f} ms vs poll p95 {poll:.1f} ms "
+        f"({ratio:.1f}x)"
+    )
+    if push <= 0 or poll <= 0:
+        print("::error::scenario axis carries no latency samples")
+        failed = True
+    elif ratio < MIN_SCENARIO_RATIO:
+        print(
+            f"::error::push trigger-to-result p95 is only {ratio:.1f}x below the "
+            f"in-run poll client (gate: >= {MIN_SCENARIO_RATIO:.0f}x)"
+        )
+        failed = True
+    for counter in ("lost", "duplicates", "undelivered"):
+        if cur[counter] != 0:
+            print(f"::error::scenario run reports {cur[counter]} {counter} result(s)")
+            failed = True
+    try:
+        base = scenario_stats(baseline_doc)
+    except ValueError as e:
+        print(f"scenario: unusable baseline axis ({e}); trend not gated")
+        base = None
+    if base and base["push_p95_ms"] > 0:
+        trend = push / base["push_p95_ms"]
+        print(
+            f"scenario push trend: baseline {base['push_p95_ms']:.1f} ms -> "
+            f"{push:.1f} ms ({trend:.2f}x)"
+        )
+        if trend > MAX_LATENCY_RATIO:
+            print(
+                f"::error::scenario push p95 regressed {trend:.1f}x vs baseline "
+                f"(gate: {MAX_LATENCY_RATIO:.0f}x)"
+            )
+            failed = True
+    else:
+        print("scenario: no baseline for the axis; trend not gated")
+    return failed
+
+
 def main(argv):
     if len(argv) < 3:
         print(__doc__)
@@ -300,6 +397,7 @@ def main(argv):
     failed |= gate_codec_speedup(current)
     failed |= gate_propagation(baseline_doc, current_doc)
     failed |= gate_loadgen(baseline_doc, current_doc)
+    failed |= gate_scenario(baseline_doc, current_doc)
     return 1 if failed else 0
 
 

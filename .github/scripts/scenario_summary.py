@@ -1,0 +1,84 @@
+#!/usr/bin/env python3
+"""Render a scenario run (BENCH_scenario.json) as a markdown summary table.
+
+Usage: scenario_summary.py <BENCH_scenario.json>  >> $GITHUB_STEP_SUMMARY
+
+Prints the two-beamline x three-site trigger-to-result latency table
+(push vs poll client, p50/p95/avg) plus the fault/integrity counters.
+Exits non-zero when the record breaches the scenario contract:
+
+* any lost, duplicated, or undelivered result (integrity is absolute);
+* push p95 less than MIN_RATIO x below the in-run poll client's p95
+  (the same in-run invariant bench_trend.py gates on the bench record).
+
+The file may be either a standalone `balsam scenario --out` report or a
+full BENCH_service.json (the `"scenario"` axis is extracted).
+"""
+import json
+import sys
+
+MIN_RATIO = 3.0
+
+
+def main(argv):
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    with open(argv[1]) as f:
+        doc = json.load(f)
+    # Accept the full bench record too: pull its scenario axis.
+    scn = doc.get("scenario", doc)
+    try:
+        push_p95 = float(scn["push_p95_ms"])
+        poll_p95 = float(scn["poll_p95_ms"])
+    except (KeyError, TypeError, ValueError):
+        print("::error::no scenario axis in record")
+        return 1
+
+    print("### Scenario: two beamlines x three sites (trigger-to-result)")
+    print()
+    print("| client mode | jobs | p50 ms | p95 ms | avg ms |")
+    print("| --- | ---: | ---: | ---: | ---: |")
+    for mode in ("push", "poll"):
+        print(
+            f"| {mode} | {scn.get(f'{mode}_n', '—')} "
+            f"| {scn.get(f'{mode}_p50_ms', 0.0):.1f} "
+            f"| {scn.get(f'{mode}_p95_ms', 0.0):.1f} "
+            f"| {scn.get(f'{mode}_avg_ms', 0.0):.1f} |"
+        )
+    ratio = poll_p95 / push_p95 if push_p95 > 0 else 0.0
+    print()
+    print(
+        f"push p95 is **{ratio:.1f}x** below the in-run poll client "
+        f"(poll period {scn.get('poll_period_ms', 0.0):.0f} ms; gate: >= {MIN_RATIO:.0f}x)."
+    )
+    lost = int(scn.get("lost", 0))
+    dups = int(scn.get("duplicates", 0))
+    undel = int(scn.get("undelivered", 0))
+    print(
+        f"integrity: lost {lost}, duplicates {dups}, undelivered {undel}; "
+        f"reconciles {scn.get('reconciles', 0)}, truncations {scn.get('truncations', 0)}, "
+        f"restarts {scn.get('restarts', 0)}, throttled {scn.get('client_throttled', 0)}."
+    )
+
+    failed = False
+    if lost or dups or undel:
+        print(
+            f"::error::scenario integrity breach — lost {lost}, duplicates {dups}, "
+            f"undelivered {undel} (all must be zero)"
+        )
+        failed = True
+    if push_p95 <= 0 or poll_p95 <= 0:
+        print("::error::scenario record carries no latency samples")
+        failed = True
+    elif ratio < MIN_RATIO:
+        print(
+            f"::error::push trigger-to-result p95 is only {ratio:.1f}x below the "
+            f"in-run poll client (gate: >= {MIN_RATIO:.0f}x)"
+        )
+        failed = True
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -304,16 +304,119 @@ def test_loadgen_gate_malformed_baseline_tolerated():
 
 
 # ---------------------------------------------------------------------------
+# scenario axis: stats derivation + gate
+# ---------------------------------------------------------------------------
+
+
+def scenario(push_p95=100.0, poll_p95=400.0, lost=0, duplicates=0, undelivered=0, **extra):
+    s = {
+        "push_p95_ms": push_p95,
+        "poll_p95_ms": poll_p95,
+        "lost": lost,
+        "duplicates": duplicates,
+        "undelivered": undelivered,
+        "push_p50_ms": push_p95 / 2,
+        "poll_p50_ms": poll_p95 / 2,
+        "poll_period_ms": 6000.0,
+        "jobs_per_mode": 24,
+        "restarts": 0,
+    }
+    s.update(extra)
+    return s
+
+
+def test_scenario_stats_absent_axis_is_none():
+    # Back-compat: pre-scenario records derive to "absent", not an error.
+    assert bt.scenario_stats({}) is None
+    assert bt.scenario_stats(None) is None
+    assert bt.scenario_stats({"scenario": {}}) is None
+
+
+def test_scenario_stats_extracts_combo():
+    got = bt.scenario_stats({"scenario": scenario()})
+    assert got == {
+        "push_p95_ms": 100.0,
+        "poll_p95_ms": 400.0,
+        "lost": 0,
+        "duplicates": 0,
+        "undelivered": 0,
+    }
+
+
+def test_scenario_stats_malformed_raises():
+    with pytest.raises(ValueError):
+        bt.scenario_stats({"scenario": {"push_p95_ms": 1.0}})
+    with pytest.raises(ValueError):
+        bt.scenario_stats({"scenario": scenario(lost="many")})
+
+
+def test_scenario_gate_passes_at_ratio():
+    cur = {"scenario": scenario(push_p95=100.0, poll_p95=400.0)}
+    assert bt.gate_scenario({}, cur) is False
+
+
+def test_scenario_gate_boundary_is_inclusive():
+    # ratio == MIN_SCENARIO_RATIO exactly passes (the gate is "<").
+    cur = {"scenario": scenario(push_p95=100.0, poll_p95=300.0)}
+    assert bt.gate_scenario({}, cur) is False
+
+
+def test_scenario_gate_fails_below_ratio():
+    cur = {"scenario": scenario(push_p95=100.0, poll_p95=250.0)}
+    assert bt.gate_scenario({}, cur) is True
+
+
+def test_scenario_gate_fails_on_any_integrity_breach():
+    for breach in ({"lost": 1}, {"duplicates": 2}, {"undelivered": 3}):
+        cur = {"scenario": scenario(**breach)}
+        assert bt.gate_scenario({}, cur) is True, breach
+
+
+def test_scenario_gate_fails_on_empty_samples():
+    cur = {"scenario": scenario(push_p95=0.0, poll_p95=0.0)}
+    assert bt.gate_scenario({}, cur) is True
+
+
+def test_scenario_gate_no_axis_not_gated():
+    assert bt.gate_scenario({}, {}) is False
+    assert bt.gate_scenario({"scenario": scenario()}, {}) is False
+
+
+def test_scenario_gate_malformed_current_fails():
+    assert bt.gate_scenario({}, {"scenario": {"push_p95_ms": 1.0}}) is True
+
+
+def test_scenario_gate_trend_within_ratio_passes():
+    base = {"scenario": scenario(push_p95=50.0)}
+    cur = {"scenario": scenario(push_p95=149.0, poll_p95=600.0)}
+    assert bt.gate_scenario(base, cur) is False
+
+
+def test_scenario_gate_trend_past_ratio_fails():
+    base = {"scenario": scenario(push_p95=50.0)}
+    cur = {"scenario": scenario(push_p95=151.0, poll_p95=600.0)}
+    assert bt.gate_scenario(base, cur) is True
+
+
+def test_scenario_gate_malformed_baseline_tolerated():
+    base = {"scenario": {"push_p95_ms": 1.0}}
+    cur = {"scenario": scenario()}
+    assert bt.gate_scenario(base, cur) is False
+
+
+# ---------------------------------------------------------------------------
 # main(): end-to-end over real files
 # ---------------------------------------------------------------------------
 
 
-def write_doc(path, results, propagation=None, loadgen=None):
+def write_doc(path, results, propagation=None, loadgen=None, scenario_axis=None):
     doc = {"results": results}
     if propagation:
         doc["propagation"] = propagation
     if loadgen:
         doc["loadgen"] = loadgen
+    if scenario_axis:
+        doc["scenario"] = scenario_axis
     path.write_text(json.dumps(doc))
 
 
@@ -367,3 +470,24 @@ def test_main_honors_max_drop_flag(tmp_path):
     write_doc(cur, [result(60.0)], GOOD_PROP)
     assert bt.main(["bench_trend.py", str(base), str(cur)]) == 1
     assert bt.main(["bench_trend.py", str(base), str(cur), "--max-drop", "0.50"]) == 0
+
+
+def test_main_passes_with_healthy_scenario_axis(tmp_path):
+    base, cur = tmp_path / "base.json", tmp_path / "cur.json"
+    write_doc(base, [result(100.0)], GOOD_PROP, scenario_axis=scenario())
+    write_doc(cur, [result(95.0)], GOOD_PROP, scenario_axis=scenario(push_p95=110.0, poll_p95=500.0))
+    assert bt.main(["bench_trend.py", str(base), str(cur)]) == 0
+
+
+def test_main_fails_on_scenario_ratio_below_gate(tmp_path):
+    base, cur = tmp_path / "base.json", tmp_path / "cur.json"
+    write_doc(base, [result(100.0)], GOOD_PROP)
+    write_doc(cur, [result(100.0)], GOOD_PROP, scenario_axis=scenario(push_p95=200.0, poll_p95=400.0))
+    assert bt.main(["bench_trend.py", str(base), str(cur)]) == 1
+
+
+def test_main_fails_on_scenario_lost_jobs(tmp_path):
+    base, cur = tmp_path / "base.json", tmp_path / "cur.json"
+    write_doc(base, [result(100.0)], GOOD_PROP)
+    write_doc(cur, [result(100.0)], GOOD_PROP, scenario_axis=scenario(lost=1))
+    assert bt.main(["bench_trend.py", str(base), str(cur)]) == 1

@@ -1,0 +1,81 @@
+"""Unit tests for scenario_summary.py — the CI scenario gate itself.
+
+Run: python3 -m pytest .github/scripts/test_scenario_summary.py -q
+(a blocking CI step, same contract as test_bench_trend.py).
+"""
+import json
+
+import scenario_summary as ss
+
+
+def record(push_p95=100.0, poll_p95=400.0, lost=0, duplicates=0, undelivered=0, **extra):
+    r = {
+        "push_n": 24,
+        "poll_n": 24,
+        "push_p50_ms": push_p95 / 2,
+        "push_p95_ms": push_p95,
+        "push_avg_ms": push_p95 / 2,
+        "poll_p50_ms": poll_p95 / 2,
+        "poll_p95_ms": poll_p95,
+        "poll_avg_ms": poll_p95 / 2,
+        "poll_period_ms": 6000.0,
+        "jobs_per_mode": 24,
+        "lost": lost,
+        "duplicates": duplicates,
+        "undelivered": undelivered,
+        "reconciles": 0,
+        "truncations": 0,
+        "client_throttled": 0,
+        "replacement_blocks": 0,
+        "restarts": 0,
+        "elapsed_s": 12.0,
+    }
+    r.update(extra)
+    return r
+
+
+def write(tmp_path, doc):
+    p = tmp_path / "BENCH_scenario.json"
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+def test_healthy_record_passes(tmp_path, capsys):
+    path = write(tmp_path, record())
+    assert ss.main(["scenario_summary.py", path]) == 0
+    out = capsys.readouterr().out
+    assert "| push |" in out and "| poll |" in out
+    assert "::error::" not in out
+
+
+def test_accepts_full_bench_record_with_scenario_axis(tmp_path):
+    path = write(tmp_path, {"results": [], "scenario": record()})
+    assert ss.main(["scenario_summary.py", path]) == 0
+
+
+def test_ratio_below_gate_fails(tmp_path, capsys):
+    path = write(tmp_path, record(push_p95=200.0, poll_p95=400.0))
+    assert ss.main(["scenario_summary.py", path]) == 1
+    assert "::error::" in capsys.readouterr().out
+
+
+def test_ratio_boundary_passes(tmp_path):
+    # ratio == MIN_RATIO exactly passes (the gate is "<").
+    path = write(tmp_path, record(push_p95=100.0, poll_p95=300.0))
+    assert ss.main(["scenario_summary.py", path]) == 0
+
+
+def test_integrity_breach_fails(tmp_path):
+    for breach in ({"lost": 1}, {"duplicates": 1}, {"undelivered": 2}):
+        path = write(tmp_path, record(**breach))
+        assert ss.main(["scenario_summary.py", path]) == 1, breach
+
+
+def test_empty_samples_fail(tmp_path):
+    path = write(tmp_path, record(push_p95=0.0, poll_p95=0.0))
+    assert ss.main(["scenario_summary.py", path]) == 1
+
+
+def test_missing_axis_fails(tmp_path):
+    path = write(tmp_path, {"results": []})
+    assert ss.main(["scenario_summary.py", path]) == 1

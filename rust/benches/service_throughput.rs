@@ -451,6 +451,31 @@ fn main() {
         );
     }
 
+    // End-to-end scenario axis: the "two beamlines x three sites" run
+    // (src/scenario/), healthy (faults live in tests/scenario_realtime.rs
+    // only). Records trigger-to-result latency for the push-mode client
+    // against the in-run poll-mode baseline; bench_trend.py gates the
+    // p95 ratio >= 3x and lost/duplicated results at zero.
+    println!("== scenario: two beamlines x three sites, push vs poll client ==");
+    let mut scn_cfg = balsam::scenario::ScenarioConfig::quick();
+    if !quick {
+        scn_cfg.batches = 4;
+        scn_cfg.batch = 6;
+        scn_cfg.deadline_s = 120.0;
+    }
+    let scenario_report = balsam::scenario::run(&scn_cfg).expect("scenario run");
+    println!(
+        "scenario trigger-to-result: push p95 {:.1} ms vs poll p95 {:.1} ms \
+         ({:.1}x, poll period {:.0} ms; lost {}, duplicates {}, undelivered {})",
+        scenario_report.push.p95_ms,
+        scenario_report.poll.p95_ms,
+        scenario_report.push_speedup_p95(),
+        scenario_report.poll_period_ms,
+        scenario_report.lost,
+        scenario_report.duplicates,
+        scenario_report.undelivered
+    );
+
     let out = Json::obj(vec![
         ("bench", Json::str("service_throughput")),
         ("quick", Json::Bool(quick)),
@@ -496,6 +521,7 @@ fn main() {
         ),
         ("push_vs_poll_stagein", Json::num(push_vs_poll)),
         ("loadgen", loadgen_report.to_json()),
+        ("scenario", scenario_report.to_json()),
     ]);
     let path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_service.json".to_string());
     std::fs::write(&path, out.to_string()).expect("write bench record");

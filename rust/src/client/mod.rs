@@ -8,10 +8,21 @@
 //!   pre-running backlog near a target (Figs. 3/9);
 //! * and the two *distribution strategies* of §4.6: **round-robin** and
 //!   adaptive **shortest-backlog** routing via the Backlog API.
+//!
+//! Result delivery is push-first: a [`ResultSubscription`] holds a
+//! `WatchEvents` cursor scoped to one owned site and dispatches terminal
+//! job states into per-job completion callbacks in one long-poll round
+//! trip, demoting the old result poll to a drift-free fallback heartbeat.
+//! [`ExperimentClient`] bundles a submission stream with one subscription
+//! per routed site — the beamline edge of the paper's end-to-end
+//! real-time path (scenario suite: `tests/scenario_realtime.rs`).
 
-use crate::service::api::{ApiConn, ApiRequest, JobCreate};
-use crate::service::models::{JobId, SiteId};
+use std::collections::BTreeMap;
+
+use crate::service::api::{ApiConn, ApiError, ApiRequest, JobCreate, JobFilter};
+use crate::service::models::{Event, JobId, JobState, SiteId};
 use crate::sim::Actor;
+use crate::site::watch::EventWatcher;
 use crate::substrates::facility::payload_bytes;
 use crate::util::rng::Pcg;
 use crate::world::{InProcConn, World};
@@ -64,6 +75,17 @@ pub struct WorkloadClient {
     rr_idx: usize,
     next_due: f64,
     rng: Pcg,
+    /// Honored `Retry-After`: ticks before this time are silent no-ops
+    /// (absolute, includes jitter). A throttled burst is deferred, never
+    /// dropped.
+    pub backoff_until: f64,
+    /// API calls answered 429/503 (diagnostics).
+    pub throttled: u64,
+    /// Deterministic per-client spread for backoff jitter (from the seed,
+    /// like the launcher's `local_alloc_id % 97` and the watcher's
+    /// `cursor % 83`) so a fleet of throttled clients does not re-arrive
+    /// in one synchronized wave.
+    jitter_salt: u64,
 }
 
 impl WorkloadClient {
@@ -94,6 +116,9 @@ impl WorkloadClient {
             rr_idx: 0,
             next_due: 0.0,
             rng: Pcg::seeded(seed ^ 0xc11e),
+            backoff_until: 0.0,
+            throttled: 0,
+            jitter_salt: seed,
         }
     }
 
@@ -122,9 +147,19 @@ impl WorkloadClient {
         jc
     }
 
-    fn pick_site(&mut self, conn: &mut dyn ApiConn) -> SiteId {
-        match &self.strategy {
-            Strategy::Single(s) => *s,
+    /// Arm the `Retry-After` cooldown, matching the site modules' jitter
+    /// shape: the hinted window plus up to half of it again, spread
+    /// deterministically per client.
+    fn note_backpressure(&mut self, now: f64, retry_after_s: u64) {
+        self.throttled += 1;
+        let base = retry_after_s as f64;
+        let jitter = (self.jitter_salt % 89) as f64 / 89.0 * base * 0.5;
+        self.backoff_until = self.backoff_until.max(now + base + jitter);
+    }
+
+    fn pick_site(&mut self, conn: &mut dyn ApiConn, now: f64) -> SiteId {
+        match self.strategy.clone() {
+            Strategy::Single(s) => s,
             Strategy::RoundRobin(sites) => {
                 let s = sites[self.rr_idx % sites.len()];
                 self.rr_idx += 1;
@@ -133,11 +168,15 @@ impl WorkloadClient {
             Strategy::ShortestBacklog(sites) => {
                 let mut best = sites[0];
                 let mut best_backlog = usize::MAX;
-                for &s in sites {
-                    let b = conn
-                        .api(&self.token, ApiRequest::SiteBacklog { site: s })
-                        .map(|r| r.backlog().backlog_jobs)
-                        .unwrap_or(usize::MAX);
+                for &s in &sites {
+                    let b = match conn.api(&self.token, ApiRequest::SiteBacklog { site: s }) {
+                        Ok(r) => r.backlog().backlog_jobs,
+                        Err(ApiError::Backpressure { retry_after_s }) => {
+                            self.note_backpressure(now, retry_after_s);
+                            usize::MAX
+                        }
+                        Err(_) => usize::MAX,
+                    };
                     if b < best_backlog {
                         best_backlog = b;
                         best = s;
@@ -148,18 +187,30 @@ impl WorkloadClient {
         }
     }
 
-    fn submit_batch(&mut self, conn: &mut dyn ApiConn, site: SiteId, n: usize) {
+    /// Returns `false` when the service throttled the submission (the
+    /// burst is deferred to after the cooldown, not dropped).
+    fn submit_batch(&mut self, conn: &mut dyn ApiConn, site: SiteId, n: usize, now: f64) -> bool {
         if n == 0 {
-            return;
+            return true;
         }
         let jobs: Vec<JobCreate> = (0..n).map(|_| self.make_job(site)).collect();
-        if let Ok(resp) = conn.api(&self.token, ApiRequest::BulkCreateJobs { jobs }) {
-            let ids = resp.job_ids();
-            self.submitted += ids.len();
-            if let Some(entry) = self.per_site.iter_mut().find(|(s, _)| *s == site) {
-                entry.1 += ids.len();
+        match conn.api(&self.token, ApiRequest::BulkCreateJobs { jobs }) {
+            Ok(resp) => {
+                let ids = resp.job_ids();
+                self.submitted += ids.len();
+                if let Some(entry) = self.per_site.iter_mut().find(|(s, _)| *s == site) {
+                    entry.1 += ids.len();
+                }
+                self.created.extend(ids);
+                true
             }
-            self.created.extend(ids);
+            Err(ApiError::Backpressure { retry_after_s }) => {
+                self.note_backpressure(now, retry_after_s);
+                false
+            }
+            // Other transient errors: the burst is skipped (pre-existing
+            // behavior); the next trigger fires on schedule.
+            Err(_) => true,
         }
     }
 
@@ -171,8 +222,15 @@ impl WorkloadClient {
         }
     }
 
-    /// One client step; returns next wake time.
+    /// One client step; returns next wake time. A tick inside an armed
+    /// `Retry-After` window sends nothing at all; a tick whose submission
+    /// is answered 429/503 arms the window and leaves `next_due` in
+    /// place, so the deferred burst fires right after the cooldown
+    /// instead of being dropped (or hammering the hinted window).
     pub fn tick(&mut self, now: f64, conn: &mut dyn ApiConn) -> f64 {
+        if now < self.backoff_until {
+            return self.backoff_until.max(self.next_due);
+        }
         if now < self.next_due {
             return self.next_due;
         }
@@ -180,8 +238,10 @@ impl WorkloadClient {
             Submission::Bursts { batch, period } => {
                 let n = self.budget(batch);
                 if n > 0 {
-                    let site = self.pick_site(conn);
-                    self.submit_batch(conn, site, n);
+                    let site = self.pick_site(conn, now);
+                    if !self.submit_batch(conn, site, n, now) {
+                        return self.backoff_until.max(self.next_due);
+                    }
                 }
                 self.next_due = now + period;
             }
@@ -189,18 +249,276 @@ impl WorkloadClient {
                 // Top up every site to its backlog target.
                 let sites: Vec<SiteId> = self.per_site.iter().map(|(s, _)| *s).collect();
                 for site in sites {
-                    let backlog = conn
-                        .api(&self.token, ApiRequest::SiteBacklog { site })
-                        .map(|r| r.backlog().backlog_jobs)
-                        .unwrap_or(target);
+                    let backlog = match conn.api(&self.token, ApiRequest::SiteBacklog { site }) {
+                        Ok(r) => r.backlog().backlog_jobs,
+                        Err(ApiError::Backpressure { retry_after_s }) => {
+                            self.note_backpressure(now, retry_after_s);
+                            return self.backoff_until.max(self.next_due);
+                        }
+                        Err(_) => target,
+                    };
                     let deficit = target.saturating_sub(backlog);
                     let n = self.budget(deficit);
-                    self.submit_batch(conn, site, n);
+                    if !self.submit_batch(conn, site, n, now) {
+                        return self.backoff_until.max(self.next_due);
+                    }
                 }
                 self.next_due = now + period;
             }
         }
         self.next_due
+    }
+}
+
+/// Per-job completion callback: invoked exactly once with the job's
+/// terminal event (`JobFinished` or `Failed`). Reconciled completions —
+/// delivered by the fallback list instead of the push channel — carry a
+/// synthetic event with `seq == 0`.
+pub type OnResult = Box<dyn FnMut(JobId, &Event) + Send>;
+
+/// Client-side push subscription: the experiment half of `WatchEvents`.
+///
+/// One subscription holds a credit-paged cursor over one owned site's
+/// event stream (the tenant scope; `None` is the admin firehose) and a
+/// set of in-flight jobs with per-job completion callbacks. Each
+/// [`ResultSubscription::pump`] is one long-poll round trip: terminal
+/// states for subscribed jobs dispatch into their callbacks in event
+/// time, so trigger-to-result latency is one round trip instead of up to
+/// one poll period — the poll survives only as a drift-free fallback
+/// heartbeat (and as the one-shot reconciliation after an event-log
+/// retention truncation). Backpressure is honored with jittered backoff
+/// by the embedded [`EventWatcher`]; a throttled reconcile arms the same
+/// cooldown.
+pub struct ResultSubscription {
+    /// Bearer token for all watch/list round trips.
+    pub token: String,
+    /// Tenant scope: the owned site whose stream this cursor pages
+    /// (`None` subscribes to every site — admin diagnostics only).
+    pub site: Option<SiteId>,
+    /// The durable cursor (push mechanics, retention jumps, backpressure
+    /// cooldown all live here — shared with the site modules).
+    pub watcher: EventWatcher,
+    /// Disable the watch entirely (`false` = poll-only result delivery;
+    /// the scenario suite's baseline client).
+    pub push: bool,
+    /// Fallback list period (s). A safety net, not the latency floor —
+    /// demote to huge values in pure push mode.
+    pub poll_period: f64,
+    /// Jobs awaiting a terminal event, each with its callback.
+    pending: BTreeMap<JobId, OnResult>,
+    /// Terminal states delivered so far (each job exactly once).
+    pub completed: u64,
+    /// Reconciling `ListJobs` sweeps performed (fallback heartbeats plus
+    /// one per retention truncation). Zero in a healthy pure-push run.
+    pub reconciles: u64,
+    /// Drift-free fallback deadline (anchored on first pump).
+    next_poll: f64,
+    truncations_seen: u64,
+}
+
+impl ResultSubscription {
+    pub fn new(token: String, site: Option<SiteId>, poll_period: f64) -> ResultSubscription {
+        ResultSubscription {
+            token,
+            site,
+            watcher: EventWatcher::new(),
+            push: true,
+            poll_period,
+            pending: BTreeMap::new(),
+            completed: 0,
+            reconciles: 0,
+            next_poll: 0.0,
+            truncations_seen: 0,
+        }
+    }
+
+    /// A poll-only subscription: result delivery degraded to the listing
+    /// heartbeat (the pre-push client behavior, kept as the scenario
+    /// suite's measured baseline).
+    pub fn poll_only(token: String, site: Option<SiteId>, poll_period: f64) -> ResultSubscription {
+        let mut s = ResultSubscription::new(token, site, poll_period);
+        s.push = false;
+        s
+    }
+
+    /// Register a job for completion delivery. The callback fires exactly
+    /// once, from whichever channel observes the terminal state first.
+    pub fn subscribe(&mut self, job: JobId, on_result: OnResult) {
+        self.pending.insert(job, on_result);
+    }
+
+    /// Jobs still awaiting their terminal event.
+    pub fn pending_jobs(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// The armed fallback deadline (0 until the first pump anchors it).
+    pub fn next_poll(&self) -> f64 {
+        self.next_poll
+    }
+
+    /// One delivery round: a long-poll watch (blocking in the gateway up
+    /// to `timeout_ms` when `push`), terminal-event dispatch, then the
+    /// retention/fallback reconciliation if due. Returns completions
+    /// delivered. Transport errors read as an empty page — the fallback
+    /// heartbeat still drives delivery when the event channel is down.
+    pub fn pump(&mut self, conn: &mut dyn ApiConn, now: f64, timeout_ms: u64) -> usize {
+        let evs = if self.push {
+            self.watcher
+                .watch(conn, &self.token, self.site, timeout_ms, now)
+                .unwrap_or_default()
+        } else {
+            Vec::new()
+        };
+        let mut delivered = 0;
+        for e in &evs {
+            if e.to.is_terminal() {
+                if let Some(mut cb) = self.pending.remove(&e.job_id) {
+                    cb(e.job_id, e);
+                    self.completed += 1;
+                    delivered += 1;
+                }
+            }
+        }
+        // Retention gap: events in [old cursor, jumped cursor) were
+        // dropped before this subscriber read them — one reconciling list
+        // closes the window, then push resumes from the jumped cursor.
+        if self.watcher.truncations > self.truncations_seen {
+            self.truncations_seen = self.watcher.truncations;
+            delivered += self.reconcile(conn, now);
+        }
+        // Drift-free fallback heartbeat (skipped while a Retry-After
+        // cooldown is armed; grid advancement shared with the site
+        // modules).
+        if self.next_poll <= 0.0 {
+            self.next_poll = now + self.poll_period;
+        } else if now >= self.next_poll {
+            if now >= self.watcher.cooldown_until && !self.pending.is_empty() {
+                delivered += self.reconcile(conn, now);
+            }
+            self.next_poll = crate::site::advance_on_grid(self.next_poll, now, self.poll_period);
+        }
+        delivered
+    }
+
+    /// One reconciling sweep: list terminal jobs in scope and complete
+    /// any still pending (synthetic event, `seq == 0`). A throttled list
+    /// arms the watcher's jittered cooldown, like every other module.
+    fn reconcile(&mut self, conn: &mut dyn ApiConn, now: f64) -> usize {
+        self.reconciles += 1;
+        let filter = JobFilter {
+            site: self.site,
+            states: vec![JobState::JobFinished, JobState::Failed],
+            ..JobFilter::default()
+        };
+        let jobs = match conn.api(&self.token, ApiRequest::ListJobs { filter }) {
+            Ok(resp) => resp.jobs(),
+            Err(ApiError::Backpressure { retry_after_s }) => {
+                self.watcher.throttled += 1;
+                let base = retry_after_s as f64;
+                let jitter = (self.watcher.cursor % 83) as f64 / 83.0 * base * 0.5;
+                self.watcher.cooldown_until = self.watcher.cooldown_until.max(now + base + jitter);
+                return 0;
+            }
+            Err(_) => return 0,
+        };
+        let mut delivered = 0;
+        for j in jobs {
+            if let Some(mut cb) = self.pending.remove(&j.id) {
+                let ev = Event {
+                    seq: 0,
+                    job_id: j.id,
+                    site_id: j.site_id,
+                    ts: now,
+                    from: j.state,
+                    to: j.state,
+                    data: "reconciled".into(),
+                };
+                cb(j.id, &ev);
+                self.completed += 1;
+                delivered += 1;
+            }
+        }
+        delivered
+    }
+}
+
+/// A beamline experiment client: a [`WorkloadClient`] submission stream
+/// plus one [`ResultSubscription`] per routed site, so every submitted
+/// job's terminal state comes back as a push callback (paper §4.6's
+/// APS/ALS clients, end-to-end).
+pub struct ExperimentClient {
+    pub client: WorkloadClient,
+    /// One subscription per site, aligned with `client.per_site` order.
+    pub subs: Vec<ResultSubscription>,
+}
+
+impl ExperimentClient {
+    /// Wrap a submission stream; `fallback_poll_s` is each subscription's
+    /// reconcile heartbeat (1e9 effectively disables it — pure push).
+    pub fn new(client: WorkloadClient, fallback_poll_s: f64) -> ExperimentClient {
+        let subs = client
+            .per_site
+            .iter()
+            .map(|(s, _)| {
+                ResultSubscription::new(client.token.clone(), Some(*s), fallback_poll_s)
+            })
+            .collect();
+        ExperimentClient { client, subs }
+    }
+
+    /// One submission tick; every newly created job is subscribed for
+    /// completion with a callback built by `mk`. Jobs are attributed to
+    /// sites by the per-site submission deltas (the submission loop fills
+    /// sites in `per_site` order, so deltas chunk `created` in order).
+    pub fn tick(
+        &mut self,
+        now: f64,
+        conn: &mut dyn ApiConn,
+        mk: &mut dyn FnMut(JobId) -> OnResult,
+    ) -> f64 {
+        let before_counts: Vec<usize> = self.client.per_site.iter().map(|(_, n)| *n).collect();
+        let before_len = self.client.created.len();
+        let next = self.client.tick(now, conn);
+        let new = &self.client.created[before_len..];
+        let mut off = 0;
+        for (i, (_, after)) in self.client.per_site.iter().enumerate() {
+            let delta = after - before_counts[i];
+            for &job in &new[off..off + delta] {
+                self.subs[i].subscribe(job, mk(job));
+            }
+            off += delta;
+        }
+        next
+    }
+
+    /// One delivery round across all subscriptions: the `timeout_ms`
+    /// budget is split over the sites that still await results (idle
+    /// sites are skipped), so a single-threaded driver stays within one
+    /// budget per loop regardless of fan-out.
+    pub fn pump(&mut self, now: f64, conn: &mut dyn ApiConn, timeout_ms: u64) -> usize {
+        let active = self.subs.iter().filter(|s| s.pending_jobs() > 0).count();
+        if active == 0 {
+            return 0;
+        }
+        let slice = timeout_ms / active as u64;
+        let mut delivered = 0;
+        for sub in &mut self.subs {
+            if sub.pending_jobs() > 0 {
+                delivered += sub.pump(conn, now, slice);
+            }
+        }
+        delivered
+    }
+
+    /// Jobs submitted but not yet completed.
+    pub fn pending_results(&self) -> usize {
+        self.subs.iter().map(|s| s.pending_jobs()).sum()
+    }
+
+    /// Terminal states delivered across all subscriptions.
+    pub fn completed(&self) -> u64 {
+        self.subs.iter().map(|s| s.completed).sum()
     }
 }
 
@@ -389,5 +707,285 @@ mod tests {
         }
         assert_eq!(small + large, 60);
         assert!(small > 10 && large > 10, "mix should draw both: {small}/{large}");
+    }
+
+    use std::sync::{Arc, Mutex};
+
+    /// Walk one no-stage-in job (created in Preprocessed) to JobFinished
+    /// through legality-checked transitions, emitting the real events.
+    /// The last hop is implicit: a job with no stage-out items is
+    /// auto-finished by the store the moment it reaches Postprocessed.
+    fn finish_job(svc: &mut ServiceCore, tok: &str, job: JobId, t: f64) {
+        for to in [JobState::Running, JobState::RunDone, JobState::Postprocessed] {
+            svc.handle(t, tok, ApiRequest::UpdateJobState { job, to, data: String::new() })
+                .unwrap();
+        }
+        assert_eq!(svc.store.job(job).unwrap().state, JobState::JobFinished);
+    }
+
+    /// Answers submissions with a gateway-style 429 + Retry-After and
+    /// counts every round trip that reaches the wire.
+    struct ThrottledSubmitConn<'a, 'b> {
+        inner: InProcConn<'a>,
+        calls: &'b mut usize,
+    }
+
+    impl crate::service::api::ApiConn for ThrottledSubmitConn<'_, '_> {
+        fn api(
+            &mut self,
+            token: &str,
+            req: ApiRequest,
+        ) -> Result<crate::service::api::ApiResponse, ApiError> {
+            *self.calls += 1;
+            if matches!(req, ApiRequest::BulkCreateJobs { .. }) {
+                return Err(ApiError::Backpressure { retry_after_s: 2 });
+            }
+            self.inner.api(token, req)
+        }
+    }
+
+    /// Satellite pin: a 429/503 on submission arms a deterministic
+    /// jittered `Retry-After` window; ticks inside it send NOTHING, and
+    /// the throttled burst is deferred past the window, not dropped.
+    #[test]
+    fn throttled_burst_is_deferred_with_jittered_backoff() {
+        let (mut svc, tok, sites) = setup(1);
+        let mut c = WorkloadClient::new(
+            tok.clone(),
+            "APS",
+            "EigenCorr",
+            "xpcs",
+            Strategy::Single(sites[0]),
+            Submission::Bursts { batch: 8, period: 4.0 },
+            7,
+        );
+        let mut calls = 0;
+        {
+            let inner = InProcConn { now: 0.0, svc: &mut svc };
+            let mut conn = ThrottledSubmitConn { inner, calls: &mut calls };
+            let next = c.tick(0.0, &mut conn);
+            assert!(next >= 2.0, "wake must not precede the hinted window: {next}");
+        }
+        assert_eq!(c.submitted, 0);
+        assert_eq!(c.throttled, 1);
+        // Matching the site modules' jitter shape: window + up to half of
+        // it again, spread by the client's seed.
+        let expected = 2.0 + (7u64 % 89) as f64 / 89.0 * 2.0 * 0.5;
+        assert!((c.backoff_until - expected).abs() < 1e-9, "got {}", c.backoff_until);
+        // Inside the window: silent — zero round trips.
+        {
+            let inner = InProcConn { now: 1.0, svc: &mut svc };
+            let mut conn = ThrottledSubmitConn { inner, calls: &mut calls };
+            c.tick(1.0, &mut conn);
+        }
+        assert_eq!(calls, 1, "a backed-off client must stay off the wire");
+        assert_eq!(c.submitted, 0);
+        // Past the window: the deferred burst lands.
+        let t = c.backoff_until + 0.01;
+        let mut conn = InProcConn { now: t, svc: &mut svc };
+        c.tick(t, &mut conn);
+        assert_eq!(c.submitted, 8, "a throttled burst is deferred, never dropped");
+        // Equal seeds arm identical windows; different seeds spread, so a
+        // throttled fleet does not re-arrive in one synchronized wave.
+        let armed = |seed: u64| {
+            let mut x = WorkloadClient::new(
+                "t".into(),
+                "APS",
+                "EigenCorr",
+                "xpcs",
+                Strategy::Single(sites[0]),
+                Submission::Bursts { batch: 1, period: 1.0 },
+                seed,
+            );
+            x.note_backpressure(0.0, 4);
+            x.backoff_until
+        };
+        assert_eq!(armed(11), armed(11));
+        assert_ne!(armed(11), armed(12));
+    }
+
+    /// Tentpole pin: terminal-state events dispatch into per-job
+    /// callbacks via the push cursor — exactly once, with the real event,
+    /// and with zero reconciling lists.
+    #[test]
+    fn subscription_pushes_terminal_events_into_callbacks_exactly_once() {
+        let (mut svc, tok, sites) = setup(1);
+        let jobs = svc
+            .handle(0.0, &tok, ApiRequest::BulkCreateJobs {
+                jobs: (0..2).map(|_| JobCreate::simple(sites[0], "EigenCorr", "xpcs")).collect(),
+            })
+            .unwrap()
+            .job_ids();
+        let mut sub = ResultSubscription::new(tok.clone(), Some(sites[0]), 1e9);
+        let seen: Arc<Mutex<Vec<(JobId, u64, JobState)>>> = Arc::new(Mutex::new(Vec::new()));
+        for &j in &jobs {
+            let seen = seen.clone();
+            sub.subscribe(
+                j,
+                Box::new(move |id, ev| seen.lock().unwrap().push((id, ev.seq, ev.to))),
+            );
+        }
+        // Drain the creation backlog: no terminal states yet.
+        {
+            let mut conn = InProcConn { now: 1.0, svc: &mut svc };
+            sub.pump(&mut conn, 1.0, 0);
+        }
+        assert_eq!(sub.completed, 0);
+        assert_eq!(sub.pending_jobs(), 2);
+        finish_job(&mut svc, &tok, jobs[0], 2.0);
+        let delivered = {
+            let mut conn = InProcConn { now: 3.0, svc: &mut svc };
+            sub.pump(&mut conn, 3.0, 0)
+        };
+        assert_eq!(delivered, 1);
+        // Re-pump at the tail: the cursor is past the terminal event.
+        {
+            let mut conn = InProcConn { now: 4.0, svc: &mut svc };
+            sub.pump(&mut conn, 4.0, 0);
+        }
+        finish_job(&mut svc, &tok, jobs[1], 5.0);
+        {
+            let mut conn = InProcConn { now: 6.0, svc: &mut svc };
+            sub.pump(&mut conn, 6.0, 0);
+        }
+        let got = seen.lock().unwrap().clone();
+        assert_eq!(got.len(), 2, "each job completes exactly once: {got:?}");
+        assert_eq!(got[0].0, jobs[0]);
+        assert_eq!(got[1].0, jobs[1]);
+        assert!(
+            got.iter().all(|(_, seq, to)| *seq > 0 && *to == JobState::JobFinished),
+            "push delivery carries the real terminal event: {got:?}"
+        );
+        assert_eq!(sub.reconciles, 0, "pure push needs no reconciling list");
+        assert_eq!(sub.pending_jobs(), 0);
+    }
+
+    /// The demoted result poll: anchored on first pump, fires a
+    /// reconciling list when due, re-aligns to the grid after a late wake
+    /// (no fixed-delay drift), and delivers via a synthetic seq-0 event.
+    #[test]
+    fn poll_fallback_reconciles_on_a_drift_free_grid() {
+        let (mut svc, tok, sites) = setup(1);
+        let jobs = svc
+            .handle(0.0, &tok, ApiRequest::BulkCreateJobs {
+                jobs: vec![JobCreate::simple(sites[0], "EigenCorr", "xpcs")],
+            })
+            .unwrap()
+            .job_ids();
+        let mut sub = ResultSubscription::poll_only(tok.clone(), Some(sites[0]), 5.0);
+        let seen: Arc<Mutex<Vec<(JobId, u64)>>> = Arc::new(Mutex::new(Vec::new()));
+        {
+            let seen = seen.clone();
+            sub.subscribe(
+                jobs[0],
+                Box::new(move |id, ev| seen.lock().unwrap().push((id, ev.seq))),
+            );
+        }
+        finish_job(&mut svc, &tok, jobs[0], 0.5);
+        // First pump anchors the heartbeat; nothing is due yet.
+        {
+            let mut conn = InProcConn { now: 1.0, svc: &mut svc };
+            sub.pump(&mut conn, 1.0, 0);
+        }
+        assert_eq!(sub.reconciles, 0);
+        assert!((sub.next_poll() - 6.0).abs() < 1e-9);
+        // Wake 2.3 periods late: exactly one reconcile fires and the next
+        // deadline re-aligns to the anchor grid, not to the wake time.
+        let t = 1.0 + 5.0 * 2.3;
+        let delivered = {
+            let mut conn = InProcConn { now: t, svc: &mut svc };
+            sub.pump(&mut conn, t, 0)
+        };
+        assert_eq!(delivered, 1);
+        assert_eq!(sub.reconciles, 1);
+        assert!((sub.next_poll() - 16.0).abs() < 1e-9, "got {}", sub.next_poll());
+        let got = seen.lock().unwrap().clone();
+        assert_eq!(got, vec![(jobs[0], 0)], "reconciled results carry the synthetic event");
+    }
+
+    /// A retention jump recorded by the watcher triggers exactly one
+    /// reconciling list, so a terminal state inside the dropped window is
+    /// still delivered (full socket-level version: integration_http.rs).
+    #[test]
+    fn truncation_falls_back_to_one_reconciling_list() {
+        let (mut svc, tok, sites) = setup(1);
+        let jobs = svc
+            .handle(0.0, &tok, ApiRequest::BulkCreateJobs {
+                jobs: vec![JobCreate::simple(sites[0], "EigenCorr", "xpcs")],
+            })
+            .unwrap()
+            .job_ids();
+        finish_job(&mut svc, &tok, jobs[0], 1.0);
+        let mut sub = ResultSubscription::new(tok.clone(), Some(sites[0]), 1e9);
+        sub.push = false; // the event channel saw the gap, not the events
+        let seen: Arc<Mutex<Vec<JobId>>> = Arc::new(Mutex::new(Vec::new()));
+        {
+            let seen = seen.clone();
+            sub.subscribe(jobs[0], Box::new(move |id, _| seen.lock().unwrap().push(id)));
+        }
+        // As if watch() had jumped the cursor over a truncated_before.
+        sub.watcher.truncations = 1;
+        {
+            let mut conn = InProcConn { now: 2.0, svc: &mut svc };
+            sub.pump(&mut conn, 2.0, 0);
+        }
+        assert_eq!(sub.reconciles, 1, "one list per retention jump");
+        assert_eq!(sub.completed, 1);
+        assert_eq!(*seen.lock().unwrap(), vec![jobs[0]]);
+        // The jump is consumed: no further reconciling lists.
+        {
+            let mut conn = InProcConn { now: 3.0, svc: &mut svc };
+            sub.pump(&mut conn, 3.0, 0);
+        }
+        assert_eq!(sub.reconciles, 1);
+    }
+
+    /// ExperimentClient attributes each newly submitted job to its routed
+    /// site's subscription and drains all callbacks through one pump.
+    #[test]
+    fn experiment_client_subscribes_jobs_on_their_routed_site() {
+        let (mut svc, tok, sites) = setup(3);
+        let wc = WorkloadClient::new(
+            tok.clone(),
+            "local",
+            "EigenCorr",
+            "xpcs",
+            Strategy::RoundRobin(sites.clone()),
+            Submission::Bursts { batch: 1, period: 1.0 },
+            9,
+        );
+        let mut ec = ExperimentClient::new(wc, 1e9);
+        let done: Arc<Mutex<Vec<JobId>>> = Arc::new(Mutex::new(Vec::new()));
+        for step in 0..6 {
+            let t = step as f64;
+            let mut conn = InProcConn { now: t, svc: &mut svc };
+            let done = done.clone();
+            let mut mk = move |_job: JobId| -> OnResult {
+                let done = done.clone();
+                Box::new(move |id, _ev| done.lock().unwrap().push(id))
+            };
+            ec.tick(t, &mut conn, &mut mk);
+        }
+        assert_eq!(ec.pending_results(), 6);
+        for (i, sub) in ec.subs.iter().enumerate() {
+            assert_eq!(sub.site, Some(sites[i]));
+            assert_eq!(sub.pending_jobs(), 2, "round-robin puts 2 of 6 jobs on site {i}");
+        }
+        let ids = ec.client.created.clone();
+        for &id in &ids {
+            finish_job(&mut svc, &tok, id, 10.0);
+        }
+        let delivered = {
+            let mut conn = InProcConn { now: 11.0, svc: &mut svc };
+            ec.pump(11.0, &mut conn, 0)
+        };
+        assert_eq!(delivered, 6);
+        assert_eq!(ec.completed(), 6);
+        assert_eq!(ec.pending_results(), 0);
+        let mut got = done.lock().unwrap().clone();
+        got.sort();
+        let mut want = ids;
+        want.sort();
+        assert_eq!(got, want, "every submitted job completed exactly once");
     }
 }

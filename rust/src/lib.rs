@@ -35,6 +35,7 @@ pub mod site;
 pub mod client;
 pub mod metrics;
 pub mod runtime;
+pub mod scenario;
 pub mod experiments;
 pub mod world;
 

@@ -4,6 +4,7 @@
 //!   repro `<id|all>` [--fast] [--seed N]   regenerate a paper table/figure
 //!   service [--addr A]                   run the central service over HTTP
 //!   loadgen [--quick] [--out FILE]       open-loop capacity sweep + SLO verdict
+//!   scenario [--quick] [--out FILE]      two-beamline × three-site real-time run
 //!   runtime-check [--artifacts DIR]      load + execute the AOT artifacts
 //!   state-graph                          print the job state machine
 //!
@@ -22,11 +23,12 @@ fn main() {
         Some("repro") => cmd_repro(&args),
         Some("service") => cmd_service(&args),
         Some("loadgen") => cmd_loadgen(&args),
+        Some("scenario") => cmd_scenario(&args),
         Some("runtime-check") => cmd_runtime_check(&args),
         Some("state-graph") => cmd_state_graph(),
         _ => {
             eprintln!(
-                "usage: balsam <repro|service|loadgen|runtime-check|state-graph> [options]\n\
+                "usage: balsam <repro|service|loadgen|scenario|runtime-check|state-graph> [options]\n\
                  \n  repro <id|all> [--fast] [--seed N]   ids: {:?}\
                  \n  service [--addr 127.0.0.1:8008] [--persist-dir DIR] [--snapshot-every N]\
                  \n          [--fsync=never|always|group:K,Tms] [--events-segment-bytes N]\
@@ -45,6 +47,10 @@ fn main() {
                  \n  loadgen --fairness [--quick] [--out FILE] [--polite N] [--greedy N]\
                  \n          [--polite-rps R] [--greedy-rps R] [--fairness-secs S]\
                  \n          [--rate-limit RPS,BURST] [--workers N] [--seed N]\
+                 \n  scenario [--quick] [--out FILE] [--batches N] [--batch N]\
+                 \n          [--trigger-period SECS] [--poll-period SECS] [--run-secs SECS]\
+                 \n          [--kill-site IDX] [--restart-mid-run] [--no-staging]\
+                 \n          [--deadline SECS] [--workers N]\
                  \n  runtime-check [--artifacts artifacts] [--model NAME]\
                  \n  state-graph",
                 balsam::experiments::ALL
@@ -315,6 +321,55 @@ fn cmd_loadgen_fairness(args: &Args) -> balsam::Result<()> {
         std::fs::write(out, &json)
             .map_err(|e| balsam::util::error::err_msg(format!("write {out}: {e}")))?;
         eprintln!("fairness report written to {out}");
+    } else {
+        println!("{json}");
+    }
+    Ok(())
+}
+
+fn cmd_scenario(args: &Args) -> balsam::Result<()> {
+    // The paper's end-to-end demo (see docs/ARCHITECTURE.md "End-to-end
+    // real-time path"): two beamlines trigger batches against three
+    // push-mode sites over real sockets; the report carries push vs poll
+    // trigger-to-result latency plus the integrity counters the scenario
+    // gate checks (lost / duplicates / undelivered all zero).
+    let mut cfg = balsam::scenario::ScenarioConfig::quick();
+    if !args.flag("quick") {
+        cfg.batches = 4;
+        cfg.batch = 6;
+        cfg.deadline_s = 120.0;
+    }
+    cfg.batches = args.u64_or("batches", cfg.batches as u64) as usize;
+    cfg.batch = args.u64_or("batch", cfg.batch as u64) as usize;
+    cfg.trigger_period_s = args.f64_or("trigger-period", cfg.trigger_period_s);
+    cfg.poll_period_s = args.f64_or("poll-period", cfg.poll_period_s);
+    cfg.run_s = args.f64_or("run-secs", cfg.run_s);
+    cfg.deadline_s = args.f64_or("deadline", cfg.deadline_s);
+    cfg.workers = args.u64_or("workers", cfg.workers as u64) as usize;
+    if let Some(idx) = args.get("kill-site") {
+        let idx: usize = idx
+            .parse()
+            .map_err(|_| balsam::err!("--kill-site expects a site index, got '{idx}'"))?;
+        balsam::ensure!(idx < cfg.facilities.len(), "--kill-site index out of range");
+        cfg.kill_site_mid_batch = Some(idx);
+    }
+    if args.flag("restart-mid-run") {
+        cfg.restart_service_mid_run = true;
+    }
+    if args.flag("no-staging") {
+        cfg.stage_data = false;
+    }
+    let report = balsam::scenario::run(&cfg)?;
+    let json = report.to_json().to_string();
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, &json)
+            .map_err(|e| balsam::util::error::err_msg(format!("write {out}: {e}")))?;
+        eprintln!(
+            "scenario report written to {out} (push p95 {:.1} ms, poll p95 {:.1} ms, speedup {:.1}x)",
+            report.push.p95_ms,
+            report.poll.p95_ms,
+            report.push_speedup_p95()
+        );
     } else {
         println!("{json}");
     }

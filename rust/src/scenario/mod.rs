@@ -1,0 +1,628 @@
+//! End-to-end real-time scenario harness: the paper's headline demo —
+//! **two beamlines × three sites** — as a deterministic, measurable run.
+//!
+//! Two [`ExperimentClient`]s (APS/ALS) submit concurrent triggered batches
+//! over real sockets against a durable WAL + group-fsync service, with one
+//! push-mode [`SiteAgent`] per facility (service poll fallbacks demoted to
+//! 1e9 s — only `WatchEvents` wakeups drive service-side progress).
+//! Trigger-to-result latency is measured per job, first with push-mode
+//! result delivery and then with the poll-only baseline client, producing
+//! the `scenario` axis of `BENCH_service.json` (gated by
+//! `bench_trend.py`: push p95 must stay ≥3× below poll p95 in-run).
+//!
+//! Fault legs (driven by `tests/scenario_realtime.rs`):
+//! * **kill one site agent mid-batch** — its session lease expires, the
+//!   service re-routes Running jobs to `RestartReady`, and a replacement
+//!   agent's Elastic Queue re-provisions blocks (`site/elastic.rs`) so the
+//!   batch completes with zero lost and zero duplicated results;
+//! * **restart the service mid-run** — stop the gateway, reopen the same
+//!   WAL, serve on a fresh port; agents and clients redial and their
+//!   `WatchEvents` cursors resume gap-free across recovery.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::client::{ExperimentClient, OnResult, Strategy, Submission, WorkloadClient};
+use crate::runtime::local::{LocalResources, LoopbackTransfer};
+use crate::service::api::{ApiConn, ApiRequest};
+use crate::service::http_gw::{serve_with, HttpConn};
+use crate::service::models::{JobId, JobState, SiteId};
+use crate::service::{EventLogConfig, FsyncPolicy, PersistMode, ServiceCore};
+use crate::site::platform::{ExecBackend, RunId, RunStatus};
+use crate::site::{SiteAgent, SiteConfig};
+use crate::util::httpd::HttpConfig;
+use crate::util::json::Json;
+use crate::util::stats::percentile_nearest_rank;
+
+/// Scenario knobs. [`ScenarioConfig::quick`] is the CI/bench preset; the
+/// scenario tests scale it up and switch the fault legs on.
+#[derive(Debug, Clone)]
+pub struct ScenarioConfig {
+    /// Facilities hosting one site each (default: theta, summit, cori).
+    pub facilities: Vec<String>,
+    /// Beamline endpoints submitting triggered batches (APS, ALS).
+    pub beamlines: Vec<String>,
+    /// Triggered batches per beamline, per delivery-mode pass.
+    pub batches: usize,
+    /// Jobs per triggered batch.
+    pub batch: usize,
+    /// Trigger cadence (s) — one batch per trigger.
+    pub trigger_period_s: f64,
+    /// Poll-mode client's fallback list period (s): the baseline the push
+    /// path is gated against.
+    pub poll_period_s: f64,
+    /// Simulated analysis run time per job (s).
+    pub run_s: f64,
+    /// Stage real payload bytes through the loopback transfer backend
+    /// (`false` = no transfer items; the kill-fault leg uses this so a
+    /// dead agent cannot orphan `Active` stage-ins).
+    pub stage_data: bool,
+    /// Nodes per site backend (elastic cap).
+    pub nodes_per_site: u32,
+    /// Gateway worker threads.
+    pub workers: usize,
+    /// Session lease timeout (s); agent heartbeats run well under it so
+    /// only a *killed* agent's lease expires.
+    pub lease_timeout_s: f64,
+    /// Per-watch long-poll hang (ms), client and agent side.
+    pub subscribe_timeout_ms: u64,
+    /// Kill the Nth facility's agent once ~25% of the push pass has
+    /// completed, then spawn a replacement agent for the same site.
+    pub kill_site_mid_batch: Option<usize>,
+    /// Stop the gateway + reopen the same WAL on a fresh port once ~50%
+    /// of the push pass has completed.
+    pub restart_service_mid_run: bool,
+    /// Per-pass wall-clock bound (s); an expired pass reports its
+    /// unfinished jobs as lost instead of hanging.
+    pub deadline_s: f64,
+    /// WAL directory (`None` = unique temp dir, removed on success).
+    pub wal_dir: Option<PathBuf>,
+}
+
+impl ScenarioConfig {
+    /// CI/bench preset: small batches, no faults, ~15 s wall clock.
+    pub fn quick() -> ScenarioConfig {
+        ScenarioConfig {
+            facilities: vec!["theta".into(), "summit".into(), "cori".into()],
+            beamlines: vec!["APS".into(), "ALS".into()],
+            batches: 2,
+            batch: 3,
+            trigger_period_s: 0.4,
+            poll_period_s: 6.0,
+            run_s: 0.2,
+            stage_data: true,
+            nodes_per_site: 8,
+            workers: 12,
+            lease_timeout_s: 2.0,
+            subscribe_timeout_ms: 250,
+            kill_site_mid_batch: None,
+            restart_service_mid_run: false,
+            deadline_s: 45.0,
+            wal_dir: None,
+        }
+    }
+
+    fn jobs_per_mode(&self) -> usize {
+        self.beamlines.len() * self.batches * self.batch
+    }
+}
+
+/// Nearest-rank latency summary over one delivery mode's samples.
+#[derive(Debug, Clone, Copy)]
+pub struct LatencyStats {
+    pub n: usize,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub avg_ms: f64,
+}
+
+impl LatencyStats {
+    fn from_samples(xs: &[f64]) -> LatencyStats {
+        if xs.is_empty() {
+            return LatencyStats { n: 0, p50_ms: 0.0, p95_ms: 0.0, avg_ms: 0.0 };
+        }
+        LatencyStats {
+            n: xs.len(),
+            p50_ms: percentile_nearest_rank(xs, 50.0) * 1e3,
+            p95_ms: percentile_nearest_rank(xs, 95.0) * 1e3,
+            avg_ms: xs.iter().sum::<f64>() / xs.len() as f64 * 1e3,
+        }
+    }
+}
+
+/// What one scenario run produced — the `scenario` axis of
+/// `BENCH_service.json` and the assertion surface of the scenario tests.
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    /// Trigger-to-result latency, push-mode client pass.
+    pub push: LatencyStats,
+    /// Trigger-to-result latency, poll-only baseline pass.
+    pub poll: LatencyStats,
+    pub poll_period_ms: f64,
+    /// Jobs submitted per delivery-mode pass.
+    pub jobs_per_mode: usize,
+    /// Service-side: jobs that never reached `JobFinished`.
+    pub lost: usize,
+    /// Client-side: completion callbacks that never fired.
+    pub undelivered: usize,
+    /// Jobs with more than one `JobFinished` event.
+    pub duplicates: usize,
+    /// Client reconciling lists across all subscriptions (push pass; 0 in
+    /// a healthy pure-push run without retention truncation).
+    pub reconciles: u64,
+    /// Retention truncations observed by client cursors.
+    pub truncations: u64,
+    /// Client submissions answered 429/503 (deferred, never dropped).
+    pub client_throttled: u64,
+    /// Blocks provisioned by the replacement agent after a kill.
+    pub replacement_blocks: u64,
+    /// Service restarts performed mid-run.
+    pub restarts: u64,
+    pub elapsed_s: f64,
+}
+
+impl ScenarioReport {
+    /// Push p95 speedup over the poll baseline (the gated ratio).
+    pub fn push_speedup_p95(&self) -> f64 {
+        if self.push.p95_ms > 0.0 { self.poll.p95_ms / self.push.p95_ms } else { 0.0 }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("push_n", Json::num(self.push.n as f64)),
+            ("push_p50_ms", Json::num(self.push.p50_ms)),
+            ("push_p95_ms", Json::num(self.push.p95_ms)),
+            ("push_avg_ms", Json::num(self.push.avg_ms)),
+            ("poll_n", Json::num(self.poll.n as f64)),
+            ("poll_p50_ms", Json::num(self.poll.p50_ms)),
+            ("poll_p95_ms", Json::num(self.poll.p95_ms)),
+            ("poll_avg_ms", Json::num(self.poll.avg_ms)),
+            ("poll_period_ms", Json::num(self.poll_period_ms)),
+            ("jobs_per_mode", Json::num(self.jobs_per_mode as f64)),
+            ("lost", Json::num(self.lost as f64)),
+            ("undelivered", Json::num(self.undelivered as f64)),
+            ("duplicates", Json::num(self.duplicates as f64)),
+            ("reconciles", Json::num(self.reconciles as f64)),
+            ("truncations", Json::num(self.truncations as f64)),
+            ("client_throttled", Json::num(self.client_throttled as f64)),
+            ("replacement_blocks", Json::num(self.replacement_blocks as f64)),
+            ("restarts", Json::num(self.restarts as f64)),
+            ("elapsed_s", Json::num(self.elapsed_s)),
+        ])
+    }
+}
+
+/// The service endpoint as the fleet sees it: bumping `epoch` after a
+/// restart makes every agent/client thread redial `addr`.
+struct Endpoint {
+    addr: Mutex<String>,
+    epoch: AtomicU64,
+}
+
+impl Endpoint {
+    fn dial(&self) -> (HttpConn, u64) {
+        let addr = self.addr.lock().unwrap().clone();
+        (HttpConn::new(addr), self.epoch.load(Ordering::SeqCst))
+    }
+}
+
+/// Deterministic fake executor (the HTTP integration tests' FastExec with
+/// a configurable run time) — the scenario isolates coordination latency,
+/// not numerics.
+struct ScenarioExec {
+    runs: BTreeMap<RunId, f64>,
+    next: u64,
+    run_s: f64,
+}
+
+impl ExecBackend for ScenarioExec {
+    fn start(&mut self, now: f64, _fac: &str, _workload: &str, _n: u32) -> RunId {
+        self.next += 1;
+        self.runs.insert(RunId(self.next), now + self.run_s);
+        RunId(self.next)
+    }
+    fn poll(&mut self, now: f64, id: RunId) -> RunStatus {
+        match self.runs.get(&id) {
+            Some(&t) if now >= t => RunStatus::Done { ok: true },
+            Some(_) => RunStatus::Running,
+            None => RunStatus::Done { ok: false },
+        }
+    }
+    fn kill(&mut self, _now: f64, id: RunId) {
+        self.runs.remove(&id);
+    }
+}
+
+/// One running site-agent thread. `kill` is the fault switch: the thread
+/// exits immediately, WITHOUT ending its sessions — exactly what a
+/// crashed login-node process looks like to the service.
+struct AgentHandle {
+    kill: Arc<AtomicBool>,
+    blocks: Arc<AtomicU64>,
+    join: thread::JoinHandle<()>,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn spawn_agent(
+    instance: usize,
+    facility: String,
+    site: SiteId,
+    token: String,
+    cfg: &ScenarioConfig,
+    ep: Arc<Endpoint>,
+    stop: Arc<AtomicBool>,
+) -> AgentHandle {
+    let kill = Arc::new(AtomicBool::new(false));
+    let blocks = Arc::new(AtomicU64::new(0));
+    let (nodes, run_s, sub_ms) = (cfg.nodes_per_site, cfg.run_s, cfg.subscribe_timeout_ms);
+    let (kill2, blocks2) = (kill.clone(), blocks.clone());
+    let join = thread::spawn(move || {
+        let mut scfg = SiteConfig::defaults(&facility, site, token);
+        // Service poll fallbacks demoted: push-only coordination.
+        scfg.transfer.poll_period = 1e9;
+        scfg.launcher.acquire_period = 1e9;
+        // Local backend polls (not service traffic) stay fast.
+        scfg.transfer.task_poll_period = 0.02;
+        scfg.scheduler_poll = 0.1;
+        scfg.elastic.poll_period = 0.1;
+        scfg.elastic.block_nodes = 2;
+        scfg.elastic.max_nodes = nodes;
+        // Heartbeats well under the (short) lease timeout, so only a
+        // killed agent's lease can expire.
+        scfg.launcher.heartbeat_period = 0.4;
+        scfg.launcher.idle_timeout_s = 30.0;
+        scfg.subscribe_timeout_ms = sub_ms;
+
+        let dir = std::env::temp_dir().join(format!(
+            "balsam-scn-{}-{}-{}",
+            std::process::id(),
+            facility,
+            instance
+        ));
+        let mut xfer = LoopbackTransfer::new(&dir, None);
+        let mut sched = LocalResources::new(nodes);
+        let mut exec = ScenarioExec { runs: BTreeMap::new(), next: 0, run_s };
+        let mut agent = SiteAgent::new(scfg);
+        let (mut conn, mut my_epoch) = ep.dial();
+        let t0 = Instant::now();
+        while !stop.load(Ordering::SeqCst) && !kill2.load(Ordering::SeqCst) {
+            let e = ep.epoch.load(Ordering::SeqCst);
+            if e != my_epoch {
+                let (c, ep2) = ep.dial();
+                conn = c;
+                my_epoch = ep2;
+            }
+            let now = t0.elapsed().as_secs_f64();
+            let next_wake = agent.step(now, &mut conn, &mut xfer, &mut sched, &mut exec);
+            blocks2.store(agent.elastic.blocks_created, Ordering::SeqCst);
+            let now = t0.elapsed().as_secs_f64();
+            let headroom_ms = ((next_wake - now).max(0.0) * 1e3) as u64;
+            // While backend work is in flight the watch stays short so
+            // local task/run polls keep cadence; otherwise hang in the
+            // gateway until the next event.
+            let busy = agent.running_tasks() > 0 || agent.transfer.active_tasks() > 0;
+            let cap = if busy { 20 } else { agent.cfg.subscribe_timeout_ms };
+            let n = agent.pump_events(&mut conn, now, headroom_ms.min(cap));
+            if n == 0 {
+                // Dead gateway (mid-restart) or idle probe: don't spin.
+                thread::sleep(Duration::from_millis(2));
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    });
+    AgentHandle { kill, blocks, join }
+}
+
+/// What one beamline thread produced in one delivery-mode pass.
+struct BeamlineOutcome {
+    latencies: Vec<f64>,
+    created: Vec<JobId>,
+    undelivered: usize,
+    reconciles: u64,
+    truncations: u64,
+    throttled: u64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn spawn_beamline(
+    name: String,
+    sites: Vec<SiteId>,
+    token: String,
+    cfg: &ScenarioConfig,
+    ep: Arc<Endpoint>,
+    push: bool,
+    seed: u64,
+    progress: Arc<AtomicU64>,
+) -> thread::JoinHandle<BeamlineOutcome> {
+    let total = cfg.batches * cfg.batch;
+    let (batch, trigger_s) = (cfg.batch, cfg.trigger_period_s);
+    let (poll_s, deadline_s, sub_ms) = (cfg.poll_period_s, cfg.deadline_s, cfg.subscribe_timeout_ms);
+    let source = if cfg.stage_data { name.clone() } else { "local".to_string() };
+    thread::spawn(move || {
+        let wc = WorkloadClient::new(
+            token,
+            &source,
+            "Analysis",
+            "scan",
+            Strategy::RoundRobin(sites),
+            Submission::Bursts { batch, period: trigger_s },
+            seed,
+        )
+        .with_max_jobs(total);
+        let mut ec = ExperimentClient::new(wc, if push { 1e9 } else { poll_s });
+        if !push {
+            for s in &mut ec.subs {
+                s.push = false;
+            }
+        }
+        let lat: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
+        let (mut conn, mut my_epoch) = ep.dial();
+        let t0 = Instant::now();
+        while ec.client.submitted < total || ec.pending_results() > 0 {
+            let e = ep.epoch.load(Ordering::SeqCst);
+            if e != my_epoch {
+                let (c, ep2) = ep.dial();
+                conn = c;
+                my_epoch = ep2;
+            }
+            let now = t0.elapsed().as_secs_f64();
+            if now > deadline_s {
+                break;
+            }
+            // Each trigger stamps its own wall-clock origin; the per-job
+            // callback closes the trigger-to-result interval.
+            let trigger = Instant::now();
+            {
+                let (lat, progress) = (lat.clone(), progress.clone());
+                let mut mk = move |_job: JobId| -> OnResult {
+                    let (lat, progress) = (lat.clone(), progress.clone());
+                    Box::new(move |_id, _ev| {
+                        lat.lock().unwrap().push(trigger.elapsed().as_secs_f64());
+                        progress.fetch_add(1, Ordering::SeqCst);
+                    })
+                };
+                ec.tick(now, &mut conn, &mut mk);
+            }
+            let now = t0.elapsed().as_secs_f64();
+            let delivered = ec.pump(now, &mut conn, if push { sub_ms } else { 0 });
+            if delivered == 0 {
+                // Poll mode has no long poll to absorb the wait; push mode
+                // only lands here on an idle probe or a dead gateway.
+                thread::sleep(Duration::from_millis(if push { 2 } else { 15 }));
+            }
+        }
+        BeamlineOutcome {
+            latencies: lat.lock().unwrap().clone(),
+            created: ec.client.created.clone(),
+            undelivered: ec.pending_results(),
+            reconciles: ec.subs.iter().map(|s| s.reconciles).sum(),
+            truncations: ec.subs.iter().map(|s| s.watcher.truncations).sum(),
+            throttled: ec.client.throttled
+                + ec.subs.iter().map(|s| s.watcher.throttled).sum::<u64>(),
+        }
+    })
+}
+
+/// Run the full scenario: push pass (with optional fault injection), poll
+/// pass, then the integrity sweep over the recovered event history.
+pub fn run(cfg: &ScenarioConfig) -> crate::Result<ScenarioReport> {
+    let t_start = Instant::now();
+    let fresh_wal = cfg.wal_dir.is_none();
+    let wal_dir = cfg
+        .wal_dir
+        .clone()
+        .unwrap_or_else(|| std::env::temp_dir().join(format!("balsam-scenario-{}", std::process::id())));
+    if fresh_wal {
+        let _ = std::fs::remove_dir_all(&wal_dir);
+    }
+    let mk_mode = || PersistMode::Wal {
+        dir: wal_dir.clone(),
+        snapshot_every: 256,
+        fsync: FsyncPolicy::Group { records: 64, interval_ms: 2 },
+        events: EventLogConfig::default(),
+    };
+    let mut core = ServiceCore::with_persist(b"scenario", mk_mode())?;
+    core.lease_timeout_s = cfg.lease_timeout_s;
+    let mut svc = Arc::new(core);
+    let token = svc.admin_token();
+    let http = HttpConfig::default();
+    let mut server = Some(serve_with(svc.clone(), "127.0.0.1:0", cfg.workers, http.clone())?);
+    let ep = Arc::new(Endpoint {
+        addr: Mutex::new(server.as_ref().unwrap().addr.clone()),
+        epoch: AtomicU64::new(0),
+    });
+
+    // Topology: one site per facility, one registered app.
+    let mut admin = HttpConn::new(server.as_ref().unwrap().addr.clone());
+    let mut sites = Vec::new();
+    for f in &cfg.facilities {
+        let site = admin
+            .api(&token, ApiRequest::CreateSite {
+                name: f.clone(),
+                hostname: format!("{f}-login"),
+                path: format!("/projects/{f}"),
+            })?
+            .site_id();
+        admin.api(&token, ApiRequest::RegisterApp {
+            site,
+            name: "Analysis".into(),
+            command_template: "analyze".into(),
+            parameters: vec![],
+        })?;
+        sites.push(site);
+    }
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut agents: Vec<AgentHandle> = cfg
+        .facilities
+        .iter()
+        .enumerate()
+        .map(|(i, f)| {
+            spawn_agent(0, f.clone(), sites[i], token.clone(), cfg, ep.clone(), stop.clone())
+        })
+        .collect();
+
+    let total_jobs = cfg.jobs_per_mode() as u64;
+    let mut restarts = 0u64;
+    let mut replacement: Option<AgentHandle> = None;
+
+    // ---- Pass 1: push-mode delivery (fault legs live here) ----
+    let progress = Arc::new(AtomicU64::new(0));
+    let mut pending: Vec<thread::JoinHandle<BeamlineOutcome>> = cfg
+        .beamlines
+        .iter()
+        .enumerate()
+        .map(|(i, b)| {
+            spawn_beamline(
+                b.clone(),
+                sites.clone(),
+                token.clone(),
+                cfg,
+                ep.clone(),
+                true,
+                101 + i as u64,
+                progress.clone(),
+            )
+        })
+        .collect();
+    let mut killed = false;
+    while !pending.iter().all(|h| h.is_finished()) {
+        let done = progress.load(Ordering::SeqCst);
+        if let Some(k) = cfg.kill_site_mid_batch {
+            if !killed && done >= total_jobs / 4 && k < agents.len() {
+                // Hard-kill: the agent thread exits without SessionEnd;
+                // its lease expires and the service re-routes. A fresh
+                // agent (new backends, empty local scheduler) takes over
+                // the same site and must re-provision via elastic.
+                agents[k].kill.store(true, Ordering::SeqCst);
+                replacement = Some(spawn_agent(
+                    1,
+                    cfg.facilities[k].clone(),
+                    sites[k],
+                    token.clone(),
+                    cfg,
+                    ep.clone(),
+                    stop.clone(),
+                ));
+                killed = true;
+            }
+        }
+        if cfg.restart_service_mid_run && restarts == 0 && done >= total_jobs / 2 {
+            // Graceful stop releases every worker's Arc; dropping ours
+            // closes the WAL appenders before the reopen below recovers
+            // the exact same state on a fresh port.
+            if let Some(s) = server.take() {
+                s.stop();
+            }
+            drop(std::mem::replace(&mut svc, Arc::new(ServiceCore::new(b"scenario-tmp"))));
+            let mut core = ServiceCore::with_persist(b"scenario", mk_mode())?;
+            core.lease_timeout_s = cfg.lease_timeout_s;
+            svc = Arc::new(core);
+            let s2 = serve_with(svc.clone(), "127.0.0.1:0", cfg.workers, http.clone())?;
+            *ep.addr.lock().unwrap() = s2.addr.clone();
+            server = Some(s2);
+            ep.epoch.fetch_add(1, Ordering::SeqCst);
+            restarts += 1;
+        }
+        thread::sleep(Duration::from_millis(20));
+    }
+    let mut outcomes_push = Vec::new();
+    for h in pending {
+        outcomes_push.push(h.join().map_err(|_| crate::err!("push beamline thread panicked"))?);
+    }
+
+    // ---- Pass 2: poll-only baseline on the same (healthy) fleet ----
+    let progress2 = Arc::new(AtomicU64::new(0));
+    let pending: Vec<thread::JoinHandle<BeamlineOutcome>> = cfg
+        .beamlines
+        .iter()
+        .enumerate()
+        .map(|(i, b)| {
+            spawn_beamline(
+                b.clone(),
+                sites.clone(),
+                token.clone(),
+                cfg,
+                ep.clone(),
+                false,
+                201 + i as u64,
+                progress2.clone(),
+            )
+        })
+        .collect();
+    let mut outcomes_poll = Vec::new();
+    for h in pending {
+        outcomes_poll.push(h.join().map_err(|_| crate::err!("poll beamline thread panicked"))?);
+    }
+
+    // ---- Teardown + integrity sweep ----
+    stop.store(true, Ordering::SeqCst);
+    for a in agents {
+        let _ = a.join.join();
+    }
+    let replacement_blocks = replacement
+        .map(|r| {
+            let _ = r.join.join();
+            r.blocks.load(Ordering::SeqCst)
+        })
+        .unwrap_or(0);
+
+    // One JobFinished event per created job, across the full (recovered)
+    // event history: zero lost, zero duplicated results.
+    let page = svc.store.events_page(0)?;
+    let mut finishes: BTreeMap<JobId, usize> = BTreeMap::new();
+    for e in &page.events {
+        if e.to == JobState::JobFinished {
+            *finishes.entry(e.job_id).or_insert(0) += 1;
+        }
+    }
+    let created: Vec<JobId> = outcomes_push
+        .iter()
+        .chain(outcomes_poll.iter())
+        .flat_map(|o| o.created.iter().copied())
+        .collect();
+    let lost = created.iter().filter(|j| !finishes.contains_key(j)).count();
+    let duplicates = created.iter().filter(|j| finishes.get(j).copied().unwrap_or(0) > 1).count();
+    let undelivered: usize = outcomes_push
+        .iter()
+        .chain(outcomes_poll.iter())
+        .map(|o| o.undelivered)
+        .sum();
+
+    if let Some(s) = server.take() {
+        s.stop();
+    }
+    if fresh_wal {
+        let _ = std::fs::remove_dir_all(&wal_dir);
+    }
+
+    let push_lat: Vec<f64> = outcomes_push.iter().flat_map(|o| o.latencies.iter().copied()).collect();
+    let poll_lat: Vec<f64> = outcomes_poll.iter().flat_map(|o| o.latencies.iter().copied()).collect();
+    Ok(ScenarioReport {
+        push: LatencyStats::from_samples(&push_lat),
+        poll: LatencyStats::from_samples(&poll_lat),
+        poll_period_ms: cfg.poll_period_s * 1e3,
+        jobs_per_mode: cfg.jobs_per_mode(),
+        lost,
+        undelivered,
+        duplicates,
+        reconciles: outcomes_push.iter().map(|o| o.reconciles).sum(),
+        truncations: outcomes_push
+            .iter()
+            .chain(outcomes_poll.iter())
+            .map(|o| o.truncations)
+            .sum(),
+        client_throttled: outcomes_push
+            .iter()
+            .chain(outcomes_poll.iter())
+            .map(|o| o.throttled)
+            .sum(),
+        replacement_blocks,
+        restarts,
+        elapsed_s: t_start.elapsed().as_secs_f64(),
+    })
+}

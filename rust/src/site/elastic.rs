@@ -221,6 +221,103 @@ mod tests {
     }
 
     #[test]
+    fn queue_wait_deletion_reprovisions_in_the_same_tick() {
+        let (mut svc, mut cfg, mut sched) = setup();
+        cfg.elastic.max_queue_wait_s = 100.0;
+        submit(&mut svc, &cfg, 8);
+        let mut em = ElasticModule::new();
+        {
+            let mut conn = InProcConn { now: 1.0, svc: &mut svc };
+            em.tick(1.0, &cfg, &mut conn, &mut sched);
+        }
+        assert_eq!(em.blocks_created, 1);
+        let ids: Vec<_> = svc.store.batch_jobs_snapshot().iter().map(|b| b.id).collect();
+        for id in &ids {
+            svc.store.with_batch_job_mut(*id, |b| b.state = BatchJobState::Queued).unwrap();
+        }
+        // Past the wait timeout the stale block is deleted, and — because
+        // the demand is still unmet — a fresh block is provisioned on the
+        // very same tick (the backlog query runs after the deletions).
+        let mut conn = InProcConn { now: 200.0, svc: &mut svc };
+        em.next_due = 0.0;
+        em.tick(200.0, &cfg, &mut conn, &mut sched);
+        assert_eq!(em.blocks_created, 2, "no replacement block after queue-wait delete");
+        let bjs = svc.store.batch_jobs_snapshot();
+        assert!(bjs.iter().any(|b| b.state == BatchJobState::Deleted && b.created_at < 100.0));
+        assert!(bjs.iter().any(|b| b.state != BatchJobState::Deleted && b.created_at > 100.0));
+    }
+
+    #[test]
+    fn queue_wait_is_a_strict_threshold() {
+        let (mut svc, mut cfg, mut sched) = setup();
+        cfg.elastic.max_queue_wait_s = 100.0;
+        submit(&mut svc, &cfg, 8);
+        let mut em = ElasticModule::new();
+        {
+            let mut conn = InProcConn { now: 1.0, svc: &mut svc };
+            em.tick(1.0, &cfg, &mut conn, &mut sched);
+        }
+        let ids: Vec<_> = svc.store.batch_jobs_snapshot().iter().map(|b| b.id).collect();
+        for id in &ids {
+            svc.store.with_batch_job_mut(*id, |b| b.state = BatchJobState::Queued).unwrap();
+        }
+        // Exactly at the threshold (created_at 1.0 + wait 100.0): kept.
+        let mut conn = InProcConn { now: 101.0, svc: &mut svc };
+        em.next_due = 0.0;
+        em.tick(101.0, &cfg, &mut conn, &mut sched);
+        let bjs = svc.store.batch_jobs_snapshot();
+        assert!(
+            bjs.iter().all(|b| b.state == BatchJobState::Queued),
+            "block at exactly max_queue_wait_s must not be deleted"
+        );
+        assert_eq!(em.blocks_created, 1, "covered demand must not re-provision");
+    }
+
+    #[test]
+    fn max_nodes_clamp_holds_across_repeated_ticks() {
+        let (mut svc, mut cfg, mut sched) = setup();
+        cfg.elastic.max_nodes = 16;
+        submit(&mut svc, &cfg, 100);
+        let mut em = ElasticModule::new();
+        // Demand (100 nodes) dwarfs the cap on every tick; the provisioned
+        // total must converge at the cap, not creep past it.
+        for i in 0..4 {
+            let now = 1.0 + i as f64 * (cfg.elastic.poll_period + 0.5);
+            let mut conn = InProcConn { now, svc: &mut svc };
+            em.tick(now, &cfg, &mut conn, &mut sched);
+            let total: u32 = svc
+                .store
+                .batch_jobs_snapshot()
+                .iter()
+                .filter(|b| b.state != BatchJobState::Deleted)
+                .map(|b| b.num_nodes)
+                .sum();
+            assert!(total <= 16, "tick {i} provisioned {total} > cap 16");
+        }
+        assert_eq!(em.blocks_created, 2, "16-node cap = two 8-node blocks, once");
+    }
+
+    #[test]
+    fn disabled_mode_advances_next_due_monotonically() {
+        let (mut svc, mut cfg, mut sched) = setup();
+        cfg.elastic.enabled = false;
+        submit(&mut svc, &cfg, 20);
+        let mut em = ElasticModule::new();
+        // A disabled module still reports a sane (future, advancing) wake
+        // time so the agent's scheduler loop never busy-spins on it.
+        let mut conn = InProcConn { now: 5.0, svc: &mut svc };
+        let due = em.tick(5.0, &cfg, &mut conn, &mut sched);
+        assert_eq!(due, 5.0 + cfg.elastic.poll_period);
+        assert_eq!(em.next_due, due);
+        let mut conn = InProcConn { now: 7.0, svc: &mut svc };
+        let due2 = em.tick(7.0, &cfg, &mut conn, &mut sched);
+        assert_eq!(due2, 7.0 + cfg.elastic.poll_period);
+        assert!(due2 > due, "next_due must keep moving forward while disabled");
+        assert_eq!(em.blocks_created, 0);
+        assert!(svc.store.batch_jobs_snapshot().is_empty());
+    }
+
+    #[test]
     fn disabled_module_is_inert() {
         let (mut svc, mut cfg, mut sched) = setup();
         cfg.elastic.enabled = false;

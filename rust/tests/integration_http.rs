@@ -553,6 +553,149 @@ mod fault_injection {
         let _ = std::fs::remove_dir_all(&dir);
     }
 
+    /// A client `ResultSubscription` whose cursor predates event-log
+    /// retention must fall back to exactly ONE reconciling list (catching
+    /// the terminal state whose event was truncated away) and then resume
+    /// push delivery — later completions arrive as real pushed events with
+    /// no further list traffic.
+    #[test]
+    fn client_subscription_survives_retention_truncation() {
+        use balsam::client::ResultSubscription;
+        use balsam::service::models::JobId;
+        use balsam::service::{EventLogConfig, FsyncPolicy, PersistMode};
+        use std::sync::Mutex;
+
+        let dir = std::env::temp_dir()
+            .join(format!("balsam-sub-trunc-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mode = PersistMode::Wal {
+            dir: dir.clone(),
+            snapshot_every: 4,
+            fsync: FsyncPolicy::Never,
+            events: EventLogConfig { segment_bytes: 512, retain_bytes: 1, retain_age_s: 0 },
+        };
+        let svc = Arc::new(ServiceCore::with_persist(b"sub-trunc", mode).unwrap());
+        let tok = svc.admin_token();
+        let site = svc
+            .handle(0.0, &tok, ApiRequest::CreateSite {
+                name: "s".into(),
+                hostname: "h".into(),
+                path: "/p".into(),
+            })
+            .unwrap()
+            .site_id();
+        svc.handle(0.0, &tok, ApiRequest::RegisterApp {
+            site,
+            name: "MD".into(),
+            command_template: "md".into(),
+            parameters: vec![],
+        })
+        .unwrap();
+        // finish() walks a no-transfer job (created in Preprocessed) to
+        // Postprocessed; the store auto-finishes it (no stage-out items).
+        let finish = |job: JobId, t: f64| {
+            for to in [JobState::Running, JobState::RunDone, JobState::Postprocessed] {
+                svc.handle(t, &tok, ApiRequest::UpdateJobState { job, to, data: String::new() })
+                    .unwrap();
+            }
+        };
+
+        // Job A completes first; churn then pushes its JobFinished event
+        // past the retention horizon.
+        let ja = svc
+            .handle(0.0, &tok, ApiRequest::BulkCreateJobs {
+                jobs: vec![JobCreate::simple(site, "MD", "md_small")],
+            })
+            .unwrap()
+            .job_ids()[0];
+        finish(ja, 0.5);
+        let a_fin_seq = svc
+            .store
+            .events_page(0)
+            .unwrap()
+            .events
+            .iter()
+            .find(|e| e.job_id == ja && e.to == JobState::JobFinished)
+            .expect("job A finished")
+            .seq;
+        for i in 0..400 {
+            svc.handle(1.0 + i as f64, &tok, ApiRequest::BulkCreateJobs {
+                jobs: vec![JobCreate::simple(site, "MD", "md_small")],
+            })
+            .unwrap();
+            let trunc = svc.store.events_page(0).unwrap().truncated_before;
+            if trunc.map(|t| t > a_fin_seq).unwrap_or(false) {
+                break;
+            }
+        }
+        let trunc = svc.store.events_page(0).unwrap().truncated_before;
+        assert!(
+            trunc.map(|t| t > a_fin_seq).unwrap_or(false),
+            "retention never passed job A's terminal event — setup is wrong"
+        );
+        // Job B is still pending when the client attaches.
+        let jb = svc
+            .handle(500.0, &tok, ApiRequest::BulkCreateJobs {
+                jobs: vec![JobCreate::simple(site, "MD", "md_small")],
+            })
+            .unwrap()
+            .job_ids()[0];
+
+        let cfg = HttpConfig { keep_alive: true, ..HttpConfig::default() };
+        let server = serve_with(svc.clone(), "127.0.0.1:0", 2, cfg.clone()).unwrap();
+        let mut conn = HttpConn::with_config(server.addr.clone(), cfg);
+
+        // Push-mode subscription, fallback poll effectively disabled: the
+        // reconcile below is triggered by the truncation signal, not time.
+        let mut sub = ResultSubscription::new(tok.clone(), Some(site), 1e9);
+        let got: Arc<Mutex<Vec<(JobId, u64)>>> = Arc::new(Mutex::new(Vec::new()));
+        for j in [ja, jb] {
+            let got = got.clone();
+            sub.subscribe(j, Box::new(move |id, ev| got.lock().unwrap().push((id, ev.seq))));
+        }
+
+        // First pump: cursor 0 -> truncated_before -> cursor jump + one
+        // reconciling list, which recovers job A's (truncated) completion
+        // as a synthetic seq-0 event.
+        let n = sub.pump(&mut conn, 0.0, 50);
+        assert_eq!(n, 1, "reconcile must deliver exactly job A");
+        assert_eq!(sub.watcher.truncations, 1);
+        assert_eq!(sub.reconciles, 1);
+        {
+            let g = got.lock().unwrap();
+            assert_eq!(g.as_slice(), &[(ja, 0)], "A recovered via list, not a pushed event");
+        }
+        assert_eq!(sub.pending_jobs(), 1);
+
+        // Quiet pump: no new events, and crucially no second list.
+        let n = sub.pump(&mut conn, 1.0, 10);
+        assert_eq!(n, 0);
+        assert_eq!(sub.reconciles, 1, "reconcile must fire exactly once per truncation");
+
+        // Job B finishes after the cursor re-anchored: delivered by push,
+        // as a real event with a live sequence number.
+        finish(jb, 600.0);
+        let mut delivered = 0;
+        for _ in 0..50 {
+            delivered += sub.pump(&mut conn, 2.0, 100);
+            if delivered > 0 {
+                break;
+            }
+        }
+        assert_eq!(delivered, 1, "B must arrive via push after the reconcile");
+        {
+            let g = got.lock().unwrap();
+            assert_eq!(g.len(), 2);
+            assert_eq!(g[1].0, jb);
+            assert!(g[1].1 > 0, "B's completion must be a pushed event, got synthetic seq 0");
+        }
+        assert_eq!(sub.reconciles, 1);
+        assert_eq!(sub.watcher.truncations, 1);
+        assert_eq!(sub.pending_jobs(), 0);
+        server.stop();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     /// Error-response framing: a keep-alive ApiConn that hits app-level
     /// errors (bad JSON -> 400, bad route -> 404) must be able to keep
     /// using the same connection — wrong Content-Length on an error reply
